@@ -1,0 +1,130 @@
+//! Autoscale demo — the live Fig. 2 driver.
+//!
+//! Reproduces the paper's §4 experiment interactively: a 1 → 10 → 1
+//! client schedule against the `configs/fig2-autoscale.yaml` deployment
+//! (simulated T4 GPUs serving ParticleNet, KEDA-style autoscaler on avg
+//! queue latency). Prints the three Fig. 2 series as they evolve —
+//! inference rate (blue), average latency (green) and GPU server count
+//! (orange) — then renders ASCII timelines and writes the CSV.
+//!
+//! Run: `cargo run --release --example autoscale_demo`
+//! (~3-4 minutes wall time; the experiment spans ~15 clock-minutes at
+//! time_scale 4).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use supersonic::deployment::Deployment;
+use supersonic::metrics::dashboard::Dashboard;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== SuperSONIC autoscaling demo (Fig. 2) ==\n");
+
+    let d = Deployment::up_from_file(std::path::Path::new("configs/fig2-autoscale.yaml"))?;
+    anyhow::ensure!(d.wait_ready(1, Duration::from_secs(60)), "instance not ready");
+    println!("deployment ready at {} (time_scale {}x)\n", d.endpoint(), d.cfg.time_scale);
+
+    // Live status line, printed every ~5 clock seconds.
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let store = d.store.clone();
+        let cluster = Arc::clone(&d.cluster);
+        let clock = d.clock.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            println!(
+                "{:>8} {:>9} {:>9} {:>12} {:>12}",
+                "t(clock)", "servers", "desired", "latency(s)", "rate(inf/s)"
+            );
+            while !stop.load(Ordering::SeqCst) {
+                let t = clock.now_secs();
+                let lat = store.avg_latest_prefix("queue_latency_seconds").unwrap_or(0.0);
+                let rate = store
+                    .rate_over("exp_rows_total", t, Duration::from_secs(20))
+                    .unwrap_or(0.0);
+                println!(
+                    "{:>8.0} {:>9} {:>9} {:>12.4} {:>12.1}",
+                    t,
+                    cluster.running(),
+                    cluster.desired(),
+                    lat,
+                    rate
+                );
+                clock.sleep(Duration::from_secs(10));
+            }
+        })
+    };
+
+    // Aggregate row-rate series for the dashboard: sum instance counters.
+    let aggregator = {
+        let store = d.store.clone();
+        let clock = d.clock.clone();
+        let cluster = Arc::clone(&d.cluster);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                let t = clock.now_secs();
+                // NB: the aggregate id must NOT share the per-instance
+                // prefix it sums, or it would feed back into itself.
+                store.push("exp_rows_total", t, store.sum_latest_prefix("inference_rows_total"));
+                let rate = store
+                    .rate_over("exp_rows_total", t, Duration::from_secs(20))
+                    .unwrap_or(0.0);
+                store.push("exp_rate", t, rate);
+                store.push("gpu_servers", t, cluster.running() as f64);
+                store.push(
+                    "avg_queue_latency",
+                    t,
+                    store.avg_latest_prefix("queue_latency_seconds").unwrap_or(0.0),
+                );
+                clock.sleep(Duration::from_secs(2));
+            }
+        })
+    };
+
+    // The paper's workload: 1 -> 10 -> 1 perf_analyzer clients.
+    let entry = d.repository.get("particlenet").unwrap();
+    let mut spec = WorkloadSpec::new("particlenet", 16, entry.input_shape.clone());
+    spec.think_time = Duration::from_millis(30);
+    let schedule = Schedule::step_up_down(1, 10, Duration::from_secs(300));
+    println!(
+        "workload: 1 -> 10 -> 1 clients, {}s clock per phase\n",
+        300
+    );
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run_with(&schedule, |i, c| println!("---- phase {i}: {c} client(s)"));
+
+    stop.store(true, Ordering::SeqCst);
+    let _ = monitor.join();
+    let _ = aggregator.join();
+
+    // Fig. 2 panels.
+    let dash = Dashboard::new()
+        .with_size(100, 12)
+        .panel("inference rate (rows/s)", "exp_rate")
+        .panel("avg queue latency (s)", "avg_queue_latency")
+        .panel("GPU servers", "gpu_servers");
+    println!("\n{}", dash.render(&d.store));
+    let csv = dash.to_csv(&d.store);
+    let path = csv.save("fig2_autoscaling_demo")?;
+    println!("series CSV written to {}", path.display());
+
+    println!("\nper-phase summary:");
+    for (i, p) in report.phases.iter().enumerate() {
+        println!(
+            "  phase {i}: {} clients, {:>7} ok, mean latency {:.3}s, p99 {:.3}s, {:.1} req/s",
+            p.clients,
+            p.ok,
+            p.latency.mean(),
+            p.latency.quantile(0.99),
+            p.throughput()
+        );
+    }
+    let peak = d.cluster.running();
+    println!("\nservers at end (after scale-down): {peak}");
+    d.down();
+    Ok(())
+}

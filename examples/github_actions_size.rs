@@ -1,0 +1,69 @@
+//! Tiny-footprint deployment — §3's "fits inside a single GitHub Actions
+//! worker (4 CPU cores, 16 GB memory)" demonstration.
+//!
+//! Boots the `configs/github-actions.yaml` preset (1 replica, 1-GPU kind
+//! cluster, 2 gateway threads), runs a generic client workflow, and
+//! asserts the whole stack stays within a small resource envelope:
+//! resident memory under 2 GiB and ~a dozen threads. Prints the envelope
+//! so CI logs document the footprint.
+//!
+//! Run: `cargo run --release --example github_actions_size`
+
+use std::time::Duration;
+
+use supersonic::deployment::Deployment;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+/// Parse a field from /proc/self/status (Linux).
+fn proc_status_kib(field: &str) -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(field) {
+            return rest.trim().trim_end_matches(" kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== SuperSONIC on a GitHub-Actions-sized worker (§3) ==\n");
+
+    let t0 = std::time::Instant::now();
+    let d = Deployment::up_from_file(std::path::Path::new("configs/github-actions.yaml"))?;
+    anyhow::ensure!(d.wait_ready(1, Duration::from_secs(30)), "instance not ready");
+    let boot = t0.elapsed();
+
+    // Generic client workflow: health probe + a few inferences + a short
+    // closed-loop run (what the paper's CI smoke test exercises).
+    let mut client = RpcClient::connect(&d.endpoint())?;
+    anyhow::ensure!(client.health()?, "health probe failed");
+    let entry = d.repository.get("icecube_cnn").unwrap();
+    let mut shape = vec![2];
+    shape.extend_from_slice(&entry.input_shape);
+    let resp = client.infer("icecube_cnn", supersonic::runtime::Tensor::zeros(shape))?;
+    anyhow::ensure!(resp.status == Status::Ok, "inference failed: {}", resp.error);
+
+    let spec = WorkloadSpec::new("icecube_cnn", 2, entry.input_shape.clone());
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run(&Schedule::constant(2, Duration::from_secs(5)));
+    anyhow::ensure!(report.total_ok > 0 && report.total_errors == 0, "workload failed");
+
+    // Resource envelope.
+    let rss_mib = proc_status_kib("VmRSS:").map(|k| k / 1024).unwrap_or(0);
+    let threads = proc_status_kib("Threads:").unwrap_or(0);
+
+    println!("boot time:        {:.2}s", boot.as_secs_f64());
+    println!("requests served:  {} ({:.1} req/s)", report.total_ok, report.throughput());
+    println!("resident memory:  {rss_mib} MiB");
+    println!("threads:          {threads}");
+
+    // The worker has 16 GB / 4 cores; leave a wide margin.
+    anyhow::ensure!(rss_mib < 2048, "RSS {rss_mib} MiB exceeds 2 GiB envelope");
+    anyhow::ensure!(threads < 64, "{threads} threads exceed envelope");
+    println!("\nfits the 4-CPU / 16 GB GitHub Actions envelope. OK");
+    d.down();
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart — the end-to-end validation driver.
+//!
+//! Boots a full SuperSONIC deployment from `configs/quickstart.yaml`
+//! (2 replicas, *real* PJRT execution of all three AOT-compiled models),
+//! verifies numerics against the golden files over the network, then
+//! serves a batched closed-loop workload and reports latency/throughput
+//! per model. Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::time::Duration;
+
+use supersonic::deployment::Deployment;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::golden;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== SuperSONIC quickstart ==\n");
+
+    let t0 = std::time::Instant::now();
+    let d = Deployment::up_from_file(std::path::Path::new("configs/quickstart.yaml"))?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(60)), "instances not ready");
+    println!(
+        "deployment '{}' ready in {:.2}s — endpoint {}, models: {}\n",
+        d.cfg.name,
+        t0.elapsed().as_secs_f64(),
+        d.endpoint(),
+        d.repository.names().join(", ")
+    );
+
+    // -- 1. numerics over the wire: golden inputs through gateway+batcher+PJRT
+    println!("-- golden numerics over the network");
+    let mut client = RpcClient::connect(&d.endpoint())?;
+    for model in d.repository.names() {
+        let dir = d.cfg.server.repository.join(&model);
+        let g = golden::load(&dir.join("golden.b4.txt"))?;
+        let resp = client.infer(&model, g.input.clone())?;
+        anyhow::ensure!(resp.status == Status::Ok, "{model}: {}", resp.error);
+        let diff = resp.output.max_abs_diff(&g.output)?;
+        println!("   {model:<16} max_abs_diff vs JAX = {diff:.3e}  {}",
+                 if diff < 1e-3 { "OK" } else { "FAIL" });
+        anyhow::ensure!(diff < 1e-3, "{model}: numerics mismatch {diff}");
+    }
+
+    // -- 2. serve a real batched workload per model
+    println!("\n-- closed-loop workload (4 clients x 10s per model, rows=4)");
+    println!("{:<18} {:>8} {:>9} {:>10} {:>10} {:>10}", "model", "ok", "req/s", "p50 ms", "p99 ms", "mean ms");
+    for model in d.repository.names() {
+        let shape = d.repository.get(&model).unwrap().input_shape.clone();
+        let spec = WorkloadSpec::new(&model, 4, shape);
+        let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+        let report = pool.run(&Schedule::constant(4, Duration::from_secs(10)));
+        anyhow::ensure!(report.total_errors == 0, "{model}: {} errors", report.total_errors);
+        let p = &report.phases[0];
+        println!(
+            "{:<18} {:>8} {:>9.1} {:>10.2} {:>10.2} {:>10.2}",
+            model,
+            p.ok,
+            p.throughput(),
+            p.latency.quantile(0.5) * 1e3,
+            p.latency.quantile(0.99) * 1e3,
+            p.latency.mean() * 1e3,
+        );
+    }
+
+    // -- 3. the §2.3 latency breakdown from tracing
+    println!("\n-- latency breakdown by source (tracing, §2.3)");
+    let tracer = d.tracer.clone();
+    let mut client = RpcClient::connect(&d.endpoint())?;
+    client.trace_id = tracer.new_trace();
+    let shape = d.repository.get("particlenet").unwrap().input_shape.clone();
+    let mut input_shape = vec![8];
+    input_shape.extend_from_slice(&shape);
+    let _ = client.infer("particlenet", supersonic::runtime::Tensor::zeros(input_shape))?;
+    print!("{}", tracer.trace(client.trace_id).render());
+
+    println!("\nquickstart complete.");
+    d.down();
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT compiler: lower every (model, batch size) pair to an HLO-text artifact.
+
+This is the ONLY step that runs Python. It produces a Triton-style model
+repository under ``artifacts/``::
+
+    artifacts/
+      particlenet/
+        config.yaml          # model metadata the Rust repository parses
+        model.b1.hlo.txt     # HLO text, weights baked in, batch size 1
+        model.b4.hlo.txt
+        ...
+        golden.b1.txt        # deterministic input/output pair for numerics
+                             #   verification on the Rust side
+      icecube_cnn/ ...
+      cms_transformer/ ...
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Weights are baked into the HLO as constants (closure at lower time), so a
+served artifact is self-contained, like a model version directory in a
+Triton repository.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as models
+
+#: batch sizes compiled per model; the Rust dynamic batcher pads requests to
+#: the smallest compiled batch >= the accumulated batch.
+BATCH_SIZES = (1, 2, 4, 8, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big weight constants as ``{...}``, which the 0.5.1 text parser
+    silently accepts and fills with garbage — the artifact would load and
+    run but produce wrong numerics (caught by the golden check).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax >= 0.8 prints source_end_line/... metadata attributes the 0.5.1
+    # parser rejects; metadata is debug-only, drop it.
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def _write_tensor(f, name: str, arr) -> None:
+    import numpy as np
+
+    arr = np.asarray(arr)
+    dims = " ".join(str(d) for d in arr.shape)
+    f.write(f"{name} {dims}\n")
+    flat = arr.reshape(-1)
+    f.write(" ".join(f"{v:.8e}" for v in flat.tolist()))
+    f.write("\n")
+
+
+def compile_model(name: str, outdir: str, batch_sizes=BATCH_SIZES) -> dict:
+    """Lower one model at every batch size; write artifacts + goldens."""
+    spec = models.MODELS[name]
+    params = spec["init"](jax.random.PRNGKey(spec["seed"]))
+    apply_fn = spec["apply"]
+    in_shape = spec["input_shape"]
+
+    mdir = os.path.join(outdir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    fwd = lambda x: (apply_fn(params, x),)
+
+    for bs in batch_sizes:
+        x_spec = jax.ShapeDtypeStruct((bs, *in_shape), jnp.float32)
+        lowered = jax.jit(fwd).lower(x_spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(mdir, f"model.b{bs}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        # Deterministic golden pair for Rust-side numerics verification.
+        key = jax.random.PRNGKey(1000 + bs)
+        x = jax.random.normal(key, (bs, *in_shape), jnp.float32)
+        y = fwd(x)[0]
+        with open(os.path.join(mdir, f"golden.b{bs}.txt"), "w") as f:
+            _write_tensor(f, "input", x)
+            _write_tensor(f, "output", y)
+        print(f"  {name} b{bs}: {len(text)} chars hlo")
+
+    n_params = models.param_count(params)
+    in_dims = " ".join(str(d) for d in in_shape)
+    cfg = "\n".join(
+        [
+            f"name: {name}",
+            "platform: jax_pjrt",
+            f"parameters: {n_params}",
+            "input:",
+            "  name: x",
+            "  dtype: f32",
+            f"  dims: [{', '.join(str(d) for d in in_shape)}]",
+            "output:",
+            "  name: logits",
+            "  dtype: f32",
+            f"  dims: [{spec['output_dim']}]",
+            f"batch_sizes: [{', '.join(str(b) for b in batch_sizes)}]",
+            f"max_batch_size: {max(batch_sizes)}",
+            "",
+        ]
+    )
+    with open(os.path.join(mdir, "config.yaml"), "w") as f:
+        f.write(cfg)
+    return {"name": name, "params": n_params, "input_dims": in_dims}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(models.MODELS),
+        help="comma-separated subset of models to compile",
+    )
+    ap.add_argument(
+        "--batch-sizes",
+        default=",".join(str(b) for b in BATCH_SIZES),
+        help="comma-separated batch sizes",
+    )
+    args = ap.parse_args()
+    batch_sizes = tuple(int(b) for b in args.batch_sizes.split(","))
+
+    os.makedirs(args.out, exist_ok=True)
+    infos = []
+    for name in args.models.split(","):
+        print(f"compiling {name} ...")
+        infos.append(compile_model(name, args.out, batch_sizes))
+    with open(os.path.join(args.out, "MANIFEST"), "w") as f:
+        for info in infos:
+            f.write(f"{info['name']} params={info['params']}\n")
+    print("done:", ", ".join(i["name"] for i in infos))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Pallas kernel for the CMS transformer's attention hot-spot.
+
+Fused scaled-dot-product attention: ``softmax(q @ k.T / sqrt(dh)) @ v``
+computed tile-by-tile so the (T, T) score matrix never materializes in
+HBM — the FlashAttention insight, restructured for the TPU memory model
+(see DESIGN.md §Hardware-Adaptation):
+
+* the grid walks (head, query-block); each step owns a (BLK_Q, Dh) query
+  tile plus the head's full (T, Dh) key/value panels in VMEM — for the
+  sequence lengths the CMS workloads use (tens to a few hundred tokens)
+  the panels fit comfortably, so no online-softmax accumulator loop is
+  needed (that variant only pays off once T*Dh outgrows VMEM);
+* scores (BLK_Q, T) are computed on the MXU, softmax-normalized with the
+  max-subtraction trick in-register (VPU), and immediately contracted
+  against V on the MXU again — one HBM read per operand tile, one HBM
+  write of the (BLK_Q, Dh) output, zero score traffic.
+
+A CUDA implementation stages K/V panels through shared memory per
+threadblock and keeps the running softmax in registers; ``BlockSpec``
+expresses the same schedule declaratively.
+
+Lowered with ``interpret=True`` like every kernel in this package, so it
+becomes plain HLO the CPU PJRT plugin (and the Rust runtime) can run.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, t_real: int):
+    """One (BLK_Q, Dh) output tile for one head.
+
+    q_ref: (BLK_Q, Dh) query tile.
+    k_ref: (T_pad, Dh) the head's full key panel.
+    v_ref: (T_pad, Dh) the head's full value panel.
+    o_ref: (BLK_Q, Dh) output tile.
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    scores = q @ k.T * scale  # (BLK_Q, T_pad) on the MXU
+    # Mask padding keys before the softmax (padded rows are zeros, which
+    # would otherwise soak up probability mass).
+    t_pad = k.shape[0]
+    if t_pad != t_real:
+        col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(col < t_real, scores, -jnp.inf)
+    # Numerically stable softmax, in-register.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (p @ v).astype(o_ref.dtype)  # MXU again
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def fused_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    block_q: int = 16,
+) -> jnp.ndarray:
+    """Multi-head scaled-dot-product attention, fused per query tile.
+
+    Args:
+      q, k, v: (H, T, Dh) float32 per-head projections.
+      block_q: query rows per grid step (VMEM tile height).
+    Returns:
+      (H, T, Dh) attention output, numerically equal (up to f32
+      associativity) to ``softmax(q @ k.T / sqrt(Dh)) @ v`` per head.
+    """
+    h, t, dh = q.shape
+    assert k.shape == (h, t, dh) and v.shape == (h, t, dh)
+    scale = 1.0 / math.sqrt(dh)
+
+    t_pad = _ceil_to(t, block_q)
+    if t_pad != t:
+        pad = [(0, 0), (0, t_pad - t), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+
+    grid = (h, t_pad // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale, t_real=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, t_pad, dh), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, t_pad, dh), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t_pad, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+    return out[:, :t, :]

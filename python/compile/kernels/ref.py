@@ -1,0 +1,79 @@
+"""Pure-jnp reference implementations (correctness oracles) for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference twin here, written in
+straightforward jax.numpy with no tiling or fusion tricks. The pytest suite
+(`python/tests/test_kernels.py`) asserts allclose between kernel and
+reference across a hypothesis-driven sweep of shapes and dtypes.
+
+The two kernels cover the FLOP-heavy pieces of ParticleNet's EdgeConv:
+
+* pairwise squared distances between point-cloud coordinates (feeds kNN), and
+* the fused edge-MLP + max-aggregation over each point's K neighbors.
+
+kNN selection itself stays at L2 (`jax.lax.top_k`) — see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(coords: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance matrix for a point cloud.
+
+    Args:
+      coords: (N, C) point coordinates.
+    Returns:
+      (N, N) matrix D with D[i, j] = ||coords[i] - coords[j]||^2.
+    """
+    sq = jnp.sum(coords * coords, axis=-1)  # (N,)
+    inner = coords @ coords.T  # (N, N)
+    d = sq[:, None] + sq[None, :] - 2.0 * inner
+    # Numerical noise can push diagonal/near-duplicate entries slightly
+    # negative; clamp like the kernel does.
+    return jnp.maximum(d, 0.0)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Plain multi-head scaled-dot-product attention.
+
+    Args:
+      q, k, v: (H, T, Dh) per-head projections.
+    Returns:
+      (H, T, Dh): softmax(q @ k.T / sqrt(Dh)) @ v per head.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("htd,hsd->hts", q, k) / jnp.sqrt(jnp.float32(dh))
+    attn = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hts,hsd->htd", attn, v)
+
+
+def edge_mlp_aggregate_ref(
+    edge_feats: jnp.ndarray,
+    w1: jnp.ndarray,
+    b1: jnp.ndarray,
+    w2: jnp.ndarray,
+    b2: jnp.ndarray,
+    w3: jnp.ndarray,
+    b3: jnp.ndarray,
+) -> jnp.ndarray:
+    """Three-layer edge MLP followed by max-aggregation over neighbors.
+
+    This is the EdgeConv inner loop: for every (point, neighbor) pair we run
+    a shared MLP over the edge feature vector, then max-reduce over the K
+    neighbors of each point.
+
+    Args:
+      edge_feats: (N, K, 2F) edge features [x_i ; x_j - x_i].
+      w1: (2F, C1), b1: (C1,)
+      w2: (C1, C2), b2: (C2,)
+      w3: (C2, C3), b3: (C3,)
+    Returns:
+      (N, C3) aggregated features: max_k relu(mlp(edge_feats[:, k, :])).
+    """
+    h = jnp.maximum(edge_feats @ w1 + b1, 0.0)
+    h = jnp.maximum(h @ w2 + b2, 0.0)
+    h = jnp.maximum(h @ w3 + b3, 0.0)
+    return jnp.max(h, axis=1)

@@ -1,0 +1,287 @@
+"""Layer-2 JAX models served by the SuperSONIC stack.
+
+Three models, mirroring the client workloads named in the paper (§3):
+
+* ``particlenet`` — a ParticleNet-style EdgeConv GNN for jet tagging (the
+  model used for the paper's Fig. 2/3 autoscaling study, CMS workload).
+  Its FLOP-heavy inner loops are the Pallas kernels in
+  ``kernels/edgeconv.py``.
+* ``icecube_cnn`` — a small 2D CNN standing in for the IceCube/LIGO
+  convolutional workloads.
+* ``cms_transformer`` — a small transformer standing in for the CMS
+  transformer-architecture workloads.
+
+Each model is a pure function ``apply(params, x) -> logits`` plus an
+``init(key)`` that builds deterministic parameters. ``aot.py`` closes the
+apply over the params and lowers one HLO artifact per (model, batch size),
+so the served artifact is self-contained (weights baked in), exactly like a
+model checkout in a Triton model repository.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, edgeconv
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# shared initializers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in: int, fan_out: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = math.sqrt(2.0 / fan_in)
+    w = jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+    return w, jnp.zeros((fan_out,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ParticleNet-style EdgeConv GNN
+# ---------------------------------------------------------------------------
+
+#: input point cloud: N particles x F kinematic features (pt, eta, phi, E, ...)
+PARTICLENET_POINTS = 64
+PARTICLENET_FEATURES = 7
+PARTICLENET_K = 16
+#: EdgeConv block channel plans, ParticleNet-Lite-ish.
+PARTICLENET_BLOCKS = ((32, 32, 32), (64, 64, 64))
+PARTICLENET_HIDDEN = 64
+PARTICLENET_CLASSES = 2
+
+
+def particlenet_init(key) -> Params:
+    params: Params = {}
+    f = PARTICLENET_FEATURES
+    keys = jax.random.split(key, 16)
+    ki = iter(keys)
+    for bi, chans in enumerate(PARTICLENET_BLOCKS):
+        fin = f
+        for li, c in enumerate(chans):
+            w, b = _dense_init(next(ki), 2 * f if li == 0 else fin, c)
+            params[f"b{bi}_w{li}"] = w
+            params[f"b{bi}_b{li}"] = b
+            fin = c
+        # shortcut projection x_i -> C3 (ParticleNet's residual conv)
+        w, b = _dense_init(next(ki), f, chans[-1])
+        params[f"b{bi}_ws"] = w
+        params[f"b{bi}_bs"] = b
+        f = chans[-1]
+    w, b = _dense_init(next(ki), f, PARTICLENET_HIDDEN)
+    params["fc_w"], params["fc_b"] = w, b
+    w, b = _dense_init(next(ki), PARTICLENET_HIDDEN, PARTICLENET_CLASSES)
+    params["out_w"], params["out_b"] = w, b
+    return params
+
+
+def _knn_indices(coords: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(N, K) indices of each point's k nearest neighbors (excluding self).
+
+    Distances come from the Pallas pairwise kernel; selection stays in XLA —
+    see DESIGN.md §Hardware-Adaptation. Selection uses argsort rather than
+    ``lax.top_k``: jax >= 0.8 lowers top_k to the dedicated ``topk`` HLO
+    instruction, which the xla_extension 0.5.1 text parser on the Rust side
+    does not know; argsort lowers to the classic ``sort`` instruction that
+    round-trips cleanly.
+    """
+    d = edgeconv.pairwise_sq_dists(coords)
+    n = d.shape[0]
+    d = d + jnp.eye(n, dtype=d.dtype) * 1e9  # exclude self
+    idx = jnp.argsort(d, axis=-1)[:, :k]
+    return idx
+
+
+def _edgeconv_block(x: jnp.ndarray, coords: jnp.ndarray, params: Params, bi: int) -> jnp.ndarray:
+    """One EdgeConv block over a single point cloud.
+
+    x: (N, F) features; coords: (N, C) coordinates used for kNN.
+    Returns (N, C3).
+    """
+    idx = _knn_indices(coords, PARTICLENET_K)  # (N, K)
+    nbrs = jnp.take(x, idx, axis=0)  # (N, K, F) gather stays in XLA
+    center = x[:, None, :]
+    edge = jnp.concatenate(
+        [jnp.broadcast_to(center, nbrs.shape), nbrs - center], axis=-1
+    )  # (N, K, 2F)
+    agg = edgeconv.edge_mlp_aggregate(
+        edge,
+        params[f"b{bi}_w0"],
+        params[f"b{bi}_b0"],
+        params[f"b{bi}_w1"],
+        params[f"b{bi}_b1"],
+        params[f"b{bi}_w2"],
+        params[f"b{bi}_b2"],
+    )  # (N, C3)
+    shortcut = x @ params[f"b{bi}_ws"] + params[f"b{bi}_bs"]
+    return jnp.maximum(agg + shortcut, 0.0)
+
+
+def particlenet_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass.
+
+    Args:
+      params: see ``particlenet_init``.
+      x: (B, N, F) float32 batch of point clouds.
+    Returns:
+      (B, CLASSES) float32 logits.
+    """
+
+    def single(cloud: jnp.ndarray) -> jnp.ndarray:
+        coords = cloud[:, :3]  # (eta, phi, log pt) style coordinates
+        h = _edgeconv_block(cloud, coords, params, 0)
+        # second block: kNN in learned feature space, like ParticleNet
+        h = _edgeconv_block(h, h[:, :3], params, 1)
+        pooled = jnp.mean(h, axis=0)  # global average pool
+        hid = jnp.maximum(pooled @ params["fc_w"] + params["fc_b"], 0.0)
+        return hid @ params["out_w"] + params["out_b"]
+
+    return jax.vmap(single)(x)
+
+
+# ---------------------------------------------------------------------------
+# IceCube/LIGO-style CNN
+# ---------------------------------------------------------------------------
+
+CNN_HW = 16
+CNN_CHANNELS = 3
+CNN_CLASSES = 3
+
+
+def cnn_init(key) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params: Params = {}
+    params["c1_w"] = jax.random.normal(k1, (3, 3, CNN_CHANNELS, 16), jnp.float32) * 0.2
+    params["c1_b"] = jnp.zeros((16,), jnp.float32)
+    params["c2_w"] = jax.random.normal(k2, (3, 3, 16, 32), jnp.float32) * 0.1
+    params["c2_b"] = jnp.zeros((32,), jnp.float32)
+    flat = (CNN_HW // 4) * (CNN_HW // 4) * 32
+    params["fc_w"], params["fc_b"] = _dense_init(k3, flat, 64)
+    params["out_w"], params["out_b"] = _dense_init(k4, 64, CNN_CLASSES)
+    return params
+
+
+def _conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, CLASSES) logits."""
+    h = jnp.maximum(_conv2d(x, params["c1_w"]) + params["c1_b"], 0.0)
+    h = _maxpool2(h)
+    h = jnp.maximum(_conv2d(h, params["c2_w"]) + params["c2_b"], 0.0)
+    h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jnp.maximum(h @ params["fc_w"] + params["fc_b"], 0.0)
+    return h @ params["out_w"] + params["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# CMS-style transformer
+# ---------------------------------------------------------------------------
+
+TFM_TOKENS = 32
+TFM_DIM = 32
+TFM_HEADS = 4
+TFM_LAYERS = 2
+TFM_FF = 64
+TFM_CLASSES = 2
+
+
+def transformer_init(key) -> Params:
+    params: Params = {}
+    keys = jax.random.split(key, TFM_LAYERS * 6 + 2)
+    ki = iter(keys)
+    for li in range(TFM_LAYERS):
+        for name in ("q", "k", "v", "o"):
+            w, b = _dense_init(next(ki), TFM_DIM, TFM_DIM)
+            params[f"l{li}_{name}_w"], params[f"l{li}_{name}_b"] = w, b
+        w, b = _dense_init(next(ki), TFM_DIM, TFM_FF)
+        params[f"l{li}_ff1_w"], params[f"l{li}_ff1_b"] = w, b
+        w, b = _dense_init(next(ki), TFM_FF, TFM_DIM)
+        params[f"l{li}_ff2_w"], params[f"l{li}_ff2_b"] = w, b
+    w, b = _dense_init(next(ki), TFM_DIM, TFM_CLASSES)
+    params["out_w"], params["out_b"] = w, b
+    return params
+
+
+def _layernorm(x: jnp.ndarray) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5)
+
+
+def _attention(x: jnp.ndarray, params: Params, li: int) -> jnp.ndarray:
+    b, t, d = x.shape
+    hd = d // TFM_HEADS
+
+    def proj(name):
+        y = x @ params[f"l{li}_{name}_w"] + params[f"l{li}_{name}_b"]
+        return y.reshape(b, t, TFM_HEADS, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("q"), proj("k"), proj("v")  # (B, H, T, Dh)
+    # The FLOP hot-spot runs in the fused Pallas kernel (scores never
+    # reach HBM); vmap over the batch like the EdgeConv kernels.
+    out = jax.vmap(attention.fused_attention)(q, k, v)  # (B, H, T, Dh)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ params[f"l{li}_o_w"] + params[f"l{li}_o_b"]
+
+
+def transformer_apply(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, T, D) -> (B, CLASSES) logits."""
+    h = x
+    for li in range(TFM_LAYERS):
+        h = h + _attention(_layernorm(h), params, li)
+        ff = jnp.maximum(
+            _layernorm(h) @ params[f"l{li}_ff1_w"] + params[f"l{li}_ff1_b"], 0.0
+        )
+        h = h + ff @ params[f"l{li}_ff2_w"] + params[f"l{li}_ff2_b"]
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params["out_w"] + params["out_b"]
+
+
+# ---------------------------------------------------------------------------
+# registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "particlenet": {
+        "init": particlenet_init,
+        "apply": particlenet_apply,
+        "input_shape": (PARTICLENET_POINTS, PARTICLENET_FEATURES),
+        "output_dim": PARTICLENET_CLASSES,
+        "seed": 42,
+    },
+    "icecube_cnn": {
+        "init": cnn_init,
+        "apply": cnn_apply,
+        "input_shape": (CNN_HW, CNN_HW, CNN_CHANNELS),
+        "output_dim": CNN_CLASSES,
+        "seed": 43,
+    },
+    "cms_transformer": {
+        "init": transformer_init,
+        "apply": transformer_apply,
+        "input_shape": (TFM_TOKENS, TFM_DIM),
+        "output_dim": TFM_CLASSES,
+        "seed": 44,
+    },
+}
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in params.values())

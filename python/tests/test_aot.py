@@ -1,0 +1,108 @@
+"""AOT pipeline tests: HLO text compatibility and golden-file format.
+
+The interchange constraints these tests pin down were discovered the hard
+way (see aot.py docstring): the 0.5.1 HLO text parser on the Rust side
+rejects `topk` instructions and new metadata attributes, and silently
+mis-parses elided `{...}` constants. A regression in any of these would
+produce artifacts that either fail to load or — worse — load and compute
+garbage.
+"""
+
+import os
+import re
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def tiny_artifact_dir():
+    """Compile the CNN (fastest model) at batch sizes 1 and 2."""
+    with tempfile.TemporaryDirectory() as tmp:
+        aot.compile_model("icecube_cnn", tmp, batch_sizes=(1, 2))
+        yield tmp
+
+
+class TestHloText:
+    def test_no_elided_constants(self, tiny_artifact_dir):
+        """`{...}` in the text means the printer elided a weight constant —
+        the 0.5.1 parser accepts it and fills garbage. Must never appear."""
+        p = os.path.join(tiny_artifact_dir, "icecube_cnn", "model.b1.hlo.txt")
+        text = open(p).read()
+        assert "{...}" not in text
+
+    @pytest.mark.parametrize("name", sorted(M.MODELS))
+    def test_no_unparseable_instructions(self, name):
+        """jax>=0.8 lowers lax.top_k to a `topk` HLO op the old parser
+        rejects, and real-TPU Pallas lowering emits Mosaic custom-calls;
+        every model (all three call Pallas kernels) must lower to classic
+        parseable HLO."""
+        spec = M.MODELS[name]
+        params = spec["init"](jax.random.PRNGKey(spec["seed"]))
+        fwd = lambda x: (spec["apply"](params, x),)
+        x_spec = jax.ShapeDtypeStruct((1, *spec["input_shape"]), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fwd).lower(x_spec))
+        assert not re.search(r"\btopk\(", text), "topk instruction in HLO"
+        assert "custom-call" not in text, "custom-call in HLO (Mosaic leak?)"
+        assert "{...}" not in text, "elided constant in HLO"
+
+    def test_no_new_metadata_attrs(self, tiny_artifact_dir):
+        p = os.path.join(tiny_artifact_dir, "icecube_cnn", "model.b2.hlo.txt")
+        text = open(p).read()
+        assert "source_end_line" not in text
+
+    def test_entry_is_tuple(self, tiny_artifact_dir):
+        """Artifacts are lowered with return_tuple=True; Rust unwraps a
+        1-tuple."""
+        p = os.path.join(tiny_artifact_dir, "icecube_cnn", "model.b1.hlo.txt")
+        text = open(p).read()
+        assert re.search(r"ROOT .* tuple\(", text)
+
+
+class TestRepositoryLayout:
+    def test_config_yaml_written(self, tiny_artifact_dir):
+        cfg = open(
+            os.path.join(tiny_artifact_dir, "icecube_cnn", "config.yaml")
+        ).read()
+        assert "name: icecube_cnn" in cfg
+        assert "batch_sizes: [1, 2]" in cfg
+        assert "max_batch_size: 2" in cfg
+
+    def test_goldens_written_and_parse(self, tiny_artifact_dir):
+        for bs in (1, 2):
+            p = os.path.join(tiny_artifact_dir, "icecube_cnn", f"golden.b{bs}.txt")
+            lines = open(p).read().strip().split("\n")
+            assert len(lines) == 4
+            header = lines[0].split()
+            assert header[0] == "input"
+            dims = [int(d) for d in header[1:]]
+            assert dims[0] == bs
+            n = int(np.prod(dims))
+            assert len(lines[1].split()) == n
+
+    def test_golden_roundtrip_matches_model(self, tiny_artifact_dir):
+        """Re-evaluating the model on the stored golden input must give the
+        stored golden output (pin against drift in param init)."""
+        spec = M.MODELS["icecube_cnn"]
+        params = spec["init"](jax.random.PRNGKey(spec["seed"]))
+        p = os.path.join(tiny_artifact_dir, "icecube_cnn", "golden.b1.txt")
+        lines = open(p).read().strip().split("\n")
+        in_dims = [int(d) for d in lines[0].split()[1:]]
+        x = jnp.asarray(
+            np.array([float(v) for v in lines[1].split()], np.float32).reshape(in_dims)
+        )
+        out_dims = [int(d) for d in lines[2].split()[1:]]
+        want = np.array([float(v) for v in lines[3].split()], np.float32).reshape(out_dims)
+        got = np.asarray(spec["apply"](params, x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestBatchParsing:
+    def test_artifact_name_scheme(self):
+        # Mirrors runtime::parse_artifact_batch on the Rust side.
+        assert aot.BATCH_SIZES == (1, 2, 4, 8, 16)

@@ -1,0 +1,89 @@
+"""L1 correctness: fused attention kernel vs pure-jnp reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _qkv(seed, h, t, dh, scale=1.0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (h, t, dh), jnp.float32) * scale
+    k = jax.random.normal(k2, (h, t, dh), jnp.float32) * scale
+    v = jax.random.normal(k3, (h, t, dh), jnp.float32) * scale
+    return q, k, v
+
+
+class TestFusedAttention:
+    def test_matches_ref_basic(self):
+        q, k, v = _qkv(0, 4, 32, 8)
+        got = attention.fused_attention(q, k, v)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_non_multiple_of_block(self):
+        # T = 19 with block_q = 8 exercises query padding + key masking.
+        q, k, v = _qkv(1, 2, 19, 8)
+        got = attention.fused_attention(q, k, v, block_q=8)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rows_are_convex_combinations(self):
+        # Attention output rows live in the convex hull of V rows.
+        q, k, v = _qkv(2, 2, 16, 4)
+        out = np.asarray(attention.fused_attention(q, k, v))
+        vmin = np.asarray(v).min(axis=1, keepdims=True)
+        vmax = np.asarray(v).max(axis=1, keepdims=True)
+        assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+    def test_uniform_when_queries_zero(self):
+        # q = 0 -> uniform attention -> every output row is mean(V).
+        h, t, dh = 2, 12, 4
+        _, k, v = _qkv(3, h, t, dh)
+        q = jnp.zeros((h, t, dh), jnp.float32)
+        out = attention.fused_attention(q, k, v)
+        want = jnp.broadcast_to(jnp.mean(v, axis=1, keepdims=True), (h, t, dh))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    def test_large_logits_stable(self):
+        # The max-subtraction softmax must survive +/- 60 logits.
+        q, k, v = _qkv(4, 2, 16, 8, scale=10.0)
+        out = np.asarray(attention.fused_attention(q, k, v))
+        assert np.isfinite(out).all()
+
+    def test_permuting_keys_and_values_is_noop(self):
+        # Softmax-weighted sum is invariant to a joint permutation of K/V.
+        q, k, v = _qkv(5, 2, 16, 4)
+        perm = jax.random.permutation(jax.random.PRNGKey(9), 16)
+        base = attention.fused_attention(q, k, v)
+        shuf = attention.fused_attention(q, k[:, perm, :], v[:, perm, :])
+        np.testing.assert_allclose(base, shuf, rtol=1e-5, atol=1e-5)
+
+    def test_under_vmap_matches_ref(self):
+        # The transformer calls the kernel under jax.vmap over the batch.
+        b, h, t, dh = 3, 4, 32, 8
+        keys = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = jax.random.normal(keys[0], (b, h, t, dh), jnp.float32)
+        k = jax.random.normal(keys[1], (b, h, t, dh), jnp.float32)
+        v = jax.random.normal(keys[2], (b, h, t, dh), jnp.float32)
+        got = jax.vmap(attention.fused_attention)(q, k, v)
+        want = jax.vmap(ref.attention_ref)(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        t=st.integers(min_value=2, max_value=48),
+        dh=st.sampled_from([2, 4, 8, 16]),
+        block_q=st.sampled_from([4, 8, 16]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_matches_ref_sweep(self, h, t, dh, block_q, seed):
+        q, k, v = _qkv(seed, h, t, dh)
+        got = attention.fused_attention(q, k, v, block_q=block_q)
+        want = ref.attention_ref(q, k, v)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

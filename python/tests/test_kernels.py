@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs pure-jnp references.
+
+The hypothesis sweeps are the core correctness signal for the kernels —
+they vary N (including non-multiples of the block size), feature widths,
+K, channel widths and the block parameter itself.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import edgeconv, ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# pairwise_sq_dists
+# ---------------------------------------------------------------------------
+
+
+class TestPairwise:
+    def test_matches_ref_basic(self):
+        x = _rand(0, (64, 7))
+        got = edgeconv.pairwise_sq_dists(x)
+        want = ref.pairwise_sq_dists_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_diagonal_is_zero(self):
+        x = _rand(1, (32, 3))
+        d = edgeconv.pairwise_sq_dists(x)
+        np.testing.assert_allclose(np.diag(np.asarray(d)), 0.0, atol=1e-4)
+
+    def test_symmetric(self):
+        x = _rand(2, (48, 5))
+        d = np.asarray(edgeconv.pairwise_sq_dists(x))
+        np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-5)
+
+    def test_nonnegative(self):
+        x = _rand(3, (40, 4), scale=10.0)
+        d = np.asarray(edgeconv.pairwise_sq_dists(x))
+        assert (d >= 0.0).all()
+
+    def test_non_multiple_of_block(self):
+        # N=50 is not a multiple of the default 32-block: exercises padding.
+        x = _rand(4, (50, 7))
+        got = edgeconv.pairwise_sq_dists(x)
+        want = ref.pairwise_sq_dists_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_known_values(self):
+        x = jnp.array([[0.0, 0.0], [3.0, 4.0]], jnp.float32)
+        d = np.asarray(edgeconv.pairwise_sq_dists(x))
+        np.testing.assert_allclose(d, [[0.0, 25.0], [25.0, 0.0]], atol=1e-5)
+
+    @given(
+        n=st.integers(min_value=2, max_value=96),
+        c=st.integers(min_value=1, max_value=16),
+        block=st.sampled_from([8, 16, 32]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref_sweep(self, n, c, block, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, c), jnp.float32)
+        got = edgeconv.pairwise_sq_dists(x, block=block)
+        want = ref.pairwise_sq_dists_ref(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# edge_mlp_aggregate
+# ---------------------------------------------------------------------------
+
+
+def _mlp_params(f2, c1, c2, c3, seed=0):
+    return (
+        _rand(seed + 1, (f2, c1), 0.3),
+        _rand(seed + 2, (c1,), 0.1),
+        _rand(seed + 3, (c1, c2), 0.3),
+        _rand(seed + 4, (c2,), 0.1),
+        _rand(seed + 5, (c2, c3), 0.3),
+        _rand(seed + 6, (c3,), 0.1),
+    )
+
+
+class TestEdgeMlpAggregate:
+    def test_matches_ref_basic(self):
+        e = _rand(10, (64, 16, 14))
+        ps = _mlp_params(14, 32, 32, 32)
+        got = edgeconv.edge_mlp_aggregate(e, *ps)
+        want = ref.edge_mlp_aggregate_ref(e, *ps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_output_nonnegative(self):
+        # ReLU final layer + max aggregation => nonnegative outputs.
+        e = _rand(11, (32, 8, 6))
+        ps = _mlp_params(6, 8, 8, 4)
+        out = np.asarray(edgeconv.edge_mlp_aggregate(e, *ps))
+        assert (out >= 0.0).all()
+
+    def test_permutation_invariant_in_k(self):
+        # Max aggregation is invariant to neighbor ordering.
+        e = _rand(12, (16, 8, 6))
+        ps = _mlp_params(6, 8, 8, 4)
+        out1 = edgeconv.edge_mlp_aggregate(e, *ps)
+        perm = jax.random.permutation(jax.random.PRNGKey(0), 8)
+        out2 = edgeconv.edge_mlp_aggregate(e[:, perm, :], *ps)
+        np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+    def test_non_multiple_of_block(self):
+        e = _rand(13, (37, 4, 6))
+        ps = _mlp_params(6, 8, 8, 4)
+        got = edgeconv.edge_mlp_aggregate(e, *ps)
+        want = ref.edge_mlp_aggregate_ref(e, *ps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @given(
+        n=st.integers(min_value=1, max_value=80),
+        k=st.sampled_from([2, 4, 8, 16]),
+        f=st.integers(min_value=1, max_value=8),
+        c=st.sampled_from([4, 8, 16]),
+        block=st.sampled_from([8, 16, 32]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_matches_ref_sweep(self, n, k, f, c, block, seed):
+        key = jax.random.PRNGKey(seed)
+        e = jax.random.normal(key, (n, k, 2 * f), jnp.float32)
+        ps = _mlp_params(2 * f, c, c, c, seed=seed % 1000)
+        got = edgeconv.edge_mlp_aggregate(e, *ps, block=block)
+        want = ref.edge_mlp_aggregate_ref(e, *ps)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_input(self):
+        e = jnp.zeros((8, 4, 6), jnp.float32)
+        ps = _mlp_params(6, 8, 8, 4)
+        got = edgeconv.edge_mlp_aggregate(e, *ps)
+        want = ref.edge_mlp_aggregate_ref(e, *ps)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dtype coverage: kernels promise f32; bf16 inputs should be accepted by the
+# reference path at reduced tolerance (documents numeric behaviour).
+# ---------------------------------------------------------------------------
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_pairwise_dtypes(self, dtype):
+        x = _rand(20, (24, 4)).astype(dtype)
+        got = np.asarray(edgeconv.pairwise_sq_dists(x.astype(jnp.float32)))
+        want = np.asarray(ref.pairwise_sq_dists_ref(x)).astype(np.float32)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)

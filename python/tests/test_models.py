@@ -1,0 +1,119 @@
+"""L2 correctness: model shapes, determinism, batch consistency.
+
+These tests pin the contract the Rust coordinator relies on: fixed input
+shapes per model, logits of the declared width, batch-row independence
+(row i of a batched call equals a single-row call), and deterministic
+parameters for a fixed seed (artifacts must be reproducible builds).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module", params=list(M.MODELS))
+def spec(request):
+    s = M.MODELS[request.param]
+    params = s["init"](jax.random.PRNGKey(s["seed"]))
+    return request.param, s, params
+
+
+def _input(spec_entry, batch, seed=0):
+    return jax.random.normal(
+        jax.random.PRNGKey(seed), (batch, *spec_entry["input_shape"]), jnp.float32
+    )
+
+
+class TestShapes:
+    def test_logit_shape(self, spec):
+        name, s, params = spec
+        x = _input(s, 3)
+        y = s["apply"](params, x)
+        assert y.shape == (3, s["output_dim"]), name
+
+    def test_batch_one(self, spec):
+        _, s, params = spec
+        y = s["apply"](params, _input(s, 1))
+        assert y.shape == (1, s["output_dim"])
+
+    def test_finite_outputs(self, spec):
+        _, s, params = spec
+        y = np.asarray(s["apply"](params, _input(s, 4, seed=7)))
+        assert np.isfinite(y).all()
+
+
+class TestDeterminism:
+    def test_params_deterministic(self, spec):
+        name, s, _ = spec
+        p1 = s["init"](jax.random.PRNGKey(s["seed"]))
+        p2 = s["init"](jax.random.PRNGKey(s["seed"]))
+        for k in p1:
+            np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+    def test_apply_deterministic(self, spec):
+        _, s, params = spec
+        x = _input(s, 2, seed=3)
+        y1 = np.asarray(s["apply"](params, x))
+        y2 = np.asarray(s["apply"](params, x))
+        np.testing.assert_array_equal(y1, y2)
+
+
+class TestBatchConsistency:
+    def test_rows_independent(self, spec):
+        """Batched inference must equal per-row inference (the dynamic
+        batcher on the Rust side depends on this)."""
+        name, s, params = spec
+        x = _input(s, 4, seed=11)
+        batched = np.asarray(s["apply"](params, x))
+        for i in range(4):
+            single = np.asarray(s["apply"](params, x[i : i + 1]))
+            np.testing.assert_allclose(
+                batched[i], single[0], rtol=1e-4, atol=1e-5,
+                err_msg=f"{name} row {i}",
+            )
+
+    def test_padding_rows_do_not_affect_real_rows(self, spec):
+        """Zero-padding extra batch rows (what the batcher does to hit a
+        compiled batch size) must not change the real rows' outputs."""
+        name, s, params = spec
+        x = _input(s, 2, seed=13)
+        padded = jnp.concatenate([x, jnp.zeros((2, *s["input_shape"]), jnp.float32)])
+        y_real = np.asarray(s["apply"](params, x))
+        y_padded = np.asarray(s["apply"](params, padded))[:2]
+        np.testing.assert_allclose(y_real, y_padded, rtol=1e-4, atol=1e-5)
+
+
+class TestParticleNetSpecifics:
+    def test_param_count_reasonable(self):
+        s = M.MODELS["particlenet"]
+        params = s["init"](jax.random.PRNGKey(s["seed"]))
+        n = M.param_count(params)
+        # ParticleNet-Lite scale: tens of thousands of parameters.
+        assert 10_000 < n < 500_000, n
+
+    def test_permutation_invariance(self):
+        """A point-cloud GNN with symmetric aggregation is invariant to
+        particle ordering."""
+        s = M.MODELS["particlenet"]
+        params = s["init"](jax.random.PRNGKey(s["seed"]))
+        x = _input(s, 1, seed=17)
+        perm = jax.random.permutation(jax.random.PRNGKey(0), x.shape[1])
+        y1 = np.asarray(s["apply"](params, x))
+        y2 = np.asarray(s["apply"](params, x[:, perm, :]))
+        np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-4)
+
+
+class TestTransformerSpecifics:
+    def test_token_permutation_equivariance_of_pool(self):
+        # Mean-pooled transformer without positional encodings is
+        # permutation-invariant; this documents the architecture choice.
+        s = M.MODELS["cms_transformer"]
+        params = s["init"](jax.random.PRNGKey(s["seed"]))
+        x = _input(s, 1, seed=19)
+        perm = jax.random.permutation(jax.random.PRNGKey(1), x.shape[1])
+        y1 = np.asarray(s["apply"](params, x))
+        y2 = np.asarray(s["apply"](params, x[:, perm, :]))
+        np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-4)

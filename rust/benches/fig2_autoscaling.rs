@@ -1,0 +1,106 @@
+//! Fig. 2 — "Load-based autoscaling in SuperSONIC: the GPU server count
+//! (orange) adjusts in response to spikes in latency (green) caused by
+//! increased inference load (blue)."
+//!
+//! Regenerates the three series for the 1 → 10 → 1 client schedule and
+//! prints them as aligned timelines plus an ASCII rendering; CSV is saved
+//! under `bench_results/`.
+//!
+//! Run: `cargo bench --bench fig2_autoscaling`
+
+use std::time::Duration;
+
+use supersonic::experiments::{fig_config, fig_workload, run_deployment};
+use supersonic::util::bench::{ascii_chart, Csv, Table};
+use supersonic::workload::Schedule;
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== Fig. 2: load-based autoscaling timeline ==");
+
+    // 8x dilation, 240-second clock phases: ~95s wall.
+    let time_scale = 8.0;
+    let phase = Duration::from_secs(240);
+    let cfg = fig_config(time_scale, None, phase);
+    let schedule = Schedule::step_up_down(1, 10, phase);
+    println!(
+        "workload: 1 -> 10 -> 1 clients x {}s clock phases (time_scale {}x)\n",
+        phase.as_secs(),
+        time_scale
+    );
+
+    let result = run_deployment(cfg, fig_workload(), &schedule, Duration::from_secs(5))?;
+
+    // Aligned table, one row per ~20 clock seconds.
+    let mut table = Table::new(&["t (s)", "clients", "rate (rows/s)", "latency (s)", "servers"]);
+    let t0 = result.rate.first().map(|&(t, _)| t).unwrap_or(0.0);
+    for (i, &(t, rate)) in result.rate.iter().enumerate() {
+        if i % 4 != 0 {
+            continue;
+        }
+        let clients = schedule
+            .clients_at(Duration::from_secs_f64((t - t0).max(0.0)))
+            .unwrap_or(0);
+        let latency = result.latency.get(i).map(|&(_, v)| v).unwrap_or(0.0);
+        let servers = result.servers.get(i).map(|&(_, v)| v).unwrap_or(0.0);
+        table.row(&[
+            format!("{:.0}", t - t0),
+            clients.to_string(),
+            format!("{rate:.0}"),
+            format!("{latency:.4}"),
+            format!("{servers:.0}"),
+        ]);
+    }
+    println!("{}", table.render());
+
+    println!("{}", ascii_chart("inference rate (rows/s)", &result.rate, 90, 10));
+    println!("{}", ascii_chart("avg queue latency (s)", &result.latency, 90, 10));
+    println!("{}", ascii_chart("GPU servers", &result.servers, 90, 8));
+
+    let mut csv = Csv::new(&["t", "rate_rows_per_s", "latency_s", "servers", "utilization"]);
+    for (i, &(t, rate)) in result.rate.iter().enumerate() {
+        csv.row(&[
+            format!("{t:.1}"),
+            format!("{rate:.1}"),
+            format!("{:.5}", result.latency.get(i).map(|&(_, v)| v).unwrap_or(0.0)),
+            format!("{:.0}", result.servers.get(i).map(|&(_, v)| v).unwrap_or(0.0)),
+            format!("{:.4}", result.utilization.get(i).map(|&(_, v)| v).unwrap_or(0.0)),
+        ]);
+    }
+    let path = csv.save("fig2_autoscaling")?;
+    println!("series CSV: {}", path.display());
+
+    // The paper's qualitative claims, asserted.
+    let phase_s = phase.as_secs_f64();
+    let lat_at = |lo: f64, hi: f64| -> f64 {
+        let pts: Vec<f64> = result
+            .latency
+            .iter()
+            .filter(|&&(t, _)| t - t0 >= lo && t - t0 < hi)
+            .map(|&(_, v)| v)
+            .collect();
+        if pts.is_empty() { 0.0 } else { pts.iter().sum::<f64>() / pts.len() as f64 }
+    };
+    let spike = lat_at(phase_s, phase_s * 1.25);
+    let settled = lat_at(phase_s * 1.7, phase_s * 2.0);
+    println!("\nchecks:");
+    println!("  peak servers:              {} (expect > 1, scale-up happened)", result.peak_servers);
+    println!("  latency spike at step:     {spike:.3}s");
+    println!("  latency after scale-up:    {settled:.3}s (expect < spike)");
+    let final_servers = result.servers.last().map(|&(_, v)| v).unwrap_or(0.0);
+    println!("  servers at end:            {final_servers:.0} (expect scale-down toward 1)");
+    println!(
+        "  phase summaries:           {}",
+        result
+            .report
+            .phases
+            .iter()
+            .map(|p| format!("{}cl/{:.0}ok/{:.3}s", p.clients, p.ok, p.latency.mean()))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+
+    assert!(result.peak_servers > 1, "autoscaler never scaled up");
+    assert!(spike > settled, "latency did not recover after scale-up");
+    Ok(())
+}

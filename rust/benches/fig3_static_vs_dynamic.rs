@@ -1,0 +1,113 @@
+//! Fig. 3 — "Average GPU utilization and latency for a test workflow with
+//! an inference load that varies over time. Dynamic GPU provisioning with
+//! SuperSONIC (red) outperforms setups with fixed GPU count (blue)."
+//!
+//! Runs the same 1 → 10 → 1 workload against static deployments with
+//! N ∈ {1, 2, 4, 10} GPU servers and against the dynamic (autoscaled)
+//! deployment, and prints the (avg latency, avg GPU utilization) pairs
+//! that the paper's scatter plot shows.
+//!
+//! Run: `cargo bench --bench fig3_static_vs_dynamic`
+
+use std::time::Duration;
+
+use supersonic::experiments::{fig_config, fig_workload, run_deployment};
+use supersonic::util::bench::{Csv, Table};
+use supersonic::workload::Schedule;
+
+struct Row {
+    label: String,
+    latency_ms: f64,
+    p99_ms: f64,
+    utilization: f64,
+    ok: u64,
+    peak_servers: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== Fig. 3: static vs dynamic GPU allocation ==");
+
+    // Faster dilation than Fig. 2 — five configurations to run.
+    let time_scale = 12.0;
+    let phase = Duration::from_secs(180);
+    let schedule = Schedule::step_up_down(1, 10, phase);
+    println!(
+        "workload: 1 -> 10 -> 1 clients x {}s clock phases (time_scale {}x)\n",
+        phase.as_secs(),
+        time_scale
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for static_n in [Some(1usize), Some(2), Some(4), Some(10), None] {
+        let label = match static_n {
+            Some(n) => format!("static-{n}"),
+            None => "dynamic".to_string(),
+        };
+        eprintln!("running {label}...");
+        let cfg = fig_config(time_scale, static_n, phase);
+        let result = run_deployment(cfg, fig_workload(), &schedule, Duration::from_secs(5))?;
+        rows.push(Row {
+            label,
+            latency_ms: result.overall_latency.mean() * 1e3,
+            p99_ms: result.overall_latency.quantile(0.99) * 1e3,
+            utilization: result.mean_utilization,
+            ok: result.report.total_ok,
+            peak_servers: result.peak_servers,
+        });
+    }
+
+    let mut table = Table::new(&[
+        "config", "avg latency (ms)", "p99 (ms)", "avg GPU util", "requests ok", "peak servers",
+    ]);
+    let mut csv = Csv::new(&["config", "avg_latency_ms", "p99_ms", "avg_gpu_utilization", "ok", "peak_servers"]);
+    for r in &rows {
+        table.row(&[
+            r.label.clone(),
+            format!("{:.1}", r.latency_ms),
+            format!("{:.1}", r.p99_ms),
+            format!("{:.3}", r.utilization),
+            r.ok.to_string(),
+            r.peak_servers.to_string(),
+        ]);
+        csv.row(&[
+            r.label.clone(),
+            format!("{:.2}", r.latency_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.4}", r.utilization),
+            r.ok.to_string(),
+            r.peak_servers.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let path = csv.save("fig3_static_vs_dynamic")?;
+    println!("CSV: {}", path.display());
+
+    // The paper's qualitative claims.
+    let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap();
+    let dynamic = get("dynamic");
+    let static1 = get("static-1");
+    let static10 = get("static-10");
+    println!("\nchecks (paper: dynamic beats both static extremes):");
+    println!(
+        "  static-1  : latency {:.0}ms (overloaded at peak), util {:.2}",
+        static1.latency_ms, static1.utilization
+    );
+    println!(
+        "  static-10 : latency {:.0}ms, util {:.2} (wasteful at light load)",
+        static10.latency_ms, static10.utilization
+    );
+    println!(
+        "  dynamic   : latency {:.0}ms, util {:.2}",
+        dynamic.latency_ms, dynamic.utilization
+    );
+    assert!(
+        dynamic.latency_ms < static1.latency_ms,
+        "dynamic latency should beat the undersized static deployment"
+    );
+    assert!(
+        dynamic.utilization > static10.utilization,
+        "dynamic utilization should beat the oversized static deployment"
+    );
+    Ok(())
+}

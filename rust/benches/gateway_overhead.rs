@@ -1,0 +1,145 @@
+//! §2.2 overhead — what the proxy costs on the request path.
+//!
+//! The gateway adds auth, rate limiting, load balancing and a TCP hop in
+//! front of the inference server. The paper's design assumes this
+//! overhead is negligible relative to model compute; this bench measures
+//! it directly, layer by layer, using the real PJRT-compiled CNN:
+//!
+//!   1. direct     — submit to the instance in-process (no network)
+//!   2. rpc        — through the gateway over loopback TCP
+//!   3. rpc+auth   — plus HMAC token verification
+//!   4. rpc+auth+rl— plus token-bucket rate limiting (uncontended)
+//!
+//! Run: `cargo bench --bench gateway_overhead`
+
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use supersonic::config::{GatewayConfig, ModelConfig};
+use supersonic::gateway::{auth, Gateway};
+use supersonic::metrics::Registry;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::{PjrtRuntime, Tensor};
+use supersonic::server::{Instance, ModelRepository};
+use supersonic::telemetry::Tracer;
+use supersonic::util::bench::{Bencher, Table};
+use supersonic::util::clock::Clock;
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== §2.2: gateway overhead on the request path ==\n");
+
+    let runtime = PjrtRuntime::cpu()?;
+    let repo = Arc::new(ModelRepository::load(
+        &runtime,
+        std::path::Path::new("artifacts"),
+        &["icecube_cnn".into()],
+    )?);
+    let clock = Clock::real();
+    let registry = Registry::new();
+    let inst = Instance::start(
+        "ov-0",
+        Arc::clone(&repo),
+        &[ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::ZERO, // isolate per-request cost
+            preferred_batch: 1,
+            ..ModelConfig::default()
+        }],
+        clock.clone(),
+        registry.clone(),
+        256,
+        5.0,
+    );
+    inst.mark_ready();
+    let input = Tensor::zeros(vec![1, 16, 16, 3]);
+
+    let bencher = Bencher::new(50, 400);
+    let mut table = Table::new(&["path", "mean", "p50", "p99", "overhead vs direct"]);
+    let mut results = Vec::new();
+
+    // 1. direct
+    let r_direct = bencher.run("direct", || {
+        let out = inst.submit_and_wait("icecube_cnn", input.clone(), 0);
+        assert!(matches!(out, supersonic::server::batcher::ExecOutcome::Ok { .. }));
+    });
+    results.push(("direct (in-process)", r_direct.clone(), None));
+
+    // Helper to bench one gateway configuration.
+    let mut bench_gateway = |label: &'static str, cfg: GatewayConfig, token: String| {
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let gateway = Gateway::start(
+            &cfg,
+            endpoints,
+            clock.clone(),
+            registry.clone(),
+            Tracer::disabled(),
+            None,
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string())
+            .unwrap()
+            .with_token(&token);
+        let result = bencher.run(label, || {
+            let resp = client.infer("icecube_cnn", input.clone()).unwrap();
+            assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+        });
+        gateway.shutdown();
+        result
+    };
+
+    // 2. plain RPC
+    let r_rpc = bench_gateway("rpc", GatewayConfig::default(), String::new());
+    results.push(("gateway (loopback TCP)", r_rpc, Some(&r_direct)));
+
+    // 3. + auth
+    let secret = "bench-secret".to_string();
+    let r_auth = bench_gateway(
+        "rpc+auth",
+        GatewayConfig { auth_secret: Some(secret.clone()), ..GatewayConfig::default() },
+        auth::mint_token(&secret),
+    );
+    results.push(("gateway + auth", r_auth, Some(&r_direct)));
+
+    // 4. + rate limit (high limit: measure mechanism, not shedding)
+    let r_rl = bench_gateway(
+        "rpc+auth+ratelimit",
+        GatewayConfig {
+            auth_secret: Some(secret.clone()),
+            rate_limit_rps: 1e6,
+            rate_limit_burst: 1024,
+            ..GatewayConfig::default()
+        },
+        auth::mint_token(&secret),
+    );
+    results.push(("gateway + auth + rate limit", r_rl, Some(&r_direct)));
+
+    for (label, r, baseline) in &results {
+        let overhead = baseline
+            .map(|b| format!("+{:.0} us", (r.mean_s - b.mean_s) * 1e6))
+            .unwrap_or_else(|| "-".into());
+        table.row(&[
+            label.to_string(),
+            format!("{:.3} ms", r.mean_s * 1e3),
+            format!("{:.3} ms", r.p50_s * 1e3),
+            format!("{:.3} ms", r.p99_s * 1e3),
+            overhead,
+        ]);
+    }
+    println!("{}", table.render());
+
+    let direct_mean = results[0].1.mean_s;
+    let full_mean = results[3].1.mean_s;
+    let overhead_frac = (full_mean - direct_mean) / direct_mean;
+    println!(
+        "full gateway pipeline adds {:.0} us ({:.0}% of the {:.2} ms compute) per request",
+        (full_mean - direct_mean) * 1e6,
+        overhead_frac * 100.0,
+        direct_mean * 1e3,
+    );
+    println!("paper's assumption holds if the proxy is a small fraction of compute.");
+
+    inst.stop();
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! §3 scale test — "a SuperSONIC deployment at the National Research
+//! Platform (NRP) was tested with as many as 100 GPU-enabled Triton
+//! servers."
+//!
+//! Boots the `configs/nrp.yaml` preset pinned to 100 static replicas,
+//! measures time-to-ready for all 100, serves a wide closed-loop burst,
+//! and reports throughput plus load-balance fairness across instances
+//! (max/min/stddev of per-instance request counts).
+//!
+//! Run: `cargo bench --bench scale_100_servers`
+
+use std::time::Duration;
+
+use supersonic::config::DeploymentConfig;
+use supersonic::deployment::Deployment;
+use supersonic::metrics::registry::SampleValue;
+use supersonic::util::bench::Table;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== NRP-scale: 100 GPU-enabled inference servers (§3) ==\n");
+
+    let mut cfg = DeploymentConfig::from_file(std::path::Path::new("configs/nrp.yaml"))?;
+    // Pin the replica count: this bench measures scale, not scaling.
+    cfg.autoscaler.enabled = false;
+    cfg.server.replicas = 100;
+    cfg.cluster.pod_failure_rate = 0.0;
+    cfg.server.startup_delay = Duration::from_secs(5);
+    cfg.cluster.pod_start_delay = Duration::from_secs(10);
+    cfg.gateway.auth_secret = None;
+    cfg.time_scale = 20.0;
+    cfg.validate()?;
+
+    let t0 = std::time::Instant::now();
+    let d = Deployment::up(cfg)?;
+    anyhow::ensure!(
+        d.wait_ready(100, Duration::from_secs(120)),
+        "100 instances not ready (got {})",
+        d.cluster.running()
+    );
+    let boot = t0.elapsed();
+    println!(
+        "100 instances Ready in {:.1}s wall ({:.0}s cluster time)\n",
+        boot.as_secs_f64(),
+        boot.as_secs_f64() * d.cfg.time_scale
+    );
+
+    // Wide burst: 64 clients, 60 clock seconds.
+    let mut spec = WorkloadSpec::new("particlenet", 16, vec![64, 7]);
+    spec.think_time = Duration::from_millis(30);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run(&Schedule::constant(64, Duration::from_secs(120)));
+    let p = &report.phases[0];
+    anyhow::ensure!(p.ok > 0, "no requests served");
+
+    // Fairness: requests per instance. The counter is created lazily on
+    // first request, so pad with zeros up to the full fleet size — an
+    // instance that never served counts against fairness.
+    let fleet = d.cluster.running();
+    let mut per_instance: Vec<f64> = d
+        .registry
+        .snapshot()
+        .into_iter()
+        .filter(|s| s.name == "inference_requests_total")
+        .map(|s| match s.value {
+            SampleValue::Counter(v) => v as f64,
+            _ => 0.0,
+        })
+        .collect();
+    while per_instance.len() < fleet {
+        per_instance.push(0.0);
+    }
+    let n = per_instance.len().max(1) as f64;
+    let mean = per_instance.iter().sum::<f64>() / n;
+    let var = per_instance.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+    let served = per_instance.iter().filter(|&&v| v > 0.0).count();
+    let max = per_instance.iter().cloned().fold(0.0, f64::max);
+    let min = per_instance.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["instances Ready".into(), format!("{}", d.cluster.running())]);
+    table.row(&["time-to-ready (wall)".into(), format!("{:.1}s", boot.as_secs_f64())]);
+    table.row(&["requests ok".into(), p.ok.to_string()]);
+    table.row(&["throughput".into(), format!("{:.0} req/s (clock)", p.throughput())]);
+    table.row(&["inference rate".into(), format!("{:.0} rows/s (clock)", p.row_rate(16))]);
+    table.row(&["client p50 / p99".into(), format!(
+        "{:.1} / {:.1} ms",
+        p.latency.quantile(0.5) * 1e3,
+        p.latency.quantile(0.99) * 1e3
+    )]);
+    table.row(&["instances that served".into(), format!("{served} / {}", per_instance.len())]);
+    table.row(&["per-instance req mean".into(), format!("{mean:.1}")]);
+    table.row(&["per-instance req min/max".into(), format!("{min:.0} / {max:.0}")]);
+    table.row(&["per-instance req stddev".into(), format!("{:.1} ({:.0}% of mean)", var.sqrt(), 100.0 * var.sqrt() / mean.max(1e-9))]);
+    println!("{}", table.render());
+
+    assert_eq!(d.cluster.running(), 100);
+    assert!(served as f64 >= 0.95 * per_instance.len() as f64, "load balancing left instances cold");
+    println!("checks: all 100 served traffic, fairness within expectation.");
+    d.down();
+    Ok(())
+}

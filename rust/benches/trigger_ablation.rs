@@ -1,0 +1,82 @@
+//! §2.4 ablation — autoscaler trigger metrics.
+//!
+//! The paper: "The default scaling metric is defined as the average
+//! request queue latency across Triton servers" and "the trade-off ...
+//! can be further adjusted by tuning ... the metric used as its
+//! trigger." This ablation runs the Fig. 2 workload against the same
+//! dynamic deployment under four trigger choices:
+//!
+//!   * `queue_latency_avg`   — windowed Δqueue_time/Δrequests (default;
+//!                             Triton+KEDA semantics)
+//!   * `queue_latency_ewma`  — smoothed instantaneous gauge
+//!   * `queue_depth_avg`     — queued requests per instance
+//!   * `gpu_utilization_avg` — busy fraction
+//!
+//! and reports scaling behaviour + client latency per trigger. Thresholds
+//! are per-metric (they measure different quantities) and chosen to target
+//! the same knee.
+//!
+//! Run: `cargo bench --bench trigger_ablation`
+
+use std::time::Duration;
+
+use supersonic::experiments::{fig_config, fig_workload, run_deployment};
+use supersonic::util::bench::{Csv, Table};
+use supersonic::workload::Schedule;
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== §2.4 ablation: autoscaler trigger metrics ==");
+
+    let time_scale = 12.0;
+    let phase = Duration::from_secs(180);
+    let schedule = Schedule::step_up_down(1, 10, phase);
+
+    // (metric, threshold): thresholds target the same ~4-server knee.
+    let triggers: [(&str, f64); 4] = [
+        ("queue_latency_avg:30", 0.025), // seconds of queue wait/request
+        ("queue_latency_ewma", 0.025),   // seconds (smoothed gauge)
+        ("queue_depth_avg", 1.0),        // requests waiting per instance
+        ("gpu_utilization_avg", 0.85),   // busy fraction
+    ];
+
+    let mut table = Table::new(&[
+        "trigger", "peak servers", "avg latency (ms)", "p99 (ms)", "avg util", "ok",
+    ]);
+    let mut csv = Csv::new(&["trigger", "peak_servers", "avg_latency_ms", "p99_ms", "avg_util", "ok"]);
+
+    for (metric, threshold) in triggers {
+        eprintln!("running trigger {metric}...");
+        let mut cfg = fig_config(time_scale, None, phase);
+        cfg.autoscaler.metric = metric.to_string();
+        cfg.autoscaler.threshold = threshold;
+        let result = run_deployment(cfg, fig_workload(), &schedule, Duration::from_secs(5))?;
+        table.row(&[
+            metric.to_string(),
+            result.peak_servers.to_string(),
+            format!("{:.1}", result.overall_latency.mean() * 1e3),
+            format!("{:.1}", result.overall_latency.quantile(0.99) * 1e3),
+            format!("{:.3}", result.mean_utilization),
+            result.report.total_ok.to_string(),
+        ]);
+        csv.row(&[
+            metric.to_string(),
+            result.peak_servers.to_string(),
+            format!("{:.2}", result.overall_latency.mean() * 1e3),
+            format!("{:.2}", result.overall_latency.quantile(0.99) * 1e3),
+            format!("{:.4}", result.mean_utilization),
+            result.report.total_ok.to_string(),
+        ]);
+    }
+
+    println!("{}", table.render());
+    let path = csv.save("trigger_ablation")?;
+    println!("CSV: {}", path.display());
+    println!(
+        "\nexpectation: the windowed per-request trigger (paper default) scales\n\
+         decisively on the load step; the smoothed gauge under-reports sustained\n\
+         overload (scales less / later); utilization triggers scale on busyness\n\
+         even when latency is acceptable."
+    );
+    Ok(())
+}

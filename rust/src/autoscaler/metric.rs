@@ -1,0 +1,253 @@
+//! Trigger-metric queries: the KEDA `ScaledObject` trigger analogue.
+//!
+//! The paper's default trigger is "the average request queue latency
+//! across Triton servers"; the config's `autoscaler.metric` string picks
+//! one of a small query language over the [`MetricStore`]:
+//!
+//! * `queue_latency_avg` — per-request mean queue wait over a trailing
+//!   window, computed Triton/KEDA-style as Δ(queue_seconds_sum) /
+//!   Δ(request_count) aggregated across instances (the default; robust
+//!   to idle decay and sampling phase). An optional window suffix picks
+//!   the trailing window in clock seconds: `queue_latency_avg:60`.
+//! * `queue_latency_ewma` — mean of every instance's smoothed
+//!   `queue_latency_seconds` gauge (the executor's EWMA signal);
+//! * `queue_latency_max` — worst instance's gauge instead of the mean;
+//! * `queue_depth_avg` — mean queued requests per instance;
+//! * `gpu_utilization_avg` — mean busy fraction;
+//! * `series:<id>` — the latest value of an arbitrary stored series
+//!   ("an arbitrary external metric", §2.2/§2.4).
+
+use std::time::Duration;
+
+use crate::metrics::MetricStore;
+use crate::util::clock::Clock;
+
+/// Default trailing window for windowed (rate-of-sums) queries.
+const DEFAULT_WINDOW_SECS: f64 = 30.0;
+
+/// A compiled trigger query.
+pub struct MetricQuery {
+    kind: QueryKind,
+    store: MetricStore,
+    clock: Clock,
+}
+
+enum QueryKind {
+    /// Δsum/Δcount of a histogram series family over a trailing window.
+    WindowedPerRequest { base: &'static str, window: Duration },
+    AvgPrefix(&'static str),
+    MaxPrefix(&'static str),
+    Series(String),
+}
+
+impl MetricQuery {
+    /// Parse an `autoscaler.metric` config string. Unknown names fall back
+    /// to the paper's default (avg queue latency) with a warning, so a
+    /// typo degrades to default behaviour rather than a dead autoscaler.
+    pub fn parse(spec: &str, store: MetricStore, clock: Clock) -> Self {
+        let (name, window) = match spec.split_once(':') {
+            Some((n, w)) if n == "queue_latency_avg" => {
+                let secs = w.parse().unwrap_or(DEFAULT_WINDOW_SECS);
+                (n, Duration::from_secs_f64(secs))
+            }
+            _ => (spec, Duration::from_secs_f64(DEFAULT_WINDOW_SECS)),
+        };
+        let kind = match name {
+            "queue_latency_avg" => QueryKind::WindowedPerRequest {
+                base: "request_queue_seconds",
+                window,
+            },
+            "queue_latency_ewma" => QueryKind::AvgPrefix("queue_latency_seconds"),
+            "queue_latency_max" => QueryKind::MaxPrefix("queue_latency_seconds"),
+            "queue_depth_avg" => QueryKind::AvgPrefix("queue_depth"),
+            "gpu_utilization_avg" => QueryKind::AvgPrefix("gpu_utilization"),
+            other => {
+                if let Some(series) = other.strip_prefix("series:") {
+                    QueryKind::Series(series.to_string())
+                } else {
+                    log::warn!(
+                        "unknown autoscaler metric '{other}', using queue_latency_avg"
+                    );
+                    QueryKind::WindowedPerRequest {
+                        base: "request_queue_seconds",
+                        window,
+                    }
+                }
+            }
+        };
+        MetricQuery { kind, store, clock }
+    }
+
+    /// Evaluate the query. `None` until the store has data.
+    pub fn sample(&self) -> Option<f64> {
+        match &self.kind {
+            QueryKind::WindowedPerRequest { base, window } => {
+                self.windowed_per_request(base, *window)
+            }
+            QueryKind::AvgPrefix(prefix) => self.store.avg_latest_prefix(prefix),
+            QueryKind::MaxPrefix(prefix) => {
+                let ids = self.store.series_ids();
+                let vals: Vec<f64> = ids
+                    .iter()
+                    .filter(|id| id.starts_with(prefix))
+                    .filter_map(|id| self.store.latest(id).map(|(_, v)| v))
+                    .collect();
+                if vals.is_empty() {
+                    None
+                } else {
+                    Some(vals.into_iter().fold(f64::NEG_INFINITY, f64::max))
+                }
+            }
+            QueryKind::Series(id) => self.store.latest(id).map(|(_, v)| v),
+        }
+    }
+
+    /// Triton/KEDA-style trigger: total Δ(sum of queue seconds) divided by
+    /// total Δ(request count) across instances over the trailing window —
+    /// the per-request average queue wait, weighted by traffic. Instances
+    /// scraped but idle contribute 0/0; a deployment with *no* completed
+    /// requests in the window reads 0 (idle ⇒ scale-down pressure).
+    fn windowed_per_request(&self, base: &str, window: Duration) -> Option<f64> {
+        let now = self.clock.now_secs();
+        let t0 = now - window.as_secs_f64();
+        let prefix = format!("{base}{{");
+        let mut dsum = 0.0f64;
+        let mut dcount = 0.0f64;
+        let mut any_series = false;
+        for id in self.store.series_ids() {
+            if !(id.starts_with(&prefix) && id.ends_with(":sum")) {
+                continue;
+            }
+            let count_id = format!("{}:count", &id[..id.len() - ":sum".len()]);
+            let spts = self.store.range(&id, t0, now);
+            let cpts = self.store.range(&count_id, t0, now);
+            if spts.len() < 2 || cpts.len() < 2 {
+                continue;
+            }
+            any_series = true;
+            dsum += spts.last().unwrap().1 - spts[0].1;
+            dcount += cpts.last().unwrap().1 - cpts[0].1;
+        }
+        if !any_series {
+            return None; // no data yet — hold
+        }
+        if dcount <= 0.0 {
+            return Some(0.0); // nothing served: no queueing pressure
+        }
+        Some((dsum / dcount).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn store() -> MetricStore {
+        let s = MetricStore::new(Duration::from_secs(600));
+        s.push("queue_latency_seconds{instance=\"a\"}", 1.0, 0.2);
+        s.push("queue_latency_seconds{instance=\"b\"}", 1.0, 0.4);
+        s.push("queue_depth{instance=\"a\"}", 1.0, 3.0);
+        s.push("gpu_utilization{instance=\"a\"}", 1.0, 0.9);
+        s.push("custom_series", 1.0, 42.0);
+        s
+    }
+
+    /// Clock pinned at t=10s so windowed queries see the pushed points.
+    fn clock_at_10s() -> Clock {
+        let c = Clock::simulated();
+        c.advance(Duration::from_secs(10));
+        c
+    }
+
+    #[test]
+    fn ewma_queue_latency() {
+        let q = MetricQuery::parse("queue_latency_ewma", store(), Clock::real());
+        assert!((q.sample().unwrap() - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_queue_latency_per_request() {
+        let s = MetricStore::new(Duration::from_secs(600));
+        // instance a: 10 requests, 1.0s of queue time in the window
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 1.0, 5.0);
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 9.0, 6.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 1.0, 100.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 9.0, 110.0);
+        // instance b: 30 requests, 0.5s of queue time
+        s.push("request_queue_seconds{instance=\"b\"}:sum", 1.0, 0.0);
+        s.push("request_queue_seconds{instance=\"b\"}:sum", 9.0, 0.5);
+        s.push("request_queue_seconds{instance=\"b\"}:count", 1.0, 0.0);
+        s.push("request_queue_seconds{instance=\"b\"}:count", 9.0, 30.0);
+        let q = MetricQuery::parse("queue_latency_avg", s, clock_at_10s());
+        // (1.0 + 0.5) / (10 + 30) = 0.0375
+        assert!((q.sample().unwrap() - 0.0375).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windowed_no_data_is_none_idle_is_zero() {
+        let s = MetricStore::new(Duration::from_secs(600));
+        let q = MetricQuery::parse("queue_latency_avg", s.clone(), clock_at_10s());
+        assert_eq!(q.sample(), None);
+        // series exist but no new requests in the window
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 1.0, 5.0);
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 9.0, 5.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 1.0, 50.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 9.0, 50.0);
+        assert_eq!(q.sample(), Some(0.0));
+    }
+
+    #[test]
+    fn windowed_respects_window_suffix() {
+        let s = MetricStore::new(Duration::from_secs(600));
+        // old spike outside a 5s window ending at t=10
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 1.0, 0.0);
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 2.0, 100.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 1.0, 0.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 2.0, 10.0);
+        // quiet recent window
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 6.0, 100.0);
+        s.push("request_queue_seconds{instance=\"a\"}:sum", 9.0, 100.1);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 6.0, 10.0);
+        s.push("request_queue_seconds{instance=\"a\"}:count", 9.0, 20.0);
+        let narrow = MetricQuery::parse("queue_latency_avg:5", s.clone(), clock_at_10s());
+        assert!((narrow.sample().unwrap() - 0.01).abs() < 1e-9);
+        let wide = MetricQuery::parse("queue_latency_avg:20", s, clock_at_10s());
+        assert!(wide.sample().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn max_queue_latency() {
+        let q = MetricQuery::parse("queue_latency_max", store(), Clock::real());
+        assert!((q.sample().unwrap() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_depth_and_util() {
+        let s = store();
+        let q = MetricQuery::parse("queue_depth_avg", s.clone(), Clock::real());
+        assert!((q.sample().unwrap() - 3.0).abs() < 1e-9);
+        let q = MetricQuery::parse("gpu_utilization_avg", s, Clock::real());
+        assert!((q.sample().unwrap() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arbitrary_series() {
+        let q = MetricQuery::parse("series:custom_series", store(), Clock::real());
+        assert_eq!(q.sample(), Some(42.0));
+    }
+
+    #[test]
+    fn unknown_falls_back_to_default() {
+        // Falls back to the windowed default; empty store → None.
+        let q = MetricQuery::parse("qeue_latency_avg", store(), clock_at_10s());
+        assert_eq!(q.sample(), None);
+    }
+
+    #[test]
+    fn empty_store_is_none() {
+        let s = MetricStore::new(Duration::from_secs(10));
+        let q = MetricQuery::parse("queue_latency_avg", s, Clock::real());
+        assert_eq!(q.sample(), None);
+    }
+}

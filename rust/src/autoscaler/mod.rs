@@ -1,0 +1,382 @@
+//! Load-based autoscaling — the KEDA analogue (§2.4).
+//!
+//! "KEDA is configured to launch additional Triton instances when a
+//! user-defined metric exceeds a given threshold and, conversely, to shut
+//! down servers when the metric value falls below the threshold. The
+//! default scaling metric is defined as the average request queue latency
+//! across Triton servers."
+//!
+//! Split into two layers:
+//!
+//! * [`ScalerCore`] — the pure decision function. Given (time, metric,
+//!   current desired) it applies threshold / cooldown / stabilization /
+//!   step / bounds rules and returns the new desired replica count. Being
+//!   pure, it is exhaustively unit- and property-tested without threads.
+//! * [`Autoscaler`] — the poll loop: samples the configured metric from
+//!   the [`MetricStore`], feeds the core, and pushes decisions into the
+//!   cluster's `desired_replicas` — exactly KEDA's relationship to a
+//!   Deployment.
+
+pub mod metric;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::AutoscalerConfig;
+use crate::metrics::registry::{labels, Registry};
+use crate::metrics::MetricStore;
+use crate::orchestrator::Cluster;
+use crate::util::clock::Clock;
+
+pub use metric::MetricQuery;
+
+/// A scaling decision from one evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Keep the current replica count.
+    Hold,
+    /// Scale up to the contained count.
+    Up(usize),
+    /// Scale down to the contained count.
+    Down(usize),
+}
+
+impl Decision {
+    /// The target replica count, if the decision changes it.
+    pub fn target(&self) -> Option<usize> {
+        match self {
+            Decision::Hold => None,
+            Decision::Up(n) | Decision::Down(n) => Some(*n),
+        }
+    }
+}
+
+/// Pure threshold/cooldown/stabilization state machine.
+///
+/// Scale-up: metric > `threshold`, rate-limited by `scale_up_cooldown`.
+/// Scale-down: metric must stay below `threshold * scale_down_ratio` for a
+/// full `scale_down_stabilization` window (KEDA's stabilization semantics:
+/// any excursion above the low-water mark resets the window).
+pub struct ScalerCore {
+    cfg: AutoscalerConfig,
+    /// Clock-seconds of the last scale-up.
+    last_scale_up: f64,
+    /// Start of the current below-low-water streak (None = streak broken).
+    low_since: Option<f64>,
+}
+
+impl ScalerCore {
+    /// Fresh core; `now` is the current clock time in seconds.
+    pub fn new(cfg: AutoscalerConfig, now: f64) -> Self {
+        ScalerCore {
+            cfg,
+            // Allow an immediate first scale-up.
+            last_scale_up: now - 1e9,
+            low_since: None,
+        }
+    }
+
+    /// The configured bounds, clamped.
+    fn clamp(&self, n: usize) -> usize {
+        n.clamp(self.cfg.min_replicas, self.cfg.max_replicas)
+    }
+
+    /// Low-water mark below which scale-down stabilization accumulates.
+    pub fn low_water(&self) -> f64 {
+        self.cfg.threshold * self.cfg.scale_down_ratio
+    }
+
+    /// Evaluate one sample. `current` is the cluster's desired replicas.
+    pub fn evaluate(&mut self, now: f64, metric: f64, current: usize) -> Decision {
+        // Track the below-low-water streak regardless of what we decide.
+        if metric < self.low_water() {
+            if self.low_since.is_none() {
+                self.low_since = Some(now);
+            }
+        } else {
+            self.low_since = None;
+        }
+
+        if metric > self.cfg.threshold {
+            if current >= self.cfg.max_replicas {
+                return Decision::Hold;
+            }
+            if now - self.last_scale_up < self.cfg.scale_up_cooldown.as_secs_f64() {
+                return Decision::Hold;
+            }
+            self.last_scale_up = now;
+            return Decision::Up(self.clamp(current + self.cfg.step));
+        }
+
+        if let Some(since) = self.low_since {
+            if current > self.cfg.min_replicas
+                && now - since >= self.cfg.scale_down_stabilization.as_secs_f64()
+            {
+                // Restart the window so consecutive downs are spaced by a
+                // full stabilization period each.
+                self.low_since = Some(now);
+                return Decision::Down(self.clamp(current.saturating_sub(self.cfg.step)));
+            }
+        }
+        Decision::Hold
+    }
+}
+
+/// The running autoscaler: poll loop + metrics.
+pub struct Autoscaler {
+    core: Arc<Mutex<ScalerCore>>,
+    query: Arc<MetricQuery>,
+    cluster: Arc<Cluster>,
+    cfg: AutoscalerConfig,
+    clock: Clock,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    m_metric: crate::metrics::registry::Gauge,
+    m_scale_ups: crate::metrics::registry::Counter,
+    m_scale_downs: crate::metrics::registry::Counter,
+}
+
+impl Autoscaler {
+    /// Start polling `store` every `cfg.poll_interval` of clock time.
+    pub fn start(
+        cfg: AutoscalerConfig,
+        cluster: Arc<Cluster>,
+        store: MetricStore,
+        clock: Clock,
+        registry: Registry,
+    ) -> Arc<Self> {
+        let query = Arc::new(MetricQuery::parse(&cfg.metric, store, clock.clone()));
+        let l = labels(&[]);
+        let scaler = Arc::new(Autoscaler {
+            core: Arc::new(Mutex::new(ScalerCore::new(cfg.clone(), clock.now_secs()))),
+            query,
+            cluster,
+            cfg: cfg.clone(),
+            clock: clock.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            m_metric: registry.gauge("autoscaler_metric", &l),
+            m_scale_ups: registry.counter("autoscaler_scale_ups_total", &l),
+            m_scale_downs: registry.counter("autoscaler_scale_downs_total", &l),
+        });
+        if cfg.enabled {
+            let s = Arc::clone(&scaler);
+            let handle = std::thread::Builder::new()
+                .name("autoscaler".into())
+                .spawn(move || {
+                    while !s.stop.load(Ordering::SeqCst) {
+                        s.evaluate_once();
+                        s.clock.sleep(s.cfg.poll_interval);
+                    }
+                })
+                .expect("spawning autoscaler");
+            *scaler.handle.lock().unwrap() = Some(handle);
+        }
+        scaler
+    }
+
+    /// One synchronous evaluation (used by the poll loop and by
+    /// simulated-time tests). Returns the decision taken.
+    pub fn evaluate_once(&self) -> Decision {
+        let now = self.clock.now_secs();
+        let Some(metric) = self.query.sample() else {
+            return Decision::Hold; // no data yet
+        };
+        self.m_metric.set(metric);
+        let current = self.cluster.desired();
+        let decision = self.core.lock().unwrap().evaluate(now, metric, current);
+        match decision {
+            Decision::Up(n) => {
+                log::info!(
+                    "autoscaler: metric {metric:.4} > {:.4}, scaling {current} -> {n}",
+                    self.cfg.threshold
+                );
+                self.m_scale_ups.inc();
+                self.cluster.set_desired(n);
+            }
+            Decision::Down(n) => {
+                log::info!("autoscaler: metric {metric:.4} low, scaling {current} -> {n}");
+                self.m_scale_downs.inc();
+                self.cluster.set_desired(n);
+            }
+            Decision::Hold => {}
+        }
+        decision
+    }
+
+    /// Latest sampled metric value.
+    pub fn metric_value(&self) -> f64 {
+        self.m_metric.get()
+    }
+
+    /// Stop the poll loop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cfg() -> AutoscalerConfig {
+        AutoscalerConfig {
+            enabled: true,
+            metric: "queue_latency_avg".into(),
+            threshold: 0.1,
+            scale_down_ratio: 0.3, // low water 0.03
+            min_replicas: 1,
+            max_replicas: 10,
+            poll_interval: Duration::from_secs(1),
+            scale_up_cooldown: Duration::from_secs(5),
+            scale_down_stabilization: Duration::from_secs(30),
+            step: 1,
+        }
+    }
+
+    #[test]
+    fn scales_up_over_threshold() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        assert_eq!(core.evaluate(0.0, 0.5, 1), Decision::Up(2));
+    }
+
+    #[test]
+    fn cooldown_blocks_consecutive_ups() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        assert_eq!(core.evaluate(0.0, 0.5, 1), Decision::Up(2));
+        assert_eq!(core.evaluate(1.0, 0.5, 2), Decision::Hold);
+        assert_eq!(core.evaluate(4.9, 0.5, 2), Decision::Hold);
+        assert_eq!(core.evaluate(5.0, 0.5, 2), Decision::Up(3));
+    }
+
+    #[test]
+    fn max_replicas_caps_up() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        assert_eq!(core.evaluate(0.0, 0.5, 10), Decision::Hold);
+    }
+
+    #[test]
+    fn step_respected() {
+        let mut c = cfg();
+        c.step = 3;
+        let mut core = ScalerCore::new(c, 0.0);
+        assert_eq!(core.evaluate(0.0, 0.5, 1), Decision::Up(4));
+        assert_eq!(core.evaluate(100.0, 0.5, 9), Decision::Up(10)); // clamped
+    }
+
+    #[test]
+    fn scale_down_needs_full_stabilization() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        // below low water from t=0
+        assert_eq!(core.evaluate(0.0, 0.01, 4), Decision::Hold);
+        assert_eq!(core.evaluate(15.0, 0.01, 4), Decision::Hold);
+        assert_eq!(core.evaluate(29.9, 0.01, 4), Decision::Hold);
+        assert_eq!(core.evaluate(30.0, 0.01, 4), Decision::Down(3));
+        // window restarts: next down only after another 30s
+        assert_eq!(core.evaluate(31.0, 0.01, 3), Decision::Hold);
+        assert_eq!(core.evaluate(60.0, 0.01, 3), Decision::Down(2));
+    }
+
+    #[test]
+    fn excursion_resets_stabilization() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        assert_eq!(core.evaluate(0.0, 0.01, 4), Decision::Hold);
+        // metric pops above low water mid-window
+        assert_eq!(core.evaluate(20.0, 0.05, 4), Decision::Hold);
+        assert_eq!(core.evaluate(30.0, 0.01, 4), Decision::Hold); // streak restarted at 30
+        assert_eq!(core.evaluate(59.0, 0.01, 4), Decision::Hold);
+        assert_eq!(core.evaluate(60.0, 0.01, 4), Decision::Down(3));
+    }
+
+    #[test]
+    fn never_below_min() {
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        assert_eq!(core.evaluate(0.0, 0.0, 1), Decision::Hold);
+        assert_eq!(core.evaluate(1000.0, 0.0, 1), Decision::Hold);
+    }
+
+    #[test]
+    fn mid_band_holds() {
+        // between low water (0.03) and threshold (0.1): no action, ever.
+        let mut core = ScalerCore::new(cfg(), 0.0);
+        for t in 0..200 {
+            assert_eq!(core.evaluate(t as f64, 0.05, 4), Decision::Hold);
+        }
+    }
+
+    #[test]
+    fn property_bounds_always_respected() {
+        use crate::util::quick::{check, Gen};
+        check("scaler stays within [min,max]", 300, |g: &mut Gen| {
+            let mut c = cfg();
+            c.min_replicas = g.usize(1..=3);
+            c.max_replicas = c.min_replicas + g.usize(0..=7);
+            c.step = g.usize(1..=4);
+            c.scale_up_cooldown = Duration::from_secs_f64(g.f64(0.0, 10.0));
+            c.scale_down_stabilization = Duration::from_secs_f64(g.f64(0.0, 30.0));
+            let mut core = ScalerCore::new(c.clone(), 0.0);
+            let mut current = g.usize(c.min_replicas..=c.max_replicas);
+            let mut t = 0.0;
+            for _ in 0..50 {
+                t += g.f64(0.1, 5.0);
+                let metric = g.f64(0.0, 0.5);
+                if let Some(n) = core.evaluate(t, metric, current).target() {
+                    assert!(
+                        (c.min_replicas..=c.max_replicas).contains(&n),
+                        "target {n} outside [{}, {}]",
+                        c.min_replicas,
+                        c.max_replicas
+                    );
+                    current = n;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_up_requires_over_threshold() {
+        use crate::util::quick::{check, Gen};
+        check("no scale-up at or under threshold", 300, |g: &mut Gen| {
+            let c = cfg();
+            let mut core = ScalerCore::new(c.clone(), 0.0);
+            let mut t = 0.0;
+            for _ in 0..50 {
+                t += g.f64(0.1, 10.0);
+                let metric = g.f64(0.0, c.threshold); // never above
+                let d = core.evaluate(t, metric, 5);
+                assert!(!matches!(d, Decision::Up(_)), "scaled up on {metric}");
+            }
+        });
+    }
+
+    #[test]
+    fn property_down_spacing_at_least_stabilization() {
+        use crate::util::quick::{check, Gen};
+        check("downs spaced by stabilization window", 200, |g: &mut Gen| {
+            let c = cfg();
+            let stab = c.scale_down_stabilization.as_secs_f64();
+            let mut core = ScalerCore::new(c, 0.0);
+            let mut t = 0.0;
+            let mut last_down: Option<f64> = None;
+            let mut current = 8;
+            for _ in 0..100 {
+                t += g.f64(0.5, 3.0);
+                let d = core.evaluate(t, 0.001, current);
+                if let Decision::Down(n) = d {
+                    if let Some(prev) = last_down {
+                        assert!(
+                            t - prev >= stab - 1e-9,
+                            "downs {prev:.1} and {t:.1} closer than {stab}"
+                        );
+                    }
+                    last_down = Some(t);
+                    current = n;
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,23 @@
+// Numerics check: execute every (model, batch) artifact against its golden.
+fn main() -> anyhow::Result<()> {
+    let rt = supersonic::runtime::PjrtRuntime::cpu()?;
+    let mut bad = 0;
+    for model in ["particlenet", "icecube_cnn", "cms_transformer"] {
+        let dir = std::path::Path::new("artifacts").join(model);
+        let set = supersonic::runtime::EngineSet::load(&rt, &dir, model)?;
+        for bs in set.batch_sizes() {
+            let g = supersonic::runtime::golden::load(&dir.join(format!("golden.b{bs}.txt")))?;
+            let eng = set.engine_exact(bs).unwrap();
+            let t0 = std::time::Instant::now();
+            let out = eng.execute(&g.input)?;
+            let dt = t0.elapsed();
+            let diff = out.max_abs_diff(&g.output)?;
+            let ok = diff < 1e-3;
+            if !ok { bad += 1; }
+            println!("{model} b{bs}: max_abs_diff={diff:.3e} exec={dt:?} {}", if ok {"OK"} else {"FAIL"});
+        }
+    }
+    if bad > 0 { anyhow::bail!("{bad} golden mismatches"); }
+    println!("ALL GOLDENS OK");
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Declarative configuration — the Helm-values analogue.
+//!
+//! SuperSONIC is distributed as a Helm chart whose `values.yaml` drives the
+//! whole deployment. This module reproduces that surface: a YAML-subset
+//! parser ([`yaml`]) plus a typed, validated schema ([`schema`]) covering
+//! every component (servers, gateway, autoscaler, cluster, monitoring).
+//! Per-site presets live in `configs/*.yaml`, mirroring the paper's
+//! deployments at Purdue Geddes/Anvil, NRP and UChicago (§3).
+
+pub mod schema;
+pub mod yaml;
+
+pub use schema::{
+    AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, GatewayConfig,
+    LbPolicy, ModelConfig, MonitoringConfig, ServerConfig, ServiceModelConfig,
+};
+pub use yaml::Value;

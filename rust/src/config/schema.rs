@@ -1,0 +1,804 @@
+//! Typed deployment configuration — the `values.yaml` schema.
+//!
+//! Every knob the paper's Helm chart exposes has an analogue here:
+//! inference servers (Triton §2.1), the gateway (Envoy §2.2: load
+//! balancing, rate limiting, token auth), monitoring (Prometheus §2.3),
+//! autoscaling (KEDA §2.4) and the cluster substrate (Kubernetes §2).
+//! Unknown keys are *rejected* (typo protection), missing keys fall back
+//! to documented defaults, and [`DeploymentConfig::validate`] enforces
+//! cross-field invariants.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::yaml::{self, Value};
+
+/// Load-balancing policies the gateway supports (Envoy's menu, §2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LbPolicy {
+    /// Cycle through ready instances.
+    RoundRobin,
+    /// Fewest in-flight requests.
+    LeastConnection,
+    /// Lowest busy-fraction over the metrics window.
+    UtilizationAware,
+    /// Uniform random (baseline for the ablation bench).
+    Random,
+}
+
+impl LbPolicy {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "round_robin" => LbPolicy::RoundRobin,
+            "least_connection" => LbPolicy::LeastConnection,
+            "utilization_aware" => LbPolicy::UtilizationAware,
+            "random" => LbPolicy::Random,
+            other => bail!(
+                "unknown lb policy '{other}' (expected round_robin, \
+                 least_connection, utilization_aware or random)"
+            ),
+        })
+    }
+
+    /// Canonical config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LbPolicy::RoundRobin => "round_robin",
+            LbPolicy::LeastConnection => "least_connection",
+            LbPolicy::UtilizationAware => "utilization_aware",
+            LbPolicy::Random => "random",
+        }
+    }
+}
+
+/// How instances execute batches (see DESIGN.md §Substitutions #3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Run the real AOT-compiled model through PJRT (the default). Latency
+    /// and utilization reflect actual CPU execution of the real numerics.
+    Real,
+    /// Sleep a calibrated per-batch service time instead of executing
+    /// (outputs are zeros). Used by the Fig. 2/3 scaling experiments,
+    /// where "GPU speed" must be a T4 model rather than whatever CPU the
+    /// harness happens to run on — the queueing/batching/routing code
+    /// path is identical.
+    Simulated,
+}
+
+impl ExecutionMode {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "real" => ExecutionMode::Real,
+            "simulated" => ExecutionMode::Simulated,
+            other => bail!("unknown execution mode '{other}' (expected real or simulated)"),
+        })
+    }
+
+    /// Canonical config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutionMode::Real => "real",
+            ExecutionMode::Simulated => "simulated",
+        }
+    }
+}
+
+/// Linear per-batch service-time model for simulated execution:
+/// `service(batch) = base + per_row * rows`. Defaults approximate an
+/// NVIDIA T4 running ParticleNet (the paper's Fig. 2/3 configuration).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceModelConfig {
+    /// Fixed per-batch launch overhead.
+    pub base: Duration,
+    /// Marginal cost per batched sample.
+    pub per_row: Duration,
+}
+
+impl Default for ServiceModelConfig {
+    fn default() -> Self {
+        ServiceModelConfig {
+            base: Duration::from_millis(5),
+            per_row: Duration::from_micros(1500),
+        }
+    }
+}
+
+impl ServiceModelConfig {
+    /// Service time for a batch of `rows` samples, in seconds.
+    pub fn service_secs(&self, rows: usize) -> f64 {
+        self.base.as_secs_f64() + self.per_row.as_secs_f64() * rows as f64
+    }
+}
+
+/// One served model (a Triton model-repository entry).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Repository directory name under `artifacts/`.
+    pub name: String,
+    /// Dynamic-batching window: how long the batcher may hold requests
+    /// while accumulating a batch.
+    pub max_queue_delay: Duration,
+    /// Cap on the batch the batcher will form (further capped by the
+    /// largest compiled artifact).
+    pub preferred_batch: usize,
+    /// Service-time model used when `server.execution: simulated`.
+    pub service_model: ServiceModelConfig,
+}
+
+/// Inference-server section (Triton analogue).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// Initial replica count (pods at boot).
+    pub replicas: usize,
+    /// Models each replica loads.
+    pub models: Vec<ModelConfig>,
+    /// Model repository root.
+    pub repository: PathBuf,
+    /// Simulated model-load time per replica start (pod ContainerCreating
+    /// -> Running; the paper's GPU pods pull containers and load models).
+    pub startup_delay: Duration,
+    /// Real PJRT execution or calibrated simulated GPUs.
+    pub execution: ExecutionMode,
+    /// Per-instance queue capacity before load shedding.
+    pub queue_capacity: usize,
+    /// Utilization averaging window (clock seconds).
+    pub util_window: f64,
+}
+
+/// Gateway section (Envoy analogue, §2.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GatewayConfig {
+    /// TCP listen address, e.g. "127.0.0.1:8001". Port 0 = ephemeral.
+    pub listen: String,
+    /// Load-balancing policy.
+    pub lb_policy: LbPolicy,
+    /// Token-bucket rate limit in requests/sec (0 disables).
+    pub rate_limit_rps: f64,
+    /// Token-bucket burst capacity.
+    pub rate_limit_burst: usize,
+    /// Shared-secret token auth (None disables). Tokens are HMAC-verified.
+    pub auth_secret: Option<String>,
+    /// Connection-handler threads.
+    pub worker_threads: usize,
+    /// Per-instance outstanding-request cap before the gateway sheds load
+    /// (overload protection, §2.2 "preventing overloads").
+    pub max_inflight_per_instance: usize,
+    /// Open-connection cap at the listener (0 disables) — Envoy's
+    /// connection limiting, §2.2 "based on the number of client
+    /// connections".
+    pub max_connections: usize,
+}
+
+/// Autoscaler section (KEDA analogue, §2.4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Master switch; false = static deployment (the paper's baseline).
+    pub enabled: bool,
+    /// Metric that triggers scaling. The paper's default is the average
+    /// request queue latency across Triton servers.
+    pub metric: String,
+    /// Scale up when the metric exceeds this (seconds for latency metrics).
+    pub threshold: f64,
+    /// Scale down when the metric falls below `threshold * scale_down_ratio`.
+    pub scale_down_ratio: f64,
+    /// Replica bounds.
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Metric poll interval.
+    pub poll_interval: Duration,
+    /// Minimum time between consecutive scale-ups.
+    pub scale_up_cooldown: Duration,
+    /// Minimum time the metric must stay low before scale-down (KEDA's
+    /// stabilization window).
+    pub scale_down_stabilization: Duration,
+    /// Replicas added per scale-up step.
+    pub step: usize,
+}
+
+/// Cluster substrate section (Kubernetes analogue).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Node count in the simulated cluster.
+    pub nodes: usize,
+    /// GPU slots per node (pods needing a GPU bind to a slot).
+    pub gpus_per_node: usize,
+    /// Simulated pod-start latency (scheduling + container pull), on top
+    /// of the server's model-load `startup_delay`.
+    pub pod_start_delay: Duration,
+    /// Graceful termination period on scale-down.
+    pub termination_grace: Duration,
+    /// Probability a pod start fails and is retried (failure injection).
+    pub pod_failure_rate: f64,
+}
+
+/// Monitoring section (Prometheus analogue, §2.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MonitoringConfig {
+    /// Metrics HTTP endpoint ("127.0.0.1:0" = ephemeral port, "" = off).
+    pub listen: String,
+    /// Scrape/aggregation interval.
+    pub scrape_interval: Duration,
+    /// Retention window for time series.
+    pub retention: Duration,
+    /// Enable per-request span tracing (OpenTelemetry analogue).
+    pub tracing: bool,
+}
+
+/// Whole-deployment configuration (the Helm values analogue).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentConfig {
+    /// Deployment name (labels metrics and logs).
+    pub name: String,
+    pub server: ServerConfig,
+    pub gateway: GatewayConfig,
+    pub autoscaler: AutoscalerConfig,
+    pub cluster: ClusterConfig,
+    pub monitoring: MonitoringConfig,
+    /// Wall-clock dilation factor for experiments (1.0 = real time). See
+    /// `util::clock`.
+    pub time_scale: f64,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        ModelConfig {
+            name: "particlenet".into(),
+            max_queue_delay: Duration::from_millis(2),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig::default(),
+        }
+    }
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            replicas: 1,
+            models: vec![ModelConfig::default()],
+            repository: PathBuf::from("artifacts"),
+            startup_delay: Duration::from_secs(2),
+            execution: ExecutionMode::Real,
+            queue_capacity: 256,
+            util_window: 10.0,
+        }
+    }
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            listen: "127.0.0.1:0".into(),
+            lb_policy: LbPolicy::RoundRobin,
+            rate_limit_rps: 0.0,
+            rate_limit_burst: 64,
+            auth_secret: None,
+            worker_threads: 8,
+            max_inflight_per_instance: 32,
+            max_connections: 0,
+        }
+    }
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            enabled: false,
+            metric: "queue_latency_avg".into(),
+            threshold: 0.050,
+            scale_down_ratio: 0.3,
+            min_replicas: 1,
+            max_replicas: 8,
+            poll_interval: Duration::from_secs(2),
+            scale_up_cooldown: Duration::from_secs(4),
+            scale_down_stabilization: Duration::from_secs(20),
+            step: 1,
+        }
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            gpus_per_node: 4,
+            pod_start_delay: Duration::from_secs(3),
+            termination_grace: Duration::from_secs(1),
+            pod_failure_rate: 0.0,
+        }
+    }
+}
+
+impl Default for MonitoringConfig {
+    fn default() -> Self {
+        MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(3600),
+            tracing: false,
+        }
+    }
+}
+
+impl Default for DeploymentConfig {
+    fn default() -> Self {
+        DeploymentConfig {
+            name: "supersonic".into(),
+            server: ServerConfig::default(),
+            gateway: GatewayConfig::default(),
+            autoscaler: AutoscalerConfig::default(),
+            cluster: ClusterConfig::default(),
+            monitoring: MonitoringConfig::default(),
+            time_scale: 1.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parsing helpers
+// ---------------------------------------------------------------------------
+
+fn check_keys(v: &Value, allowed: &[&str], section: &str) -> Result<()> {
+    for key in v.keys() {
+        if !allowed.contains(&key) {
+            bail!(
+                "unknown key '{key}' in section '{section}' \
+                 (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+fn get_usize(v: &Value, key: &str, default: usize) -> Result<usize> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            let i = x
+                .as_i64()
+                .with_context(|| format!("'{key}' must be an integer"))?;
+            if i < 0 {
+                bail!("'{key}' must be non-negative, got {i}");
+            }
+            Ok(i as usize)
+        }
+    }
+}
+
+fn get_f64(v: &Value, key: &str, default: f64) -> Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .with_context(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn get_bool(v: &Value, key: &str, default: bool) -> Result<bool> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_bool()
+            .with_context(|| format!("'{key}' must be a bool")),
+    }
+}
+
+fn get_str(v: &Value, key: &str, default: &str) -> Result<String> {
+    match v.get(key) {
+        None => Ok(default.to_string()),
+        Some(x) => Ok(x
+            .as_str()
+            .with_context(|| format!("'{key}' must be a string"))?
+            .to_string()),
+    }
+}
+
+/// Durations are written as float seconds (e.g. `poll_interval: 0.5`).
+fn get_duration(v: &Value, key: &str, default: Duration) -> Result<Duration> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => {
+            let secs = x
+                .as_f64()
+                .with_context(|| format!("'{key}' must be seconds (number)"))?;
+            if secs < 0.0 {
+                bail!("'{key}' must be non-negative");
+            }
+            Ok(Duration::from_secs_f64(secs))
+        }
+    }
+}
+
+impl DeploymentConfig {
+    /// Parse from YAML text; missing sections/keys use defaults, unknown
+    /// keys are errors.
+    pub fn from_yaml(text: &str) -> Result<Self> {
+        let root = yaml::parse(text).context("parsing deployment config")?;
+        Self::from_value(&root)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_yaml(&text).with_context(|| format!("in config {}", path.display()))
+    }
+
+    /// Parse from an already-parsed YAML value.
+    pub fn from_value(root: &Value) -> Result<Self> {
+        check_keys(
+            root,
+            &["name", "server", "gateway", "autoscaler", "cluster", "monitoring", "time_scale"],
+            "<root>",
+        )?;
+        let d = DeploymentConfig::default();
+        let empty = Value::Map(Vec::new());
+
+        let name = get_str(root, "name", &d.name)?;
+        let time_scale = get_f64(root, "time_scale", d.time_scale)?;
+
+        let sv = root.get("server").unwrap_or(&empty);
+        check_keys(
+            sv,
+            &["replicas", "models", "repository", "startup_delay", "execution", "queue_capacity", "util_window"],
+            "server",
+        )?;
+        let models = match sv.get("models") {
+            None => d.server.models.clone(),
+            Some(list) => {
+                let items = list
+                    .as_seq()
+                    .context("'server.models' must be a sequence")?;
+                let mut models = Vec::new();
+                for item in items {
+                    check_keys(
+                        item,
+                        &["name", "max_queue_delay", "preferred_batch", "service_model"],
+                        "server.models[]",
+                    )?;
+                    let dm = ModelConfig::default();
+                    let service_model = match item.get("service_model") {
+                        None => dm.service_model,
+                        Some(sm) => {
+                            check_keys(sm, &["base", "per_row"], "server.models[].service_model")?;
+                            ServiceModelConfig {
+                                base: get_duration(sm, "base", dm.service_model.base)?,
+                                per_row: get_duration(sm, "per_row", dm.service_model.per_row)?,
+                            }
+                        }
+                    };
+                    models.push(ModelConfig {
+                        name: get_str(item, "name", "")?,
+                        max_queue_delay: get_duration(item, "max_queue_delay", dm.max_queue_delay)?,
+                        preferred_batch: get_usize(item, "preferred_batch", dm.preferred_batch)?,
+                        service_model,
+                    });
+                }
+                models
+            }
+        };
+        let server = ServerConfig {
+            replicas: get_usize(sv, "replicas", d.server.replicas)?,
+            models,
+            repository: PathBuf::from(get_str(sv, "repository", "artifacts")?),
+            startup_delay: get_duration(sv, "startup_delay", d.server.startup_delay)?,
+            execution: match sv.get("execution") {
+                None => d.server.execution,
+                Some(x) => ExecutionMode::parse(
+                    x.as_str().context("'execution' must be a string")?,
+                )?,
+            },
+            queue_capacity: get_usize(sv, "queue_capacity", d.server.queue_capacity)?,
+            util_window: get_f64(sv, "util_window", d.server.util_window)?,
+        };
+
+        let gw = root.get("gateway").unwrap_or(&empty);
+        check_keys(
+            gw,
+            &["listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret", "worker_threads", "max_inflight_per_instance", "max_connections"],
+            "gateway",
+        )?;
+        let gateway = GatewayConfig {
+            listen: get_str(gw, "listen", &d.gateway.listen)?,
+            lb_policy: match gw.get("lb_policy") {
+                None => d.gateway.lb_policy,
+                Some(x) => LbPolicy::parse(x.as_str().context("'lb_policy' must be a string")?)?,
+            },
+            rate_limit_rps: get_f64(gw, "rate_limit_rps", d.gateway.rate_limit_rps)?,
+            rate_limit_burst: get_usize(gw, "rate_limit_burst", d.gateway.rate_limit_burst)?,
+            auth_secret: match gw.get("auth_secret") {
+                None => None,
+                Some(x) if x.is_null() => None,
+                Some(x) => Some(x.as_str().context("'auth_secret' must be a string")?.to_string()),
+            },
+            worker_threads: get_usize(gw, "worker_threads", d.gateway.worker_threads)?,
+            max_inflight_per_instance: get_usize(
+                gw,
+                "max_inflight_per_instance",
+                d.gateway.max_inflight_per_instance,
+            )?,
+            max_connections: get_usize(gw, "max_connections", d.gateway.max_connections)?,
+        };
+
+        let asc = root.get("autoscaler").unwrap_or(&empty);
+        check_keys(
+            asc,
+            &["enabled", "metric", "threshold", "scale_down_ratio", "min_replicas", "max_replicas", "poll_interval", "scale_up_cooldown", "scale_down_stabilization", "step"],
+            "autoscaler",
+        )?;
+        let autoscaler = AutoscalerConfig {
+            enabled: get_bool(asc, "enabled", d.autoscaler.enabled)?,
+            metric: get_str(asc, "metric", &d.autoscaler.metric)?,
+            threshold: get_f64(asc, "threshold", d.autoscaler.threshold)?,
+            scale_down_ratio: get_f64(asc, "scale_down_ratio", d.autoscaler.scale_down_ratio)?,
+            min_replicas: get_usize(asc, "min_replicas", d.autoscaler.min_replicas)?,
+            max_replicas: get_usize(asc, "max_replicas", d.autoscaler.max_replicas)?,
+            poll_interval: get_duration(asc, "poll_interval", d.autoscaler.poll_interval)?,
+            scale_up_cooldown: get_duration(asc, "scale_up_cooldown", d.autoscaler.scale_up_cooldown)?,
+            scale_down_stabilization: get_duration(
+                asc,
+                "scale_down_stabilization",
+                d.autoscaler.scale_down_stabilization,
+            )?,
+            step: get_usize(asc, "step", d.autoscaler.step)?,
+        };
+
+        let cl = root.get("cluster").unwrap_or(&empty);
+        check_keys(
+            cl,
+            &["nodes", "gpus_per_node", "pod_start_delay", "termination_grace", "pod_failure_rate"],
+            "cluster",
+        )?;
+        let cluster = ClusterConfig {
+            nodes: get_usize(cl, "nodes", d.cluster.nodes)?,
+            gpus_per_node: get_usize(cl, "gpus_per_node", d.cluster.gpus_per_node)?,
+            pod_start_delay: get_duration(cl, "pod_start_delay", d.cluster.pod_start_delay)?,
+            termination_grace: get_duration(cl, "termination_grace", d.cluster.termination_grace)?,
+            pod_failure_rate: get_f64(cl, "pod_failure_rate", d.cluster.pod_failure_rate)?,
+        };
+
+        let mon = root.get("monitoring").unwrap_or(&empty);
+        check_keys(mon, &["listen", "scrape_interval", "retention", "tracing"], "monitoring")?;
+        let monitoring = MonitoringConfig {
+            listen: get_str(mon, "listen", &d.monitoring.listen)?,
+            scrape_interval: get_duration(mon, "scrape_interval", d.monitoring.scrape_interval)?,
+            retention: get_duration(mon, "retention", d.monitoring.retention)?,
+            tracing: get_bool(mon, "tracing", d.monitoring.tracing)?,
+        };
+
+        let cfg = DeploymentConfig {
+            name,
+            server,
+            gateway,
+            autoscaler,
+            cluster,
+            monitoring,
+            time_scale,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("deployment name must not be empty");
+        }
+        if self.server.models.is_empty() {
+            bail!("server.models must not be empty");
+        }
+        for m in &self.server.models {
+            if m.name.is_empty() {
+                bail!("model name must not be empty");
+            }
+            if m.preferred_batch == 0 {
+                bail!("model '{}' preferred_batch must be >= 1", m.name);
+            }
+        }
+        if self.server.replicas == 0 {
+            bail!("server.replicas must be >= 1");
+        }
+        if self.server.queue_capacity == 0 {
+            bail!("server.queue_capacity must be >= 1");
+        }
+        if self.server.util_window <= 0.0 {
+            bail!("server.util_window must be > 0");
+        }
+        for m in &self.server.models {
+            if m.service_model.service_secs(1) <= 0.0 {
+                bail!("model '{}' service_model must have positive service time", m.name);
+            }
+        }
+        if self.gateway.worker_threads == 0 {
+            bail!("gateway.worker_threads must be >= 1");
+        }
+        if self.gateway.rate_limit_rps < 0.0 {
+            bail!("gateway.rate_limit_rps must be >= 0");
+        }
+        if self.autoscaler.min_replicas == 0 {
+            bail!("autoscaler.min_replicas must be >= 1");
+        }
+        if self.autoscaler.min_replicas > self.autoscaler.max_replicas {
+            bail!(
+                "autoscaler.min_replicas ({}) > max_replicas ({})",
+                self.autoscaler.min_replicas,
+                self.autoscaler.max_replicas
+            );
+        }
+        if self.autoscaler.step == 0 {
+            bail!("autoscaler.step must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.autoscaler.scale_down_ratio) {
+            bail!("autoscaler.scale_down_ratio must be in [0, 1]");
+        }
+        if self.autoscaler.threshold <= 0.0 {
+            bail!("autoscaler.threshold must be > 0");
+        }
+        let capacity = self.cluster.nodes * self.cluster.gpus_per_node;
+        if self.autoscaler.max_replicas > capacity {
+            bail!(
+                "autoscaler.max_replicas ({}) exceeds cluster GPU capacity ({} nodes x {} gpus = {})",
+                self.autoscaler.max_replicas,
+                self.cluster.nodes,
+                self.cluster.gpus_per_node,
+                capacity
+            );
+        }
+        if self.server.replicas > capacity {
+            bail!(
+                "server.replicas ({}) exceeds cluster GPU capacity ({})",
+                self.server.replicas,
+                capacity
+            );
+        }
+        if !(0.0..=1.0).contains(&self.cluster.pod_failure_rate) {
+            bail!("cluster.pod_failure_rate must be in [0, 1]");
+        }
+        if self.time_scale <= 0.0 {
+            bail!("time_scale must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        DeploymentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn empty_yaml_gives_defaults() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert_eq!(cfg, DeploymentConfig::default());
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+name: test-deploy
+time_scale: 10.0
+server:
+  replicas: 2
+  repository: artifacts
+  startup_delay: 1.5
+  models:
+    - name: particlenet
+      max_queue_delay: 0.002
+      preferred_batch: 8
+    - name: icecube_cnn
+gateway:
+  listen: 127.0.0.1:9001
+  lb_policy: least_connection
+  rate_limit_rps: 500
+  auth_secret: hunter2
+autoscaler:
+  enabled: true
+  threshold: 0.08
+  min_replicas: 1
+  max_replicas: 10
+cluster:
+  nodes: 5
+  gpus_per_node: 2
+monitoring:
+  scrape_interval: 0.5
+  tracing: true
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        assert_eq!(cfg.name, "test-deploy");
+        assert_eq!(cfg.server.replicas, 2);
+        assert_eq!(cfg.server.models.len(), 2);
+        assert_eq!(cfg.server.models[0].preferred_batch, 8);
+        assert_eq!(cfg.server.models[1].name, "icecube_cnn");
+        assert_eq!(cfg.gateway.lb_policy, LbPolicy::LeastConnection);
+        assert_eq!(cfg.gateway.auth_secret.as_deref(), Some("hunter2"));
+        assert!(cfg.autoscaler.enabled);
+        assert_eq!(cfg.autoscaler.max_replicas, 10);
+        assert_eq!(cfg.cluster.nodes, 5);
+        assert!((cfg.monitoring.scrape_interval.as_secs_f64() - 0.5).abs() < 1e-9);
+        assert!(cfg.monitoring.tracing);
+        assert_eq!(cfg.time_scale, 10.0);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let e = DeploymentConfig::from_yaml("gateway:\n  lb_polcy: round_robin\n").unwrap_err();
+        assert!(e.to_string().contains("lb_polcy"), "{e}");
+    }
+
+    #[test]
+    fn unknown_root_key_rejected() {
+        assert!(DeploymentConfig::from_yaml("severs:\n  replicas: 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_lb_policy_rejected() {
+        let e = DeploymentConfig::from_yaml("gateway:\n  lb_policy: fastest\n").unwrap_err();
+        assert!(e.to_string().contains("fastest"));
+    }
+
+    #[test]
+    fn min_gt_max_rejected() {
+        let text = "autoscaler:\n  min_replicas: 5\n  max_replicas: 2\n";
+        assert!(DeploymentConfig::from_yaml(text).is_err());
+    }
+
+    #[test]
+    fn max_replicas_capped_by_cluster() {
+        let text = "autoscaler:\n  max_replicas: 100\ncluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("capacity"), "{e}");
+    }
+
+    #[test]
+    fn negative_duration_rejected() {
+        assert!(DeploymentConfig::from_yaml("server:\n  startup_delay: -1\n").is_err());
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(DeploymentConfig::from_yaml("server:\n  replicas: 0\n").is_err());
+    }
+
+    #[test]
+    fn null_auth_secret_is_none() {
+        let cfg = DeploymentConfig::from_yaml("gateway:\n  auth_secret: null\n").unwrap();
+        assert!(cfg.gateway.auth_secret.is_none());
+    }
+
+    #[test]
+    fn execution_mode_parses() {
+        let cfg = DeploymentConfig::from_yaml("server:\n  execution: simulated\n").unwrap();
+        assert_eq!(cfg.server.execution, ExecutionMode::Simulated);
+        assert!(DeploymentConfig::from_yaml("server:\n  execution: warp_speed\n").is_err());
+        for m in [ExecutionMode::Real, ExecutionMode::Simulated] {
+            assert_eq!(ExecutionMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn service_model_parses() {
+        let text = "server:\n  models:\n    - name: particlenet\n      service_model:\n        base: 0.01\n        per_row: 0.002\n";
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let sm = cfg.server.models[0].service_model;
+        assert!((sm.service_secs(4) - 0.018).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_model_unknown_key_rejected() {
+        let text = "server:\n  models:\n    - name: pn\n      service_model:\n        bse: 0.01\n";
+        assert!(DeploymentConfig::from_yaml(text).is_err());
+    }
+
+    #[test]
+    fn lb_policy_roundtrip_names() {
+        for p in [LbPolicy::RoundRobin, LbPolicy::LeastConnection, LbPolicy::UtilizationAware, LbPolicy::Random] {
+            assert_eq!(LbPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+}

@@ -1,0 +1,659 @@
+//! Hand-written parser for the YAML subset used by our config files and
+//! model-repository metadata (serde/serde_yaml are unavailable offline).
+//!
+//! Supported syntax — deliberately the subset Helm values files actually
+//! use:
+//!
+//! * block mappings (`key: value`) nested by indentation,
+//! * block sequences (`- item`, including sequences of mappings),
+//! * flow sequences (`[1, 2, 3]`) and flow mappings
+//!   (`{base: 0.005, per_row: 0.0015}`),
+//! * scalars: null/~, true/false, integers, floats, plain and quoted
+//!   strings,
+//! * `#` comments and blank lines.
+//!
+//! Not supported (rejected with an error rather than misparsed): anchors,
+//! aliases, multi-document streams, block scalars (`|`, `>`), tabs for
+//! indentation.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed YAML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Value>),
+    /// Key order is preserved (BTreeMap would re-sort; config rendering
+    /// and error messages read better in file order).
+    Map(Vec<(String, Value)>),
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Value {
+    // -- accessors ---------------------------------------------------------
+
+    /// Map lookup by key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Map(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Nested lookup by dotted path (`"gateway.rate_limit.capacity"`).
+    pub fn get_path(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// String value (strict — numbers are not coerced).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Integer value.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Float value (integers coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Bool value.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Sequence items.
+    pub fn as_seq(&self) -> Option<&[Value]> {
+        match self {
+            Value::Seq(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Map entries in file order.
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(entries) => Some(entries),
+            _ => None,
+        }
+    }
+
+    /// True if `Value::Null`.
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Map keys, or empty.
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Value::Map(entries) => entries.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Convert to a string map for flat sections (labels etc.).
+    pub fn to_string_map(&self) -> BTreeMap<String, String> {
+        let mut out = BTreeMap::new();
+        if let Value::Map(entries) = self {
+            for (k, v) in entries {
+                out.insert(k.clone(), v.render_scalar());
+            }
+        }
+        out
+    }
+
+    fn render_scalar(&self) -> String {
+        match self {
+            Value::Null => "null".into(),
+            Value::Bool(b) => b.to_string(),
+            Value::Int(v) => v.to_string(),
+            Value::Float(v) => v.to_string(),
+            Value::Str(s) => s.clone(),
+            Value::Seq(_) | Value::Map(_) => format!("{self}"),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn go(v: &Value, indent: usize, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            let pad = "  ".repeat(indent);
+            match v {
+                Value::Map(entries) => {
+                    for (k, val) in entries {
+                        match val {
+                            Value::Map(_) | Value::Seq(_) if !is_empty(val) => {
+                                writeln!(f, "{pad}{k}:")?;
+                                go(val, indent + 1, f)?;
+                            }
+                            _ => writeln!(f, "{pad}{k}: {}", val.render_scalar())?,
+                        }
+                    }
+                    Ok(())
+                }
+                Value::Seq(items) => {
+                    for item in items {
+                        match item {
+                            Value::Map(_) | Value::Seq(_) => {
+                                writeln!(f, "{pad}-")?;
+                                go(item, indent + 1, f)?;
+                            }
+                            _ => writeln!(f, "{pad}- {}", item.render_scalar())?,
+                        }
+                    }
+                    Ok(())
+                }
+                scalar => writeln!(f, "{pad}{}", scalar.render_scalar()),
+            }
+        }
+        fn is_empty(v: &Value) -> bool {
+            matches!(v, Value::Map(m) if m.is_empty())
+                || matches!(v, Value::Seq(s) if s.is_empty())
+        }
+        go(self, 0, f)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parsing
+// ---------------------------------------------------------------------------
+
+struct Line<'a> {
+    number: usize,
+    indent: usize,
+    content: &'a str,
+}
+
+/// Parse a YAML document into a [`Value`].
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let mut lines = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let number = i + 1;
+        if raw.contains('\t') {
+            return Err(err(number, "tabs are not allowed for indentation"));
+        }
+        let stripped = strip_comment(raw);
+        let trimmed = stripped.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        if trimmed.trim() == "---" {
+            if !lines.is_empty() {
+                return Err(err(number, "multi-document streams are not supported"));
+            }
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        lines.push(Line { number, indent, content: trimmed.trim_start() });
+    }
+    if lines.is_empty() {
+        return Ok(Value::Map(Vec::new()));
+    }
+    let mut pos = 0;
+    let root_indent = lines[0].indent;
+    let value = parse_block(&lines, &mut pos, root_indent)?;
+    if pos != lines.len() {
+        return Err(err(
+            lines[pos].number,
+            "unexpected content (likely inconsistent indentation)",
+        ));
+    }
+    Ok(value)
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // YAML requires '#' to start a comment at start or after
+                // whitespace.
+                if i == 0 || line.as_bytes()[i - 1].is_ascii_whitespace() {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let first = &lines[*pos];
+    if first.content.starts_with("- ") || first.content == "-" {
+        parse_sequence(lines, pos, indent)
+    } else {
+        parse_mapping(lines, pos, indent)
+    }
+}
+
+fn parse_sequence(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(err(line.number, "unexpected indentation inside sequence"));
+        }
+        if !(line.content.starts_with("- ") || line.content == "-") {
+            break;
+        }
+        let number = line.number;
+        let rest = line.content[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block on following lines
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // Inline start of a mapping item: "- key: value". The item's
+            // mapping body sits at the dash indent + 2 ("- " width).
+            let item_indent = indent + 2;
+            let mut entries = Vec::new();
+            parse_map_entry(&rest, number, lines, pos, item_indent, &mut entries)?;
+            // Subsequent keys of the same item.
+            while *pos < lines.len()
+                && lines[*pos].indent == item_indent
+                && !(lines[*pos].content.starts_with("- ") || lines[*pos].content == "-")
+            {
+                let content = lines[*pos].content.to_string();
+                let n = lines[*pos].number;
+                *pos += 1;
+                parse_map_entry(&content, n, lines, pos, item_indent, &mut entries)?;
+            }
+            items.push(Value::Map(entries));
+        } else {
+            items.push(parse_scalar(&rest, number)?);
+        }
+    }
+    Ok(Value::Seq(items))
+}
+
+fn parse_mapping(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(err(line.number, "unexpected indentation inside mapping"));
+        }
+        if line.content.starts_with("- ") || line.content == "-" {
+            break;
+        }
+        let content = line.content.to_string();
+        let number = line.number;
+        *pos += 1;
+        parse_map_entry(&content, number, lines, pos, indent, &mut entries)?;
+    }
+    Ok(Value::Map(entries))
+}
+
+fn parse_map_entry(
+    content: &str,
+    number: usize,
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    entries: &mut Vec<(String, Value)>,
+) -> Result<(), ParseError> {
+    let colon = find_key_colon(content)
+        .ok_or_else(|| err(number, format!("expected 'key: value', got '{content}'")))?;
+    let key = unquote(content[..colon].trim());
+    if key.is_empty() {
+        return Err(err(number, "empty mapping key"));
+    }
+    if entries.iter().any(|(k, _)| k == &key) {
+        return Err(err(number, format!("duplicate key '{key}'")));
+    }
+    let rest = content[colon + 1..].trim();
+    let value = if rest.is_empty() {
+        // nested block (or empty value)
+        if *pos < lines.len() && lines[*pos].indent > indent {
+            let child_indent = lines[*pos].indent;
+            parse_block(lines, pos, child_indent)?
+        } else {
+            Value::Null
+        }
+    } else {
+        parse_scalar(rest, number)?
+    };
+    entries.push((key, value));
+    Ok(())
+}
+
+/// Find the colon separating key from value (respecting quoted keys).
+fn find_key_colon(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\'' if !in_double => in_single = !in_single,
+            b'"' if !in_single => in_double = !in_double,
+            b':' if !in_single && !in_double => {
+                if i + 1 == bytes.len() || bytes[i + 1].is_ascii_whitespace() {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.starts_with('[') {
+        return parse_flow_seq(s, line);
+    }
+    if s.starts_with('{') {
+        return parse_flow_map(s, line);
+    }
+    if s.starts_with('&') || s.starts_with('*') {
+        return Err(err(line, "anchors/aliases are not supported"));
+    }
+    if s == "|" || s == ">" {
+        return Err(err(line, "block scalars are not supported"));
+    }
+    if s.starts_with('"') || s.starts_with('\'') {
+        return Ok(Value::Str(unquote(s)));
+    }
+    Ok(match s {
+        "null" | "~" | "Null" | "NULL" => Value::Null,
+        "true" | "True" | "TRUE" => Value::Bool(true),
+        "false" | "False" | "FALSE" => Value::Bool(false),
+        _ => {
+            if let Ok(i) = s.parse::<i64>() {
+                Value::Int(i)
+            } else if let Ok(f) = s.parse::<f64>() {
+                Value::Float(f)
+            } else {
+                Value::Str(s.to_string())
+            }
+        }
+    })
+}
+
+fn parse_flow_seq(s: &str, line: usize) -> Result<Value, ParseError> {
+    if !s.ends_with(']') {
+        return Err(err(line, "unterminated flow sequence"));
+    }
+    let inner = &s[1..s.len() - 1];
+    let mut items = Vec::new();
+    if inner.trim().is_empty() {
+        return Ok(Value::Seq(items));
+    }
+    // split on commas outside quotes/brackets
+    let mut depth = 0usize;
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '[' if !in_single && !in_double => depth += 1,
+            ']' if !in_single && !in_double => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| err(line, "unbalanced brackets"))?;
+            }
+            ',' if depth == 0 && !in_single && !in_double => {
+                items.push(parse_scalar(inner[start..i].trim(), line)?);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(parse_scalar(inner[start..].trim(), line)?);
+    Ok(Value::Seq(items))
+}
+
+/// Split `inner` on top-level commas (outside quotes and `[]`/`{}`).
+fn split_flow_items(inner: &str, line: usize) -> Result<Vec<&str>, ParseError> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_single = false;
+    let mut in_double = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '[' | '{' if !in_single && !in_double => depth += 1,
+            ']' | '}' if !in_single && !in_double => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| err(line, "unbalanced brackets"))?;
+            }
+            ',' if depth == 0 && !in_single && !in_double => {
+                parts.push(inner[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(inner[start..].trim());
+    Ok(parts)
+}
+
+/// Parse a flow mapping: `{key: value, key2: value2}`.
+fn parse_flow_map(s: &str, line: usize) -> Result<Value, ParseError> {
+    if !s.ends_with('}') {
+        return Err(err(line, "unterminated flow mapping"));
+    }
+    let inner = &s[1..s.len() - 1];
+    let mut entries: Vec<(String, Value)> = Vec::new();
+    if inner.trim().is_empty() {
+        return Ok(Value::Map(entries));
+    }
+    for part in split_flow_items(inner, line)? {
+        let colon = find_key_colon(part)
+            .ok_or_else(|| err(line, format!("expected 'key: value' in flow mapping, got '{part}'")))?;
+        let key = unquote(part[..colon].trim());
+        if key.is_empty() {
+            return Err(err(line, "empty flow-mapping key"));
+        }
+        if entries.iter().any(|(k, _)| k == &key) {
+            return Err(err(line, format!("duplicate key '{key}' in flow mapping")));
+        }
+        let value = parse_scalar(part[colon + 1..].trim(), line)?;
+        entries.push((key, value));
+    }
+    Ok(Value::Map(entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let v = parse("a: 1\nb: 2.5\nc: hello\nd: true\ne: null\nf: \"quoted: str\"\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hello"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert!(v.get("e").unwrap().is_null());
+        assert_eq!(v.get("f").unwrap().as_str(), Some("quoted: str"));
+    }
+
+    #[test]
+    fn nested_mapping_and_path() {
+        let v = parse("outer:\n  inner:\n    leaf: 42\n").unwrap();
+        assert_eq!(v.get_path("outer.inner.leaf").unwrap().as_i64(), Some(42));
+        assert!(v.get_path("outer.missing").is_none());
+    }
+
+    #[test]
+    fn block_sequence() {
+        let v = parse("items:\n  - 1\n  - 2\n  - three\n").unwrap();
+        let seq = v.get("items").unwrap().as_seq().unwrap();
+        assert_eq!(seq.len(), 3);
+        assert_eq!(seq[2].as_str(), Some("three"));
+    }
+
+    #[test]
+    fn sequence_of_mappings() {
+        let text = "models:\n  - name: a\n    batch: 4\n  - name: b\n    batch: 8\n";
+        let v = parse(text).unwrap();
+        let seq = v.get("models").unwrap().as_seq().unwrap();
+        assert_eq!(seq.len(), 2);
+        assert_eq!(seq[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(seq[1].get("batch").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn flow_sequence() {
+        let v = parse("dims: [1, 2, 3]\nnames: [a, \"b c\"]\nempty: []\n").unwrap();
+        assert_eq!(
+            v.get("dims").unwrap().as_seq().unwrap().iter()
+                .map(|x| x.as_i64().unwrap()).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(v.get("names").unwrap().as_seq().unwrap()[1].as_str(), Some("b c"));
+        assert!(v.get("empty").unwrap().as_seq().unwrap().is_empty());
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let text = "# header\na: 1  # trailing\n\nb: \"#notcomment\"\n";
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("#notcomment"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn anchors_rejected() {
+        assert!(parse("a: &anchor 1\n").is_err());
+    }
+
+    #[test]
+    fn flow_map_parses() {
+        let v = parse("sm: {base: 0.005, per_row: 0.0015}\nempty: {}\n").unwrap();
+        assert_eq!(v.get_path("sm.base").unwrap().as_f64(), Some(0.005));
+        assert_eq!(v.get_path("sm.per_row").unwrap().as_f64(), Some(0.0015));
+        assert!(v.get("empty").unwrap().as_map().unwrap().is_empty());
+    }
+
+    #[test]
+    fn flow_map_nested_in_flow_seq() {
+        let v = parse("xs: [{a: 1}, {a: 2}]\n").unwrap();
+        let seq = v.get("xs").unwrap().as_seq().unwrap();
+        assert_eq!(seq[1].get("a").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn flow_map_errors() {
+        assert!(parse("a: {b: 1\n").is_err()); // unterminated
+        assert!(parse("a: {b 1}\n").is_err()); // no colon
+        assert!(parse("a: {b: 1, b: 2}\n").is_err()); // duplicate
+    }
+
+    #[test]
+    fn block_scalar_rejected() {
+        assert!(parse("a: |\n  text\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_empty_map() {
+        assert_eq!(parse("").unwrap(), Value::Map(Vec::new()));
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Map(Vec::new()));
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = parse("a: 1\nb: {bad}\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        let text = "server:\n  replicas: 3\n  models:\n    - name: pn\n      batch: 4\nflag: true\n";
+        let v = parse(text).unwrap();
+        let rendered = v.to_string();
+        let v2 = parse(&rendered).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn keys_in_file_order() {
+        let v = parse("z: 1\na: 2\nm: 3\n").unwrap();
+        assert_eq!(v.keys(), vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn colon_in_url_value() {
+        let v = parse("url: http://host:9090/metrics\n").unwrap();
+        assert_eq!(v.get("url").unwrap().as_str(), Some("http://host:9090/metrics"));
+    }
+}

@@ -1,0 +1,346 @@
+//! Deployment bundle — the Helm release analogue.
+//!
+//! "To streamline installation and version control, [SuperSONIC] is
+//! distributed as a Helm chart" (§2). [`Deployment::up`] is `helm
+//! install`: it takes one validated [`DeploymentConfig`] and boots every
+//! component in dependency order —
+//!
+//! 1. clock (with the experiment's time dilation),
+//! 2. metrics registry + time-series store + scraper (§2.3),
+//! 3. tracer (§2.3),
+//! 4. model repository (compiled through PJRT, or metadata-only for
+//!    simulated execution),
+//! 5. cluster simulator + instance factory (§2),
+//! 6. gateway (§2.2) over the cluster's live endpoint list,
+//! 7. autoscaler (§2.4) driving the cluster's desired replicas,
+//! 8. optional `/metrics` HTTP endpoint.
+//!
+//! [`Deployment::down`] tears everything back down in reverse order.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::autoscaler::Autoscaler;
+use crate::config::{DeploymentConfig, ExecutionMode};
+use crate::gateway::ratelimit::PressureGate;
+use crate::gateway::Gateway;
+use crate::metrics::exposition::MetricsServer;
+use crate::metrics::{MetricStore, Registry, Scraper};
+use crate::orchestrator::{Cluster, InstanceFactory};
+use crate::runtime::PjrtRuntime;
+use crate::server::{Instance, ModelRepository};
+use crate::telemetry::Tracer;
+use crate::util::clock::Clock;
+
+/// A running SuperSONIC deployment.
+pub struct Deployment {
+    pub cfg: DeploymentConfig,
+    pub clock: Clock,
+    pub registry: Registry,
+    pub store: MetricStore,
+    pub tracer: Tracer,
+    pub repository: Arc<ModelRepository>,
+    pub cluster: Arc<Cluster>,
+    pub gateway: Gateway,
+    pub autoscaler: Arc<Autoscaler>,
+    metrics_http: Option<MetricsServer>,
+    _scraper: Scraper,
+}
+
+impl Deployment {
+    /// Boot a deployment (`helm install`).
+    pub fn up(cfg: DeploymentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let clock = if (cfg.time_scale - 1.0).abs() < f64::EPSILON {
+            Clock::real()
+        } else {
+            Clock::scaled(cfg.time_scale)
+        };
+        let registry = Registry::new();
+        let store = MetricStore::new(cfg.monitoring.retention);
+        let scraper = Scraper::start(
+            registry.clone(),
+            store.clone(),
+            clock.clone(),
+            cfg.monitoring.scrape_interval,
+        );
+        let tracer = if cfg.monitoring.tracing {
+            Tracer::new(clock.clone(), 65536, true)
+        } else {
+            Tracer::disabled()
+        };
+
+        // Model repository: compile through PJRT only when instances will
+        // actually execute.
+        let model_names: Vec<String> =
+            cfg.server.models.iter().map(|m| m.name.clone()).collect();
+        let repository = Arc::new(match cfg.server.execution {
+            ExecutionMode::Real => {
+                let runtime = PjrtRuntime::cpu().context("creating PJRT client")?;
+                ModelRepository::load(&runtime, &cfg.server.repository, &model_names)?
+            }
+            ExecutionMode::Simulated => {
+                ModelRepository::load_metadata(&cfg.server.repository, &model_names)?
+            }
+        });
+
+        // Instance factory: what the cluster runs on each pod start.
+        let factory: InstanceFactory = {
+            let repo = Arc::clone(&repository);
+            let models = cfg.server.models.clone();
+            let clock = clock.clone();
+            let registry = registry.clone();
+            let queue_capacity = cfg.server.queue_capacity;
+            let util_window = cfg.server.util_window;
+            let mode = cfg.server.execution;
+            Arc::new(move |name: &str| {
+                Instance::start_with_mode(
+                    name,
+                    Arc::clone(&repo),
+                    &models,
+                    clock.clone(),
+                    registry.clone(),
+                    queue_capacity,
+                    util_window,
+                    mode,
+                )
+            })
+        };
+
+        let initial = if cfg.autoscaler.enabled {
+            cfg.server.replicas.clamp(cfg.autoscaler.min_replicas, cfg.autoscaler.max_replicas)
+        } else {
+            cfg.server.replicas
+        };
+        let cluster = Cluster::start(
+            cfg.cluster.clone(),
+            cfg.server.startup_delay,
+            initial,
+            clock.clone(),
+            registry.clone(),
+            factory,
+            0x5057E5,
+        );
+
+        // Optional external-metric pressure gate: shed while average queue
+        // latency exceeds 20x the autoscaler threshold (i.e. the system is
+        // far beyond what scaling can absorb). Only armed when rate
+        // limiting is configured, mirroring the chart's opt-in limits.
+        let pressure = if cfg.gateway.rate_limit_rps > 0.0 {
+            let store2 = store.clone();
+            let threshold = cfg.autoscaler.threshold * 20.0;
+            Some(PressureGate::new(
+                Box::new(move || {
+                    store2.avg_latest_prefix("queue_latency_seconds").unwrap_or(0.0)
+                }),
+                threshold,
+            ))
+        } else {
+            None
+        };
+
+        let gateway = Gateway::start(
+            &cfg.gateway,
+            cluster.endpoints_handle(),
+            clock.clone(),
+            registry.clone(),
+            tracer.clone(),
+            pressure,
+        )?;
+
+        let autoscaler = Autoscaler::start(
+            cfg.autoscaler.clone(),
+            Arc::clone(&cluster),
+            store.clone(),
+            clock.clone(),
+            registry.clone(),
+        );
+
+        let metrics_http = if cfg.monitoring.listen.is_empty() {
+            None
+        } else {
+            Some(MetricsServer::start(&cfg.monitoring.listen, registry.clone())?)
+        };
+
+        log::info!(
+            "deployment '{}' up: {} models, {} initial replicas, lb={}, autoscaler={}",
+            cfg.name,
+            model_names.len(),
+            initial,
+            cfg.gateway.lb_policy.name(),
+            if cfg.autoscaler.enabled { "on" } else { "off" },
+        );
+
+        Ok(Deployment {
+            cfg,
+            clock,
+            registry,
+            store,
+            tracer,
+            repository,
+            cluster,
+            gateway,
+            autoscaler,
+            metrics_http,
+            _scraper: scraper,
+        })
+    }
+
+    /// Load a config file and boot.
+    pub fn up_from_file(path: &std::path::Path) -> Result<Self> {
+        let cfg = DeploymentConfig::from_file(path)?;
+        Self::up(cfg)
+    }
+
+    /// Gateway endpoint ("the single gRPC endpoint", Fig. 1).
+    pub fn endpoint(&self) -> String {
+        self.gateway.addr().to_string()
+    }
+
+    /// `/metrics` HTTP address, when enabled.
+    pub fn metrics_endpoint(&self) -> Option<String> {
+        self.metrics_http.as_ref().map(|m| m.addr().to_string())
+    }
+
+    /// Block until `n` instances are Ready (true) or `timeout` elapses.
+    pub fn wait_ready(&self, n: usize, timeout: Duration) -> bool {
+        self.cluster.wait_ready(n, timeout)
+    }
+
+    /// Tear down in reverse boot order (`helm uninstall`).
+    pub fn down(self) {
+        self.autoscaler.shutdown();
+        self.gateway.shutdown();
+        self.cluster.shutdown();
+        // scraper + metrics_http stop on drop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{
+        AutoscalerConfig, ClusterConfig, GatewayConfig, ModelConfig, MonitoringConfig,
+        ServerConfig, ServiceModelConfig,
+    };
+    use crate::rpc::client::RpcClient;
+    use crate::rpc::codec::Status;
+    use crate::runtime::Tensor;
+
+    fn fast_cfg(execution: ExecutionMode) -> DeploymentConfig {
+        DeploymentConfig {
+            name: "test".into(),
+            server: ServerConfig {
+                replicas: 1,
+                models: vec![ModelConfig {
+                    name: "icecube_cnn".into(),
+                    max_queue_delay: Duration::from_millis(1),
+                    preferred_batch: 8,
+                    service_model: ServiceModelConfig {
+                        base: Duration::from_millis(2),
+                        per_row: Duration::from_micros(100),
+                    },
+                }],
+                repository: "artifacts".into(),
+                startup_delay: Duration::from_millis(10),
+                execution,
+                queue_capacity: 64,
+                util_window: 5.0,
+            },
+            gateway: GatewayConfig::default(),
+            autoscaler: AutoscalerConfig {
+                enabled: false,
+                max_replicas: 4, // cluster capacity below
+                ..AutoscalerConfig::default()
+            },
+            cluster: ClusterConfig {
+                nodes: 2,
+                gpus_per_node: 2,
+                pod_start_delay: Duration::from_millis(20),
+                termination_grace: Duration::from_millis(20),
+                pod_failure_rate: 0.0,
+            },
+            monitoring: MonitoringConfig {
+                listen: String::new(),
+                scrape_interval: Duration::from_millis(100),
+                retention: Duration::from_secs(600),
+                tracing: false,
+            },
+            time_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn boots_and_serves_simulated() {
+        let d = Deployment::up(fast_cfg(ExecutionMode::Simulated)).unwrap();
+        assert!(d.wait_ready(1, Duration::from_secs(5)));
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        let resp = client.infer("icecube_cnn", Tensor::zeros(vec![2, 16, 16, 3])).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.output.shape(), &[2, 3]);
+        d.down();
+    }
+
+    #[test]
+    fn boots_and_serves_real_pjrt() {
+        let d = Deployment::up(fast_cfg(ExecutionMode::Real)).unwrap();
+        assert!(d.wait_ready(1, Duration::from_secs(10)));
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        // ones input: real numerics flow through PJRT
+        let input = Tensor::new(vec![1, 16, 16, 3], vec![1.0; 16 * 16 * 3]).unwrap();
+        let resp = client.infer("icecube_cnn", input).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.output.shape(), &[1, 3]);
+        // real model output is not all zeros
+        assert!(resp.output.data().iter().any(|&v| v != 0.0));
+        d.down();
+    }
+
+    #[test]
+    fn autoscaler_enabled_boots_at_min() {
+        let mut cfg = fast_cfg(ExecutionMode::Simulated);
+        cfg.autoscaler.enabled = true;
+        cfg.autoscaler.min_replicas = 2;
+        cfg.autoscaler.max_replicas = 4;
+        cfg.autoscaler.poll_interval = Duration::from_millis(50);
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        assert_eq!(d.cluster.desired(), 2);
+        d.down();
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_text() {
+        let mut cfg = fast_cfg(ExecutionMode::Simulated);
+        cfg.monitoring.listen = "127.0.0.1:0".into();
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(1, Duration::from_secs(5)));
+        let addr = d.metrics_endpoint().unwrap();
+        // minimal HTTP GET
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+        let mut body = String::new();
+        s.read_to_string(&mut body).unwrap();
+        assert!(body.contains("replicas_running"), "{body}");
+        d.down();
+    }
+
+    #[test]
+    fn scraper_populates_store() {
+        let d = Deployment::up(fast_cfg(ExecutionMode::Simulated)).unwrap();
+        assert!(d.wait_ready(1, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(400));
+        assert!(d.store.latest("replicas_running").is_some());
+        d.down();
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = fast_cfg(ExecutionMode::Simulated);
+        cfg.server.replicas = 0;
+        assert!(Deployment::up(cfg).is_err());
+    }
+}

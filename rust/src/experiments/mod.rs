@@ -1,0 +1,250 @@
+//! Shared experiment drivers for the paper's evaluation (§4).
+//!
+//! The Fig. 2 and Fig. 3 benches and the `autoscale_demo` example all run
+//! the same experiment shape — a 1 → N → 1 perf_analyzer schedule against
+//! a deployment while sampling the three paper series (inference rate,
+//! average queue latency, GPU server count). This module owns that
+//! driver so the benches stay declarative.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::DeploymentConfig;
+use crate::deployment::Deployment;
+use crate::metrics::store::Point;
+use crate::util::stats::Summary;
+use crate::workload::{ClientPool, RunReport, Schedule, WorkloadSpec};
+
+/// Sampled series + workload report from one experiment run.
+pub struct ExperimentResult {
+    /// (clock secs, rows/s) — the paper's "inference rate".
+    pub rate: Vec<Point>,
+    /// (clock secs, avg queue latency secs).
+    pub latency: Vec<Point>,
+    /// (clock secs, Ready GPU servers).
+    pub servers: Vec<Point>,
+    /// (clock secs, mean GPU utilization 0..1).
+    pub utilization: Vec<Point>,
+    /// Client-side per-phase statistics.
+    pub report: RunReport,
+    /// Mean GPU utilization over the run, weighted by *allocated* servers
+    /// (the Fig. 3 y-axis: a parked-but-idle GPU counts against you).
+    pub mean_utilization: f64,
+    /// Client-observed end-to-end latency across the run.
+    pub overall_latency: Summary,
+    /// Peak Ready servers observed.
+    pub peak_servers: usize,
+}
+
+/// Drive `schedule` against a booted deployment, sampling series every
+/// `sample_every` of clock time.
+pub fn run_schedule(
+    d: &Deployment,
+    spec: WorkloadSpec,
+    schedule: &Schedule,
+    sample_every: Duration,
+) -> Result<ExperimentResult> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let rows_per_request = spec.batch_rows;
+
+    // Sampler thread: aggregates instance series into experiment series.
+    let sampler = {
+        let store = d.store.clone();
+        let cluster = Arc::clone(&d.cluster);
+        let clock = d.clock.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("experiment-sampler".into())
+            .spawn(move || {
+                let mut out: (Vec<Point>, Vec<Point>, Vec<Point>, Vec<Point>) =
+                    Default::default();
+                while !stop.load(Ordering::SeqCst) {
+                    let t = clock.now_secs();
+                    let rows = store.sum_latest_prefix("inference_rows_total");
+                    store.push("exp_rows_total", t, rows);
+                    let rate = store
+                        .rate_over("exp_rows_total", t, Duration::from_secs(20))
+                        .unwrap_or(0.0);
+                    out.0.push((t, rate));
+                    out.1.push((
+                        t,
+                        store.avg_latest_prefix("queue_latency_seconds").unwrap_or(0.0),
+                    ));
+                    out.2.push((t, cluster.running() as f64));
+                    out.3.push((
+                        t,
+                        store.avg_latest_prefix("gpu_utilization").unwrap_or(0.0),
+                    ));
+                    clock.sleep(sample_every);
+                }
+                out
+            })
+            .expect("spawning sampler")
+    };
+
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run(schedule);
+
+    stop.store(true, Ordering::SeqCst);
+    let (rate, latency, servers, utilization) = sampler.join().expect("sampler panicked");
+
+    // Fig. 3 aggregates.
+    let mean_utilization = if utilization.is_empty() {
+        0.0
+    } else {
+        utilization.iter().map(|&(_, v)| v).sum::<f64>() / utilization.len() as f64
+    };
+    let peak_servers = servers.iter().map(|&(_, v)| v as usize).max().unwrap_or(0);
+    let overall_latency = report.overall_latency.clone();
+    let _ = rows_per_request;
+
+    Ok(ExperimentResult {
+        rate,
+        latency,
+        servers,
+        utilization,
+        report,
+        mean_utilization,
+        overall_latency,
+        peak_servers,
+    })
+}
+
+/// Boot `cfg`, wait for the expected replicas, run, tear down.
+pub fn run_deployment(
+    cfg: DeploymentConfig,
+    spec: WorkloadSpec,
+    schedule: &Schedule,
+    sample_every: Duration,
+) -> Result<ExperimentResult> {
+    let boot_replicas = if cfg.autoscaler.enabled {
+        cfg.server.replicas.clamp(cfg.autoscaler.min_replicas, cfg.autoscaler.max_replicas)
+    } else {
+        cfg.server.replicas
+    };
+    let d = Deployment::up(cfg)?;
+    anyhow::ensure!(
+        d.wait_ready(boot_replicas, Duration::from_secs(120)),
+        "deployment did not become ready"
+    );
+    let result = run_schedule(&d, spec, schedule, sample_every)?;
+    d.down();
+    Ok(result)
+}
+
+/// The paper's Fig. 2/3 deployment config, parameterized for the benches.
+///
+/// `static_replicas = None` enables the autoscaler (the "dynamic"
+/// configuration); `Some(n)` pins n GPU servers (the static baselines).
+pub fn fig_config(
+    time_scale: f64,
+    static_replicas: Option<usize>,
+    phase: Duration,
+) -> DeploymentConfig {
+    use crate::config::*;
+    use std::path::PathBuf;
+
+    // Scale-down stabilization sized relative to the phase so the
+    // scale-down is visible within phase 3.
+    let stabilization = Duration::from_secs_f64(phase.as_secs_f64() * 0.15);
+    DeploymentConfig {
+        name: match static_replicas {
+            None => "fig-dynamic".into(),
+            Some(n) => format!("fig-static-{n}"),
+        },
+        server: ServerConfig {
+            replicas: static_replicas.unwrap_or(1),
+            models: vec![ModelConfig {
+                name: "particlenet".into(),
+                max_queue_delay: Duration::from_millis(5),
+                preferred_batch: 16,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(5),
+                    per_row: Duration::from_micros(1500),
+                },
+            }],
+            repository: PathBuf::from("artifacts"),
+            startup_delay: Duration::from_secs(10),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 10.0,
+        },
+        gateway: GatewayConfig {
+            listen: "127.0.0.1:0".into(),
+            lb_policy: LbPolicy::LeastConnection,
+            max_inflight_per_instance: 64,
+            ..GatewayConfig::default()
+        },
+        autoscaler: AutoscalerConfig {
+            enabled: static_replicas.is_none(),
+            metric: "queue_latency_avg:30".into(),
+            // With the T4 service model (29 ms per 16-row batch) the
+            // per-request queue wait is ~230 ms at 1 server under ten
+            // clients, ~38 ms at 3, ~13 ms at 4: threshold 25 ms settles
+            // the autoscaler at 4-5 servers, the "optimal trade-off" knee.
+            threshold: 0.025,
+            scale_down_ratio: 0.3,
+            min_replicas: 1,
+            max_replicas: 10,
+            poll_interval: Duration::from_secs(5),
+            scale_up_cooldown: Duration::from_secs(20),
+            scale_down_stabilization: stabilization,
+            step: 1,
+        },
+        cluster: ClusterConfig {
+            nodes: 4,
+            gpus_per_node: 3,
+            pod_start_delay: Duration::from_secs(20),
+            termination_grace: Duration::from_secs(5),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(2),
+            retention: Duration::from_secs(7200),
+            tracing: false,
+        },
+        time_scale,
+    }
+}
+
+/// The paper's Fig. 2 workload spec (ParticleNet, 16 rows/request, light
+/// think time so one client ≈ half a T4).
+pub fn fig_workload() -> WorkloadSpec {
+    let mut spec = WorkloadSpec::new("particlenet", 16, vec![64, 7]);
+    spec.think_time = Duration::from_millis(30);
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig_config_validates() {
+        fig_config(4.0, None, Duration::from_secs(300)).validate().unwrap();
+        fig_config(8.0, Some(10), Duration::from_secs(60)).validate().unwrap();
+    }
+
+    #[test]
+    fn short_dynamic_run_scales_up() {
+        // Compressed Fig. 2: 30x time scale, 60-second clock phases. The
+        // 10-client phase must trigger at least one scale-up.
+        let phase = Duration::from_secs(90);
+        let cfg = fig_config(30.0, None, phase);
+        let schedule = Schedule::new()
+            .phase(1, Duration::from_secs(30))
+            .phase(10, phase);
+        let result =
+            run_deployment(cfg, fig_workload(), &schedule, Duration::from_secs(5)).unwrap();
+        assert!(
+            result.peak_servers >= 2,
+            "no scale-up observed (peak {})",
+            result.peak_servers
+        );
+        assert!(result.report.total_ok > 0);
+    }
+}

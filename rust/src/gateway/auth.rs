@@ -1,0 +1,119 @@
+//! Token-based authentication (§2.2: "Token-based authentication secures
+//! client endpoints, preventing unauthorized access").
+//!
+//! Tokens are HMAC-SHA256 tags over a fixed context string under the
+//! deployment's shared secret, hex-encoded. Verification recomputes the
+//! tag and compares in constant time (`subtle`), so the check leaks no
+//! timing information about how much of a forged token matched.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+use subtle::ConstantTimeEq;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Domain-separation context baked into every token.
+const TOKEN_CONTEXT: &[u8] = b"supersonic-client-token-v1";
+
+/// Mint the client token for a deployment secret.
+pub fn mint_token(secret: &str) -> String {
+    let mut mac = HmacSha256::new_from_slice(secret.as_bytes())
+        .expect("HMAC accepts any key length");
+    mac.update(TOKEN_CONTEXT);
+    hex_encode(&mac.finalize().into_bytes())
+}
+
+/// Verify a presented token against the deployment secret.
+pub fn verify_token(secret: &str, token: &str) -> bool {
+    let expected = mint_token(secret);
+    // Length comparison is not secret; content comparison is.
+    if expected.len() != token.len() {
+        return false;
+    }
+    expected.as_bytes().ct_eq(token.as_bytes()).into()
+}
+
+fn hex_encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = Vec::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize]);
+        s.push(HEX[(b & 0xf) as usize]);
+    }
+    // SAFETY-free: HEX is pure ASCII.
+    String::from_utf8(s).expect("hex is ascii")
+}
+
+/// Authenticator attached to the gateway: `None` secret = auth disabled.
+pub struct Authenticator {
+    secret: Option<String>,
+}
+
+impl Authenticator {
+    /// Build from the gateway config's optional secret.
+    pub fn new(secret: Option<String>) -> Self {
+        Authenticator { secret }
+    }
+
+    /// True when auth is enforced.
+    pub fn enabled(&self) -> bool {
+        self.secret.is_some()
+    }
+
+    /// Check a request token.
+    pub fn check(&self, token: &str) -> bool {
+        match &self.secret {
+            None => true,
+            Some(secret) => verify_token(secret, token),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_roundtrip() {
+        let t = mint_token("hunter2");
+        assert!(verify_token("hunter2", &t));
+    }
+
+    #[test]
+    fn wrong_secret_rejected() {
+        let t = mint_token("hunter2");
+        assert!(!verify_token("hunter3", &t));
+    }
+
+    #[test]
+    fn garbage_token_rejected() {
+        assert!(!verify_token("hunter2", ""));
+        assert!(!verify_token("hunter2", "deadbeef"));
+        let mut t = mint_token("hunter2");
+        t.replace_range(0..1, if t.starts_with('0') { "1" } else { "0" });
+        assert!(!verify_token("hunter2", &t));
+    }
+
+    #[test]
+    fn tokens_deterministic_per_secret() {
+        assert_eq!(mint_token("a"), mint_token("a"));
+        assert_ne!(mint_token("a"), mint_token("b"));
+    }
+
+    #[test]
+    fn disabled_auth_accepts_anything() {
+        let a = Authenticator::new(None);
+        assert!(!a.enabled());
+        assert!(a.check(""));
+        assert!(a.check("whatever"));
+    }
+
+    #[test]
+    fn enabled_auth_enforces() {
+        let a = Authenticator::new(Some("s3cret".into()));
+        assert!(a.enabled());
+        assert!(a.check(&mint_token("s3cret")));
+        assert!(!a.check("nope"));
+        assert!(!a.check(""));
+    }
+}

@@ -1,0 +1,267 @@
+//! Load balancing across Triton instances (§2.2: "Load balancing
+//! distributes incoming requests across multiple Triton instances using
+//! predefined algorithms such as round robin").
+//!
+//! The balancer sees the live endpoint list maintained by the cluster
+//! reconcile loop (only `Ready` instances appear there) and additionally
+//! enforces the per-instance in-flight cap — Envoy's circuit-breaking-style
+//! overload protection — before handing a request to an instance.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::config::LbPolicy;
+use crate::server::{Instance, InstanceState};
+use crate::util::rng::Rng;
+
+/// Policy-driven endpoint picker.
+pub struct LoadBalancer {
+    policy: LbPolicy,
+    endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+    rr_cursor: AtomicUsize,
+    rng: Mutex<Rng>,
+    /// Per-instance outstanding-request cap (0 = uncapped).
+    max_inflight: usize,
+}
+
+impl LoadBalancer {
+    /// Balancer over a shared endpoint list.
+    pub fn new(
+        policy: LbPolicy,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        max_inflight: usize,
+        seed: u64,
+    ) -> Self {
+        LoadBalancer {
+            policy,
+            endpoints,
+            rr_cursor: AtomicUsize::new(0),
+            rng: Mutex::new(Rng::seeded(seed)),
+            max_inflight,
+        }
+    }
+
+    /// Configured policy.
+    pub fn policy(&self) -> LbPolicy {
+        self.policy
+    }
+
+    /// Number of currently routable endpoints.
+    pub fn healthy_count(&self) -> usize {
+        self.endpoints
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|i| i.state() == InstanceState::Ready)
+            .count()
+    }
+
+    /// Pick an instance for the next request, or `None` when every
+    /// endpoint is gone or saturated (the caller sheds the request).
+    pub fn pick(&self) -> Option<Arc<Instance>> {
+        let eps = self.endpoints.read().unwrap();
+        let eligible: Vec<&Arc<Instance>> = eps
+            .iter()
+            .filter(|i| {
+                i.state() == InstanceState::Ready
+                    && (self.max_inflight == 0 || i.inflight() < self.max_inflight)
+            })
+            .collect();
+        if eligible.is_empty() {
+            return None;
+        }
+        let chosen = match self.policy {
+            LbPolicy::RoundRobin => {
+                let idx = self.rr_cursor.fetch_add(1, Ordering::Relaxed);
+                eligible[idx % eligible.len()]
+            }
+            LbPolicy::Random => {
+                let idx = self.rng.lock().unwrap().below(eligible.len());
+                eligible[idx]
+            }
+            // Envoy's least-request: power-of-two-choices. A deterministic
+            // global minimum would break ties by list position and funnel
+            // all idle-pool traffic onto the first instances (observed on
+            // the 100-server bench: 28/100 instances served); sampling two
+            // random candidates spreads ties uniformly while still routing
+            // around loaded instances.
+            LbPolicy::LeastConnection => {
+                let mut rng = self.rng.lock().unwrap();
+                let a = rng.below(eligible.len());
+                let b = rng.below(eligible.len());
+                drop(rng);
+                if eligible[a].inflight() <= eligible[b].inflight() {
+                    eligible[a]
+                } else {
+                    eligible[b]
+                }
+            }
+            // Same two-choice sampling on the utilization signal.
+            LbPolicy::UtilizationAware => {
+                let mut rng = self.rng.lock().unwrap();
+                let a = rng.below(eligible.len());
+                let b = rng.below(eligible.len());
+                drop(rng);
+                if eligible[a].utilization() <= eligible[b].utilization() {
+                    eligible[a]
+                } else {
+                    eligible[b]
+                }
+            }
+        };
+        Some(Arc::clone(chosen))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::metrics::Registry;
+    use crate::server::ModelRepository;
+    use crate::util::clock::Clock;
+    use once_cell::sync::Lazy;
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
+    fn instance(id: &str) -> Arc<Instance> {
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&REPO),
+            &[ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() }],
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+            crate::config::ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    fn endpoints(n: usize) -> (Arc<RwLock<Vec<Arc<Instance>>>>, Vec<Arc<Instance>>) {
+        let insts: Vec<Arc<Instance>> = (0..n).map(|i| instance(&format!("lb-{i}"))).collect();
+        (Arc::new(RwLock::new(insts.clone())), insts)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let (eps, insts) = endpoints(3);
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 0, 1);
+        let picks: Vec<String> = (0..6).map(|_| lb.pick().unwrap().id.clone()).collect();
+        assert_eq!(picks[0..3], picks[3..6]);
+        let mut uniq = picks[0..3].to_vec();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "all three instances used: {picks:?}");
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn empty_endpoints_returns_none() {
+        let eps = Arc::new(RwLock::new(Vec::new()));
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 0, 1);
+        assert!(lb.pick().is_none());
+        assert_eq!(lb.healthy_count(), 0);
+    }
+
+    #[test]
+    fn non_ready_instances_skipped() {
+        let (eps, insts) = endpoints(2);
+        insts[0].drain();
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 0, 1);
+        for _ in 0..4 {
+            assert_eq!(lb.pick().unwrap().id, insts[1].id);
+        }
+        assert_eq!(lb.healthy_count(), 1);
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn least_connection_prefers_idle() {
+        let (eps, insts) = endpoints(2);
+        // Occupy instance 0 with queued work (simulated batches sleep).
+        let _rx = insts[0]
+            .submit("icecube_cnn", crate::runtime::Tensor::zeros(vec![1, 16, 16, 3]), 0)
+            .unwrap();
+        let lb = LoadBalancer::new(LbPolicy::LeastConnection, eps, 0, 1);
+        // Power-of-two-choices: when both candidates differ the idle
+        // instance wins; with 2 endpoints the busy one is picked only
+        // when both samples land on it (~1/4), so a clear majority of
+        // picks must go to the idle instance.
+        let idle_picks = (0..40)
+            .filter(|_| lb.pick().unwrap().id == insts[1].id)
+            .count();
+        assert!(idle_picks >= 25, "only {idle_picks}/40 picks went to the idle instance");
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn least_connection_spreads_ties() {
+        // All-idle pool: two-choice sampling must not funnel traffic onto
+        // the first instance (the 100-server fairness regression).
+        let (eps, insts) = endpoints(3);
+        let lb = LoadBalancer::new(LbPolicy::LeastConnection, eps, 0, 7);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            seen.insert(lb.pick().unwrap().id.clone());
+        }
+        assert_eq!(seen.len(), 3, "ties not spread: {seen:?}");
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn inflight_cap_saturates_to_none() {
+        let (eps, insts) = endpoints(1);
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 1, 1);
+        assert!(lb.pick().is_some());
+        let _rx = insts[0]
+            .submit("icecube_cnn", crate::runtime::Tensor::zeros(vec![1, 16, 16, 3]), 0)
+            .unwrap();
+        // inflight == cap => shed
+        assert!(lb.pick().is_none());
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn random_policy_covers_all() {
+        let (eps, insts) = endpoints(3);
+        let lb = LoadBalancer::new(LbPolicy::Random, eps, 0, 42);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            seen.insert(lb.pick().unwrap().id.clone());
+        }
+        assert_eq!(seen.len(), 3);
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn utilization_aware_runs() {
+        let (eps, insts) = endpoints(2);
+        let lb = LoadBalancer::new(LbPolicy::UtilizationAware, eps, 0, 1);
+        assert!(lb.pick().is_some());
+        for i in insts {
+            i.stop();
+        }
+    }
+}

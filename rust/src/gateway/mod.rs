@@ -1,0 +1,542 @@
+//! The gateway — the Envoy Proxy analogue (§2.2).
+//!
+//! "A critical component of SuperSONIC is the Envoy Proxy, which acts as
+//! the gateway between clients and inference servers." Clients see exactly
+//! one endpoint (Fig. 1); behind it the gateway runs, per request:
+//!
+//! 1. **authentication** ([`auth`]) — HMAC token check when a deployment
+//!    secret is configured;
+//! 2. **rate limiting** ([`ratelimit`]) — a clock-driven token bucket
+//!    and/or an external-metric pressure gate;
+//! 3. **load balancing** ([`lb`]) — round-robin / least-connection /
+//!    utilization-aware / random pick across Ready instances, with a
+//!    per-instance in-flight cap for overload protection;
+//! 4. **dispatch** — synchronous hand-off to the chosen instance's batch
+//!    queue; the connection thread blocks, which gives per-connection
+//!    backpressure exactly like a gRPC unary call.
+//!
+//! Every response carries the server-side latency breakdown
+//! (queue/compute micros + folded batch size) and the gateway publishes
+//! Prometheus-style metrics per status code.
+
+pub mod auth;
+pub mod lb;
+pub mod ratelimit;
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::config::GatewayConfig;
+use crate::metrics::registry::{labels, Registry};
+use crate::rpc::codec::{InferRequest, InferResponse, RequestKind, Status};
+use crate::rpc::server::{Handler, RpcServer};
+use crate::server::batcher::ExecOutcome;
+use crate::server::Instance;
+use crate::telemetry::{Span, Tracer};
+use crate::util::clock::Clock;
+
+use auth::Authenticator;
+use lb::LoadBalancer;
+use ratelimit::{PressureGate, TokenBucket};
+
+/// The running gateway: one TCP listener + the policy pipeline.
+pub struct Gateway {
+    server: Mutex<RpcServer>,
+    addr: SocketAddr,
+    lb: Arc<LoadBalancer>,
+}
+
+impl Gateway {
+    /// Start the gateway over a live endpoint list (usually
+    /// [`Cluster::endpoints_handle`](crate::orchestrator::Cluster::endpoints_handle)).
+    ///
+    /// `pressure` is the optional "arbitrary external metric" limiter; the
+    /// deployment layer wires it to a metric-store query when configured.
+    pub fn start(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+    ) -> Result<Self> {
+        let lb = Arc::new(LoadBalancer::new(
+            cfg.lb_policy,
+            endpoints,
+            cfg.max_inflight_per_instance,
+            0xC0FFEE,
+        ));
+        let authenticator = Arc::new(Authenticator::new(cfg.auth_secret.clone()));
+        let bucket = Arc::new(TokenBucket::new(
+            cfg.rate_limit_rps,
+            cfg.rate_limit_burst,
+            clock.clone(),
+        ));
+        let pressure = pressure.map(Arc::new);
+
+        let m_requests = {
+            let registry = registry.clone();
+            move |status: Status| {
+                registry.counter(
+                    "gateway_requests_total",
+                    &labels(&[("status", status.name())]),
+                )
+            }
+        };
+        let m_latency = registry.histogram("gateway_latency_seconds", &labels(&[]));
+        let m_shed = registry.counter("gateway_shed_total", &labels(&[]));
+
+        let lb2 = Arc::clone(&lb);
+        let clock2 = clock.clone();
+        let handler: Handler = Arc::new(move |req: InferRequest| {
+            let t0 = clock2.now();
+            let response = handle_request(
+                req,
+                &lb2,
+                &authenticator,
+                &bucket,
+                pressure.as_deref(),
+                &tracer,
+                &clock2,
+            );
+            let dt = (clock2.now().saturating_sub(t0)) as f64 / 1e9;
+            m_latency.observe(dt);
+            m_requests(response.status).inc();
+            if matches!(
+                response.status,
+                Status::RateLimited | Status::Overloaded | Status::Unauthorized
+            ) {
+                m_shed.inc();
+            }
+            response
+        });
+
+        let server = RpcServer::start_with_limit(
+            &cfg.listen,
+            cfg.worker_threads,
+            cfg.max_connections,
+            handler,
+        )?;
+        let addr = server.addr();
+        Ok(Gateway { server: Mutex::new(server), addr, lb })
+    }
+
+    /// Bound address (resolves `:0` ephemeral listens).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Routable (Ready) endpoint count, as the balancer sees it.
+    pub fn healthy_endpoints(&self) -> usize {
+        self.lb.healthy_count()
+    }
+
+    /// Open client connections.
+    pub fn open_connections(&self) -> u64 {
+        self.server.lock().unwrap().open_connections()
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(&self) {
+        self.server.lock().unwrap().shutdown();
+    }
+}
+
+/// The per-request policy pipeline.
+fn handle_request(
+    req: InferRequest,
+    lb: &LoadBalancer,
+    authenticator: &Authenticator,
+    bucket: &TokenBucket,
+    pressure: Option<&PressureGate>,
+    tracer: &Tracer,
+    clock: &Clock,
+) -> InferResponse {
+    let gateway_start = clock.now_secs();
+
+    // 0. Health probes bypass auth/limits: they answer "is the deployment
+    //    routable" (the k8s readiness probe analogue).
+    if req.kind == RequestKind::Health {
+        return if lb.healthy_count() > 0 {
+            InferResponse::ok(req.request_id, crate::runtime::Tensor::zeros(vec![0]))
+        } else {
+            InferResponse::err(req.request_id, Status::Overloaded, "no ready instances")
+        };
+    }
+
+    // 1. Authentication.
+    if !authenticator.check(&req.token) {
+        return InferResponse::err(req.request_id, Status::Unauthorized, "invalid token");
+    }
+
+    // 2. Rate limiting: token bucket, then external-metric gate.
+    if !bucket.try_acquire() {
+        return InferResponse::err(req.request_id, Status::RateLimited, "rate limit exceeded");
+    }
+    if let Some(gate) = pressure {
+        if !gate.admit() {
+            return InferResponse::err(
+                req.request_id,
+                Status::RateLimited,
+                format!("load shedding: pressure {:.4} over threshold", gate.pressure()),
+            );
+        }
+    }
+
+    // 3. Route. One retry on a different instance if the first pick
+    //    rejects (it may have saturated between pick and submit). The
+    //    rejected submit hands the tensor back, so no per-request clone.
+    let mut input = req.input;
+    let mut last_status = Status::Overloaded;
+    let mut last_msg = String::from("no ready instances");
+    for _attempt in 0..2 {
+        let Some(instance) = lb.pick() else { break };
+        match instance.submit(&req.model, input, req.trace_id) {
+            Ok(rx) => {
+                let outcome = rx.recv().unwrap_or(ExecOutcome::Err {
+                    status: Status::Internal,
+                    message: "executor dropped request".into(),
+                });
+                return finish(req.request_id, req.trace_id, outcome, tracer, gateway_start, clock);
+            }
+            Err((status, returned)) => {
+                input = returned;
+                last_status = status;
+                last_msg = format!("instance {} rejected: {}", instance.id, status.name());
+                // Model/shape errors will fail identically everywhere.
+                if matches!(status, Status::ModelNotFound | Status::BadRequest) {
+                    break;
+                }
+            }
+        }
+    }
+    InferResponse::err(req.request_id, last_status, last_msg)
+}
+
+/// Convert an executor outcome into a wire response + tracing spans.
+fn finish(
+    request_id: u64,
+    trace_id: u64,
+    outcome: ExecOutcome,
+    tracer: &Tracer,
+    gateway_start: f64,
+    clock: &Clock,
+) -> InferResponse {
+    match outcome {
+        ExecOutcome::Ok { output, queue_us, compute_us, batch_rows } => {
+            if tracer.enabled() && trace_id != 0 {
+                let end = clock.now_secs();
+                let compute_s = compute_us as f64 / 1e6;
+                let queue_s = queue_us as f64 / 1e6;
+                // Reconstruct the server-side timeline right-aligned at
+                // response time: [gateway ... [queue][compute]] end.
+                tracer.record(Span {
+                    trace_id,
+                    name: "gateway".into(),
+                    start: gateway_start,
+                    end,
+                });
+                tracer.record(Span {
+                    trace_id,
+                    name: "queue".into(),
+                    start: end - compute_s - queue_s,
+                    end: end - compute_s,
+                });
+                tracer.record(Span {
+                    trace_id,
+                    name: "compute".into(),
+                    start: end - compute_s,
+                    end,
+                });
+            }
+            InferResponse {
+                status: Status::Ok,
+                request_id,
+                queue_us,
+                compute_us,
+                batch_size: batch_rows,
+                output,
+                error: String::new(),
+            }
+        }
+        ExecOutcome::Err { status, message } => InferResponse::err(request_id, status, message),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecutionMode, ModelConfig, ServiceModelConfig};
+    use crate::rpc::client::RpcClient;
+    use crate::runtime::Tensor;
+    use crate::server::ModelRepository;
+    use once_cell::sync::Lazy;
+    use std::time::Duration;
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
+    fn sim_instance(id: &str, clock: &Clock, registry: &Registry) -> Arc<Instance> {
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&REPO),
+            &[ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            }],
+            clock.clone(),
+            registry.clone(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    struct TestStack {
+        gateway: Gateway,
+        instances: Vec<Arc<Instance>>,
+    }
+
+    impl TestStack {
+        fn start(n: usize, cfg: GatewayConfig) -> Self {
+            let clock = Clock::real();
+            let registry = Registry::new();
+            let instances: Vec<Arc<Instance>> = (0..n)
+                .map(|i| sim_instance(&format!("gw-{i}"), &clock, &registry))
+                .collect();
+            let endpoints = Arc::new(RwLock::new(instances.clone()));
+            let gateway = Gateway::start(
+                &cfg,
+                endpoints,
+                clock,
+                registry,
+                Tracer::disabled(),
+                None,
+            )
+            .unwrap();
+            TestStack { gateway, instances }
+        }
+
+        fn client(&self) -> RpcClient {
+            RpcClient::connect(&self.gateway.addr().to_string()).unwrap()
+        }
+    }
+
+    impl Drop for TestStack {
+        fn drop(&mut self) {
+            self.gateway.shutdown();
+            for i in &self.instances {
+                i.stop();
+            }
+        }
+    }
+
+    fn cnn_input(rows: usize) -> Tensor {
+        Tensor::zeros(vec![rows, 16, 16, 3])
+    }
+
+    #[test]
+    fn end_to_end_inference() {
+        let stack = TestStack::start(2, GatewayConfig::default());
+        let mut client = stack.client();
+        let resp = client.infer("icecube_cnn", cnn_input(4)).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.output.shape(), &[4, 3]);
+        assert!(resp.compute_us > 0);
+    }
+
+    #[test]
+    fn health_probe_reflects_endpoints() {
+        let stack = TestStack::start(1, GatewayConfig::default());
+        let mut client = stack.client();
+        assert!(client.health().unwrap());
+        stack.instances[0].drain();
+        assert!(!client.health().unwrap());
+    }
+
+    #[test]
+    fn auth_enforced_when_configured() {
+        let cfg = GatewayConfig { auth_secret: Some("s3cret".into()), ..Default::default() };
+        let stack = TestStack::start(1, cfg);
+        let mut anon = stack.client();
+        let resp = anon.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Unauthorized);
+
+        let mut authed = stack.client().with_token(&auth::mint_token("s3cret"));
+        let resp = authed.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+
+        let mut forged = stack.client().with_token("deadbeef");
+        let resp = forged.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Unauthorized);
+    }
+
+    #[test]
+    fn rate_limit_sheds() {
+        let cfg = GatewayConfig {
+            rate_limit_rps: 5.0,
+            rate_limit_burst: 2,
+            ..Default::default()
+        };
+        let stack = TestStack::start(1, cfg);
+        let mut client = stack.client();
+        let mut limited = 0;
+        for _ in 0..10 {
+            let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+            if resp.status == Status::RateLimited {
+                limited += 1;
+            }
+        }
+        assert!(limited > 0, "no requests rate limited");
+    }
+
+    #[test]
+    fn unknown_model_not_found() {
+        let stack = TestStack::start(1, GatewayConfig::default());
+        let mut client = stack.client();
+        let resp = client.infer("nope", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::ModelNotFound);
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        let stack = TestStack::start(1, GatewayConfig::default());
+        let mut client = stack.client();
+        let resp = client.infer("icecube_cnn", Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
+        assert_eq!(resp.status, Status::BadRequest);
+    }
+
+    #[test]
+    fn no_endpoints_overloaded() {
+        let cfg = GatewayConfig::default();
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let endpoints = Arc::new(RwLock::new(Vec::new()));
+        let gateway = Gateway::start(
+            &cfg,
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Overloaded);
+        gateway.shutdown();
+    }
+
+    #[test]
+    fn pressure_gate_sheds() {
+        let cfg = GatewayConfig::default();
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("pg-0", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let gate = PressureGate::new(Box::new(|| 1.0), 0.5); // always over
+        let gateway = Gateway::start(
+            &cfg,
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            Some(gate),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::RateLimited);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    #[test]
+    fn tracing_records_breakdown() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("tr-0", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let tracer = Tracer::new(clock.clone(), 1024, true);
+        let gateway = Gateway::start(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            tracer.clone(),
+            None,
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        client.trace_id = tracer.new_trace();
+        let resp = client.infer("icecube_cnn", cnn_input(2)).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        let view = tracer.trace(client.trace_id);
+        let names: Vec<&str> = view.spans.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"gateway"), "{names:?}");
+        assert!(names.contains(&"compute"), "{names:?}");
+        assert!(view.duration_of("compute") > 0.0);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    #[test]
+    fn connection_limit_refuses_excess() {
+        let cfg = GatewayConfig { max_connections: 2, ..GatewayConfig::default() };
+        let stack = TestStack::start(1, cfg);
+        // Two connections work; keep them open with a request each.
+        let mut c1 = stack.client();
+        let mut c2 = stack.client();
+        assert_eq!(c1.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        assert_eq!(c2.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        // A third is accepted at TCP level then closed by the listener:
+        // its first request fails.
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c3 = RpcClient::connect(&stack.gateway.addr().to_string()).unwrap();
+        assert!(c3.infer("icecube_cnn", cnn_input(1)).is_err());
+        // Closing one earlier connection frees a slot.
+        drop(c1);
+        std::thread::sleep(Duration::from_millis(300));
+        let mut c4 = stack.client();
+        assert_eq!(c4.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let stack = TestStack::start(3, GatewayConfig::default());
+        let addr = stack.gateway.addr().to_string();
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = RpcClient::connect(&addr).unwrap();
+                let mut ok = 0;
+                for _ in 0..5 {
+                    let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+                    if resp.status == Status::Ok {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 30, "all requests served");
+    }
+}

@@ -1,0 +1,34 @@
+//! SuperSONIC — cloud-native ML inference-as-a-service, reproduced.
+//!
+//! This crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (build-time Python, `python/compile/kernels/`):
+//!   the EdgeConv hot-spot of the ParticleNet GNN, lowered in interpret mode.
+//! * **Layer 2** — JAX models (build-time Python, `python/compile/`): ParticleNet-like
+//!   GNN, a CNN (IceCube/LIGO-style) and a small transformer (CMS-style), AOT-lowered
+//!   to HLO text in `artifacts/`.
+//! * **Layer 3** — this crate: the SuperSONIC server infrastructure. It loads the
+//!   AOT artifacts through PJRT ([`runtime`]) and implements every server-side
+//!   component the paper describes: the Envoy-style gateway ([`gateway`]), the
+//!   Triton-style inference server ([`server`]), the Kubernetes-style cluster
+//!   orchestrator ([`orchestrator`]), the KEDA-style autoscaler ([`autoscaler`]),
+//!   the Prometheus-style metrics pipeline ([`metrics`]), OpenTelemetry-style
+//!   tracing ([`telemetry`]) and the perf_analyzer-style load generator
+//!   ([`workload`]).
+//!
+//! Python never runs on the request path: `make artifacts` is the only step that
+//! invokes it, and the resulting binary is self-contained.
+
+pub mod autoscaler;
+pub mod config;
+pub mod deployment;
+pub mod experiments;
+pub mod gateway;
+pub mod metrics;
+pub mod orchestrator;
+pub mod rpc;
+pub mod runtime;
+pub mod server;
+pub mod telemetry;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,331 @@
+//! `supersonic` — the leader binary.
+//!
+//! ```text
+//!     supersonic serve    --config configs/quickstart.yaml [--duration 60]
+//!     supersonic check    --config configs/nrp.yaml
+//!     supersonic infer    --addr 127.0.0.1:8001 --model particlenet [--rows 8] [--count 10] [--token t]
+//!     supersonic loadtest --config configs/quickstart.yaml --schedule 1:30,10:60,1:30 [--rows 16]
+//!     supersonic token    --secret <deployment-secret>
+//! ```
+//!
+//! `serve` is the production entrypoint: boot the full deployment from a
+//! config and serve until the duration elapses (0 = forever). The other
+//! subcommands are operator tooling: config validation, an ad-hoc client,
+//! a perf_analyzer-style load test and auth-token minting.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use supersonic::config::DeploymentConfig;
+use supersonic::deployment::Deployment;
+use supersonic::gateway::auth;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::Tensor;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+fn main() {
+    supersonic::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --flag, got '{}'", args[i]))?;
+        let value = args
+            .get(i + 1)
+            .with_context(|| format!("--{key} needs a value"))?;
+        flags.insert(key.to_string(), value.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
+    flags
+        .get(key)
+        .map(|s| s.as_str())
+        .with_context(|| format!("missing required --{key}"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "serve" => cmd_serve(&flags),
+        "check" => cmd_check(&flags),
+        "infer" => cmd_infer(&flags),
+        "loadtest" => cmd_loadtest(&flags),
+        "token" => cmd_token(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'supersonic help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "supersonic — cloud-native ML inference-as-a-service (SuperSONIC reproduced)\n\n\
+         USAGE:\n\
+         \x20 supersonic serve    --config <yaml> [--duration <secs>]\n\
+         \x20 supersonic check    --config <yaml>\n\
+         \x20 supersonic infer    --addr <host:port> --model <name> [--rows N] [--count N] [--token T]\n\
+         \x20 supersonic loadtest --config <yaml> --schedule C:S,C:S,... [--rows N] [--model NAME]\n\
+         \x20 supersonic token    --secret <secret>\n"
+    );
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = DeploymentConfig::from_file(std::path::Path::new(flag(flags, "config")?))?;
+    let duration: f64 = flags
+        .get("duration")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--duration must be seconds")?
+        .unwrap_or(0.0);
+
+    let replicas = cfg.server.replicas;
+    let d = Deployment::up(cfg)?;
+    if !d.wait_ready(replicas.min(1), Duration::from_secs(60)) {
+        bail!("no instance became ready within 60s");
+    }
+    println!("deployment '{}' ready", d.cfg.name);
+    println!("  inference endpoint: {}", d.endpoint());
+    if let Some(m) = d.metrics_endpoint() {
+        println!("  metrics endpoint:   http://{m}/metrics");
+    }
+    println!("  models: {}", d.repository.names().join(", "));
+    if duration > 0.0 {
+        std::thread::sleep(Duration::from_secs_f64(duration));
+        println!("duration elapsed, shutting down");
+        d.down();
+    } else {
+        println!("serving until killed (ctrl-c)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
+    let path = std::path::Path::new(flag(flags, "config")?);
+    let cfg = DeploymentConfig::from_file(path)?;
+    println!("{} OK", path.display());
+    println!("  name:        {}", cfg.name);
+    println!(
+        "  server:      {} replicas, execution={}, {} model(s)",
+        cfg.server.replicas,
+        cfg.server.execution.name(),
+        cfg.server.models.len()
+    );
+    for m in &cfg.server.models {
+        println!(
+            "    - {} (queue_delay={:?}, preferred_batch={})",
+            m.name, m.max_queue_delay, m.preferred_batch
+        );
+    }
+    println!(
+        "  gateway:     lb={}, rate_limit={} rps, auth={}",
+        cfg.gateway.lb_policy.name(),
+        cfg.gateway.rate_limit_rps,
+        if cfg.gateway.auth_secret.is_some() { "on" } else { "off" }
+    );
+    println!(
+        "  autoscaler:  {} (metric={}, threshold={}, replicas {}..{})",
+        if cfg.autoscaler.enabled { "on" } else { "off" },
+        cfg.autoscaler.metric,
+        cfg.autoscaler.threshold,
+        cfg.autoscaler.min_replicas,
+        cfg.autoscaler.max_replicas
+    );
+    println!(
+        "  cluster:     {} nodes x {} GPUs (capacity {})",
+        cfg.cluster.nodes,
+        cfg.cluster.gpus_per_node,
+        cfg.cluster.nodes * cfg.cluster.gpus_per_node
+    );
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flag(flags, "addr")?;
+    let model = flag(flags, "model")?;
+    let rows: usize = flags.get("rows").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let count: usize = flags.get("count").map(|s| s.parse()).transpose()?.unwrap_or(1);
+
+    let mut client = RpcClient::connect(addr)?;
+    if let Some(token) = flags.get("token") {
+        client = client.with_token(token);
+    }
+
+    // Input shape from the local repository metadata if present, else
+    // --shape d0,d1,...
+    let shape: Vec<usize> = match flags.get("shape") {
+        Some(s) => s
+            .split(',')
+            .map(|d| d.parse().context("bad --shape"))
+            .collect::<Result<_>>()?,
+        None => {
+            let repo = supersonic::server::ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &[model.to_string()],
+            )
+            .context("cannot infer input shape; pass --shape d0,d1,...")?;
+            repo.get(model).unwrap().input_shape.clone()
+        }
+    };
+    let mut full_shape = vec![rows];
+    full_shape.extend_from_slice(&shape);
+
+    let mut ok = 0;
+    let t0 = std::time::Instant::now();
+    for i in 0..count {
+        let resp = client.infer(model, Tensor::zeros(full_shape.clone()))?;
+        if resp.status == Status::Ok {
+            ok += 1;
+            if i == 0 {
+                println!(
+                    "output shape {:?}, queue {}us, compute {}us, batched {} rows",
+                    resp.output.shape(),
+                    resp.queue_us,
+                    resp.compute_us,
+                    resp.batch_size
+                );
+            }
+        } else {
+            println!("request {i}: {} ({})", resp.status.name(), resp.error);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok}/{count} ok in {:.3}s ({:.1} req/s, {:.1} rows/s)",
+        dt,
+        count as f64 / dt,
+        (count * rows) as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = DeploymentConfig::from_file(std::path::Path::new(flag(flags, "config")?))?;
+    let schedule_spec = flag(flags, "schedule")?;
+    let rows: usize = flags.get("rows").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| cfg.server.models[0].name.clone());
+
+    let mut schedule = Schedule::new();
+    for part in schedule_spec.split(',') {
+        let (clients, secs) = part
+            .split_once(':')
+            .with_context(|| format!("bad schedule part '{part}' (want clients:secs)"))?;
+        schedule = schedule.phase(
+            clients.parse().context("bad client count")?,
+            Duration::from_secs_f64(secs.parse().context("bad phase seconds")?),
+        );
+    }
+
+    let replicas = cfg.server.replicas;
+    let token = cfg
+        .gateway
+        .auth_secret
+        .as_deref()
+        .map(auth::mint_token)
+        .unwrap_or_default();
+    let d = Deployment::up(cfg)?;
+    if !d.wait_ready(replicas.min(1), Duration::from_secs(60)) {
+        bail!("deployment did not become ready");
+    }
+    let input_shape = d.repository.get(&model).context("model not served")?.input_shape.clone();
+
+    let mut spec = WorkloadSpec::new(&model, rows, input_shape);
+    spec.token = token;
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    println!(
+        "loadtest: model={model} rows/request={rows} schedule={schedule_spec} (clock time)"
+    );
+    let report = pool.run_with(&schedule, |i, c| {
+        println!("-- phase {i}: {c} client(s)");
+    });
+
+    println!("\nphase  clients  duration   ok      shed  err   req/s    p50        p99        mean");
+    for (i, p) in report.phases.iter().enumerate() {
+        println!(
+            "{:<6} {:<8} {:<9.1} {:<7} {:<5} {:<5} {:<8.1} {:<10.4} {:<10.4} {:.4}",
+            i,
+            p.clients,
+            p.duration,
+            p.ok,
+            p.shed,
+            p.errors,
+            p.throughput(),
+            p.latency.quantile(0.5),
+            p.latency.quantile(0.99),
+            p.latency.mean()
+        );
+    }
+    println!(
+        "\noverall: {} ok, {} shed, {} errors, {:.1} req/s, mean latency {:.4}s",
+        report.total_ok,
+        report.total_shed,
+        report.total_errors,
+        report.throughput(),
+        report.overall_latency.mean()
+    );
+    d.down();
+    Ok(())
+}
+
+fn cmd_token(flags: &HashMap<String, String>) -> Result<()> {
+    println!("{}", auth::mint_token(flag(flags, "secret")?));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags_pairs() {
+        let args: Vec<String> =
+            ["--config", "a.yaml", "--duration", "5"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args).unwrap();
+        assert_eq!(f.get("config").unwrap(), "a.yaml");
+        assert_eq!(f.get("duration").unwrap(), "5");
+    }
+
+    #[test]
+    fn parse_flags_rejects_bare_values() {
+        let args: Vec<String> = ["oops"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn parse_flags_rejects_missing_value() {
+        let args: Vec<String> = ["--config"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&["bogus".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Dashboard rendering — the Grafana stand-in.
+//!
+//! The paper ships a pre-configured Grafana dashboard with the Helm chart;
+//! here the equivalent is a multi-panel ASCII timeline renderer over the
+//! [`MetricStore`](super::store::MetricStore) plus CSV export, used by
+//! `examples/autoscale_demo.rs` and the Fig. 2/3 benches.
+
+use crate::metrics::store::MetricStore;
+use crate::util::bench::{ascii_chart, Csv};
+
+/// One dashboard panel: a title and the series id it plots.
+#[derive(Clone, Debug)]
+pub struct Panel {
+    pub title: String,
+    pub series: String,
+}
+
+/// A multi-panel dashboard bound to a store.
+pub struct Dashboard {
+    panels: Vec<Panel>,
+    width: usize,
+    height: usize,
+}
+
+impl Dashboard {
+    /// Dashboard with default panel size.
+    pub fn new() -> Self {
+        Dashboard { panels: Vec::new(), width: 72, height: 8 }
+    }
+
+    /// Set panel dimensions.
+    pub fn with_size(mut self, width: usize, height: usize) -> Self {
+        self.width = width;
+        self.height = height;
+        self
+    }
+
+    /// Add a panel plotting `series`.
+    pub fn panel(mut self, title: &str, series: &str) -> Self {
+        self.panels.push(Panel { title: title.to_string(), series: series.to_string() });
+        self
+    }
+
+    /// Render all panels from the store.
+    pub fn render(&self, store: &MetricStore) -> String {
+        let mut out = String::new();
+        for p in &self.panels {
+            let series = store.series(&p.series);
+            out.push_str(&ascii_chart(&p.title, &series, self.width, self.height));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Export all panels' series as one aligned CSV (time-joined on the
+    /// union of timestamps; missing values carried forward).
+    pub fn to_csv(&self, store: &MetricStore) -> Csv {
+        let mut headers = vec!["t".to_string()];
+        headers.extend(self.panels.iter().map(|p| p.title.clone()));
+        let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut csv = Csv::new(&header_refs);
+
+        let all_series: Vec<Vec<(f64, f64)>> = self
+            .panels
+            .iter()
+            .map(|p| store.series(&p.series))
+            .collect();
+        let mut times: Vec<f64> = all_series
+            .iter()
+            .flat_map(|s| s.iter().map(|&(t, _)| t))
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+
+        let mut cursors = vec![0usize; all_series.len()];
+        let mut last: Vec<f64> = vec![f64::NAN; all_series.len()];
+        for t in times {
+            let mut row = vec![format!("{t:.3}")];
+            for (i, series) in all_series.iter().enumerate() {
+                while cursors[i] < series.len() && series[cursors[i]].0 <= t + 1e-9 {
+                    last[i] = series[cursors[i]].1;
+                    cursors[i] += 1;
+                }
+                row.push(if last[i].is_nan() {
+                    String::new()
+                } else {
+                    format!("{:.6}", last[i])
+                });
+            }
+            csv.row(&row);
+        }
+        csv
+    }
+}
+
+impl Default for Dashboard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn store_with_data() -> MetricStore {
+        let s = MetricStore::new(Duration::from_secs(1000));
+        for i in 0..20 {
+            s.push("latency", i as f64, (i as f64 * 0.5).sin().abs());
+            if i % 2 == 0 {
+                s.push("servers", i as f64, 1.0 + (i / 5) as f64);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn renders_all_panels() {
+        let d = Dashboard::new()
+            .panel("Latency (s)", "latency")
+            .panel("GPU servers", "servers");
+        let out = d.render(&store_with_data());
+        assert!(out.contains("Latency (s)"));
+        assert!(out.contains("GPU servers"));
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn csv_time_joins_series() {
+        let d = Dashboard::new()
+            .panel("lat", "latency")
+            .panel("srv", "servers");
+        let csv = d.to_csv(&store_with_data());
+        let lines: Vec<&str> = csv.contents().lines().collect();
+        assert_eq!(lines[0], "t,lat,srv");
+        // 20 union timestamps
+        assert_eq!(lines.len(), 21);
+        // carried-forward srv value on odd timestamps
+        let row3: Vec<&str> = lines[4].split(',').collect(); // t=3
+        assert!(!row3[2].is_empty());
+    }
+
+    #[test]
+    fn empty_series_renders_placeholder() {
+        let s = MetricStore::new(Duration::from_secs(10));
+        let d = Dashboard::new().panel("empty", "nothing");
+        let out = d.render(&s);
+        assert!(out.contains("empty series"));
+    }
+}

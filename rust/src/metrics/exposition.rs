@@ -1,0 +1,209 @@
+//! Prometheus text exposition format + the `/metrics` HTTP endpoint.
+//!
+//! The render follows the text format an actual Prometheus server would
+//! scrape (`# TYPE` lines, histogram `_bucket`/`_sum`/`_count` expansion
+//! with cumulative buckets and `le` labels). The HTTP server is a minimal
+//! HTTP/1.1 responder — enough for `curl` and for a real Prometheus scrape
+//! job, which is all the paper's stack needs from it.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::registry::{Registry, SampleValue};
+
+/// Render the registry in Prometheus text format.
+pub fn render(registry: &Registry) -> String {
+    let mut out = String::new();
+    let mut last_name = String::new();
+    for sample in registry.snapshot() {
+        match &sample.value {
+            SampleValue::Counter(v) => {
+                if sample.name != last_name {
+                    out.push_str(&format!("# TYPE {} counter\n", sample.name));
+                    last_name = sample.name.clone();
+                }
+                out.push_str(&format!("{} {}\n", sample.id, v));
+            }
+            SampleValue::Gauge(v) => {
+                if sample.name != last_name {
+                    out.push_str(&format!("# TYPE {} gauge\n", sample.name));
+                    last_name = sample.name.clone();
+                }
+                out.push_str(&format!("{} {}\n", sample.id, v));
+            }
+            SampleValue::Histogram(h) => {
+                if sample.name != last_name {
+                    out.push_str(&format!("# TYPE {} histogram\n", sample.name));
+                    last_name = sample.name.clone();
+                }
+                let base_labels: Vec<String> = sample
+                    .labels
+                    .iter()
+                    .map(|(k, v)| format!("{k}=\"{v}\""))
+                    .collect();
+                let with_le = |le: &str| -> String {
+                    let mut ls = base_labels.clone();
+                    ls.push(format!("le=\"{le}\""));
+                    format!("{}_bucket{{{}}}", sample.name, ls.join(","))
+                };
+                let mut cum = 0u64;
+                for (i, &c) in h.counts().iter().enumerate() {
+                    cum += c;
+                    let le = if i < h.bounds().len() {
+                        format!("{}", h.bounds()[i])
+                    } else {
+                        "+Inf".to_string()
+                    };
+                    out.push_str(&format!("{} {}\n", with_le(&le), cum));
+                }
+                let suffix = if base_labels.is_empty() {
+                    String::new()
+                } else {
+                    format!("{{{}}}", base_labels.join(","))
+                };
+                out.push_str(&format!("{}_sum{} {}\n", sample.name, suffix, h.sum()));
+                out.push_str(&format!("{}_count{} {}\n", sample.name, suffix, h.count()));
+            }
+        }
+    }
+    out
+}
+
+/// Minimal HTTP/1.1 server exposing `/metrics` (and `/healthz`).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind and serve in a background thread.
+    pub fn start(listen: &str, registry: Registry) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding metrics endpoint {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let _ = stream.set_nodelay(true);
+                            let mut buf = [0u8; 2048];
+                            let n = stream.read(&mut buf).unwrap_or(0);
+                            let req = String::from_utf8_lossy(&buf[..n]);
+                            let path = req
+                                .lines()
+                                .next()
+                                .and_then(|l| l.split_whitespace().nth(1))
+                                .unwrap_or("/");
+                            let (status, body) = match path {
+                                "/metrics" => ("200 OK", render(&registry)),
+                                "/healthz" => ("200 OK", "ok\n".to_string()),
+                                _ => ("404 Not Found", "not found\n".to_string()),
+                            };
+                            let resp = format!(
+                                "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                                body.len(),
+                                body
+                            );
+                            let _ = stream.write_all(resp.as_bytes());
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawning metrics http thread");
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// Bound address (resolves ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::registry::labels;
+
+    #[test]
+    fn render_counter_and_gauge() {
+        let r = Registry::new();
+        r.counter("requests_total", &labels(&[("model", "pn")])).add(7);
+        r.gauge("gpu_utilization", &labels(&[("gpu", "0")])).set(0.75);
+        let text = render(&r);
+        assert!(text.contains("# TYPE requests_total counter"));
+        assert!(text.contains("requests_total{model=\"pn\"} 7"));
+        assert!(text.contains("gpu_utilization{gpu=\"0\"} 0.75"));
+    }
+
+    #[test]
+    fn render_histogram_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("latency_seconds", &labels(&[]));
+        h.observe(0.001);
+        h.observe(0.004);
+        h.observe(100.0);
+        let text = render(&r);
+        assert!(text.contains("# TYPE latency_seconds histogram"));
+        assert!(text.contains("le=\"+Inf\"} 3"));
+        assert!(text.contains("latency_seconds_count 3"));
+        // buckets must be cumulative: find two bucket lines and check order
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("latency_seconds_bucket"))
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{buckets:?}");
+    }
+
+    #[test]
+    fn http_endpoint_serves_metrics() {
+        let r = Registry::new();
+        r.counter("up_total", &labels(&[])).inc();
+        let server = MetricsServer::start("127.0.0.1:0", r).unwrap();
+        let addr = server.addr();
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        stream
+            .write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("up_total 1"));
+    }
+
+    #[test]
+    fn http_endpoint_404() {
+        let r = Registry::new();
+        let server = MetricsServer::start("127.0.0.1:0", r).unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Metrics pipeline — the Prometheus analogue (§2.3).
+//!
+//! * [`registry`] — process-wide metric registry: counters, gauges,
+//!   histograms, all labelled, lock-cheap on the hot path.
+//! * [`store`] — the time-series database: a scraper snapshots the registry
+//!   on an interval and windowed queries (avg/rate/quantile over range)
+//!   feed the autoscaler trigger and the Fig. 2/3 series.
+//! * [`exposition`] — Prometheus text-format rendering plus the HTTP
+//!   `/metrics` endpoint.
+//! * [`dashboard`] — Grafana stand-in: renders collected series as ASCII
+//!   timelines and CSV for the benches.
+
+pub mod dashboard;
+pub mod exposition;
+pub mod registry;
+pub mod store;
+
+pub use registry::{Counter, Gauge, HistogramHandle, Registry};
+pub use store::{MetricStore, Scraper};

@@ -1,0 +1,321 @@
+//! Metric registry: labelled counters, gauges and histograms.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`HistogramHandle`]) are cheap clones
+//! holding an `Arc` to shared state; the hot path updates atomics (or a
+//! short-lived mutex for histograms) without touching the registry map.
+//! Series identity follows the Prometheus convention:
+//! `name{label1="v1",label2="v2"}`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Histogram;
+
+/// Label set, sorted by key (Prometheus identity semantics).
+pub type Labels = BTreeMap<String, String>;
+
+/// Build a label set from key/value pairs.
+pub fn labels(pairs: &[(&str, &str)]) -> Labels {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+/// Render `name{k="v",...}` (empty labels render as bare name).
+pub fn series_id(name: &str, labels: &Labels) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    format!("{name}{{{}}}", parts.join(","))
+}
+
+/// Monotonic counter.
+#[derive(Clone)]
+pub struct Counter {
+    value: Arc<AtomicU64>,
+}
+
+impl Counter {
+    /// Increment by 1.
+    pub fn inc(&self) {
+        self.value.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous gauge (stores micro-units in an AtomicI64; f64 API).
+#[derive(Clone)]
+pub struct Gauge {
+    micros: Arc<AtomicI64>,
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.micros.store((v * 1e6) as i64, Ordering::Relaxed);
+    }
+
+    /// Add to the gauge (may be negative).
+    pub fn add(&self, v: f64) {
+        self.micros.fetch_add((v * 1e6) as i64, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        self.micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// Histogram handle (mutex-guarded; observations are rare relative to
+/// atomic ops and the critical section is tiny).
+#[derive(Clone)]
+pub struct HistogramHandle {
+    inner: Arc<Mutex<Histogram>>,
+}
+
+impl HistogramHandle {
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        self.inner.lock().unwrap().observe(v);
+    }
+
+    /// Snapshot the histogram.
+    pub fn snapshot(&self) -> Histogram {
+        self.inner.lock().unwrap().clone()
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(HistogramHandle),
+}
+
+/// Process-wide metric registry.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<String, (String, Labels, Metric)>>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str, labels: &Labels) -> Counter {
+        let id = series_id(name, labels);
+        let mut map = self.inner.lock().unwrap();
+        match map.get(&id) {
+            Some((_, _, Metric::Counter(c))) => c.clone(),
+            Some(_) => panic!("metric '{id}' already registered with a different type"),
+            None => {
+                let c = Counter { value: Arc::new(AtomicU64::new(0)) };
+                map.insert(id, (name.to_string(), labels.clone(), Metric::Counter(c.clone())));
+                c
+            }
+        }
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str, labels: &Labels) -> Gauge {
+        let id = series_id(name, labels);
+        let mut map = self.inner.lock().unwrap();
+        match map.get(&id) {
+            Some((_, _, Metric::Gauge(g))) => g.clone(),
+            Some(_) => panic!("metric '{id}' already registered with a different type"),
+            None => {
+                let g = Gauge { micros: Arc::new(AtomicI64::new(0)) };
+                map.insert(id, (name.to_string(), labels.clone(), Metric::Gauge(g.clone())));
+                g
+            }
+        }
+    }
+
+    /// Get or create a histogram with default latency buckets.
+    pub fn histogram(&self, name: &str, labels: &Labels) -> HistogramHandle {
+        let id = series_id(name, labels);
+        let mut map = self.inner.lock().unwrap();
+        match map.get(&id) {
+            Some((_, _, Metric::Histogram(h))) => h.clone(),
+            Some(_) => panic!("metric '{id}' already registered with a different type"),
+            None => {
+                let h = HistogramHandle {
+                    inner: Arc::new(Mutex::new(Histogram::latency_seconds())),
+                };
+                map.insert(id, (name.to_string(), labels.clone(), Metric::Histogram(h.clone())));
+                h
+            }
+        }
+    }
+
+    /// Snapshot all series as (id, name, labels, sample).
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let map = self.inner.lock().unwrap();
+        map.iter()
+            .map(|(id, (name, labels, metric))| Sample {
+                id: id.clone(),
+                name: name.clone(),
+                labels: labels.clone(),
+                value: match metric {
+                    Metric::Counter(c) => SampleValue::Counter(c.get()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Histogram(h) => SampleValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect()
+    }
+
+    /// Number of registered series.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True if no series registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One snapshotted series.
+pub struct Sample {
+    pub id: String,
+    pub name: String,
+    pub labels: Labels,
+    pub value: SampleValue,
+}
+
+/// Snapshotted value by metric type.
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+impl SampleValue {
+    /// Scalar view: counter/gauge value, histogram mean.
+    pub fn scalar(&self) -> f64 {
+        match self {
+            SampleValue::Counter(v) => *v as f64,
+            SampleValue::Gauge(v) => *v,
+            SampleValue::Histogram(h) => {
+                if h.count() == 0 {
+                    0.0
+                } else {
+                    h.sum() / h.count() as f64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_shared_across_handles() {
+        let r = Registry::new();
+        let c1 = r.counter("requests_total", &labels(&[("model", "pn")]));
+        let c2 = r.counter("requests_total", &labels(&[("model", "pn")]));
+        c1.inc();
+        c2.add(2);
+        assert_eq!(c1.get(), 3);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn labels_distinguish_series() {
+        let r = Registry::new();
+        let a = r.counter("x", &labels(&[("m", "a")]));
+        let b = r.counter("x", &labels(&[("m", "b")]));
+        a.inc();
+        assert_eq!(b.get(), 0);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn gauge_set_add() {
+        let r = Registry::new();
+        let g = r.gauge("util", &Labels::new());
+        g.set(0.5);
+        g.add(0.25);
+        assert!((g.get() - 0.75).abs() < 1e-9);
+        g.add(-0.5);
+        assert!((g.get() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_observe() {
+        let r = Registry::new();
+        let h = r.histogram("lat", &Labels::new());
+        h.observe(0.01);
+        h.observe(0.02);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert!((snap.sum() - 0.03).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "different type")]
+    fn type_conflict_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m", &Labels::new());
+        let _ = r.gauge("m", &Labels::new());
+    }
+
+    #[test]
+    fn series_id_format() {
+        assert_eq!(series_id("up", &Labels::new()), "up");
+        assert_eq!(
+            series_id("x", &labels(&[("b", "2"), ("a", "1")])),
+            "x{a=\"1\",b=\"2\"}" // sorted by key
+        );
+    }
+
+    #[test]
+    fn snapshot_contains_all() {
+        let r = Registry::new();
+        r.counter("c", &Labels::new()).inc();
+        r.gauge("g", &Labels::new()).set(1.5);
+        r.histogram("h", &Labels::new()).observe(0.1);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert!((snap.iter().find(|s| s.name == "g").unwrap().value.scalar() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrent_counter_increments() {
+        let r = Registry::new();
+        let c = r.counter("n", &Labels::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+}

@@ -1,0 +1,297 @@
+//! Time-series store + scraper: the "Prometheus server" half.
+//!
+//! A [`Scraper`] thread snapshots a [`Registry`](super::registry::Registry)
+//! every `interval` of *clock* time and appends points to the
+//! [`MetricStore`]. Windowed queries over the store drive the KEDA-style
+//! autoscaler trigger ("average request queue latency across Triton
+//! servers", §2.4) and regenerate the Fig. 2 timelines.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::metrics::registry::{Registry, SampleValue};
+use crate::util::clock::Clock;
+
+/// One point in a series: (clock seconds, value).
+pub type Point = (f64, f64);
+
+#[derive(Default)]
+struct Inner {
+    /// series id -> ring of points.
+    series: BTreeMap<String, VecDeque<Point>>,
+}
+
+/// Append-only time-series store with retention.
+#[derive(Clone)]
+pub struct MetricStore {
+    inner: Arc<Mutex<Inner>>,
+    retention: Duration,
+}
+
+impl MetricStore {
+    /// Store with a retention window.
+    pub fn new(retention: Duration) -> Self {
+        MetricStore { inner: Arc::new(Mutex::new(Inner::default())), retention }
+    }
+
+    /// Append one point to a series, expiring old points.
+    pub fn push(&self, series: &str, t: f64, v: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        let ring = inner.series.entry(series.to_string()).or_default();
+        ring.push_back((t, v));
+        let horizon = t - self.retention.as_secs_f64();
+        while ring.front().is_some_and(|&(pt, _)| pt < horizon) {
+            ring.pop_front();
+        }
+    }
+
+    /// All points of a series within [t0, t1].
+    pub fn range(&self, series: &str, t0: f64, t1: f64) -> Vec<Point> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .series
+            .get(series)
+            .map(|ring| {
+                ring.iter()
+                    .filter(|&&(t, _)| t >= t0 && t <= t1)
+                    .copied()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Entire retained series.
+    pub fn series(&self, series: &str) -> Vec<Point> {
+        self.range(series, f64::NEG_INFINITY, f64::INFINITY)
+    }
+
+    /// Latest point of a series.
+    pub fn latest(&self, series: &str) -> Option<Point> {
+        let inner = self.inner.lock().unwrap();
+        inner.series.get(series).and_then(|r| r.back().copied())
+    }
+
+    /// Average of a series over the trailing `window` ending at `now`.
+    pub fn avg_over(&self, series: &str, now: f64, window: Duration) -> Option<f64> {
+        let pts = self.range(series, now - window.as_secs_f64(), now);
+        if pts.is_empty() {
+            return None;
+        }
+        Some(pts.iter().map(|&(_, v)| v).sum::<f64>() / pts.len() as f64)
+    }
+
+    /// Max of a series over the trailing window.
+    pub fn max_over(&self, series: &str, now: f64, window: Duration) -> Option<f64> {
+        let pts = self.range(series, now - window.as_secs_f64(), now);
+        pts.iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.max(v)))
+        })
+    }
+
+    /// Per-second rate of a *counter* series over the trailing window
+    /// (Prometheus `rate()`: last-first over elapsed, counter resets not
+    /// handled — our counters never reset within a run).
+    pub fn rate_over(&self, series: &str, now: f64, window: Duration) -> Option<f64> {
+        let pts = self.range(series, now - window.as_secs_f64(), now);
+        if pts.len() < 2 {
+            return None;
+        }
+        let (t0, v0) = pts[0];
+        let (t1, v1) = pts[pts.len() - 1];
+        if t1 <= t0 {
+            return None;
+        }
+        Some((v1 - v0) / (t1 - t0))
+    }
+
+    /// Sum of the latest values of all series matching a name prefix
+    /// (cheap aggregation across labelled instances).
+    pub fn sum_latest_prefix(&self, prefix: &str) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .series
+            .iter()
+            .filter(|(id, _)| id.starts_with(prefix))
+            .filter_map(|(_, ring)| ring.back().map(|&(_, v)| v))
+            .sum()
+    }
+
+    /// Average of the latest values of all series matching a name prefix.
+    pub fn avg_latest_prefix(&self, prefix: &str) -> Option<f64> {
+        let inner = self.inner.lock().unwrap();
+        let vals: Vec<f64> = inner
+            .series
+            .iter()
+            .filter(|(id, _)| id.starts_with(prefix))
+            .filter_map(|(_, ring)| ring.back().map(|&(_, v)| v))
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    /// Ids of all stored series.
+    pub fn series_ids(&self) -> Vec<String> {
+        self.inner.lock().unwrap().series.keys().cloned().collect()
+    }
+}
+
+/// Background scraper: registry -> store on an interval of clock time.
+pub struct Scraper {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scraper {
+    /// Start scraping `registry` into `store` every `interval`.
+    ///
+    /// Histogram series additionally publish `<id>:avg`, `<id>:p50`,
+    /// `<id>:p99` scalar series derived from the snapshot (cumulative) and
+    /// `<id>:rate` style derivations are left to query time.
+    pub fn start(
+        registry: Registry,
+        store: MetricStore,
+        clock: Clock,
+        interval: Duration,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-scraper".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    Self::scrape_once(&registry, &store, &clock);
+                    clock.sleep(interval);
+                }
+            })
+            .expect("spawning scraper");
+        Scraper { stop, handle: Some(handle) }
+    }
+
+    /// One synchronous scrape (also used by tests and simulated-time
+    /// drivers that cannot rely on the background thread's cadence).
+    pub fn scrape_once(registry: &Registry, store: &MetricStore, clock: &Clock) {
+        let t = clock.now_secs();
+        for sample in registry.snapshot() {
+            match sample.value {
+                SampleValue::Counter(v) => store.push(&sample.id, t, v as f64),
+                SampleValue::Gauge(v) => store.push(&sample.id, t, v),
+                SampleValue::Histogram(h) => {
+                    let avg = if h.count() == 0 { 0.0 } else { h.sum() / h.count() as f64 };
+                    store.push(&format!("{}:avg", sample.id), t, avg);
+                    store.push(&format!("{}:p50", sample.id), t, h.quantile(0.5));
+                    store.push(&format!("{}:p99", sample.id), t, h.quantile(0.99));
+                    store.push(&format!("{}:count", sample.id), t, h.count() as f64);
+                    store.push(&format!("{}:sum", sample.id), t, h.sum());
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Scraper {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::registry::labels;
+
+    #[test]
+    fn push_and_range() {
+        let s = MetricStore::new(Duration::from_secs(100));
+        s.push("a", 1.0, 10.0);
+        s.push("a", 2.0, 20.0);
+        s.push("a", 3.0, 30.0);
+        assert_eq!(s.range("a", 1.5, 2.5), vec![(2.0, 20.0)]);
+        assert_eq!(s.latest("a"), Some((3.0, 30.0)));
+        assert_eq!(s.range("missing", 0.0, 10.0), Vec::new());
+    }
+
+    #[test]
+    fn retention_expires() {
+        let s = MetricStore::new(Duration::from_secs(10));
+        s.push("a", 0.0, 1.0);
+        s.push("a", 100.0, 2.0);
+        assert_eq!(s.series("a").len(), 1);
+    }
+
+    #[test]
+    fn avg_and_max_over() {
+        let s = MetricStore::new(Duration::from_secs(100));
+        for i in 0..10 {
+            s.push("a", i as f64, i as f64);
+        }
+        assert_eq!(s.avg_over("a", 9.0, Duration::from_secs(4)), Some(7.0)); // 5..=9
+        assert_eq!(s.max_over("a", 9.0, Duration::from_secs(100)), Some(9.0));
+        assert_eq!(s.avg_over("missing", 9.0, Duration::from_secs(4)), None);
+    }
+
+    #[test]
+    fn rate_over_counter() {
+        let s = MetricStore::new(Duration::from_secs(100));
+        s.push("reqs", 0.0, 0.0);
+        s.push("reqs", 10.0, 500.0);
+        assert_eq!(s.rate_over("reqs", 10.0, Duration::from_secs(60)), Some(50.0));
+        assert_eq!(s.rate_over("reqs", 10.0, Duration::from_secs(0)), None);
+    }
+
+    #[test]
+    fn prefix_aggregation() {
+        let s = MetricStore::new(Duration::from_secs(100));
+        s.push("util{gpu=\"0\"}", 1.0, 0.5);
+        s.push("util{gpu=\"1\"}", 1.0, 0.7);
+        s.push("other", 1.0, 9.0);
+        assert!((s.sum_latest_prefix("util") - 1.2).abs() < 1e-9);
+        assert!((s.avg_latest_prefix("util").unwrap() - 0.6).abs() < 1e-9);
+        assert_eq!(s.avg_latest_prefix("nope"), None);
+    }
+
+    #[test]
+    fn scrape_once_publishes_derived_series() {
+        let r = Registry::new();
+        let store = MetricStore::new(Duration::from_secs(100));
+        let clock = Clock::simulated();
+        r.counter("c_total", &labels(&[("m", "pn")])).add(5);
+        let h = r.histogram("lat", &labels(&[]));
+        h.observe(0.01);
+        h.observe(0.03);
+        clock.advance(Duration::from_secs(1));
+        Scraper::scrape_once(&r, &store, &clock);
+        assert_eq!(store.latest("c_total{m=\"pn\"}"), Some((1.0, 5.0)));
+        let avg = store.latest("lat:avg").unwrap().1;
+        assert!((avg - 0.02).abs() < 1e-9);
+        assert_eq!(store.latest("lat:count").unwrap().1, 2.0);
+    }
+
+    #[test]
+    fn scraper_thread_collects_on_real_clock() {
+        let r = Registry::new();
+        let store = MetricStore::new(Duration::from_secs(100));
+        let clock = Clock::real();
+        let g = r.gauge("g", &labels(&[]));
+        g.set(42.0);
+        {
+            let _scraper = Scraper::start(
+                r.clone(),
+                store.clone(),
+                clock,
+                Duration::from_millis(5),
+            );
+            std::thread::sleep(Duration::from_millis(60));
+        } // drop joins the thread
+        let pts = store.series("g");
+        assert!(pts.len() >= 2, "scraped {} points", pts.len());
+        assert_eq!(pts.last().unwrap().1, 42.0);
+    }
+}

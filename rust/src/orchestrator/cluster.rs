@@ -1,0 +1,531 @@
+//! The cluster simulator (see module docs in `orchestrator/mod.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+use crate::config::ClusterConfig;
+use crate::metrics::registry::{labels, Gauge, Counter, Registry};
+use crate::server::Instance;
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+
+/// Pod lifecycle phase (Kubernetes naming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PodPhase {
+    /// Created, waiting for a free GPU slot.
+    Pending,
+    /// Bound to a slot; container pull + model load in progress.
+    ContainerCreating,
+    /// Serving; instance registered with the gateway.
+    Running,
+    /// Draining; slot freed when grace period elapses.
+    Terminating,
+}
+
+/// Builds a (not yet Ready) [`Instance`] for a pod. The deployment layer
+/// supplies this, closing over the model repository and metrics registry.
+pub type InstanceFactory = Arc<dyn Fn(&str) -> Arc<Instance> + Send + Sync>;
+
+struct Pod {
+    phase: PodPhase,
+    /// (node, slot) once bound.
+    slot: Option<(usize, usize)>,
+    instance: Option<Arc<Instance>>,
+    /// Clock-seconds when the current phase completes.
+    phase_deadline: f64,
+    /// Start attempts (failure injection retries).
+    attempts: u32,
+}
+
+struct State {
+    pods: BTreeMap<String, Pod>,
+    /// free_slots[node] = set of free GPU indices.
+    free_slots: Vec<Vec<usize>>,
+    next_pod_id: usize,
+    rng: Rng,
+}
+
+/// The simulated cluster plus its reconcile loop.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    startup_delay: Duration,
+    clock: Clock,
+    factory: InstanceFactory,
+    desired: AtomicUsize,
+    state: Mutex<State>,
+    /// Ready instances, shared with the gateway's load balancer.
+    endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+    stop: Arc<AtomicBool>,
+    reconcile_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    m_running: Gauge,
+    m_desired: Gauge,
+    m_pod_starts: Counter,
+    m_pod_failures: Counter,
+}
+
+impl Cluster {
+    /// Create the cluster and start its reconcile loop.
+    ///
+    /// `startup_delay` is the server's model-load time, added to the
+    /// cluster's `pod_start_delay` (container pull) for every pod start.
+    pub fn start(
+        cfg: ClusterConfig,
+        startup_delay: Duration,
+        initial_replicas: usize,
+        clock: Clock,
+        registry: Registry,
+        factory: InstanceFactory,
+        seed: u64,
+    ) -> Arc<Self> {
+        let free_slots = (0..cfg.nodes)
+            .map(|_| (0..cfg.gpus_per_node).collect())
+            .collect();
+        let l = labels(&[]);
+        let cluster = Arc::new(Cluster {
+            cfg,
+            startup_delay,
+            clock: clock.clone(),
+            factory,
+            desired: AtomicUsize::new(initial_replicas),
+            state: Mutex::new(State {
+                pods: BTreeMap::new(),
+                free_slots,
+                next_pod_id: 0,
+                rng: Rng::seeded(seed),
+            }),
+            endpoints: Arc::new(RwLock::new(Vec::new())),
+            stop: Arc::new(AtomicBool::new(false)),
+            reconcile_handle: Mutex::new(None),
+            m_running: registry.gauge("replicas_running", &l),
+            m_desired: registry.gauge("replicas_desired", &l),
+            m_pod_starts: registry.counter("pod_starts_total", &l),
+            m_pod_failures: registry.counter("pod_failures_total", &l),
+        });
+        let c = Arc::clone(&cluster);
+        let handle = std::thread::Builder::new()
+            .name("reconcile".into())
+            .spawn(move || {
+                while !c.stop.load(Ordering::SeqCst) {
+                    c.reconcile();
+                    c.clock.sleep(Duration::from_millis(200));
+                }
+            })
+            .expect("spawning reconcile loop");
+        *cluster.reconcile_handle.lock().unwrap() = Some(handle);
+        cluster
+    }
+
+    /// Set the replica target (the KEDA/Deployment interface).
+    pub fn set_desired(&self, n: usize) {
+        self.desired.store(n, Ordering::SeqCst);
+    }
+
+    /// Current replica target.
+    pub fn desired(&self) -> usize {
+        self.desired.load(Ordering::SeqCst)
+    }
+
+    /// Ready instances (what the gateway routes to).
+    pub fn endpoints(&self) -> Vec<Arc<Instance>> {
+        self.endpoints.read().unwrap().clone()
+    }
+
+    /// Shared handle for the gateway's load balancer.
+    pub fn endpoints_handle(&self) -> Arc<RwLock<Vec<Arc<Instance>>>> {
+        Arc::clone(&self.endpoints)
+    }
+
+    /// Running pod count.
+    pub fn running(&self) -> usize {
+        self.endpoints.read().unwrap().len()
+    }
+
+    /// Phase of every pod, for introspection/tests.
+    pub fn pod_phases(&self) -> BTreeMap<String, PodPhase> {
+        let state = self.state.lock().unwrap();
+        state.pods.iter().map(|(k, p)| (k.clone(), p.phase)).collect()
+    }
+
+    /// Total GPU slots in the cluster.
+    pub fn capacity(&self) -> usize {
+        self.cfg.nodes * self.cfg.gpus_per_node
+    }
+
+    /// Block until at least `n` instances are Ready (or timeout).
+    pub fn wait_ready(&self, n: usize, timeout: Duration) -> bool {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < timeout {
+            if self.running() >= n {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.running() >= n
+    }
+
+    /// One reconcile pass (also callable directly by simulated-time tests).
+    pub fn reconcile(&self) {
+        let now = self.clock.now_secs();
+        let mut to_stop: Vec<Arc<Instance>> = Vec::new();
+        {
+            let mut state = self.state.lock().unwrap();
+            let desired = self.desired();
+
+            // 1. Advance pod phases.
+            let names: Vec<String> = state.pods.keys().cloned().collect();
+            for name in names {
+                let (phase, deadline) = {
+                    let pod = state.pods.get(&name).unwrap();
+                    (pod.phase, pod.phase_deadline)
+                };
+                match phase {
+                    PodPhase::Pending => {
+                        // try to bind a free slot
+                        if let Some((node, slot)) = Self::take_slot(&mut state.free_slots) {
+                            let delay = self.cfg.pod_start_delay + self.startup_delay;
+                            let pod = state.pods.get_mut(&name).unwrap();
+                            pod.slot = Some((node, slot));
+                            pod.phase = PodPhase::ContainerCreating;
+                            pod.phase_deadline = now + delay.as_secs_f64();
+                        }
+                    }
+                    PodPhase::ContainerCreating if now >= deadline => {
+                        let failed = {
+                            let rate = self.cfg.pod_failure_rate;
+                            rate > 0.0 && state.rng.chance(rate)
+                        };
+                        let pod = state.pods.get_mut(&name).unwrap();
+                        if failed {
+                            // crash-loop: back to the start of the phase
+                            pod.attempts += 1;
+                            pod.phase_deadline = now
+                                + (self.cfg.pod_start_delay + self.startup_delay)
+                                    .as_secs_f64();
+                            self.m_pod_failures.inc();
+                        } else {
+                            let instance = (self.factory)(&name);
+                            instance.mark_ready();
+                            pod.instance = Some(Arc::clone(&instance));
+                            pod.phase = PodPhase::Running;
+                            self.endpoints.write().unwrap().push(instance);
+                            self.m_pod_starts.inc();
+                        }
+                    }
+                    PodPhase::Terminating if now >= deadline => {
+                        let pod = state.pods.remove(&name).unwrap();
+                        if let Some((node, slot)) = pod.slot {
+                            state.free_slots[node].push(slot);
+                        }
+                        if let Some(inst) = pod.instance {
+                            to_stop.push(inst);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            // 2. Converge replica count. Active = not Terminating.
+            let active: Vec<String> = state
+                .pods
+                .iter()
+                .filter(|(_, p)| p.phase != PodPhase::Terminating)
+                .map(|(k, _)| k.clone())
+                .collect();
+
+            if active.len() < desired {
+                for _ in 0..(desired - active.len()) {
+                    let name = format!("triton-{}", state.next_pod_id);
+                    state.next_pod_id += 1;
+                    state.pods.insert(
+                        name,
+                        Pod {
+                            phase: PodPhase::Pending,
+                            slot: None,
+                            instance: None,
+                            phase_deadline: now,
+                            attempts: 0,
+                        },
+                    );
+                }
+            } else if active.len() > desired {
+                // Scale down: Pending first, then newest Running
+                // (k8s-style youngest-first victim selection).
+                let mut victims: Vec<String> = Vec::new();
+                let mut pending: Vec<String> = active
+                    .iter()
+                    .filter(|n| state.pods[*n].phase != PodPhase::Running)
+                    .cloned()
+                    .collect();
+                pending.sort();
+                let mut running: Vec<String> = active
+                    .iter()
+                    .filter(|n| state.pods[*n].phase == PodPhase::Running)
+                    .cloned()
+                    .collect();
+                // names are triton-<id>; sort by id descending = newest first
+                running.sort_by_key(|n| {
+                    std::cmp::Reverse(
+                        n.rsplit('-').next().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0),
+                    )
+                });
+                victims.extend(pending);
+                victims.extend(running);
+                victims.truncate(active.len() - desired);
+
+                for name in victims {
+                    let phase = state.pods[&name].phase;
+                    match phase {
+                        PodPhase::Pending => {
+                            state.pods.remove(&name);
+                        }
+                        PodPhase::ContainerCreating => {
+                            // never became ready; free slot immediately
+                            let pod = state.pods.remove(&name).unwrap();
+                            if let Some((node, slot)) = pod.slot {
+                                state.free_slots[node].push(slot);
+                            }
+                        }
+                        PodPhase::Running => {
+                            let pod = state.pods.get_mut(&name).unwrap();
+                            pod.phase = PodPhase::Terminating;
+                            pod.phase_deadline =
+                                now + self.cfg.termination_grace.as_secs_f64();
+                            if let Some(inst) = &pod.instance {
+                                inst.drain();
+                                let id = inst.id.clone();
+                                self.endpoints
+                                    .write()
+                                    .unwrap()
+                                    .retain(|e| e.id != id);
+                            }
+                        }
+                        PodPhase::Terminating => {}
+                    }
+                }
+            }
+
+            self.m_desired.set(desired as f64);
+        }
+        self.m_running.set(self.running() as f64);
+        // Join drained executors outside the lock.
+        for inst in to_stop {
+            inst.stop();
+        }
+    }
+
+    fn take_slot(free_slots: &mut [Vec<usize>]) -> Option<(usize, usize)> {
+        // spread pods across nodes: pick the node with most free slots
+        let node = free_slots
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, slots)| slots.len())
+            .filter(|(_, slots)| !slots.is_empty())
+            .map(|(i, _)| i)?;
+        let slot = free_slots[node].pop()?;
+        Some((node, slot))
+    }
+
+    /// Stop the reconcile loop and all instances.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.reconcile_handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let instances: Vec<Arc<Instance>> = {
+            let state = self.state.lock().unwrap();
+            state.pods.values().filter_map(|p| p.instance.clone()).collect()
+        };
+        for inst in instances {
+            inst.stop();
+        }
+        self.endpoints.write().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::runtime::PjrtRuntime;
+    use crate::server::ModelRepository;
+    use once_cell::sync::Lazy;
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        let rt = PjrtRuntime::cpu().unwrap();
+        Arc::new(
+            ModelRepository::load(
+                &rt,
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
+    fn factory(registry: Registry, clock: Clock) -> InstanceFactory {
+        Arc::new(move |name: &str| {
+            Instance::start(
+                name,
+                Arc::clone(&REPO),
+                &[ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() }],
+                clock.clone(),
+                registry.clone(),
+                64,
+                5.0,
+            )
+        })
+    }
+
+    fn fast_cfg() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(50),
+            termination_grace: Duration::from_millis(20),
+            pod_failure_rate: 0.0,
+        }
+    }
+
+    #[test]
+    fn boots_initial_replicas() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let cluster = Cluster::start(
+            fast_cfg(),
+            Duration::from_millis(10),
+            2,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            1,
+        );
+        assert!(cluster.wait_ready(2, Duration::from_secs(5)));
+        assert_eq!(cluster.running(), 2);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn scale_up_and_down() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let cluster = Cluster::start(
+            fast_cfg(),
+            Duration::from_millis(10),
+            1,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            2,
+        );
+        assert!(cluster.wait_ready(1, Duration::from_secs(5)));
+        cluster.set_desired(3);
+        assert!(cluster.wait_ready(3, Duration::from_secs(5)));
+        cluster.set_desired(1);
+        let t0 = std::time::Instant::now();
+        while cluster.running() > 1 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(cluster.running(), 1);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn capacity_caps_running_pods() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let cluster = Cluster::start(
+            fast_cfg(), // capacity 4
+            Duration::from_millis(10),
+            6,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            3,
+        );
+        assert!(cluster.wait_ready(4, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(cluster.running(), 4, "over capacity");
+        // two pods must be parked Pending
+        let pending = cluster
+            .pod_phases()
+            .values()
+            .filter(|p| **p == PodPhase::Pending)
+            .count();
+        assert_eq!(pending, 2);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn startup_delay_observed() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let mut cfg = fast_cfg();
+        cfg.pod_start_delay = Duration::from_millis(300);
+        let cluster = Cluster::start(
+            cfg,
+            Duration::from_millis(0),
+            1,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            4,
+        );
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(cluster.running(), 0, "pod became Ready before its start delay");
+        assert!(cluster.wait_ready(1, Duration::from_secs(5)));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn failure_injection_retries() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let mut cfg = fast_cfg();
+        cfg.pod_failure_rate = 0.5;
+        cfg.pod_start_delay = Duration::from_millis(10);
+        let cluster = Cluster::start(
+            cfg,
+            Duration::from_millis(0),
+            2,
+            clock.clone(),
+            registry.clone(),
+            factory(registry.clone(), clock),
+            5,
+        );
+        // with retries the pods must eventually come up
+        assert!(cluster.wait_ready(2, Duration::from_secs(10)));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn terminated_instances_are_drained() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let cluster = Cluster::start(
+            fast_cfg(),
+            Duration::from_millis(10),
+            2,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            6,
+        );
+        assert!(cluster.wait_ready(2, Duration::from_secs(5)));
+        let eps = cluster.endpoints();
+        cluster.set_desired(1);
+        let t0 = std::time::Instant::now();
+        while cluster.running() > 1 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // one of the two previous endpoints must now be stopped
+        std::thread::sleep(Duration::from_millis(200));
+        let stopped = eps
+            .iter()
+            .filter(|i| i.state() == crate::server::InstanceState::Stopped)
+            .count();
+        assert_eq!(stopped, 1);
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,24 @@
+//! Cluster orchestrator — the Kubernetes analogue.
+//!
+//! SuperSONIC deploys onto Kubernetes clusters; no cluster exists in this
+//! environment, so this module simulates the behaviours the paper's
+//! results depend on (see DESIGN.md §Substitutions):
+//!
+//! * **capacity**: nodes expose GPU slots; a Triton pod binds one slot and
+//!   pods beyond capacity stay `Pending`;
+//! * **startup latency**: a scheduled pod passes through
+//!   `Pending -> ContainerCreating -> Running`, taking the configured pod
+//!   start delay (container pull) plus the server's model-load delay —
+//!   this delay is what shapes the Fig. 2 scale-up ramp;
+//! * **graceful termination**: scale-down drains an instance before
+//!   freeing its GPU slot;
+//! * **failure injection**: pod starts can fail with a configured
+//!   probability and are retried (crash-loop style).
+//!
+//! The autoscaler interacts with the cluster exactly like KEDA does with a
+//! Deployment: it sets `desired_replicas` and the reconcile loop converges
+//! actual state toward it.
+
+pub mod cluster;
+
+pub use cluster::{Cluster, InstanceFactory, PodPhase};

@@ -1,0 +1,104 @@
+//! Blocking RPC client with connection reuse and auth/trace metadata.
+//!
+//! One [`RpcClient`] wraps one TCP connection and issues requests
+//! sequentially (the perf_analyzer model: N concurrent clients = N
+//! connections). Request ids are assigned from a process-wide counter and
+//! verified against responses to catch desync bugs early.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{self, InferRequest, InferResponse, RequestKind, Status};
+use crate::runtime::Tensor;
+
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Blocking sonic-rpc client over one TCP connection.
+pub struct RpcClient {
+    stream: TcpStream,
+    /// Auth token attached to every request.
+    pub token: String,
+    /// Trace id attached to every request (0 = untraced).
+    pub trace_id: u64,
+}
+
+impl RpcClient {
+    /// Connect to `addr` ("host:port").
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(RpcClient { stream, token: String::new(), trace_id: 0 })
+    }
+
+    /// Connect with a timeout.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        let sockaddr: std::net::SocketAddr =
+            addr.parse().with_context(|| format!("parsing address {addr}"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, timeout)
+            .with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true)?;
+        Ok(RpcClient { stream, token: String::new(), trace_id: 0 })
+    }
+
+    /// Set the auth token used for subsequent requests.
+    pub fn with_token(mut self, token: &str) -> Self {
+        self.token = token.to_string();
+        self
+    }
+
+    /// Issue an inference request and wait for the response.
+    pub fn infer(&mut self, model: &str, input: Tensor) -> Result<InferResponse> {
+        let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+        let req = InferRequest {
+            kind: RequestKind::Infer,
+            request_id,
+            trace_id: self.trace_id,
+            token: self.token.clone(),
+            model: model.to_string(),
+            input,
+        };
+        self.call(req)
+    }
+
+    /// Issue a health probe; Ok(true) if the endpoint answers Ok.
+    pub fn health(&mut self) -> Result<bool> {
+        let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+        let mut req = InferRequest::health(request_id);
+        req.token = self.token.clone();
+        Ok(self.call(req)?.status == Status::Ok)
+    }
+
+    /// Send a raw request and match the response id.
+    pub fn call(&mut self, req: InferRequest) -> Result<InferResponse> {
+        codec::write_frame(&mut self.stream, &codec::encode_request(&req))?;
+        let frame = codec::read_frame(&mut self.stream)?
+            .context("connection closed while awaiting response")?;
+        let resp = codec::decode_response(&frame)?;
+        // request_id 0 is the server's "could not even parse" escape hatch
+        if resp.request_id != 0 && resp.request_id != req.request_id {
+            bail!(
+                "response id {} does not match request id {} (protocol desync)",
+                resp.request_id,
+                req.request_id
+            );
+        }
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Client/server integration tests live in rpc::server::tests (they
+    // need both halves); here we only test id assignment.
+    use super::*;
+
+    #[test]
+    fn request_ids_unique() {
+        let a = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+        let b = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+        assert_ne!(a, b);
+    }
+}

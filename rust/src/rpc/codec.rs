@@ -1,0 +1,440 @@
+//! Wire codec for sonic-rpc (see module docs in `rpc/mod.rs`).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+/// Hard cap on frame payloads (64 MiB) — protects the server from
+/// malformed or hostile length prefixes.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Request kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Run inference on a tensor.
+    Infer = 1,
+    /// Liveness/readiness probe.
+    Health = 2,
+}
+
+impl RequestKind {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => RequestKind::Infer,
+            2 => RequestKind::Health,
+            other => bail!("unknown request kind {other}"),
+        })
+    }
+}
+
+/// Response status codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Ok = 0,
+    Unauthorized = 1,
+    RateLimited = 2,
+    Overloaded = 3,
+    BadRequest = 4,
+    Internal = 5,
+    ModelNotFound = 6,
+}
+
+impl Status {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::Unauthorized,
+            2 => Status::RateLimited,
+            3 => Status::Overloaded,
+            4 => Status::BadRequest,
+            5 => Status::Internal,
+            6 => Status::ModelNotFound,
+            other => bail!("unknown status {other}"),
+        })
+    }
+
+    /// Human-readable name (metrics label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Unauthorized => "unauthorized",
+            Status::RateLimited => "rate_limited",
+            Status::Overloaded => "overloaded",
+            Status::BadRequest => "bad_request",
+            Status::Internal => "internal",
+            Status::ModelNotFound => "model_not_found",
+        }
+    }
+}
+
+/// An inference (or health) request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    pub kind: RequestKind,
+    pub request_id: u64,
+    /// Trace id for distributed tracing (0 = not traced).
+    pub trace_id: u64,
+    /// Auth token ("" when auth is disabled).
+    pub token: String,
+    pub model: String,
+    pub input: Tensor,
+}
+
+impl InferRequest {
+    /// Convenience constructor for inference.
+    pub fn infer(request_id: u64, model: &str, input: Tensor) -> Self {
+        InferRequest {
+            kind: RequestKind::Infer,
+            request_id,
+            trace_id: 0,
+            token: String::new(),
+            model: model.to_string(),
+            input,
+        }
+    }
+
+    /// Health probe.
+    pub fn health(request_id: u64) -> Self {
+        InferRequest {
+            kind: RequestKind::Health,
+            request_id,
+            trace_id: 0,
+            token: String::new(),
+            model: String::new(),
+            input: Tensor::zeros(vec![0]),
+        }
+    }
+}
+
+/// Response with server-side latency breakdown.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResponse {
+    pub status: Status,
+    pub request_id: u64,
+    /// Time spent queued at the server before execution.
+    pub queue_us: u32,
+    /// Time spent in model execution.
+    pub compute_us: u32,
+    /// Batch the request was folded into (dynamic batching visibility).
+    pub batch_size: u32,
+    /// Output tensor (Ok) — zero-dim placeholder otherwise.
+    pub output: Tensor,
+    /// Error message (non-Ok).
+    pub error: String,
+}
+
+impl InferResponse {
+    /// Successful response.
+    pub fn ok(request_id: u64, output: Tensor) -> Self {
+        InferResponse {
+            status: Status::Ok,
+            request_id,
+            queue_us: 0,
+            compute_us: 0,
+            batch_size: 1,
+            output,
+            error: String::new(),
+        }
+    }
+
+    /// Error response.
+    pub fn err(request_id: u64, status: Status, msg: impl Into<String>) -> Self {
+        InferResponse {
+            status,
+            request_id,
+            queue_us: 0,
+            compute_us: 0,
+            batch_size: 0,
+            output: Tensor::zeros(vec![0]),
+            error: msg.into(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitives
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated message: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn str8(&mut self) -> Result<String> {
+        let n = self.u8()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("invalid utf-8 in str8")?)
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec()).context("invalid utf-8 in str16")?)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes in message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+fn put_str8(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u8::MAX as usize, "str8 overflow");
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let n = bytes.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(n as u16).to_le_bytes());
+    out.extend_from_slice(&bytes[..n]);
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    let dims = t.shape();
+    assert!(dims.len() <= u8::MAX as usize);
+    out.push(dims.len() as u8);
+    for &d in dims {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    let data = t.to_bytes();
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&data);
+}
+
+fn get_tensor(c: &mut Cursor) -> Result<Tensor> {
+    let ndim = c.u8()? as usize;
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(c.u32()? as usize);
+    }
+    let n = c.u32()? as usize;
+    if n > MAX_FRAME {
+        bail!("tensor payload {n} exceeds frame cap");
+    }
+    let bytes = c.take(n)?;
+    Tensor::from_bytes(dims, bytes)
+}
+
+// ---------------------------------------------------------------------------
+// message encode/decode
+// ---------------------------------------------------------------------------
+
+/// Encode a request payload (without frame header).
+pub fn encode_request(req: &InferRequest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + req.input.len() * 4);
+    out.push(req.kind as u8);
+    out.extend_from_slice(&req.request_id.to_le_bytes());
+    out.extend_from_slice(&req.trace_id.to_le_bytes());
+    put_str8(&mut out, &req.token);
+    put_str8(&mut out, &req.model);
+    put_tensor(&mut out, &req.input);
+    out
+}
+
+/// Decode a request payload.
+pub fn decode_request(buf: &[u8]) -> Result<InferRequest> {
+    let mut c = Cursor::new(buf);
+    let kind = RequestKind::from_u8(c.u8()?)?;
+    let request_id = c.u64()?;
+    let trace_id = c.u64()?;
+    let token = c.str8()?;
+    let model = c.str8()?;
+    let input = get_tensor(&mut c)?;
+    c.done()?;
+    Ok(InferRequest { kind, request_id, trace_id, token, model, input })
+}
+
+/// Encode a response payload (without frame header).
+pub fn encode_response(resp: &InferResponse) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + resp.output.len() * 4);
+    out.push(resp.status as u8);
+    out.extend_from_slice(&resp.request_id.to_le_bytes());
+    out.extend_from_slice(&resp.queue_us.to_le_bytes());
+    out.extend_from_slice(&resp.compute_us.to_le_bytes());
+    out.extend_from_slice(&resp.batch_size.to_le_bytes());
+    if resp.status == Status::Ok {
+        put_tensor(&mut out, &resp.output);
+    } else {
+        put_str16(&mut out, &resp.error);
+    }
+    out
+}
+
+/// Decode a response payload.
+pub fn decode_response(buf: &[u8]) -> Result<InferResponse> {
+    let mut c = Cursor::new(buf);
+    let status = Status::from_u8(c.u8()?)?;
+    let request_id = c.u64()?;
+    let queue_us = c.u32()?;
+    let compute_us = c.u32()?;
+    let batch_size = c.u32()?;
+    let (output, error) = if status == Status::Ok {
+        (get_tensor(&mut c)?, String::new())
+    } else {
+        (Tensor::zeros(vec![0]), c.str16()?)
+    };
+    c.done()?;
+    Ok(InferResponse { status, request_id, queue_us, compute_us, batch_size, output, error })
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame of {} bytes exceeds cap", payload.len());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Returns None on clean EOF at a frame
+/// boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("incoming frame of {len} bytes exceeds cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame body")?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tensor() -> Tensor {
+        Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let mut req = InferRequest::infer(42, "particlenet", sample_tensor());
+        req.token = "secret-token".into();
+        req.trace_id = 7;
+        let buf = encode_request(&req);
+        let got = decode_request(&buf).unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn health_roundtrip() {
+        let req = InferRequest::health(1);
+        let got = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(got.kind, RequestKind::Health);
+    }
+
+    #[test]
+    fn response_ok_roundtrip() {
+        let mut resp = InferResponse::ok(42, sample_tensor());
+        resp.queue_us = 1500;
+        resp.compute_us = 3200;
+        resp.batch_size = 8;
+        let got = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(got, resp);
+    }
+
+    #[test]
+    fn response_err_roundtrip() {
+        let resp = InferResponse::err(9, Status::RateLimited, "slow down");
+        let got = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(got.status, Status::RateLimited);
+        assert_eq!(got.error, "slow down");
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let req = InferRequest::infer(1, "m", sample_tensor());
+        let buf = encode_request(&req);
+        assert!(decode_request(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let req = InferRequest::infer(1, "m", sample_tensor());
+        let mut buf = encode_request(&req);
+        buf.push(0);
+        assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn bad_kind_rejected() {
+        let req = InferRequest::infer(1, "m", sample_tensor());
+        let mut buf = encode_request(&req);
+        buf[0] = 99;
+        assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"world!").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"world!");
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn status_names() {
+        assert_eq!(Status::Ok.name(), "ok");
+        assert_eq!(Status::Overloaded.name(), "overloaded");
+    }
+}

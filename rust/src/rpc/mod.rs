@@ -1,0 +1,33 @@
+//! `sonic-rpc`: the networked inference protocol (gRPC analogue).
+//!
+//! SuperSONIC exposes "a single gRPC endpoint for inference requests"
+//! (Fig. 1). Reimplementing HTTP/2 + protobuf from scratch is out of scope
+//! offline, so this is a compact length-prefixed binary protocol over TCP
+//! that preserves the same code path: serialization, socket backpressure,
+//! connection reuse, per-request metadata (auth token, trace id) and a
+//! server-side latency breakdown in every response (feeding the §2.3
+//! "breakdown of total request latency by source").
+//!
+//! Wire format (all integers little-endian):
+//!
+//! ```text
+//!     frame    := u32 payload_len ++ payload            (max 64 MiB)
+//!     request  := u8 kind ++ u64 request_id ++ u64 trace_id
+//!                 ++ str8 token ++ str8 model
+//!                 ++ u8 ndim ++ ndim*u32 dims ++ bytes32 tensor_data
+//!     response := u8 status ++ u64 request_id
+//!                 ++ u32 queue_us ++ u32 compute_us ++ u32 batch_size
+//!                 ++ (ok? u8 ndim ++ ndim*u32 dims ++ bytes32 data
+//!                       : str16 error_message)
+//!     str8     := u8 len ++ len bytes (utf-8)
+//!     str16    := u16 len ++ len bytes
+//!     bytes32  := u32 len ++ len bytes
+//! ```
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::RpcClient;
+pub use codec::{InferRequest, InferResponse, RequestKind, Status};
+pub use server::RpcServer;

@@ -1,0 +1,80 @@
+//! Golden-file loader: deterministic input/output pairs written by
+//! `python/compile/aot.py` so the Rust runtime can verify that the PJRT
+//! execution of an artifact matches the JAX numerics bit-for-bit-ish.
+//!
+//! File format (`golden.b<N>.txt`):
+//!
+//! ```text
+//!     input <d0> <d1> ...
+//!     <flat values, whitespace separated>
+//!     output <d0> <d1> ...
+//!     <flat values>
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// A deterministic (input, expected output) pair for one artifact.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub input: Tensor,
+    pub output: Tensor,
+}
+
+/// Parse one golden file.
+pub fn load(path: &Path) -> Result<Golden> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden {}", path.display()))?;
+    parse(&text)
+}
+
+/// Parse golden text (exposed for tests).
+pub fn parse(text: &str) -> Result<Golden> {
+    let mut lines = text.lines();
+    let input = parse_tensor(&mut lines, "input")?;
+    let output = parse_tensor(&mut lines, "output")?;
+    Ok(Golden { input, output })
+}
+
+fn parse_tensor<'a, I: Iterator<Item = &'a str>>(lines: &mut I, expect: &str) -> Result<Tensor> {
+    let header = lines.next().context("missing golden header line")?;
+    let mut parts = header.split_whitespace();
+    let name = parts.next().context("empty header")?;
+    if name != expect {
+        bail!("expected '{}' section, found '{}'", expect, name);
+    }
+    let shape: Vec<usize> = parts
+        .map(|p| p.parse().context("bad dim"))
+        .collect::<Result<_>>()?;
+    let values = lines.next().context("missing golden values line")?;
+    let data: Vec<f32> = values
+        .split_whitespace()
+        .map(|v| v.parse::<f32>().context("bad value"))
+        .collect::<Result<_>>()?;
+    Tensor::new(shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let g = parse("input 2 2\n1 2 3 4\noutput 2\n0.5 -0.5\n").unwrap();
+        assert_eq!(g.input.shape(), &[2, 2]);
+        assert_eq!(g.output.data(), &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn wrong_section_rejected() {
+        assert!(parse("output 1\n1\ninput 1\n1\n").is_err());
+    }
+
+    #[test]
+    fn bad_counts_rejected() {
+        assert!(parse("input 2 2\n1 2 3\noutput 1\n1\n").is_err());
+    }
+}

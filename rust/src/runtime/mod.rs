@@ -1,0 +1,177 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! This is the only place the coordinator touches XLA. A [`PjrtRuntime`]
+//! owns one PJRT CPU client per process; [`Engine`]s are compiled
+//! executables for one (model, batch size) artifact; [`EngineSet`] groups
+//! the batch-size variants of one model so the dynamic batcher can pick the
+//! smallest compiled batch that fits.
+//!
+//! Python never runs here: the artifacts were produced once by
+//! `make artifacts` (see `python/compile/aot.py`), and HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos — see DESIGN.md).
+
+pub mod golden;
+pub mod tensor;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+pub use tensor::Tensor;
+
+/// Process-wide PJRT client wrapper.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Name of the underlying PJRT platform (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load_engine(&self, path: &Path, batch_size: usize) -> Result<Engine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Engine {
+            exe,
+            batch_size,
+            path: path.display().to_string(),
+        })
+    }
+}
+
+/// A compiled executable for one (model, batch size) artifact.
+pub struct Engine {
+    exe: xla::PjRtLoadedExecutable,
+    batch_size: usize,
+    path: String,
+}
+
+impl Engine {
+    /// The fixed batch size this engine was compiled for.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// Artifact path (for logs/metrics labels).
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Execute on a single input tensor, returning the single output.
+    ///
+    /// The artifact was lowered with `return_tuple=True`, so the root is a
+    /// 1-tuple which we unwrap here.
+    pub fn execute(&self, input: &Tensor) -> Result<Tensor> {
+        let lit = input.to_literal()?;
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing {}", self.path))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let inner = out.to_tuple1().context("unwrapping 1-tuple result")?;
+        Tensor::from_literal(&inner)
+    }
+}
+
+/// All compiled batch-size variants of one model.
+pub struct EngineSet {
+    name: String,
+    engines: BTreeMap<usize, Arc<Engine>>,
+}
+
+impl EngineSet {
+    /// Load every `model.b<N>.hlo.txt` in a model directory.
+    pub fn load(runtime: &PjrtRuntime, model_dir: &Path, name: &str) -> Result<Self> {
+        let mut engines = BTreeMap::new();
+        for entry in std::fs::read_dir(model_dir)
+            .with_context(|| format!("reading model dir {}", model_dir.display()))?
+        {
+            let path = entry?.path();
+            let fname = match path.file_name().and_then(|f| f.to_str()) {
+                Some(f) => f,
+                None => continue,
+            };
+            if let Some(bs) = parse_artifact_batch(fname) {
+                let engine = runtime.load_engine(&path, bs)?;
+                engines.insert(bs, Arc::new(engine));
+            }
+        }
+        if engines.is_empty() {
+            bail!("no model.b<N>.hlo.txt artifacts in {}", model_dir.display());
+        }
+        Ok(EngineSet { name: name.to_string(), engines })
+    }
+
+    /// Model name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Sorted list of compiled batch sizes.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.engines.keys().copied().collect()
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.engines.keys().last().unwrap()
+    }
+
+    /// Smallest compiled batch size >= `n`, or the max if `n` exceeds all
+    /// (caller splits oversized batches).
+    pub fn engine_for(&self, n: usize) -> Arc<Engine> {
+        for (&bs, engine) in &self.engines {
+            if bs >= n {
+                return Arc::clone(engine);
+            }
+        }
+        Arc::clone(self.engines.values().last().unwrap())
+    }
+
+    /// Engine for an exact batch size, if compiled.
+    pub fn engine_exact(&self, n: usize) -> Option<Arc<Engine>> {
+        self.engines.get(&n).cloned()
+    }
+}
+
+/// Parse "model.b8.hlo.txt" -> Some(8).
+pub fn parse_artifact_batch(fname: &str) -> Option<usize> {
+    let rest = fname.strip_prefix("model.b")?;
+    let rest = rest.strip_suffix(".hlo.txt")?;
+    rest.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_artifact_names() {
+        assert_eq!(parse_artifact_batch("model.b1.hlo.txt"), Some(1));
+        assert_eq!(parse_artifact_batch("model.b16.hlo.txt"), Some(16));
+        assert_eq!(parse_artifact_batch("config.yaml"), None);
+        assert_eq!(parse_artifact_batch("model.bX.hlo.txt"), None);
+        assert_eq!(parse_artifact_batch("golden.b1.txt"), None);
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal dense f32 tensor used on the request path.
+//!
+//! Requests carry raw little-endian f32 payloads plus a shape; this type is
+//! the bridge between the RPC wire format and XLA literals. Only f32 is
+//! needed — all three served models take and return f32 (see
+//! `python/compile/model.py`).
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!(
+                "shape {:?} implies {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Flat element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat data vector.
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Leading (batch) dimension, or 0 for rank-0.
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(0)
+    }
+
+    /// Elements per batch row.
+    pub fn row_len(&self) -> usize {
+        if self.shape.is_empty() {
+            0
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Slice out batch rows [start, start+count) as a new tensor.
+    pub fn slice_rows(&self, start: usize, count: usize) -> Result<Tensor> {
+        let b = self.batch();
+        if start + count > b {
+            bail!("row slice {}..{} out of batch {}", start, start + count, b);
+        }
+        let rl = self.row_len();
+        let mut shape = self.shape.clone();
+        shape[0] = count;
+        Ok(Tensor {
+            shape,
+            data: self.data[start * rl..(start + count) * rl].to_vec(),
+        })
+    }
+
+    /// Stack tensors along the batch axis, padding with zero rows up to
+    /// `target_batch`. All inputs must share trailing dims.
+    pub fn stack_padded(parts: &[Tensor], target_batch: usize) -> Result<Tensor> {
+        let first = parts.first().context("stack of zero tensors")?;
+        let trailing = &first.shape[1..];
+        let rl = first.row_len();
+        let total: usize = parts.iter().map(|t| t.batch()).sum();
+        if total > target_batch {
+            bail!("stack total {} exceeds target batch {}", total, target_batch);
+        }
+        let mut data = Vec::with_capacity(target_batch * rl);
+        for t in parts {
+            if &t.shape[1..] != trailing {
+                bail!(
+                    "mismatched trailing dims {:?} vs {:?}",
+                    &t.shape[1..],
+                    trailing
+                );
+            }
+            data.extend_from_slice(&t.data);
+        }
+        data.resize(target_batch * rl, 0.0);
+        let mut shape = first.shape.clone();
+        shape[0] = target_batch;
+        Ok(Tensor { shape, data })
+    }
+
+    /// Convert to an XLA literal (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .context("reshaping literal")?;
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape().context("literal array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal to f32 vec")?;
+        Tensor::new(dims, data)
+    }
+
+    /// Serialize as little-endian bytes (shape is carried separately).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize from little-endian bytes for a given shape.
+    pub fn from_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        if bytes.len() % 4 != 0 {
+            bail!("payload length {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Tensor::new(shape, data)
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_roundtrip() {
+        let t = Tensor::new(vec![4, 2], (0..8).map(|v| v as f32).collect()).unwrap();
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2.0, 3.0, 4.0, 5.0]);
+        assert!(t.slice_rows(3, 2).is_err());
+    }
+
+    #[test]
+    fn stack_pads_with_zeros() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2, 2], vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        let s = Tensor::stack_padded(&[a, b], 4).unwrap();
+        assert_eq!(s.shape(), &[4, 2]);
+        assert_eq!(s.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_dims() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        assert!(Tensor::stack_padded(&[a, b], 4).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.5, 3.25, 0.0]).unwrap();
+        let b = t.to_bytes();
+        let t2 = Tensor::from_bytes(vec![2, 2], &b).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn bad_payload_length_rejected() {
+        assert!(Tensor::from_bytes(vec![1], &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

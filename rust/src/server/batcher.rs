@@ -1,0 +1,385 @@
+//! Dynamic batching queue — Triton's "dynamic_batching" policy (§2.1).
+//!
+//! Requests land in a per-instance [`BatchQueue`]; the instance's executor
+//! pops *same-model runs*: it waits until either the accumulated rows for
+//! the model at the head of the queue reach the preferred batch size, or
+//! the head request has been queued for the model's max queue delay —
+//! whichever comes first — and then takes every queued request for that
+//! model (in arrival order) that fits the row budget.
+//!
+//! The queue is also where overload protection lands: pushes beyond
+//! `capacity` are rejected so the gateway can shed load with an
+//! `Overloaded` status instead of building unbounded latency (§2.2).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::rpc::codec::Status;
+use crate::runtime::Tensor;
+use crate::util::clock::{Clock, Nanos};
+
+/// Batching knobs for one model (from `config::ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Hold the head request at most this long while accumulating.
+    pub max_queue_delay: Duration,
+    /// Stop accumulating at this many rows.
+    pub preferred_rows: usize,
+    /// Hard cap on rows per popped batch — the model's largest compiled
+    /// engine batch (Triton's `max_batch_size`). Folding beyond it would
+    /// only chain engine calls serially while hiding per-request queue
+    /// time from the autoscaler trigger.
+    pub max_rows: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_queue_delay: Duration::from_millis(2),
+            preferred_rows: 8,
+            max_rows: 64,
+        }
+    }
+}
+
+/// Executor's reply to one queued request.
+#[derive(Debug)]
+pub enum ExecOutcome {
+    Ok {
+        output: Tensor,
+        queue_us: u32,
+        compute_us: u32,
+        batch_rows: u32,
+    },
+    Err {
+        status: Status,
+        message: String,
+    },
+}
+
+/// One queued request.
+pub struct Pending {
+    pub model: String,
+    pub input: Tensor,
+    pub enqueued: Nanos,
+    pub trace_id: u64,
+    pub reply: mpsc::Sender<ExecOutcome>,
+}
+
+impl Pending {
+    /// Rows this request contributes to a batch.
+    pub fn rows(&self) -> usize {
+        self.input.batch()
+    }
+}
+
+struct Inner {
+    queue: VecDeque<Pending>,
+    draining: bool,
+}
+
+/// Bounded, condvar-signalled batch queue.
+pub struct BatchQueue {
+    inner: Mutex<Inner>,
+    available: Condvar,
+    capacity: usize,
+}
+
+impl BatchQueue {
+    /// Queue holding at most `capacity` requests.
+    pub fn new(capacity: usize) -> Self {
+        BatchQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), draining: false }),
+            available: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue a request. Fails fast when full or draining.
+    pub fn push(&self, pending: Pending) -> Result<(), Pending> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.draining || inner.queue.len() >= self.capacity {
+            return Err(pending);
+        }
+        inner.queue.push_back(pending);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (requests).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Mark draining: pushes fail, pops continue until empty.
+    pub fn drain(&self) {
+        self.inner.lock().unwrap().draining = true;
+        self.available.notify_all();
+    }
+
+    /// True once draining and empty.
+    pub fn drained(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.draining && inner.queue.is_empty()
+    }
+
+    /// Pop one same-model batch according to `policy_for`.
+    ///
+    /// Blocks up to `idle_timeout` waiting for a first request; returns
+    /// `None` on timeout (the executor uses idle wakeups to refresh
+    /// utilization gauges) or when draining and empty.
+    ///
+    /// The policy's `max_rows` caps the batch at the largest compiled
+    /// engine batch. A single over-large request is returned alone (the
+    /// executor splits it across engine calls).
+    pub fn pop_batch<F>(
+        &self,
+        clock: &Clock,
+        policy_for: F,
+        idle_timeout: Duration,
+    ) -> Option<Vec<Pending>>
+    where
+        F: Fn(&str) -> BatchPolicy,
+    {
+        let mut inner = self.inner.lock().unwrap();
+
+        // Phase 1: wait for a head request.
+        let wait_start = std::time::Instant::now();
+        while inner.queue.is_empty() {
+            if inner.draining {
+                return None;
+            }
+            let remaining = idle_timeout.checked_sub(wait_start.elapsed())?;
+            let (guard, timeout) = self
+                .available
+                .wait_timeout(inner, remaining.min(Duration::from_millis(50)))
+                .unwrap();
+            inner = guard;
+            if timeout.timed_out() && wait_start.elapsed() >= idle_timeout {
+                if inner.queue.is_empty() {
+                    return None;
+                }
+            }
+        }
+
+        let model = inner.queue[0].model.clone();
+        let head_enqueued = inner.queue[0].enqueued;
+        let policy = policy_for(&model);
+        let max_rows = policy.max_rows.max(1);
+        let target_rows = policy.preferred_rows.min(max_rows).max(1);
+        let deadline = head_enqueued + policy.max_queue_delay.as_nanos() as Nanos;
+
+        // Phase 2: accumulate same-model rows until target or deadline.
+        loop {
+            let rows: usize = inner
+                .queue
+                .iter()
+                .filter(|p| p.model == model)
+                .map(|p| p.rows())
+                .sum();
+            let now = clock.now();
+            if rows >= target_rows || now >= deadline || inner.draining {
+                break;
+            }
+            // Convert the *clock-time* deadline into a real-time wait.
+            let clock_remaining = Duration::from_nanos(deadline - now);
+            let wait = clock_remaining.min(Duration::from_millis(20));
+            let (guard, _) = self.available.wait_timeout(inner, wait).unwrap();
+            inner = guard;
+            if inner.queue.is_empty() {
+                // Drained out from under us.
+                if inner.draining {
+                    return None;
+                }
+                continue;
+            }
+        }
+
+        // Phase 3: pop every same-model request that fits the row budget,
+        // in arrival order. An oversized head goes alone.
+        let mut batch = Vec::new();
+        let mut rows = 0usize;
+        let mut i = 0;
+        while i < inner.queue.len() {
+            if inner.queue[i].model != model {
+                i += 1;
+                continue;
+            }
+            let r = inner.queue[i].rows();
+            if batch.is_empty() && r > max_rows {
+                batch.push(inner.queue.remove(i).unwrap());
+                break;
+            }
+            if rows + r > max_rows {
+                break;
+            }
+            rows += r;
+            batch.push(inner.queue.remove(i).unwrap());
+        }
+        if batch.is_empty() {
+            return None;
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn pending(model: &str, rows: usize, clock: &Clock) -> (Pending, mpsc::Receiver<ExecOutcome>) {
+        let (tx, rx) = mpsc::channel();
+        let shape = vec![rows, 2];
+        (
+            Pending {
+                model: model.into(),
+                input: Tensor::zeros(shape),
+                enqueued: clock.now(),
+                trace_id: 0,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn policy(delay_ms: u64, rows: usize, max_rows: usize) -> impl Fn(&str) -> BatchPolicy {
+        move |_| BatchPolicy {
+            max_queue_delay: Duration::from_millis(delay_ms),
+            preferred_rows: rows,
+            max_rows,
+        }
+    }
+
+    #[test]
+    fn pops_immediately_at_preferred_rows() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        for _ in 0..4 {
+            let (p, _rx) = pending("m", 2, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let batch = q
+            .pop_batch(&clock, policy(1000, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|p| p.rows()).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let (p, _rx) = pending("m", 1, &clock);
+        q.push(p).map_err(|_| ()).unwrap();
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, policy(30, 8, 16), Duration::from_millis(500))
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        // must have waited ~the queue delay, not the idle timeout
+        assert!(t0.elapsed() < Duration::from_millis(300));
+    }
+
+    #[test]
+    fn same_model_runs_only() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let (pa, _r1) = pending("a", 1, &clock);
+        let (pb, _r2) = pending("b", 1, &clock);
+        let (pa2, _r3) = pending("a", 1, &clock);
+        q.push(pa).map_err(|_| ()).unwrap();
+        q.push(pb).map_err(|_| ()).unwrap();
+        q.push(pa2).map_err(|_| ()).unwrap();
+        let batch = q
+            .pop_batch(&clock, policy(5, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(batch.iter().all(|p| p.model == "a"));
+        assert_eq!(q.depth(), 1); // "b" stays
+    }
+
+    #[test]
+    fn row_budget_respected() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        for _ in 0..5 {
+            let (p, _rx) = pending("m", 4, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        let batch = q
+            .pop_batch(&clock, policy(5, 100, 10), Duration::from_millis(100))
+            .unwrap();
+        // 4+4 = 8 fits; adding the third (12 > 10) does not.
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_pops_alone() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let (p, _rx) = pending("m", 100, &clock);
+        q.push(p).map_err(|_| ()).unwrap();
+        let (p2, _rx2) = pending("m", 1, &clock);
+        q.push(p2).map_err(|_| ()).unwrap();
+        let batch = q
+            .pop_batch(&clock, policy(5, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].rows(), 100);
+    }
+
+    #[test]
+    fn capacity_rejects() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(2);
+        let (p1, _r1) = pending("m", 1, &clock);
+        let (p2, _r2) = pending("m", 1, &clock);
+        let (p3, _r3) = pending("m", 1, &clock);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        assert!(q.push(p3).is_err());
+    }
+
+    #[test]
+    fn drain_rejects_pushes_and_unblocks() {
+        let clock = Clock::real();
+        let q = Arc::new(BatchQueue::new(8));
+        q.drain();
+        let (p, _rx) = pending("m", 1, &clock);
+        assert!(q.push(p).is_err());
+        assert!(q
+            .pop_batch(&clock, policy(5, 8, 16), Duration::from_millis(50))
+            .is_none());
+        assert!(q.drained());
+    }
+
+    #[test]
+    fn idle_timeout_returns_none() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(8);
+        let t0 = std::time::Instant::now();
+        assert!(q
+            .pop_batch(&clock, policy(5, 8, 16), Duration::from_millis(40))
+            .is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn push_wakes_blocked_pop() {
+        let clock = Clock::real();
+        let q = Arc::new(BatchQueue::new(8));
+        let q2 = Arc::clone(&q);
+        let c2 = clock.clone();
+        let h = std::thread::spawn(move || {
+            q2.pop_batch(&c2, policy(1, 1, 16), Duration::from_secs(5))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (p, _rx) = pending("m", 1, &clock);
+        q.push(p).map_err(|_| ()).unwrap();
+        let batch = h.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+}

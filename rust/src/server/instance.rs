@@ -1,0 +1,752 @@
+//! One inference-server instance — a Triton pod bound to one (simulated)
+//! GPU.
+//!
+//! The executor is a single thread that pops dynamic batches from the
+//! instance's [`BatchQueue`] and runs them on the shared PJRT engines.
+//! Serializing execution per instance is the GPU model: one kernel stream,
+//! requests queue behind each other, and "GPU utilization" is the busy-time
+//! fraction — exactly the quantity Fig. 3 plots. The real compute happens
+//! on the CPU through XLA, so latency numbers are real end-to-end numbers.
+//!
+//! State machine: `Starting -> Ready -> Draining -> Stopped`. The gateway
+//! only routes to `Ready` instances; the orchestrator drives transitions.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::{ExecutionMode, ModelConfig, ServiceModelConfig};
+use crate::metrics::registry::{labels, Registry};
+use crate::rpc::codec::Status;
+use crate::runtime::Tensor;
+use crate::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
+use crate::server::repository::ModelRepository;
+use crate::util::clock::Clock;
+
+/// Instance lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Pod scheduled, container starting / model loading.
+    Starting = 0,
+    /// Serving traffic.
+    Ready = 1,
+    /// No new work accepted; queue draining.
+    Draining = 2,
+    /// Executor joined.
+    Stopped = 3,
+}
+
+impl InstanceState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => InstanceState::Starting,
+            1 => InstanceState::Ready,
+            2 => InstanceState::Draining,
+            _ => InstanceState::Stopped,
+        }
+    }
+}
+
+/// Utilization accounting: busy intervals over a sliding window.
+struct UtilWindow {
+    /// (end_clock_secs, busy_secs) per completed batch.
+    intervals: Vec<(f64, f64)>,
+    window: f64,
+}
+
+impl UtilWindow {
+    fn new(window: f64) -> Self {
+        UtilWindow { intervals: Vec::new(), window }
+    }
+
+    fn record(&mut self, end: f64, busy: f64) {
+        self.intervals.push((end, busy));
+        let horizon = end - self.window;
+        self.intervals.retain(|&(t, _)| t >= horizon);
+    }
+
+    fn utilization(&mut self, now: f64) -> f64 {
+        let horizon = now - self.window;
+        self.intervals.retain(|&(t, _)| t >= horizon);
+        let busy: f64 = self.intervals.iter().map(|&(_, b)| b).sum();
+        (busy / self.window).min(1.0)
+    }
+}
+
+/// One simulated GPU server.
+pub struct Instance {
+    /// Stable id, e.g. "triton-3".
+    pub id: String,
+    queue: Arc<BatchQueue>,
+    state: AtomicU8,
+    inflight: AtomicUsize,
+    repo: Arc<ModelRepository>,
+    clock: Clock,
+    util: Mutex<UtilWindow>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    // metrics handles
+    m_requests: Mutex<HashMap<String, crate::metrics::registry::Counter>>,
+    m_rows: crate::metrics::registry::Counter,
+    m_batches: crate::metrics::registry::Counter,
+    m_queue_hist: crate::metrics::registry::HistogramHandle,
+    m_compute_hist: crate::metrics::registry::HistogramHandle,
+    m_util: crate::metrics::registry::Gauge,
+    m_queue_latency: crate::metrics::registry::Gauge,
+    m_queue_depth: crate::metrics::registry::Gauge,
+    m_busy_total: crate::metrics::registry::Gauge,
+    registry: Registry,
+    policies: HashMap<String, BatchPolicy>,
+    exec_mode: ExecutionMode,
+    service_models: HashMap<String, ServiceModelConfig>,
+}
+
+impl Instance {
+    /// Create the instance (state `Starting`) and spawn its executor.
+    ///
+    /// `queue_capacity` is the overload-shedding bound; `util_window` the
+    /// utilization averaging window in clock seconds.
+    pub fn start(
+        id: &str,
+        repo: Arc<ModelRepository>,
+        models: &[ModelConfig],
+        clock: Clock,
+        registry: Registry,
+        queue_capacity: usize,
+        util_window: f64,
+    ) -> Arc<Self> {
+        Self::start_with_mode(
+            id,
+            repo,
+            models,
+            clock,
+            registry,
+            queue_capacity,
+            util_window,
+            ExecutionMode::Real,
+        )
+    }
+
+    /// [`Instance::start`] with an explicit execution mode (see
+    /// `config::ExecutionMode`): `Simulated` sleeps the model's calibrated
+    /// service time per batch instead of executing through PJRT.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_mode(
+        id: &str,
+        repo: Arc<ModelRepository>,
+        models: &[ModelConfig],
+        clock: Clock,
+        registry: Registry,
+        queue_capacity: usize,
+        util_window: f64,
+        exec_mode: ExecutionMode,
+    ) -> Arc<Self> {
+        let policies: HashMap<String, BatchPolicy> = models
+            .iter()
+            .map(|m| {
+                (
+                    m.name.clone(),
+                    BatchPolicy {
+                        max_queue_delay: m.max_queue_delay,
+                        preferred_rows: m.preferred_batch,
+                        ..BatchPolicy::default() // max_rows set per-pop from the repo
+                    },
+                )
+            })
+            .collect();
+        let service_models: HashMap<String, ServiceModelConfig> = models
+            .iter()
+            .map(|m| (m.name.clone(), m.service_model))
+            .collect();
+        let inst_labels = labels(&[("instance", id)]);
+        let instance = Arc::new(Instance {
+            id: id.to_string(),
+            queue: Arc::new(BatchQueue::new(queue_capacity)),
+            state: AtomicU8::new(InstanceState::Starting as u8),
+            inflight: AtomicUsize::new(0),
+            repo,
+            clock: clock.clone(),
+            util: Mutex::new(UtilWindow::new(util_window)),
+            handle: Mutex::new(None),
+            m_requests: Mutex::new(HashMap::new()),
+            m_rows: registry.counter("inference_rows_total", &inst_labels),
+            m_batches: registry.counter("inference_batches_total", &inst_labels),
+            m_queue_hist: registry.histogram("request_queue_seconds", &inst_labels),
+            m_compute_hist: registry.histogram("compute_seconds", &inst_labels),
+            m_util: registry.gauge("gpu_utilization", &inst_labels),
+            m_queue_latency: registry.gauge("queue_latency_seconds", &inst_labels),
+            m_queue_depth: registry.gauge("queue_depth", &inst_labels),
+            m_busy_total: registry.gauge("gpu_busy_seconds_total", &inst_labels),
+            registry,
+            policies,
+            exec_mode,
+            service_models,
+        });
+        let exec = Arc::clone(&instance);
+        let handle = std::thread::Builder::new()
+            .name(format!("exec-{id}"))
+            .spawn(move || exec.run())
+            .expect("spawning executor");
+        *instance.handle.lock().unwrap() = Some(handle);
+        instance
+    }
+
+    /// Current state.
+    pub fn state(&self) -> InstanceState {
+        InstanceState::from_u8(self.state.load(Ordering::SeqCst))
+    }
+
+    /// Mark Ready (orchestrator calls after the simulated pod start delay).
+    pub fn mark_ready(&self) {
+        self.state
+            .store(InstanceState::Ready as u8, Ordering::SeqCst);
+    }
+
+    /// Requests submitted but not yet answered.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Queue depth (requests waiting, not executing).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.depth()
+    }
+
+    /// Utilization over the sliding window, as of now.
+    pub fn utilization(&self) -> f64 {
+        self.util.lock().unwrap().utilization(self.clock.now_secs())
+    }
+
+    /// Submit a request; returns a receiver for the outcome. On rejection
+    /// the input tensor is handed back with the status so the caller can
+    /// retry another instance without cloning (the gateway hot path).
+    pub fn submit(
+        self: &Arc<Self>,
+        model: &str,
+        input: Tensor,
+        trace_id: u64,
+    ) -> Result<mpsc::Receiver<ExecOutcome>, (Status, Tensor)> {
+        if self.state() != InstanceState::Ready {
+            return Err((Status::Overloaded, input));
+        }
+        let entry = match self.repo.get(model) {
+            Some(e) => e,
+            None => return Err((Status::ModelNotFound, input)),
+        };
+        if entry.validate_input(input.shape()).is_err() {
+            return Err((Status::BadRequest, input));
+        }
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            model: model.to_string(),
+            input,
+            enqueued: self.clock.now(),
+            trace_id,
+            reply: tx,
+        };
+        match self.queue.push(pending) {
+            Ok(()) => {
+                self.inflight.fetch_add(1, Ordering::SeqCst);
+                Ok(rx)
+            }
+            Err(pending) => Err((Status::Overloaded, pending.input)),
+        }
+    }
+
+    /// Submit and block for the outcome (gateway connection threads).
+    pub fn submit_and_wait(
+        self: &Arc<Self>,
+        model: &str,
+        input: Tensor,
+        trace_id: u64,
+    ) -> ExecOutcome {
+        match self.submit(model, input, trace_id) {
+            Ok(rx) => rx.recv().unwrap_or(ExecOutcome::Err {
+                status: Status::Internal,
+                message: "executor dropped request".into(),
+            }),
+            Err((status, _input)) => ExecOutcome::Err {
+                status,
+                message: format!("instance {} cannot accept work", self.id),
+            },
+        }
+    }
+
+    /// Begin draining; queue rejects new work.
+    pub fn drain(&self) {
+        self.state
+            .store(InstanceState::Draining as u8, Ordering::SeqCst);
+        self.queue.drain();
+    }
+
+    /// Drain and join the executor.
+    pub fn stop(&self) {
+        self.drain();
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.state
+            .store(InstanceState::Stopped as u8, Ordering::SeqCst);
+    }
+
+    fn policy_for(&self, model: &str) -> BatchPolicy {
+        let mut policy = self.policies.get(model).cloned().unwrap_or_default();
+        // Cap batches at the model's largest compiled engine batch: folding
+        // further only chains engine calls serially (see BatchPolicy docs).
+        if let Some(entry) = self.repo.get(model) {
+            policy.max_rows = entry.max_batch();
+        }
+        policy
+    }
+
+    fn requests_counter(&self, model: &str) -> crate::metrics::registry::Counter {
+        let mut map = self.m_requests.lock().unwrap();
+        map.entry(model.to_string())
+            .or_insert_with(|| {
+                self.registry.counter(
+                    "inference_requests_total",
+                    &labels(&[("instance", &self.id), ("model", model)]),
+                )
+            })
+            .clone()
+    }
+
+    /// Executor loop.
+    fn run(self: Arc<Self>) {
+        let mut queue_lat_ewma = 0.0f64;
+        let mut last_refresh = self.clock.now_secs();
+        loop {
+            let batch = self.queue.pop_batch(
+                &self.clock,
+                |m| self.policy_for(m),
+                Duration::from_millis(100),
+            );
+            // Refresh gauges on every wakeup (busy or idle).
+            let now = self.clock.now_secs();
+            let dt = (now - last_refresh).max(0.0);
+            last_refresh = now;
+            // Idle decay of the queue-latency signal (tau = 5 clock secs).
+            queue_lat_ewma *= (-dt / 5.0).exp();
+            self.m_util
+                .set(self.util.lock().unwrap().utilization(now));
+            self.m_queue_latency.set(queue_lat_ewma);
+            self.m_queue_depth.set(self.queue.depth() as f64);
+
+            let Some(batch) = batch else {
+                if self.queue.drained() && self.state() != InstanceState::Ready {
+                    return; // drained + draining => stop
+                }
+                continue;
+            };
+
+            let model = batch[0].model.clone();
+            let entry = match self.repo.get(&model) {
+                Some(e) => e,
+                None => {
+                    for p in batch {
+                        let _ = p.reply.send(ExecOutcome::Err {
+                            status: Status::ModelNotFound,
+                            message: format!("model '{model}' unloaded"),
+                        });
+                        self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    continue;
+                }
+            };
+
+            let total_rows: usize = batch.iter().map(|p| p.rows()).sum();
+            let t_exec_start = self.clock.now();
+
+            // Stack requests, execute (splitting over engine calls if a
+            // single request exceeds the largest compiled batch).
+            let result = self.execute_rows(&entry, &batch, total_rows);
+            let t_exec_end = self.clock.now();
+            let compute_s = (t_exec_end - t_exec_start) as f64 / 1e9;
+            let compute_us = (compute_s * 1e6) as u32;
+
+            // Account busy time + metrics.
+            {
+                let mut util = self.util.lock().unwrap();
+                util.record(t_exec_end as f64 / 1e9, compute_s);
+            }
+            self.m_busy_total.add(compute_s);
+            self.m_batches.inc();
+            self.m_rows.add(total_rows as u64);
+            self.m_compute_hist.observe(compute_s);
+            self.requests_counter(&model).add(batch.len() as u64);
+
+            // Respond per request.
+            match result {
+                Ok(outputs) => {
+                    for (p, output) in batch.into_iter().zip(outputs) {
+                        let queue_s =
+                            (t_exec_start.saturating_sub(p.enqueued)) as f64 / 1e9;
+                        self.m_queue_hist.observe(queue_s);
+                        // EWMA with alpha=0.2 drives the autoscaler signal.
+                        queue_lat_ewma = 0.8 * queue_lat_ewma + 0.2 * queue_s;
+                        let _ = p.reply.send(ExecOutcome::Ok {
+                            output,
+                            queue_us: (queue_s * 1e6) as u32,
+                            compute_us,
+                            batch_rows: total_rows as u32,
+                        });
+                        self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    self.m_queue_latency.set(queue_lat_ewma);
+                }
+                Err(e) => {
+                    for p in batch {
+                        let _ = p.reply.send(ExecOutcome::Err {
+                            status: Status::Internal,
+                            message: e.to_string(),
+                        });
+                        self.inflight.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stack `batch` and run it, chunking by the largest compiled batch.
+    /// Returns one output tensor per request, in order.
+    fn execute_rows(
+        &self,
+        entry: &crate::server::repository::ModelEntry,
+        batch: &[Pending],
+        total_rows: usize,
+    ) -> anyhow::Result<Vec<Tensor>> {
+        if self.exec_mode == ExecutionMode::Simulated {
+            return self.execute_simulated(entry, batch, total_rows);
+        }
+        let max_engine = entry.max_batch();
+        let engines = entry.engines.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{}' was loaded metadata-only; real execution unavailable",
+                entry.name
+            )
+        })?;
+
+        // Fast path — a single request that fits one engine call (the
+        // common case at low batch pressure): one pad, one execute, one
+        // slice, instead of the flatten/chunk/regroup pipeline below
+        // (saves 4 full tensor copies per request; see EXPERIMENTS §Perf).
+        if batch.len() == 1 && total_rows <= max_engine {
+            let engine = engines.engine_for(total_rows);
+            let eb = engine.batch_size();
+            let out = if total_rows == eb {
+                engine.execute(&batch[0].input)?
+            } else {
+                let padded =
+                    Tensor::stack_padded(std::slice::from_ref(&batch[0].input), eb)?;
+                engine.execute(&padded)?.slice_rows(0, total_rows)?
+            };
+            return Ok(vec![out]);
+        }
+
+        let inputs: Vec<Tensor> = batch.iter().map(|p| p.input.clone()).collect();
+
+        // Flatten all rows into one tensor, then chunk.
+        let flat = Tensor::stack_padded(&inputs, total_rows)?;
+        let mut out_rows: Vec<Tensor> = Vec::new();
+        let mut done = 0usize;
+        while done < total_rows {
+            let n = (total_rows - done).min(max_engine);
+            let chunk = flat.slice_rows(done, n)?;
+            let engine = engines.engine_for(n);
+            let eb = engine.batch_size();
+            let padded = Tensor::stack_padded(&[chunk], eb)?;
+            let out = engine.execute(&padded)?;
+            out_rows.push(out.slice_rows(0, n)?);
+            done += n;
+        }
+        let all_out = Tensor::stack_padded(&out_rows, total_rows)?;
+
+        // Split back per request.
+        let mut outputs = Vec::with_capacity(batch.len());
+        let mut offset = 0usize;
+        for p in batch {
+            let r = p.rows();
+            outputs.push(all_out.slice_rows(offset, r)?);
+            offset += r;
+        }
+        Ok(outputs)
+    }
+
+    /// Simulated-GPU execution: sleep the calibrated service time of the
+    /// batch (in clock time, so time dilation applies) and return zeroed
+    /// outputs of the correct shape. The batch is costed exactly like the
+    /// real path — chunked by the largest engine batch, each chunk padded
+    /// up to the engine size it would have run on.
+    fn execute_simulated(
+        &self,
+        entry: &crate::server::repository::ModelEntry,
+        batch: &[Pending],
+        total_rows: usize,
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let sm = self
+            .service_models
+            .get(&entry.name)
+            .copied()
+            .unwrap_or_default();
+        let max_engine = entry.max_batch();
+        let mut service = 0.0f64;
+        let mut done = 0usize;
+        while done < total_rows {
+            let n = (total_rows - done).min(max_engine);
+            // The engine executes the smallest compiled batch >= n.
+            let padded = entry
+                .batch_sizes
+                .iter()
+                .copied()
+                .find(|&b| b >= n)
+                .unwrap_or(max_engine);
+            service += sm.service_secs(padded);
+            done += n;
+        }
+        self.clock.sleep(Duration::from_secs_f64(service));
+        Ok(batch
+            .iter()
+            .map(|p| Tensor::zeros(vec![p.rows(), entry.output_dim]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::PjrtRuntime;
+    use once_cell::sync::Lazy;
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        let rt = PjrtRuntime::cpu().unwrap();
+        Arc::new(
+            ModelRepository::load(
+                &rt,
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
+    fn test_instance(id: &str) -> Arc<Instance> {
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(2),
+            preferred_batch: 8,
+            ..ModelConfig::default()
+        }];
+        let inst = Instance::start(
+            id,
+            Arc::clone(&REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    fn cnn_input(rows: usize) -> Tensor {
+        Tensor::zeros(vec![rows, 16, 16, 3])
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let inst = test_instance("t0");
+        let out = inst.submit_and_wait("icecube_cnn", cnn_input(1), 0);
+        match out {
+            ExecOutcome::Ok { output, batch_rows, .. } => {
+                assert_eq!(output.shape(), &[1, 3]);
+                assert!(batch_rows >= 1);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let inst = test_instance("t1");
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            rxs.push(inst.submit("icecube_cnn", cnn_input(1), 0).unwrap());
+        }
+        let mut max_batch = 0;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                ExecOutcome::Ok { batch_rows, output, .. } => {
+                    assert_eq!(output.shape(), &[1, 3]);
+                    max_batch = max_batch.max(batch_rows);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // dynamic batching must have folded at least two requests together
+        assert!(max_batch >= 2, "no batching observed (max {max_batch})");
+        inst.stop();
+    }
+
+    #[test]
+    fn oversized_request_split_across_engines() {
+        let inst = test_instance("t2");
+        // 40 rows > max compiled batch (16): executor must chunk.
+        let out = inst.submit_and_wait("icecube_cnn", cnn_input(40), 0);
+        match out {
+            ExecOutcome::Ok { output, .. } => assert_eq!(output.shape(), &[40, 3]),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let inst = test_instance("t3");
+        match inst.submit_and_wait("nope", cnn_input(1), 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::ModelNotFound),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn bad_shape_rejected() {
+        let inst = test_instance("t4");
+        let bad = Tensor::zeros(vec![1, 8, 8, 3]);
+        match inst.submit_and_wait("icecube_cnn", bad, 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::BadRequest),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn starting_instance_rejects() {
+        let models = vec![ModelConfig::default()];
+        let inst = Instance::start(
+            "t5",
+            Arc::clone(&REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+        );
+        // not marked ready
+        assert_eq!(inst.state(), InstanceState::Starting);
+        assert!(inst.submit("icecube_cnn", cnn_input(1), 0).is_err());
+        inst.stop();
+    }
+
+    #[test]
+    fn utilization_rises_under_load() {
+        let inst = test_instance("t6");
+        for _ in 0..20 {
+            let _ = inst.submit_and_wait("icecube_cnn", cnn_input(8), 0);
+        }
+        let util = inst.utilization();
+        assert!(util > 0.0, "utilization {util}");
+        inst.stop();
+    }
+
+    #[test]
+    fn simulated_mode_sleeps_service_time() {
+        use crate::config::{ExecutionMode, ServiceModelConfig};
+        // Metadata-only repository: no PJRT compilation at all.
+        let repo = Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        );
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(20),
+                per_row: Duration::from_millis(1),
+            },
+        }];
+        let inst = Instance::start_with_mode(
+            "sim0",
+            repo,
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        let t0 = std::time::Instant::now();
+        match inst.submit_and_wait("icecube_cnn", cnn_input(4), 0) {
+            ExecOutcome::Ok { output, compute_us, .. } => {
+                assert_eq!(output.shape(), &[4, 3]);
+                assert!(output.data().iter().all(|&v| v == 0.0));
+                // padded to engine batch 4: 20ms + 4*1ms = 24ms
+                assert!(compute_us >= 20_000, "compute {compute_us}us");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        inst.stop();
+    }
+
+    #[test]
+    fn simulated_mode_respects_time_dilation() {
+        use crate::config::{ExecutionMode, ServiceModelConfig};
+        let repo = Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        );
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(200),
+                per_row: Duration::from_millis(0),
+            },
+        }];
+        // 20x dilation: the 200ms (clock) service takes ~10ms real.
+        let inst = Instance::start_with_mode(
+            "sim1",
+            repo,
+            &models,
+            Clock::scaled(20.0),
+            Registry::new(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        let t0 = std::time::Instant::now();
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Ok { compute_us, .. } => {
+                // compute is measured in clock time: ~200ms
+                assert!(compute_us >= 150_000, "compute {compute_us}us");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(150), "took {:?}", t0.elapsed());
+        inst.stop();
+    }
+
+    #[test]
+    fn stop_drains_and_joins() {
+        let inst = test_instance("t7");
+        let rx = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
+        inst.stop();
+        // queued request either served or rejected, never lost
+        assert!(rx.recv().is_ok());
+        assert_eq!(inst.state(), InstanceState::Stopped);
+        assert!(inst.submit("icecube_cnn", cnn_input(1), 0).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Inference server — the NVIDIA Triton analogue (§2.1).
+//!
+//! * [`repository`] — the model repository: scans `artifacts/`, parses each
+//!   model's `config.yaml`, and compiles every batch-size variant through
+//!   the PJRT runtime (CVMFS/NFS/PVC in the paper; a directory here).
+//! * [`batcher`] — dynamic batching: requests queue per instance and are
+//!   folded into the largest batch available within the configured queue
+//!   delay, padded to the nearest compiled batch size.
+//! * [`instance`] — one simulated GPU server (a Triton pod): a serialized
+//!   executor thread with busy-time (utilization) accounting and queue
+//!   latency metrics. The gateway load-balances across Ready instances and
+//!   the autoscaler starts/stops them through the orchestrator.
+
+pub mod batcher;
+pub mod instance;
+pub mod repository;
+
+pub use instance::{Instance, InstanceState};
+pub use repository::{ModelEntry, ModelRepository};

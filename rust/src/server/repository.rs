@@ -1,0 +1,339 @@
+//! Model repository: the directory layout `python/compile/aot.py` emits,
+//! loaded and compiled through the PJRT runtime.
+//!
+//! Layout (a Triton model repository, one version per directory):
+//!
+//! ```text
+//!     artifacts/
+//!       particlenet/
+//!         config.yaml
+//!         model.b1.hlo.txt ... model.b16.hlo.txt
+//!         golden.b1.txt ...
+//! ```
+//!
+//! All instances share one `ModelRepository` (engines are `Arc`ed and PJRT
+//! executables are thread-safe); what is *per instance* is the queue and
+//! the serialized executor, not the compiled code — same as Triton pods
+//! sharing a model store.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::yaml;
+use crate::runtime::{EngineSet, PjrtRuntime};
+
+/// Parsed per-model metadata + compiled engines.
+pub struct ModelEntry {
+    pub name: String,
+    /// Per-sample input shape (without batch dim).
+    pub input_shape: Vec<usize>,
+    /// Output width (logits).
+    pub output_dim: usize,
+    /// Declared parameter count (informational).
+    pub parameters: u64,
+    /// Batch-size variants declared in `config.yaml` (cross-checked
+    /// against compiled artifacts when engines are loaded).
+    pub batch_sizes: Vec<usize>,
+    /// Compiled batch-size variants. `None` when the repository was
+    /// loaded metadata-only (`ExecutionMode::Simulated` deployments
+    /// never execute, so compiling every artifact would only slow
+    /// boot — exactly like a Triton pod that never loads a model it
+    /// does not serve).
+    pub engines: Option<EngineSet>,
+}
+
+impl ModelEntry {
+    /// Largest compiled/declared batch.
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().expect("validated non-empty")
+    }
+
+    /// Validate a request tensor shape against the model contract:
+    /// (b, *input_shape) with b >= 1.
+    pub fn validate_input(&self, shape: &[usize]) -> Result<()> {
+        if shape.len() != self.input_shape.len() + 1 {
+            bail!(
+                "model '{}' expects rank {} input (batch + {:?}), got {:?}",
+                self.name,
+                self.input_shape.len() + 1,
+                self.input_shape,
+                shape
+            );
+        }
+        if shape[0] == 0 {
+            bail!("empty batch");
+        }
+        if shape[1..] != self.input_shape[..] {
+            bail!(
+                "model '{}' expects per-sample shape {:?}, got {:?}",
+                self.name,
+                self.input_shape,
+                &shape[1..]
+            );
+        }
+        Ok(())
+    }
+}
+
+/// All models the deployment serves.
+///
+/// The model map is behind an `RwLock` so models can be loaded/unloaded
+/// at runtime (Triton's explicit model-control mode): `get` on the hot
+/// path takes a read lock; `load_model_dynamic`/`unload` mutate.
+pub struct ModelRepository {
+    root: PathBuf,
+    models: std::sync::RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl std::fmt::Debug for ModelRepository {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRepository")
+            .field("root", &self.root)
+            .field("models", &self.names())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod hot_load_tests {
+    use super::*;
+
+    #[test]
+    fn hot_load_and_unload() {
+        let repo = ModelRepository::load_metadata(
+            Path::new("artifacts"),
+            &["icecube_cnn".into()],
+        )
+        .unwrap();
+        assert!(repo.get("particlenet").is_none());
+        // hot-load a second model (metadata-only)
+        let entry = repo.load_model_dynamic(None, "particlenet").unwrap();
+        assert_eq!(entry.name, "particlenet");
+        assert!(repo.get("particlenet").is_some());
+        assert_eq!(repo.names().len(), 2);
+        // in-flight Arc survives unload
+        let held = repo.get("particlenet").unwrap();
+        assert!(repo.unload("particlenet"));
+        assert!(repo.get("particlenet").is_none());
+        assert_eq!(held.max_batch(), 16);
+        // unload of a missing model reports false
+        assert!(!repo.unload("particlenet"));
+    }
+
+    #[test]
+    fn hot_load_unknown_model_errors() {
+        let repo = ModelRepository::load_metadata(
+            Path::new("artifacts"),
+            &["icecube_cnn".into()],
+        )
+        .unwrap();
+        assert!(repo.load_model_dynamic(None, "not_a_model").is_err());
+    }
+}
+
+impl ModelRepository {
+    /// Load `names` from the repository at `root`, compiling all artifacts.
+    pub fn load(runtime: &PjrtRuntime, root: &Path, names: &[String]) -> Result<Self> {
+        Self::load_inner(Some(runtime), root, names)
+    }
+
+    /// Load metadata only (no PJRT compilation) — for simulated-execution
+    /// deployments and config validation tooling.
+    pub fn load_metadata(root: &Path, names: &[String]) -> Result<Self> {
+        Self::load_inner(None, root, names)
+    }
+
+    fn load_inner(runtime: Option<&PjrtRuntime>, root: &Path, names: &[String]) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for name in names {
+            let entry = Self::load_model(runtime, root, name)
+                .with_context(|| format!("loading model '{name}'"))?;
+            models.insert(name.clone(), Arc::new(entry));
+        }
+        if models.is_empty() {
+            bail!("model repository would be empty");
+        }
+        Ok(ModelRepository {
+            root: root.to_path_buf(),
+            models: std::sync::RwLock::new(models),
+        })
+    }
+
+    /// Hot-load a model from the repository directory at runtime
+    /// (Triton's explicit `load` model-control call). Pass a runtime to
+    /// compile engines, or `None` for metadata-only. Replaces any
+    /// previously loaded entry of the same name (in-flight requests keep
+    /// their `Arc` to the old entry).
+    pub fn load_model_dynamic(
+        &self,
+        runtime: Option<&PjrtRuntime>,
+        name: &str,
+    ) -> Result<Arc<ModelEntry>> {
+        let entry = Arc::new(
+            Self::load_model(runtime, &self.root, name)
+                .with_context(|| format!("hot-loading model '{name}'"))?,
+        );
+        self.models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Hot-unload a model (Triton's `unload`). Requests for it get
+    /// `ModelNotFound` from then on; in-flight batches finish on their
+    /// existing `Arc`. Returns true if the model was loaded.
+    pub fn unload(&self, name: &str) -> bool {
+        self.models.write().unwrap().remove(name).is_some()
+    }
+
+    fn load_model(runtime: Option<&PjrtRuntime>, root: &Path, name: &str) -> Result<ModelEntry> {
+        let dir = root.join(name);
+        if !dir.is_dir() {
+            bail!(
+                "no model directory {} (run `make artifacts`?)",
+                dir.display()
+            );
+        }
+        let cfg_text = std::fs::read_to_string(dir.join("config.yaml"))
+            .with_context(|| format!("reading {}/config.yaml", dir.display()))?;
+        let cfg = yaml::parse(&cfg_text).context("parsing model config.yaml")?;
+
+        let declared = cfg
+            .get("name")
+            .and_then(|v| v.as_str())
+            .context("model config missing 'name'")?;
+        if declared != name {
+            bail!("config.yaml declares name '{declared}' but directory is '{name}'");
+        }
+        let input_shape: Vec<usize> = cfg
+            .get_path("input.dims")
+            .and_then(|v| v.as_seq())
+            .context("model config missing input.dims")?
+            .iter()
+            .map(|d| d.as_i64().map(|x| x as usize).context("bad dim"))
+            .collect::<Result<_>>()?;
+        let output_dim = cfg
+            .get_path("output.dims")
+            .and_then(|v| v.as_seq())
+            .and_then(|s| s.first())
+            .and_then(|v| v.as_i64())
+            .context("model config missing output.dims")? as usize;
+        let parameters = cfg
+            .get("parameters")
+            .and_then(|v| v.as_i64())
+            .unwrap_or(0) as u64;
+
+        let batch_sizes: Vec<usize> = cfg
+            .get("batch_sizes")
+            .and_then(|v| v.as_seq())
+            .context("model config missing batch_sizes")?
+            .iter()
+            .map(|v| v.as_i64().map(|x| x as usize).context("bad batch size"))
+            .collect::<Result<_>>()?;
+        if batch_sizes.is_empty() || batch_sizes.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("config.yaml batch_sizes must be non-empty and strictly increasing");
+        }
+
+        let engines = match runtime {
+            None => None,
+            Some(rt) => {
+                let engines = EngineSet::load(rt, &dir, name)?;
+                // Cross-check declared batch sizes against compiled artifacts.
+                let actual = engines.batch_sizes();
+                if batch_sizes != actual {
+                    bail!(
+                        "config.yaml batch_sizes {:?} != compiled artifacts {:?}",
+                        batch_sizes,
+                        actual
+                    );
+                }
+                Some(engines)
+            }
+        };
+
+        Ok(ModelEntry {
+            name: name.to_string(),
+            input_shape,
+            output_dim,
+            parameters,
+            batch_sizes,
+            engines,
+        })
+    }
+
+    /// Look up a model.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Served model names.
+    pub fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Repository root path.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from("artifacts")
+    }
+
+    #[test]
+    fn loads_particlenet() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let repo =
+            ModelRepository::load(&rt, &artifacts_root(), &["particlenet".into()]).unwrap();
+        let m = repo.get("particlenet").unwrap();
+        assert_eq!(m.input_shape, vec![64, 7]);
+        assert_eq!(m.output_dim, 2);
+        assert_eq!(m.engines.as_ref().unwrap().batch_sizes(), vec![1, 2, 4, 8, 16]);
+        assert!(m.parameters > 10_000);
+        assert!(repo.get("nope").is_none());
+    }
+
+    #[test]
+    fn validate_input_shapes() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let repo =
+            ModelRepository::load(&rt, &artifacts_root(), &["icecube_cnn".into()]).unwrap();
+        let m = repo.get("icecube_cnn").unwrap();
+        assert!(m.validate_input(&[4, 16, 16, 3]).is_ok());
+        assert!(m.validate_input(&[0, 16, 16, 3]).is_err()); // empty batch
+        assert!(m.validate_input(&[4, 16, 16]).is_err()); // wrong rank
+        assert!(m.validate_input(&[4, 8, 16, 3]).is_err()); // wrong dims
+    }
+
+    #[test]
+    fn metadata_only_load_skips_compilation() {
+        let repo = ModelRepository::load_metadata(
+            &artifacts_root(),
+            &["particlenet".into(), "cms_transformer".into()],
+        )
+        .unwrap();
+        let m = repo.get("particlenet").unwrap();
+        assert!(m.engines.is_none());
+        assert_eq!(m.batch_sizes, vec![1, 2, 4, 8, 16]);
+        assert_eq!(m.max_batch(), 16);
+        assert_eq!(m.output_dim, 2);
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        let err = ModelRepository::load(&rt, &artifacts_root(), &["missing_model".into()])
+            .unwrap_err();
+        assert!(err.to_string().contains("missing_model"));
+    }
+}

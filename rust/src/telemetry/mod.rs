@@ -1,0 +1,277 @@
+//! Span tracing — the OpenTelemetry/Tempo analogue (§2.3).
+//!
+//! The paper uses tracing for "a more detailed analysis of inference
+//! request flows and performance bottlenecks". Here a [`Tracer`] collects
+//! [`Span`]s (named, timed segments tied to a trace id) into a bounded
+//! in-memory buffer; [`TraceView`] reassembles a request's spans into the
+//! per-source latency breakdown (client -> gateway -> queue -> compute)
+//! that the §2.3 "breakdown of total request latency by source" metric
+//! reports.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+
+use crate::util::clock::Clock;
+
+/// One finished span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub trace_id: u64,
+    pub name: String,
+    /// Clock-seconds start/end.
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Span {
+    /// Span duration in seconds.
+    pub fn duration(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+}
+
+/// In-flight span guard: records the span on drop (RAII).
+pub struct SpanGuard {
+    tracer: Tracer,
+    trace_id: u64,
+    name: String,
+    start: f64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = self.tracer.clock.now_secs();
+        self.tracer.record(Span {
+            trace_id: self.trace_id,
+            name: std::mem::take(&mut self.name),
+            start: self.start,
+            end,
+        });
+    }
+}
+
+#[derive(Default)]
+struct Buffer {
+    spans: VecDeque<Span>,
+}
+
+/// Cheap-to-clone tracer handle.
+#[derive(Clone)]
+pub struct Tracer {
+    buffer: Arc<Mutex<Buffer>>,
+    clock: Clock,
+    capacity: usize,
+    enabled: bool,
+    next_trace: Arc<AtomicU64>,
+}
+
+impl Tracer {
+    /// Tracer retaining up to `capacity` spans (ring semantics).
+    pub fn new(clock: Clock, capacity: usize, enabled: bool) -> Self {
+        Tracer {
+            buffer: Arc::new(Mutex::new(Buffer::default())),
+            clock,
+            capacity,
+            enabled,
+            next_trace: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    /// Disabled tracer (all ops are no-ops).
+    pub fn disabled() -> Self {
+        Tracer::new(Clock::real(), 0, false)
+    }
+
+    /// Whether spans are being recorded.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Allocate a fresh trace id.
+    pub fn new_trace(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Start a span; it records itself when the guard drops.
+    pub fn span(&self, trace_id: u64, name: &str) -> Option<SpanGuard> {
+        if !self.enabled || trace_id == 0 {
+            return None;
+        }
+        Some(SpanGuard {
+            tracer: self.clone(),
+            trace_id,
+            name: name.to_string(),
+            start: self.clock.now_secs(),
+        })
+    }
+
+    /// Record a pre-built span (for spans whose timing came from
+    /// elsewhere, e.g. server-reported queue/compute micros).
+    pub fn record(&self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        let mut buf = self.buffer.lock().unwrap();
+        buf.spans.push_back(span);
+        while buf.spans.len() > self.capacity {
+            buf.spans.pop_front();
+        }
+    }
+
+    /// All spans of one trace, ordered by start time.
+    pub fn trace(&self, trace_id: u64) -> TraceView {
+        let buf = self.buffer.lock().unwrap();
+        let mut spans: Vec<Span> = buf
+            .spans
+            .iter()
+            .filter(|s| s.trace_id == trace_id)
+            .cloned()
+            .collect();
+        spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        TraceView { spans }
+    }
+
+    /// Total spans currently retained.
+    pub fn len(&self) -> usize {
+        self.buffer.lock().unwrap().spans.len()
+    }
+
+    /// True if no spans retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate mean duration per span name across all retained spans —
+    /// the "latency by source" table.
+    pub fn breakdown(&self) -> Vec<(String, f64, usize)> {
+        let buf = self.buffer.lock().unwrap();
+        let mut agg: HashMap<String, (f64, usize)> = HashMap::new();
+        for s in &buf.spans {
+            let e = agg.entry(s.name.clone()).or_insert((0.0, 0));
+            e.0 += s.duration();
+            e.1 += 1;
+        }
+        let mut rows: Vec<(String, f64, usize)> = agg
+            .into_iter()
+            .map(|(name, (sum, n))| (name, sum / n as f64, n))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+/// The spans of one trace.
+pub struct TraceView {
+    pub spans: Vec<Span>,
+}
+
+impl TraceView {
+    /// Sum of span durations by name.
+    pub fn duration_of(&self, name: &str) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| s.duration())
+            .sum()
+    }
+
+    /// End-to-end duration (first start to last end).
+    pub fn total(&self) -> f64 {
+        let start = self.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+        let end = self.spans.iter().map(|s| s.end).fold(f64::NEG_INFINITY, f64::max);
+        if self.spans.is_empty() {
+            0.0
+        } else {
+            end - start
+        }
+    }
+
+    /// Render a flame-ish text view.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.spans.is_empty() {
+            return "(no spans)\n".into();
+        }
+        let t0 = self.spans[0].start;
+        for s in &self.spans {
+            out.push_str(&format!(
+                "{:>9.3}ms +{:>9.3}ms  {}\n",
+                (s.start - t0) * 1e3,
+                s.duration() * 1e3,
+                s.name
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn span_guard_records() {
+        let clock = Clock::simulated();
+        let tracer = Tracer::new(clock.clone(), 100, true);
+        let tid = tracer.new_trace();
+        {
+            let _g = tracer.span(tid, "work");
+            clock.advance(Duration::from_millis(50));
+        }
+        let view = tracer.trace(tid);
+        assert_eq!(view.spans.len(), 1);
+        assert!((view.duration_of("work") - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disabled_tracer_is_noop() {
+        let tracer = Tracer::disabled();
+        let tid = tracer.new_trace();
+        assert!(tracer.span(tid, "x").is_none());
+        tracer.record(Span { trace_id: tid, name: "y".into(), start: 0.0, end: 1.0 });
+        assert!(tracer.is_empty());
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let tracer = Tracer::new(Clock::simulated(), 5, true);
+        for i in 0..20 {
+            tracer.record(Span { trace_id: 1, name: format!("s{i}"), start: 0.0, end: 1.0 });
+        }
+        assert_eq!(tracer.len(), 5);
+    }
+
+    #[test]
+    fn trace_view_ordering_and_total() {
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        tracer.record(Span { trace_id: 1, name: "compute".into(), start: 2.0, end: 5.0 });
+        tracer.record(Span { trace_id: 1, name: "queue".into(), start: 0.0, end: 2.0 });
+        tracer.record(Span { trace_id: 2, name: "other".into(), start: 0.0, end: 9.0 });
+        let v = tracer.trace(1);
+        assert_eq!(v.spans[0].name, "queue");
+        assert_eq!(v.total(), 5.0);
+        assert!(v.render().contains("compute"));
+    }
+
+    #[test]
+    fn breakdown_aggregates_by_name() {
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        for i in 0..4 {
+            tracer.record(Span { trace_id: i, name: "queue".into(), start: 0.0, end: 1.0 });
+            tracer.record(Span { trace_id: i, name: "compute".into(), start: 1.0, end: 4.0 });
+        }
+        let rows = tracer.breakdown();
+        assert_eq!(rows[0].0, "compute");
+        assert_eq!(rows[0].2, 4);
+        assert!((rows[0].1 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_trace_id_not_recorded() {
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        assert!(tracer.span(0, "x").is_none());
+    }
+}

@@ -1,0 +1,254 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! [`Bencher`] runs warmup + timed iterations of a closure and reports
+//! mean/p50/p99 wall time; [`Table`] renders aligned result tables matching
+//! the paper's figures; [`Csv`] writes raw series for offline plotting.
+//! All benches under `rust/benches/` are `harness = false` binaries built
+//! on these.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Timed micro/meso-benchmark runner.
+pub struct Bencher {
+    warmup: usize,
+    iters: usize,
+}
+
+/// One benchmark's timing results (seconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Bencher {
+    /// Harness with `warmup` untimed and `iters` timed iterations.
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters > 0);
+        Bencher { warmup, iters }
+    }
+
+    /// Run `f` and collect timings.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            s.observe(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: s.mean(),
+            p50_s: s.quantile(0.5),
+            p99_s: s.quantile(0.99),
+            min_s: s.min(),
+            max_s: s.max(),
+        }
+    }
+}
+
+impl BenchResult {
+    /// One formatted report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  mean {:>10}  p50 {:>10}  p99 {:>10}",
+            self.name,
+            self.iters,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p99_s),
+        )
+    }
+}
+
+/// Human duration formatting (ns/us/ms/s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Aligned text table for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append one row (must match header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for i in 0..ncol {
+                let _ = write!(out, "{:<w$}  ", cells[i], w = widths[i]);
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * ncol;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// CSV series writer for figure regeneration.
+pub struct Csv {
+    buf: String,
+}
+
+impl Csv {
+    /// CSV with a header row.
+    pub fn new(headers: &[&str]) -> Self {
+        Csv { buf: format!("{}\n", headers.join(",")) }
+    }
+
+    /// Append one row of cells.
+    pub fn row(&mut self, cells: &[String]) {
+        self.buf.push_str(&cells.join(","));
+        self.buf.push('\n');
+    }
+
+    /// Write to a file under `bench_results/`.
+    pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("bench_results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        std::fs::write(&path, &self.buf)?;
+        Ok(path)
+    }
+
+    /// Raw CSV contents.
+    pub fn contents(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Render an ASCII sparkline chart of a series (Grafana stand-in for
+/// terminal output in examples/benches).
+pub fn ascii_chart(title: &str, series: &[(f64, f64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return format!("{title}\n(empty series)\n");
+    }
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(_, y) in series {
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let xmin = series.first().unwrap().0;
+    let xmax = series.last().unwrap().0.max(xmin + 1e-9);
+    let mut grid = vec![vec![b' '; width]; height];
+    for &(x, y) in series {
+        let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+        let row = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - row][col.min(width - 1)] = b'*';
+    }
+    let mut out = format!("{title}  [y: {ymin:.2} .. {ymax:.2}]\n");
+    for line in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&line).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_times_work() {
+        let b = Bencher::new(2, 10);
+        let r = b.run("sleep", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(r.mean_s >= 0.001, "mean {}", r.mean_s);
+        assert_eq!(r.iters, 10);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("us"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with("s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("longer-name"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_accumulates() {
+        let mut c = Csv::new(&["t", "v"]);
+        c.row(&["0".into(), "1.5".into()]);
+        assert_eq!(c.contents(), "t,v\n0,1.5\n");
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let series: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64).sin())).collect();
+        let s = ascii_chart("sine", &series, 40, 8);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() == 10);
+    }
+}

@@ -1,0 +1,203 @@
+//! Clock abstraction: real, scaled, or simulated time.
+//!
+//! The paper's autoscaling experiments (Fig. 2/3) span tens of minutes of
+//! wall-clock time. To reproduce their *dynamics* in a CI-sized budget every
+//! component takes a [`Clock`], which can be:
+//!
+//! * [`Clock::real`] — plain wall clock (production mode),
+//! * [`Clock::scaled`] — wall clock with time dilation: `scale = 10.0` makes
+//!   one real second read as ten clock seconds, so a 25-minute experiment
+//!   runs in 2.5 minutes while queueing dynamics (which depend on *ratios*
+//!   of rates, not absolute durations) are preserved,
+//! * [`Clock::simulated`] — fully virtual time advanced manually; used by
+//!   deterministic unit tests of the autoscaler/orchestrator/batcher.
+//!
+//! Sleeps on a scaled clock divide the requested duration by the scale, so
+//! a component that "waits 30s of cluster time" waits 3s of real time.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Monotonic nanosecond timestamp relative to the clock's epoch.
+pub type Nanos = u64;
+
+#[derive(Clone)]
+enum Inner {
+    Real {
+        epoch: Instant,
+        scale: f64,
+    },
+    Simulated {
+        now: Arc<(Mutex<Nanos>, Condvar)>,
+    },
+}
+
+/// A cloneable handle to a time source. Cheap to clone; clones share state.
+#[derive(Clone)]
+pub struct Clock {
+    inner: Inner,
+}
+
+impl Clock {
+    /// Wall-clock time, no dilation.
+    pub fn real() -> Self {
+        Clock {
+            inner: Inner::Real { epoch: Instant::now(), scale: 1.0 },
+        }
+    }
+
+    /// Wall-clock time dilated by `scale` (> 1 runs experiments faster).
+    pub fn scaled(scale: f64) -> Self {
+        assert!(scale > 0.0, "clock scale must be positive");
+        Clock {
+            inner: Inner::Real { epoch: Instant::now(), scale },
+        }
+    }
+
+    /// Fully virtual clock starting at t=0; advance with [`Clock::advance`].
+    pub fn simulated() -> Self {
+        Clock {
+            inner: Inner::Simulated {
+                now: Arc::new((Mutex::new(0), Condvar::new())),
+            },
+        }
+    }
+
+    /// Current time in nanoseconds since the clock epoch.
+    pub fn now(&self) -> Nanos {
+        match &self.inner {
+            Inner::Real { epoch, scale } => {
+                let real = epoch.elapsed().as_nanos() as f64;
+                (real * scale) as Nanos
+            }
+            Inner::Simulated { now } => *now.0.lock().unwrap(),
+        }
+    }
+
+    /// Current time as a float number of seconds since the epoch.
+    pub fn now_secs(&self) -> f64 {
+        self.now() as f64 / 1e9
+    }
+
+    /// Sleep for `d` of *clock* time (real time `d / scale` on a scaled
+    /// clock). On a simulated clock this blocks until another thread
+    /// advances time past the deadline.
+    pub fn sleep(&self, d: Duration) {
+        match &self.inner {
+            Inner::Real { scale, .. } => {
+                let real = Duration::from_nanos((d.as_nanos() as f64 / scale) as u64);
+                std::thread::sleep(real);
+            }
+            Inner::Simulated { now } => {
+                let deadline = self.now() + d.as_nanos() as Nanos;
+                let (lock, cvar) = &**now;
+                let mut t = lock.lock().unwrap();
+                while *t < deadline {
+                    let (nt, timeout) = cvar
+                        .wait_timeout(t, Duration::from_millis(50))
+                        .unwrap();
+                    t = nt;
+                    // Defensive: if nobody is advancing the clock, a
+                    // simulated sleep would deadlock. Tests advance time
+                    // from a driver thread; the timeout re-checks.
+                    if timeout.timed_out() && *t >= deadline {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Advance a simulated clock by `d`, waking sleepers.
+    /// Panics if called on a real clock.
+    pub fn advance(&self, d: Duration) {
+        match &self.inner {
+            Inner::Simulated { now } => {
+                let (lock, cvar) = &**now;
+                let mut t = lock.lock().unwrap();
+                *t += d.as_nanos() as Nanos;
+                cvar.notify_all();
+            }
+            _ => panic!("advance() is only valid on a simulated clock"),
+        }
+    }
+
+    /// True if this is a simulated clock (used by components that spawn
+    /// polling threads to pick a strategy).
+    pub fn is_simulated(&self) -> bool {
+        matches!(self.inner, Inner::Simulated { .. })
+    }
+
+    /// Duration elapsed since an earlier `now()` reading.
+    pub fn since(&self, earlier: Nanos) -> Duration {
+        Duration::from_nanos(self.now().saturating_sub(earlier))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::real()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = Clock::real();
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        let b = c.now();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn scaled_clock_dilates() {
+        let c = Clock::scaled(100.0);
+        let a = c.now();
+        std::thread::sleep(Duration::from_millis(10));
+        let b = c.now();
+        // 10ms real should read as ~1s of clock time; allow slack.
+        assert!(c.since(a).as_millis() >= 500, "elapsed {:?}", b - a);
+    }
+
+    #[test]
+    fn scaled_sleep_is_shorter() {
+        let c = Clock::scaled(50.0);
+        let t0 = Instant::now();
+        c.sleep(Duration::from_millis(500)); // should take ~10ms real
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn simulated_clock_advances() {
+        let c = Clock::simulated();
+        assert_eq!(c.now(), 0);
+        c.advance(Duration::from_secs(5));
+        assert_eq!(c.now_secs(), 5.0);
+    }
+
+    #[test]
+    fn simulated_sleep_wakes_on_advance() {
+        let c = Clock::simulated();
+        let c2 = c.clone();
+        let h = std::thread::spawn(move || {
+            c2.sleep(Duration::from_secs(10));
+            c2.now()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        c.advance(Duration::from_secs(10));
+        let woke_at = h.join().unwrap();
+        assert!(woke_at >= Duration::from_secs(10).as_nanos() as u64);
+    }
+
+    #[test]
+    fn clones_share_simulated_state() {
+        let c = Clock::simulated();
+        let c2 = c.clone();
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c2.now(), c.now());
+    }
+}

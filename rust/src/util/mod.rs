@@ -1,0 +1,20 @@
+//! Shared substrates: clock abstraction, thread pool, statistics, PRNG,
+//! mini property-testing helper, logging and a bench harness.
+//!
+//! These exist because the reproduction environment is offline: the usual
+//! crates (tokio, criterion, proptest, rand) are unavailable, so each is
+//! implemented here as a small, tested substrate (see DESIGN.md
+//! §Substitutions).
+
+pub mod bench;
+pub mod clock;
+pub mod logging;
+pub mod pool;
+pub mod quick;
+pub mod rng;
+pub mod stats;
+
+pub use clock::Clock;
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use stats::{Histogram, Summary};

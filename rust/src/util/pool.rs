@@ -1,0 +1,144 @@
+//! Fixed-size thread pool with graceful shutdown.
+//!
+//! tokio is unavailable offline, so concurrency in the coordinator is
+//! thread-based: the RPC server runs a connection-per-thread accept loop on
+//! this pool, and inference instances own dedicated executor threads. The
+//! pool is deliberately simple — bounded queue, panic isolation, join on
+//! drop — because its behaviour must be predictable under the benches.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Message>,
+    workers: Vec<JoinHandle<()>>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` worker threads named `<name>-<i>`.
+    pub fn new(size: usize, name: &str) -> Self {
+        assert!(size > 0, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let active = Arc::clone(&active);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    let msg = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            active.fetch_add(1, Ordering::SeqCst);
+                            // Panic isolation: a panicking job must not take
+                            // the worker down.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+                .expect("spawning pool worker");
+            workers.push(handle);
+        }
+        ThreadPool { tx, workers, active }
+    }
+
+    /// Submit a job. Panics if the pool is shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .send(Message::Run(Box::new(job)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Jobs currently executing (approximate).
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Worker count.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_jobs() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicU32::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn survives_panicking_job() {
+        let pool = ThreadPool::new(1, "panic");
+        pool.execute(|| panic!("boom"));
+        let done = Arc::new(AtomicU32::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.store(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallelism_actually_parallel() {
+        let pool = ThreadPool::new(4, "par");
+        let start = std::time::Instant::now();
+        let done = Arc::new(AtomicU32::new(0));
+        for _ in 0..4 {
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_millis(50));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        // 4 x 50ms serial would be 200ms; parallel should be well under.
+        assert!(start.elapsed() < Duration::from_millis(150));
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+    }
+}

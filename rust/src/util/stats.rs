@@ -1,0 +1,323 @@
+//! Latency/throughput statistics: streaming summaries and fixed-bucket
+//! histograms (the same exponential-bucket scheme Prometheus uses).
+
+/// Streaming summary: count, mean, min, max plus a bounded reservoir for
+/// percentile estimates.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    /// Bounded sample of observations for percentile estimation.
+    reservoir: Vec<f64>,
+    cap: usize,
+    seen: u64,
+    /// xorshift state for reservoir sampling (deterministic).
+    rng_state: u64,
+}
+
+impl Summary {
+    /// New summary with the default reservoir size (4096 samples).
+    pub fn new() -> Self {
+        Self::with_capacity(4096)
+    }
+
+    /// New summary with a custom reservoir capacity.
+    pub fn with_capacity(cap: usize) -> Self {
+        Summary {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::with_capacity(cap.min(4096)),
+            cap,
+            seen: 0,
+            rng_state: 0x9E3779B97F4A7C15,
+        }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.seen += 1;
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(v);
+        } else {
+            // Vitter's algorithm R.
+            let j = (self.next_rand() % self.seen) as usize;
+            if j < self.cap {
+                self.reservoir[j] = v;
+            }
+        }
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean, or 0 if empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Minimum, or 0 if empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    /// Maximum, or 0 if empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Percentile estimate from the reservoir (q in [0, 1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.reservoir.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        xs[idx]
+    }
+
+    /// Merge another summary into this one (reservoirs concatenated and
+    /// re-truncated — adequate for reporting).
+    pub fn merge(&mut self, other: &Summary) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for &v in &other.reservoir {
+            if self.reservoir.len() < self.cap {
+                self.reservoir.push(v);
+            }
+        }
+        self.seen += other.seen;
+    }
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fixed-boundary histogram (cumulative, Prometheus-style).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Histogram with explicit bucket upper bounds (must be sorted).
+    pub fn new(bounds: Vec<f64>) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], count: 0, sum: 0.0 }
+    }
+
+    /// Default latency buckets in seconds: 0.5ms .. ~134s, doubling.
+    pub fn latency_seconds() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 0.0005;
+        for _ in 0..18 {
+            bounds.push(b);
+            b *= 2.0;
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Record one observation.
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        let idx = match self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+        {
+            Some(i) => i,
+            None => self.bounds.len(),
+        };
+        self.counts[idx] += 1;
+    }
+
+    /// Observation count.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Observation sum.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Bucket upper bounds.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; last entry is +Inf bucket.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Quantile estimate by linear interpolation within the bucket
+    /// (the same estimator as Prometheus `histogram_quantile`).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let prev_cum = cum;
+            cum += c;
+            if (cum as f64) >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // +Inf bucket: report the lower bound.
+                    return lo;
+                };
+                if c == 0 {
+                    return hi;
+                }
+                let frac = (rank - prev_cum as f64) / c as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+
+    /// Merge another histogram with identical bounds.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "merging mismatched histograms");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            s.observe(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.observe(i as f64);
+        }
+        assert!((s.quantile(0.5) - 50.0).abs() <= 2.0);
+        assert!((s.quantile(0.99) - 99.0).abs() <= 2.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+    }
+
+    #[test]
+    fn summary_reservoir_bounded() {
+        let mut s = Summary::with_capacity(64);
+        for i in 0..10_000 {
+            s.observe(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert!(s.reservoir.len() <= 64);
+        // Quantile should still be roughly right.
+        let med = s.quantile(0.5);
+        assert!(med > 2_000.0 && med < 8_000.0, "median {med}");
+    }
+
+    #[test]
+    fn summary_merge() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        a.observe(1.0);
+        b.observe(3.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.max(), 3.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantile() {
+        let mut h = Histogram::new(vec![1.0, 2.0, 4.0]);
+        for v in [0.5, 1.5, 1.6, 3.0, 10.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.counts(), &[1, 2, 1, 1]);
+        let med = h.quantile(0.5);
+        assert!(med >= 1.0 && med <= 2.0, "median {med}");
+    }
+
+    #[test]
+    fn histogram_empty_quantile_zero() {
+        let h = Histogram::latency_seconds();
+        assert_eq!(h.quantile(0.9), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn histogram_rejects_unsorted_bounds() {
+        let _ = Histogram::new(vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new(vec![1.0, 2.0]);
+        let mut b = Histogram::new(vec![1.0, 2.0]);
+        a.observe(0.5);
+        b.observe(1.5);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.counts(), &[1, 1, 0]);
+    }
+}

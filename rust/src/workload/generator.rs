@@ -1,0 +1,412 @@
+//! Closed-loop client pools (the perf_analyzer concurrency model).
+//!
+//! Each client = one thread = one TCP connection issuing requests
+//! back-to-back: concurrency N means at most N requests in flight, and
+//! client-side latency feedback throttles the offered load exactly like
+//! perf_analyzer's `--concurrency-range`. The driver walks the
+//! [`Schedule`] phase by phase, resizing the pool at each boundary.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::rpc::client::RpcClient;
+use crate::rpc::codec::Status;
+use crate::runtime::Tensor;
+use crate::util::clock::Clock;
+use crate::util::stats::Summary;
+
+use super::schedule::Schedule;
+
+/// What each client sends.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Model to request.
+    pub model: String,
+    /// Rows per request (the paper calibrates this so one GPU sustains
+    /// one client but not ten).
+    pub batch_rows: usize,
+    /// Per-sample input shape (from the model's repository config).
+    pub input_shape: Vec<usize>,
+    /// Auth token ("" when the gateway has auth disabled).
+    pub token: String,
+    /// Pause between a response and the next request, in clock time
+    /// (zero = fully closed loop).
+    pub think_time: Duration,
+}
+
+impl WorkloadSpec {
+    /// Spec with no think time and no token.
+    pub fn new(model: &str, batch_rows: usize, input_shape: Vec<usize>) -> Self {
+        WorkloadSpec {
+            model: model.to_string(),
+            batch_rows,
+            input_shape,
+            token: String::new(),
+            think_time: Duration::ZERO,
+        }
+    }
+
+    fn request_tensor(&self) -> Tensor {
+        let mut shape = vec![self.batch_rows];
+        shape.extend_from_slice(&self.input_shape);
+        Tensor::zeros(shape)
+    }
+}
+
+/// Statistics for one schedule phase.
+#[derive(Clone, Debug)]
+pub struct PhaseReport {
+    /// Concurrency during the phase.
+    pub clients: usize,
+    /// Actual phase length in clock seconds.
+    pub duration: f64,
+    /// Per-request end-to-end latency (clock seconds).
+    pub latency: Summary,
+    /// Completed OK requests.
+    pub ok: u64,
+    /// Requests shed by the gateway (rate limited / overloaded).
+    pub shed: u64,
+    /// Other errors (bad request, internal, transport).
+    pub errors: u64,
+}
+
+impl PhaseReport {
+    /// Successful requests per clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.ok as f64 / self.duration
+        }
+    }
+
+    /// Inference rate in rows (samples) per clock second.
+    pub fn row_rate(&self, rows_per_request: usize) -> f64 {
+        self.throughput() * rows_per_request as f64
+    }
+}
+
+/// Statistics for a whole run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub phases: Vec<PhaseReport>,
+    /// Latency across all phases.
+    pub overall_latency: Summary,
+    pub total_ok: u64,
+    pub total_shed: u64,
+    pub total_errors: u64,
+    /// Whole-run duration in clock seconds.
+    pub duration: f64,
+}
+
+impl RunReport {
+    /// Overall successful requests per clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.duration <= 0.0 {
+            0.0
+        } else {
+            self.total_ok as f64 / self.duration
+        }
+    }
+}
+
+struct PhaseCounters {
+    latency: Mutex<Summary>,
+    ok: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl PhaseCounters {
+    fn new() -> Self {
+        PhaseCounters {
+            latency: Mutex::new(Summary::new()),
+            ok: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The load generator.
+pub struct ClientPool {
+    addr: String,
+    spec: WorkloadSpec,
+    clock: Clock,
+}
+
+impl ClientPool {
+    /// Pool targeting `addr` (the gateway endpoint).
+    pub fn new(addr: &str, spec: WorkloadSpec, clock: Clock) -> Self {
+        ClientPool { addr: addr.to_string(), spec, clock }
+    }
+
+    /// Run the schedule to completion; blocks the calling thread.
+    ///
+    /// `on_phase` fires at each phase boundary with (index, clients) —
+    /// experiments use it to annotate timelines.
+    pub fn run(&self, schedule: &Schedule) -> RunReport {
+        self.run_with(schedule, |_, _| {})
+    }
+
+    /// [`ClientPool::run`] with a phase-boundary callback.
+    pub fn run_with<F: FnMut(usize, usize)>(
+        &self,
+        schedule: &Schedule,
+        mut on_phase: F,
+    ) -> RunReport {
+        let run_start = self.clock.now_secs();
+        let mut phases = Vec::new();
+        let mut overall = Summary::new();
+        let (mut total_ok, mut total_shed, mut total_errors) = (0u64, 0u64, 0u64);
+
+        for (idx, phase) in schedule.phases().iter().enumerate() {
+            on_phase(idx, phase.clients);
+            let counters = Arc::new(PhaseCounters::new());
+            let stop = Arc::new(AtomicBool::new(false));
+            let phase_start = self.clock.now_secs();
+
+            let mut handles = Vec::with_capacity(phase.clients);
+            for c in 0..phase.clients {
+                let addr = self.addr.clone();
+                let spec = self.spec.clone();
+                let clock = self.clock.clone();
+                let counters = Arc::clone(&counters);
+                let stop = Arc::clone(&stop);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("client-{idx}-{c}"))
+                        .spawn(move || client_loop(&addr, &spec, &clock, &counters, &stop))
+                        .expect("spawning client"),
+                );
+            }
+
+            self.clock.sleep(phase.duration);
+            stop.store(true, Ordering::SeqCst);
+            for h in handles {
+                let _ = h.join();
+            }
+
+            let duration = self.clock.now_secs() - phase_start;
+            let latency = counters.latency.lock().unwrap().clone();
+            overall.merge(&latency);
+            let report = PhaseReport {
+                clients: phase.clients,
+                duration,
+                latency,
+                ok: counters.ok.load(Ordering::SeqCst),
+                shed: counters.shed.load(Ordering::SeqCst),
+                errors: counters.errors.load(Ordering::SeqCst),
+            };
+            total_ok += report.ok;
+            total_shed += report.shed;
+            total_errors += report.errors;
+            phases.push(report);
+        }
+
+        RunReport {
+            phases,
+            overall_latency: overall,
+            total_ok,
+            total_shed,
+            total_errors,
+            duration: self.clock.now_secs() - run_start,
+        }
+    }
+}
+
+fn client_loop(
+    addr: &str,
+    spec: &WorkloadSpec,
+    clock: &Clock,
+    counters: &PhaseCounters,
+    stop: &AtomicBool,
+) {
+    // Retry the initial connect briefly: at experiment start the gateway
+    // may bind a moment after the pool launches.
+    let mut client = loop {
+        match RpcClient::connect(addr) {
+            Ok(c) => break c.with_token(&spec.token),
+            Err(_) if !stop.load(Ordering::SeqCst) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => return,
+        }
+    };
+    let input = spec.request_tensor();
+
+    while !stop.load(Ordering::SeqCst) {
+        let t0 = clock.now_secs();
+        match client.infer(&spec.model, input.clone()) {
+            Ok(resp) => {
+                let dt = clock.now_secs() - t0;
+                match resp.status {
+                    Status::Ok => {
+                        counters.latency.lock().unwrap().observe(dt);
+                        counters.ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Status::RateLimited | Status::Overloaded => {
+                        counters.shed.fetch_add(1, Ordering::Relaxed);
+                        // brief backoff so a shedding gateway is not
+                        // hammered in a tight loop
+                        clock.sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        counters.errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            Err(_) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                // transport error: reconnect
+                match RpcClient::connect(addr) {
+                    Ok(c) => client = c.with_token(&spec.token),
+                    Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                }
+            }
+        }
+        if !spec.think_time.is_zero() {
+            clock.sleep(spec.think_time);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecutionMode, GatewayConfig, ModelConfig, ServiceModelConfig};
+    use crate::gateway::Gateway;
+    use crate::metrics::Registry;
+    use crate::server::{Instance, ModelRepository};
+    use crate::telemetry::Tracer;
+    use once_cell::sync::Lazy;
+    use std::sync::RwLock;
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
+    fn stack(n: usize) -> (Gateway, Vec<Arc<Instance>>, Clock) {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let instances: Vec<Arc<Instance>> = (0..n)
+            .map(|i| {
+                let inst = Instance::start_with_mode(
+                    &format!("wl-{i}"),
+                    Arc::clone(&REPO),
+                    &[ModelConfig {
+                        name: "icecube_cnn".into(),
+                        max_queue_delay: Duration::from_millis(1),
+                        preferred_batch: 8,
+                        service_model: ServiceModelConfig {
+                            base: Duration::from_millis(2),
+                            per_row: Duration::from_micros(100),
+                        },
+                    }],
+                    clock.clone(),
+                    registry.clone(),
+                    64,
+                    5.0,
+                    ExecutionMode::Simulated,
+                );
+                inst.mark_ready();
+                inst
+            })
+            .collect();
+        let endpoints = Arc::new(RwLock::new(instances.clone()));
+        let gateway = Gateway::start(
+            &GatewayConfig::default(),
+            endpoints,
+            clock.clone(),
+            registry,
+            Tracer::disabled(),
+            None,
+        )
+        .unwrap();
+        (gateway, instances, clock)
+    }
+
+    #[test]
+    fn constant_load_served() {
+        let (gateway, instances, clock) = stack(2);
+        let spec = WorkloadSpec::new("icecube_cnn", 2, vec![16, 16, 3]);
+        let pool = ClientPool::new(&gateway.addr().to_string(), spec, clock);
+        let report = pool.run(&Schedule::constant(2, Duration::from_millis(300)));
+        assert_eq!(report.phases.len(), 1);
+        assert!(report.total_ok > 10, "ok={}", report.total_ok);
+        assert_eq!(report.total_errors, 0);
+        assert!(report.throughput() > 0.0);
+        assert!(report.overall_latency.mean() > 0.0);
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn step_schedule_reports_per_phase() {
+        let (gateway, instances, clock) = stack(1);
+        let spec = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+        let pool = ClientPool::new(&gateway.addr().to_string(), spec, clock);
+        let mut boundaries = Vec::new();
+        let report = pool.run_with(
+            &Schedule::step_up_down(1, 4, Duration::from_millis(200)),
+            |i, c| boundaries.push((i, c)),
+        );
+        assert_eq!(boundaries, vec![(0, 1), (1, 4), (2, 1)]);
+        assert_eq!(report.phases.len(), 3);
+        // the 4-client phase must have completed more requests than the
+        // 1-client phases (one simulated GPU, but closed loop means more
+        // offered load -> more batched work completed)
+        assert!(report.phases[1].ok > 0);
+        // phase durations roughly as scheduled
+        assert!((report.phases[0].duration - 0.2).abs() < 0.15);
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn think_time_reduces_offered_load() {
+        let (gateway, instances, clock) = stack(1);
+        let mut spec = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+        let fast_pool = ClientPool::new(&gateway.addr().to_string(), spec.clone(), clock.clone());
+        let fast = fast_pool.run(&Schedule::constant(1, Duration::from_millis(250)));
+        spec.think_time = Duration::from_millis(50);
+        let slow_pool = ClientPool::new(&gateway.addr().to_string(), spec, clock);
+        let slow = slow_pool.run(&Schedule::constant(1, Duration::from_millis(250)));
+        assert!(
+            fast.total_ok > slow.total_ok,
+            "fast {} vs slow {}",
+            fast.total_ok,
+            slow.total_ok
+        );
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn errors_counted_not_fatal() {
+        let (gateway, instances, clock) = stack(1);
+        // wrong model name -> ModelNotFound counted as error
+        let spec = WorkloadSpec::new("not_a_model", 1, vec![16, 16, 3]);
+        let pool = ClientPool::new(&gateway.addr().to_string(), spec, clock);
+        let report = pool.run(&Schedule::constant(1, Duration::from_millis(150)));
+        assert_eq!(report.total_ok, 0);
+        assert!(report.total_errors > 0);
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+}

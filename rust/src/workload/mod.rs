@@ -1,0 +1,19 @@
+//! Load generation — the Triton `perf_analyzer` analogue (§4).
+//!
+//! The paper's Fig. 2/3 workload is "NVIDIA Triton Performance Analyzer
+//! clients that evaluate the ParticleNet model", stepped 1 → 10 → 1
+//! concurrent clients. This module reproduces that tool:
+//!
+//! * [`schedule`] — time-varying concurrency schedules (phases of
+//!   `(clients, duration)`), including the canonical `1→10→1` step;
+//! * [`generator`] — closed-loop client pools: each client owns one TCP
+//!   connection to the gateway and issues requests back-to-back
+//!   (optionally with think time), exactly perf_analyzer's concurrency
+//!   model. Per-phase and overall latency/throughput statistics come out
+//!   as [`util::stats::Summary`](crate::util::stats::Summary)s.
+
+pub mod generator;
+pub mod schedule;
+
+pub use generator::{ClientPool, PhaseReport, RunReport, WorkloadSpec};
+pub use schedule::{Phase, Schedule};

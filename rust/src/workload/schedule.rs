@@ -1,0 +1,114 @@
+//! Concurrency schedules: phases of (client count, duration).
+
+use std::time::Duration;
+
+/// One schedule phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phase {
+    /// Concurrent closed-loop clients during the phase.
+    pub clients: usize,
+    /// Phase length in *clock* time.
+    pub duration: Duration,
+}
+
+/// A piecewise-constant concurrency schedule.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    phases: Vec<Phase>,
+}
+
+impl Schedule {
+    /// Empty schedule; chain [`Schedule::phase`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a phase.
+    pub fn phase(mut self, clients: usize, duration: Duration) -> Self {
+        self.phases.push(Phase { clients, duration });
+        self
+    }
+
+    /// The paper's Fig. 2 workload: `lo` clients, step to `hi`, back to
+    /// `lo`, each phase `phase_len` long.
+    pub fn step_up_down(lo: usize, hi: usize, phase_len: Duration) -> Self {
+        Schedule::new()
+            .phase(lo, phase_len)
+            .phase(hi, phase_len)
+            .phase(lo, phase_len)
+    }
+
+    /// Constant concurrency.
+    pub fn constant(clients: usize, duration: Duration) -> Self {
+        Schedule::new().phase(clients, duration)
+    }
+
+    /// Phases in order.
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// Total schedule duration.
+    pub fn total_duration(&self) -> Duration {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Peak concurrency across phases.
+    pub fn max_clients(&self) -> usize {
+        self.phases.iter().map(|p| p.clients).max().unwrap_or(0)
+    }
+
+    /// Client count at clock-offset `t` from schedule start (None once the
+    /// schedule is over).
+    pub fn clients_at(&self, t: Duration) -> Option<usize> {
+        let mut acc = Duration::ZERO;
+        for p in &self.phases {
+            acc += p.duration;
+            if t < acc {
+                return Some(p.clients);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_up_down_shape() {
+        let s = Schedule::step_up_down(1, 10, Duration::from_secs(60));
+        assert_eq!(s.phases().len(), 3);
+        assert_eq!(s.phases()[0].clients, 1);
+        assert_eq!(s.phases()[1].clients, 10);
+        assert_eq!(s.phases()[2].clients, 1);
+        assert_eq!(s.total_duration(), Duration::from_secs(180));
+        assert_eq!(s.max_clients(), 10);
+    }
+
+    #[test]
+    fn clients_at_offsets() {
+        let s = Schedule::step_up_down(1, 10, Duration::from_secs(10));
+        assert_eq!(s.clients_at(Duration::from_secs(0)), Some(1));
+        assert_eq!(s.clients_at(Duration::from_secs(9)), Some(1));
+        assert_eq!(s.clients_at(Duration::from_secs(10)), Some(10));
+        assert_eq!(s.clients_at(Duration::from_secs(25)), Some(1));
+        assert_eq!(s.clients_at(Duration::from_secs(30)), None);
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let s = Schedule::new();
+        assert_eq!(s.total_duration(), Duration::ZERO);
+        assert_eq!(s.clients_at(Duration::ZERO), None);
+        assert_eq!(s.max_clients(), 0);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = Schedule::constant(4, Duration::from_secs(5));
+        assert_eq!(s.phases().len(), 1);
+        assert_eq!(s.clients_at(Duration::from_secs(3)), Some(4));
+    }
+}

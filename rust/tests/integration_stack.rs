@@ -1,0 +1,271 @@
+//! Integration tests over the full deployment stack: config file →
+//! Deployment::up → cluster → gateway → instances → PJRT / simulated
+//! executors, exercised over real TCP.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use supersonic::config::{
+    AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, GatewayConfig,
+    ModelConfig, MonitoringConfig, ServerConfig, ServiceModelConfig,
+};
+use supersonic::deployment::Deployment;
+use supersonic::gateway::auth;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::Tensor;
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
+    DeploymentConfig {
+        name: "itest".into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(10),
+            execution,
+            queue_capacity: 128,
+            util_window: 5.0,
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig { enabled: false, max_replicas: 6, ..Default::default() },
+        cluster: ClusterConfig {
+            nodes: 3,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(20),
+            termination_grace: Duration::from_millis(20),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_millis(100),
+            retention: Duration::from_secs(600),
+            tracing: false,
+        },
+        time_scale: 1.0,
+    }
+}
+
+fn cnn(rows: usize) -> Tensor {
+    Tensor::zeros(vec![rows, 16, 16, 3])
+}
+
+#[test]
+fn full_stack_serves_under_concurrency() {
+    let d = Deployment::up(base_cfg(ExecutionMode::Simulated)).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+    let addr = d.endpoint();
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = RpcClient::connect(&addr).unwrap();
+            let mut ok = 0;
+            for rows in [1usize, 3, 8, 17] {
+                let resp = client.infer("icecube_cnn", cnn(rows)).unwrap();
+                if resp.status == Status::Ok && resp.output.shape() == [rows, 3] {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 24);
+    d.down();
+}
+
+#[test]
+fn scale_up_down_serves_during_transition() {
+    let d = Deployment::up(base_cfg(ExecutionMode::Simulated)).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+
+    // Continuous load while the cluster rescales 2 -> 5 -> 1.
+    let spec = WorkloadSpec::new("icecube_cnn", 2, vec![16, 16, 3]);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let cluster = Arc::clone(&d.cluster);
+    let driver = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        cluster.set_desired(5);
+        std::thread::sleep(Duration::from_millis(600));
+        cluster.set_desired(1);
+    });
+    let report = pool.run(&Schedule::constant(4, Duration::from_millis(1500)));
+    driver.join().unwrap();
+
+    assert!(report.total_ok > 50, "ok={}", report.total_ok);
+    assert_eq!(report.total_errors, 0, "errors during rescale");
+    // After scale-down completes the cluster converges to 1.
+    let t0 = std::time::Instant::now();
+    while d.cluster.running() != 1 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(d.cluster.running(), 1);
+    d.down();
+}
+
+#[test]
+fn autoscaler_reacts_to_load_spike_end_to_end() {
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.server.replicas = 1;
+    cfg.server.models[0].service_model = ServiceModelConfig {
+        base: Duration::from_millis(20),
+        per_row: Duration::from_millis(1),
+    };
+    cfg.autoscaler = AutoscalerConfig {
+        enabled: true,
+        metric: "queue_latency_avg:2".into(),
+        threshold: 0.015,
+        scale_down_ratio: 0.2,
+        min_replicas: 1,
+        max_replicas: 4,
+        poll_interval: Duration::from_millis(100),
+        scale_up_cooldown: Duration::from_millis(300),
+        scale_down_stabilization: Duration::from_secs(60),
+        step: 1,
+    };
+    cfg.monitoring.scrape_interval = Duration::from_millis(50);
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(1, Duration::from_secs(10)));
+
+    // 8 closed-loop clients on a 22ms-per-batch server: sustained queueing.
+    let spec = WorkloadSpec::new("icecube_cnn", 2, vec![16, 16, 3]);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run(&Schedule::constant(8, Duration::from_secs(6)));
+    assert!(report.total_ok > 0);
+    assert!(
+        d.cluster.desired() > 1,
+        "autoscaler never scaled up (desired={}, metric={})",
+        d.cluster.desired(),
+        d.autoscaler.metric_value()
+    );
+    d.down();
+}
+
+#[test]
+fn real_pjrt_numerics_through_full_stack() {
+    let mut cfg = base_cfg(ExecutionMode::Real);
+    cfg.server.replicas = 1;
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(1, Duration::from_secs(15)));
+    let g = supersonic::runtime::golden::load(std::path::Path::new(
+        "artifacts/icecube_cnn/golden.b8.txt",
+    ))
+    .unwrap();
+    let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+    let resp = client.infer("icecube_cnn", g.input.clone()).unwrap();
+    assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+    let diff = resp.output.max_abs_diff(&g.output).unwrap();
+    assert!(diff < 1e-3, "numerics mismatch over the wire: {diff}");
+    d.down();
+}
+
+#[test]
+fn auth_and_rate_limit_full_stack() {
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.gateway.auth_secret = Some("integration-secret".into());
+    cfg.gateway.rate_limit_rps = 50.0;
+    cfg.gateway.rate_limit_burst = 5;
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+
+    // unauthenticated rejected
+    let mut anon = RpcClient::connect(&d.endpoint()).unwrap();
+    assert_eq!(anon.infer("icecube_cnn", cnn(1)).unwrap().status, Status::Unauthorized);
+
+    // authenticated served, but a tight loop trips the limiter
+    let token = auth::mint_token("integration-secret");
+    let mut client = RpcClient::connect(&d.endpoint()).unwrap().with_token(&token);
+    let mut ok = 0;
+    let mut limited = 0;
+    for _ in 0..40 {
+        match client.infer("icecube_cnn", cnn(1)).unwrap().status {
+            Status::Ok => ok += 1,
+            Status::RateLimited => limited += 1,
+            other => panic!("unexpected status {other:?}"),
+        }
+    }
+    assert!(ok > 0, "no requests served");
+    assert!(limited > 0, "rate limiter never tripped");
+    d.down();
+}
+
+#[test]
+fn pod_failures_recovered_under_load() {
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.cluster.pod_failure_rate = 0.4;
+    let d = Deployment::up(cfg).unwrap();
+    // with retries, replicas eventually come up despite 40% start failures
+    assert!(d.wait_ready(2, Duration::from_secs(20)));
+    let spec = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let report = pool.run(&Schedule::constant(2, Duration::from_millis(500)));
+    assert!(report.total_ok > 0);
+    assert_eq!(report.total_errors, 0);
+    d.down();
+}
+
+#[test]
+fn metrics_pipeline_end_to_end() {
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.monitoring.listen = "127.0.0.1:0".into();
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+
+    let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+    for _ in 0..10 {
+        assert_eq!(client.infer("icecube_cnn", cnn(2)).unwrap().status, Status::Ok);
+    }
+    std::thread::sleep(Duration::from_millis(400)); // let the scraper run
+
+    // Prometheus text endpoint includes request counters and utilization.
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(d.metrics_endpoint().unwrap()).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut body = String::new();
+    s.read_to_string(&mut body).unwrap();
+    assert!(body.contains("inference_requests_total"), "{body}");
+    assert!(body.contains("gateway_requests_total"));
+
+    // The store has windowed series the autoscaler queries.
+    assert!(d.store.latest("replicas_running").is_some());
+    assert!(d
+        .store
+        .series_ids()
+        .iter()
+        .any(|id| id.starts_with("request_queue_seconds{") && id.ends_with(":sum")));
+    d.down();
+}
+
+#[test]
+fn multi_model_repository_served_real() {
+    let mut cfg = base_cfg(ExecutionMode::Real);
+    cfg.server.replicas = 1;
+    cfg.server.models = vec![
+        ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() },
+        ModelConfig { name: "cms_transformer".into(), ..ModelConfig::default() },
+    ];
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(1, Duration::from_secs(15)));
+    let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+    let r1 = client.infer("icecube_cnn", cnn(2)).unwrap();
+    assert_eq!(r1.status, Status::Ok);
+    assert_eq!(r1.output.shape(), &[2, 3]);
+    let r2 = client
+        .infer("cms_transformer", Tensor::zeros(vec![2, 32, 32]))
+        .unwrap();
+    assert_eq!(r2.status, Status::Ok, "{}", r2.error);
+    assert_eq!(r2.output.shape(), &[2, 2]);
+    // unknown model still 404s
+    assert_eq!(client.infer("nope", cnn(1)).unwrap().status, Status::ModelNotFound);
+    d.down();
+}

@@ -1,0 +1,309 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state management) using the in-crate `util::quick` helper.
+
+use std::sync::{mpsc, Arc, RwLock};
+use std::time::Duration;
+
+use supersonic::config::{ExecutionMode, LbPolicy, ModelConfig, ServiceModelConfig};
+use supersonic::gateway::lb::LoadBalancer;
+use supersonic::metrics::Registry;
+use supersonic::rpc::codec::{
+    decode_request, decode_response, encode_request, encode_response, InferRequest,
+    InferResponse, Status,
+};
+use supersonic::runtime::Tensor;
+use supersonic::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
+use supersonic::server::{Instance, ModelRepository};
+use supersonic::util::clock::Clock;
+use supersonic::util::quick::{check, Gen};
+
+fn pending(model: &str, rows: usize, clock: &Clock) -> (Pending, mpsc::Receiver<ExecOutcome>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        Pending {
+            model: model.into(),
+            input: Tensor::zeros(vec![rows, 2]),
+            enqueued: clock.now(),
+            trace_id: 0,
+            reply: tx,
+        },
+        rx,
+    )
+}
+
+#[test]
+fn prop_codec_roundtrip_any_request() {
+    check("rpc request roundtrips", 300, |g: &mut Gen| {
+        let rows = g.usize(1..=6);
+        let cols = g.usize(1..=8);
+        let data: Vec<f32> = (0..rows * cols).map(|_| g.f64(-1e6, 1e6) as f32).collect();
+        let mut req = InferRequest::infer(
+            g.u64(0..=u64::MAX),
+            &format!("m{}", g.usize(0..=30)),
+            Tensor::new(vec![rows, cols], data).unwrap(),
+        );
+        req.trace_id = g.u64(0..=u64::MAX);
+        if g.bool() {
+            req.token = "t".repeat(g.usize(0..=64));
+        }
+        let decoded = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(decoded, req);
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_any_response() {
+    check("rpc response roundtrips", 300, |g: &mut Gen| {
+        let ok = g.bool();
+        let resp = if ok {
+            let rows = g.usize(1..=5);
+            let data: Vec<f32> = (0..rows * 3).map(|_| g.f64(-10.0, 10.0) as f32).collect();
+            let mut r = InferResponse::ok(
+                g.u64(0..=u64::MAX),
+                Tensor::new(vec![rows, 3], data).unwrap(),
+            );
+            r.queue_us = g.u64(0..=u32::MAX as u64) as u32;
+            r.compute_us = g.u64(0..=u32::MAX as u64) as u32;
+            r.batch_size = g.u64(1..=64) as u32;
+            r
+        } else {
+            let statuses = [
+                Status::Unauthorized,
+                Status::RateLimited,
+                Status::Overloaded,
+                Status::BadRequest,
+                Status::Internal,
+                Status::ModelNotFound,
+            ];
+            InferResponse::err(
+                g.u64(0..=u64::MAX),
+                *g.choose(&statuses),
+                "e".repeat(g.usize(0..=128)),
+            )
+        };
+        let decoded = decode_response(&encode_response(&resp)).unwrap();
+        assert_eq!(decoded, resp);
+    });
+}
+
+#[test]
+fn prop_codec_rejects_random_corruption() {
+    check("corrupted frames never panic", 300, |g: &mut Gen| {
+        let req = InferRequest::infer(7, "model", Tensor::zeros(vec![2, 3]));
+        let mut buf = encode_request(&req);
+        // flip up to 4 random bytes
+        for _ in 0..g.usize(1..=4) {
+            let i = g.usize(0..=buf.len() - 1);
+            buf[i] ^= (1 + g.usize(0..=254)) as u8;
+        }
+        // must either decode to something or error — never panic
+        let _ = decode_request(&buf);
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // Every pushed request is popped exactly once, same-model batches
+    // only, batch row budget respected.
+    check("batcher conserves requests", 60, |g: &mut Gen| {
+        let clock = Clock::real();
+        let q = BatchQueue::new(1024);
+        let models = ["a", "b", "c"];
+        let n = g.usize(1..=40);
+        let mut pushed_per_model = std::collections::BTreeMap::new();
+        let mut rxs = Vec::new();
+        for _ in 0..n {
+            let model = *g.choose(&models);
+            let rows = g.usize(1..=5);
+            let (p, rx) = pending(model, rows, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            *pushed_per_model.entry(model.to_string()).or_insert(0usize) += rows;
+            rxs.push(rx);
+        }
+        let max_rows = g.usize(4..=16);
+        let preferred = g.usize(1..=max_rows);
+        let mut popped_per_model = std::collections::BTreeMap::new();
+        loop {
+            let batch = q.pop_batch(
+                &clock,
+                |_| BatchPolicy {
+                    max_queue_delay: Duration::from_millis(0),
+                    preferred_rows: preferred,
+                    max_rows,
+                },
+                Duration::from_millis(10),
+            );
+            let Some(batch) = batch else { break };
+            assert!(!batch.is_empty());
+            // same-model run
+            let model = batch[0].model.clone();
+            assert!(batch.iter().all(|p| p.model == model), "mixed-model batch");
+            let rows: usize = batch.iter().map(|p| p.rows()).sum();
+            // row budget respected unless a single oversized request
+            assert!(
+                rows <= max_rows || batch.len() == 1,
+                "batch of {rows} rows exceeds budget {max_rows}"
+            );
+            *popped_per_model.entry(model).or_insert(0usize) += rows;
+        }
+        assert_eq!(pushed_per_model, popped_per_model, "requests lost or duplicated");
+    });
+}
+
+#[test]
+fn prop_lb_only_picks_ready_and_under_cap() {
+    let repo = Arc::new(
+        ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &["icecube_cnn".into()],
+        )
+        .unwrap(),
+    );
+    let clock = Clock::real();
+    let registry = Registry::new();
+    // Slow instances so submitted work stays in flight for the check.
+    let mk = |id: &str| {
+        Instance::start_with_mode(
+            id,
+            Arc::clone(&repo),
+            &[ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 1,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(50),
+                    per_row: Duration::from_millis(1),
+                },
+            }],
+            clock.clone(),
+            registry.clone(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        )
+    };
+
+    check("lb picks only eligible instances", 25, |g: &mut Gen| {
+        let n = g.usize(1..=5);
+        let instances: Vec<Arc<Instance>> = (0..n).map(|i| mk(&format!("p{i}"))).collect();
+        // randomly mark some ready, drain others
+        let mut any_ready = false;
+        for inst in &instances {
+            if g.bool() {
+                inst.mark_ready();
+                any_ready = true;
+            } else {
+                inst.drain();
+            }
+        }
+        let cap = g.usize(1..=3);
+        let policies = [
+            LbPolicy::RoundRobin,
+            LbPolicy::Random,
+            LbPolicy::LeastConnection,
+            LbPolicy::UtilizationAware,
+        ];
+        let lb = LoadBalancer::new(
+            *g.choose(&policies),
+            Arc::new(RwLock::new(instances.clone())),
+            cap,
+            g.u64(0..=u64::MAX),
+        );
+        // saturate one ready instance to the cap
+        let mut _rxs = Vec::new();
+        if let Some(first_ready) = instances
+            .iter()
+            .find(|i| i.state() == supersonic::server::InstanceState::Ready)
+        {
+            for _ in 0..cap {
+                if let Ok(rx) = first_ready.submit(
+                    "icecube_cnn",
+                    Tensor::zeros(vec![1, 16, 16, 3]),
+                    0,
+                ) {
+                    _rxs.push(rx);
+                }
+            }
+        }
+        for _ in 0..10 {
+            match lb.pick() {
+                Some(picked) => {
+                    assert_eq!(picked.state(), supersonic::server::InstanceState::Ready);
+                    assert!(picked.inflight() < cap, "picked saturated instance");
+                }
+                None => {
+                    // legal only if nothing is ready or everything saturated
+                    let eligible = instances.iter().any(|i| {
+                        i.state() == supersonic::server::InstanceState::Ready
+                            && i.inflight() < cap
+                    });
+                    assert!(!eligible || !any_ready, "lb returned None with eligible instances");
+                }
+            }
+        }
+        for i in instances {
+            i.stop();
+        }
+    });
+}
+
+#[test]
+fn prop_yaml_display_parse_roundtrip() {
+    use supersonic::config::yaml;
+    check("yaml display/parse roundtrip", 150, |g: &mut Gen| {
+        // Build a random nested value, render, reparse, compare.
+        fn build(g: &mut Gen, depth: usize) -> yaml::Value {
+            if depth == 0 || g.usize(0..=2) == 0 {
+                match g.usize(0..=3) {
+                    0 => yaml::Value::Int(g.u64(0..=1000) as i64),
+                    1 => yaml::Value::Bool(g.bool()),
+                    2 => yaml::Value::Str(format!("s{}", g.usize(0..=99))),
+                    _ => yaml::Value::Null,
+                }
+            } else if g.bool() {
+                let n = g.usize(1..=3);
+                yaml::Value::Seq((0..n).map(|_| build(g, depth - 1)).collect())
+            } else {
+                let n = g.usize(1..=3);
+                yaml::Value::Map(
+                    (0..n).map(|i| (format!("k{i}"), build(g, depth - 1))).collect(),
+                )
+            }
+        }
+        let v = yaml::Value::Map(vec![("root".into(), build(g, 3))]);
+        let rendered = v.to_string();
+        let reparsed = yaml::parse(&rendered)
+            .unwrap_or_else(|e| panic!("reparse failed: {e}\n{rendered}"));
+        assert_eq!(v, reparsed, "roundtrip mismatch for:\n{rendered}");
+    });
+}
+
+#[test]
+fn prop_tensor_stack_slice_roundtrip() {
+    check("tensor stack/slice roundtrip", 200, |g: &mut Gen| {
+        let cols = g.usize(1..=6);
+        let parts: Vec<Tensor> = (0..g.usize(1..=5))
+            .map(|_| {
+                let rows = g.usize(1..=4);
+                let data: Vec<f32> =
+                    (0..rows * cols).map(|_| g.f64(-100.0, 100.0) as f32).collect();
+                Tensor::new(vec![rows, cols], data).unwrap()
+            })
+            .collect();
+        let total: usize = parts.iter().map(|t| t.batch()).sum();
+        let pad_to = total + g.usize(0..=4);
+        let stacked = Tensor::stack_padded(&parts, pad_to).unwrap();
+        assert_eq!(stacked.shape(), &[pad_to, cols]);
+        let mut offset = 0;
+        for p in &parts {
+            let s = stacked.slice_rows(offset, p.batch()).unwrap();
+            assert_eq!(s.data(), p.data(), "slice mismatch");
+            offset += p.batch();
+        }
+        // padding rows are zeros
+        if pad_to > total {
+            let pad = stacked.slice_rows(total, pad_to - total).unwrap();
+            assert!(pad.data().iter().all(|&v| v == 0.0));
+        }
+    });
+}
