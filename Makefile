@@ -1,0 +1,25 @@
+# SuperSONIC build entry points.
+#
+#   make artifacts   — AOT-lower the JAX models to HLO-text artifacts
+#                      (the only step that runs Python; see python/compile/aot.py)
+#   make build       — release build of the Rust coordinator
+#   make test        — tier-1 test suite
+#   make bench       — run every bench binary
+
+ARTIFACTS := rust/artifacts
+
+.PHONY: artifacts build test bench
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
+		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
+		modelmesh_ablation; do cargo bench --bench $$b; done

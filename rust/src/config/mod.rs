@@ -12,6 +12,7 @@ pub mod yaml;
 
 pub use schema::{
     AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, GatewayConfig,
-    LbPolicy, ModelConfig, MonitoringConfig, ServerConfig, ServiceModelConfig,
+    LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig, PlacementPolicy,
+    ServerConfig, ServiceModelConfig,
 };
 pub use yaml::Value;

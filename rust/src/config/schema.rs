@@ -197,6 +197,75 @@ pub struct AutoscalerConfig {
     pub step: usize,
 }
 
+/// Model placement policies (the modelmesh subsystem).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// The initial placement never changes (all-models-everywhere when
+    /// the memory budget is unlimited; a balanced rotation otherwise).
+    Static,
+    /// A reconcile loop loads/unloads models per instance from demand
+    /// (request rate + queue depth) under the memory budget.
+    Dynamic,
+}
+
+impl PlacementPolicy {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static" => PlacementPolicy::Static,
+            "dynamic" => PlacementPolicy::Dynamic,
+            other => bail!("unknown placement policy '{other}' (expected static or dynamic)"),
+        })
+    }
+
+    /// Canonical config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Static => "static",
+            PlacementPolicy::Dynamic => "dynamic",
+        }
+    }
+}
+
+/// Model placement section (`model_placement`) — dynamic model loading
+/// and model-aware routing. With the default (`static` policy, unlimited
+/// memory budget) the deployment behaves exactly like the base paper
+/// setup: one global balancer, every instance serving every model. Any
+/// other combination activates the modelmesh: per-model load balancers
+/// plus per-instance serving sets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPlacementConfig {
+    /// `static` or `dynamic`.
+    pub policy: PlacementPolicy,
+    /// Per-instance simulated GPU-memory budget in MB (f32 weights: a
+    /// model costs 4 bytes per parameter). 0 = unlimited.
+    pub memory_budget_mb: f64,
+    /// Per-replica demand (requests/sec + queued requests) above which a
+    /// model gets another replica.
+    pub load_threshold: f64,
+    /// Per-replica demand below which a surplus replica may be dropped.
+    /// Must stay below `load_threshold` (hysteresis band).
+    pub unload_threshold: f64,
+    /// Minimum time between placement changes for the same
+    /// (instance, model) pair.
+    pub cooldown: Duration,
+    /// Trailing window for the routed-request-rate demand signal.
+    pub demand_window: Duration,
+    /// A model never shrinks below this many replicas.
+    pub min_replicas_per_model: usize,
+}
+
+impl ModelPlacementConfig {
+    /// Memory budget in bytes (0 = unlimited).
+    pub fn budget_bytes(&self) -> u64 {
+        (self.memory_budget_mb * 1e6) as u64
+    }
+
+    /// Is the modelmesh (per-model routing + placement) active?
+    pub fn mesh_enabled(&self) -> bool {
+        self.policy == PlacementPolicy::Dynamic || self.memory_budget_mb > 0.0
+    }
+}
+
 /// Cluster substrate section (Kubernetes analogue).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -236,6 +305,8 @@ pub struct DeploymentConfig {
     pub autoscaler: AutoscalerConfig,
     pub cluster: ClusterConfig,
     pub monitoring: MonitoringConfig,
+    /// Model placement / model-aware routing (the modelmesh).
+    pub model_placement: ModelPlacementConfig,
     /// Wall-clock dilation factor for experiments (1.0 = real time). See
     /// `util::clock`.
     pub time_scale: f64,
@@ -310,6 +381,20 @@ impl Default for ClusterConfig {
     }
 }
 
+impl Default for ModelPlacementConfig {
+    fn default() -> Self {
+        ModelPlacementConfig {
+            policy: PlacementPolicy::Static,
+            memory_budget_mb: 0.0,
+            load_threshold: 50.0,
+            unload_threshold: 10.0,
+            cooldown: Duration::from_secs(10),
+            demand_window: Duration::from_secs(15),
+            min_replicas_per_model: 1,
+        }
+    }
+}
+
 impl Default for MonitoringConfig {
     fn default() -> Self {
         MonitoringConfig {
@@ -330,6 +415,7 @@ impl Default for DeploymentConfig {
             autoscaler: AutoscalerConfig::default(),
             cluster: ClusterConfig::default(),
             monitoring: MonitoringConfig::default(),
+            model_placement: ModelPlacementConfig::default(),
             time_scale: 1.0,
         }
     }
@@ -430,7 +516,7 @@ impl DeploymentConfig {
     pub fn from_value(root: &Value) -> Result<Self> {
         check_keys(
             root,
-            &["name", "server", "gateway", "autoscaler", "cluster", "monitoring", "time_scale"],
+            &["name", "server", "gateway", "autoscaler", "cluster", "monitoring", "model_placement", "time_scale"],
             "<root>",
         )?;
         let d = DeploymentConfig::default();
@@ -568,6 +654,31 @@ impl DeploymentConfig {
             tracing: get_bool(mon, "tracing", d.monitoring.tracing)?,
         };
 
+        let mp = root.get("model_placement").unwrap_or(&empty);
+        check_keys(
+            mp,
+            &["policy", "memory_budget_mb", "load_threshold", "unload_threshold", "cooldown", "demand_window", "min_replicas_per_model"],
+            "model_placement",
+        )?;
+        let model_placement = ModelPlacementConfig {
+            policy: match mp.get("policy") {
+                None => d.model_placement.policy,
+                Some(x) => PlacementPolicy::parse(
+                    x.as_str().context("'policy' must be a string")?,
+                )?,
+            },
+            memory_budget_mb: get_f64(mp, "memory_budget_mb", d.model_placement.memory_budget_mb)?,
+            load_threshold: get_f64(mp, "load_threshold", d.model_placement.load_threshold)?,
+            unload_threshold: get_f64(mp, "unload_threshold", d.model_placement.unload_threshold)?,
+            cooldown: get_duration(mp, "cooldown", d.model_placement.cooldown)?,
+            demand_window: get_duration(mp, "demand_window", d.model_placement.demand_window)?,
+            min_replicas_per_model: get_usize(
+                mp,
+                "min_replicas_per_model",
+                d.model_placement.min_replicas_per_model,
+            )?,
+        };
+
         let cfg = DeploymentConfig {
             name,
             server,
@@ -575,6 +686,7 @@ impl DeploymentConfig {
             autoscaler,
             cluster,
             monitoring,
+            model_placement,
             time_scale,
         };
         cfg.validate()?;
@@ -655,6 +767,26 @@ impl DeploymentConfig {
         }
         if !(0.0..=1.0).contains(&self.cluster.pod_failure_rate) {
             bail!("cluster.pod_failure_rate must be in [0, 1]");
+        }
+        if self.model_placement.memory_budget_mb < 0.0 {
+            bail!("model_placement.memory_budget_mb must be >= 0");
+        }
+        if self.model_placement.load_threshold <= 0.0 {
+            bail!("model_placement.load_threshold must be > 0");
+        }
+        if self.model_placement.unload_threshold < 0.0 {
+            bail!("model_placement.unload_threshold must be >= 0");
+        }
+        if self.model_placement.unload_threshold >= self.model_placement.load_threshold {
+            bail!(
+                "model_placement.unload_threshold ({}) must be below load_threshold ({}) \
+                 (hysteresis band)",
+                self.model_placement.unload_threshold,
+                self.model_placement.load_threshold
+            );
+        }
+        if self.model_placement.min_replicas_per_model == 0 {
+            bail!("model_placement.min_replicas_per_model must be >= 1");
         }
         if self.time_scale <= 0.0 {
             bail!("time_scale must be > 0");
@@ -799,6 +931,66 @@ monitoring:
     fn lb_policy_roundtrip_names() {
         for p in [LbPolicy::RoundRobin, LbPolicy::LeastConnection, LbPolicy::UtilizationAware, LbPolicy::Random] {
             assert_eq!(LbPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn model_placement_defaults_are_legacy() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert_eq!(cfg.model_placement.policy, PlacementPolicy::Static);
+        assert_eq!(cfg.model_placement.memory_budget_mb, 0.0);
+        assert!(!cfg.model_placement.mesh_enabled());
+    }
+
+    #[test]
+    fn model_placement_parses() {
+        let text = r#"
+model_placement:
+  policy: dynamic
+  memory_budget_mb: 0.25
+  load_threshold: 120
+  unload_threshold: 30
+  cooldown: 2.5
+  demand_window: 8
+  min_replicas_per_model: 1
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let mp = &cfg.model_placement;
+        assert_eq!(mp.policy, PlacementPolicy::Dynamic);
+        assert!(mp.mesh_enabled());
+        assert_eq!(mp.budget_bytes(), 250_000);
+        assert_eq!(mp.load_threshold, 120.0);
+        assert_eq!(mp.unload_threshold, 30.0);
+        assert!((mp.cooldown.as_secs_f64() - 2.5).abs() < 1e-9);
+        assert!((mp.demand_window.as_secs_f64() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_placement_static_with_budget_enables_mesh() {
+        let cfg = DeploymentConfig::from_yaml(
+            "model_placement:\n  policy: static\n  memory_budget_mb: 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model_placement.policy, PlacementPolicy::Static);
+        assert!(cfg.model_placement.mesh_enabled());
+    }
+
+    #[test]
+    fn model_placement_bad_values_rejected() {
+        assert!(DeploymentConfig::from_yaml("model_placement:\n  policy: magic\n").is_err());
+        // inverted hysteresis band
+        assert!(DeploymentConfig::from_yaml(
+            "model_placement:\n  load_threshold: 10\n  unload_threshold: 20\n"
+        )
+        .is_err());
+        assert!(DeploymentConfig::from_yaml(
+            "model_placement:\n  min_replicas_per_model: 0\n"
+        )
+        .is_err());
+        // typo protection
+        assert!(DeploymentConfig::from_yaml("model_placement:\n  polcy: static\n").is_err());
+        for p in [PlacementPolicy::Static, PlacementPolicy::Dynamic] {
+            assert_eq!(PlacementPolicy::parse(p.name()).unwrap(), p);
         }
     }
 }

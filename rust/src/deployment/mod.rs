@@ -17,6 +17,7 @@
 //!
 //! [`Deployment::down`] tears everything back down in reverse order.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -28,6 +29,7 @@ use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
 use crate::metrics::exposition::MetricsServer;
 use crate::metrics::{MetricStore, Registry, Scraper};
+use crate::modelmesh::{initial_placement, ModelRouter, PlacementController};
 use crate::orchestrator::{Cluster, InstanceFactory};
 use crate::runtime::PjrtRuntime;
 use crate::server::{Instance, ModelRepository};
@@ -45,6 +47,10 @@ pub struct Deployment {
     pub cluster: Arc<Cluster>,
     pub gateway: Gateway,
     pub autoscaler: Arc<Autoscaler>,
+    /// Model-aware routing table, when the modelmesh is active.
+    pub router: Option<Arc<ModelRouter>>,
+    /// Placement controller, when the modelmesh is active.
+    pub placement: Option<Arc<PlacementController>>,
     metrics_http: Option<MetricsServer>,
     _scraper: Scraper,
 }
@@ -86,7 +92,44 @@ impl Deployment {
             }
         });
 
-        // Instance factory: what the cluster runs on each pod start.
+        // Modelmesh: per-model routing + placement state, when enabled.
+        let mesh_catalog: Option<Vec<(String, u64)>> = if cfg.model_placement.mesh_enabled() {
+            let catalog: Vec<(String, u64)> = model_names
+                .iter()
+                .map(|n| {
+                    let entry = repository.get(n).expect("model just loaded");
+                    (n.clone(), entry.memory_bytes())
+                })
+                .collect();
+            let budget = cfg.model_placement.budget_bytes();
+            if budget > 0 {
+                for (name, mem) in &catalog {
+                    anyhow::ensure!(
+                        *mem <= budget,
+                        "model '{name}' needs {mem} bytes but \
+                         model_placement.memory_budget_mb allows only {budget} \
+                         bytes per instance",
+                    );
+                }
+            }
+            Some(catalog)
+        } else {
+            None
+        };
+        let router = mesh_catalog.as_ref().map(|_| {
+            Arc::new(ModelRouter::new(
+                &model_names,
+                cfg.gateway.lb_policy,
+                cfg.gateway.max_inflight_per_instance,
+                &registry,
+                0x4D455348, // "MESH"
+            ))
+        });
+
+        // Instance factory: what the cluster runs on each pod start. With
+        // the mesh active, each new pod gets its initial placement
+        // (balanced rotation under the memory budget) before it is marked
+        // Ready by the cluster.
         let factory: InstanceFactory = {
             let repo = Arc::clone(&repository);
             let models = cfg.server.models.clone();
@@ -95,8 +138,12 @@ impl Deployment {
             let queue_capacity = cfg.server.queue_capacity;
             let util_window = cfg.server.util_window;
             let mode = cfg.server.execution;
+            let mesh = mesh_catalog
+                .clone()
+                .map(|catalog| (catalog, cfg.model_placement.budget_bytes()));
+            let placement_seq = Arc::new(AtomicUsize::new(0));
             Arc::new(move |name: &str| {
-                Instance::start_with_mode(
+                let inst = Instance::start_with_mode(
                     name,
                     Arc::clone(&repo),
                     &models,
@@ -105,7 +152,18 @@ impl Deployment {
                     queue_capacity,
                     util_window,
                     mode,
-                )
+                );
+                if let Some((catalog, budget)) = &mesh {
+                    // The rotation index is a plain counter, so a pod
+                    // replacing a failed one may boot with a different
+                    // slot than the pod it replaces. That is fine: the
+                    // placement controller's min-replica repair pass
+                    // (which runs under static policy too) re-hosts any
+                    // model the churn left without a replica.
+                    let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
+                    inst.set_loaded_models(&initial_placement(catalog, *budget, idx));
+                }
+                inst
             })
         };
 
@@ -141,14 +199,35 @@ impl Deployment {
             None
         };
 
-        let gateway = Gateway::start(
+        let gateway = Gateway::start_with_router(
             &cfg.gateway,
             cluster.endpoints_handle(),
             clock.clone(),
             registry.clone(),
             tracer.clone(),
             pressure,
+            router.clone(),
         )?;
+
+        // Placement controller rides the cluster reconcile loop: pools
+        // follow pod churn every pass, and (dynamic policy) models move
+        // toward demand.
+        let placement = match (&mesh_catalog, &router) {
+            (Some(catalog), Some(router)) => {
+                let controller = PlacementController::new(
+                    cfg.model_placement.clone(),
+                    catalog.clone(),
+                    Arc::clone(router),
+                    store.clone(),
+                    clock.clone(),
+                    &registry,
+                );
+                let hooked = Arc::clone(&controller);
+                cluster.set_reconcile_hook(Arc::new(move |eps| hooked.reconcile(eps)));
+                Some(controller)
+            }
+            _ => None,
+        };
 
         let autoscaler = Autoscaler::start(
             cfg.autoscaler.clone(),
@@ -165,12 +244,17 @@ impl Deployment {
         };
 
         log::info!(
-            "deployment '{}' up: {} models, {} initial replicas, lb={}, autoscaler={}",
+            "deployment '{}' up: {} models, {} initial replicas, lb={}, autoscaler={}, placement={}",
             cfg.name,
             model_names.len(),
             initial,
             cfg.gateway.lb_policy.name(),
             if cfg.autoscaler.enabled { "on" } else { "off" },
+            if cfg.model_placement.mesh_enabled() {
+                cfg.model_placement.policy.name()
+            } else {
+                "off"
+            },
         );
 
         Ok(Deployment {
@@ -183,6 +267,8 @@ impl Deployment {
             cluster,
             gateway,
             autoscaler,
+            router,
+            placement,
             metrics_http,
             _scraper: scraper,
         })
@@ -268,6 +354,7 @@ mod tests {
                 retention: Duration::from_secs(600),
                 tracing: false,
             },
+            model_placement: Default::default(),
             time_scale: 1.0,
         }
     }
@@ -284,6 +371,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "pjrt"),
+        ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+    )]
     fn boots_and_serves_real_pjrt() {
         let d = Deployment::up(fast_cfg(ExecutionMode::Real)).unwrap();
         assert!(d.wait_ready(1, Duration::from_secs(10)));
@@ -341,6 +432,82 @@ mod tests {
     fn invalid_config_rejected() {
         let mut cfg = fast_cfg(ExecutionMode::Simulated);
         cfg.server.replicas = 0;
+        assert!(Deployment::up(cfg).is_err());
+    }
+
+    fn two_model_mesh_cfg() -> DeploymentConfig {
+        let mut cfg = fast_cfg(ExecutionMode::Simulated);
+        cfg.server.replicas = 2;
+        cfg.server.models = vec![
+            ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            },
+            ModelConfig {
+                name: "particlenet".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            },
+        ];
+        // Fits either model alone (icecube_cnn ~152 KB, particlenet
+        // ~87 KB of f32 weights) but not both: placement must partition.
+        cfg.model_placement.memory_budget_mb = 0.2;
+        cfg
+    }
+
+    #[test]
+    fn mesh_static_partitions_and_serves() {
+        let d = Deployment::up(two_model_mesh_cfg()).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(300)); // one reconcile pass
+        let router = d.router.as_ref().unwrap();
+        // Balanced rotation: one replica each, on different instances.
+        assert_eq!(router.replicas("icecube_cnn"), 1);
+        assert_eq!(router.replicas("particlenet"), 1);
+        // Both models served through their per-model balancers.
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        let r1 = client.infer("icecube_cnn", Tensor::zeros(vec![2, 16, 16, 3])).unwrap();
+        assert_eq!(r1.status, Status::Ok, "{}", r1.error);
+        assert_eq!(r1.output.shape(), &[2, 3]);
+        let r2 = client.infer("particlenet", Tensor::zeros(vec![2, 64, 7])).unwrap();
+        assert_eq!(r2.status, Status::Ok, "{}", r2.error);
+        assert_eq!(r2.output.shape(), &[2, 2]);
+        // Memory budget respected on every instance.
+        let budget = d.cfg.model_placement.budget_bytes();
+        for inst in d.cluster.endpoints() {
+            assert!(inst.memory_used() <= budget, "{} over budget", inst.id);
+        }
+        d.down();
+    }
+
+    #[test]
+    fn mesh_dynamic_policy_boots() {
+        let mut cfg = two_model_mesh_cfg();
+        cfg.model_placement.policy = crate::config::PlacementPolicy::Dynamic;
+        cfg.model_placement.cooldown = Duration::from_millis(200);
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        assert!(d.placement.is_some());
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        let r = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(r.status, Status::Ok, "{}", r.error);
+        d.down();
+    }
+
+    #[test]
+    fn mesh_budget_smaller_than_model_rejected() {
+        let mut cfg = two_model_mesh_cfg();
+        // icecube_cnn alone needs ~152 KB: 0.1 MB cannot host it.
+        cfg.model_placement.memory_budget_mb = 0.1;
         assert!(Deployment::up(cfg).is_err());
     }
 }

@@ -207,6 +207,7 @@ pub fn fig_config(
             retention: Duration::from_secs(7200),
             tracing: false,
         },
+        model_placement: ModelPlacementConfig::default(),
         time_scale,
     }
 }
@@ -219,6 +220,94 @@ pub fn fig_workload() -> WorkloadSpec {
     spec
 }
 
+/// Two-model deployment for the modelmesh ablation: four instances whose
+/// memory budget fits exactly ONE model (particlenet ~87 KB, icecube_cnn
+/// ~152 KB of f32 weights, budget 0.2 MB), so placement must partition
+/// the fleet. `policy` selects the arm: `Static` pins the boot-time
+/// balanced rotation (2+2), `Dynamic` lets the controller move replicas
+/// toward demand.
+pub fn modelmesh_config(
+    time_scale: f64,
+    policy: crate::config::PlacementPolicy,
+) -> DeploymentConfig {
+    use crate::config::*;
+    use std::path::PathBuf;
+
+    let service = ServiceModelConfig {
+        base: Duration::from_millis(5),
+        per_row: Duration::from_micros(1500),
+    };
+    let model = |name: &str| ModelConfig {
+        name: name.into(),
+        max_queue_delay: Duration::from_millis(2),
+        preferred_batch: 8,
+        service_model: service,
+    };
+    DeploymentConfig {
+        name: format!("mesh-{}", policy.name()),
+        server: ServerConfig {
+            replicas: 4,
+            models: vec![model("particlenet"), model("icecube_cnn")],
+            repository: PathBuf::from("artifacts"),
+            startup_delay: Duration::from_millis(500),
+            execution: ExecutionMode::Simulated,
+            // Small queues + a small in-flight cap: overload on the hot
+            // model's pool shows up as sheds rather than unbounded queues.
+            queue_capacity: 8,
+            util_window: 10.0,
+        },
+        gateway: GatewayConfig {
+            listen: "127.0.0.1:0".into(),
+            lb_policy: LbPolicy::LeastConnection,
+            max_inflight_per_instance: 4,
+            ..GatewayConfig::default()
+        },
+        autoscaler: AutoscalerConfig {
+            enabled: false,
+            max_replicas: 4, // cluster capacity below
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(500),
+            termination_grace: Duration::from_secs(1),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(7200),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            policy,
+            memory_budget_mb: 0.2,
+            // Hot per-replica demand sits in the hundreds of req/s, cold
+            // in the tens: thresholds bracket them so the controller
+            // settles at 3 hot + 1 cold and holds (hysteresis band).
+            load_threshold: 150.0,
+            unload_threshold: 60.0,
+            cooldown: Duration::from_secs(5),
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+        },
+        time_scale,
+    }
+}
+
+/// The skewed two-model workload for the modelmesh ablation:
+/// `hot_fraction` of requests hit particlenet, the rest icecube_cnn,
+/// single-row requests with a light think time.
+pub fn modelmesh_workload(addr: &str, hot_fraction: f64, clock: crate::util::clock::Clock)
+    -> crate::workload::MixedPool {
+    let mut hot = WorkloadSpec::new("particlenet", 1, vec![64, 7]);
+    hot.think_time = Duration::from_millis(5);
+    let mut cold = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+    cold.think_time = Duration::from_millis(5);
+    crate::workload::MixedPool::hot_cold(addr, hot, cold, hot_fraction, clock, 0xAB1A7E)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +316,44 @@ mod tests {
     fn fig_config_validates() {
         fig_config(4.0, None, Duration::from_secs(300)).validate().unwrap();
         fig_config(8.0, Some(10), Duration::from_secs(60)).validate().unwrap();
+    }
+
+    #[test]
+    fn modelmesh_config_validates() {
+        use crate::config::PlacementPolicy;
+        for policy in [PlacementPolicy::Static, PlacementPolicy::Dynamic] {
+            let cfg = modelmesh_config(8.0, policy);
+            cfg.validate().unwrap();
+            assert!(cfg.model_placement.mesh_enabled());
+        }
+    }
+
+    #[test]
+    fn short_mesh_run_holds_invariants() {
+        use crate::config::PlacementPolicy;
+        use crate::workload::Schedule;
+        // Compressed dynamic run under a 90/10 skew: whatever the
+        // controller did, the placement invariants must hold afterwards.
+        let cfg = modelmesh_config(20.0, PlacementPolicy::Dynamic);
+        let budget = cfg.model_placement.budget_bytes();
+        let d = crate::deployment::Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(4, Duration::from_secs(30)));
+        let pool = modelmesh_workload(&d.endpoint(), 0.9, d.clock.clone());
+        let report = pool.run(&Schedule::constant(12, Duration::from_secs(40)));
+        assert!(report.total_ok() > 0, "nothing served: {:?}", report.per_model);
+        let router = d.router.as_ref().unwrap();
+        // every model keeps >= min replicas, budget never violated, and
+        // the hot model never ends up below the cold one
+        assert!(router.replicas("particlenet") >= 1);
+        assert!(router.replicas("icecube_cnn") >= 1);
+        assert!(
+            router.replicas("particlenet") >= router.replicas("icecube_cnn"),
+            "hot model lost replicas under skewed load"
+        );
+        for inst in d.cluster.endpoints() {
+            assert!(inst.memory_used() <= budget, "{} over memory budget", inst.id);
+        }
+        d.down();
     }
 
     #[test]

@@ -60,21 +60,53 @@ impl LoadBalancer {
     /// endpoint is gone or saturated (the caller sheds the request).
     pub fn pick(&self) -> Option<Arc<Instance>> {
         let eps = self.endpoints.read().unwrap();
-        let eligible: Vec<&Arc<Instance>> = eps
-            .iter()
-            .filter(|i| {
-                i.state() == InstanceState::Ready
-                    && (self.max_inflight == 0 || i.inflight() < self.max_inflight)
-            })
-            .collect();
+        let routable = |i: &Arc<Instance>| {
+            i.state() == InstanceState::Ready
+                && (self.max_inflight == 0 || i.inflight() < self.max_inflight)
+        };
+
+        // Round-robin rotates over the *full* endpoint list, skipping
+        // ineligible entries without consuming a cursor slot for them.
+        // The previous implementation advanced the cursor over a
+        // re-filtered eligible list, so a saturated/draining endpoint
+        // shifted which instance subsequent picks landed on and starved
+        // the endpoints after it; anchoring the rotation on stable list
+        // positions keeps the cycle fair across eligibility changes.
+        if self.policy == LbPolicy::RoundRobin {
+            let len = eps.len();
+            if len == 0 {
+                return None;
+            }
+            loop {
+                let cur = self.rr_cursor.load(Ordering::Relaxed);
+                let start = cur % len;
+                let hit = (0..len)
+                    .map(|off| (start + off) % len)
+                    .find(|&i| routable(&eps[i]));
+                let Some(i) = hit else { return None };
+                if self
+                    .rr_cursor
+                    .compare_exchange_weak(
+                        cur,
+                        (i + 1) % len,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok()
+                {
+                    return Some(Arc::clone(&eps[i]));
+                }
+            }
+        }
+
+        let eligible: Vec<&Arc<Instance>> = eps.iter().filter(|i| routable(i)).collect();
         if eligible.is_empty() {
             return None;
         }
         let chosen = match self.policy {
-            LbPolicy::RoundRobin => {
-                let idx = self.rr_cursor.fetch_add(1, Ordering::Relaxed);
-                eligible[idx % eligible.len()]
-            }
+            // Handled above (needs full-list positions, not the filtered
+            // view).
+            LbPolicy::RoundRobin => unreachable!("round-robin picked early"),
             LbPolicy::Random => {
                 let idx = self.rng.lock().unwrap().below(eligible.len());
                 eligible[idx]
@@ -221,6 +253,46 @@ mod tests {
             seen.insert(lb.pick().unwrap().id.clone());
         }
         assert_eq!(seen.len(), 3, "ties not spread: {seen:?}");
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn round_robin_skips_saturated_without_starving() {
+        // Endpoint 1 is saturated (cap 1, one queued request). The
+        // rotation must keep alternating 0, 2, 0, 2 — the saturated
+        // endpoint is skipped without shifting the cycle, so endpoint 2
+        // (after the saturated one) is not starved.
+        let (eps, insts) = endpoints(3);
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 1, 1);
+        let _rx = insts[1]
+            .submit("icecube_cnn", crate::runtime::Tensor::zeros(vec![1, 16, 16, 3]), 0)
+            .unwrap();
+        let picks: Vec<String> = (0..6).map(|_| lb.pick().unwrap().id.clone()).collect();
+        let ones = picks.iter().filter(|id| **id == insts[1].id).count();
+        assert_eq!(ones, 0, "picked a saturated endpoint: {picks:?}");
+        let zeros = picks.iter().filter(|id| **id == insts[0].id).count();
+        let twos = picks.iter().filter(|id| **id == insts[2].id).count();
+        assert_eq!(zeros, 3, "endpoint 0 starved: {picks:?}");
+        assert_eq!(twos, 3, "endpoint 2 starved after the saturated one: {picks:?}");
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn round_robin_resumes_recovered_endpoint() {
+        // Drain endpoint 0, take two picks, recover it: the rotation
+        // continues from its position instead of jumping.
+        let (eps, insts) = endpoints(3);
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 0, 1);
+        insts[0].drain();
+        assert_eq!(lb.pick().unwrap().id, insts[1].id);
+        assert_eq!(lb.pick().unwrap().id, insts[2].id);
+        insts[0].mark_ready();
+        assert_eq!(lb.pick().unwrap().id, insts[0].id);
+        assert_eq!(lb.pick().unwrap().id, insts[1].id);
         for i in insts {
             i.stop();
         }

@@ -30,6 +30,7 @@ use anyhow::Result;
 
 use crate::config::GatewayConfig;
 use crate::metrics::registry::{labels, Registry};
+use crate::modelmesh::ModelRouter;
 use crate::rpc::codec::{InferRequest, InferResponse, RequestKind, Status};
 use crate::rpc::server::{Handler, RpcServer};
 use crate::server::batcher::ExecOutcome;
@@ -61,6 +62,25 @@ impl Gateway {
         registry: Registry,
         tracer: Tracer,
         pressure: Option<PressureGate>,
+    ) -> Result<Self> {
+        Self::start_with_router(cfg, endpoints, clock, registry, tracer, pressure, None)
+    }
+
+    /// [`Gateway::start`] with a model-aware routing table. When `router`
+    /// is set, infer requests are routed through the per-model load
+    /// balancer for `req.model` (the modelmesh path — "Envoy Proxy will
+    /// be configured to extract model name from gRPC request body and
+    /// use it to reroute the request to the load balancer corresponding
+    /// to that model"); the global balancer still answers health probes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_router(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+        router: Option<Arc<ModelRouter>>,
     ) -> Result<Self> {
         let lb = Arc::new(LoadBalancer::new(
             cfg.lb_policy,
@@ -95,6 +115,7 @@ impl Gateway {
             let response = handle_request(
                 req,
                 &lb2,
+                router.as_deref(),
                 &authenticator,
                 &bucket,
                 pressure.as_deref(),
@@ -145,9 +166,11 @@ impl Gateway {
 }
 
 /// The per-request policy pipeline.
+#[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: InferRequest,
     lb: &LoadBalancer,
+    router: Option<&ModelRouter>,
     authenticator: &Authenticator,
     bucket: &TokenBucket,
     pressure: Option<&PressureGate>,
@@ -188,11 +211,33 @@ fn handle_request(
     // 3. Route. One retry on a different instance if the first pick
     //    rejects (it may have saturated between pick and submit). The
     //    rejected submit hands the tensor back, so no per-request clone.
+    //    With a model router the pick goes through the per-model balancer
+    //    for `req.model`; a ModelNotFound rejection from an instance is
+    //    then a stale-pool race (the model was just unloaded), so the
+    //    retry picks a fresh replica instead of giving up.
     let mut input = req.input;
     let mut last_status = Status::Overloaded;
     let mut last_msg = String::from("no ready instances");
     for _attempt in 0..2 {
-        let Some(instance) = lb.pick() else { break };
+        let instance = match router {
+            Some(r) => match r.pick(&req.model) {
+                Ok(inst) => inst,
+                Err(status) => {
+                    last_status = status;
+                    last_msg = match status {
+                        Status::ModelNotFound => {
+                            format!("model '{}' not in the serving catalog", req.model)
+                        }
+                        _ => format!("no replica for model '{}' accepting work", req.model),
+                    };
+                    break;
+                }
+            },
+            None => match lb.pick() {
+                Some(inst) => inst,
+                None => break,
+            },
+        };
         match instance.submit(&req.model, input, req.trace_id) {
             Ok(rx) => {
                 let outcome = rx.recv().unwrap_or(ExecOutcome::Err {
@@ -205,8 +250,14 @@ fn handle_request(
                 input = returned;
                 last_status = status;
                 last_msg = format!("instance {} rejected: {}", instance.id, status.name());
-                // Model/shape errors will fail identically everywhere.
-                if matches!(status, Status::ModelNotFound | Status::BadRequest) {
+                // Model/shape errors fail identically everywhere — except
+                // a router-mode ModelNotFound, which can be a stale pool.
+                let terminal = match status {
+                    Status::BadRequest => true,
+                    Status::ModelNotFound => router.is_none(),
+                    _ => false,
+                };
+                if terminal {
                     break;
                 }
             }
@@ -515,6 +566,95 @@ mod tests {
         std::thread::sleep(Duration::from_millis(300));
         let mut c4 = stack.client();
         assert_eq!(c4.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+    }
+
+    #[test]
+    fn model_router_routes_by_model() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let repo = Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into(), "particlenet".into()],
+            )
+            .unwrap(),
+        );
+        let models: Vec<ModelConfig> = ["icecube_cnn", "particlenet"]
+            .iter()
+            .map(|m| ModelConfig {
+                name: m.to_string(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            })
+            .collect();
+        let mk = |id: &str| {
+            let inst = Instance::start_with_mode(
+                id,
+                Arc::clone(&repo),
+                &models,
+                clock.clone(),
+                registry.clone(),
+                64,
+                5.0,
+                ExecutionMode::Simulated,
+            );
+            inst.mark_ready();
+            inst
+        };
+        let a = mk("mesh-a");
+        let b = mk("mesh-b");
+        // disjoint serving sets: a=cnn only, b=particlenet only
+        a.set_loaded_models(&["icecube_cnn".into()]);
+        b.set_loaded_models(&["particlenet".into()]);
+        let router = Arc::new(crate::modelmesh::ModelRouter::new(
+            &["icecube_cnn".into(), "particlenet".into()],
+            crate::config::LbPolicy::RoundRobin,
+            0,
+            &registry,
+            3,
+        ));
+        router.sync(&[Arc::clone(&a), Arc::clone(&b)]);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&a), Arc::clone(&b)]));
+        let gateway = Gateway::start_with_router(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+            Some(Arc::clone(&router)),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+
+        // Each model lands on the instance advertising it (output widths
+        // differ per model, proving the right engine family served it).
+        let r1 = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(r1.status, Status::Ok, "{}", r1.error);
+        assert_eq!(r1.output.shape(), &[1, 3]);
+        let r2 = client.infer("particlenet", Tensor::zeros(vec![1, 64, 7])).unwrap();
+        assert_eq!(r2.status, Status::Ok, "{}", r2.error);
+        assert_eq!(r2.output.shape(), &[1, 2]);
+
+        // Outside the catalog: not found.
+        let r3 = client.infer("nope", Tensor::zeros(vec![1, 2])).unwrap();
+        assert_eq!(r3.status, Status::ModelNotFound);
+
+        // Unloading the only replica sheds that model, others unaffected.
+        assert!(router.unload(&b, "particlenet"));
+        let r4 = client.infer("particlenet", Tensor::zeros(vec![1, 64, 7])).unwrap();
+        assert_eq!(r4.status, Status::Overloaded);
+        let r5 = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(r5.status, Status::Ok);
+
+        assert_eq!(router.routed_count("icecube_cnn"), 2);
+        gateway.shutdown();
+        a.stop();
+        b.stop();
     }
 
     #[test]

@@ -16,8 +16,22 @@
 //!   tracing ([`telemetry`]) and the perf_analyzer-style load generator
 //!   ([`workload`]).
 //!
+//! On top of the base paper stack sits the **modelmesh** ([`modelmesh`]):
+//! dynamic model placement and model-aware routing, reproducing the
+//! SuperSONIC dynamic-model-loading follow-up. Instances advertise a
+//! per-pod serving set (the pod-label mechanism), the gateway routes each
+//! request through a per-model load balancer whose address pool follows
+//! those labels, and a placement controller — driven by the cluster
+//! reconcile loop — loads/unloads models per instance from GPU-memory
+//! budgets and per-model demand. The `model_placement` config section
+//! selects `static` (fixed placement) or `dynamic` (demand-driven)
+//! policies; with the default unlimited budget the deployment degenerates
+//! to the base all-models-everywhere setup.
+//!
 //! Python never runs on the request path: `make artifacts` is the only step that
-//! invokes it, and the resulting binary is self-contained.
+//! invokes it, and the resulting binary is self-contained. Real PJRT
+//! execution requires the optional `pjrt` cargo feature (the `xla` crate);
+//! without it, simulated execution covers the full control plane.
 
 pub mod autoscaler;
 pub mod config;
@@ -25,6 +39,7 @@ pub mod deployment;
 pub mod experiments;
 pub mod gateway;
 pub mod metrics;
+pub mod modelmesh;
 pub mod orchestrator;
 pub mod rpc;
 pub mod runtime;

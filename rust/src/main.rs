@@ -161,6 +161,18 @@ fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
         cfg.cluster.gpus_per_node,
         cfg.cluster.nodes * cfg.cluster.gpus_per_node
     );
+    if cfg.model_placement.mesh_enabled() {
+        println!(
+            "  placement:   {} (budget {} MB/instance, thresholds {}/{} req/s, min {} replica(s)/model)",
+            cfg.model_placement.policy.name(),
+            cfg.model_placement.memory_budget_mb,
+            cfg.model_placement.load_threshold,
+            cfg.model_placement.unload_threshold,
+            cfg.model_placement.min_replicas_per_model
+        );
+    } else {
+        println!("  placement:   off (all models on every instance)");
+    }
     Ok(())
 }
 

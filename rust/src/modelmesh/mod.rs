@@ -1,0 +1,49 @@
+//! Dynamic model placement and model-aware routing — the "modelmesh".
+//!
+//! The base SuperSONIC deployment is all-models-everywhere: one global
+//! load balancer over all Triton instances, every instance serving every
+//! model in the repository. The dynamic-model-loading follow-up work
+//! replaces that with:
+//!
+//! * **per-model load balancers** ([`router::ModelRouter`]) — the gateway
+//!   extracts the model name from the request and routes through a
+//!   model-specific [`LoadBalancer`](crate::gateway::lb::LoadBalancer)
+//!   whose address pool contains only the instances currently advertising
+//!   that model (the Kubernetes pod-label mechanism:
+//!   [`Instance::loaded_models`](crate::server::Instance::loaded_models));
+//! * **a placement controller** ([`placement::PlacementController`]) —
+//!   each instance has a simulated GPU-memory budget (models cost
+//!   [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes));
+//!   a reconcile loop, driven by the cluster's reconcile thread, loads
+//!   and unloads models per instance from per-model demand (request rate
+//!   from the metrics store plus live queue depth) under that budget —
+//!   the snippet's "decision logic based on GPU memory and load".
+//!
+//! Placement policies:
+//!
+//! * `static` — the initial placement (balanced rotation of models over
+//!   instances, each filled up to its memory budget) never changes by
+//!   demand. One exception: min-replica *repairs* run under both
+//!   policies — when pod churn kills the last replica of a model, the
+//!   reconcile pass re-hosts it (evicting a surplus copy of another
+//!   model if memory requires), because losing a model to a pod failure
+//!   is not a placement decision. With an unlimited budget static
+//!   degenerates to all-models-everywhere.
+//! * `dynamic` — the controller moves models toward demand: hot models
+//!   gain replicas on instances with free memory (evicting cold surplus
+//!   replicas to make room), cold models shrink to a configured minimum.
+//!
+//! Ordering invariant (checked by the property test): a model is added
+//! to an instance's advertised set *before* the instance joins that
+//! model's routing pool, and removed from the pool *before* the label is
+//! dropped — so the pool is always a subset of the advertisers and a
+//! request for model M can never reach an instance that does not have M
+//! loaded.
+
+pub mod placement;
+pub mod router;
+
+pub use placement::{
+    initial_placement, InstanceView, Move, PlacementController, PlacementCore,
+};
+pub use router::ModelRouter;

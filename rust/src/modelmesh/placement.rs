@@ -1,0 +1,644 @@
+//! Placement: which models live on which instances.
+//!
+//! Split like the autoscaler into a pure decision core and a thin driver:
+//!
+//! * [`PlacementCore`] — given a snapshot of instance states (advertised
+//!   models + memory used) and per-model demand, plan `Load`/`Unload`
+//!   moves under the per-instance memory budget, with per-(instance,
+//!   model) cooldowns and a load/unload hysteresis band. Pure, so it is
+//!   unit-tested without threads.
+//! * [`PlacementController`] — samples demand (per-model routed-request
+//!   rate from the [`MetricStore`] plus live queue depth), feeds the
+//!   core, and applies the moves through the [`ModelRouter`] (which owns
+//!   the label/pool ordering invariant). Driven by the cluster's
+//!   reconcile loop via [`Cluster::set_reconcile_hook`](crate::orchestrator::Cluster::set_reconcile_hook).
+//!
+//! Demand is `rate + queued`: the routed-request rate answers "how much
+//! traffic does this model pull", the live queue depth answers "is it
+//! falling behind right now" — so a saturated model attracts replicas
+//! even before the scraped rate catches up.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ModelPlacementConfig, PlacementPolicy};
+use crate::metrics::registry::{labels, Counter, Gauge, Registry};
+use crate::metrics::MetricStore;
+use crate::modelmesh::router::ModelRouter;
+use crate::server::Instance;
+use crate::util::clock::Clock;
+
+/// Initial model set for instance number `instance_index`: models are
+/// taken in a rotation starting at `instance_index % catalog.len()` and
+/// greedily added while the memory budget allows (budget 0 = unlimited,
+/// i.e. all-models-everywhere). The rotation balances replicas across
+/// models when the budget forces a partition.
+pub fn initial_placement(
+    catalog: &[(String, u64)],
+    budget_bytes: u64,
+    instance_index: usize,
+) -> Vec<String> {
+    let n = catalog.len();
+    let mut chosen = Vec::new();
+    let mut used = 0u64;
+    for k in 0..n {
+        let (name, mem) = &catalog[(instance_index + k) % n];
+        if budget_bytes == 0 || used + mem <= budget_bytes {
+            chosen.push(name.clone());
+            used += mem;
+        }
+    }
+    chosen
+}
+
+/// Immutable snapshot of one instance for planning.
+#[derive(Clone, Debug)]
+pub struct InstanceView {
+    /// Stable instance id (cooldowns key on it).
+    pub id: String,
+    /// Advertised models.
+    pub loaded: BTreeSet<String>,
+    /// Memory consumed by the advertised models, bytes.
+    pub mem_used: u64,
+}
+
+/// One placement change.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Move {
+    /// Load `model` onto `instance`.
+    Load { instance: String, model: String },
+    /// Unload `model` from `instance`.
+    Unload { instance: String, model: String },
+}
+
+/// Pure decision logic: demand + memory in, moves out.
+pub struct PlacementCore {
+    cfg: ModelPlacementConfig,
+    /// (model name, memory bytes), demand-independent.
+    catalog: Vec<(String, u64)>,
+    /// (instance id, model) -> clock-seconds of the last move.
+    cooldowns: BTreeMap<(String, String), f64>,
+}
+
+impl PlacementCore {
+    /// Core over a fixed catalog.
+    pub fn new(cfg: ModelPlacementConfig, catalog: Vec<(String, u64)>) -> Self {
+        PlacementCore { cfg, catalog, cooldowns: BTreeMap::new() }
+    }
+
+    fn cooldown_ok(&self, now: f64, instance: &str, model: &str) -> bool {
+        match self
+            .cooldowns
+            .get(&(instance.to_string(), model.to_string()))
+        {
+            None => true,
+            Some(&last) => now - last >= self.cfg.cooldown.as_secs_f64(),
+        }
+    }
+
+    fn stamp(&mut self, now: f64, instance: &str, model: &str) {
+        self.cooldowns
+            .insert((instance.to_string(), model.to_string()), now);
+    }
+
+    fn replica_counts(&self, views: &[InstanceView]) -> BTreeMap<String, usize> {
+        self.catalog
+            .iter()
+            .map(|(m, _)| {
+                (
+                    m.clone(),
+                    views.iter().filter(|v| v.loaded.contains(m)).count(),
+                )
+            })
+            .collect()
+    }
+
+    /// Restore models below their replica floor. Pod churn is not a
+    /// placement decision: when the last pod advertising a model dies,
+    /// the model must be re-hosted regardless of demand or policy, so
+    /// this runs under `static` too (the one exception to "static never
+    /// moves models"). If no instance has free memory, a surplus copy of
+    /// another model is evicted to make room. Repairs bypass cooldowns
+    /// (liveness over anti-thrash) but stamp them, so the demand phases
+    /// do not immediately churn a repaired placement.
+    fn repair(
+        &mut self,
+        now: f64,
+        views: &mut [InstanceView],
+        replicas: &mut BTreeMap<String, usize>,
+        moves: &mut Vec<Move>,
+    ) {
+        let budget = self.cfg.budget_bytes();
+        let catalog = self.catalog.clone();
+        for (model, mem) in &catalog {
+            while replicas[model] < self.cfg.min_replicas_per_model {
+                // Preferred: an instance with free memory.
+                let direct = views
+                    .iter()
+                    .filter(|v| !v.loaded.contains(model))
+                    .filter(|v| budget == 0 || v.mem_used + mem <= budget)
+                    .min_by_key(|v| (v.mem_used, v.loaded.len()))
+                    .map(|v| v.id.clone());
+                let target = match direct {
+                    Some(id) => Some(id),
+                    None => {
+                        // Evict the most-replicated surplus model from
+                        // some instance not hosting `model`.
+                        let evict = views
+                            .iter()
+                            .filter(|v| !v.loaded.contains(model))
+                            .filter_map(|v| {
+                                v.loaded
+                                    .iter()
+                                    .filter(|m2| {
+                                        replicas[*m2] > self.cfg.min_replicas_per_model
+                                    })
+                                    .max_by_key(|m2| replicas[*m2])
+                                    .map(|m2| (v.id.clone(), m2.clone()))
+                            })
+                            .max_by_key(|(_, m2)| replicas[m2]);
+                        match evict {
+                            None => None,
+                            Some((id, victim)) => {
+                                let vmem = catalog
+                                    .iter()
+                                    .find(|(m2, _)| *m2 == victim)
+                                    .map(|(_, b)| *b)
+                                    .unwrap_or(0);
+                                let v = views.iter_mut().find(|v| v.id == id).unwrap();
+                                v.loaded.remove(&victim);
+                                v.mem_used = v.mem_used.saturating_sub(vmem);
+                                *replicas.get_mut(&victim).unwrap() -= 1;
+                                self.stamp(now, &id, &victim);
+                                moves.push(Move::Unload {
+                                    instance: id.clone(),
+                                    model: victim,
+                                });
+                                // Only usable if the freed space fits it.
+                                let fits = budget == 0
+                                    || views
+                                        .iter()
+                                        .find(|v| v.id == id)
+                                        .is_some_and(|v| v.mem_used + mem <= budget);
+                                if fits {
+                                    Some(id)
+                                } else {
+                                    None
+                                }
+                            }
+                        }
+                    }
+                };
+                let Some(id) = target else { break }; // nothing can host it
+                let v = views.iter_mut().find(|v| v.id == id).unwrap();
+                v.loaded.insert(model.clone());
+                v.mem_used += mem;
+                *replicas.get_mut(model).unwrap() += 1;
+                self.stamp(now, &id, model);
+                moves.push(Move::Load { instance: id, model: model.clone() });
+            }
+        }
+    }
+
+    /// Repair-only pass for the `static` policy: restore lost models,
+    /// plan no demand-driven moves.
+    pub fn plan_repairs(&mut self, now: f64, views: &[InstanceView]) -> Vec<Move> {
+        if views.is_empty() {
+            return Vec::new();
+        }
+        let mut views: Vec<InstanceView> = views.to_vec();
+        let mut replicas = self.replica_counts(&views);
+        let mut moves = Vec::new();
+        self.repair(now, &mut views, &mut replicas, &mut moves);
+        moves
+    }
+
+    /// Plan one reconcile pass: repairs first, then at most one unload
+    /// and one load per model (gentle convergence); the working copy of
+    /// `views` is updated as moves are planned so later decisions see
+    /// earlier ones.
+    pub fn plan(
+        &mut self,
+        now: f64,
+        views: &[InstanceView],
+        demand: &BTreeMap<String, f64>,
+    ) -> Vec<Move> {
+        let mut moves = Vec::new();
+        if views.is_empty() {
+            return moves;
+        }
+        let mut views: Vec<InstanceView> = views.to_vec();
+        let budget = self.cfg.budget_bytes();
+        let catalog = self.catalog.clone();
+        let mut replicas = self.replica_counts(&views);
+
+        // Phase 0 — restore anything below its replica floor.
+        self.repair(now, &mut views, &mut replicas, &mut moves);
+
+        let d = |m: &str| demand.get(m).copied().unwrap_or(0.0);
+        let per_replica = |m: &str, r: usize| d(m) / r.max(1) as f64;
+
+        // Phase 1 — shrink cold models with surplus replicas. Runs first
+        // so the freed memory is available to hot loads in the same pass.
+        for (model, mem) in &catalog {
+            let r = replicas[model];
+            if r <= self.cfg.min_replicas_per_model {
+                continue;
+            }
+            if per_replica(model, r) >= self.cfg.unload_threshold {
+                continue;
+            }
+            // Victim: the advertising instance under the most memory
+            // pressure (it benefits most from the free bytes).
+            let victim_id = views
+                .iter()
+                .filter(|v| v.loaded.contains(model))
+                .filter(|v| self.cooldown_ok(now, &v.id, model))
+                .max_by_key(|v| v.mem_used)
+                .map(|v| v.id.clone());
+            if let Some(id) = victim_id {
+                let v = views.iter_mut().find(|v| v.id == id).unwrap();
+                v.loaded.remove(model);
+                v.mem_used = v.mem_used.saturating_sub(*mem);
+                *replicas.get_mut(model).unwrap() -= 1;
+                self.stamp(now, &id, model);
+                moves.push(Move::Unload { instance: id, model: model.clone() });
+            }
+        }
+
+        // Phase 2 — grow hot models, hottest first.
+        let mut hot: Vec<(String, u64, f64)> = catalog
+            .iter()
+            .filter_map(|(m, mem)| {
+                let load = per_replica(m, replicas[m]);
+                (load > self.cfg.load_threshold).then(|| (m.clone(), *mem, load))
+            })
+            .collect();
+        hot.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
+        for (model, mem, _load) in hot {
+            // Candidate: not already advertising, off cooldown, with free
+            // memory; prefer the emptiest instance.
+            let candidate_id = views
+                .iter()
+                .filter(|v| !v.loaded.contains(&model))
+                .filter(|v| self.cooldown_ok(now, &v.id, &model))
+                .filter(|v| budget == 0 || v.mem_used + mem <= budget)
+                .min_by_key(|v| (v.mem_used, v.loaded.len()))
+                .map(|v| v.id.clone());
+            if let Some(id) = candidate_id {
+                let v = views.iter_mut().find(|v| v.id == id).unwrap();
+                v.loaded.insert(model.clone());
+                v.mem_used += mem;
+                *replicas.get_mut(&model).unwrap() += 1;
+                self.stamp(now, &id, &model);
+                moves.push(Move::Load { instance: id, model });
+            }
+        }
+        moves
+    }
+}
+
+struct ModelHandles {
+    loads: Counter,
+    unloads: Counter,
+    replicas: Gauge,
+}
+
+/// The running placement controller.
+pub struct PlacementController {
+    cfg: ModelPlacementConfig,
+    catalog: Vec<(String, u64)>,
+    router: Arc<ModelRouter>,
+    store: MetricStore,
+    clock: Clock,
+    core: Mutex<PlacementCore>,
+    per_model: BTreeMap<String, ModelHandles>,
+    m_moves: Counter,
+}
+
+impl PlacementController {
+    /// Controller over `catalog` (model name + memory bytes), applying
+    /// moves through `router`.
+    pub fn new(
+        cfg: ModelPlacementConfig,
+        catalog: Vec<(String, u64)>,
+        router: Arc<ModelRouter>,
+        store: MetricStore,
+        clock: Clock,
+        registry: &Registry,
+    ) -> Arc<Self> {
+        let per_model = catalog
+            .iter()
+            .map(|(m, _)| {
+                let l = labels(&[("model", m)]);
+                (
+                    m.clone(),
+                    ModelHandles {
+                        loads: registry.counter("model_load_events_total", &l),
+                        unloads: registry.counter("model_unload_events_total", &l),
+                        replicas: registry.gauge("model_replicas", &l),
+                    },
+                )
+            })
+            .collect();
+        Arc::new(PlacementController {
+            core: Mutex::new(PlacementCore::new(cfg.clone(), catalog.clone())),
+            cfg,
+            catalog,
+            router,
+            store,
+            clock,
+            per_model,
+            m_moves: registry.counter("placement_moves_total", &labels(&[])),
+        })
+    }
+
+    /// Demand signal for one model: scraped routed-request rate over the
+    /// demand window plus the live queue depth across its pool.
+    pub fn demand_for(&self, model: &str, now: f64) -> f64 {
+        let series = format!("routed_requests_total{{model=\"{model}\"}}");
+        let rate = self
+            .store
+            .rate_over(&series, now, self.cfg.demand_window)
+            .unwrap_or(0.0);
+        let queued: usize = self
+            .router
+            .endpoints_for(model)
+            .iter()
+            .map(|i| i.queue_depth())
+            .sum();
+        rate + queued as f64
+    }
+
+    /// One reconcile pass: refresh the routing pools from the instance
+    /// labels, then plan and apply placement moves — min-replica repairs
+    /// under both policies (a model whose last pod died must be
+    /// re-hosted), demand-driven moves under `dynamic` only. Called from
+    /// the cluster reconcile loop.
+    pub fn reconcile(&self, endpoints: &[Arc<Instance>]) {
+        self.router.sync(endpoints);
+        let now = self.clock.now_secs();
+        let views: Vec<InstanceView> = endpoints
+            .iter()
+            .map(|i| InstanceView {
+                id: i.id.clone(),
+                loaded: i.loaded_models().into_iter().collect(),
+                mem_used: i.memory_used(),
+            })
+            .collect();
+        let moves = if self.cfg.policy == PlacementPolicy::Dynamic {
+            let demand: BTreeMap<String, f64> = self
+                .catalog
+                .iter()
+                .map(|(m, _)| (m.clone(), self.demand_for(m, now)))
+                .collect();
+            self.core.lock().unwrap().plan(now, &views, &demand)
+        } else {
+            self.core.lock().unwrap().plan_repairs(now, &views)
+        };
+        self.apply(endpoints, moves);
+        for (m, h) in &self.per_model {
+            h.replicas.set(self.router.replicas(m) as f64);
+        }
+    }
+
+    fn apply(&self, endpoints: &[Arc<Instance>], moves: Vec<Move>) {
+        for mv in moves {
+            match mv {
+                Move::Load { instance, model } => {
+                    if let Some(inst) = endpoints.iter().find(|i| i.id == instance) {
+                        if self.router.load(inst, &model) {
+                            log::info!("modelmesh: loaded '{model}' on {instance}");
+                            self.per_model[&model].loads.inc();
+                            self.m_moves.inc();
+                        }
+                    }
+                }
+                Move::Unload { instance, model } => {
+                    if let Some(inst) = endpoints.iter().find(|i| i.id == instance) {
+                        if self.router.unload(inst, &model) {
+                            log::info!("modelmesh: unloaded '{model}' from {instance}");
+                            self.per_model[&model].unloads.inc();
+                            self.m_moves.inc();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cfg() -> ModelPlacementConfig {
+        ModelPlacementConfig {
+            policy: PlacementPolicy::Dynamic,
+            memory_budget_mb: 1.0, // 1_000_000 bytes
+            load_threshold: 100.0,
+            unload_threshold: 20.0,
+            cooldown: Duration::from_secs(5),
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+        }
+    }
+
+    /// Two models of 600 KB each: an instance fits exactly one.
+    fn catalog() -> Vec<(String, u64)> {
+        vec![("hot".to_string(), 600_000), ("cold".to_string(), 600_000)]
+    }
+
+    fn view(id: &str, models: &[&str]) -> InstanceView {
+        InstanceView {
+            id: id.to_string(),
+            loaded: models.iter().map(|m| m.to_string()).collect(),
+            mem_used: models.len() as u64 * 600_000,
+        }
+    }
+
+    fn demand(hot: f64, cold: f64) -> BTreeMap<String, f64> {
+        [("hot".to_string(), hot), ("cold".to_string(), cold)]
+            .into_iter()
+            .collect()
+    }
+
+    #[test]
+    fn initial_placement_rotates_under_budget() {
+        let cat = catalog();
+        // budget fits one model: rotation alternates
+        assert_eq!(initial_placement(&cat, 700_000, 0), vec!["hot"]);
+        assert_eq!(initial_placement(&cat, 700_000, 1), vec!["cold"]);
+        assert_eq!(initial_placement(&cat, 700_000, 2), vec!["hot"]);
+        // unlimited budget: everything everywhere
+        assert_eq!(initial_placement(&cat, 0, 0), vec!["hot", "cold"]);
+        // budget fits both
+        assert_eq!(initial_placement(&cat, 2_000_000, 1), vec!["cold", "hot"]);
+    }
+
+    #[test]
+    fn hot_model_claims_cold_surplus_replica() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // 2 hot + 2 cold replicas; hot overloaded, cold idle.
+        let views = vec![
+            view("i0", &["hot"]),
+            view("i1", &["hot"]),
+            view("i2", &["cold"]),
+            view("i3", &["cold"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(500.0, 5.0));
+        // cold shrinks to 1 replica, hot grows onto the freed instance
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Unload { model, .. } if model == "cold")),
+            "{moves:?}"
+        );
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "hot")),
+            "{moves:?}"
+        );
+        // and the load landed on the instance the unload freed
+        let unloaded = moves.iter().find_map(|m| match m {
+            Move::Unload { instance, .. } => Some(instance.clone()),
+            _ => None,
+        });
+        let loaded = moves.iter().find_map(|m| match m {
+            Move::Load { instance, .. } => Some(instance.clone()),
+            _ => None,
+        });
+        assert_eq!(unloaded, loaded, "{moves:?}");
+    }
+
+    #[test]
+    fn min_replicas_never_violated() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // cold has exactly one replica: zero demand must not unload it.
+        let views = vec![view("i0", &["hot"]), view("i1", &["cold"])];
+        let moves = core.plan(0.0, &views, &demand(500.0, 0.0));
+        assert!(
+            !moves.iter().any(|m| matches!(m, Move::Unload { model, .. } if model == "cold")),
+            "{moves:?}"
+        );
+    }
+
+    #[test]
+    fn memory_budget_blocks_overpacking() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // Every instance is full and cold is not unloadable (demand in
+        // the hysteresis band): hot cannot be placed anywhere.
+        let views = vec![view("i0", &["hot"]), view("i1", &["cold"])];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert!(moves.is_empty(), "{moves:?}");
+    }
+
+    #[test]
+    fn hysteresis_band_holds() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // per-replica loads inside (unload, load) thresholds: no churn.
+        let views = vec![
+            view("i0", &["hot"]),
+            view("i1", &["hot"]),
+            view("i2", &["cold"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(120.0, 60.0));
+        assert!(moves.is_empty(), "{moves:?}");
+    }
+
+    #[test]
+    fn cooldown_spaces_moves_per_instance_model() {
+        // Unlimited memory, one possible target: the cooldown is the only
+        // thing spacing repeated loads of hot onto i1.
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = PlacementCore::new(c, catalog());
+        let views = vec![view("i0", &["hot"]), view("i1", &["cold"])];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "i1".to_string(), model: "hot".to_string() }]
+        );
+        // Same (stale) snapshot inside the cooldown window: no repeat.
+        let again = core.plan(1.0, &views, &demand(500.0, 50.0));
+        assert!(again.is_empty(), "{again:?}");
+        // After the cooldown expires the same state plans again.
+        let later = core.plan(10.0, &views, &demand(500.0, 50.0));
+        assert_eq!(later.len(), 1);
+    }
+
+    #[test]
+    fn unlimited_budget_spreads_hot_model() {
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = PlacementCore::new(c, catalog());
+        let views = vec![view("i0", &["hot", "cold"]), view("i1", &["cold"])];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "i1".to_string(), model: "hot".to_string() }]
+        );
+    }
+
+    #[test]
+    fn empty_cluster_plans_nothing() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        assert!(core.plan(0.0, &[], &demand(500.0, 5.0)).is_empty());
+        assert!(core.plan_repairs(0.0, &[]).is_empty());
+    }
+
+    #[test]
+    fn lost_model_restored_even_when_cold() {
+        // The cold model's last pod died: it has zero replicas and demand
+        // far below load_threshold. Repair must still re-host it, evicting
+        // a surplus hot copy because every instance is full.
+        let mut core = PlacementCore::new(cfg(), catalog());
+        let views = vec![view("i0", &["hot"]), view("i1", &["hot"])];
+        let moves = core.plan(0.0, &views, &demand(30.0, 5.0));
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "cold")),
+            "lost cold model not restored: {moves:?}"
+        );
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Unload { model, .. } if model == "hot")),
+            "no room was made for the repair: {moves:?}"
+        );
+    }
+
+    #[test]
+    fn plan_repairs_restores_under_static_policy() {
+        let mut c = cfg();
+        c.policy = PlacementPolicy::Static;
+        let mut core = PlacementCore::new(c, catalog());
+        // free instance available: direct load, no eviction needed
+        let views = vec![
+            view("i0", &["hot"]),
+            InstanceView { id: "i1".into(), loaded: BTreeSet::new(), mem_used: 0 },
+        ];
+        let moves = core.plan_repairs(0.0, &views);
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "i1".to_string(), model: "cold".to_string() }]
+        );
+        // healthy fleet: repairs plan nothing (static stays static)
+        let healthy = vec![view("i0", &["hot"]), view("i1", &["cold"])];
+        assert!(core.plan_repairs(1.0, &healthy).is_empty());
+    }
+
+    #[test]
+    fn repair_gives_up_when_nothing_can_host() {
+        // Single instance, both models at min=1 except... the cold model
+        // has nowhere to go: the only other-model copy is NOT surplus.
+        let mut core = PlacementCore::new(cfg(), catalog());
+        let views = vec![view("i0", &["hot"])];
+        let moves = core.plan(0.0, &views, &demand(30.0, 5.0));
+        // hot is the last replica of its model: not evictable; cold stays
+        // un-hosted rather than killing hot.
+        assert!(
+            !moves.iter().any(|m| matches!(m, Move::Unload { model, .. } if model == "hot")),
+            "evicted a last replica: {moves:?}"
+        );
+        assert!(
+            !moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "cold")),
+            "loaded cold with no memory for it: {moves:?}"
+        );
+    }
+}

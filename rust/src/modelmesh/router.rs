@@ -1,0 +1,301 @@
+//! Per-model routing table: one load balancer per model, address pools
+//! that follow the instances' advertised-model labels.
+//!
+//! "Instead of using a single load balancer over all Triton servers,
+//! inference requests will be routed via model-specific load balancers
+//! across only those Triton servers where a given model is loaded."
+//! Pools are created for the full model catalog at construction; a
+//! request for a model outside the catalog is `ModelNotFound`, a request
+//! for a catalog model with no (or only saturated) replicas is shed as
+//! `Overloaded` — exactly what the single-balancer gateway reports today.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, RwLock};
+
+use crate::config::LbPolicy;
+use crate::gateway::lb::LoadBalancer;
+use crate::metrics::registry::{labels, Counter, Registry};
+use crate::rpc::codec::Status;
+use crate::server::{Instance, InstanceState};
+
+struct Pool {
+    /// Live endpoint list, shared with this model's balancer.
+    endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+    lb: LoadBalancer,
+    /// Requests routed through this pool (per-model routed counter).
+    routed: Counter,
+    /// Requests that found no routable replica (shed at the router).
+    unserved: Counter,
+}
+
+/// The model-aware routing table.
+pub struct ModelRouter {
+    pools: BTreeMap<String, Pool>,
+}
+
+impl ModelRouter {
+    /// Router over `catalog` (every model the deployment can serve).
+    /// Each pool gets its own balancer with the gateway's policy and
+    /// in-flight cap; `seed` derives per-pool balancer seeds.
+    pub fn new(
+        catalog: &[String],
+        policy: LbPolicy,
+        max_inflight: usize,
+        registry: &Registry,
+        seed: u64,
+    ) -> Self {
+        let mut pools = BTreeMap::new();
+        for (i, model) in catalog.iter().enumerate() {
+            let endpoints = Arc::new(RwLock::new(Vec::new()));
+            let lb = LoadBalancer::new(
+                policy,
+                Arc::clone(&endpoints),
+                max_inflight,
+                seed ^ ((i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)),
+            );
+            let l = labels(&[("model", model)]);
+            pools.insert(
+                model.clone(),
+                Pool {
+                    endpoints,
+                    lb,
+                    routed: registry.counter("routed_requests_total", &l),
+                    unserved: registry.counter("routed_unserved_total", &l),
+                },
+            );
+        }
+        ModelRouter { pools }
+    }
+
+    /// Models in the catalog.
+    pub fn models(&self) -> Vec<String> {
+        self.pools.keys().cloned().collect()
+    }
+
+    /// Pick an instance for one request to `model`. `Err(ModelNotFound)`
+    /// when the model is outside the catalog, `Err(Overloaded)` when its
+    /// pool has no routable replica.
+    pub fn pick(&self, model: &str) -> Result<Arc<Instance>, Status> {
+        let Some(pool) = self.pools.get(model) else {
+            return Err(Status::ModelNotFound);
+        };
+        pool.routed.inc();
+        match pool.lb.pick() {
+            Some(inst) => Ok(inst),
+            None => {
+                pool.unserved.inc();
+                Err(Status::Overloaded)
+            }
+        }
+    }
+
+    /// Load `model` onto `instance`: label first, then pool membership,
+    /// so the pool never references a non-advertising instance. Returns
+    /// false if the model is unknown (to the catalog or the instance's
+    /// repository) or already loaded there.
+    pub fn load(&self, instance: &Arc<Instance>, model: &str) -> bool {
+        let Some(pool) = self.pools.get(model) else {
+            return false;
+        };
+        if !instance.load_model(model) {
+            return false;
+        }
+        let mut eps = pool.endpoints.write().unwrap();
+        if !eps.iter().any(|e| e.id == instance.id) {
+            eps.push(Arc::clone(instance));
+        }
+        true
+    }
+
+    /// Unload `model` from `instance`: pool membership first, then the
+    /// label. Returns false if it was not loaded there.
+    pub fn unload(&self, instance: &Arc<Instance>, model: &str) -> bool {
+        let Some(pool) = self.pools.get(model) else {
+            return false;
+        };
+        pool.endpoints
+            .write()
+            .unwrap()
+            .retain(|e| e.id != instance.id);
+        instance.unload_model(model)
+    }
+
+    /// Rebuild every pool from the instances' advertised sets — the
+    /// label-watch half of the design ("load balancers automatically
+    /// adjust address pools when models are loaded and unloaded").
+    /// Driven by the cluster reconcile loop so pod churn (new Running
+    /// pods, terminated pods) is reflected within one reconcile period.
+    pub fn sync(&self, endpoints: &[Arc<Instance>]) {
+        for (model, pool) in &self.pools {
+            let members: Vec<Arc<Instance>> = endpoints
+                .iter()
+                .filter(|i| i.advertises(model))
+                .cloned()
+                .collect();
+            *pool.endpoints.write().unwrap() = members;
+        }
+    }
+
+    /// Instances currently in `model`'s pool (replica count source).
+    pub fn endpoints_for(&self, model: &str) -> Vec<Arc<Instance>> {
+        self.pools
+            .get(model)
+            .map(|p| p.endpoints.read().unwrap().clone())
+            .unwrap_or_default()
+    }
+
+    /// Replica count of one model's pool.
+    pub fn replicas(&self, model: &str) -> usize {
+        self.pools
+            .get(model)
+            .map(|p| p.endpoints.read().unwrap().len())
+            .unwrap_or(0)
+    }
+
+    /// Distinct Ready instances across all pools (the health-probe
+    /// answer: is anything routable for at least one model).
+    pub fn ready_instances(&self) -> usize {
+        let mut seen = BTreeSet::new();
+        for pool in self.pools.values() {
+            for inst in pool.endpoints.read().unwrap().iter() {
+                if inst.state() == InstanceState::Ready {
+                    seen.insert(inst.id.clone());
+                }
+            }
+        }
+        seen.len()
+    }
+
+    /// Total requests routed per model (for experiments/benches).
+    pub fn routed_count(&self, model: &str) -> u64 {
+        self.pools.get(model).map(|p| p.routed.get()).unwrap_or(0)
+    }
+
+    /// Requests shed at the router per model.
+    pub fn unserved_count(&self, model: &str) -> u64 {
+        self.pools.get(model).map(|p| p.unserved.get()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExecutionMode, ModelConfig, ServiceModelConfig};
+    use crate::server::ModelRepository;
+    use crate::util::clock::Clock;
+    use once_cell::sync::Lazy;
+    use std::time::Duration;
+
+    const MODELS: [&str; 2] = ["icecube_cnn", "particlenet"];
+
+    static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &MODELS.map(String::from),
+            )
+            .unwrap(),
+        )
+    });
+
+    fn instance(id: &str) -> Arc<Instance> {
+        let models: Vec<ModelConfig> = MODELS
+            .iter()
+            .map(|m| ModelConfig {
+                name: m.to_string(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+            })
+            .collect();
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    fn catalog() -> Vec<String> {
+        MODELS.map(String::from).to_vec()
+    }
+
+    fn router() -> ModelRouter {
+        ModelRouter::new(&catalog(), LbPolicy::RoundRobin, 0, &Registry::new(), 7)
+    }
+
+    #[test]
+    fn pick_unknown_model_not_found() {
+        let r = router();
+        assert!(matches!(r.pick("nope"), Err(Status::ModelNotFound)));
+    }
+
+    #[test]
+    fn empty_pool_overloaded() {
+        let r = router();
+        assert!(matches!(r.pick("icecube_cnn"), Err(Status::Overloaded)));
+        assert_eq!(r.unserved_count("icecube_cnn"), 1);
+    }
+
+    #[test]
+    fn routes_only_to_pool_members() {
+        let r = router();
+        let a = instance("ra");
+        let b = instance("rb");
+        // a serves only the cnn, b serves only particlenet
+        r.sync(&[Arc::clone(&a), Arc::clone(&b)]);
+        r.unload(&a, "particlenet");
+        r.unload(&b, "icecube_cnn");
+        for _ in 0..6 {
+            assert_eq!(r.pick("icecube_cnn").unwrap().id, "ra");
+            assert_eq!(r.pick("particlenet").unwrap().id, "rb");
+        }
+        assert_eq!(r.routed_count("icecube_cnn"), 6);
+        a.stop();
+        b.stop();
+    }
+
+    #[test]
+    fn load_updates_pool_and_label() {
+        let r = router();
+        let a = instance("rl");
+        a.set_loaded_models(&[]);
+        r.sync(&[Arc::clone(&a)]);
+        assert_eq!(r.replicas("icecube_cnn"), 0);
+        assert!(r.load(&a, "icecube_cnn"));
+        assert!(a.advertises("icecube_cnn"));
+        assert_eq!(r.replicas("icecube_cnn"), 1);
+        // idempotent
+        assert!(!r.load(&a, "icecube_cnn"));
+        assert_eq!(r.replicas("icecube_cnn"), 1);
+        assert!(r.unload(&a, "icecube_cnn"));
+        assert!(!a.advertises("icecube_cnn"));
+        assert_eq!(r.replicas("icecube_cnn"), 0);
+        a.stop();
+    }
+
+    #[test]
+    fn sync_follows_pod_churn() {
+        let r = router();
+        let a = instance("rs0");
+        let b = instance("rs1");
+        r.sync(&[Arc::clone(&a), Arc::clone(&b)]);
+        assert_eq!(r.replicas("icecube_cnn"), 2);
+        assert_eq!(r.ready_instances(), 2);
+        // pod terminated: drops from every pool on the next sync
+        r.sync(&[Arc::clone(&a)]);
+        assert_eq!(r.replicas("icecube_cnn"), 1);
+        assert_eq!(r.replicas("particlenet"), 1);
+        a.stop();
+        b.stop();
+    }
+}

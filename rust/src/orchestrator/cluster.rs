@@ -28,6 +28,12 @@ pub enum PodPhase {
 /// supplies this, closing over the model repository and metrics registry.
 pub type InstanceFactory = Arc<dyn Fn(&str) -> Arc<Instance> + Send + Sync>;
 
+/// Post-reconcile hook: invoked with the Ready endpoint snapshot after
+/// every reconcile pass. The modelmesh placement controller hangs off
+/// this — the cluster reconcile loop drives model placement exactly like
+/// it drives pod lifecycle.
+pub type ReconcileHook = Arc<dyn Fn(&[Arc<Instance>]) + Send + Sync>;
+
 struct Pod {
     phase: PodPhase,
     /// (node, slot) once bound.
@@ -59,6 +65,7 @@ pub struct Cluster {
     endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
     stop: Arc<AtomicBool>,
     reconcile_handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    hook: Mutex<Option<ReconcileHook>>,
     m_running: Gauge,
     m_desired: Gauge,
     m_pod_starts: Counter,
@@ -98,6 +105,7 @@ impl Cluster {
             endpoints: Arc::new(RwLock::new(Vec::new())),
             stop: Arc::new(AtomicBool::new(false)),
             reconcile_handle: Mutex::new(None),
+            hook: Mutex::new(None),
             m_running: registry.gauge("replicas_running", &l),
             m_desired: registry.gauge("replicas_desired", &l),
             m_pod_starts: registry.counter("pod_starts_total", &l),
@@ -115,6 +123,14 @@ impl Cluster {
             .expect("spawning reconcile loop");
         *cluster.reconcile_handle.lock().unwrap() = Some(handle);
         cluster
+    }
+
+    /// Install the post-reconcile hook and fire it immediately with the
+    /// current endpoints, so pods that became Running before the hook was
+    /// attached are visible to it without waiting a reconcile period.
+    pub fn set_reconcile_hook(&self, hook: ReconcileHook) {
+        *self.hook.lock().unwrap() = Some(Arc::clone(&hook));
+        hook(&self.endpoints());
     }
 
     /// Set the replica target (the KEDA/Deployment interface).
@@ -313,6 +329,12 @@ impl Cluster {
         for inst in to_stop {
             inst.stop();
         }
+        // Post-reconcile hook (model placement) over the fresh snapshot,
+        // outside the state lock.
+        let hook = self.hook.lock().unwrap().clone();
+        if let Some(hook) = hook {
+            hook(&self.endpoints());
+        }
     }
 
     fn take_slot(free_slots: &mut [Vec<usize>]) -> Option<(usize, usize)> {
@@ -347,16 +369,15 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelConfig;
-    use crate::runtime::PjrtRuntime;
+    use crate::config::{ExecutionMode, ModelConfig};
     use crate::server::ModelRepository;
     use once_cell::sync::Lazy;
 
+    // Lifecycle tests never execute engines: metadata-only is enough and
+    // keeps them independent of the optional `pjrt` feature.
     static REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
-        let rt = PjrtRuntime::cpu().unwrap();
         Arc::new(
-            ModelRepository::load(
-                &rt,
+            ModelRepository::load_metadata(
                 std::path::Path::new("artifacts"),
                 &["icecube_cnn".into()],
             )
@@ -366,7 +387,7 @@ mod tests {
 
     fn factory(registry: Registry, clock: Clock) -> InstanceFactory {
         Arc::new(move |name: &str| {
-            Instance::start(
+            Instance::start_with_mode(
                 name,
                 Arc::clone(&REPO),
                 &[ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() }],
@@ -374,6 +395,7 @@ mod tests {
                 registry.clone(),
                 64,
                 5.0,
+                ExecutionMode::Simulated,
             )
         })
     }
@@ -403,6 +425,36 @@ mod tests {
         );
         assert!(cluster.wait_ready(2, Duration::from_secs(5)));
         assert_eq!(cluster.running(), 2);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn reconcile_hook_sees_endpoint_churn() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let cluster = Cluster::start(
+            fast_cfg(),
+            Duration::from_millis(10),
+            1,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            9,
+        );
+        assert!(cluster.wait_ready(1, Duration::from_secs(5)));
+        let seen = Arc::new(Mutex::new(0usize));
+        let seen2 = Arc::clone(&seen);
+        // Fires immediately on attach with the already-Running pod...
+        cluster.set_reconcile_hook(Arc::new(move |eps| {
+            let mut max = seen2.lock().unwrap();
+            *max = (*max).max(eps.len());
+        }));
+        assert_eq!(*seen.lock().unwrap(), 1, "hook not fired on attach");
+        // ...and follows scale-ups through the reconcile loop.
+        cluster.set_desired(3);
+        assert!(cluster.wait_ready(3, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(*seen.lock().unwrap(), 3, "hook missed new endpoints");
         cluster.shutdown();
     }
 

@@ -21,4 +21,4 @@
 
 pub mod cluster;
 
-pub use cluster::{Cluster, InstanceFactory, PodPhase};
+pub use cluster::{Cluster, InstanceFactory, PodPhase, ReconcileHook};

@@ -12,7 +12,12 @@
 //! protos — see DESIGN.md).
 
 pub mod golden;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod pjrt_stub;
 pub mod tensor;
+
+#[cfg(not(feature = "pjrt"))]
+use pjrt_stub as xla;
 
 use std::collections::BTreeMap;
 use std::path::Path;

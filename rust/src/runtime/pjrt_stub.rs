@@ -1,0 +1,138 @@
+//! Stub replacement for the `xla` crate (PJRT bindings), compiled when the
+//! `pjrt` cargo feature is off.
+//!
+//! The offline build image cannot install the `xla` crate (it downloads
+//! the xla_extension native library), so every entry point here returns a
+//! descriptive error at *runtime* while keeping the [`runtime`](super)
+//! module compiling unchanged. Simulated-execution deployments
+//! (`ExecutionMode::Simulated`) never reach these calls; real-execution
+//! paths fail fast at `PjrtRuntime::cpu()` with an actionable message.
+//!
+//! The surface mirrors exactly the subset of the `xla` crate the runtime
+//! uses — see `runtime/mod.rs` and `runtime/tensor.rs`.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "built without the `pjrt` cargo feature: real PJRT execution is \
+         unavailable (use `server.execution: simulated`, or rebuild with \
+         `--features pjrt` where the xla crate is installable)"
+            .to_string(),
+    )
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Stub `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always errors: no PJRT in this build.
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// Platform name (unreachable: `cpu()` never succeeds).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Always errors.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Stub `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Always errors.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// Stub `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Constructible, but nothing can be done with it.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Always errors.
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Stub `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Always errors.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    /// Constructible so `Tensor::to_literal` type-checks; any further
+    /// operation errors.
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal
+    }
+
+    /// Always errors.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Always errors.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable())
+    }
+
+    /// Always errors.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    /// Always errors.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Stub `xla::ArrayShape`.
+pub struct ArrayShape;
+
+impl ArrayShape {
+    /// Unreachable (`array_shape` never succeeds); present for type-check.
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}

@@ -7,6 +7,9 @@
 
 use anyhow::{bail, Context, Result};
 
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::pjrt_stub as xla;
+
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {

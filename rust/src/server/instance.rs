@@ -11,9 +11,9 @@
 //! State machine: `Starting -> Ready -> Draining -> Stopped`. The gateway
 //! only routes to `Ready` instances; the orchestrator drives transitions.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::config::{ExecutionMode, ModelConfig, ServiceModelConfig};
@@ -99,6 +99,14 @@ pub struct Instance {
     policies: HashMap<String, BatchPolicy>,
     exec_mode: ExecutionMode,
     service_models: HashMap<String, ServiceModelConfig>,
+    /// Models this instance currently advertises (the Kubernetes
+    /// pod-label mechanism from the dynamic-model-loading design: the
+    /// per-model load balancers build their address pools from these).
+    /// The shared [`ModelRepository`] may hold more models; only
+    /// advertised ones are accepted by [`Instance::submit`].
+    loaded: RwLock<BTreeSet<String>>,
+    m_models_loaded: crate::metrics::registry::Gauge,
+    m_memory_used: crate::metrics::registry::Gauge,
 }
 
 impl Instance {
@@ -159,6 +167,7 @@ impl Instance {
             .map(|m| (m.name.clone(), m.service_model))
             .collect();
         let inst_labels = labels(&[("instance", id)]);
+        let registry2 = registry.clone();
         let instance = Arc::new(Instance {
             id: id.to_string(),
             queue: Arc::new(BatchQueue::new(queue_capacity)),
@@ -181,7 +190,11 @@ impl Instance {
             policies,
             exec_mode,
             service_models,
+            loaded: RwLock::new(models.iter().map(|m| m.name.clone()).collect()),
+            m_models_loaded: registry2.gauge("models_loaded", &inst_labels),
+            m_memory_used: registry2.gauge("instance_memory_used_bytes", &inst_labels),
         });
+        instance.refresh_placement_gauges();
         let exec = Arc::clone(&instance);
         let handle = std::thread::Builder::new()
             .name(format!("exec-{id}"))
@@ -217,6 +230,78 @@ impl Instance {
         self.util.lock().unwrap().utilization(self.clock.now_secs())
     }
 
+    /// Does this instance currently advertise `model`?
+    pub fn advertises(&self, model: &str) -> bool {
+        self.loaded.read().unwrap().contains(model)
+    }
+
+    /// Currently advertised models, sorted.
+    pub fn loaded_models(&self) -> Vec<String> {
+        self.loaded.read().unwrap().iter().cloned().collect()
+    }
+
+    /// Replace the advertised set wholesale (placement bootstrap: the
+    /// instance factory applies the initial placement before the pod is
+    /// marked Ready). Names absent from the repository are dropped.
+    pub fn set_loaded_models(&self, names: &[String]) {
+        {
+            let mut loaded = self.loaded.write().unwrap();
+            loaded.clear();
+            for n in names {
+                if self.repo.get(n).is_some() {
+                    loaded.insert(n.clone());
+                }
+            }
+        }
+        self.refresh_placement_gauges();
+    }
+
+    /// Advertise one more model (Triton's explicit `load` model-control
+    /// call at the instance level — the engines live in the shared
+    /// repository, so "loading" is taking the model into this pod's
+    /// serving set and paying its memory on this GPU). Returns false if
+    /// the repository has no such model or it was already loaded.
+    pub fn load_model(&self, model: &str) -> bool {
+        if self.repo.get(model).is_none() {
+            return false;
+        }
+        let added = self.loaded.write().unwrap().insert(model.to_string());
+        if added {
+            self.refresh_placement_gauges();
+        }
+        added
+    }
+
+    /// Stop advertising a model. Requests already queued for it are
+    /// still served (the executor resolves engines through the shared
+    /// repository), mirroring Triton's graceful unload. Returns false if
+    /// the model was not loaded.
+    pub fn unload_model(&self, model: &str) -> bool {
+        let removed = self.loaded.write().unwrap().remove(model);
+        if removed {
+            self.refresh_placement_gauges();
+        }
+        removed
+    }
+
+    /// Simulated GPU memory consumed by the advertised models, in bytes
+    /// (each model costs [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes)).
+    pub fn memory_used(&self) -> u64 {
+        self.loaded
+            .read()
+            .unwrap()
+            .iter()
+            .filter_map(|m| self.repo.get(m))
+            .map(|e| e.memory_bytes())
+            .sum()
+    }
+
+    fn refresh_placement_gauges(&self) {
+        self.m_models_loaded
+            .set(self.loaded.read().unwrap().len() as f64);
+        self.m_memory_used.set(self.memory_used() as f64);
+    }
+
     /// Submit a request; returns a receiver for the outcome. On rejection
     /// the input tensor is handed back with the status so the caller can
     /// retry another instance without cloning (the gateway hot path).
@@ -228,6 +313,12 @@ impl Instance {
     ) -> Result<mpsc::Receiver<ExecOutcome>, (Status, Tensor)> {
         if self.state() != InstanceState::Ready {
             return Err((Status::Overloaded, input));
+        }
+        // Only advertised models are accepted — the modelmesh invariant
+        // that a request never lands on an instance without the model,
+        // even if the shared repository still holds its engines.
+        if !self.advertises(model) {
+            return Err((Status::ModelNotFound, input));
         }
         let entry = match self.repo.get(model) {
             Some(e) => e,
@@ -529,6 +620,17 @@ mod tests {
         )
     });
 
+    /// Metadata-only repository for tests that never execute engines.
+    static SIM_REPO: Lazy<Arc<ModelRepository>> = Lazy::new(|| {
+        Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &["icecube_cnn".into()],
+            )
+            .unwrap(),
+        )
+    });
+
     fn test_instance(id: &str) -> Arc<Instance> {
         let models = vec![ModelConfig {
             name: "icecube_cnn".into(),
@@ -549,11 +651,39 @@ mod tests {
         inst
     }
 
+    fn sim_test_instance(id: &str) -> Arc<Instance> {
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+        }];
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&SIM_REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    }
+
     fn cnn_input(rows: usize) -> Tensor {
         Tensor::zeros(vec![rows, 16, 16, 3])
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "pjrt"),
+        ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+    )]
     fn serves_single_request() {
         let inst = test_instance("t0");
         let out = inst.submit_and_wait("icecube_cnn", cnn_input(1), 0);
@@ -568,6 +698,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "pjrt"),
+        ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+    )]
     fn batches_concurrent_requests() {
         let inst = test_instance("t1");
         let mut rxs = Vec::new();
@@ -590,6 +724,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "pjrt"),
+        ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+    )]
     fn oversized_request_split_across_engines() {
         let inst = test_instance("t2");
         // 40 rows > max compiled batch (16): executor must chunk.
@@ -603,7 +741,7 @@ mod tests {
 
     #[test]
     fn unknown_model_rejected() {
-        let inst = test_instance("t3");
+        let inst = sim_test_instance("t3");
         match inst.submit_and_wait("nope", cnn_input(1), 0) {
             ExecOutcome::Err { status, .. } => assert_eq!(status, Status::ModelNotFound),
             other => panic!("unexpected {other:?}"),
@@ -613,7 +751,7 @@ mod tests {
 
     #[test]
     fn bad_shape_rejected() {
-        let inst = test_instance("t4");
+        let inst = sim_test_instance("t4");
         let bad = Tensor::zeros(vec![1, 8, 8, 3]);
         match inst.submit_and_wait("icecube_cnn", bad, 0) {
             ExecOutcome::Err { status, .. } => assert_eq!(status, Status::BadRequest),
@@ -624,15 +762,16 @@ mod tests {
 
     #[test]
     fn starting_instance_rejects() {
-        let models = vec![ModelConfig::default()];
-        let inst = Instance::start(
+        let models = vec![ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() }];
+        let inst = Instance::start_with_mode(
             "t5",
-            Arc::clone(&REPO),
+            Arc::clone(&SIM_REPO),
             &models,
             Clock::real(),
             Registry::new(),
             64,
             5.0,
+            ExecutionMode::Simulated,
         );
         // not marked ready
         assert_eq!(inst.state(), InstanceState::Starting);
@@ -642,12 +781,51 @@ mod tests {
 
     #[test]
     fn utilization_rises_under_load() {
-        let inst = test_instance("t6");
+        let inst = sim_test_instance("t6");
         for _ in 0..20 {
             let _ = inst.submit_and_wait("icecube_cnn", cnn_input(8), 0);
         }
         let util = inst.utilization();
         assert!(util > 0.0, "utilization {util}");
+        inst.stop();
+    }
+
+    #[test]
+    fn unadvertised_model_rejected_even_when_in_repo() {
+        // Repository holds the model, but the instance's serving set does
+        // not advertise it: the modelmesh routing invariant.
+        let inst = sim_test_instance("mm0");
+        assert!(inst.advertises("icecube_cnn"));
+        assert!(inst.unload_model("icecube_cnn"));
+        assert!(!inst.advertises("icecube_cnn"));
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::ModelNotFound),
+            other => panic!("unexpected {other:?}"),
+        }
+        // loading re-enables serving
+        assert!(inst.load_model("icecube_cnn"));
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Ok { output, .. } => assert_eq!(output.shape(), &[1, 3]),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn load_unload_bookkeeping() {
+        let inst = sim_test_instance("mm1");
+        // unknown-to-repo models cannot be loaded
+        assert!(!inst.load_model("not_a_model"));
+        // double load / double unload report false
+        assert!(!inst.load_model("icecube_cnn"));
+        assert!(inst.unload_model("icecube_cnn"));
+        assert!(!inst.unload_model("icecube_cnn"));
+        assert_eq!(inst.loaded_models(), Vec::<String>::new());
+        assert_eq!(inst.memory_used(), 0);
+        inst.set_loaded_models(&["icecube_cnn".into(), "not_a_model".into()]);
+        assert_eq!(inst.loaded_models(), vec!["icecube_cnn".to_string()]);
+        let entry = SIM_REPO.get("icecube_cnn").unwrap();
+        assert_eq!(inst.memory_used(), entry.memory_bytes());
         inst.stop();
     }
 
@@ -741,7 +919,7 @@ mod tests {
 
     #[test]
     fn stop_drains_and_joins() {
-        let inst = test_instance("t7");
+        let inst = sim_test_instance("t7");
         let rx = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
         inst.stop();
         // queued request either served or rejected, never lost

@@ -51,6 +51,13 @@ impl ModelEntry {
         *self.batch_sizes.last().expect("validated non-empty")
     }
 
+    /// Simulated GPU-memory footprint of one loaded copy of this model:
+    /// f32 weights, so four bytes per declared parameter. Drives the
+    /// modelmesh placement controller's per-instance memory budget.
+    pub fn memory_bytes(&self) -> u64 {
+        self.parameters.max(1) * 4
+    }
+
     /// Validate a request tensor shape against the model contract:
     /// (b, *input_shape) with b >= 1.
     pub fn validate_input(&self, shape: &[usize]) -> Result<()> {
@@ -291,6 +298,10 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(
+        not(feature = "pjrt"),
+        ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+    )]
     fn loads_particlenet() {
         let rt = PjrtRuntime::cpu().unwrap();
         let repo =
@@ -305,9 +316,8 @@ mod tests {
 
     #[test]
     fn validate_input_shapes() {
-        let rt = PjrtRuntime::cpu().unwrap();
         let repo =
-            ModelRepository::load(&rt, &artifacts_root(), &["icecube_cnn".into()]).unwrap();
+            ModelRepository::load_metadata(&artifacts_root(), &["icecube_cnn".into()]).unwrap();
         let m = repo.get("icecube_cnn").unwrap();
         assert!(m.validate_input(&[4, 16, 16, 3]).is_ok());
         assert!(m.validate_input(&[0, 16, 16, 3]).is_err()); // empty batch
@@ -327,12 +337,14 @@ mod tests {
         assert_eq!(m.batch_sizes, vec![1, 2, 4, 8, 16]);
         assert_eq!(m.max_batch(), 16);
         assert_eq!(m.output_dim, 2);
+        // 4 bytes per f32 parameter
+        assert_eq!(m.memory_bytes(), m.parameters * 4);
+        assert!(m.memory_bytes() > 40_000);
     }
 
     #[test]
     fn missing_model_errors() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        let err = ModelRepository::load(&rt, &artifacts_root(), &["missing_model".into()])
+        let err = ModelRepository::load_metadata(&artifacts_root(), &["missing_model".into()])
             .unwrap_err();
         assert!(err.to_string().contains("missing_model"));
     }

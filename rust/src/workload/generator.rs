@@ -6,6 +6,7 @@
 //! perf_analyzer's `--concurrency-range`. The driver walks the
 //! [`Schedule`] phase by phase, resizing the pool at each boundary.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -14,6 +15,7 @@ use crate::rpc::client::RpcClient;
 use crate::rpc::codec::Status;
 use crate::runtime::Tensor;
 use crate::util::clock::Clock;
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use super::schedule::Schedule;
@@ -216,6 +218,231 @@ impl ClientPool {
     }
 }
 
+/// One model's share of a mixed workload.
+#[derive(Clone, Debug)]
+pub struct MixEntry {
+    /// What to send for this model.
+    pub spec: WorkloadSpec,
+    /// Relative traffic weight (need not sum to 1).
+    pub weight: f64,
+}
+
+/// Per-model statistics from a mixed run.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStats {
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+}
+
+/// Statistics for a whole mixed run.
+#[derive(Clone, Debug)]
+pub struct MixedReport {
+    /// Per-model outcome counts, keyed by model name.
+    pub per_model: BTreeMap<String, ModelStats>,
+    /// End-to-end latency across all models.
+    pub overall_latency: Summary,
+    /// Whole-run duration in clock seconds.
+    pub duration: f64,
+}
+
+impl MixedReport {
+    /// Completed OK requests across models.
+    pub fn total_ok(&self) -> u64 {
+        self.per_model.values().map(|s| s.ok).sum()
+    }
+
+    /// Shed (rate-limited / overloaded) requests across models.
+    pub fn total_shed(&self) -> u64 {
+        self.per_model.values().map(|s| s.shed).sum()
+    }
+
+    /// Other errors across models.
+    pub fn total_errors(&self) -> u64 {
+        self.per_model.values().map(|s| s.errors).sum()
+    }
+}
+
+struct MixCounters {
+    latency: Mutex<Summary>,
+    /// One (ok, shed, errors) triple per mix entry.
+    per_entry: Vec<(AtomicU64, AtomicU64, AtomicU64)>,
+}
+
+/// Skewed multi-model load generator: each closed-loop client picks the
+/// model of its next request by weight, producing the hot/cold traffic
+/// mix the modelmesh placement controller reacts to.
+pub struct MixedPool {
+    addr: String,
+    entries: Vec<MixEntry>,
+    clock: Clock,
+    seed: u64,
+}
+
+impl MixedPool {
+    /// Pool targeting `addr` with the given traffic mix. All entries
+    /// must share one auth token: clients hold a single connection to
+    /// the gateway, and the connection's token is what every request
+    /// rides on.
+    pub fn new(addr: &str, entries: Vec<MixEntry>, clock: Clock, seed: u64) -> Self {
+        assert!(!entries.is_empty(), "mixed pool needs at least one entry");
+        assert!(
+            entries.iter().all(|e| e.weight > 0.0),
+            "mix weights must be positive"
+        );
+        assert!(
+            entries.iter().all(|e| e.spec.token == entries[0].spec.token),
+            "mixed pool entries must share one auth token"
+        );
+        MixedPool { addr: addr.to_string(), entries, clock, seed }
+    }
+
+    /// The canonical two-model skew: `hot_fraction` of requests go to
+    /// `hot`, the rest to `cold`.
+    pub fn hot_cold(
+        addr: &str,
+        hot: WorkloadSpec,
+        cold: WorkloadSpec,
+        hot_fraction: f64,
+        clock: Clock,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&hot_fraction) && hot_fraction > 0.0);
+        Self::new(
+            addr,
+            vec![
+                MixEntry { spec: hot, weight: hot_fraction },
+                MixEntry { spec: cold, weight: 1.0 - hot_fraction },
+            ],
+            clock,
+            seed,
+        )
+    }
+
+    /// Run the schedule to completion; blocks the calling thread.
+    pub fn run(&self, schedule: &Schedule) -> MixedReport {
+        let run_start = self.clock.now_secs();
+        let counters = Arc::new(MixCounters {
+            latency: Mutex::new(Summary::new()),
+            per_entry: self
+                .entries
+                .iter()
+                .map(|_| (AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)))
+                .collect(),
+        });
+
+        for (idx, phase) in schedule.phases().iter().enumerate() {
+            let stop = Arc::new(AtomicBool::new(false));
+            let mut handles = Vec::with_capacity(phase.clients);
+            for c in 0..phase.clients {
+                let addr = self.addr.clone();
+                let entries = self.entries.clone();
+                let clock = self.clock.clone();
+                let counters = Arc::clone(&counters);
+                let stop = Arc::clone(&stop);
+                let seed = self
+                    .seed
+                    .wrapping_add((idx as u64) << 32)
+                    .wrapping_add(c as u64 + 1);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("mix-{idx}-{c}"))
+                        .spawn(move || {
+                            mixed_client_loop(&addr, &entries, &clock, &counters, &stop, seed)
+                        })
+                        .expect("spawning mixed client"),
+                );
+            }
+            self.clock.sleep(phase.duration);
+            stop.store(true, Ordering::SeqCst);
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+
+        // Merge by model name: two entries may target the same model
+        // (e.g. the same model at different request shapes/weights).
+        let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
+        for (e, (ok, shed, errors)) in self.entries.iter().zip(counters.per_entry.iter()) {
+            let stats = per_model.entry(e.spec.model.clone()).or_default();
+            stats.ok += ok.load(Ordering::SeqCst);
+            stats.shed += shed.load(Ordering::SeqCst);
+            stats.errors += errors.load(Ordering::SeqCst);
+        }
+        MixedReport {
+            per_model,
+            overall_latency: counters.latency.lock().unwrap().clone(),
+            duration: self.clock.now_secs() - run_start,
+        }
+    }
+}
+
+fn mixed_client_loop(
+    addr: &str,
+    entries: &[MixEntry],
+    clock: &Clock,
+    counters: &MixCounters,
+    stop: &AtomicBool,
+    seed: u64,
+) {
+    let mut client = loop {
+        match RpcClient::connect(addr) {
+            Ok(c) => break c.with_token(&entries[0].spec.token),
+            Err(_) if !stop.load(Ordering::SeqCst) => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => return,
+        }
+    };
+    let inputs: Vec<Tensor> = entries.iter().map(|e| e.spec.request_tensor()).collect();
+    let total_weight: f64 = entries.iter().map(|e| e.weight).sum();
+    let mut rng = Rng::seeded(seed);
+
+    while !stop.load(Ordering::SeqCst) {
+        // Weighted pick of the next request's model.
+        let mut roll = rng.range_f64(0.0, total_weight);
+        let mut idx = 0;
+        for (i, e) in entries.iter().enumerate() {
+            idx = i;
+            if roll < e.weight {
+                break;
+            }
+            roll -= e.weight;
+        }
+        let entry = &entries[idx];
+        let (ok, shed, errors) = &counters.per_entry[idx];
+
+        let t0 = clock.now_secs();
+        match client.infer(&entry.spec.model, inputs[idx].clone()) {
+            Ok(resp) => match resp.status {
+                Status::Ok => {
+                    let dt = clock.now_secs() - t0;
+                    counters.latency.lock().unwrap().observe(dt);
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }
+                Status::RateLimited | Status::Overloaded => {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                    clock.sleep(Duration::from_millis(10));
+                }
+                _ => {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+            Err(_) => {
+                errors.fetch_add(1, Ordering::Relaxed);
+                // reconnect with the pool's (shared) token
+                match RpcClient::connect(addr) {
+                    Ok(c) => client = c.with_token(&entries[0].spec.token),
+                    Err(_) => std::thread::sleep(Duration::from_millis(20)),
+                }
+            }
+        }
+        if !entry.spec.think_time.is_zero() {
+            clock.sleep(entry.spec.think_time);
+        }
+    }
+}
+
 fn client_loop(
     addr: &str,
     spec: &WorkloadSpec,
@@ -389,6 +616,41 @@ mod tests {
             fast.total_ok,
             slow.total_ok
         );
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn mixed_pool_skews_traffic() {
+        let (gateway, instances, clock) = stack(2);
+        let hot = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+        // Cold model does not exist: its share shows up as errors, which
+        // also proves per-model accounting separates the streams.
+        let cold = WorkloadSpec::new("missing_model", 1, vec![16, 16, 3]);
+        let pool = MixedPool::hot_cold(
+            &gateway.addr().to_string(),
+            hot,
+            cold,
+            0.8,
+            clock,
+            42,
+        );
+        let report = pool.run(&Schedule::constant(2, Duration::from_millis(400)));
+        let hot_stats = &report.per_model["icecube_cnn"];
+        let cold_stats = &report.per_model["missing_model"];
+        assert!(hot_stats.ok > 0, "hot model never served");
+        assert_eq!(hot_stats.errors, 0);
+        assert_eq!(cold_stats.ok, 0);
+        assert!(cold_stats.errors > 0, "cold model errors not recorded");
+        // 80/20 skew: the hot stream clearly dominates.
+        assert!(
+            hot_stats.ok + hot_stats.errors > cold_stats.ok + cold_stats.errors,
+            "skew not applied: hot={hot_stats:?} cold={cold_stats:?}"
+        );
+        assert_eq!(report.total_ok(), hot_stats.ok);
+        assert!(report.duration > 0.0);
         gateway.shutdown();
         for i in instances {
             i.stop();

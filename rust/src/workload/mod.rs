@@ -11,9 +11,15 @@
 //!   (optionally with think time), exactly perf_analyzer's concurrency
 //!   model. Per-phase and overall latency/throughput statistics come out
 //!   as [`util::stats::Summary`](crate::util::stats::Summary)s.
+//! * [`generator::MixedPool`] — skewed multi-model traffic (a hot/cold
+//!   model mix, weighted per request) with per-model outcome counts; the
+//!   workload the modelmesh placement ablation runs.
 
 pub mod generator;
 pub mod schedule;
 
-pub use generator::{ClientPool, PhaseReport, RunReport, WorkloadSpec};
+pub use generator::{
+    ClientPool, MixEntry, MixedPool, MixedReport, ModelStats, PhaseReport, RunReport,
+    WorkloadSpec,
+};
 pub use schedule::{Phase, Schedule};

@@ -51,6 +51,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
             retention: Duration::from_secs(600),
             tracing: false,
         },
+        model_placement: Default::default(),
         time_scale: 1.0,
     }
 }
@@ -152,6 +153,10 @@ fn autoscaler_reacts_to_load_spike_end_to_end() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "pjrt"),
+    ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+)]
 fn real_pjrt_numerics_through_full_stack() {
     let mut cfg = base_cfg(ExecutionMode::Real);
     cfg.server.replicas = 1;
@@ -247,6 +252,10 @@ fn metrics_pipeline_end_to_end() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "pjrt"),
+    ignore = "needs compiled PJRT engines: build with --features pjrt after `make artifacts`"
+)]
 fn multi_model_repository_served_real() {
     let mut cfg = base_cfg(ExecutionMode::Real);
     cfg.server.replicas = 1;

@@ -7,6 +7,7 @@ use std::time::Duration;
 use supersonic::config::{ExecutionMode, LbPolicy, ModelConfig, ServiceModelConfig};
 use supersonic::gateway::lb::LoadBalancer;
 use supersonic::metrics::Registry;
+use supersonic::modelmesh::ModelRouter;
 use supersonic::rpc::codec::{
     decode_request, decode_response, encode_request, encode_response, InferRequest,
     InferResponse, Status,
@@ -239,6 +240,128 @@ fn prop_lb_only_picks_ready_and_under_cap() {
                     });
                     assert!(!eligible || !any_ready, "lb returned None with eligible instances");
                 }
+            }
+        }
+        for i in instances {
+            i.stop();
+        }
+    });
+}
+
+#[test]
+fn prop_router_only_routes_to_advertising_instances() {
+    // The modelmesh invariant: across arbitrary load/unload/pod-churn
+    // interleavings, a pick for model M only ever returns an instance
+    // currently advertising M — and a submit to the picked instance is
+    // never rejected with ModelNotFound.
+    const MODELS: [&str; 2] = ["icecube_cnn", "particlenet"];
+    let repo = Arc::new(
+        supersonic::server::ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &MODELS.map(String::from),
+        )
+        .unwrap(),
+    );
+    let clock = Clock::real();
+    let registry = Registry::new();
+    let model_cfgs: Vec<ModelConfig> = MODELS
+        .iter()
+        .map(|m| ModelConfig {
+            name: m.to_string(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 4,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(1),
+                per_row: Duration::from_micros(50),
+            },
+        })
+        .collect();
+    let mk = |id: &str| {
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&repo),
+            &model_cfgs,
+            clock.clone(),
+            registry.clone(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    };
+    let input_for = |model: &str| match model {
+        "icecube_cnn" => Tensor::zeros(vec![1, 16, 16, 3]),
+        _ => Tensor::zeros(vec![1, 64, 7]),
+    };
+
+    check("router only picks advertisers", 20, |g: &mut Gen| {
+        let n = g.usize(1..=4);
+        let instances: Vec<Arc<Instance>> =
+            (0..n).map(|i| mk(&format!("mesh-p{i}"))).collect();
+        let router = ModelRouter::new(
+            &MODELS.map(String::from),
+            *g.choose(&[LbPolicy::RoundRobin, LbPolicy::Random, LbPolicy::LeastConnection]),
+            0,
+            &Registry::new(),
+            g.u64(0..=u64::MAX),
+        );
+        // random starting placement
+        for inst in &instances {
+            let keep: Vec<String> = MODELS
+                .iter()
+                .filter(|_| g.bool())
+                .map(|m| m.to_string())
+                .collect();
+            inst.set_loaded_models(&keep);
+        }
+        router.sync(&instances);
+
+        for _ in 0..40 {
+            match g.usize(0..=3) {
+                // load a model somewhere
+                0 => {
+                    let inst = &instances[g.usize(0..=n - 1)];
+                    router.load(inst, g.choose(&MODELS));
+                }
+                // unload a model somewhere
+                1 => {
+                    let inst = &instances[g.usize(0..=n - 1)];
+                    router.unload(inst, g.choose(&MODELS));
+                }
+                // pod churn: rebuild pools from a random endpoint subset
+                2 => {
+                    let subset: Vec<Arc<Instance>> =
+                        instances.iter().filter(|_| g.bool()).cloned().collect();
+                    router.sync(&subset);
+                }
+                // route a request
+                _ => {
+                    let model = *g.choose(&MODELS);
+                    if let Ok(picked) = router.pick(model) {
+                        assert!(
+                            picked.advertises(model),
+                            "picked {} for '{model}' which it does not advertise",
+                            picked.id
+                        );
+                        // the instance accepts it (never ModelNotFound)
+                        match picked.submit(model, input_for(model), 0) {
+                            Ok(_rx) => {}
+                            Err((status, _)) => assert_ne!(
+                                status,
+                                Status::ModelNotFound,
+                                "advertising instance rejected '{model}'"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+        // the terminal sync never resurrects unloaded models
+        router.sync(&instances);
+        for m in MODELS {
+            for inst in router.endpoints_for(m) {
+                assert!(inst.advertises(m));
             }
         }
         for i in instances {
