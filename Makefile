@@ -22,4 +22,4 @@ test:
 bench:
 	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
-		modelmesh_ablation; do cargo bench --bench $$b; done
+		modelmesh_ablation per_model_autoscale; do cargo bench --bench $$b; done

@@ -1,0 +1,161 @@
+//! Per-model autoscaling ablation — one global replica target vs one
+//! target per model, at an EQUAL total-pod budget, under skewed
+//! two-model traffic.
+//!
+//! Setup (see `experiments::per_model_autoscale_config`): two models
+//! (particlenet hot, icecube_cnn cold) with a per-instance memory budget
+//! that fits exactly one model, 90/10 request skew, autoscaler capped at
+//! 6 pods in both arms. The global arm scales one desired count from
+//! average queue latency — every new pod boots with the balanced
+//! rotation placement, so only every other pod helps the hot model
+//! (converging to 3 hot + 3 cold). The per-model arm runs one scaling
+//! loop per model fed by placement demand; pods spawned for the hot
+//! model boot advertising only it (converging to ~5 hot + 1 cold). With
+//! the same pod budget, per-model scaling must serve strictly more
+//! requests — per-model GPU allocation is the throughput lever (CMS
+//! coprocessors-as-a-service, arXiv:2402.15366; Savard et al.,
+//! arXiv:2312.06838).
+//!
+//! Run: `cargo bench --bench per_model_autoscale`
+
+use std::time::Duration;
+
+use supersonic::deployment::Deployment;
+use supersonic::experiments::{modelmesh_workload, per_model_autoscale_config};
+use supersonic::util::bench::{Csv, Table};
+use supersonic::workload::Schedule;
+
+struct Row {
+    label: String,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    hot_ok: u64,
+    hot_shed: u64,
+    cold_ok: u64,
+    pods: usize,
+    hot_replicas: usize,
+    cold_replicas: usize,
+    latency_ms: f64,
+}
+
+fn run_arm(per_model: bool, time_scale: f64) -> anyhow::Result<Row> {
+    let cfg = per_model_autoscale_config(time_scale, per_model);
+    let label = if per_model { "per-model" } else { "global" }.to_string();
+    let budget = cfg.autoscaler.max_replicas;
+    let d = Deployment::up(cfg)?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(60)), "fleet not ready");
+    let pool = modelmesh_workload(&d.endpoint(), 0.9, d.clock.clone());
+    let report = pool.run(&Schedule::constant(24, Duration::from_secs(60)));
+    let router = d.router.as_ref().expect("mesh active").clone();
+    let hot = report.per_model["particlenet"].clone();
+    let cold = report.per_model["icecube_cnn"].clone();
+    let pods = d.cluster.running();
+    anyhow::ensure!(pods <= budget, "{label} arm exceeded the pod budget: {pods}");
+    let row = Row {
+        label,
+        ok: report.total_ok(),
+        shed: report.total_shed(),
+        errors: report.total_errors(),
+        hot_ok: hot.ok,
+        hot_shed: hot.shed,
+        cold_ok: cold.ok,
+        pods,
+        hot_replicas: router.replicas("particlenet"),
+        cold_replicas: router.replicas("icecube_cnn"),
+        latency_ms: report.overall_latency.mean() * 1e3,
+    };
+    d.down();
+    Ok(row)
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== per-model autoscaling ablation: global vs per-model targets ==");
+    let time_scale = 8.0;
+    println!(
+        "budget 6 pods, 24 clients, 90/10 hot/cold skew, 60s clock run \
+         (time_scale {time_scale}x)\n"
+    );
+
+    let global_row = run_arm(false, time_scale)?;
+    eprintln!("global arm done ({} ok, {} pods)", global_row.ok, global_row.pods);
+    let per_model_row = run_arm(true, time_scale)?;
+    eprintln!(
+        "per-model arm done ({} ok, {} pods)",
+        per_model_row.ok, per_model_row.pods
+    );
+
+    let mut table = Table::new(&[
+        "scaling", "ok", "shed", "err", "hot ok", "hot shed", "cold ok", "pods",
+        "hot/cold replicas", "mean latency (ms)",
+    ]);
+    let mut csv = Csv::new(&[
+        "scaling", "ok", "shed", "errors", "hot_ok", "hot_shed", "cold_ok", "pods",
+        "hot_replicas", "cold_replicas", "mean_latency_ms",
+    ]);
+    for r in [&global_row, &per_model_row] {
+        table.row(&[
+            r.label.clone(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            r.errors.to_string(),
+            r.hot_ok.to_string(),
+            r.hot_shed.to_string(),
+            r.cold_ok.to_string(),
+            r.pods.to_string(),
+            format!("{}/{}", r.hot_replicas, r.cold_replicas),
+            format!("{:.1}", r.latency_ms),
+        ]);
+        csv.row(&[
+            r.label.clone(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            r.errors.to_string(),
+            r.hot_ok.to_string(),
+            r.hot_shed.to_string(),
+            r.cold_ok.to_string(),
+            r.pods.to_string(),
+            r.hot_replicas.to_string(),
+            r.cold_replicas.to_string(),
+            format!("{:.2}", r.latency_ms),
+        ]);
+    }
+    println!("{}", table.render());
+    let path = csv.save("per_model_autoscale")?;
+    println!("CSV: {}", path.display());
+
+    println!("\nchecks (equal pod budget, per-model targets win under skew):");
+    println!(
+        "  global   : {} ok, {} shed, {} pods, serving {}/{}",
+        global_row.ok, global_row.shed, global_row.pods, global_row.hot_replicas,
+        global_row.cold_replicas
+    );
+    println!(
+        "  per-model: {} ok, {} shed, {} pods, serving {}/{}",
+        per_model_row.ok, per_model_row.shed, per_model_row.pods,
+        per_model_row.hot_replicas, per_model_row.cold_replicas
+    );
+    assert!(
+        per_model_row.hot_replicas > global_row.hot_replicas,
+        "per-model scaling never gave the hot model more replicas \
+         (per-model {} vs global {})",
+        per_model_row.hot_replicas,
+        global_row.hot_replicas
+    );
+    assert!(
+        per_model_row.ok > global_row.ok,
+        "per-model scaling should serve strictly more requests at an equal \
+         pod budget (per-model {} vs global {})",
+        per_model_row.ok,
+        global_row.ok
+    );
+    assert!(
+        per_model_row.hot_shed < global_row.hot_shed,
+        "per-model scaling should shed less hot-model traffic \
+         (per-model {} vs global {})",
+        per_model_row.hot_shed,
+        global_row.hot_shed
+    );
+    Ok(())
+}

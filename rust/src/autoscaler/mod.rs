@@ -16,19 +16,38 @@
 //!   the [`MetricStore`], feeds the core, and pushes decisions into the
 //!   cluster's `desired_replicas` — exactly KEDA's relationship to a
 //!   Deployment.
+//!
+//! On top of that sits **per-model autoscaling** (`autoscaler.per_model`),
+//! the modelmesh follow-on: instead of one global target moved by a
+//! cluster-wide metric, [`PerModelScaler`] runs one [`ScalerCore`] per
+//! served model, fed by the placement controller's per-model demand
+//! signal (routed-request rate plus live queue depth, per replica). A hot
+//! model gains pods that boot advertising only that model (its boot
+//! profile), while `autoscaler.max_replicas` remains the *total* pod
+//! budget shared by every model — the planner hands budget to the models
+//! with the highest per-replica load first. [`PerModelPlanner`] is the
+//! pure layer (exhaustively testable without threads), [`PerModelScaler`]
+//! the poll loop.
 
 pub mod metric;
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::AutoscalerConfig;
-use crate::metrics::registry::{labels, Registry};
+use crate::metrics::registry::{labels, Counter, Gauge, Registry};
 use crate::metrics::MetricStore;
 use crate::orchestrator::Cluster;
 use crate::util::clock::Clock;
 
 pub use metric::MetricQuery;
+
+/// Demand probe for per-model scaling: `(model, now_secs) -> demand`
+/// (routed req/s + queued requests). The deployment wires this to
+/// [`PlacementController::demand_for`](crate::modelmesh::PlacementController::demand_for),
+/// so scaling and placement react to the same signal.
+pub type DemandProbe = Arc<dyn Fn(&str, f64) -> f64 + Send + Sync>;
 
 /// A scaling decision from one evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -218,6 +237,195 @@ impl Autoscaler {
     }
 }
 
+/// Pure per-model planning layer: one [`ScalerCore`] per model plus the
+/// shared total-pod budget (`autoscaler.max_replicas`).
+///
+/// Each core runs with the parent section's cooldown / stabilization /
+/// step / ratio knobs and the `per_model` threshold and bounds. The
+/// metric each core sees is the model's *per-replica* demand
+/// (`demand / max(current, 1)`), so the threshold has the same meaning
+/// as the placement controller's load threshold.
+pub struct PerModelPlanner {
+    cores: BTreeMap<String, ScalerCore>,
+    budget: usize,
+}
+
+impl PerModelPlanner {
+    /// Planner over `models`; `now` is the current clock time in seconds.
+    pub fn new(cfg: &AutoscalerConfig, models: &[String], now: f64) -> Self {
+        let cores = models
+            .iter()
+            .map(|m| {
+                let mut core_cfg = cfg.clone();
+                core_cfg.threshold = cfg.per_model.threshold;
+                core_cfg.min_replicas = cfg.per_model.min_replicas;
+                core_cfg.max_replicas = cfg.per_model.max_replicas;
+                (m.clone(), ScalerCore::new(core_cfg, now))
+            })
+            .collect();
+        PerModelPlanner { cores, budget: cfg.max_replicas }
+    }
+
+    /// One evaluation over all models: total `demand` and `current` pod
+    /// targets in, `(model, new target)` changes out. Models are visited
+    /// hottest (highest per-replica demand) first, so the shared budget
+    /// goes where the pressure is. A scale-up that would push the fleet
+    /// past the budget is dropped — its cooldown still stamps, so a
+    /// budget-starved model retries on the cooldown cadence rather than
+    /// every poll.
+    pub fn plan(
+        &mut self,
+        now: f64,
+        demand: &BTreeMap<String, f64>,
+        current: &BTreeMap<String, usize>,
+    ) -> Vec<(String, usize)> {
+        let mut total: usize = current.values().sum();
+        let mut order: Vec<(String, f64)> = self
+            .cores
+            .keys()
+            .map(|m| {
+                let cur = current.get(m).copied().unwrap_or(0).max(1);
+                let d = demand.get(m).copied().unwrap_or(0.0);
+                (m.clone(), d / cur as f64)
+            })
+            .collect();
+        order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+
+        let mut changes = Vec::new();
+        for (model, per_replica) in order {
+            let cur = current.get(&model).copied().unwrap_or(0);
+            let core = self.cores.get_mut(&model).expect("core per model");
+            match core.evaluate(now, per_replica, cur) {
+                Decision::Up(n) => {
+                    let grow = n.saturating_sub(cur);
+                    if total + grow <= self.budget {
+                        total += grow;
+                        changes.push((model, n));
+                    }
+                }
+                Decision::Down(n) => {
+                    total = total.saturating_sub(cur.saturating_sub(n));
+                    changes.push((model, n));
+                }
+                Decision::Hold => {}
+            }
+        }
+        changes
+    }
+}
+
+struct ModelScaleHandles {
+    demand: Gauge,
+    desired: Gauge,
+    ups: Counter,
+    downs: Counter,
+}
+
+/// The running per-model autoscaler: polls the demand probe on the
+/// configured interval and pushes per-model targets into the cluster
+/// (which must be in per-model mode, [`Cluster::start_per_model`]).
+pub struct PerModelScaler {
+    planner: Mutex<PerModelPlanner>,
+    demand: DemandProbe,
+    cluster: Arc<Cluster>,
+    models: Vec<String>,
+    cfg: AutoscalerConfig,
+    clock: Clock,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    per_model: BTreeMap<String, ModelScaleHandles>,
+}
+
+impl PerModelScaler {
+    /// Start polling every `cfg.poll_interval` of clock time.
+    pub fn start(
+        cfg: AutoscalerConfig,
+        models: Vec<String>,
+        cluster: Arc<Cluster>,
+        demand: DemandProbe,
+        clock: Clock,
+        registry: Registry,
+    ) -> Arc<Self> {
+        let per_model = models
+            .iter()
+            .map(|m| {
+                let l = labels(&[("model", m)]);
+                (
+                    m.clone(),
+                    ModelScaleHandles {
+                        demand: registry.gauge("autoscaler_model_demand", &l),
+                        desired: registry.gauge("autoscaler_model_desired", &l),
+                        ups: registry.counter("autoscaler_model_scale_ups_total", &l),
+                        downs: registry.counter("autoscaler_model_scale_downs_total", &l),
+                    },
+                )
+            })
+            .collect();
+        let scaler = Arc::new(PerModelScaler {
+            planner: Mutex::new(PerModelPlanner::new(&cfg, &models, clock.now_secs())),
+            demand,
+            cluster,
+            models,
+            cfg: cfg.clone(),
+            clock: clock.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            per_model,
+        });
+        let s = Arc::clone(&scaler);
+        let handle = std::thread::Builder::new()
+            .name("per-model-autoscaler".into())
+            .spawn(move || {
+                while !s.stop.load(Ordering::SeqCst) {
+                    s.evaluate_once();
+                    s.clock.sleep(s.cfg.poll_interval);
+                }
+            })
+            .expect("spawning per-model autoscaler");
+        *scaler.handle.lock().unwrap() = Some(handle);
+        scaler
+    }
+
+    /// One synchronous evaluation (used by the poll loop and by tests).
+    /// Returns the number of target changes applied.
+    pub fn evaluate_once(&self) -> usize {
+        let now = self.clock.now_secs();
+        let mut demand = BTreeMap::new();
+        let mut current = BTreeMap::new();
+        for m in &self.models {
+            let d = (self.demand)(m, now);
+            self.per_model[m].demand.set(d);
+            demand.insert(m.clone(), d);
+            current.insert(m.clone(), self.cluster.desired_for(m));
+        }
+        let changes = self.planner.lock().unwrap().plan(now, &demand, &current);
+        for (model, n) in &changes {
+            let cur = current[model];
+            let h = &self.per_model[model];
+            if *n > cur {
+                h.ups.inc();
+            } else {
+                h.downs.inc();
+            }
+            log::info!(
+                "per-model autoscaler: '{model}' demand {:.1}, pods {cur} -> {n}",
+                demand[model]
+            );
+            self.cluster.set_desired_for(model, *n);
+            h.desired.set(*n as f64);
+        }
+        changes.len()
+    }
+
+    /// Stop the poll loop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,7 +443,34 @@ mod tests {
             scale_up_cooldown: Duration::from_secs(5),
             scale_down_stabilization: Duration::from_secs(30),
             step: 1,
+            per_model: Default::default(),
         }
+    }
+
+    /// Per-model planner config: budget 6 pods total, threshold 100
+    /// per-replica demand, per-model bounds [1, 4].
+    fn pm_cfg() -> AutoscalerConfig {
+        let mut c = cfg();
+        c.max_replicas = 6;
+        c.per_model = crate::config::PerModelScalingConfig {
+            enabled: true,
+            threshold: 100.0,
+            min_replicas: 1,
+            max_replicas: 4,
+        };
+        c
+    }
+
+    fn map_f64(pairs: &[(&str, f64)]) -> BTreeMap<String, f64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn map_usize(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn models() -> Vec<String> {
+        vec!["hot".to_string(), "cold".to_string()]
     }
 
     #[test]
@@ -351,6 +586,84 @@ mod tests {
                 assert!(!matches!(d, Decision::Up(_)), "scaled up on {metric}");
             }
         });
+    }
+
+    #[test]
+    fn per_model_hot_scales_cold_holds() {
+        let mut p = PerModelPlanner::new(&pm_cfg(), &models(), 0.0);
+        // hot per-replica demand 500 > 100, cold 20 < 100
+        let changes = p.plan(
+            0.0,
+            &map_f64(&[("hot", 500.0), ("cold", 20.0)]),
+            &map_usize(&[("hot", 1), ("cold", 1)]),
+        );
+        assert_eq!(changes, vec![("hot".to_string(), 2)]);
+    }
+
+    #[test]
+    fn per_model_budget_caps_total() {
+        let mut c = pm_cfg();
+        c.max_replicas = 3; // budget: 3 pods across both models
+        c.scale_up_cooldown = Duration::ZERO;
+        let mut p = PerModelPlanner::new(&c, &models(), 0.0);
+        // both hot; budget allows exactly one more pod, which must go to
+        // the hotter model
+        let changes = p.plan(
+            0.0,
+            &map_f64(&[("hot", 500.0), ("cold", 400.0)]),
+            &map_usize(&[("hot", 1), ("cold", 1)]),
+        );
+        assert_eq!(changes, vec![("hot".to_string(), 2)]);
+        // fleet at budget: nothing grows even under pressure
+        let changes = p.plan(
+            10.0,
+            &map_f64(&[("hot", 500.0), ("cold", 400.0)]),
+            &map_usize(&[("hot", 2), ("cold", 1)]),
+        );
+        assert!(changes.is_empty(), "{changes:?}");
+    }
+
+    #[test]
+    fn per_model_down_frees_budget() {
+        let mut c = pm_cfg();
+        c.max_replicas = 4;
+        c.scale_down_stabilization = Duration::from_secs(5);
+        let mut p = PerModelPlanner::new(&c, &models(), 0.0);
+        // Fleet at budget (4): hot's scale-up is rejected, cold's low
+        // streak starts counting.
+        let demand = map_f64(&[("hot", 900.0), ("cold", 0.0)]);
+        let current = map_usize(&[("hot", 2), ("cold", 2)]);
+        assert!(p.plan(0.0, &demand, &current).is_empty());
+        // After the stabilization window, cold gives a pod back.
+        let changes = p.plan(6.0, &demand, &current);
+        assert!(
+            changes.contains(&("cold".to_string(), 1)),
+            "cold never scaled down: {changes:?}"
+        );
+    }
+
+    #[test]
+    fn per_model_bounds_respected() {
+        let mut c = pm_cfg();
+        c.scale_up_cooldown = Duration::ZERO;
+        let mut p = PerModelPlanner::new(&c, &models(), 0.0);
+        // at the per-model cap (4): hold even though demand is high
+        let changes = p.plan(
+            0.0,
+            &map_f64(&[("hot", 900.0), ("cold", 20.0)]),
+            &map_usize(&[("hot", 4), ("cold", 1)]),
+        );
+        assert!(changes.is_empty(), "{changes:?}");
+        // at the per-model floor (1): hold even though demand is zero
+        let mut p = PerModelPlanner::new(&c, &models(), 0.0);
+        for t in 0..100 {
+            let changes = p.plan(
+                t as f64,
+                &map_f64(&[("hot", 0.0), ("cold", 0.0)]),
+                &map_usize(&[("hot", 1), ("cold", 1)]),
+            );
+            assert!(changes.is_empty(), "{changes:?}");
+        }
     }
 
     #[test]

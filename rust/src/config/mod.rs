@@ -12,7 +12,7 @@ pub mod yaml;
 
 pub use schema::{
     AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, GatewayConfig,
-    LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig, PlacementPolicy,
-    ServerConfig, ServiceModelConfig,
+    LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig, PerModelScalingConfig,
+    PlacementPolicy, ServerConfig, ServiceModelConfig,
 };
 pub use yaml::Value;

@@ -171,6 +171,46 @@ pub struct GatewayConfig {
     pub max_connections: usize,
 }
 
+/// Per-model autoscaling subsection (`autoscaler.per_model`).
+///
+/// When enabled, the single global replica target is replaced by one
+/// target per served model: the autoscaler runs one
+/// [`ScalerCore`](crate::autoscaler::ScalerCore) per model, fed by the
+/// placement controller's per-model demand signal (routed-request rate
+/// plus live queue depth, per replica) instead of a cluster-wide metric.
+/// Pods spawned for a hot model boot advertising only that model (its
+/// "boot profile"). Requires the modelmesh (per-model routing supplies
+/// the demand signal) and `autoscaler.enabled`.
+///
+/// The per-model loop inherits `poll_interval`, `scale_up_cooldown`,
+/// `scale_down_stabilization`, `scale_down_ratio` and `step` from the
+/// parent section; `autoscaler.max_replicas` stays the *total* pod
+/// budget shared by all models.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PerModelScalingConfig {
+    /// Switch from one global replica target to per-model targets.
+    pub enabled: bool,
+    /// Per-replica demand (routed req/s + queued requests) above which a
+    /// model gets another dedicated pod.
+    pub threshold: f64,
+    /// Per-model pod floor (a model never targets fewer pods).
+    pub min_replicas: usize,
+    /// Per-model pod cap (further capped by the shared
+    /// `autoscaler.max_replicas` budget).
+    pub max_replicas: usize,
+}
+
+impl Default for PerModelScalingConfig {
+    fn default() -> Self {
+        PerModelScalingConfig {
+            enabled: false,
+            threshold: 50.0,
+            min_replicas: 1,
+            max_replicas: 4,
+        }
+    }
+}
+
 /// Autoscaler section (KEDA analogue, §2.4).
 #[derive(Clone, Debug, PartialEq)]
 pub struct AutoscalerConfig {
@@ -195,6 +235,8 @@ pub struct AutoscalerConfig {
     pub scale_down_stabilization: Duration,
     /// Replicas added per scale-up step.
     pub step: usize,
+    /// Per-model scaling (replaces the global target when enabled).
+    pub per_model: PerModelScalingConfig,
 }
 
 /// Model placement policies (the modelmesh subsystem).
@@ -365,6 +407,7 @@ impl Default for AutoscalerConfig {
             scale_up_cooldown: Duration::from_secs(4),
             scale_down_stabilization: Duration::from_secs(20),
             step: 1,
+            per_model: PerModelScalingConfig::default(),
         }
     }
 }
@@ -419,6 +462,67 @@ impl Default for DeploymentConfig {
             time_scale: 1.0,
         }
     }
+}
+
+/// Allowed key sets per config section — the single source of truth
+/// shared by the parser's unknown-key rejection and the
+/// `docs/CONFIG.md` sync test (`config_doc_covers_every_schema_field`).
+/// Adding a field here without documenting it fails the test suite.
+pub mod keys {
+    /// Top-level sections.
+    pub const ROOT: &[&str] = &[
+        "name", "server", "gateway", "autoscaler", "cluster", "monitoring",
+        "model_placement", "time_scale",
+    ];
+    /// `server` section.
+    pub const SERVER: &[&str] = &[
+        "replicas", "models", "repository", "startup_delay", "execution",
+        "queue_capacity", "util_window",
+    ];
+    /// `server.models[]` entries.
+    pub const SERVER_MODEL: &[&str] =
+        &["name", "max_queue_delay", "preferred_batch", "service_model"];
+    /// `server.models[].service_model`.
+    pub const SERVICE_MODEL: &[&str] = &["base", "per_row"];
+    /// `gateway` section.
+    pub const GATEWAY: &[&str] = &[
+        "listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret",
+        "worker_threads", "max_inflight_per_instance", "max_connections",
+    ];
+    /// `autoscaler` section.
+    pub const AUTOSCALER: &[&str] = &[
+        "enabled", "metric", "threshold", "scale_down_ratio", "min_replicas",
+        "max_replicas", "poll_interval", "scale_up_cooldown",
+        "scale_down_stabilization", "step", "per_model",
+    ];
+    /// `autoscaler.per_model` subsection.
+    pub const AUTOSCALER_PER_MODEL: &[&str] =
+        &["enabled", "threshold", "min_replicas", "max_replicas"];
+    /// `cluster` section.
+    pub const CLUSTER: &[&str] = &[
+        "nodes", "gpus_per_node", "pod_start_delay", "termination_grace",
+        "pod_failure_rate",
+    ];
+    /// `monitoring` section.
+    pub const MONITORING: &[&str] = &["listen", "scrape_interval", "retention", "tracing"];
+    /// `model_placement` section.
+    pub const MODEL_PLACEMENT: &[&str] = &[
+        "policy", "memory_budget_mb", "load_threshold", "unload_threshold",
+        "cooldown", "demand_window", "min_replicas_per_model",
+    ];
+    /// Every (section, allowed keys) pair, for exhaustive iteration.
+    pub const SECTIONS: &[(&str, &[&str])] = &[
+        ("<root>", ROOT),
+        ("server", SERVER),
+        ("server.models[]", SERVER_MODEL),
+        ("server.models[].service_model", SERVICE_MODEL),
+        ("gateway", GATEWAY),
+        ("autoscaler", AUTOSCALER),
+        ("autoscaler.per_model", AUTOSCALER_PER_MODEL),
+        ("cluster", CLUSTER),
+        ("monitoring", MONITORING),
+        ("model_placement", MODEL_PLACEMENT),
+    ];
 }
 
 // ---------------------------------------------------------------------------
@@ -514,11 +618,7 @@ impl DeploymentConfig {
 
     /// Parse from an already-parsed YAML value.
     pub fn from_value(root: &Value) -> Result<Self> {
-        check_keys(
-            root,
-            &["name", "server", "gateway", "autoscaler", "cluster", "monitoring", "model_placement", "time_scale"],
-            "<root>",
-        )?;
+        check_keys(root, keys::ROOT, "<root>")?;
         let d = DeploymentConfig::default();
         let empty = Value::Map(Vec::new());
 
@@ -526,11 +626,7 @@ impl DeploymentConfig {
         let time_scale = get_f64(root, "time_scale", d.time_scale)?;
 
         let sv = root.get("server").unwrap_or(&empty);
-        check_keys(
-            sv,
-            &["replicas", "models", "repository", "startup_delay", "execution", "queue_capacity", "util_window"],
-            "server",
-        )?;
+        check_keys(sv, keys::SERVER, "server")?;
         let models = match sv.get("models") {
             None => d.server.models.clone(),
             Some(list) => {
@@ -539,16 +635,16 @@ impl DeploymentConfig {
                     .context("'server.models' must be a sequence")?;
                 let mut models = Vec::new();
                 for item in items {
-                    check_keys(
-                        item,
-                        &["name", "max_queue_delay", "preferred_batch", "service_model"],
-                        "server.models[]",
-                    )?;
+                    check_keys(item, keys::SERVER_MODEL, "server.models[]")?;
                     let dm = ModelConfig::default();
                     let service_model = match item.get("service_model") {
                         None => dm.service_model,
                         Some(sm) => {
-                            check_keys(sm, &["base", "per_row"], "server.models[].service_model")?;
+                            check_keys(
+                                sm,
+                                keys::SERVICE_MODEL,
+                                "server.models[].service_model",
+                            )?;
                             ServiceModelConfig {
                                 base: get_duration(sm, "base", dm.service_model.base)?,
                                 per_row: get_duration(sm, "per_row", dm.service_model.per_row)?,
@@ -581,11 +677,7 @@ impl DeploymentConfig {
         };
 
         let gw = root.get("gateway").unwrap_or(&empty);
-        check_keys(
-            gw,
-            &["listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret", "worker_threads", "max_inflight_per_instance", "max_connections"],
-            "gateway",
-        )?;
+        check_keys(gw, keys::GATEWAY, "gateway")?;
         let gateway = GatewayConfig {
             listen: get_str(gw, "listen", &d.gateway.listen)?,
             lb_policy: match gw.get("lb_policy") {
@@ -609,11 +701,15 @@ impl DeploymentConfig {
         };
 
         let asc = root.get("autoscaler").unwrap_or(&empty);
-        check_keys(
-            asc,
-            &["enabled", "metric", "threshold", "scale_down_ratio", "min_replicas", "max_replicas", "poll_interval", "scale_up_cooldown", "scale_down_stabilization", "step"],
-            "autoscaler",
-        )?;
+        check_keys(asc, keys::AUTOSCALER, "autoscaler")?;
+        let pm = asc.get("per_model").unwrap_or(&empty);
+        check_keys(pm, keys::AUTOSCALER_PER_MODEL, "autoscaler.per_model")?;
+        let per_model = PerModelScalingConfig {
+            enabled: get_bool(pm, "enabled", d.autoscaler.per_model.enabled)?,
+            threshold: get_f64(pm, "threshold", d.autoscaler.per_model.threshold)?,
+            min_replicas: get_usize(pm, "min_replicas", d.autoscaler.per_model.min_replicas)?,
+            max_replicas: get_usize(pm, "max_replicas", d.autoscaler.per_model.max_replicas)?,
+        };
         let autoscaler = AutoscalerConfig {
             enabled: get_bool(asc, "enabled", d.autoscaler.enabled)?,
             metric: get_str(asc, "metric", &d.autoscaler.metric)?,
@@ -629,14 +725,11 @@ impl DeploymentConfig {
                 d.autoscaler.scale_down_stabilization,
             )?,
             step: get_usize(asc, "step", d.autoscaler.step)?,
+            per_model,
         };
 
         let cl = root.get("cluster").unwrap_or(&empty);
-        check_keys(
-            cl,
-            &["nodes", "gpus_per_node", "pod_start_delay", "termination_grace", "pod_failure_rate"],
-            "cluster",
-        )?;
+        check_keys(cl, keys::CLUSTER, "cluster")?;
         let cluster = ClusterConfig {
             nodes: get_usize(cl, "nodes", d.cluster.nodes)?,
             gpus_per_node: get_usize(cl, "gpus_per_node", d.cluster.gpus_per_node)?,
@@ -646,7 +739,7 @@ impl DeploymentConfig {
         };
 
         let mon = root.get("monitoring").unwrap_or(&empty);
-        check_keys(mon, &["listen", "scrape_interval", "retention", "tracing"], "monitoring")?;
+        check_keys(mon, keys::MONITORING, "monitoring")?;
         let monitoring = MonitoringConfig {
             listen: get_str(mon, "listen", &d.monitoring.listen)?,
             scrape_interval: get_duration(mon, "scrape_interval", d.monitoring.scrape_interval)?,
@@ -655,11 +748,7 @@ impl DeploymentConfig {
         };
 
         let mp = root.get("model_placement").unwrap_or(&empty);
-        check_keys(
-            mp,
-            &["policy", "memory_budget_mb", "load_threshold", "unload_threshold", "cooldown", "demand_window", "min_replicas_per_model"],
-            "model_placement",
-        )?;
+        check_keys(mp, keys::MODEL_PLACEMENT, "model_placement")?;
         let model_placement = ModelPlacementConfig {
             policy: match mp.get("policy") {
                 None => d.model_placement.policy,
@@ -747,6 +836,49 @@ impl DeploymentConfig {
         }
         if self.autoscaler.threshold <= 0.0 {
             bail!("autoscaler.threshold must be > 0");
+        }
+        let pm = &self.autoscaler.per_model;
+        if pm.threshold <= 0.0 {
+            bail!("autoscaler.per_model.threshold must be > 0");
+        }
+        if pm.min_replicas == 0 {
+            bail!("autoscaler.per_model.min_replicas must be >= 1");
+        }
+        if pm.min_replicas > pm.max_replicas {
+            bail!(
+                "autoscaler.per_model.min_replicas ({}) > max_replicas ({})",
+                pm.min_replicas,
+                pm.max_replicas
+            );
+        }
+        if pm.enabled {
+            if !self.autoscaler.enabled {
+                bail!("autoscaler.per_model.enabled requires autoscaler.enabled: true");
+            }
+            if !self.model_placement.mesh_enabled() {
+                bail!(
+                    "autoscaler.per_model requires the modelmesh for its demand \
+                     signal: set model_placement.policy: dynamic or a \
+                     model_placement.memory_budget_mb > 0"
+                );
+            }
+            if pm.max_replicas > self.autoscaler.max_replicas {
+                bail!(
+                    "autoscaler.per_model.max_replicas ({}) exceeds the shared pod \
+                     budget autoscaler.max_replicas ({})",
+                    pm.max_replicas,
+                    self.autoscaler.max_replicas
+                );
+            }
+            if pm.min_replicas * self.server.models.len() > self.autoscaler.max_replicas {
+                bail!(
+                    "autoscaler.per_model.min_replicas ({}) x {} models exceeds the \
+                     shared pod budget autoscaler.max_replicas ({})",
+                    pm.min_replicas,
+                    self.server.models.len(),
+                    self.autoscaler.max_replicas
+                );
+            }
         }
         let capacity = self.cluster.nodes * self.cluster.gpus_per_node;
         if self.autoscaler.max_replicas > capacity {
@@ -931,6 +1063,122 @@ monitoring:
     fn lb_policy_roundtrip_names() {
         for p in [LbPolicy::RoundRobin, LbPolicy::LeastConnection, LbPolicy::UtilizationAware, LbPolicy::Random] {
             assert_eq!(LbPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn per_model_scaling_parses() {
+        let text = r#"
+server:
+  models:
+    - name: particlenet
+    - name: icecube_cnn
+autoscaler:
+  enabled: true
+  max_replicas: 6
+  per_model:
+    enabled: true
+    threshold: 200
+    min_replicas: 1
+    max_replicas: 5
+model_placement:
+  policy: dynamic
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let pm = &cfg.autoscaler.per_model;
+        assert!(pm.enabled);
+        assert_eq!(pm.threshold, 200.0);
+        assert_eq!(pm.min_replicas, 1);
+        assert_eq!(pm.max_replicas, 5);
+    }
+
+    #[test]
+    fn per_model_scaling_defaults_off() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert!(!cfg.autoscaler.per_model.enabled);
+    }
+
+    #[test]
+    fn per_model_scaling_bad_values_rejected() {
+        // needs the parent autoscaler on
+        let e = DeploymentConfig::from_yaml(
+            "autoscaler:\n  per_model:\n    enabled: true\nmodel_placement:\n  policy: dynamic\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("autoscaler.enabled"), "{e}");
+        // needs the modelmesh demand signal
+        let e = DeploymentConfig::from_yaml(
+            "autoscaler:\n  enabled: true\n  per_model:\n    enabled: true\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("modelmesh"), "{e}");
+        // per-model cap cannot exceed the shared budget
+        let text = "autoscaler:\n  enabled: true\n  max_replicas: 4\n  per_model:\n    \
+                    enabled: true\n    max_replicas: 8\nmodel_placement:\n  policy: dynamic\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("budget"), "{e}");
+        // inverted per-model bounds
+        assert!(DeploymentConfig::from_yaml(
+            "autoscaler:\n  per_model:\n    min_replicas: 3\n    max_replicas: 2\n"
+        )
+        .is_err());
+        // typo protection inside the subsection
+        assert!(
+            DeploymentConfig::from_yaml("autoscaler:\n  per_model:\n    treshold: 5\n").is_err()
+        );
+    }
+
+    #[test]
+    fn per_model_floors_capped_by_budget() {
+        let text = r#"
+server:
+  models:
+    - name: particlenet
+    - name: icecube_cnn
+    - name: cms_transformer
+autoscaler:
+  enabled: true
+  max_replicas: 5
+  per_model:
+    enabled: true
+    min_replicas: 2
+    max_replicas: 4
+model_placement:
+  policy: dynamic
+"#;
+        // 3 models x floor 2 = 6 > budget 5
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("models"), "{e}");
+    }
+
+    #[test]
+    fn all_preset_configs_parse_and_validate() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+        let mut seen = 0;
+        for entry in std::fs::read_dir(dir).expect("configs/ must exist") {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) != Some("yaml") {
+                continue;
+            }
+            DeploymentConfig::from_file(&path)
+                .unwrap_or_else(|e| panic!("preset {} rejected: {e:#}", path.display()));
+            seen += 1;
+        }
+        assert!(seen >= 8, "expected the preset set, found {seen} yaml files");
+    }
+
+    #[test]
+    fn config_doc_covers_every_schema_field() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/CONFIG.md");
+        let doc = std::fs::read_to_string(path).expect("docs/CONFIG.md must exist");
+        for (section, section_keys) in keys::SECTIONS {
+            for key in *section_keys {
+                assert!(
+                    doc.contains(&format!("`{key}`")),
+                    "docs/CONFIG.md is missing `{key}` (section {section}); \
+                     keep the reference in sync with config/schema.rs"
+                );
+            }
         }
     }
 

@@ -545,6 +545,18 @@ mod tests {
     }
 
     #[test]
+    fn subsection_between_scalar_keys() {
+        // The autoscaler.per_model shape: a nested map sandwiched between
+        // sibling scalars at the parent indent, with comments inside.
+        let text = "autoscaler:\n  enabled: true\n  per_model:\n    # dedicated pods\n    \
+                    enabled: true\n    threshold: 200\n  max_replicas: 6\n";
+        let v = parse(text).unwrap();
+        assert_eq!(v.get_path("autoscaler.enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get_path("autoscaler.per_model.threshold").unwrap().as_f64(), Some(200.0));
+        assert_eq!(v.get_path("autoscaler.max_replicas").unwrap().as_i64(), Some(6));
+    }
+
+    #[test]
     fn block_sequence() {
         let v = parse("items:\n  - 1\n  - 2\n  - three\n").unwrap();
         let seq = v.get("items").unwrap().as_seq().unwrap();

@@ -17,14 +17,15 @@
 //!
 //! [`Deployment::down`] tears everything back down in reverse order.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::autoscaler::Autoscaler;
-use crate::config::{DeploymentConfig, ExecutionMode};
+use crate::autoscaler::{Autoscaler, DemandProbe, PerModelScaler};
+use crate::config::{DeploymentConfig, ExecutionMode, PerModelScalingConfig};
 use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
 use crate::metrics::exposition::MetricsServer;
@@ -47,12 +48,34 @@ pub struct Deployment {
     pub cluster: Arc<Cluster>,
     pub gateway: Gateway,
     pub autoscaler: Arc<Autoscaler>,
+    /// Per-model autoscaler, when `autoscaler.per_model` is enabled (the
+    /// global [`Autoscaler`] loop is inert in that case).
+    pub per_model_scaler: Option<Arc<PerModelScaler>>,
     /// Model-aware routing table, when the modelmesh is active.
     pub router: Option<Arc<ModelRouter>>,
     /// Placement controller, when the modelmesh is active.
     pub placement: Option<Arc<PlacementController>>,
     metrics_http: Option<MetricsServer>,
     _scraper: Scraper,
+}
+
+/// Initial per-model pod targets: `initial` pods spread round-robin over
+/// the catalog, each model clamped into its configured bounds (floors
+/// win over the round-robin share, so the sum may exceed `initial`).
+fn initial_model_targets(
+    initial: usize,
+    models: &[String],
+    pm: &PerModelScalingConfig,
+) -> BTreeMap<String, usize> {
+    let n = models.len().max(1);
+    models
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let share = initial / n + usize::from(i < initial % n);
+            (m.clone(), share.clamp(pm.min_replicas, pm.max_replicas))
+        })
+        .collect()
 }
 
 impl Deployment {
@@ -142,7 +165,7 @@ impl Deployment {
                 .clone()
                 .map(|catalog| (catalog, cfg.model_placement.budget_bytes()));
             let placement_seq = Arc::new(AtomicUsize::new(0));
-            Arc::new(move |name: &str| {
+            Arc::new(move |name: &str, profile: Option<&str>| {
                 let inst = Instance::start_with_mode(
                     name,
                     Arc::clone(&repo),
@@ -154,14 +177,22 @@ impl Deployment {
                     mode,
                 );
                 if let Some((catalog, budget)) = &mesh {
-                    // The rotation index is a plain counter, so a pod
-                    // replacing a failed one may boot with a different
-                    // slot than the pod it replaces. That is fine: the
-                    // placement controller's min-replica repair pass
-                    // (which runs under static policy too) re-hosts any
-                    // model the churn left without a replica.
-                    let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
-                    inst.set_loaded_models(&initial_placement(catalog, *budget, idx));
+                    match profile {
+                        // Boot profile (per-model autoscaling): the pod
+                        // was spawned for one model and advertises only
+                        // it. Placement may load more onto it later.
+                        Some(model) => inst.set_loaded_models(&[model.to_string()]),
+                        // The rotation index is a plain counter, so a pod
+                        // replacing a failed one may boot with a different
+                        // slot than the pod it replaces. That is fine: the
+                        // placement controller's min-replica repair pass
+                        // (which runs under static policy too) re-hosts any
+                        // model the churn left without a replica.
+                        None => {
+                            let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
+                            inst.set_loaded_models(&initial_placement(catalog, *budget, idx));
+                        }
+                    }
                 }
                 inst
             })
@@ -172,15 +203,39 @@ impl Deployment {
         } else {
             cfg.server.replicas
         };
-        let cluster = Cluster::start(
-            cfg.cluster.clone(),
-            cfg.server.startup_delay,
-            initial,
-            clock.clone(),
-            registry.clone(),
-            factory,
-            0x5057E5,
-        );
+        let per_model_on = cfg.autoscaler.enabled && cfg.autoscaler.per_model.enabled;
+        let cluster = if per_model_on {
+            // Per-model pod targets: the initial replica count spread
+            // round-robin over the catalog, clamped to each model's
+            // bounds. Each pod carries its model as a boot profile.
+            let targets =
+                initial_model_targets(initial, &model_names, &cfg.autoscaler.per_model);
+            Cluster::start_per_model(
+                cfg.cluster.clone(),
+                cfg.server.startup_delay,
+                targets,
+                clock.clone(),
+                registry.clone(),
+                factory,
+                0x5057E5,
+            )
+        } else {
+            Cluster::start(
+                cfg.cluster.clone(),
+                cfg.server.startup_delay,
+                initial,
+                clock.clone(),
+                registry.clone(),
+                factory,
+                0x5057E5,
+            )
+        };
+        if cfg.model_placement.mesh_enabled() {
+            // Scale-down victim selection must respect the placement
+            // floor: never kill the pod that holds a model's last
+            // min-replica copy while a redundant victim exists.
+            cluster.set_victim_floor(cfg.model_placement.min_replicas_per_model);
+        }
 
         // Optional external-metric pressure gate: shed while average queue
         // latency exceeds 20x the autoscaler threshold (i.e. the system is
@@ -229,8 +284,33 @@ impl Deployment {
             _ => None,
         };
 
+        // Per-model autoscaling: one scaling loop per model, fed by the
+        // placement controller's demand signal, pushing per-model pod
+        // targets into the cluster. The global autoscaler loop is started
+        // inert in that case — the per-model loop owns the targets.
+        let per_model_scaler = match (&placement, per_model_on) {
+            (Some(p), true) => {
+                let probe: DemandProbe = {
+                    let p = Arc::clone(p);
+                    Arc::new(move |model: &str, now: f64| p.demand_for(model, now))
+                };
+                Some(PerModelScaler::start(
+                    cfg.autoscaler.clone(),
+                    model_names.clone(),
+                    Arc::clone(&cluster),
+                    probe,
+                    clock.clone(),
+                    registry.clone(),
+                ))
+            }
+            _ => None,
+        };
+        let mut global_scaler_cfg = cfg.autoscaler.clone();
+        if per_model_scaler.is_some() {
+            global_scaler_cfg.enabled = false;
+        }
         let autoscaler = Autoscaler::start(
-            cfg.autoscaler.clone(),
+            global_scaler_cfg,
             Arc::clone(&cluster),
             store.clone(),
             clock.clone(),
@@ -247,9 +327,15 @@ impl Deployment {
             "deployment '{}' up: {} models, {} initial replicas, lb={}, autoscaler={}, placement={}",
             cfg.name,
             model_names.len(),
-            initial,
+            cluster.desired(),
             cfg.gateway.lb_policy.name(),
-            if cfg.autoscaler.enabled { "on" } else { "off" },
+            if !cfg.autoscaler.enabled {
+                "off"
+            } else if per_model_on {
+                "per-model"
+            } else {
+                "on"
+            },
             if cfg.model_placement.mesh_enabled() {
                 cfg.model_placement.policy.name()
             } else {
@@ -267,6 +353,7 @@ impl Deployment {
             cluster,
             gateway,
             autoscaler,
+            per_model_scaler,
             router,
             placement,
             metrics_http,
@@ -297,6 +384,9 @@ impl Deployment {
 
     /// Tear down in reverse boot order (`helm uninstall`).
     pub fn down(self) {
+        if let Some(s) = &self.per_model_scaler {
+            s.shutdown();
+        }
         self.autoscaler.shutdown();
         self.gateway.shutdown();
         self.cluster.shutdown();
@@ -509,5 +599,66 @@ mod tests {
         // icecube_cnn alone needs ~152 KB: 0.1 MB cannot host it.
         cfg.model_placement.memory_budget_mb = 0.1;
         assert!(Deployment::up(cfg).is_err());
+    }
+
+    #[test]
+    fn initial_model_targets_spread_and_clamp() {
+        let models = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let pm = PerModelScalingConfig {
+            enabled: true,
+            threshold: 100.0,
+            min_replicas: 1,
+            max_replicas: 4,
+        };
+        let t = initial_model_targets(4, &models, &pm);
+        assert_eq!(t["a"], 2);
+        assert_eq!(t["b"], 1);
+        assert_eq!(t["c"], 1);
+        // floors win when the share rounds to zero
+        let t = initial_model_targets(1, &models, &pm);
+        assert!(t.values().all(|&n| n == 1), "{t:?}");
+        // caps win over a large initial count
+        let t = initial_model_targets(30, &models, &pm);
+        assert!(t.values().all(|&n| n == 4), "{t:?}");
+    }
+
+    #[test]
+    fn per_model_autoscaling_boots_with_profiles() {
+        let mut cfg = two_model_mesh_cfg();
+        cfg.server.replicas = 2;
+        cfg.autoscaler.enabled = true;
+        cfg.autoscaler.min_replicas = 2;
+        cfg.autoscaler.max_replicas = 4;
+        cfg.autoscaler.per_model = PerModelScalingConfig {
+            enabled: true,
+            threshold: 1e9, // never scale during this test
+            min_replicas: 1,
+            max_replicas: 3,
+        };
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.per_model_scaler.is_some());
+        assert!(d.cluster.per_model());
+        // one boot-profile pod per model
+        assert_eq!(d.cluster.desired_for("icecube_cnn"), 1);
+        assert_eq!(d.cluster.desired_for("particlenet"), 1);
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        // every pod advertises exactly the model it was spawned for
+        std::thread::sleep(Duration::from_millis(300)); // one reconcile pass
+        let router = d.router.as_ref().unwrap();
+        assert_eq!(router.replicas("icecube_cnn"), 1);
+        assert_eq!(router.replicas("particlenet"), 1);
+        // both models serve through their dedicated pods
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        let r = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(r.status, Status::Ok, "{}", r.error);
+        let r = client.infer("particlenet", Tensor::zeros(vec![1, 64, 7])).unwrap();
+        assert_eq!(r.status, Status::Ok, "{}", r.error);
+        // raising one model's target spawns a pod that boots with only
+        // that model advertised
+        d.cluster.set_desired_for("particlenet", 2);
+        assert!(d.wait_ready(3, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(d.router.as_ref().unwrap().replicas("particlenet"), 2);
+        d.down();
     }
 }

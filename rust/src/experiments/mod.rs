@@ -193,6 +193,7 @@ pub fn fig_config(
             scale_up_cooldown: Duration::from_secs(20),
             scale_down_stabilization: stabilization,
             step: 1,
+            per_model: PerModelScalingConfig::default(),
         },
         cluster: ClusterConfig {
             nodes: 4,
@@ -296,6 +297,54 @@ pub fn modelmesh_config(
     }
 }
 
+/// Two-model deployment for the per-model autoscaling ablation
+/// (`benches/per_model_autoscale.rs`): same 90/10 skew and one-model
+/// memory budget as the modelmesh ablation, but with the autoscaler on
+/// and an equal total-pod budget in both arms. `per_model = false` is
+/// the global arm (one queue-latency-driven target; new pods boot with
+/// the balanced rotation placement, so only every other pod helps the
+/// hot model); `per_model = true` runs one scaling loop per model fed by
+/// placement demand, and hot-model pods boot advertising only that model.
+pub fn per_model_autoscale_config(time_scale: f64, per_model: bool) -> DeploymentConfig {
+    use crate::config::*;
+
+    let mut cfg = modelmesh_config(time_scale, PlacementPolicy::Static);
+    cfg.name = if per_model { "scale-per-model".into() } else { "scale-global".into() };
+    cfg.server.replicas = 2;
+    cfg.cluster = ClusterConfig {
+        nodes: 4,
+        gpus_per_node: 2,
+        pod_start_delay: Duration::from_millis(500),
+        termination_grace: Duration::from_secs(1),
+        pod_failure_rate: 0.0,
+    };
+    cfg.autoscaler = AutoscalerConfig {
+        enabled: true,
+        // Global arm trigger: average queue wait over a short window.
+        metric: "queue_latency_avg:5".into(),
+        threshold: 0.02,
+        scale_down_ratio: 0.2,
+        min_replicas: 2,
+        // The shared pod budget: BOTH arms may run at most 6 pods.
+        max_replicas: 6,
+        poll_interval: Duration::from_secs(1),
+        scale_up_cooldown: Duration::from_secs(3),
+        // No scale-down churn within the measured run.
+        scale_down_stabilization: Duration::from_secs(300),
+        step: 1,
+        per_model: PerModelScalingConfig {
+            enabled: per_model,
+            // Per-replica demand (req/s + queued); a saturated simulated
+            // GPU serves ~470 single-row req/s, so a hot replica sits
+            // well above this and a 10% cold stream well below.
+            threshold: 200.0,
+            min_replicas: 1,
+            max_replicas: 5,
+        },
+    };
+    cfg
+}
+
 /// The skewed two-model workload for the modelmesh ablation:
 /// `hot_fraction` of requests hit particlenet, the rest icecube_cnn,
 /// single-row requests with a light think time.
@@ -353,6 +402,38 @@ mod tests {
         for inst in d.cluster.endpoints() {
             assert!(inst.memory_used() <= budget, "{} over memory budget", inst.id);
         }
+        d.down();
+    }
+
+    #[test]
+    fn per_model_autoscale_configs_validate() {
+        for arm in [false, true] {
+            let cfg = per_model_autoscale_config(8.0, arm);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.autoscaler.per_model.enabled, arm);
+            assert!(cfg.model_placement.mesh_enabled());
+        }
+    }
+
+    #[test]
+    fn short_per_model_autoscale_run() {
+        use crate::workload::Schedule;
+        // Compressed per-model arm under a 90/10 skew: the hot model must
+        // gain dedicated pods while the fleet respects the shared budget.
+        let cfg = per_model_autoscale_config(20.0, true);
+        let budget = cfg.autoscaler.max_replicas;
+        let floor = cfg.autoscaler.per_model.min_replicas;
+        let d = crate::deployment::Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(30)));
+        let pool = modelmesh_workload(&d.endpoint(), 0.9, d.clock.clone());
+        let report = pool.run(&Schedule::constant(12, Duration::from_secs(30)));
+        assert!(report.total_ok() > 0, "nothing served: {:?}", report.per_model);
+        let hot = d.cluster.desired_for("particlenet");
+        let cold = d.cluster.desired_for("icecube_cnn");
+        assert!(hot > 1, "hot model never gained a dedicated pod (target {hot})");
+        assert!(hot >= cold, "hot target {hot} below cold target {cold}");
+        assert!(cold >= floor);
+        assert!(hot + cold <= budget, "targets {hot}+{cold} exceed budget {budget}");
         d.down();
     }
 

@@ -28,6 +28,16 @@
 //! policies; with the default unlimited budget the deployment degenerates
 //! to the base all-models-everywhere setup.
 //!
+//! **Per-model autoscaling** (`autoscaler.per_model`) closes the loop
+//! between the two: instead of one global replica count, the autoscaler
+//! runs one scaling loop per served model, fed by the placement
+//! controller's demand signal. Hot models gain pods that boot advertising
+//! only that model (boot profiles), scale-down prefers victims whose
+//! serving sets are redundant, and `autoscaler.max_replicas` remains the
+//! total pod budget shared across models. See `docs/ARCHITECTURE.md` for
+//! the full control-plane walkthrough and `docs/CONFIG.md` for the
+//! config reference.
+//!
 //! Python never runs on the request path: `make artifacts` is the only step that
 //! invokes it, and the resulting binary is self-contained. Real PJRT
 //! execution requires the optional `pjrt` cargo feature (the `xla` crate);

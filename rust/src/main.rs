@@ -155,6 +155,16 @@ fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
         cfg.autoscaler.min_replicas,
         cfg.autoscaler.max_replicas
     );
+    if cfg.autoscaler.per_model.enabled {
+        println!(
+            "    per-model: demand threshold {} req/s per replica, {}..{} pods/model \
+             (budget {} pods total)",
+            cfg.autoscaler.per_model.threshold,
+            cfg.autoscaler.per_model.min_replicas,
+            cfg.autoscaler.per_model.max_replicas,
+            cfg.autoscaler.max_replicas
+        );
+    }
     println!(
         "  cluster:     {} nodes x {} GPUs (capacity {})",
         cfg.cluster.nodes,

@@ -9,6 +9,21 @@
 //!   `/metrics` endpoint.
 //! * [`dashboard`] — Grafana stand-in: renders collected series as ASCII
 //!   timelines and CSV for the benches.
+//!
+//! Per-model scaling and placement series (all labelled `model="..."`):
+//!
+//! * `model_replicas` — instances currently advertising the model (the
+//!   serving replica count, from the placement controller);
+//! * `model_load_events_total` / `model_unload_events_total` — placement
+//!   moves applied;
+//! * `routed_requests_total` / `routed_unserved_total` — per-model router
+//!   traffic (the rate half of the demand signal);
+//! * `model_pods_desired` / `model_pods_running` — per-model pod targets
+//!   and boot-profile pod counts (cluster, per-model autoscaling mode);
+//! * `autoscaler_model_demand` / `autoscaler_model_desired` — the demand
+//!   each per-model scaling loop saw and the target it set;
+//! * `autoscaler_model_scale_ups_total` / `autoscaler_model_scale_downs_total`
+//!   — per-model scale events.
 
 pub mod dashboard;
 pub mod exposition;

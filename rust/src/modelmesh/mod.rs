@@ -39,6 +39,15 @@
 //! dropped — so the pool is always a subset of the advertisers and a
 //! request for model M can never reach an instance that does not have M
 //! loaded.
+//!
+//! The placement controller also feeds **per-model autoscaling**
+//! (`autoscaler.per_model`): [`PlacementController::demand_for`] exports
+//! the per-model demand signal that
+//! [`PerModelScaler`](crate::autoscaler::PerModelScaler) turns into
+//! per-model pod targets. Placement moves models across a fixed fleet;
+//! per-model scaling changes the fleet itself, spawning pods that boot
+//! advertising only the hot model (boot profiles) and preferring
+//! scale-down victims whose serving sets are redundant.
 
 pub mod placement;
 pub mod router;

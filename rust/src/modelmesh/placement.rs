@@ -354,7 +354,10 @@ impl PlacementController {
     }
 
     /// Demand signal for one model: scraped routed-request rate over the
-    /// demand window plus the live queue depth across its pool.
+    /// demand window plus the live queue depth across its pool. This is
+    /// the controller's export API — the per-model autoscaler consumes
+    /// the same signal the placement planner does, so pod scaling and
+    /// model placement pull in the same direction.
     pub fn demand_for(&self, model: &str, now: f64) -> f64 {
         let series = format!("routed_requests_total{{model=\"{model}\"}}");
         let rate = self
@@ -368,6 +371,15 @@ impl PlacementController {
             .map(|i| i.queue_depth())
             .sum();
         rate + queued as f64
+    }
+
+    /// Demand for every catalog model at `now` (see
+    /// [`PlacementController::demand_for`]).
+    pub fn demand_snapshot(&self, now: f64) -> BTreeMap<String, f64> {
+        self.catalog
+            .iter()
+            .map(|(m, _)| (m.clone(), self.demand_for(m, now)))
+            .collect()
     }
 
     /// One reconcile pass: refresh the routing pools from the instance
@@ -387,11 +399,7 @@ impl PlacementController {
             })
             .collect();
         let moves = if self.cfg.policy == PlacementPolicy::Dynamic {
-            let demand: BTreeMap<String, f64> = self
-                .catalog
-                .iter()
-                .map(|(m, _)| (m.clone(), self.demand_for(m, now)))
-                .collect();
+            let demand = self.demand_snapshot(now);
             self.core.lock().unwrap().plan(now, &views, &demand)
         } else {
             self.core.lock().unwrap().plan_repairs(now, &views)

@@ -26,7 +26,11 @@ pub enum PodPhase {
 
 /// Builds a (not yet Ready) [`Instance`] for a pod. The deployment layer
 /// supplies this, closing over the model repository and metrics registry.
-pub type InstanceFactory = Arc<dyn Fn(&str) -> Arc<Instance> + Send + Sync>;
+/// The second argument is the pod's boot profile: `Some(model)` when the
+/// pod was spawned by per-model autoscaling for one specific model (the
+/// instance should boot advertising only that model), `None` for generic
+/// pods (the factory applies its default initial placement).
+pub type InstanceFactory = Arc<dyn Fn(&str, Option<&str>) -> Arc<Instance> + Send + Sync>;
 
 /// Post-reconcile hook: invoked with the Ready endpoint snapshot after
 /// every reconcile pass. The modelmesh placement controller hangs off
@@ -43,6 +47,9 @@ struct Pod {
     phase_deadline: f64,
     /// Start attempts (failure injection retries).
     attempts: u32,
+    /// Boot profile: the model this pod was spawned for (per-model
+    /// scaling), `None` for generic pods.
+    profile: Option<String>,
 }
 
 struct State {
@@ -60,6 +67,18 @@ pub struct Cluster {
     clock: Clock,
     factory: InstanceFactory,
     desired: AtomicUsize,
+    /// Per-model pod targets when per-model autoscaling drives the
+    /// cluster (`None` = classic single global target). Each pod carries
+    /// the model it was spawned for as its boot profile, and the
+    /// reconcile pass converges every model group independently.
+    model_desired: Mutex<Option<BTreeMap<String, usize>>>,
+    /// Replica floor used by placement-aware victim selection: scale-down
+    /// avoids victims that would leave any advertised model with fewer
+    /// than this many Running replicas (the modelmesh
+    /// `min_replicas_per_model`).
+    victim_floor: AtomicUsize,
+    /// (desired, running) gauges per model, populated in per-model mode.
+    model_gauges: Mutex<BTreeMap<String, (Gauge, Gauge)>>,
     state: Mutex<State>,
     /// Ready instances, shared with the gateway's load balancer.
     endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
@@ -73,7 +92,8 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Create the cluster and start its reconcile loop.
+    /// Create the cluster and start its reconcile loop with one global
+    /// replica target (the classic Deployment shape).
     ///
     /// `startup_delay` is the server's model-load time, added to the
     /// cluster's `pod_start_delay` (container pull) for every pod start.
@@ -86,16 +106,82 @@ impl Cluster {
         factory: InstanceFactory,
         seed: u64,
     ) -> Arc<Self> {
+        Self::start_inner(
+            cfg,
+            startup_delay,
+            initial_replicas,
+            None,
+            clock,
+            registry,
+            factory,
+            seed,
+        )
+    }
+
+    /// [`Cluster::start`] in per-model mode: one replica target per model
+    /// (`targets`), each pod carrying its model as a boot profile. The
+    /// per-model autoscaler drives the targets through
+    /// [`Cluster::set_desired_for`].
+    pub fn start_per_model(
+        cfg: ClusterConfig,
+        startup_delay: Duration,
+        targets: BTreeMap<String, usize>,
+        clock: Clock,
+        registry: Registry,
+        factory: InstanceFactory,
+        seed: u64,
+    ) -> Arc<Self> {
+        let initial = targets.values().sum();
+        Self::start_inner(
+            cfg,
+            startup_delay,
+            initial,
+            Some(targets),
+            clock,
+            registry,
+            factory,
+            seed,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_inner(
+        cfg: ClusterConfig,
+        startup_delay: Duration,
+        initial_replicas: usize,
+        targets: Option<BTreeMap<String, usize>>,
+        clock: Clock,
+        registry: Registry,
+        factory: InstanceFactory,
+        seed: u64,
+    ) -> Arc<Self> {
         let free_slots = (0..cfg.nodes)
             .map(|_| (0..cfg.gpus_per_node).collect())
             .collect();
         let l = labels(&[]);
+        let model_gauges: BTreeMap<String, (Gauge, Gauge)> = targets
+            .iter()
+            .flatten()
+            .map(|(m, _)| {
+                let ml = labels(&[("model", m)]);
+                (
+                    m.clone(),
+                    (
+                        registry.gauge("model_pods_desired", &ml),
+                        registry.gauge("model_pods_running", &ml),
+                    ),
+                )
+            })
+            .collect();
         let cluster = Arc::new(Cluster {
             cfg,
             startup_delay,
             clock: clock.clone(),
             factory,
             desired: AtomicUsize::new(initial_replicas),
+            model_desired: Mutex::new(targets),
+            victim_floor: AtomicUsize::new(1),
+            model_gauges: Mutex::new(model_gauges),
             state: Mutex::new(State {
                 pods: BTreeMap::new(),
                 free_slots,
@@ -133,14 +219,69 @@ impl Cluster {
         hook(&self.endpoints());
     }
 
-    /// Set the replica target (the KEDA/Deployment interface).
+    /// Set the replica target (the KEDA/Deployment interface). Ignored
+    /// (with a warning) in per-model mode, where
+    /// [`Cluster::set_desired_for`] owns the targets.
     pub fn set_desired(&self, n: usize) {
+        if self.model_desired.lock().unwrap().is_some() {
+            log::warn!("set_desired({n}) ignored: cluster is in per-model mode");
+            return;
+        }
         self.desired.store(n, Ordering::SeqCst);
     }
 
-    /// Current replica target.
+    /// Current replica target: the global target, or the sum of the
+    /// per-model targets in per-model mode.
     pub fn desired(&self) -> usize {
-        self.desired.load(Ordering::SeqCst)
+        match &*self.model_desired.lock().unwrap() {
+            Some(targets) => targets.values().sum(),
+            None => self.desired.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Set one model's pod target (per-model mode only; unknown models
+    /// and global mode are ignored with a warning).
+    pub fn set_desired_for(&self, model: &str, n: usize) {
+        let mut guard = self.model_desired.lock().unwrap();
+        match guard.as_mut() {
+            Some(targets) if targets.contains_key(model) => {
+                targets.insert(model.to_string(), n);
+            }
+            _ => log::warn!("set_desired_for('{model}', {n}) ignored: no such target"),
+        }
+    }
+
+    /// One model's pod target (0 when not in per-model mode).
+    pub fn desired_for(&self, model: &str) -> usize {
+        self.model_desired
+            .lock()
+            .unwrap()
+            .as_ref()
+            .and_then(|t| t.get(model).copied())
+            .unwrap_or(0)
+    }
+
+    /// Is the cluster running per-model replica targets?
+    pub fn per_model(&self) -> bool {
+        self.model_desired.lock().unwrap().is_some()
+    }
+
+    /// Running pods spawned for `model` (boot-profile count; the serving
+    /// replica count lives in the router, since placement may load more
+    /// models onto a pod after boot).
+    pub fn running_for(&self, model: &str) -> usize {
+        let state = self.state.lock().unwrap();
+        state
+            .pods
+            .values()
+            .filter(|p| p.phase == PodPhase::Running && p.profile.as_deref() == Some(model))
+            .count()
+    }
+
+    /// Floor for placement-aware scale-down victim selection (see
+    /// [`select_scale_down_victims`]). Defaults to 1.
+    pub fn set_victim_floor(&self, floor: usize) {
+        self.victim_floor.store(floor, Ordering::SeqCst);
     }
 
     /// Ready instances (what the gateway routes to).
@@ -184,10 +325,20 @@ impl Cluster {
     /// One reconcile pass (also callable directly by simulated-time tests).
     pub fn reconcile(&self) {
         let now = self.clock.now_secs();
+        // Replica targets are read exactly ONCE per pass: this snapshot
+        // feeds both the spawn counts and the victim counts below. An
+        // autoscaler raising a target mid-pass must never make the victim
+        // arithmetic see a different number than the spawn arithmetic
+        // (momentary over-kill).
+        let targets: Option<BTreeMap<String, usize>> =
+            self.model_desired.lock().unwrap().clone();
+        let desired_total: usize = match &targets {
+            Some(t) => t.values().sum(),
+            None => self.desired.load(Ordering::SeqCst),
+        };
         let mut to_stop: Vec<Arc<Instance>> = Vec::new();
         {
             let mut state = self.state.lock().unwrap();
-            let desired = self.desired();
 
             // 1. Advance pod phases.
             let names: Vec<String> = state.pods.keys().cloned().collect();
@@ -221,7 +372,7 @@ impl Cluster {
                                     .as_secs_f64();
                             self.m_pod_failures.inc();
                         } else {
-                            let instance = (self.factory)(&name);
+                            let instance = (self.factory)(&name, pod.profile.as_deref());
                             instance.mark_ready();
                             pod.instance = Some(Arc::clone(&instance));
                             pod.phase = PodPhase::Running;
@@ -242,87 +393,36 @@ impl Cluster {
                 }
             }
 
-            // 2. Converge replica count. Active = not Terminating.
-            let active: Vec<String> = state
-                .pods
-                .iter()
-                .filter(|(_, p)| p.phase != PodPhase::Terminating)
-                .map(|(k, _)| k.clone())
-                .collect();
-
-            if active.len() < desired {
-                for _ in 0..(desired - active.len()) {
-                    let name = format!("triton-{}", state.next_pod_id);
-                    state.next_pod_id += 1;
-                    state.pods.insert(
-                        name,
-                        Pod {
-                            phase: PodPhase::Pending,
-                            slot: None,
-                            instance: None,
-                            phase_deadline: now,
-                            attempts: 0,
-                        },
-                    );
-                }
-            } else if active.len() > desired {
-                // Scale down: Pending first, then newest Running
-                // (k8s-style youngest-first victim selection).
-                let mut victims: Vec<String> = Vec::new();
-                let mut pending: Vec<String> = active
-                    .iter()
-                    .filter(|n| state.pods[*n].phase != PodPhase::Running)
-                    .cloned()
-                    .collect();
-                pending.sort();
-                let mut running: Vec<String> = active
-                    .iter()
-                    .filter(|n| state.pods[*n].phase == PodPhase::Running)
-                    .cloned()
-                    .collect();
-                // names are triton-<id>; sort by id descending = newest first
-                running.sort_by_key(|n| {
-                    std::cmp::Reverse(
-                        n.rsplit('-').next().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0),
-                    )
-                });
-                victims.extend(pending);
-                victims.extend(running);
-                victims.truncate(active.len() - desired);
-
-                for name in victims {
-                    let phase = state.pods[&name].phase;
-                    match phase {
-                        PodPhase::Pending => {
-                            state.pods.remove(&name);
-                        }
-                        PodPhase::ContainerCreating => {
-                            // never became ready; free slot immediately
-                            let pod = state.pods.remove(&name).unwrap();
-                            if let Some((node, slot)) = pod.slot {
-                                state.free_slots[node].push(slot);
-                            }
-                        }
-                        PodPhase::Running => {
-                            let pod = state.pods.get_mut(&name).unwrap();
-                            pod.phase = PodPhase::Terminating;
-                            pod.phase_deadline =
-                                now + self.cfg.termination_grace.as_secs_f64();
-                            if let Some(inst) = &pod.instance {
-                                inst.drain();
-                                let id = inst.id.clone();
-                                self.endpoints
-                                    .write()
-                                    .unwrap()
-                                    .retain(|e| e.id != id);
-                            }
-                        }
-                        PodPhase::Terminating => {}
+            // 2. Converge replica counts on the snapshot: every pod group
+            // (one per model in per-model mode, a single global group
+            // otherwise) independently.
+            match &targets {
+                None => self.converge_group(&mut state, None, desired_total, now),
+                Some(t) => {
+                    for (model, want) in t {
+                        self.converge_group(&mut state, Some(model.as_str()), *want, now);
                     }
                 }
             }
 
-            self.m_desired.set(desired as f64);
+            self.m_desired.set(desired_total as f64);
+            if let Some(t) = &targets {
+                let gauges = self.model_gauges.lock().unwrap();
+                for (model, want) in t {
+                    if let Some((g_desired, g_running)) = gauges.get(model) {
+                        g_desired.set(*want as f64);
+                        let running = state
+                            .pods
+                            .values()
+                            .filter(|p| {
+                                p.phase == PodPhase::Running
+                                    && p.profile.as_deref() == Some(model.as_str())
+                            })
+                            .count();
+                        g_running.set(running as f64);
+                    }
+                }
+            }
         }
         self.m_running.set(self.running() as f64);
         // Join drained executors outside the lock.
@@ -334,6 +434,125 @@ impl Cluster {
         let hook = self.hook.lock().unwrap().clone();
         if let Some(hook) = hook {
             hook(&self.endpoints());
+        }
+    }
+
+    /// Converge one pod group (pods whose boot profile equals `profile`)
+    /// to `want` replicas: spawn the deficit, or pick and kill the
+    /// surplus. Victim order: not-yet-Running pods first (they serve
+    /// nothing), then placement-aware selection among Running pods (see
+    /// [`select_scale_down_victims`]) — youngest-first only breaks ties.
+    fn converge_group(
+        &self,
+        state: &mut State,
+        profile: Option<&str>,
+        want: usize,
+        now: f64,
+    ) {
+        let group: Vec<String> = state
+            .pods
+            .iter()
+            .filter(|(_, p)| p.phase != PodPhase::Terminating && p.profile.as_deref() == profile)
+            .map(|(k, _)| k.clone())
+            .collect();
+
+        if group.len() < want {
+            for _ in 0..(want - group.len()) {
+                let name = format!("triton-{}", state.next_pod_id);
+                state.next_pod_id += 1;
+                state.pods.insert(
+                    name,
+                    Pod {
+                        phase: PodPhase::Pending,
+                        slot: None,
+                        instance: None,
+                        phase_deadline: now,
+                        attempts: 0,
+                        profile: profile.map(String::from),
+                    },
+                );
+            }
+            return;
+        }
+        if group.len() == want {
+            return;
+        }
+
+        let excess = group.len() - want;
+        let mut victims: Vec<String> = group
+            .iter()
+            .filter(|n| state.pods[*n].phase != PodPhase::Running)
+            .cloned()
+            .collect();
+        victims.sort();
+        victims.truncate(excess);
+
+        if victims.len() < excess {
+            // Candidates: this group's Running pods, youngest first (the
+            // k8s default order, which the selection keeps for ties).
+            let mut candidates: Vec<(String, Vec<String>)> = group
+                .iter()
+                .filter(|n| state.pods[*n].phase == PodPhase::Running)
+                .map(|n| {
+                    let models = state.pods[n]
+                        .instance
+                        .as_ref()
+                        .map(|i| i.loaded_models())
+                        .unwrap_or_default();
+                    (n.clone(), models)
+                })
+                .collect();
+            candidates.sort_by_key(|(n, _)| {
+                std::cmp::Reverse(
+                    n.rsplit('-').next().and_then(|s| s.parse::<usize>().ok()).unwrap_or(0),
+                )
+            });
+            // Coverage context: every other Running pod in the cluster
+            // (other groups keep hosting models the victims drop).
+            let candidate_names: std::collections::BTreeSet<&String> =
+                candidates.iter().map(|(n, _)| n).collect();
+            let others: Vec<Vec<String>> = state
+                .pods
+                .iter()
+                .filter(|(n, p)| p.phase == PodPhase::Running && !candidate_names.contains(n))
+                .map(|(_, p)| {
+                    p.instance.as_ref().map(|i| i.loaded_models()).unwrap_or_default()
+                })
+                .collect();
+            let floor = self.victim_floor.load(Ordering::SeqCst);
+            victims.extend(select_scale_down_victims(
+                &candidates,
+                &others,
+                excess - victims.len(),
+                floor,
+            ));
+        }
+
+        for name in victims {
+            let phase = state.pods[&name].phase;
+            match phase {
+                PodPhase::Pending => {
+                    state.pods.remove(&name);
+                }
+                PodPhase::ContainerCreating => {
+                    // never became ready; free slot immediately
+                    let pod = state.pods.remove(&name).unwrap();
+                    if let Some((node, slot)) = pod.slot {
+                        state.free_slots[node].push(slot);
+                    }
+                }
+                PodPhase::Running => {
+                    let pod = state.pods.get_mut(&name).unwrap();
+                    pod.phase = PodPhase::Terminating;
+                    pod.phase_deadline = now + self.cfg.termination_grace.as_secs_f64();
+                    if let Some(inst) = &pod.instance {
+                        inst.drain();
+                        let id = inst.id.clone();
+                        self.endpoints.write().unwrap().retain(|e| e.id != id);
+                    }
+                }
+                PodPhase::Terminating => {}
+            }
         }
     }
 
@@ -366,6 +585,64 @@ impl Cluster {
     }
 }
 
+/// Placement-aware scale-down victim selection (pure, property-tested).
+///
+/// `candidates` are the killable Running pods in preference order
+/// (callers pass youngest-first, the k8s default), each paired with the
+/// models its instance advertises; `others` are the serving sets of
+/// Running pods that are NOT candidates (other scaling groups). A
+/// candidate is *redundant* if killing it still leaves every model it
+/// advertises with at least `floor` replicas across the remaining pods.
+///
+/// The selection kills redundant candidates while any exist; only when
+/// every remaining candidate would push some model below the floor does
+/// it fall back to the least-damaging one (fewest models pushed below
+/// the floor, preference order breaking ties). The requested `count`
+/// always wins — matching Deployment semantics, with the placement
+/// controller's repair pass re-hosting whatever a forced kill dropped.
+pub fn select_scale_down_victims(
+    candidates: &[(String, Vec<String>)],
+    others: &[Vec<String>],
+    count: usize,
+    floor: usize,
+) -> Vec<String> {
+    let mut coverage: BTreeMap<&str, usize> = BTreeMap::new();
+    for models in candidates.iter().map(|(_, m)| m).chain(others.iter()) {
+        for m in models {
+            *coverage.entry(m.as_str()).or_insert(0) += 1;
+        }
+    }
+    let mut remaining: Vec<usize> = (0..candidates.len()).collect();
+    let mut victims = Vec::new();
+    while victims.len() < count && !remaining.is_empty() {
+        // Damage of killing candidate i: how many of its models drop
+        // below the floor (coverage <= floor means the kill lands it at
+        // floor - 1 or worse).
+        let mut pick = 0usize;
+        let mut pick_damage = usize::MAX;
+        for (pos, &i) in remaining.iter().enumerate() {
+            let damage = candidates[i]
+                .1
+                .iter()
+                .filter(|m| coverage[m.as_str()] <= floor)
+                .count();
+            if damage < pick_damage {
+                pick = pos;
+                pick_damage = damage;
+                if damage == 0 {
+                    break; // first redundant candidate in preference order
+                }
+            }
+        }
+        let idx = remaining.remove(pick);
+        for m in &candidates[idx].1 {
+            *coverage.get_mut(m.as_str()).unwrap() -= 1;
+        }
+        victims.push(candidates[idx].0.clone());
+    }
+    victims
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,8 +663,8 @@ mod tests {
     });
 
     fn factory(registry: Registry, clock: Clock) -> InstanceFactory {
-        Arc::new(move |name: &str| {
-            Instance::start_with_mode(
+        Arc::new(move |name: &str, profile: Option<&str>| {
+            let inst = Instance::start_with_mode(
                 name,
                 Arc::clone(&REPO),
                 &[ModelConfig { name: "icecube_cnn".into(), ..ModelConfig::default() }],
@@ -396,7 +673,11 @@ mod tests {
                 64,
                 5.0,
                 ExecutionMode::Simulated,
-            )
+            );
+            if let Some(model) = profile {
+                inst.set_loaded_models(&[model.to_string()]);
+            }
+            inst
         })
     }
 
@@ -548,6 +829,91 @@ mod tests {
         );
         // with retries the pods must eventually come up
         assert!(cluster.wait_ready(2, Duration::from_secs(10)));
+        cluster.shutdown();
+    }
+
+    fn views(sets: &[(&str, &[&str])]) -> Vec<(String, Vec<String>)> {
+        sets.iter()
+            .map(|(n, ms)| (n.to_string(), ms.iter().map(|m| m.to_string()).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn victim_selection_prefers_redundant() {
+        // Youngest pod (first in preference order) is the sole host of
+        // "rare"; the older pod's "common" is redundant via others.
+        let candidates = views(&[("triton-9", &["rare"]), ("triton-1", &["common"])]);
+        let others = vec![vec!["common".to_string()]];
+        let victims = select_scale_down_victims(&candidates, &others, 1, 1);
+        assert_eq!(victims, vec!["triton-1".to_string()]);
+    }
+
+    #[test]
+    fn victim_selection_youngest_breaks_ties() {
+        // Everyone redundant: the preference order (youngest first) wins.
+        let candidates = views(&[("triton-3", &["m"]), ("triton-2", &["m"]), ("triton-1", &["m"])]);
+        let victims = select_scale_down_victims(&candidates, &[], 2, 1);
+        assert_eq!(victims, vec!["triton-3".to_string(), "triton-2".to_string()]);
+    }
+
+    #[test]
+    fn victim_selection_forced_when_no_redundancy() {
+        // Two pods, two singleton models: killing either drops a model
+        // below the floor, but the requested count must still be met.
+        let candidates = views(&[("triton-2", &["a"]), ("triton-1", &["b"])]);
+        let victims = select_scale_down_victims(&candidates, &[], 1, 1);
+        assert_eq!(victims.len(), 1);
+    }
+
+    #[test]
+    fn victim_selection_tracks_earlier_kills() {
+        // Two hosts of "a": after the first kill, the remaining "a" host
+        // is no longer redundant, so the second kill must skip it and
+        // take the "b" host (redundant via others) despite being older.
+        let candidates =
+            views(&[("triton-9", &["a"]), ("triton-8", &["a"]), ("triton-7", &["b"])]);
+        let others = vec![vec!["b".to_string()]];
+        let victims = select_scale_down_victims(&candidates, &others, 2, 1);
+        assert_eq!(victims, vec!["triton-9".to_string(), "triton-7".to_string()]);
+    }
+
+    #[test]
+    fn per_model_mode_converges_groups() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        let targets: BTreeMap<String, usize> =
+            [("icecube_cnn".to_string(), 2)].into_iter().collect();
+        let cluster = Cluster::start_per_model(
+            fast_cfg(),
+            Duration::from_millis(10),
+            targets,
+            clock.clone(),
+            registry.clone(),
+            factory(registry, clock),
+            11,
+        );
+        assert!(cluster.per_model());
+        assert_eq!(cluster.desired(), 2);
+        assert!(cluster.wait_ready(2, Duration::from_secs(5)));
+        assert_eq!(cluster.running_for("icecube_cnn"), 2);
+        // every pod booted with its profile's serving set
+        for inst in cluster.endpoints() {
+            assert_eq!(inst.loaded_models(), vec!["icecube_cnn".to_string()]);
+        }
+        // raise the per-model target: group grows
+        cluster.set_desired_for("icecube_cnn", 3);
+        assert!(cluster.wait_ready(3, Duration::from_secs(5)));
+        // global set_desired is inert in per-model mode
+        cluster.set_desired(1);
+        assert_eq!(cluster.desired(), 3);
+        // shrink back down
+        cluster.set_desired_for("icecube_cnn", 1);
+        let t0 = std::time::Instant::now();
+        while cluster.running() > 1 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(cluster.running(), 1);
+        assert_eq!(cluster.desired_for("unknown_model"), 0);
         cluster.shutdown();
     }
 

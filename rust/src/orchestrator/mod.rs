@@ -18,7 +18,26 @@
 //! The autoscaler interacts with the cluster exactly like KEDA does with a
 //! Deployment: it sets `desired_replicas` and the reconcile loop converges
 //! actual state toward it.
+//!
+//! Two scaling shapes are supported:
+//!
+//! * **global** ([`Cluster::start`]) — one `desired` replica count for the
+//!   whole fleet, the base paper setup;
+//! * **per-model** ([`Cluster::start_per_model`]) — one replica target per
+//!   served model. Each pod carries the model it was spawned for as a
+//!   *boot profile* (the instance boots advertising only that model), and
+//!   the reconcile pass converges every model's pod group independently.
+//!   The per-model autoscaler drives the targets through
+//!   [`Cluster::set_desired_for`].
+//!
+//! Scale-down is placement-aware in both shapes: victim selection
+//! ([`select_scale_down_victims`]) prefers pods whose advertised models
+//! remain covered by at least the configured floor of other replicas, so
+//! shrinking the fleet does not silently drop a model — youngest-first
+//! only breaks ties among equally safe victims.
 
 pub mod cluster;
 
-pub use cluster::{Cluster, InstanceFactory, PodPhase, ReconcileHook};
+pub use cluster::{
+    select_scale_down_victims, Cluster, InstanceFactory, PodPhase, ReconcileHook,
+};

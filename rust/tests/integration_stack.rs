@@ -133,6 +133,7 @@ fn autoscaler_reacts_to_load_spike_end_to_end() {
         scale_up_cooldown: Duration::from_millis(300),
         scale_down_stabilization: Duration::from_secs(60),
         step: 1,
+        per_model: Default::default(),
     };
     cfg.monitoring.scrape_interval = Duration::from_millis(50);
     let d = Deployment::up(cfg).unwrap();

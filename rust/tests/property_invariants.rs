@@ -402,6 +402,76 @@ fn prop_yaml_display_parse_roundtrip() {
 }
 
 #[test]
+fn prop_scale_down_never_starves_a_model_while_redundancy_exists() {
+    use supersonic::orchestrator::select_scale_down_victims;
+    check("placement-aware scale-down respects the floor", 400, |g: &mut Gen| {
+        // Random serving-set layout.
+        let n_models = g.usize(1..=4);
+        let model = |m: usize| format!("m{m}");
+        let mut sets = |count: usize| -> Vec<Vec<String>> {
+            (0..count)
+                .map(|_| (0..n_models).filter(|_| g.bool()).map(model).collect())
+                .collect()
+        };
+        let candidate_sets = sets(g.usize(1..=8));
+        let others = sets(g.usize(0..=4));
+        let candidates: Vec<(String, Vec<String>)> = candidate_sets
+            .into_iter()
+            .enumerate()
+            .map(|(i, models)| (format!("pod-{i}"), models))
+            .collect();
+        let floor = g.usize(1..=2);
+        let count = g.usize(0..=candidates.len());
+
+        let victims = select_scale_down_victims(&candidates, &others, count, floor);
+
+        // The requested count always wins (Deployment semantics).
+        assert_eq!(victims.len(), count.min(candidates.len()));
+        // No duplicates, and every victim is a candidate.
+        let mut seen = std::collections::BTreeSet::new();
+        for v in &victims {
+            assert!(seen.insert(v.clone()), "duplicate victim {v}");
+            assert!(candidates.iter().any(|(n, _)| n == v), "unknown victim {v}");
+        }
+
+        // Replay the kills: at every step, if ANY remaining candidate is
+        // redundant (killing it keeps all its models at >= floor
+        // replicas), the chosen victim must be redundant too — a model
+        // only ever drops below the floor when the layout forces it.
+        let mut coverage = std::collections::BTreeMap::new();
+        for models in candidates.iter().map(|(_, m)| m).chain(others.iter()) {
+            for m in models {
+                *coverage.entry(m.clone()).or_insert(0usize) += 1;
+            }
+        }
+        let mut remaining: Vec<&(String, Vec<String>)> = candidates.iter().collect();
+        for victim in &victims {
+            let redundant = |models: &[String]| {
+                models.iter().all(|m| coverage[m] > floor)
+            };
+            let any_redundant = remaining.iter().any(|(_, m)| redundant(m));
+            let victim_models: Vec<String> = remaining
+                .iter()
+                .find(|(n, _)| n == victim)
+                .expect("victim remains")
+                .1
+                .clone();
+            if any_redundant {
+                assert!(
+                    redundant(&victim_models),
+                    "killed {victim} (dropping {victim_models:?} below floor {floor}) \
+                     while a redundant victim existed"
+                );
+            }
+            for m in &victim_models {
+                *coverage.get_mut(m).unwrap() -= 1;
+            }
+            remaining.retain(|(n, _)| n != victim);
+        }
+    });
+}
+
+#[test]
 fn prop_tensor_stack_slice_roundtrip() {
     check("tensor stack/slice roundtrip", 200, |g: &mut Gen| {
         let cols = g.usize(1..=6);
