@@ -5,10 +5,13 @@
 #   make build       — release build of the Rust coordinator
 #   make test        — tier-1 test suite
 #   make bench       — run every bench binary
+#   make docs-check  — doc gates only: rustdoc -D warnings + the
+#                      doc-sync tests (CONFIG.md schema coverage,
+#                      OPERATIONS.md bench coverage)
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts build test bench
+.PHONY: artifacts build test bench docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -22,4 +25,10 @@ test:
 bench:
 	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
-		modelmesh_ablation per_model_autoscale; do cargo bench --bench $$b; done
+		modelmesh_ablation per_model_autoscale warm_load_ablation; do \
+		cargo bench --bench $$b; done
+
+docs-check:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cd rust && cargo test -q --test docs_sync
+	cd rust && cargo test -q --lib config_doc_covers_every_schema_field

@@ -41,6 +41,7 @@ fn instance(
                 base: Duration::from_millis(3),
                 per_row: Duration::from_micros(per_row_us),
             },
+            load_delay: None,
         }],
         clock.clone(),
         registry.clone(),

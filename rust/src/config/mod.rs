@@ -11,8 +11,8 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, GatewayConfig,
-    LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig, PerModelScalingConfig,
-    PlacementPolicy, ServerConfig, ServiceModelConfig,
+    AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, ExecutionMode,
+    GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig,
+    PerModelScalingConfig, PlacementPolicy, ServerConfig, ServiceModelConfig,
 };
 pub use yaml::Value;

@@ -85,6 +85,41 @@ impl ExecutionMode {
     }
 }
 
+/// How an instance's batcher admits queued requests into batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// Strict arrival order: the batcher always serves the model of the
+    /// globally oldest queued request, waiting out that model's batching
+    /// window even while other models have full batches ready. The
+    /// pre-affinity behavior, kept as the ablation baseline.
+    Fifo,
+    /// Model-affinity admission (the default): requests are grouped into
+    /// per-(instance, model) queues and the batcher serves whichever
+    /// model has a full batch ready, falling back to deadline order, so
+    /// a cold model's half-empty batching window never blocks a hot
+    /// model's ready batch.
+    #[default]
+    Affinity,
+}
+
+impl BatchMode {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fifo" => BatchMode::Fifo,
+            "affinity" => BatchMode::Affinity,
+            other => bail!("unknown batch mode '{other}' (expected fifo or affinity)"),
+        })
+    }
+
+    /// Canonical config-file name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Fifo => "fifo",
+            BatchMode::Affinity => "affinity",
+        }
+    }
+}
+
 /// Linear per-batch service-time model for simulated execution:
 /// `service(batch) = base + per_row * rows`. Defaults approximate an
 /// NVIDIA T4 running ParticleNet (the paper's Fig. 2/3 configuration).
@@ -125,6 +160,10 @@ pub struct ModelConfig {
     pub preferred_batch: usize,
     /// Service-time model used when `server.execution: simulated`.
     pub service_model: ServiceModelConfig,
+    /// Per-model override of `model_placement.load_delay`: the simulated
+    /// time a placement load of this model spends in `Loading` before the
+    /// replica turns warm. `None` inherits the global default.
+    pub load_delay: Option<Duration>,
 }
 
 /// Inference-server section (Triton analogue).
@@ -145,6 +184,9 @@ pub struct ServerConfig {
     pub queue_capacity: usize,
     /// Utilization averaging window (clock seconds).
     pub util_window: f64,
+    /// Batch admission policy: `affinity` (per-model queues, the default)
+    /// or `fifo` (strict arrival order, the ablation baseline).
+    pub batch_mode: BatchMode,
 }
 
 /// Gateway section (Envoy analogue, §2.2).
@@ -294,12 +336,27 @@ pub struct ModelPlacementConfig {
     pub demand_window: Duration,
     /// A model never shrinks below this many replicas.
     pub min_replicas_per_model: usize,
+    /// Simulated warm-load time: a placement load spends this long in the
+    /// `Loading` state (excluded from router pools and from placement's
+    /// warm serving sets) before the replica serves. 0 = instantaneous
+    /// loads (the pre-cost-model behavior). Per-model override:
+    /// `server.models[].load_delay`.
+    pub load_delay: Duration,
 }
 
 impl ModelPlacementConfig {
     /// Memory budget in bytes (0 = unlimited).
     pub fn budget_bytes(&self) -> u64 {
         (self.memory_budget_mb * 1e6) as u64
+    }
+
+    /// Amortization horizon for the warm-load cost model: the minimum
+    /// clock time a planned load survives before it can be reverted
+    /// (cooldown) or re-judged against fresh demand (demand window). A
+    /// new replica spends `load_delay` of this horizon cold, so the
+    /// placement planner discounts its expected benefit accordingly.
+    pub fn load_cost_horizon(&self) -> Duration {
+        self.cooldown.max(self.demand_window)
     }
 
     /// Is the modelmesh (per-model routing + placement) active?
@@ -361,6 +418,7 @@ impl Default for ModelConfig {
             max_queue_delay: Duration::from_millis(2),
             preferred_batch: 8,
             service_model: ServiceModelConfig::default(),
+            load_delay: None,
         }
     }
 }
@@ -375,6 +433,7 @@ impl Default for ServerConfig {
             execution: ExecutionMode::Real,
             queue_capacity: 256,
             util_window: 10.0,
+            batch_mode: BatchMode::Affinity,
         }
     }
 }
@@ -434,6 +493,7 @@ impl Default for ModelPlacementConfig {
             cooldown: Duration::from_secs(10),
             demand_window: Duration::from_secs(15),
             min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
         }
     }
 }
@@ -477,11 +537,11 @@ pub mod keys {
     /// `server` section.
     pub const SERVER: &[&str] = &[
         "replicas", "models", "repository", "startup_delay", "execution",
-        "queue_capacity", "util_window",
+        "queue_capacity", "util_window", "batch_mode",
     ];
     /// `server.models[]` entries.
     pub const SERVER_MODEL: &[&str] =
-        &["name", "max_queue_delay", "preferred_batch", "service_model"];
+        &["name", "max_queue_delay", "preferred_batch", "service_model", "load_delay"];
     /// `server.models[].service_model`.
     pub const SERVICE_MODEL: &[&str] = &["base", "per_row"];
     /// `gateway` section.
@@ -508,7 +568,7 @@ pub mod keys {
     /// `model_placement` section.
     pub const MODEL_PLACEMENT: &[&str] = &[
         "policy", "memory_budget_mb", "load_threshold", "unload_threshold",
-        "cooldown", "demand_window", "min_replicas_per_model",
+        "cooldown", "demand_window", "min_replicas_per_model", "load_delay",
     ];
     /// Every (section, allowed keys) pair, for exhaustive iteration.
     pub const SECTIONS: &[(&str, &[&str])] = &[
@@ -602,6 +662,13 @@ fn get_duration(v: &Value, key: &str, default: Duration) -> Result<Duration> {
 }
 
 impl DeploymentConfig {
+    /// Effective warm-load delay for one served model: the per-model
+    /// `load_delay` override when set, `model_placement.load_delay`
+    /// otherwise.
+    pub fn effective_load_delay(&self, model: &ModelConfig) -> Duration {
+        model.load_delay.unwrap_or(self.model_placement.load_delay)
+    }
+
     /// Parse from YAML text; missing sections/keys use defaults, unknown
     /// keys are errors.
     pub fn from_yaml(text: &str) -> Result<Self> {
@@ -651,11 +718,16 @@ impl DeploymentConfig {
                             }
                         }
                     };
+                    let load_delay = match item.get("load_delay") {
+                        None => None,
+                        Some(_) => Some(get_duration(item, "load_delay", Duration::ZERO)?),
+                    };
                     models.push(ModelConfig {
                         name: get_str(item, "name", "")?,
                         max_queue_delay: get_duration(item, "max_queue_delay", dm.max_queue_delay)?,
                         preferred_batch: get_usize(item, "preferred_batch", dm.preferred_batch)?,
                         service_model,
+                        load_delay,
                     });
                 }
                 models
@@ -674,6 +746,12 @@ impl DeploymentConfig {
             },
             queue_capacity: get_usize(sv, "queue_capacity", d.server.queue_capacity)?,
             util_window: get_f64(sv, "util_window", d.server.util_window)?,
+            batch_mode: match sv.get("batch_mode") {
+                None => d.server.batch_mode,
+                Some(x) => {
+                    BatchMode::parse(x.as_str().context("'batch_mode' must be a string")?)?
+                }
+            },
         };
 
         let gw = root.get("gateway").unwrap_or(&empty);
@@ -766,6 +844,7 @@ impl DeploymentConfig {
                 "min_replicas_per_model",
                 d.model_placement.min_replicas_per_model,
             )?,
+            load_delay: get_duration(mp, "load_delay", d.model_placement.load_delay)?,
         };
 
         let cfg = DeploymentConfig {
@@ -920,6 +999,27 @@ impl DeploymentConfig {
         if self.model_placement.min_replicas_per_model == 0 {
             bail!("model_placement.min_replicas_per_model must be >= 1");
         }
+        // Warm-load cost sanity: a load delay at or beyond the whole
+        // amortization horizon means a demand-driven load can never pay
+        // for itself, silently freezing dynamic placement. Reject the
+        // combination instead of freezing.
+        if self.model_placement.policy == PlacementPolicy::Dynamic {
+            let horizon = self.model_placement.load_cost_horizon();
+            for m in &self.server.models {
+                let delay = self.effective_load_delay(m);
+                if !delay.is_zero() && delay >= horizon {
+                    bail!(
+                        "model '{}' warm-load delay ({:.1}s) reaches the placement \
+                         amortization horizon (max(cooldown, demand_window) = {:.1}s): \
+                         dynamic placement could never amortize loading it; lower the \
+                         delay or raise model_placement.cooldown / demand_window",
+                        m.name,
+                        delay.as_secs_f64(),
+                        horizon.as_secs_f64()
+                    );
+                }
+            }
+        }
         if self.time_scale <= 0.0 {
             bail!("time_scale must be > 0");
         }
@@ -1057,6 +1157,65 @@ monitoring:
     fn service_model_unknown_key_rejected() {
         let text = "server:\n  models:\n    - name: pn\n      service_model:\n        bse: 0.01\n";
         assert!(DeploymentConfig::from_yaml(text).is_err());
+    }
+
+    #[test]
+    fn batch_mode_parses() {
+        let cfg = DeploymentConfig::from_yaml("server:\n  batch_mode: fifo\n").unwrap();
+        assert_eq!(cfg.server.batch_mode, BatchMode::Fifo);
+        // affinity is the default
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert_eq!(cfg.server.batch_mode, BatchMode::Affinity);
+        assert!(DeploymentConfig::from_yaml("server:\n  batch_mode: lifo\n").is_err());
+        for m in [BatchMode::Fifo, BatchMode::Affinity] {
+            assert_eq!(BatchMode::parse(m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn load_delay_parses_and_inherits() {
+        let text = "server:\n  models:\n    - name: particlenet\n      load_delay: 2.5\n    \
+                    - name: icecube_cnn\nmodel_placement:\n  load_delay: 1.0\n";
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        assert_eq!(cfg.server.models[0].load_delay, Some(Duration::from_secs_f64(2.5)));
+        assert_eq!(cfg.server.models[1].load_delay, None);
+        // per-model override wins, absent inherits the global default
+        assert_eq!(
+            cfg.effective_load_delay(&cfg.server.models[0]),
+            Duration::from_secs_f64(2.5)
+        );
+        assert_eq!(
+            cfg.effective_load_delay(&cfg.server.models[1]),
+            Duration::from_secs_f64(1.0)
+        );
+        // negative delays rejected like every duration
+        assert!(DeploymentConfig::from_yaml("model_placement:\n  load_delay: -1\n").is_err());
+    }
+
+    #[test]
+    fn load_delay_at_horizon_rejected_for_dynamic() {
+        // horizon = max(cooldown 10, demand_window 15) = 15 s (defaults):
+        // a 20 s load could never amortize under dynamic placement.
+        let e = DeploymentConfig::from_yaml(
+            "model_placement:\n  policy: dynamic\n  load_delay: 20\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("horizon"), "{e}");
+        // below the horizon is legal...
+        DeploymentConfig::from_yaml("model_placement:\n  policy: dynamic\n  load_delay: 5\n")
+            .unwrap();
+        // ...and static placement never plans demand-driven loads, so it
+        // tolerates any delay.
+        DeploymentConfig::from_yaml("model_placement:\n  load_delay: 20\n").unwrap();
+    }
+
+    #[test]
+    fn load_cost_horizon_is_max_of_cooldown_and_window() {
+        let cfg = DeploymentConfig::from_yaml(
+            "model_placement:\n  cooldown: 30\n  demand_window: 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.model_placement.load_cost_horizon(), Duration::from_secs(30));
     }
 
     #[test]

@@ -149,32 +149,46 @@ impl Deployment {
             ))
         });
 
+        // Resolve each served model's effective warm-load delay once
+        // (per-model override falling back to model_placement.load_delay)
+        // so the instances and the placement controller price the same
+        // load.
+        let mut resolved_models = cfg.server.models.clone();
+        for m in &mut resolved_models {
+            m.load_delay = Some(cfg.effective_load_delay(m));
+        }
+        let load_costs: BTreeMap<String, f64> = resolved_models
+            .iter()
+            .map(|m| (m.name.clone(), m.load_delay.unwrap_or_default().as_secs_f64()))
+            .collect();
+
         // Instance factory: what the cluster runs on each pod start. With
         // the mesh active, each new pod gets its initial placement
         // (balanced rotation under the memory budget) before it is marked
         // Ready by the cluster.
         let factory: InstanceFactory = {
             let repo = Arc::clone(&repository);
-            let models = cfg.server.models.clone();
+            let models = resolved_models;
             let clock = clock.clone();
             let registry = registry.clone();
-            let queue_capacity = cfg.server.queue_capacity;
-            let util_window = cfg.server.util_window;
-            let mode = cfg.server.execution;
+            let opts = crate::server::InstanceOptions {
+                queue_capacity: cfg.server.queue_capacity,
+                util_window: cfg.server.util_window,
+                exec_mode: cfg.server.execution,
+                batch_mode: cfg.server.batch_mode,
+            };
             let mesh = mesh_catalog
                 .clone()
                 .map(|catalog| (catalog, cfg.model_placement.budget_bytes()));
             let placement_seq = Arc::new(AtomicUsize::new(0));
             Arc::new(move |name: &str, profile: Option<&str>| {
-                let inst = Instance::start_with_mode(
+                let inst = Instance::start_with_opts(
                     name,
                     Arc::clone(&repo),
                     &models,
                     clock.clone(),
                     registry.clone(),
-                    queue_capacity,
-                    util_window,
-                    mode,
+                    opts.clone(),
                 );
                 if let Some((catalog, budget)) = &mesh {
                     match profile {
@@ -272,6 +286,7 @@ impl Deployment {
                 let controller = PlacementController::new(
                     cfg.model_placement.clone(),
                     catalog.clone(),
+                    load_costs.clone(),
                     Arc::clone(router),
                     store.clone(),
                     clock.clone(),
@@ -418,12 +433,14 @@ mod tests {
                         base: Duration::from_millis(2),
                         per_row: Duration::from_micros(100),
                     },
+                    load_delay: None,
                 }],
                 repository: "artifacts".into(),
                 startup_delay: Duration::from_millis(10),
                 execution,
                 queue_capacity: 64,
                 util_window: 5.0,
+                batch_mode: Default::default(),
             },
             gateway: GatewayConfig::default(),
             autoscaler: AutoscalerConfig {
@@ -537,6 +554,7 @@ mod tests {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             },
             ModelConfig {
                 name: "particlenet".into(),
@@ -546,6 +564,7 @@ mod tests {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             },
         ];
         // Fits either model alone (icecube_cnn ~152 KB, particlenet

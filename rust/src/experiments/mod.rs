@@ -165,12 +165,14 @@ pub fn fig_config(
                     base: Duration::from_millis(5),
                     per_row: Duration::from_micros(1500),
                 },
+                load_delay: None,
             }],
             repository: PathBuf::from("artifacts"),
             startup_delay: Duration::from_secs(10),
             execution: ExecutionMode::Simulated,
             queue_capacity: 512,
             util_window: 10.0,
+            batch_mode: Default::default(),
         },
         gateway: GatewayConfig {
             listen: "127.0.0.1:0".into(),
@@ -243,6 +245,7 @@ pub fn modelmesh_config(
         max_queue_delay: Duration::from_millis(2),
         preferred_batch: 8,
         service_model: service,
+        load_delay: None,
     };
     DeploymentConfig {
         name: format!("mesh-{}", policy.name()),
@@ -256,6 +259,7 @@ pub fn modelmesh_config(
             // model's pool shows up as sheds rather than unbounded queues.
             queue_capacity: 8,
             util_window: 10.0,
+            batch_mode: Default::default(),
         },
         gateway: GatewayConfig {
             listen: "127.0.0.1:0".into(),
@@ -292,6 +296,7 @@ pub fn modelmesh_config(
             cooldown: Duration::from_secs(5),
             demand_window: Duration::from_secs(10),
             min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
         },
         time_scale,
     }
@@ -342,6 +347,45 @@ pub fn per_model_autoscale_config(time_scale: f64, per_model: bool) -> Deploymen
             max_replicas: 5,
         },
     };
+    cfg
+}
+
+/// Deployment for the warm-load ablation
+/// (`benches/warm_load_ablation.rs`): the same two-model fleet and 90/10
+/// skew machinery as the modelmesh ablation, with two deliberate twists.
+/// The per-instance memory budget fits BOTH models, so mixed
+/// per-instance queues are the steady state — exactly where batch
+/// admission matters — and the cold model (icecube_cnn) batches over a
+/// wide window it rarely fills under skew, so `fifo` admission stalls an
+/// instance for the whole window whenever a cold request reaches the
+/// head while `affinity` serves the hot model's ready batches past it.
+/// `load_delay` prices placement moves (0 = the instant-load baseline:
+/// thrash is free); `batch_mode` selects the admission arm.
+pub fn warm_load_config(
+    time_scale: f64,
+    load_delay: Duration,
+    batch_mode: crate::config::BatchMode,
+) -> DeploymentConfig {
+    let mut cfg = modelmesh_config(time_scale, crate::config::PlacementPolicy::Dynamic);
+    cfg.name = format!(
+        "warmload-{}-{}",
+        if load_delay.is_zero() { "instant" } else { "costed" },
+        batch_mode.name()
+    );
+    cfg.server.batch_mode = batch_mode;
+    // Both models fit together (87 KB + 152 KB < 450 KB): placement
+    // only moves replicas when demand says so, not because memory
+    // forces a partition.
+    cfg.model_placement.memory_budget_mb = 0.45;
+    cfg.model_placement.load_delay = load_delay;
+    // Threshold low enough that the flipped model's concentrated demand
+    // clears it even after the warm-load discount and even in the
+    // degraded fifo arm — the flip must force real (priced) loads.
+    cfg.model_placement.load_threshold = 100.0;
+    // Wide, rarely-filled batching window on the cold model: the
+    // head-of-line hazard fifo admission pays and affinity avoids.
+    cfg.server.models[1].max_queue_delay = Duration::from_millis(50);
+    cfg.server.models[1].preferred_batch = 64;
     cfg
 }
 
@@ -399,6 +443,46 @@ mod tests {
             router.replicas("particlenet") >= router.replicas("icecube_cnn"),
             "hot model lost replicas under skewed load"
         );
+        for inst in d.cluster.endpoints() {
+            assert!(inst.memory_used() <= budget, "{} over memory budget", inst.id);
+        }
+        d.down();
+    }
+
+    #[test]
+    fn warm_load_configs_validate() {
+        use crate::config::BatchMode;
+        for delay in [Duration::ZERO, Duration::from_secs(3)] {
+            for mode in [BatchMode::Fifo, BatchMode::Affinity] {
+                let cfg = warm_load_config(10.0, delay, mode);
+                cfg.validate().unwrap();
+                assert!(cfg.model_placement.mesh_enabled());
+                assert_eq!(cfg.server.batch_mode, mode);
+                assert_eq!(cfg.model_placement.load_delay, delay);
+            }
+        }
+    }
+
+    #[test]
+    fn short_warm_load_run_holds_invariants() {
+        use crate::config::BatchMode;
+        use crate::workload::Schedule;
+        // Compressed costed-affinity run with a mid-run demand flip (the
+        // bench's shape): placement pays real load windows, and the
+        // floors/budget must survive the migration.
+        let cfg = warm_load_config(20.0, Duration::from_secs(3), BatchMode::Affinity);
+        let budget = cfg.model_placement.budget_bytes();
+        let d = crate::deployment::Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(4, Duration::from_secs(30)));
+        let hot_phase = modelmesh_workload(&d.endpoint(), 0.9, d.clock.clone());
+        let report_a = hot_phase.run(&Schedule::constant(12, Duration::from_secs(20)));
+        let flipped = modelmesh_workload(&d.endpoint(), 0.1, d.clock.clone());
+        let report_b = flipped.run(&Schedule::constant(12, Duration::from_secs(20)));
+        assert!(report_a.total_ok() > 0, "phase A served nothing");
+        assert!(report_b.total_ok() > 0, "phase B served nothing");
+        let router = d.router.as_ref().unwrap();
+        assert!(router.replicas("particlenet") >= 1);
+        assert!(router.replicas("icecube_cnn") >= 1);
         for inst in d.cluster.endpoints() {
             assert!(inst.memory_used() <= budget, "{} over memory budget", inst.id);
         }

@@ -348,6 +348,7 @@ mod tests {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             }],
             clock.clone(),
             registry.clone(),
@@ -589,6 +590,7 @@ mod tests {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             })
             .collect();
         let mk = |id: &str| {

@@ -13,7 +13,13 @@
 //! Per-model scaling and placement series (all labelled `model="..."`):
 //!
 //! * `model_replicas` — instances currently advertising the model (the
-//!   serving replica count, from the placement controller);
+//!   warm serving replica count, from the placement controller);
+//! * `model_replicas_loading` — replicas still inside their simulated
+//!   warm-load window (placed, consuming memory, not yet serving);
+//! * `models_loading` (per instance) — serving-set entries mid-load on
+//!   one pod (the companion of `models_loaded`);
+//! * `model_queue_depth` (per instance × model) — the batcher's
+//!   per-model backlog, the queue half of the placement demand signal;
 //! * `model_load_events_total` / `model_unload_events_total` — placement
 //!   moves applied;
 //! * `routed_requests_total` / `routed_unserved_total` — per-model router

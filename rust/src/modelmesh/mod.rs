@@ -40,6 +40,16 @@
 //! request for model M can never reach an instance that does not have M
 //! loaded.
 //!
+//! **Loads are not instantaneous.** A placement load puts the replica
+//! into a `Loading` state for the model's configured `load_delay`
+//! (`model_placement.load_delay`, per-model override
+//! `server.models[].load_delay`): memory is committed immediately, but
+//! the replica stays out of the routing pools and out of placement's
+//! warm serving sets until the window ends. The planner charges that
+//! window when scoring a move (see [`placement`]) so placement thrash
+//! has a realistic price, and the shrink phase never unloads a model's
+//! last warm copies while a replacement is still mid-load.
+//!
 //! The placement controller also feeds **per-model autoscaling**
 //! (`autoscaler.per_model`): [`PlacementController::demand_for`] exports
 //! the per-model demand signal that

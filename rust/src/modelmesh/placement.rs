@@ -14,9 +14,24 @@
 //!   reconcile loop via [`Cluster::set_reconcile_hook`](crate::orchestrator::Cluster::set_reconcile_hook).
 //!
 //! Demand is `rate + queued`: the routed-request rate answers "how much
-//! traffic does this model pull", the live queue depth answers "is it
-//! falling behind right now" — so a saturated model attracts replicas
-//! even before the scraped rate catches up.
+//! traffic does this model pull", the live *per-model* batcher backlog
+//! answers "is it falling behind right now" — so a saturated model
+//! attracts replicas even before the scraped rate catches up, and a
+//! shared instance's backlog for *other* models is never misattributed.
+//!
+//! **Warm-load cost model.** Loads are not free: a planned `Load` puts
+//! the replica into `Loading` for the model's configured `load_delay`,
+//! during which it consumes memory but serves nothing (and stays out of
+//! the router pools). The core therefore charges the delay when scoring
+//! a move: a new replica spends `load_delay / horizon` of its guaranteed
+//! lifetime (`horizon = max(cooldown, demand_window)`) cold, so the
+//! observed per-replica demand is discounted by the warm fraction before
+//! being compared to `load_threshold`. Placement thrash now has a
+//! realistic price — a move must be worth its load time. Repairs (a
+//! model below its replica floor) bypass the charge, exactly like they
+//! bypass cooldowns: liveness over economy. Symmetrically, the shrink
+//! phase never unloads a model's last warm copies while a replacement is
+//! still mid-load.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
@@ -56,10 +71,20 @@ pub fn initial_placement(
 pub struct InstanceView {
     /// Stable instance id (cooldowns key on it).
     pub id: String,
-    /// Advertised models.
+    /// Advertised (warm) models.
     pub loaded: BTreeSet<String>,
-    /// Memory consumed by the advertised models, bytes.
+    /// Models mid-load (in their simulated warm-load window): they
+    /// occupy memory and count as placed, but serve nothing yet.
+    pub loading: BTreeSet<String>,
+    /// Memory consumed by the serving set (warm + loading), bytes.
     pub mem_used: u64,
+}
+
+impl InstanceView {
+    /// Is `model` on this instance at all (warm or mid-load)?
+    pub fn present(&self, model: &str) -> bool {
+        self.loaded.contains(model) || self.loading.contains(model)
+    }
 }
 
 /// One placement change.
@@ -76,14 +101,43 @@ pub struct PlacementCore {
     cfg: ModelPlacementConfig,
     /// (model name, memory bytes), demand-independent.
     catalog: Vec<(String, u64)>,
+    /// Per-model warm-load time in clock seconds (missing = instant).
+    load_costs: BTreeMap<String, f64>,
+    /// Amortization horizon for the load charge, seconds.
+    horizon: f64,
     /// (instance id, model) -> clock-seconds of the last move.
     cooldowns: BTreeMap<(String, String), f64>,
 }
 
 impl PlacementCore {
-    /// Core over a fixed catalog.
+    /// Core over a fixed catalog, with instantaneous (free) loads.
     pub fn new(cfg: ModelPlacementConfig, catalog: Vec<(String, u64)>) -> Self {
-        PlacementCore { cfg, catalog, cooldowns: BTreeMap::new() }
+        Self::with_load_costs(cfg, catalog, BTreeMap::new())
+    }
+
+    /// Core that charges each model's warm-load time when scoring moves.
+    /// `load_costs` maps model -> load delay in clock seconds.
+    pub fn with_load_costs(
+        cfg: ModelPlacementConfig,
+        catalog: Vec<(String, u64)>,
+        load_costs: BTreeMap<String, f64>,
+    ) -> Self {
+        let horizon = cfg.load_cost_horizon().as_secs_f64();
+        PlacementCore { cfg, catalog, load_costs, horizon, cooldowns: BTreeMap::new() }
+    }
+
+    /// Warm fraction of a new replica's guaranteed lifetime: the benefit
+    /// multiplier the load charge applies to observed demand. 1.0 for
+    /// free loads, approaching 0 as `load_delay` nears the horizon.
+    fn load_discount(&self, model: &str) -> f64 {
+        let cost = self.load_costs.get(model).copied().unwrap_or(0.0);
+        if cost <= 0.0 {
+            return 1.0;
+        }
+        if self.horizon <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - cost / self.horizon).max(0.0)
     }
 
     fn cooldown_ok(&self, now: f64, instance: &str, model: &str) -> bool {
@@ -101,16 +155,42 @@ impl PlacementCore {
             .insert((instance.to_string(), model.to_string()), now);
     }
 
-    fn replica_counts(&self, views: &[InstanceView]) -> BTreeMap<String, usize> {
-        self.catalog
-            .iter()
-            .map(|(m, _)| {
-                (
-                    m.clone(),
-                    views.iter().filter(|v| v.loaded.contains(m)).count(),
-                )
-            })
-            .collect()
+    /// Per-model replica counts over a snapshot: `present` (warm +
+    /// mid-load — what occupies memory and what growth decisions see)
+    /// and `warm` (what actually serves — what the floor protects).
+    fn counts(
+        &self,
+        views: &[InstanceView],
+    ) -> (BTreeMap<String, usize>, BTreeMap<String, usize>) {
+        let mut present = BTreeMap::new();
+        let mut warm = BTreeMap::new();
+        for (m, _) in &self.catalog {
+            present.insert(m.clone(), views.iter().filter(|v| v.present(m)).count());
+            warm.insert(
+                m.clone(),
+                views.iter().filter(|v| v.loaded.contains(m)).count(),
+            );
+        }
+        (present, warm)
+    }
+
+    /// May this copy of `model` on `view` be removed without dropping the
+    /// model below its floors? Present count must stay at the floor, and
+    /// — when the copy is warm — so must the *warm* count: the last warm
+    /// copies are pinned while a replacement is still mid-load.
+    fn removal_safe(
+        &self,
+        view: &InstanceView,
+        model: &str,
+        present: &BTreeMap<String, usize>,
+        warm: &BTreeMap<String, usize>,
+    ) -> bool {
+        let min = self.cfg.min_replicas_per_model;
+        if present[model] <= min {
+            return false;
+        }
+        // Canceling a mid-load copy never reduces serving capacity.
+        view.loading.contains(model) || warm[model] > min
     }
 
     /// Restore models below their replica floor. Pod churn is not a
@@ -118,45 +198,53 @@ impl PlacementCore {
     /// the model must be re-hosted regardless of demand or policy, so
     /// this runs under `static` too (the one exception to "static never
     /// moves models"). If no instance has free memory, a surplus copy of
-    /// another model is evicted to make room. Repairs bypass cooldowns
-    /// (liveness over anti-thrash) but stamp them, so the demand phases
-    /// do not immediately churn a repaired placement.
+    /// another model is evicted to make room — never one whose removal
+    /// would drop *its* model below the present or warm floor. Repairs
+    /// bypass cooldowns and the warm-load charge (liveness over
+    /// anti-thrash and economy) but stamp cooldowns, so the demand
+    /// phases do not immediately churn a repaired placement.
     fn repair(
         &mut self,
         now: f64,
         views: &mut [InstanceView],
-        replicas: &mut BTreeMap<String, usize>,
+        present: &mut BTreeMap<String, usize>,
+        warm: &mut BTreeMap<String, usize>,
         moves: &mut Vec<Move>,
     ) {
         let budget = self.cfg.budget_bytes();
         let catalog = self.catalog.clone();
         for (model, mem) in &catalog {
-            while replicas[model] < self.cfg.min_replicas_per_model {
+            while present[model] < self.cfg.min_replicas_per_model {
                 // Preferred: an instance with free memory.
                 let direct = views
                     .iter()
-                    .filter(|v| !v.loaded.contains(model))
+                    .filter(|v| !v.present(model))
                     .filter(|v| budget == 0 || v.mem_used + mem <= budget)
-                    .min_by_key(|v| (v.mem_used, v.loaded.len()))
+                    .min_by_key(|v| (v.mem_used, v.loaded.len() + v.loading.len()))
                     .map(|v| v.id.clone());
                 let target = match direct {
                     Some(id) => Some(id),
                     None => {
                         // Evict the most-replicated surplus model from
-                        // some instance not hosting `model`.
+                        // some instance not hosting `model`, preferring
+                        // mid-load copies (canceling a load costs no
+                        // serving capacity).
                         let evict = views
                             .iter()
-                            .filter(|v| !v.loaded.contains(model))
+                            .filter(|v| !v.present(model))
                             .filter_map(|v| {
                                 v.loaded
                                     .iter()
+                                    .chain(v.loading.iter())
                                     .filter(|m2| {
-                                        replicas[*m2] > self.cfg.min_replicas_per_model
+                                        self.removal_safe(v, m2, present, warm)
                                     })
-                                    .max_by_key(|m2| replicas[*m2])
+                                    .max_by_key(|m2| {
+                                        (present[*m2], v.loading.contains(*m2))
+                                    })
                                     .map(|m2| (v.id.clone(), m2.clone()))
                             })
-                            .max_by_key(|(_, m2)| replicas[m2]);
+                            .max_by_key(|(_, m2)| present[m2]);
                         match evict {
                             None => None,
                             Some((id, victim)) => {
@@ -166,9 +254,13 @@ impl PlacementCore {
                                     .map(|(_, b)| *b)
                                     .unwrap_or(0);
                                 let v = views.iter_mut().find(|v| v.id == id).unwrap();
-                                v.loaded.remove(&victim);
+                                let was_warm = v.loaded.remove(&victim);
+                                v.loading.remove(&victim);
                                 v.mem_used = v.mem_used.saturating_sub(vmem);
-                                *replicas.get_mut(&victim).unwrap() -= 1;
+                                *present.get_mut(&victim).unwrap() -= 1;
+                                if was_warm {
+                                    *warm.get_mut(&victim).unwrap() -= 1;
+                                }
                                 self.stamp(now, &id, &victim);
                                 moves.push(Move::Unload {
                                     instance: id.clone(),
@@ -191,9 +283,11 @@ impl PlacementCore {
                 };
                 let Some(id) = target else { break }; // nothing can host it
                 let v = views.iter_mut().find(|v| v.id == id).unwrap();
-                v.loaded.insert(model.clone());
+                // A planned load begins in `Loading`: it counts as
+                // present immediately, warm only once the window ends.
+                v.loading.insert(model.clone());
                 v.mem_used += mem;
-                *replicas.get_mut(model).unwrap() += 1;
+                *present.get_mut(model).unwrap() += 1;
                 self.stamp(now, &id, model);
                 moves.push(Move::Load { instance: id, model: model.clone() });
             }
@@ -207,9 +301,9 @@ impl PlacementCore {
             return Vec::new();
         }
         let mut views: Vec<InstanceView> = views.to_vec();
-        let mut replicas = self.replica_counts(&views);
+        let (mut present, mut warm) = self.counts(&views);
         let mut moves = Vec::new();
-        self.repair(now, &mut views, &mut replicas, &mut moves);
+        self.repair(now, &mut views, &mut present, &mut warm, &mut moves);
         moves
     }
 
@@ -230,10 +324,10 @@ impl PlacementCore {
         let mut views: Vec<InstanceView> = views.to_vec();
         let budget = self.cfg.budget_bytes();
         let catalog = self.catalog.clone();
-        let mut replicas = self.replica_counts(&views);
+        let (mut present, mut warm) = self.counts(&views);
 
         // Phase 0 — restore anything below its replica floor.
-        self.repair(now, &mut views, &mut replicas, &mut moves);
+        self.repair(now, &mut views, &mut present, &mut warm, &mut moves);
 
         let d = |m: &str| demand.get(m).copied().unwrap_or(0.0);
         let per_replica = |m: &str, r: usize| d(m) / r.max(1) as f64;
@@ -241,55 +335,66 @@ impl PlacementCore {
         // Phase 1 — shrink cold models with surplus replicas. Runs first
         // so the freed memory is available to hot loads in the same pass.
         for (model, mem) in &catalog {
-            let r = replicas[model];
+            let r = present[model];
             if r <= self.cfg.min_replicas_per_model {
                 continue;
             }
             if per_replica(model, r) >= self.cfg.unload_threshold {
                 continue;
             }
-            // Victim: the advertising instance under the most memory
-            // pressure (it benefits most from the free bytes).
+            // Victim: prefer canceling a mid-load copy (it serves
+            // nothing either way); among warm copies, the instance under
+            // the most memory pressure — and never a warm copy the floor
+            // still needs while a replacement is mid-load elsewhere.
             let victim_id = views
                 .iter()
-                .filter(|v| v.loaded.contains(model))
+                .filter(|v| v.present(model))
                 .filter(|v| self.cooldown_ok(now, &v.id, model))
-                .max_by_key(|v| v.mem_used)
+                .filter(|v| self.removal_safe(v, model, &present, &warm))
+                .max_by_key(|v| (v.loading.contains(model), v.mem_used))
                 .map(|v| v.id.clone());
             if let Some(id) = victim_id {
                 let v = views.iter_mut().find(|v| v.id == id).unwrap();
-                v.loaded.remove(model);
+                let was_warm = v.loaded.remove(model);
+                v.loading.remove(model);
                 v.mem_used = v.mem_used.saturating_sub(*mem);
-                *replicas.get_mut(model).unwrap() -= 1;
+                *present.get_mut(model).unwrap() -= 1;
+                if was_warm {
+                    *warm.get_mut(model).unwrap() -= 1;
+                }
                 self.stamp(now, &id, model);
                 moves.push(Move::Unload { instance: id, model: model.clone() });
             }
         }
 
-        // Phase 2 — grow hot models, hottest first.
+        // Phase 2 — grow hot models, hottest first. The warm-load
+        // charge: a new replica spends `load_delay` of its guaranteed
+        // lifetime cold, so the observed per-replica demand is
+        // discounted by the warm fraction before the threshold test —
+        // a move must be worth its load time.
         let mut hot: Vec<(String, u64, f64)> = catalog
             .iter()
             .filter_map(|(m, mem)| {
-                let load = per_replica(m, replicas[m]);
+                let load = per_replica(m, present[m]) * self.load_discount(m);
                 (load > self.cfg.load_threshold).then(|| (m.clone(), *mem, load))
             })
             .collect();
         hot.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
         for (model, mem, _load) in hot {
-            // Candidate: not already advertising, off cooldown, with free
-            // memory; prefer the emptiest instance.
+            // Candidate: not already hosting (warm or mid-load), off
+            // cooldown, with free memory; prefer the emptiest instance.
             let candidate_id = views
                 .iter()
-                .filter(|v| !v.loaded.contains(&model))
+                .filter(|v| !v.present(&model))
                 .filter(|v| self.cooldown_ok(now, &v.id, &model))
                 .filter(|v| budget == 0 || v.mem_used + mem <= budget)
-                .min_by_key(|v| (v.mem_used, v.loaded.len()))
+                .min_by_key(|v| (v.mem_used, v.loaded.len() + v.loading.len()))
                 .map(|v| v.id.clone());
             if let Some(id) = candidate_id {
                 let v = views.iter_mut().find(|v| v.id == id).unwrap();
-                v.loaded.insert(model.clone());
+                v.loading.insert(model.clone());
                 v.mem_used += mem;
-                *replicas.get_mut(&model).unwrap() += 1;
+                *present.get_mut(&model).unwrap() += 1;
                 self.stamp(now, &id, &model);
                 moves.push(Move::Load { instance: id, model });
             }
@@ -302,6 +407,8 @@ struct ModelHandles {
     loads: Counter,
     unloads: Counter,
     replicas: Gauge,
+    /// Replicas currently inside their warm-load window.
+    loading: Gauge,
 }
 
 /// The running placement controller.
@@ -318,10 +425,14 @@ pub struct PlacementController {
 
 impl PlacementController {
     /// Controller over `catalog` (model name + memory bytes), applying
-    /// moves through `router`.
+    /// moves through `router`. `load_costs` maps model -> warm-load
+    /// delay in clock seconds (the deployment resolves per-model
+    /// overrides against `model_placement.load_delay`); missing entries
+    /// load free.
     pub fn new(
         cfg: ModelPlacementConfig,
         catalog: Vec<(String, u64)>,
+        load_costs: BTreeMap<String, f64>,
         router: Arc<ModelRouter>,
         store: MetricStore,
         clock: Clock,
@@ -337,12 +448,17 @@ impl PlacementController {
                         loads: registry.counter("model_load_events_total", &l),
                         unloads: registry.counter("model_unload_events_total", &l),
                         replicas: registry.gauge("model_replicas", &l),
+                        loading: registry.gauge("model_replicas_loading", &l),
                     },
                 )
             })
             .collect();
         Arc::new(PlacementController {
-            core: Mutex::new(PlacementCore::new(cfg.clone(), catalog.clone())),
+            core: Mutex::new(PlacementCore::with_load_costs(
+                cfg.clone(),
+                catalog.clone(),
+                load_costs,
+            )),
             cfg,
             catalog,
             router,
@@ -354,10 +470,13 @@ impl PlacementController {
     }
 
     /// Demand signal for one model: scraped routed-request rate over the
-    /// demand window plus the live queue depth across its pool. This is
-    /// the controller's export API — the per-model autoscaler consumes
-    /// the same signal the placement planner does, so pod scaling and
-    /// model placement pull in the same direction.
+    /// demand window plus the live *per-model* batcher backlog across
+    /// its pool (the affinity batcher's per-(instance, model) queues
+    /// make this exact — an instance's backlog for other models is not
+    /// misattributed). This is the controller's export API — the
+    /// per-model autoscaler consumes the same signal the placement
+    /// planner does, so pod scaling and model placement pull in the same
+    /// direction.
     pub fn demand_for(&self, model: &str, now: f64) -> f64 {
         let series = format!("routed_requests_total{{model=\"{model}\"}}");
         let rate = self
@@ -368,7 +487,7 @@ impl PlacementController {
             .router
             .endpoints_for(model)
             .iter()
-            .map(|i| i.queue_depth())
+            .map(|i| i.queue_depth_for(model))
             .sum();
         rate + queued as f64
     }
@@ -392,10 +511,18 @@ impl PlacementController {
         let now = self.clock.now_secs();
         let views: Vec<InstanceView> = endpoints
             .iter()
-            .map(|i| InstanceView {
-                id: i.id.clone(),
-                loaded: i.loaded_models().into_iter().collect(),
-                mem_used: i.memory_used(),
+            .map(|i| {
+                // One consistent snapshot per instance: taking warm,
+                // loading and memory separately could catch a model
+                // mid-transition in neither set and trigger a spurious
+                // repair.
+                let (warm, loading, mem_used) = i.placement_snapshot();
+                InstanceView {
+                    id: i.id.clone(),
+                    loaded: warm.into_iter().collect(),
+                    loading: loading.into_iter().collect(),
+                    mem_used,
+                }
             })
             .collect();
         let moves = if self.cfg.policy == PlacementPolicy::Dynamic {
@@ -407,6 +534,8 @@ impl PlacementController {
         self.apply(endpoints, moves);
         for (m, h) in &self.per_model {
             h.replicas.set(self.router.replicas(m) as f64);
+            h.loading
+                .set(endpoints.iter().filter(|i| i.is_loading(m)).count() as f64);
         }
     }
 
@@ -450,6 +579,7 @@ mod tests {
             cooldown: Duration::from_secs(5),
             demand_window: Duration::from_secs(10),
             min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
         }
     }
 
@@ -459,10 +589,16 @@ mod tests {
     }
 
     fn view(id: &str, models: &[&str]) -> InstanceView {
+        view_loading(id, models, &[])
+    }
+
+    /// View with explicit warm and mid-load sets (600 KB per model).
+    fn view_loading(id: &str, warm: &[&str], loading: &[&str]) -> InstanceView {
         InstanceView {
             id: id.to_string(),
-            loaded: models.iter().map(|m| m.to_string()).collect(),
-            mem_used: models.len() as u64 * 600_000,
+            loaded: warm.iter().map(|m| m.to_string()).collect(),
+            loading: loading.iter().map(|m| m.to_string()).collect(),
+            mem_used: (warm.len() + loading.len()) as u64 * 600_000,
         }
     }
 
@@ -619,7 +755,12 @@ mod tests {
         // free instance available: direct load, no eviction needed
         let views = vec![
             view("i0", &["hot"]),
-            InstanceView { id: "i1".into(), loaded: BTreeSet::new(), mem_used: 0 },
+            InstanceView {
+                id: "i1".into(),
+                loaded: BTreeSet::new(),
+                loading: BTreeSet::new(),
+                mem_used: 0,
+            },
         ];
         let moves = core.plan_repairs(0.0, &views);
         assert_eq!(
@@ -629,6 +770,78 @@ mod tests {
         // healthy fleet: repairs plan nothing (static stays static)
         let healthy = vec![view("i0", &["hot"]), view("i1", &["cold"])];
         assert!(core.plan_repairs(1.0, &healthy).is_empty());
+    }
+
+    #[test]
+    fn shrink_prefers_canceling_midload_copy() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // cold: one warm copy (i0) and one mid-load copy (i1), both idle.
+        let views = vec![
+            view_loading("i0", &["cold"], &[]),
+            view_loading("i1", &[], &["cold"]),
+            view("i2", &["hot"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(50.0, 0.0));
+        assert_eq!(
+            moves,
+            vec![Move::Unload { instance: "i1".to_string(), model: "cold".to_string() }],
+            "should cancel the load, not drop the serving copy"
+        );
+        // Same (stale) snapshot: i1 is now on cooldown, and the only
+        // other copy is the LAST WARM one — the floor pins it even
+        // though the present count (2) is above the floor.
+        let again = core.plan(1.0, &views, &demand(50.0, 0.0));
+        assert!(
+            !again
+                .iter()
+                .any(|m| matches!(m, Move::Unload { model, .. } if model == "cold")),
+            "unloaded the last warm copy while its replacement was mid-load: {again:?}"
+        );
+    }
+
+    #[test]
+    fn load_charge_suppresses_marginal_moves() {
+        // horizon = max(cooldown 5, demand_window 10) = 10 s; a 5 s load
+        // delay halves the expected benefit of a new replica.
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0; // memory out of the way
+        let costs: BTreeMap<String, f64> = [("hot".to_string(), 5.0)].into_iter().collect();
+        let mut core = PlacementCore::with_load_costs(c.clone(), catalog(), costs);
+        let views = vec![view("i0", &["hot"]), view("i1", &["cold"])];
+        // 180 per-replica demand: free loads would move (180 > 100), but
+        // the discounted benefit 180 * 0.5 = 90 does not clear the bar.
+        let moves = core.plan(0.0, &views, &demand(180.0, 50.0));
+        assert!(moves.is_empty(), "marginal move not suppressed: {moves:?}");
+        // 250 per-replica demand amortizes the load (125 > 100).
+        let moves = core.plan(20.0, &views, &demand(250.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "i1".to_string(), model: "hot".to_string() }]
+        );
+        // Sanity: with free loads the marginal demand does move.
+        let mut free = PlacementCore::new(c, catalog());
+        let moves = free.plan(0.0, &views, &demand(180.0, 50.0));
+        assert_eq!(moves.len(), 1, "{moves:?}");
+    }
+
+    #[test]
+    fn loading_copy_counts_as_present() {
+        let mut core = PlacementCore::new(cfg(), catalog());
+        // hot already has a replacement mid-load on i1: per-replica
+        // demand is halved and no third copy fits the budget, so the
+        // planner must not re-plan the same load every pass.
+        let views = vec![
+            view_loading("i0", &["hot"], &[]),
+            view_loading("i1", &[], &["hot"]),
+            view("i2", &["cold"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert!(
+            !moves
+                .iter()
+                .any(|m| matches!(m, Move::Load { model, .. } if model == "hot")),
+            "planned a duplicate load while one was in flight: {moves:?}"
+        );
     }
 
     #[test]

@@ -90,9 +90,13 @@ impl ModelRouter {
     }
 
     /// Load `model` onto `instance`: label first, then pool membership,
-    /// so the pool never references a non-advertising instance. Returns
-    /// false if the model is unknown (to the catalog or the instance's
-    /// repository) or already loaded there.
+    /// so the pool never references a non-advertising instance. With a
+    /// warm-load delay configured the instance enters `Loading` and the
+    /// pool is NOT touched here — the reconcile-driven [`ModelRouter::sync`]
+    /// admits it once the model turns warm (loading replicas never
+    /// receive traffic). Returns false if the model is unknown (to the
+    /// catalog or the instance's repository) or already in the
+    /// instance's serving set.
     pub fn load(&self, instance: &Arc<Instance>, model: &str) -> bool {
         let Some(pool) = self.pools.get(model) else {
             return false;
@@ -100,9 +104,11 @@ impl ModelRouter {
         if !instance.load_model(model) {
             return false;
         }
-        let mut eps = pool.endpoints.write().unwrap();
-        if !eps.iter().any(|e| e.id == instance.id) {
-            eps.push(Arc::clone(instance));
+        if instance.advertises(model) {
+            let mut eps = pool.endpoints.write().unwrap();
+            if !eps.iter().any(|e| e.id == instance.id) {
+                eps.push(Arc::clone(instance));
+            }
         }
         true
     }
@@ -124,7 +130,9 @@ impl ModelRouter {
     /// label-watch half of the design ("load balancers automatically
     /// adjust address pools when models are loaded and unloaded").
     /// Driven by the cluster reconcile loop so pod churn (new Running
-    /// pods, terminated pods) is reflected within one reconcile period.
+    /// pods, terminated pods) and `Loading -> warm` transitions are
+    /// reflected within one reconcile period; replicas mid-load are
+    /// excluded until warm.
     pub fn sync(&self, endpoints: &[Arc<Instance>]) {
         for (model, pool) in &self.pools {
             let members: Vec<Arc<Instance>> = endpoints
@@ -209,6 +217,7 @@ mod tests {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             })
             .collect();
         let inst = Instance::start_with_mode(
@@ -280,6 +289,56 @@ mod tests {
         assert!(r.unload(&a, "icecube_cnn"));
         assert!(!a.advertises("icecube_cnn"));
         assert_eq!(r.replicas("icecube_cnn"), 0);
+        a.stop();
+    }
+
+    fn slow_load_instance(id: &str, delay: Duration) -> Arc<Instance> {
+        let models: Vec<ModelConfig> = MODELS
+            .iter()
+            .map(|m| ModelConfig {
+                name: m.to_string(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                load_delay: Some(delay),
+            })
+            .collect();
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    #[test]
+    fn loading_replica_excluded_until_warm() {
+        let r = router();
+        let a = slow_load_instance("rw0", Duration::from_millis(150));
+        a.set_loaded_models(&[]);
+        r.sync(&[Arc::clone(&a)]);
+        // the load starts the warm window but must NOT join the pool
+        assert!(r.load(&a, "icecube_cnn"));
+        assert!(a.is_loading("icecube_cnn"));
+        assert_eq!(r.replicas("icecube_cnn"), 0);
+        assert!(matches!(r.pick("icecube_cnn"), Err(Status::Overloaded)));
+        // mid-window syncs keep it out
+        r.sync(&[Arc::clone(&a)]);
+        assert_eq!(r.replicas("icecube_cnn"), 0);
+        // once warm, the next sync admits it
+        std::thread::sleep(Duration::from_millis(180));
+        r.sync(&[Arc::clone(&a)]);
+        assert_eq!(r.replicas("icecube_cnn"), 1);
+        assert_eq!(r.pick("icecube_cnn").unwrap().id, "rw0");
         a.stop();
     }
 

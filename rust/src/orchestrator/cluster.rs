@@ -490,6 +490,10 @@ impl Cluster {
         if victims.len() < excess {
             // Candidates: this group's Running pods, youngest first (the
             // k8s default order, which the selection keeps for ties).
+            // `loaded_models` is the WARM serving set: a copy mid-load
+            // neither shields a victim nor counts as coverage, so the
+            // selection never kills a model's last warm copy while its
+            // replacement is still loading elsewhere.
             let mut candidates: Vec<(String, Vec<String>)> = group
                 .iter()
                 .filter(|n| state.pods[*n].phase == PodPhase::Running)
@@ -589,10 +593,13 @@ impl Cluster {
 ///
 /// `candidates` are the killable Running pods in preference order
 /// (callers pass youngest-first, the k8s default), each paired with the
-/// models its instance advertises; `others` are the serving sets of
-/// Running pods that are NOT candidates (other scaling groups). A
+/// models its instance advertises — the *warm* serving set only: a
+/// replica still inside its warm-load window serves nothing, so it
+/// neither protects a victim (coverage) nor is protected itself. A
 /// candidate is *redundant* if killing it still leaves every model it
-/// advertises with at least `floor` replicas across the remaining pods.
+/// advertises with at least `floor` warm replicas across the remaining
+/// pods; `others` are the warm serving sets of Running pods that are NOT
+/// candidates (other scaling groups).
 ///
 /// The selection kills redundant candidates while any exist; only when
 /// every remaining candidate would push some model below the floor does

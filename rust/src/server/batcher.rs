@@ -1,21 +1,38 @@
-//! Dynamic batching queue — Triton's "dynamic_batching" policy (§2.1).
+//! Dynamic batching queue — Triton's "dynamic_batching" policy (§2.1),
+//! with model-affinity admission.
 //!
-//! Requests land in a per-instance [`BatchQueue`]; the instance's executor
-//! pops *same-model runs*: it waits until either the accumulated rows for
-//! the model at the head of the queue reach the preferred batch size, or
-//! the head request has been queued for the model's max queue delay —
-//! whichever comes first — and then takes every queued request for that
-//! model (in arrival order) that fits the row budget.
+//! Requests land in a per-instance [`BatchQueue`] that keeps one
+//! sub-queue per model (the per-(instance, model) admission groups), so
+//! a popped batch never interleaves models and a model's backlog is
+//! directly observable ([`BatchQueue::depth_for`] — the signal the
+//! placement controller folds into its demand estimate).
+//!
+//! How the executor picks *which* model to serve is the
+//! [`BatchMode`](crate::config::BatchMode):
+//!
+//! * **`Affinity`** (default): serve any model whose head request has
+//!   outlived its batching window (deadline order, oldest first), else
+//!   any model whose accumulated rows reached the preferred batch (most
+//!   rows first), else sleep until the earliest deadline. A cold model's
+//!   half-empty window never blocks a hot model's ready batch.
+//! * **`Fifo`**: always serve the model of the globally oldest request,
+//!   waiting out that model's window first — strict arrival order, the
+//!   pre-affinity behavior, kept as the `warm_load_ablation` baseline.
+//!
+//! Within a model, requests are always served in arrival order, and both
+//! modes flush a head request no later than its `max_queue_delay`.
 //!
 //! The queue is also where overload protection lands: pushes beyond
-//! `capacity` are rejected so the gateway can shed load with an
-//! `Overloaded` status instead of building unbounded latency (§2.2).
+//! `capacity` (summed across models) are rejected so the gateway can
+//! shed load with an `Overloaded` status instead of building unbounded
+//! latency (§2.2).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::config::BatchMode;
 use crate::rpc::codec::Status;
 use crate::runtime::Tensor;
 use crate::util::clock::{Clock, Nanos};
@@ -75,42 +92,109 @@ impl Pending {
     }
 }
 
+/// One model's admission group: requests in arrival order, tagged with a
+/// queue-global sequence number so `Fifo` mode can reconstruct the
+/// global arrival order across groups.
+struct Group {
+    queue: VecDeque<(u64, Pending)>,
+    rows: usize,
+}
+
 struct Inner {
-    queue: VecDeque<Pending>,
+    groups: BTreeMap<String, Group>,
+    /// Total queued requests across groups (the capacity bound).
+    len: usize,
+    next_seq: u64,
     draining: bool,
 }
 
-/// Bounded, condvar-signalled batch queue.
+/// What the selection pass decided to do.
+enum Pick {
+    /// Serve this model now.
+    Serve(String),
+    /// Nothing servable yet; earliest head deadline in clock nanos.
+    WaitUntil(Nanos),
+}
+
+/// Bounded, condvar-signalled batch queue with per-model groups.
 pub struct BatchQueue {
     inner: Mutex<Inner>,
     available: Condvar,
     capacity: usize,
+    mode: BatchMode,
 }
 
 impl BatchQueue {
-    /// Queue holding at most `capacity` requests.
+    /// Queue holding at most `capacity` requests, with the default
+    /// model-affinity admission.
     pub fn new(capacity: usize) -> Self {
+        Self::with_mode(capacity, BatchMode::Affinity)
+    }
+
+    /// Queue with an explicit admission mode (`Fifo` is the ablation
+    /// baseline).
+    pub fn with_mode(capacity: usize, mode: BatchMode) -> Self {
         BatchQueue {
-            inner: Mutex::new(Inner { queue: VecDeque::new(), draining: false }),
+            inner: Mutex::new(Inner {
+                groups: BTreeMap::new(),
+                len: 0,
+                next_seq: 0,
+                draining: false,
+            }),
             available: Condvar::new(),
             capacity,
+            mode,
         }
     }
 
     /// Enqueue a request. Fails fast when full or draining.
     pub fn push(&self, pending: Pending) -> Result<(), Pending> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.draining || inner.queue.len() >= self.capacity {
+        if inner.draining || inner.len >= self.capacity {
             return Err(pending);
         }
-        inner.queue.push_back(pending);
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.len += 1;
+        let rows = pending.rows();
+        let group = inner
+            .groups
+            .entry(pending.model.clone())
+            .or_insert_with(|| Group { queue: VecDeque::new(), rows: 0 });
+        group.rows += rows;
+        group.queue.push_back((seq, pending));
         self.available.notify_one();
         Ok(())
     }
 
-    /// Current queue depth (requests).
+    /// Current queue depth (requests, all models).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().len
+    }
+
+    /// Queued requests for one model — the per-model backlog the
+    /// placement demand signal consumes.
+    pub fn depth_for(&self, model: &str) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .groups
+            .get(model)
+            .map(|g| g.queue.len())
+            .unwrap_or(0)
+    }
+
+    /// Per-model depth snapshot under a single lock acquisition (the
+    /// executor's gauge refresh — one `depth_for` per model would take
+    /// the hot-path mutex once per model per wakeup).
+    pub fn depths(&self) -> Vec<(String, usize)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .groups
+            .iter()
+            .map(|(m, g)| (m.clone(), g.queue.len()))
+            .collect()
     }
 
     /// Mark draining: pushes fail, pops continue until empty.
@@ -122,10 +206,68 @@ impl BatchQueue {
     /// True once draining and empty.
     pub fn drained(&self) -> bool {
         let inner = self.inner.lock().unwrap();
-        inner.draining && inner.queue.is_empty()
+        inner.draining && inner.len == 0
     }
 
-    /// Pop one same-model batch according to `policy_for`.
+    /// Decide which model to serve, or how long to wait. `Draining`
+    /// flushes everything immediately (oldest head first).
+    fn select<F>(&self, inner: &Inner, now: Nanos, policy_for: &F) -> Pick
+    where
+        F: Fn(&str) -> BatchPolicy,
+    {
+        if self.mode == BatchMode::Fifo && !inner.draining {
+            // Global arrival order: the model of the oldest request, held
+            // until its own target/deadline (head-of-line semantics).
+            let (model, head) = inner
+                .groups
+                .iter()
+                .filter_map(|(m, g)| g.queue.front().map(|(seq, p)| (m, (*seq, p.enqueued))))
+                .min_by_key(|&(_, (seq, _))| seq)
+                .map(|(m, (_, enq))| (m.clone(), enq))
+                .expect("select called with requests queued");
+            let policy = policy_for(&model);
+            let group = &inner.groups[&model];
+            let target = policy.preferred_rows.min(policy.max_rows).max(1);
+            let deadline = head + policy.max_queue_delay.as_nanos() as Nanos;
+            if group.rows >= target || now >= deadline {
+                return Pick::Serve(model);
+            }
+            return Pick::WaitUntil(deadline);
+        }
+
+        // Affinity (and any draining flush): deadline-expired heads
+        // first, oldest head first — the latency bound holds per model.
+        let mut expired: Option<(Nanos, String)> = None;
+        let mut ready: Option<(usize, String)> = None;
+        let mut earliest: Option<Nanos> = None;
+        for (model, group) in &inner.groups {
+            let Some((_, head)) = group.queue.front() else { continue };
+            let policy = policy_for(model);
+            let target = policy.preferred_rows.min(policy.max_rows).max(1);
+            let deadline = head.enqueued + policy.max_queue_delay.as_nanos() as Nanos;
+            if inner.draining || now >= deadline {
+                if expired.as_ref().is_none_or(|(e, _)| head.enqueued < *e) {
+                    expired = Some((head.enqueued, model.clone()));
+                }
+            } else if group.rows >= target {
+                if ready.as_ref().is_none_or(|(r, _)| group.rows > *r) {
+                    ready = Some((group.rows, model.clone()));
+                }
+            } else if earliest.as_ref().is_none_or(|e| deadline < *e) {
+                earliest = Some(deadline);
+            }
+        }
+        if let Some((_, model)) = expired {
+            return Pick::Serve(model);
+        }
+        if let Some((_, model)) = ready {
+            return Pick::Serve(model);
+        }
+        Pick::WaitUntil(earliest.expect("some non-empty group has no pick"))
+    }
+
+    /// Pop one same-model batch according to `policy_for` and the
+    /// queue's [`BatchMode`].
     ///
     /// Blocks up to `idle_timeout` waiting for a first request; returns
     /// `None` on timeout (the executor uses idle wakeups to refresh
@@ -145,9 +287,9 @@ impl BatchQueue {
     {
         let mut inner = self.inner.lock().unwrap();
 
-        // Phase 1: wait for a head request.
+        // Phase 1: wait for a first request.
         let wait_start = std::time::Instant::now();
-        while inner.queue.is_empty() {
+        while inner.len == 0 {
             if inner.draining {
                 return None;
             }
@@ -157,70 +299,73 @@ impl BatchQueue {
                 .wait_timeout(inner, remaining.min(Duration::from_millis(50)))
                 .unwrap();
             inner = guard;
-            if timeout.timed_out() && wait_start.elapsed() >= idle_timeout {
-                if inner.queue.is_empty() {
-                    return None;
-                }
+            if timeout.timed_out()
+                && wait_start.elapsed() >= idle_timeout
+                && inner.len == 0
+            {
+                return None;
             }
         }
 
-        let model = inner.queue[0].model.clone();
-        let head_enqueued = inner.queue[0].enqueued;
-        let policy = policy_for(&model);
-        let max_rows = policy.max_rows.max(1);
-        let target_rows = policy.preferred_rows.min(max_rows).max(1);
-        let deadline = head_enqueued + policy.max_queue_delay.as_nanos() as Nanos;
-
-        // Phase 2: accumulate same-model rows until target or deadline.
-        loop {
-            let rows: usize = inner
-                .queue
-                .iter()
-                .filter(|p| p.model == model)
-                .map(|p| p.rows())
-                .sum();
-            let now = clock.now();
-            if rows >= target_rows || now >= deadline || inner.draining {
-                break;
-            }
-            // Convert the *clock-time* deadline into a real-time wait.
-            let clock_remaining = Duration::from_nanos(deadline - now);
-            let wait = clock_remaining.min(Duration::from_millis(20));
-            let (guard, _) = self.available.wait_timeout(inner, wait).unwrap();
-            inner = guard;
-            if inner.queue.is_empty() {
-                // Drained out from under us.
+        // Phase 2: pick a model, waiting out batching windows as the
+        // mode dictates. New pushes re-run the selection.
+        let model = loop {
+            if inner.len == 0 {
+                // Drained out from under us (defensive: single-consumer
+                // queues cannot shrink here, but the contract allows it).
                 if inner.draining {
                     return None;
                 }
+                let (guard, _) = self
+                    .available
+                    .wait_timeout(inner, Duration::from_millis(20))
+                    .unwrap();
+                inner = guard;
                 continue;
             }
-        }
+            let now = clock.now();
+            match self.select(&inner, now, &policy_for) {
+                Pick::Serve(model) => break model,
+                Pick::WaitUntil(deadline) => {
+                    // Convert the *clock-time* deadline into a bounded
+                    // real-time wait; the cap re-checks under dilation.
+                    let clock_remaining = Duration::from_nanos(deadline.saturating_sub(now));
+                    let wait = clock_remaining.min(Duration::from_millis(20));
+                    let (guard, _) = self.available.wait_timeout(inner, wait).unwrap();
+                    inner = guard;
+                }
+            }
+        };
 
-        // Phase 3: pop every same-model request that fits the row budget,
-        // in arrival order. An oversized head goes alone.
+        // Phase 3: pop the model's requests in arrival order up to the
+        // row budget. An oversized head goes alone.
+        let policy = policy_for(&model);
+        let max_rows = policy.max_rows.max(1);
+        let group = inner.groups.get_mut(&model).expect("selected group exists");
         let mut batch = Vec::new();
         let mut rows = 0usize;
-        let mut i = 0;
-        while i < inner.queue.len() {
-            if inner.queue[i].model != model {
-                i += 1;
-                continue;
-            }
-            let r = inner.queue[i].rows();
+        while let Some((_, p)) = group.queue.front() {
+            let r = p.rows();
             if batch.is_empty() && r > max_rows {
-                batch.push(inner.queue.remove(i).unwrap());
+                batch.push(group.queue.pop_front().unwrap().1);
+                rows += r;
                 break;
             }
             if rows + r > max_rows {
                 break;
             }
             rows += r;
-            batch.push(inner.queue.remove(i).unwrap());
+            batch.push(group.queue.pop_front().unwrap().1);
         }
-        if batch.is_empty() {
-            return None;
+        group.rows -= rows.min(group.rows);
+        if group.queue.is_empty() {
+            inner.groups.remove(&model);
         }
+        inner.len -= batch.len();
+        // The selected group always has a head and the first iteration
+        // always takes it (an oversized head goes alone), so a selected
+        // pop can never come back empty.
+        debug_assert!(!batch.is_empty());
         Some(batch)
     }
 }
@@ -299,6 +444,8 @@ mod tests {
         assert_eq!(batch.len(), 2);
         assert!(batch.iter().all(|p| p.model == "a"));
         assert_eq!(q.depth(), 1); // "b" stays
+        assert_eq!(q.depth_for("b"), 1);
+        assert_eq!(q.depth_for("a"), 0);
     }
 
     #[test]
@@ -357,6 +504,23 @@ mod tests {
     }
 
     #[test]
+    fn drain_flushes_queued_requests() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(8);
+        let (p, _rx) = pending("m", 1, &clock);
+        q.push(p).map_err(|_| ()).unwrap();
+        q.drain();
+        // long window, but draining flushes immediately
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, policy(5000, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        assert!(q.drained());
+    }
+
+    #[test]
     fn idle_timeout_returns_none() {
         let clock = Clock::real();
         let q = BatchQueue::new(8);
@@ -381,5 +545,96 @@ mod tests {
         q.push(p).map_err(|_| ()).unwrap();
         let batch = h.join().unwrap().unwrap();
         assert_eq!(batch.len(), 1);
+    }
+
+    /// Per-model policies for the affinity-vs-fifo pair below: the cold
+    /// model holds a wide batching window, the hot model a narrow one.
+    fn mixed_policy(model: &str) -> BatchPolicy {
+        match model {
+            "cold" => BatchPolicy {
+                max_queue_delay: Duration::from_millis(120),
+                preferred_rows: 8,
+                max_rows: 16,
+            },
+            _ => BatchPolicy {
+                max_queue_delay: Duration::from_millis(120),
+                preferred_rows: 4,
+                max_rows: 16,
+            },
+        }
+    }
+
+    #[test]
+    fn affinity_serves_ready_model_past_blocked_head() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        // cold arrives first (the queue head) but never fills its batch
+        let (pc, _rc) = pending("cold", 1, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        let mut _rxs = Vec::new();
+        for _ in 0..4 {
+            let (p, rx) = pending("hot", 1, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        // hot reached its preferred rows: affinity serves it immediately,
+        // long before cold's 120 ms window expires
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, mixed_policy, Duration::from_millis(500))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "hot"), "served the blocked head first");
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(60), "waited on cold's window");
+        // cold still flushes by its own deadline
+        let batch = q
+            .pop_batch(&clock, mixed_policy, Duration::from_millis(500))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "cold"));
+    }
+
+    #[test]
+    fn fifo_head_of_line_blocks_ready_model() {
+        let clock = Clock::real();
+        let q = BatchQueue::with_mode(64, BatchMode::Fifo);
+        let (pc, _rc) = pending("cold", 1, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        for _ in 0..4 {
+            let (p, _rx) = pending("hot", 1, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+        }
+        // strict arrival order: cold is served first, after waiting out
+        // its full batching window, even though hot has a ready batch
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, mixed_policy, Duration::from_millis(500))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "cold"));
+        assert!(
+            t0.elapsed() >= Duration::from_millis(100),
+            "fifo did not wait out the head's window: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn affinity_expired_heads_flush_oldest_first() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let (pa, _ra) = pending("a", 1, &clock);
+        q.push(pa).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let (pb, _rb) = pending("b", 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // both expired (1 ms windows): oldest head ("a") first
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "a"));
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "b"));
     }
 }

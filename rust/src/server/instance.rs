@@ -10,19 +10,28 @@
 //!
 //! State machine: `Starting -> Ready -> Draining -> Stopped`. The gateway
 //! only routes to `Ready` instances; the orchestrator drives transitions.
+//!
+//! Per-model serving state (the warm-load cost model): each entry in the
+//! serving set is either **`Loading`** — the simulated model-load window
+//! after a placement `load_model`, during which the model consumes GPU
+//! memory but is *not* advertised (routers exclude it from address
+//! pools, `submit` sheds its requests as `Overloaded`) — or **warm**,
+//! once the model's configured `load_delay` has elapsed. Bootstrap
+//! placements ([`Instance::set_loaded_models`]) skip the window: the
+//! pod's `startup_delay` already charges the initial load.
 
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::config::{ExecutionMode, ModelConfig, ServiceModelConfig};
+use crate::config::{BatchMode, ExecutionMode, ModelConfig, ServiceModelConfig};
 use crate::metrics::registry::{labels, Registry};
 use crate::rpc::codec::Status;
 use crate::runtime::Tensor;
 use crate::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
 use crate::server::repository::ModelRepository;
-use crate::util::clock::Clock;
+use crate::util::clock::{Clock, Nanos};
 
 /// Instance lifecycle state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,14 +108,55 @@ pub struct Instance {
     policies: HashMap<String, BatchPolicy>,
     exec_mode: ExecutionMode,
     service_models: HashMap<String, ServiceModelConfig>,
-    /// Models this instance currently advertises (the Kubernetes
-    /// pod-label mechanism from the dynamic-model-loading design: the
-    /// per-model load balancers build their address pools from these).
-    /// The shared [`ModelRepository`] may hold more models; only
-    /// advertised ones are accepted by [`Instance::submit`].
-    loaded: RwLock<BTreeSet<String>>,
+    /// The serving set: model -> clock-nanos at which it is (or becomes)
+    /// warm. An entry with `warm_at` in the future is `Loading`: memory
+    /// is already charged, but the model is not advertised (the
+    /// Kubernetes pod-label mechanism from the dynamic-model-loading
+    /// design: the per-model load balancers build their address pools
+    /// from the *warm* entries only). The shared [`ModelRepository`] may
+    /// hold more models; only advertised ones are accepted by
+    /// [`Instance::submit`].
+    loaded: RwLock<BTreeMap<String, Nanos>>,
+    /// Simulated warm-load window per model (clock time), from
+    /// `ModelConfig::load_delay` (deployment-resolved; zero = instant).
+    load_delays: HashMap<String, Duration>,
+    /// True while any serving-set entry is still inside its warm-load
+    /// window — lets the executor skip the per-wakeup gauge refresh in
+    /// the (common) all-warm steady state. Maintained by
+    /// `refresh_placement_gauges`, which runs one final time after the
+    /// last window closes (the refresh that observes zero loading also
+    /// clears the flag).
+    loading_inflight: std::sync::atomic::AtomicBool,
     m_models_loaded: crate::metrics::registry::Gauge,
+    m_models_loading: crate::metrics::registry::Gauge,
     m_memory_used: crate::metrics::registry::Gauge,
+    /// Per-model queued-request gauges (the batcher backlog the
+    /// placement demand signal consumes).
+    m_queue_depth_model: HashMap<String, crate::metrics::registry::Gauge>,
+}
+
+/// Tuning knobs for [`Instance::start_with_opts`] beyond the model list.
+#[derive(Clone, Debug)]
+pub struct InstanceOptions {
+    /// Overload-shedding bound on the batch queue (requests).
+    pub queue_capacity: usize,
+    /// Utilization averaging window in clock seconds.
+    pub util_window: f64,
+    /// Real PJRT execution or calibrated simulated service times.
+    pub exec_mode: ExecutionMode,
+    /// Batch admission policy (`Affinity` default, `Fifo` baseline).
+    pub batch_mode: BatchMode,
+}
+
+impl Default for InstanceOptions {
+    fn default() -> Self {
+        InstanceOptions {
+            queue_capacity: 256,
+            util_window: 10.0,
+            exec_mode: ExecutionMode::Real,
+            batch_mode: BatchMode::Affinity,
+        }
+    }
 }
 
 impl Instance {
@@ -149,6 +199,26 @@ impl Instance {
         util_window: f64,
         exec_mode: ExecutionMode,
     ) -> Arc<Self> {
+        Self::start_with_opts(
+            id,
+            repo,
+            models,
+            clock,
+            registry,
+            InstanceOptions { queue_capacity, util_window, exec_mode, ..Default::default() },
+        )
+    }
+
+    /// Full-control constructor: [`Instance::start`] plus batch admission
+    /// mode and execution mode via [`InstanceOptions`].
+    pub fn start_with_opts(
+        id: &str,
+        repo: Arc<ModelRepository>,
+        models: &[ModelConfig],
+        clock: Clock,
+        registry: Registry,
+        opts: InstanceOptions,
+    ) -> Arc<Self> {
         let policies: HashMap<String, BatchPolicy> = models
             .iter()
             .map(|m| {
@@ -166,16 +236,32 @@ impl Instance {
             .iter()
             .map(|m| (m.name.clone(), m.service_model))
             .collect();
+        let load_delays: HashMap<String, Duration> = models
+            .iter()
+            .map(|m| (m.name.clone(), m.load_delay.unwrap_or(Duration::ZERO)))
+            .collect();
         let inst_labels = labels(&[("instance", id)]);
         let registry2 = registry.clone();
+        let m_queue_depth_model: HashMap<String, crate::metrics::registry::Gauge> = models
+            .iter()
+            .map(|m| {
+                (
+                    m.name.clone(),
+                    registry.gauge(
+                        "model_queue_depth",
+                        &labels(&[("instance", id), ("model", &m.name)]),
+                    ),
+                )
+            })
+            .collect();
         let instance = Arc::new(Instance {
             id: id.to_string(),
-            queue: Arc::new(BatchQueue::new(queue_capacity)),
+            queue: Arc::new(BatchQueue::with_mode(opts.queue_capacity, opts.batch_mode)),
             state: AtomicU8::new(InstanceState::Starting as u8),
             inflight: AtomicUsize::new(0),
             repo,
             clock: clock.clone(),
-            util: Mutex::new(UtilWindow::new(util_window)),
+            util: Mutex::new(UtilWindow::new(opts.util_window)),
             handle: Mutex::new(None),
             m_requests: Mutex::new(HashMap::new()),
             m_rows: registry.counter("inference_rows_total", &inst_labels),
@@ -188,11 +274,15 @@ impl Instance {
             m_busy_total: registry.gauge("gpu_busy_seconds_total", &inst_labels),
             registry,
             policies,
-            exec_mode,
+            exec_mode: opts.exec_mode,
             service_models,
-            loaded: RwLock::new(models.iter().map(|m| m.name.clone()).collect()),
+            loaded: RwLock::new(models.iter().map(|m| (m.name.clone(), 0)).collect()),
+            load_delays,
+            loading_inflight: std::sync::atomic::AtomicBool::new(false),
             m_models_loaded: registry2.gauge("models_loaded", &inst_labels),
+            m_models_loading: registry2.gauge("models_loading", &inst_labels),
             m_memory_used: registry2.gauge("instance_memory_used_bytes", &inst_labels),
+            m_queue_depth_model,
         });
         instance.refresh_placement_gauges();
         let exec = Arc::clone(&instance);
@@ -225,81 +315,181 @@ impl Instance {
         self.queue.depth()
     }
 
+    /// Queued requests for one model — the per-(instance, model) backlog
+    /// the placement controller folds into its demand signal.
+    pub fn queue_depth_for(&self, model: &str) -> usize {
+        self.queue.depth_for(model)
+    }
+
     /// Utilization over the sliding window, as of now.
     pub fn utilization(&self) -> f64 {
         self.util.lock().unwrap().utilization(self.clock.now_secs())
     }
 
-    /// Does this instance currently advertise `model`?
+    /// Does this instance currently advertise `model` — present in the
+    /// serving set AND warm? A model mid-load answers false: routers must
+    /// not send it traffic yet.
     pub fn advertises(&self, model: &str) -> bool {
-        self.loaded.read().unwrap().contains(model)
+        self.loaded
+            .read()
+            .unwrap()
+            .get(model)
+            .is_some_and(|&warm_at| self.clock.now() >= warm_at)
     }
 
-    /// Currently advertised models, sorted.
+    /// Is `model` in the serving set but still inside its simulated
+    /// warm-load window?
+    pub fn is_loading(&self, model: &str) -> bool {
+        self.loaded
+            .read()
+            .unwrap()
+            .get(model)
+            .is_some_and(|&warm_at| self.clock.now() < warm_at)
+    }
+
+    /// Currently advertised (warm) models, sorted. Models mid-load are
+    /// excluded — this is the pool-membership view.
     pub fn loaded_models(&self) -> Vec<String> {
-        self.loaded.read().unwrap().iter().cloned().collect()
+        let now = self.clock.now();
+        self.loaded
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|&(_, &warm_at)| now >= warm_at)
+            .map(|(m, _)| m.clone())
+            .collect()
     }
 
-    /// Replace the advertised set wholesale (placement bootstrap: the
-    /// instance factory applies the initial placement before the pod is
-    /// marked Ready). Names absent from the repository are dropped.
+    /// Models currently inside their warm-load window, sorted.
+    pub fn loading_models(&self) -> Vec<String> {
+        let now = self.clock.now();
+        self.loaded
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|&(_, &warm_at)| now < warm_at)
+            .map(|(m, _)| m.clone())
+            .collect()
+    }
+
+    /// The whole serving set (warm and loading), sorted — the
+    /// memory-occupancy view placement plans against.
+    pub fn serving_set(&self) -> Vec<String> {
+        self.loaded.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Consistent placement snapshot: (warm models, loading models,
+    /// memory used) under ONE lock acquisition and ONE clock read, so a
+    /// model whose warm window expires mid-snapshot can never appear in
+    /// neither set (which would make the planner see a floor violation
+    /// that does not exist and plan a spurious repair load).
+    pub fn placement_snapshot(&self) -> (Vec<String>, Vec<String>, u64) {
+        let now = self.clock.now();
+        let loaded = self.loaded.read().unwrap();
+        let mut warm = Vec::new();
+        let mut loading = Vec::new();
+        let mut mem = 0u64;
+        for (m, &warm_at) in loaded.iter() {
+            if now >= warm_at {
+                warm.push(m.clone());
+            } else {
+                loading.push(m.clone());
+            }
+            mem += self.repo.get(m).map(|e| e.memory_bytes()).unwrap_or(0);
+        }
+        (warm, loading, mem)
+    }
+
+    /// Replace the serving set wholesale, all entries warm immediately
+    /// (placement bootstrap: the instance factory applies the initial
+    /// placement before the pod is marked Ready, and the pod's
+    /// `startup_delay` already charged the initial model load). Names
+    /// absent from the repository are dropped.
     pub fn set_loaded_models(&self, names: &[String]) {
         {
             let mut loaded = self.loaded.write().unwrap();
             loaded.clear();
             for n in names {
                 if self.repo.get(n).is_some() {
-                    loaded.insert(n.clone());
+                    loaded.insert(n.clone(), 0);
                 }
             }
         }
         self.refresh_placement_gauges();
     }
 
-    /// Advertise one more model (Triton's explicit `load` model-control
-    /// call at the instance level — the engines live in the shared
-    /// repository, so "loading" is taking the model into this pod's
-    /// serving set and paying its memory on this GPU). Returns false if
-    /// the repository has no such model or it was already loaded.
+    /// Take a model into the serving set (Triton's explicit `load`
+    /// model-control call at the instance level — the engines live in
+    /// the shared repository, so "loading" is paying the model's memory
+    /// on this GPU and waiting out its simulated load window). The model
+    /// enters `Loading` for its configured `load_delay` (instantly warm
+    /// when zero) and is advertised only once warm. Returns false if the
+    /// repository has no such model or it was already in the serving set.
     pub fn load_model(&self, model: &str) -> bool {
         if self.repo.get(model).is_none() {
             return false;
         }
-        let added = self.loaded.write().unwrap().insert(model.to_string());
+        let delay = self.load_delays.get(model).copied().unwrap_or(Duration::ZERO);
+        let warm_at = self.clock.now() + delay.as_nanos() as Nanos;
+        let added = {
+            use std::collections::btree_map::Entry;
+            match self.loaded.write().unwrap().entry(model.to_string()) {
+                Entry::Occupied(_) => false,
+                Entry::Vacant(e) => {
+                    e.insert(warm_at);
+                    true
+                }
+            }
+        };
         if added {
             self.refresh_placement_gauges();
         }
         added
     }
 
-    /// Stop advertising a model. Requests already queued for it are
-    /// still served (the executor resolves engines through the shared
-    /// repository), mirroring Triton's graceful unload. Returns false if
-    /// the model was not loaded.
+    /// Drop a model from the serving set (warm or mid-load — unloading a
+    /// loading model cancels the load). Requests already queued for it
+    /// are still served (the executor resolves engines through the
+    /// shared repository), mirroring Triton's graceful unload. Returns
+    /// false if the model was not in the serving set.
     pub fn unload_model(&self, model: &str) -> bool {
-        let removed = self.loaded.write().unwrap().remove(model);
+        let removed = self.loaded.write().unwrap().remove(model).is_some();
         if removed {
             self.refresh_placement_gauges();
         }
         removed
     }
 
-    /// Simulated GPU memory consumed by the advertised models, in bytes
-    /// (each model costs [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes)).
+    /// Simulated GPU memory consumed by the serving set, in bytes (each
+    /// model costs [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes)).
+    /// Loading models count: their memory is committed the moment the
+    /// load starts.
     pub fn memory_used(&self) -> u64 {
         self.loaded
             .read()
             .unwrap()
-            .iter()
+            .keys()
             .filter_map(|m| self.repo.get(m))
             .map(|e| e.memory_bytes())
             .sum()
     }
 
     fn refresh_placement_gauges(&self) {
-        self.m_models_loaded
-            .set(self.loaded.read().unwrap().len() as f64);
-        self.m_memory_used.set(self.memory_used() as f64);
+        let now = self.clock.now();
+        let (warm, loading, mem) = {
+            let loaded = self.loaded.read().unwrap();
+            let warm = loaded.values().filter(|&&w| now >= w).count();
+            let mem: u64 = loaded
+                .keys()
+                .filter_map(|m| self.repo.get(m))
+                .map(|e| e.memory_bytes())
+                .sum();
+            (warm, loaded.len() - warm, mem)
+        };
+        self.m_models_loaded.set(warm as f64);
+        self.m_models_loading.set(loading as f64);
+        self.m_memory_used.set(mem as f64);
+        self.loading_inflight.store(loading > 0, Ordering::Relaxed);
     }
 
     /// Submit a request; returns a receiver for the outcome. On rejection
@@ -314,11 +504,18 @@ impl Instance {
         if self.state() != InstanceState::Ready {
             return Err((Status::Overloaded, input));
         }
-        // Only advertised models are accepted — the modelmesh invariant
-        // that a request never lands on an instance without the model,
-        // even if the shared repository still holds its engines.
+        // Only advertised (warm) models are accepted — the modelmesh
+        // invariant that a request never lands on an instance without
+        // the model, even if the shared repository still holds its
+        // engines. A model mid-load is a transient condition: shed as
+        // Overloaded (retryable) rather than ModelNotFound.
         if !self.advertises(model) {
-            return Err((Status::ModelNotFound, input));
+            let status = if self.is_loading(model) {
+                Status::Overloaded
+            } else {
+                Status::ModelNotFound
+            };
+            return Err((status, input));
         }
         let entry = match self.repo.get(model) {
             Some(e) => e,
@@ -422,6 +619,25 @@ impl Instance {
                 .set(self.util.lock().unwrap().utilization(now));
             self.m_queue_latency.set(queue_lat_ewma);
             self.m_queue_depth.set(self.queue.depth() as f64);
+            // One lock acquisition for all per-model depths; models with
+            // no queued work read as zero.
+            let depths = self.queue.depths();
+            for (model, gauge) in &self.m_queue_depth_model {
+                let d = depths
+                    .iter()
+                    .find(|(m, _)| m == model)
+                    .map(|&(_, d)| d)
+                    .unwrap_or(0);
+                gauge.set(d as f64);
+            }
+            // Loading -> warm transitions are clock-driven (no event
+            // fires), so the serving-set gauges need a refresh while a
+            // load is in flight — plus one final pass when the last
+            // window closes. Warm-only steady state skips the locks
+            // entirely (loads/unloads refresh explicitly).
+            if self.loading_inflight.load(Ordering::Relaxed) {
+                self.refresh_placement_gauges();
+            }
 
             let Some(batch) = batch else {
                 if self.queue.drained() && self.state() != InstanceState::Ready {
@@ -660,6 +876,7 @@ mod tests {
                 base: Duration::from_millis(2),
                 per_row: Duration::from_micros(100),
             },
+            load_delay: None,
         }];
         let inst = Instance::start_with_mode(
             id,
@@ -829,6 +1046,79 @@ mod tests {
         inst.stop();
     }
 
+    /// Instance whose model pays a real warm-load window on placement
+    /// loads.
+    fn slow_load_instance(id: &str, delay: Duration) -> Arc<Instance> {
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            load_delay: Some(delay),
+        }];
+        let inst = Instance::start_with_opts(
+            id,
+            Arc::clone(&SIM_REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            InstanceOptions { exec_mode: ExecutionMode::Simulated, ..Default::default() },
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    #[test]
+    fn warm_load_window_defers_advertising() {
+        let inst = slow_load_instance("ld0", Duration::from_millis(150));
+        // boot placement is warm immediately (startup_delay covered it)
+        assert!(inst.advertises("icecube_cnn"));
+        assert!(inst.unload_model("icecube_cnn"));
+        // a placement load pays the window
+        assert!(inst.load_model("icecube_cnn"));
+        assert!(inst.is_loading("icecube_cnn"));
+        assert!(!inst.advertises("icecube_cnn"));
+        assert_eq!(inst.loaded_models(), Vec::<String>::new());
+        assert_eq!(inst.loading_models(), vec!["icecube_cnn".to_string()]);
+        assert_eq!(inst.serving_set(), vec!["icecube_cnn".to_string()]);
+        // memory is committed the moment the load starts
+        let entry = SIM_REPO.get("icecube_cnn").unwrap();
+        assert_eq!(inst.memory_used(), entry.memory_bytes());
+        // requests shed as Overloaded (retryable), not ModelNotFound
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::Overloaded),
+            other => panic!("unexpected {other:?}"),
+        }
+        // double-load during the window reports false
+        assert!(!inst.load_model("icecube_cnn"));
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(inst.advertises("icecube_cnn"));
+        assert!(!inst.is_loading("icecube_cnn"));
+        assert_eq!(inst.loading_models(), Vec::<String>::new());
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Ok { output, .. } => assert_eq!(output.shape(), &[1, 3]),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn unload_cancels_inflight_load() {
+        let inst = slow_load_instance("ld1", Duration::from_millis(200));
+        assert!(inst.unload_model("icecube_cnn"));
+        assert!(inst.load_model("icecube_cnn"));
+        assert!(inst.is_loading("icecube_cnn"));
+        // cancel mid-window: memory freed, set empty
+        assert!(inst.unload_model("icecube_cnn"));
+        assert!(!inst.is_loading("icecube_cnn"));
+        assert_eq!(inst.serving_set(), Vec::<String>::new());
+        assert_eq!(inst.memory_used(), 0);
+        inst.stop();
+    }
+
     #[test]
     fn simulated_mode_sleeps_service_time() {
         use crate::config::{ExecutionMode, ServiceModelConfig};
@@ -848,6 +1138,7 @@ mod tests {
                 base: Duration::from_millis(20),
                 per_row: Duration::from_millis(1),
             },
+            load_delay: None,
         }];
         let inst = Instance::start_with_mode(
             "sim0",
@@ -892,6 +1183,7 @@ mod tests {
                 base: Duration::from_millis(200),
                 per_row: Duration::from_millis(0),
             },
+            load_delay: None,
         }];
         // 20x dilation: the 200ms (clock) service takes ~10ms real.
         let inst = Instance::start_with_mode(

@@ -15,5 +15,5 @@ pub mod batcher;
 pub mod instance;
 pub mod repository;
 
-pub use instance::{Instance, InstanceState};
+pub use instance::{Instance, InstanceOptions, InstanceState};
 pub use repository::{ModelEntry, ModelRepository};

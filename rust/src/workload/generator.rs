@@ -536,6 +536,7 @@ mod tests {
                             base: Duration::from_millis(2),
                             per_row: Duration::from_micros(100),
                         },
+                        load_delay: None,
                     }],
                     clock.clone(),
                     registry.clone(),

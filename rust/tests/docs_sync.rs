@@ -1,0 +1,75 @@
+//! Doc-sync gates — documentation that must track the code.
+//!
+//! `docs/CONFIG.md` is covered by `config_doc_covers_every_schema_field`
+//! (a unit test next to the schema key catalogs); this file holds the
+//! repository-level gates: the operations runbook must document every
+//! bench binary, so new benches cannot land undocumented.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn read_doc(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs").join(name);
+    fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{} must exist and be readable: {e}", path.display()))
+}
+
+fn bench_stems() -> Vec<String> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("benches");
+    let mut stems: Vec<String> = fs::read_dir(&dir)
+        .expect("rust/benches/ must exist")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("rs"))
+        .map(|p: PathBuf| p.file_stem().unwrap().to_str().unwrap().to_string())
+        .collect();
+    stems.sort();
+    stems
+}
+
+#[test]
+fn operations_doc_mentions_every_bench() {
+    let doc = read_doc("OPERATIONS.md");
+    let stems = bench_stems();
+    assert!(
+        stems.len() >= 10,
+        "expected the full bench set, found only {stems:?}"
+    );
+    for stem in &stems {
+        assert!(
+            doc.contains(stem),
+            "docs/OPERATIONS.md does not mention bench '{stem}' \
+             (rust/benches/{stem}.rs); document how to run and read it, \
+             or the bench set and the runbook drift apart"
+        );
+    }
+}
+
+#[test]
+fn every_bench_is_registered_in_cargo_and_make() {
+    // A bench that exists on disk but is missing from Cargo.toml (no
+    // `[[bench]]` entry => never compiled) or from the `make bench` loop
+    // (never run) is a silent hole in the evaluation.
+    let manifest =
+        fs::read_to_string(Path::new(env!("CARGO_MANIFEST_DIR")).join("Cargo.toml")).unwrap();
+    let makefile =
+        fs::read_to_string(Path::new(env!("CARGO_MANIFEST_DIR")).join("../Makefile")).unwrap();
+    for stem in bench_stems() {
+        assert!(
+            manifest.contains(&format!("name = \"{stem}\"")),
+            "rust/benches/{stem}.rs has no [[bench]] entry in Cargo.toml"
+        );
+        assert!(
+            makefile.contains(&stem),
+            "rust/benches/{stem}.rs is not in the Makefile `bench` target loop"
+        );
+    }
+}
+
+#[test]
+fn operations_doc_mentions_make_targets() {
+    // The runbook must stay anchored to the real build entry points.
+    let doc = read_doc("OPERATIONS.md");
+    for target in ["make artifacts", "make bench", "make docs-check", "make test"] {
+        assert!(doc.contains(target), "docs/OPERATIONS.md must mention `{target}`");
+    }
+}

@@ -29,12 +29,14 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
                     base: Duration::from_millis(2),
                     per_row: Duration::from_micros(100),
                 },
+                load_delay: None,
             }],
             repository: "artifacts".into(),
             startup_delay: Duration::from_millis(10),
             execution,
             queue_capacity: 128,
             util_window: 5.0,
+            batch_mode: Default::default(),
         },
         gateway: GatewayConfig::default(),
         autoscaler: AutoscalerConfig { enabled: false, max_replicas: 6, ..Default::default() },

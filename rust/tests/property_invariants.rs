@@ -175,6 +175,7 @@ fn prop_lb_only_picks_ready_and_under_cap() {
                     base: Duration::from_millis(50),
                     per_row: Duration::from_millis(1),
                 },
+                load_delay: None,
             }],
             clock.clone(),
             registry.clone(),
@@ -274,6 +275,7 @@ fn prop_router_only_routes_to_advertising_instances() {
                 base: Duration::from_millis(1),
                 per_row: Duration::from_micros(50),
             },
+            load_delay: None,
         })
         .collect();
     let mk = |id: &str| {
@@ -366,6 +368,242 @@ fn prop_router_only_routes_to_advertising_instances() {
         }
         for i in instances {
             i.stop();
+        }
+    });
+}
+
+#[test]
+fn prop_no_request_ever_routed_to_loading_replica() {
+    // The warm-load invariant: across arbitrary load/unload/sync/pick
+    // interleavings with REAL load windows, a pick for model M only ever
+    // returns an instance where M is warm — never one still inside its
+    // simulated load window — and submitting to the picked instance is
+    // never rejected for a missing or loading model.
+    const MODELS: [&str; 2] = ["icecube_cnn", "particlenet"];
+    const LOAD_DELAY: Duration = Duration::from_millis(30);
+    let repo = Arc::new(
+        ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &MODELS.map(String::from),
+        )
+        .unwrap(),
+    );
+    let clock = Clock::real();
+    let registry = Registry::new();
+    let model_cfgs: Vec<ModelConfig> = MODELS
+        .iter()
+        .map(|m| ModelConfig {
+            name: m.to_string(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 4,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(1),
+                per_row: Duration::from_micros(50),
+            },
+            load_delay: Some(LOAD_DELAY),
+        })
+        .collect();
+    let mk = |id: &str| {
+        let inst = Instance::start_with_mode(
+            id,
+            Arc::clone(&repo),
+            &model_cfgs,
+            clock.clone(),
+            registry.clone(),
+            64,
+            5.0,
+            ExecutionMode::Simulated,
+        );
+        inst.mark_ready();
+        inst
+    };
+    let input_for = |model: &str| match model {
+        "icecube_cnn" => Tensor::zeros(vec![1, 16, 16, 3]),
+        _ => Tensor::zeros(vec![1, 64, 7]),
+    };
+
+    check("no pick lands on a loading replica", 10, |g: &mut Gen| {
+        let n = g.usize(1..=3);
+        let instances: Vec<Arc<Instance>> =
+            (0..n).map(|i| mk(&format!("warm-p{i}"))).collect();
+        let router = ModelRouter::new(
+            &MODELS.map(String::from),
+            *g.choose(&[LbPolicy::RoundRobin, LbPolicy::Random, LbPolicy::LeastConnection]),
+            0,
+            &Registry::new(),
+            g.u64(0..=u64::MAX),
+        );
+        // Random warm starting placement (set_loaded_models = bootstrap,
+        // warm immediately).
+        for inst in &instances {
+            let keep: Vec<String> = MODELS
+                .iter()
+                .filter(|_| g.bool())
+                .map(|m| m.to_string())
+                .collect();
+            inst.set_loaded_models(&keep);
+        }
+        router.sync(&instances);
+
+        for _ in 0..40 {
+            match g.usize(0..=4) {
+                // start a (windowed) load somewhere
+                0 => {
+                    let inst = &instances[g.usize(0..=n - 1)];
+                    let model = *g.choose(&MODELS);
+                    let started = router.load(inst, model);
+                    if started && !inst.advertises(model) {
+                        // the window must keep it out of the pool
+                        assert!(
+                            !router
+                                .endpoints_for(model)
+                                .iter()
+                                .any(|e| e.id == inst.id),
+                            "loading replica {} joined the '{model}' pool",
+                            inst.id
+                        );
+                    }
+                }
+                // unload (possibly canceling an in-flight load)
+                1 => {
+                    let inst = &instances[g.usize(0..=n - 1)];
+                    router.unload(inst, g.choose(&MODELS));
+                }
+                // reconcile-style pool rebuild; admits freshly warm pods
+                2 => router.sync(&instances),
+                // let some windows expire
+                3 => std::thread::sleep(Duration::from_millis(g.usize(1..=12) as u64)),
+                // route a request
+                _ => {
+                    let model = *g.choose(&MODELS);
+                    if let Ok(picked) = router.pick(model) {
+                        assert!(
+                            !picked.is_loading(model),
+                            "picked {} for '{model}' while it was still loading",
+                            picked.id
+                        );
+                        assert!(
+                            picked.advertises(model),
+                            "picked {} for '{model}' which is not warm there",
+                            picked.id
+                        );
+                        match picked.submit(model, input_for(model), 0) {
+                            Ok(_rx) => {}
+                            Err((status, _)) => assert_ne!(
+                                status,
+                                Status::ModelNotFound,
+                                "advertising instance rejected '{model}'"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+        // Terminal settle: once every window has expired, a sync must
+        // admit exactly the warm serving sets.
+        std::thread::sleep(LOAD_DELAY + Duration::from_millis(10));
+        router.sync(&instances);
+        for m in MODELS {
+            for inst in router.endpoints_for(m) {
+                assert!(inst.advertises(m) && !inst.is_loading(m));
+            }
+        }
+        for i in instances {
+            i.stop();
+        }
+    });
+}
+
+#[test]
+fn prop_planner_never_unloads_last_warm_copy() {
+    use std::collections::{BTreeMap, BTreeSet};
+    use supersonic::config::{ModelPlacementConfig, PlacementPolicy};
+    use supersonic::modelmesh::{InstanceView, Move, PlacementCore};
+
+    // The mid-move floor invariant: whatever the demand, budget, load
+    // costs and mix of warm/loading copies, a single planning pass never
+    // unloads a model's last warm copies (below the floor) — a model
+    // whose replacement replica is still mid-load keeps serving from the
+    // old one until the new one warms up.
+    check("warm floor survives a planning pass", 300, |g: &mut Gen| {
+        let n_models = g.usize(1..=3);
+        let models: Vec<String> = (0..n_models).map(|m| format!("m{m}")).collect();
+        let mem = 600_000u64;
+        let catalog: Vec<(String, u64)> = models.iter().map(|m| (m.clone(), mem)).collect();
+        let cfg = ModelPlacementConfig {
+            policy: PlacementPolicy::Dynamic,
+            // fits 1..=n_models models per instance (plus slack)
+            memory_budget_mb: g.usize(1..=n_models) as f64 * 0.6 + 0.05,
+            load_threshold: g.f64(50.0, 200.0),
+            unload_threshold: g.f64(0.0, 40.0),
+            cooldown: Duration::from_secs(g.usize(0..=5) as u64),
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
+        };
+        let floor = cfg.min_replicas_per_model;
+        let costs: BTreeMap<String, f64> = models
+            .iter()
+            .filter(|_| g.bool())
+            .map(|m| (m.clone(), g.f64(0.0, 8.0)))
+            .collect();
+        let mut core = PlacementCore::with_load_costs(cfg, catalog, costs);
+
+        let n_inst = g.usize(1..=5);
+        let views: Vec<InstanceView> = (0..n_inst)
+            .map(|i| {
+                let mut warm = BTreeSet::new();
+                let mut loading = BTreeSet::new();
+                for m in &models {
+                    match g.usize(0..=3) {
+                        0 => {
+                            warm.insert(m.clone());
+                        }
+                        1 => {
+                            loading.insert(m.clone());
+                        }
+                        _ => {}
+                    }
+                }
+                let mem_used = (warm.len() + loading.len()) as u64 * mem;
+                InstanceView { id: format!("i{i}"), loaded: warm, loading, mem_used }
+            })
+            .collect();
+        let demand: BTreeMap<String, f64> =
+            models.iter().map(|m| (m.clone(), g.f64(0.0, 500.0))).collect();
+
+        let moves = core.plan(g.f64(0.0, 100.0), &views, &demand);
+
+        // Replay the unloads against the warm counts.
+        let mut warm_after: BTreeMap<&str, i64> = models
+            .iter()
+            .map(|m| {
+                (
+                    m.as_str(),
+                    views.iter().filter(|v| v.loaded.contains(m)).count() as i64,
+                )
+            })
+            .collect();
+        for mv in &moves {
+            if let Move::Unload { instance, model } = mv {
+                let was_warm = views
+                    .iter()
+                    .find(|v| &v.id == instance)
+                    .is_some_and(|v| v.loaded.contains(model));
+                if was_warm {
+                    *warm_after.get_mut(model.as_str()).unwrap() -= 1;
+                }
+            }
+        }
+        for m in &models {
+            let before = views.iter().filter(|v| v.loaded.contains(m)).count() as i64;
+            if before >= floor as i64 {
+                assert!(
+                    warm_after[m.as_str()] >= floor as i64,
+                    "'{m}' dropped from {before} to {} warm copies (floor {floor}): {moves:?}",
+                    warm_after[m.as_str()]
+                );
+            }
         }
     });
 }
