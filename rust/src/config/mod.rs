@@ -13,6 +13,7 @@ pub mod yaml;
 pub use schema::{
     AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, ExecutionMode,
     GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig,
-    PerModelScalingConfig, PlacementPolicy, ServerConfig, ServiceModelConfig,
+    PerModelScalingConfig, PlacementPolicy, PriorityConfig, ServerConfig,
+    ServiceModelConfig,
 };
 pub use yaml::Value;

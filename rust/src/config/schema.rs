@@ -8,12 +8,14 @@
 //! to documented defaults, and [`DeploymentConfig::validate`] enforces
 //! cross-field invariants.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use super::yaml::{self, Value};
+use crate::rpc::codec::Priority;
 
 /// Load-balancing policies the gateway supports (Envoy's menu, §2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +168,73 @@ pub struct ModelConfig {
     pub load_delay: Option<Duration>,
 }
 
+/// Request-priority policy (`server.priorities`) — Triton's
+/// dynamic-batcher priority levels (§2.1) end to end.
+///
+/// A request may carry an explicit priority on the wire; otherwise the
+/// gateway resolves one here: per-token default first (a production
+/// client identity maps to a class), then per-model default, then
+/// `default`. The resolved class drives the batcher's admission lanes,
+/// the overload-shedding order (bulk evicted first), and the gateway's
+/// priority-aware rate limiting and pressure gating.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PriorityConfig {
+    /// Class assigned when neither the request, its token, nor its model
+    /// names one.
+    pub default: Priority,
+    /// Per-model default classes (model name → class). Every named model
+    /// must appear in `server.models`.
+    pub models: BTreeMap<String, Priority>,
+    /// Per-token default classes (auth token → class). Wins over the
+    /// per-model default.
+    pub tokens: BTreeMap<String, Priority>,
+    /// Fraction of the gateway token-bucket burst reserved away from
+    /// bulk traffic: a bulk request only takes a token while the bucket
+    /// holds more than `bulk_reserve × rate_limit_burst` tokens, so
+    /// higher classes keep headroom as the bucket drains.
+    pub bulk_reserve: f64,
+    /// Pressure-gate scaling for bulk: bulk is admitted only while the
+    /// gate metric stays at or below `factor × threshold` (≤ 1, so bulk
+    /// sheds first as pressure builds).
+    pub bulk_pressure_factor: f64,
+    /// Pressure-gate scaling for critical: critical is admitted up to
+    /// `factor × threshold` (≥ 1, so critical sheds last).
+    pub critical_pressure_factor: f64,
+}
+
+impl Default for PriorityConfig {
+    fn default() -> Self {
+        PriorityConfig {
+            default: Priority::Standard,
+            models: BTreeMap::new(),
+            tokens: BTreeMap::new(),
+            bulk_reserve: 0.25,
+            bulk_pressure_factor: 0.5,
+            critical_pressure_factor: 2.0,
+        }
+    }
+}
+
+impl PriorityConfig {
+    /// Resolve one request's class: explicit wire priority, else the
+    /// token's default, else the model's default, else `default`.
+    pub fn resolve(&self, explicit: Option<Priority>, token: &str, model: &str) -> Priority {
+        explicit
+            .or_else(|| self.tokens.get(token).copied())
+            .or_else(|| self.models.get(model).copied())
+            .unwrap_or(self.default)
+    }
+
+    /// Pressure-gate threshold multiplier for one class.
+    pub fn pressure_factor(&self, priority: Priority) -> f64 {
+        match priority {
+            Priority::Bulk => self.bulk_pressure_factor,
+            Priority::Standard => 1.0,
+            Priority::Critical => self.critical_pressure_factor,
+        }
+    }
+}
+
 /// Inference-server section (Triton analogue).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerConfig {
@@ -187,6 +256,8 @@ pub struct ServerConfig {
     /// Batch admission policy: `affinity` (per-model queues, the default)
     /// or `fifo` (strict arrival order, the ablation baseline).
     pub batch_mode: BatchMode,
+    /// Request-priority policy (classes, defaults, shed behavior).
+    pub priorities: PriorityConfig,
 }
 
 /// Gateway section (Envoy analogue, §2.2).
@@ -434,6 +505,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             util_window: 10.0,
             batch_mode: BatchMode::Affinity,
+            priorities: PriorityConfig::default(),
         }
     }
 }
@@ -537,7 +609,12 @@ pub mod keys {
     /// `server` section.
     pub const SERVER: &[&str] = &[
         "replicas", "models", "repository", "startup_delay", "execution",
-        "queue_capacity", "util_window", "batch_mode",
+        "queue_capacity", "util_window", "batch_mode", "priorities",
+    ];
+    /// `server.priorities` subsection.
+    pub const PRIORITIES: &[&str] = &[
+        "default", "models", "tokens", "bulk_reserve", "bulk_pressure_factor",
+        "critical_pressure_factor",
     ];
     /// `server.models[]` entries.
     pub const SERVER_MODEL: &[&str] =
@@ -574,6 +651,7 @@ pub mod keys {
     pub const SECTIONS: &[(&str, &[&str])] = &[
         ("<root>", ROOT),
         ("server", SERVER),
+        ("server.priorities", PRIORITIES),
         ("server.models[]", SERVER_MODEL),
         ("server.models[].service_model", SERVICE_MODEL),
         ("gateway", GATEWAY),
@@ -733,6 +811,47 @@ impl DeploymentConfig {
                 models
             }
         };
+        let pr = sv.get("priorities").unwrap_or(&empty);
+        check_keys(pr, keys::PRIORITIES, "server.priorities")?;
+        fn parse_priority_map(
+            v: Option<&Value>,
+            section: &str,
+        ) -> Result<BTreeMap<String, Priority>> {
+            let mut out = BTreeMap::new();
+            if let Some(v) = v {
+                let entries = v
+                    .as_map()
+                    .with_context(|| format!("'{section}' must be a map of name: priority"))?;
+                for (name, class) in entries {
+                    let class = class
+                        .as_str()
+                        .with_context(|| format!("'{section}.{name}' must be a priority name"))?;
+                    out.insert(name.clone(), Priority::parse(class)?);
+                }
+            }
+            Ok(out)
+        }
+        let priorities = PriorityConfig {
+            default: match pr.get("default") {
+                None => d.server.priorities.default,
+                Some(x) => Priority::parse(
+                    x.as_str().context("'priorities.default' must be a string")?,
+                )?,
+            },
+            models: parse_priority_map(pr.get("models"), "server.priorities.models")?,
+            tokens: parse_priority_map(pr.get("tokens"), "server.priorities.tokens")?,
+            bulk_reserve: get_f64(pr, "bulk_reserve", d.server.priorities.bulk_reserve)?,
+            bulk_pressure_factor: get_f64(
+                pr,
+                "bulk_pressure_factor",
+                d.server.priorities.bulk_pressure_factor,
+            )?,
+            critical_pressure_factor: get_f64(
+                pr,
+                "critical_pressure_factor",
+                d.server.priorities.critical_pressure_factor,
+            )?,
+        };
         let server = ServerConfig {
             replicas: get_usize(sv, "replicas", d.server.replicas)?,
             models,
@@ -752,6 +871,7 @@ impl DeploymentConfig {
                     BatchMode::parse(x.as_str().context("'batch_mode' must be a string")?)?
                 }
             },
+            priorities,
         };
 
         let gw = root.get("gateway").unwrap_or(&empty);
@@ -885,6 +1005,30 @@ impl DeploymentConfig {
         }
         if self.server.util_window <= 0.0 {
             bail!("server.util_window must be > 0");
+        }
+        let pr = &self.server.priorities;
+        for model in pr.models.keys() {
+            if !self.server.models.iter().any(|m| &m.name == model) {
+                bail!(
+                    "server.priorities.models names '{model}', which is not in \
+                     server.models"
+                );
+            }
+        }
+        if !(0.0..1.0).contains(&pr.bulk_reserve) {
+            bail!("server.priorities.bulk_reserve must be in [0, 1)");
+        }
+        if !(pr.bulk_pressure_factor > 0.0 && pr.bulk_pressure_factor <= 1.0) {
+            bail!(
+                "server.priorities.bulk_pressure_factor must be in (0, 1] \
+                 (bulk sheds first at the pressure gate)"
+            );
+        }
+        if pr.critical_pressure_factor < 1.0 {
+            bail!(
+                "server.priorities.critical_pressure_factor must be >= 1 \
+                 (critical sheds last at the pressure gate)"
+            );
         }
         for m in &self.server.models {
             if m.service_model.service_secs(1) <= 0.0 {
@@ -1170,6 +1314,75 @@ monitoring:
         for m in [BatchMode::Fifo, BatchMode::Affinity] {
             assert_eq!(BatchMode::parse(m.name()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn priorities_parse_and_resolve() {
+        let text = "server:\n  models:\n    - name: particlenet\n    - name: icecube_cnn\n  \
+                    priorities:\n    default: bulk\n    models:\n      particlenet: critical\n    \
+                    tokens:\n      trigger-farm: critical\n      reprocessing: bulk\n    \
+                    bulk_reserve: 0.5\n";
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let pr = &cfg.server.priorities;
+        assert_eq!(pr.default, Priority::Bulk);
+        assert_eq!(pr.models["particlenet"], Priority::Critical);
+        assert_eq!(pr.tokens["trigger-farm"], Priority::Critical);
+        assert_eq!(pr.bulk_reserve, 0.5);
+        // resolution order: explicit > token > model > default
+        assert_eq!(
+            pr.resolve(Some(Priority::Standard), "trigger-farm", "particlenet"),
+            Priority::Standard
+        );
+        assert_eq!(pr.resolve(None, "reprocessing", "particlenet"), Priority::Bulk);
+        assert_eq!(pr.resolve(None, "anon", "particlenet"), Priority::Critical);
+        assert_eq!(pr.resolve(None, "anon", "icecube_cnn"), Priority::Bulk);
+        // pressure factors: standard is always 1.0
+        assert_eq!(pr.pressure_factor(Priority::Standard), 1.0);
+        assert!(pr.pressure_factor(Priority::Bulk) <= 1.0);
+        assert!(pr.pressure_factor(Priority::Critical) >= 1.0);
+    }
+
+    #[test]
+    fn priorities_default_is_standard() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        let pr = &cfg.server.priorities;
+        assert_eq!(pr.default, Priority::Standard);
+        assert!(pr.models.is_empty() && pr.tokens.is_empty());
+        assert_eq!(pr.resolve(None, "any", "any"), Priority::Standard);
+    }
+
+    #[test]
+    fn priorities_bad_values_rejected() {
+        // unknown class name
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    default: urgent\n"
+        )
+        .is_err());
+        // unknown key (typo protection)
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    defalt: bulk\n"
+        )
+        .is_err());
+        // per-model default for an unserved model
+        let e = DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n  priorities:\n    models:\n      \
+             nope: critical\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("nope"), "{e}");
+        // reserve / factor bounds
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    bulk_reserve: 1.5\n"
+        )
+        .is_err());
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    bulk_pressure_factor: 2.0\n"
+        )
+        .is_err());
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    critical_pressure_factor: 0.5\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -268,7 +268,7 @@ impl Deployment {
             None
         };
 
-        let gateway = Gateway::start_with_router(
+        let gateway = Gateway::start_with_priorities(
             &cfg.gateway,
             cluster.endpoints_handle(),
             clock.clone(),
@@ -276,6 +276,7 @@ impl Deployment {
             tracer.clone(),
             pressure,
             router.clone(),
+            cfg.server.priorities.clone(),
         )?;
 
         // Placement controller rides the cluster reconcile loop: pools
@@ -441,6 +442,7 @@ mod tests {
                 queue_capacity: 64,
                 util_window: 5.0,
                 batch_mode: Default::default(),
+                priorities: Default::default(),
             },
             gateway: GatewayConfig::default(),
             autoscaler: AutoscalerConfig {

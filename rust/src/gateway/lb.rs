@@ -59,10 +59,18 @@ impl LoadBalancer {
     /// Pick an instance for the next request, or `None` when every
     /// endpoint is gone or saturated (the caller sheds the request).
     pub fn pick(&self) -> Option<Arc<Instance>> {
+        self.pick_excluding(None)
+    }
+
+    /// [`LoadBalancer::pick`] skipping the instance named `exclude` —
+    /// the gateway's retry path, which must land on a *different*
+    /// instance than the one that just rejected the request.
+    pub fn pick_excluding(&self, exclude: Option<&str>) -> Option<Arc<Instance>> {
         let eps = self.endpoints.read().unwrap();
         let routable = |i: &Arc<Instance>| {
             i.state() == InstanceState::Ready
                 && (self.max_inflight == 0 || i.inflight() < self.max_inflight)
+                && exclude.is_none_or(|id| i.id != id)
         };
 
         // Round-robin rotates over the *full* endpoint list, skipping
@@ -308,6 +316,22 @@ mod tests {
             .unwrap();
         // inflight == cap => shed
         assert!(lb.pick().is_none());
+        for i in insts {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn pick_excluding_skips_named_instance() {
+        let (eps, insts) = endpoints(2);
+        let lb = LoadBalancer::new(LbPolicy::RoundRobin, eps, 0, 1);
+        for _ in 0..4 {
+            let picked = lb.pick_excluding(Some(insts[0].id.as_str())).unwrap();
+            assert_eq!(picked.id, insts[1].id);
+        }
+        // excluding the only remaining instance sheds
+        insts[1].drain();
+        assert!(lb.pick_excluding(Some(insts[0].id.as_str())).is_none());
         for i in insts {
             i.stop();
         }

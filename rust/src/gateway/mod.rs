@@ -28,10 +28,10 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
-use crate::config::GatewayConfig;
+use crate::config::{GatewayConfig, PriorityConfig};
 use crate::metrics::registry::{labels, Registry};
 use crate::modelmesh::ModelRouter;
-use crate::rpc::codec::{InferRequest, InferResponse, RequestKind, Status};
+use crate::rpc::codec::{InferRequest, InferResponse, Priority, RequestKind, Status};
 use crate::rpc::server::{Handler, RpcServer};
 use crate::server::batcher::ExecOutcome;
 use crate::server::Instance;
@@ -82,6 +82,36 @@ impl Gateway {
         pressure: Option<PressureGate>,
         router: Option<Arc<ModelRouter>>,
     ) -> Result<Self> {
+        Self::start_with_priorities(
+            cfg,
+            endpoints,
+            clock,
+            registry,
+            tracer,
+            pressure,
+            router,
+            PriorityConfig::default(),
+        )
+    }
+
+    /// [`Gateway::start_with_router`] with an explicit request-priority
+    /// policy (`server.priorities`). The gateway resolves each request's
+    /// class (explicit wire priority, else per-token / per-model /
+    /// global defaults) and applies it at every shedding point: the
+    /// token bucket keeps a reserve away from bulk, the pressure gate
+    /// sheds bulk first and critical last, and the class rides to the
+    /// instance's batcher lanes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_priorities(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+        router: Option<Arc<ModelRouter>>,
+        priorities: PriorityConfig,
+    ) -> Result<Self> {
         let lb = Arc::new(LoadBalancer::new(
             cfg.lb_policy,
             endpoints,
@@ -107,13 +137,23 @@ impl Gateway {
         };
         let m_latency = registry.histogram("gateway_latency_seconds", &labels(&[]));
         let m_shed = registry.counter("gateway_shed_total", &labels(&[]));
+        let m_shed_priority: [_; Priority::COUNT] = [
+            registry.counter("gateway_shed_priority_total", &labels(&[("priority", "bulk")])),
+            registry
+                .counter("gateway_shed_priority_total", &labels(&[("priority", "standard")])),
+            registry
+                .counter("gateway_shed_priority_total", &labels(&[("priority", "critical")])),
+        ];
 
         let lb2 = Arc::clone(&lb);
         let clock2 = clock.clone();
         let handler: Handler = Arc::new(move |req: InferRequest| {
             let t0 = clock2.now();
+            let priority = priorities.resolve(req.priority, &req.token, &req.model);
             let response = handle_request(
                 req,
+                priority,
+                &priorities,
                 &lb2,
                 router.as_deref(),
                 &authenticator,
@@ -130,6 +170,7 @@ impl Gateway {
                 Status::RateLimited | Status::Overloaded | Status::Unauthorized
             ) {
                 m_shed.inc();
+                m_shed_priority[priority.index()].inc();
             }
             response
         });
@@ -165,10 +206,13 @@ impl Gateway {
     }
 }
 
-/// The per-request policy pipeline.
+/// The per-request policy pipeline. `priority` is the request's resolved
+/// class (explicit wire priority or a `server.priorities` default).
 #[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: InferRequest,
+    priority: Priority,
+    priorities: &PriorityConfig,
     lb: &LoadBalancer,
     router: Option<&ModelRouter>,
     authenticator: &Authenticator,
@@ -194,51 +238,95 @@ fn handle_request(
         return InferResponse::err(req.request_id, Status::Unauthorized, "invalid token");
     }
 
-    // 2. Rate limiting: token bucket, then external-metric gate.
-    if !bucket.try_acquire() {
-        return InferResponse::err(req.request_id, Status::RateLimited, "rate limit exceeded");
+    // 2. Rate limiting: token bucket, then external-metric gate — both
+    //    priority-aware, so bulk sheds first at the gate. Bulk acquires
+    //    leave a slice of the burst in reserve for higher classes;
+    //    the gate threshold scales down for bulk and up for critical.
+    // The reserve is clamped to burst - 1 so bulk always keeps at least
+    // one usable token in a full bucket: a tiny burst with the default
+    // reserve must rate-limit bulk *first*, never *forever*.
+    let reserve = if priority == Priority::Bulk {
+        (bucket.burst() * priorities.bulk_reserve).min(bucket.burst() - 1.0).max(0.0)
+    } else {
+        0.0
+    };
+    if !bucket.try_acquire_reserving(reserve) {
+        return InferResponse::err(
+            req.request_id,
+            Status::RateLimited,
+            format!("rate limit exceeded ({} class)", priority.name()),
+        );
     }
     if let Some(gate) = pressure {
-        if !gate.admit() {
+        if !gate.admit_scaled(priorities.pressure_factor(priority)) {
             return InferResponse::err(
                 req.request_id,
                 Status::RateLimited,
-                format!("load shedding: pressure {:.4} over threshold", gate.pressure()),
+                format!(
+                    "load shedding: pressure {:.4} over the {} threshold",
+                    gate.pressure(),
+                    priority.name()
+                ),
             );
         }
     }
 
-    // 3. Route. One retry on a different instance if the first pick
-    //    rejects (it may have saturated between pick and submit). The
-    //    rejected submit hands the tensor back, so no per-request clone.
-    //    With a model router the pick goes through the per-model balancer
-    //    for `req.model`; a ModelNotFound rejection from an instance is
-    //    then a stale-pool race (the model was just unloaded), so the
-    //    retry picks a fresh replica instead of giving up.
+    // 3. Route. One retry on a *different* instance if the first pick
+    //    rejects (it may have saturated between pick and submit) — the
+    //    retry excludes the instance that rejected. The rejected submit
+    //    hands the tensor back, so no per-request clone. With a model
+    //    router the pick goes through the per-model balancer for
+    //    `req.model`; a ModelNotFound rejection from an instance is then
+    //    a stale-pool race (the model was just unloaded), so the retry
+    //    picks a fresh replica instead of giving up.
     let mut input = req.input;
     let mut last_status = Status::Overloaded;
     let mut last_msg = String::from("no ready instances");
+    let mut rejected_by: Option<String> = None;
     for _attempt in 0..2 {
         let instance = match router {
-            Some(r) => match r.pick(&req.model) {
+            Some(r) => match r.pick_excluding(&req.model, rejected_by.as_deref()) {
                 Ok(inst) => inst,
                 Err(status) => {
-                    last_status = status;
                     last_msg = match status {
                         Status::ModelNotFound => {
                             format!("model '{}' not in the serving catalog", req.model)
                         }
-                        _ => format!("no replica for model '{}' accepting work", req.model),
+                        _ => match &rejected_by {
+                            None => {
+                                format!("no replica for model '{}' accepting work", req.model)
+                            }
+                            Some(id) => format!(
+                                "no other replica for model '{}' after instance {id} \
+                                 rejected: {}",
+                                req.model,
+                                last_status.name()
+                            ),
+                        },
                     };
+                    last_status = status;
                     break;
                 }
             },
-            None => match lb.pick() {
+            None => match lb.pick_excluding(rejected_by.as_deref()) {
                 Some(inst) => inst,
-                None => break,
+                None => {
+                    // No routable replica on THIS attempt: report that,
+                    // not a stale earlier rejection (a retry that finds
+                    // the fleet gone must not blame the first instance).
+                    last_msg = match &rejected_by {
+                        None => "no ready instances".into(),
+                        Some(id) => format!(
+                            "no other ready instance for retry (instance {id} rejected: {})",
+                            last_status.name()
+                        ),
+                    };
+                    last_status = Status::Overloaded;
+                    break;
+                }
             },
         };
-        match instance.submit(&req.model, input, req.trace_id) {
+        match instance.submit_prio(&req.model, input, priority, req.trace_id) {
             Ok(rx) => {
                 let outcome = rx.recv().unwrap_or(ExecOutcome::Err {
                     status: Status::Internal,
@@ -250,6 +338,7 @@ fn handle_request(
                 input = returned;
                 last_status = status;
                 last_msg = format!("instance {} rejected: {}", instance.id, status.name());
+                rejected_by = Some(instance.id.clone());
                 // Model/shape errors fail identically everywhere — except
                 // a router-mode ModelNotFound, which can be a stale pool.
                 let terminal = match status {
@@ -472,6 +561,247 @@ mod tests {
         let mut client = stack.client();
         let resp = client.infer("icecube_cnn", Tensor::zeros(vec![1, 8, 8, 3])).unwrap();
         assert_eq!(resp.status, Status::BadRequest);
+    }
+
+    /// Regression: when the retry pick finds no replica after a first
+    /// rejection, the response must say so — the old loop broke out of
+    /// the `None` arm without touching `last_msg` and blamed the first
+    /// instance's rejection instead of the no-replica condition.
+    #[test]
+    fn retry_reports_no_ready_not_stale_rejection() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        // One instance with a 1-row queue and a slow simulated service:
+        // the executor is busy and the queue full, so submits reject.
+        let inst = Instance::start_with_opts(
+            "stale-0",
+            Arc::clone(&REPO),
+            &[ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(500),
+                    per_row: Duration::from_micros(1),
+                },
+                load_delay: None,
+            }],
+            clock.clone(),
+            registry.clone(),
+            crate::server::InstanceOptions {
+                queue_capacity: 1,
+                exec_mode: ExecutionMode::Simulated,
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        // Occupy the executor, then fill the 1-row queue.
+        let _busy = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let _queued = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let gateway = Gateway::start(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Overloaded);
+        // Attempt 1 picked the full instance and was rejected; attempt 2
+        // (which excludes it) found no other replica — the error must
+        // describe the no-replica condition, not just echo attempt 1.
+        assert!(
+            resp.error.contains("no other ready instance"),
+            "stale retry error: '{}'",
+            resp.error
+        );
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    /// Router-mode twin of the stale-error regression: the retry must
+    /// exclude the rejecting replica, and a retry that finds no other
+    /// replica must say so rather than echo the first rejection.
+    #[test]
+    fn router_retry_reports_no_other_replica() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = Instance::start_with_opts(
+            "rtr-0",
+            Arc::clone(&REPO),
+            &[ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(500),
+                    per_row: Duration::from_micros(1),
+                },
+                load_delay: None,
+            }],
+            clock.clone(),
+            registry.clone(),
+            crate::server::InstanceOptions {
+                queue_capacity: 1,
+                exec_mode: ExecutionMode::Simulated,
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        let _busy = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let _queued = inst.submit("icecube_cnn", cnn_input(1), 0).unwrap();
+        let router = Arc::new(crate::modelmesh::ModelRouter::new(
+            &["icecube_cnn".into()],
+            crate::config::LbPolicy::RoundRobin,
+            0,
+            &registry,
+            7,
+        ));
+        router.sync(&[Arc::clone(&inst)]);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let gateway = Gateway::start_with_router(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+            Some(router),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Overloaded);
+        assert!(
+            resp.error.contains("no other replica"),
+            "stale router retry error: '{}'",
+            resp.error
+        );
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    #[test]
+    fn tiny_burst_does_not_starve_bulk() {
+        // With burst 1 the default bulk_reserve would demand more tokens
+        // than the bucket can ever hold; the gateway clamps the reserve
+        // so bulk is rate-limited FIRST under contention, never FOREVER.
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("prio-tb", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let cfg = GatewayConfig {
+            rate_limit_rps: 0.001,
+            rate_limit_burst: 1,
+            ..Default::default()
+        };
+        let gateway = Gateway::start_with_priorities(
+            &cfg,
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+            None,
+            PriorityConfig::default(),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let r = client
+            .infer_prio("icecube_cnn", cnn_input(1), Priority::Bulk)
+            .unwrap();
+        assert_eq!(r.status, Status::Ok, "bulk starved by an unclamped reserve: {}", r.error);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    #[test]
+    fn bulk_rate_limited_before_standard() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("prio-rl", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let cfg = GatewayConfig {
+            // Near-zero refill: the burst is all there is within the test.
+            rate_limit_rps: 0.001,
+            rate_limit_burst: 4,
+            ..Default::default()
+        };
+        let mut tokens = std::collections::BTreeMap::new();
+        tokens.insert("reprocessing".to_string(), Priority::Bulk);
+        let priorities = PriorityConfig {
+            tokens,
+            bulk_reserve: 0.5, // keep 2 of the 4 burst tokens from bulk
+            ..Default::default()
+        };
+        let gateway = Gateway::start_with_priorities(
+            &cfg,
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+            None,
+            priorities,
+        )
+        .unwrap();
+        let mut bulk =
+            RpcClient::connect(&gateway.addr().to_string()).unwrap().with_token("reprocessing");
+        let mut standard = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        // Bulk (resolved from its token) may only use the unreserved
+        // half of the burst...
+        assert_eq!(bulk.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        assert_eq!(bulk.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        assert_eq!(
+            bulk.infer("icecube_cnn", cnn_input(1)).unwrap().status,
+            Status::RateLimited
+        );
+        // ...while the reserve still serves the standard client.
+        assert_eq!(standard.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        assert_eq!(standard.infer("icecube_cnn", cnn_input(1)).unwrap().status, Status::Ok);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    #[test]
+    fn pressure_gate_sheds_by_priority() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("prio-pg", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        // Pressure pinned at 1.0 against a 0.6 threshold: over 1x
+        // (standard sheds) but under the critical 2x factor.
+        let gate = PressureGate::new(Box::new(|| 1.0), 0.6);
+        let gateway = Gateway::start_with_priorities(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            Some(gate),
+            None,
+            PriorityConfig::default(),
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let r = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(r.status, Status::RateLimited, "standard admitted over threshold");
+        let r = client
+            .infer_prio("icecube_cnn", cnn_input(1), Priority::Bulk)
+            .unwrap();
+        assert_eq!(r.status, Status::RateLimited, "bulk admitted over threshold");
+        let r = client
+            .infer_prio("icecube_cnn", cnn_input(1), Priority::Critical)
+            .unwrap();
+        assert_eq!(r.status, Status::Ok, "critical shed inside its factor: {}", r.error);
+        gateway.shutdown();
+        inst.stop();
     }
 
     #[test]

@@ -44,6 +44,15 @@ impl TokenBucket {
 
     /// Try to take one token; false = rate limited.
     pub fn try_acquire(&self) -> bool {
+        self.try_acquire_reserving(0.0)
+    }
+
+    /// Try to take one token while leaving `reserve` tokens untouched in
+    /// the bucket — the priority-aware acquire: bulk requests pass a
+    /// positive reserve (a slice of the burst kept for higher classes),
+    /// so as the bucket drains, bulk is limited first while standard and
+    /// critical traffic still find tokens. `false` = rate limited.
+    pub fn try_acquire_reserving(&self, reserve: f64) -> bool {
         if self.rps <= 0.0 {
             return true;
         }
@@ -52,12 +61,17 @@ impl TokenBucket {
         let elapsed = (now - st.last).max(0.0);
         st.tokens = (st.tokens + elapsed * self.rps).min(self.burst);
         st.last = now;
-        if st.tokens >= 1.0 {
+        if st.tokens >= 1.0 + reserve.max(0.0) {
             st.tokens -= 1.0;
             true
         } else {
             false
         }
+    }
+
+    /// Configured burst capacity.
+    pub fn burst(&self) -> f64 {
+        self.burst
     }
 
     /// Tokens currently available (for tests/metrics).
@@ -89,7 +103,15 @@ impl PressureGate {
 
     /// True when the request may proceed.
     pub fn admit(&self) -> bool {
-        (self.source)() <= self.threshold
+        self.admit_scaled(1.0)
+    }
+
+    /// Priority-aware admit: the request proceeds while the metric stays
+    /// at or below `threshold × factor`. Bulk passes a factor below 1
+    /// (sheds first as pressure builds), critical a factor above 1
+    /// (sheds last).
+    pub fn admit_scaled(&self, factor: f64) -> bool {
+        (self.source)() <= self.threshold * factor
     }
 
     /// Current metric reading (for logs/metrics).
@@ -160,6 +182,41 @@ mod tests {
         }
         // 5 simulated seconds at 100 rps => ~500 admitted
         assert!((450..=551).contains(&admitted), "admitted {admitted}");
+    }
+
+    #[test]
+    fn reserving_acquire_limits_bulk_first() {
+        let clock = Clock::simulated();
+        let b = TokenBucket::new(10.0, 8, clock.clone());
+        // Drain to just above the reserve floor.
+        for _ in 0..5 {
+            assert!(b.try_acquire());
+        }
+        // 3 tokens left: a bulk acquire holding a 4-token reserve is
+        // refused while an unreserved (standard/critical) acquire passes.
+        assert!(!b.try_acquire_reserving(4.0), "bulk dipped into the reserve");
+        assert!(b.try_acquire_reserving(0.0));
+        // Refill restores bulk service.
+        clock.advance(Duration::from_secs(1));
+        assert!(b.try_acquire_reserving(4.0));
+    }
+
+    #[test]
+    fn zero_rps_ignores_reserve() {
+        let b = TokenBucket::new(0.0, 1, Clock::real());
+        assert!(b.try_acquire_reserving(1000.0));
+        assert!(b.burst() >= 1.0);
+    }
+
+    #[test]
+    fn pressure_gate_scaled_admits_by_priority_factor() {
+        let g = PressureGate::new(Box::new(|| 0.08), 0.05);
+        // 0.08 > 0.05: standard sheds...
+        assert!(!g.admit());
+        // ...bulk shed even earlier (0.5x threshold)...
+        assert!(!g.admit_scaled(0.5));
+        // ...critical rides out 2x the threshold.
+        assert!(g.admit_scaled(2.0));
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! ```text
 //!     supersonic serve    --config configs/quickstart.yaml [--duration 60]
 //!     supersonic check    --config configs/nrp.yaml
-//!     supersonic infer    --addr 127.0.0.1:8001 --model particlenet [--rows 8] [--count 10] [--token t]
-//!     supersonic loadtest --config configs/quickstart.yaml --schedule 1:30,10:60,1:30 [--rows 16]
+//!     supersonic infer    --addr 127.0.0.1:8001 --model particlenet [--rows 8] [--count 10] [--token t] [--priority critical]
+//!     supersonic loadtest --config configs/quickstart.yaml --schedule 1:30,10:60,1:30 [--rows 16] [--priority bulk]
 //!     supersonic token    --secret <deployment-secret>
 //! ```
 //!
@@ -85,8 +85,8 @@ fn print_usage() {
          USAGE:\n\
          \x20 supersonic serve    --config <yaml> [--duration <secs>]\n\
          \x20 supersonic check    --config <yaml>\n\
-         \x20 supersonic infer    --addr <host:port> --model <name> [--rows N] [--count N] [--token T]\n\
-         \x20 supersonic loadtest --config <yaml> --schedule C:S,C:S,... [--rows N] [--model NAME]\n\
+         \x20 supersonic infer    --addr <host:port> --model <name> [--rows N] [--count N] [--token T] [--priority bulk|standard|critical]\n\
+         \x20 supersonic loadtest --config <yaml> --schedule C:S,C:S,... [--rows N] [--model NAME] [--priority P]\n\
          \x20 supersonic token    --secret <secret>\n"
     );
 }
@@ -196,6 +196,9 @@ fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(token) = flags.get("token") {
         client = client.with_token(token);
     }
+    if let Some(p) = flags.get("priority") {
+        client = client.with_priority(supersonic::rpc::codec::Priority::parse(p)?);
+    }
 
     // Input shape from the local repository metadata if present, else
     // --shape d0,d1,...
@@ -280,6 +283,9 @@ fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
 
     let mut spec = WorkloadSpec::new(&model, rows, input_shape);
     spec.token = token;
+    if let Some(p) = flags.get("priority") {
+        spec.priority = supersonic::rpc::codec::Priority::parse(p)?;
+    }
     let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
     println!(
         "loadtest: model={model} rows/request={rows} schedule={schedule_spec} (clock time)"

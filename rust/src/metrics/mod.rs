@@ -30,6 +30,17 @@
 //!   each per-model scaling loop saw and the target it set;
 //! * `autoscaler_model_scale_ups_total` / `autoscaler_model_scale_downs_total`
 //!   — per-model scale events.
+//!
+//! Request-priority series (labelled `priority="bulk|standard|critical"`):
+//!
+//! * `priority_queue_depth` (per instance × priority) — queued requests
+//!   per admission lane;
+//! * `requests_shed_total` (per instance × priority) — batcher-level
+//!   sheds: ingress rejections plus shed-from-bulk evictions;
+//! * `batch_preemptions_total` (per instance) — higher-priority batches
+//!   served past older lower-priority work;
+//! * `gateway_shed_priority_total` — gateway-level sheds by resolved
+//!   priority class (rate limiter, pressure gate, overload).
 
 pub mod dashboard;
 pub mod exposition;

@@ -76,11 +76,24 @@ impl ModelRouter {
     /// when the model is outside the catalog, `Err(Overloaded)` when its
     /// pool has no routable replica.
     pub fn pick(&self, model: &str) -> Result<Arc<Instance>, Status> {
+        self.pick_excluding(model, None)
+    }
+
+    /// [`ModelRouter::pick`] skipping the replica named `exclude` — the
+    /// gateway's retry path, which must land on a *different* replica
+    /// than the one that just rejected the request (the rejecting
+    /// replica's queue is full or its pool entry is stale; re-picking it
+    /// would fail identically).
+    pub fn pick_excluding(
+        &self,
+        model: &str,
+        exclude: Option<&str>,
+    ) -> Result<Arc<Instance>, Status> {
         let Some(pool) = self.pools.get(model) else {
             return Err(Status::ModelNotFound);
         };
         pool.routed.inc();
-        match pool.lb.pick() {
+        match pool.lb.pick_excluding(exclude) {
             Some(inst) => Ok(inst),
             None => {
                 pool.unserved.inc();
@@ -253,6 +266,29 @@ mod tests {
         let r = router();
         assert!(matches!(r.pick("icecube_cnn"), Err(Status::Overloaded)));
         assert_eq!(r.unserved_count("icecube_cnn"), 1);
+    }
+
+    #[test]
+    fn pick_excluding_skips_rejecting_replica() {
+        let r = router();
+        let a = instance("px-a");
+        let b = instance("px-b");
+        r.sync(&[Arc::clone(&a), Arc::clone(&b)]);
+        // The retry path never re-picks the replica that just rejected.
+        for _ in 0..4 {
+            let picked = r.pick_excluding("icecube_cnn", Some(a.id.as_str())).unwrap();
+            assert_eq!(picked.id, b.id);
+        }
+        assert_eq!(r.pick_excluding("icecube_cnn", Some(b.id.as_str())).unwrap().id, a.id);
+        // A single-replica pool whose replica is excluded sheds instead
+        // of handing the rejecting instance straight back.
+        r.sync(&[Arc::clone(&a)]);
+        assert!(matches!(
+            r.pick_excluding("icecube_cnn", Some(a.id.as_str())),
+            Err(Status::Overloaded)
+        ));
+        a.stop();
+        b.stop();
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::codec::{self, InferRequest, InferResponse, RequestKind, Status};
+use super::codec::{self, InferRequest, InferResponse, Priority, RequestKind, Status};
 use crate::runtime::Tensor;
 
 static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
@@ -23,6 +23,9 @@ pub struct RpcClient {
     pub token: String,
     /// Trace id attached to every request (0 = untraced).
     pub trace_id: u64,
+    /// Priority class attached to every request (`None` lets the
+    /// gateway resolve the deployment's configured default).
+    pub priority: Option<Priority>,
 }
 
 impl RpcClient {
@@ -30,7 +33,7 @@ impl RpcClient {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, token: String::new(), trace_id: 0 })
+        Ok(RpcClient { stream, token: String::new(), trace_id: 0, priority: None })
     }
 
     /// Connect with a timeout.
@@ -40,12 +43,18 @@ impl RpcClient {
         let stream = TcpStream::connect_timeout(&sockaddr, timeout)
             .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, token: String::new(), trace_id: 0 })
+        Ok(RpcClient { stream, token: String::new(), trace_id: 0, priority: None })
     }
 
     /// Set the auth token used for subsequent requests.
     pub fn with_token(mut self, token: &str) -> Self {
         self.token = token.to_string();
+        self
+    }
+
+    /// Set the priority class used for subsequent requests.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = Some(priority);
         self
     }
 
@@ -58,9 +67,24 @@ impl RpcClient {
             trace_id: self.trace_id,
             token: self.token.clone(),
             model: model.to_string(),
+            priority: self.priority,
             input,
         };
         self.call(req)
+    }
+
+    /// [`RpcClient::infer`] with an explicit one-off priority class.
+    pub fn infer_prio(
+        &mut self,
+        model: &str,
+        input: Tensor,
+        priority: Priority,
+    ) -> Result<InferResponse> {
+        let prev = self.priority;
+        self.priority = Some(priority);
+        let out = self.infer(model, input);
+        self.priority = prev;
+        out
     }
 
     /// Issue a health probe; Ok(true) if the endpoint answers Ok.

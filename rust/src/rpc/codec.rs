@@ -19,6 +19,69 @@ pub enum RequestKind {
     Health = 2,
 }
 
+/// Request priority classes — Triton's dynamic-batcher priority levels
+/// (§2.1). Ordered: `Bulk < Standard < Critical`, so `Ord` compares
+/// urgency directly.
+///
+/// * `Critical` — latency-critical trigger-style inference: served
+///   first, never evicted by overload shedding.
+/// * `Standard` — the default; the pre-priority behavior.
+/// * `Bulk` — offline reprocessing: accumulates freely, sheds first at
+///   the gateway gate, and is evicted from a full queue before an
+///   incoming higher-priority request is rejected (shed-from-bulk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Bulk = 0,
+    #[default]
+    Standard = 1,
+    Critical = 2,
+}
+
+impl Priority {
+    /// Every priority class, lowest first. The config/doc sync tests
+    /// iterate this, so adding a lane without documenting it fails.
+    pub const ALL: &'static [Priority] =
+        &[Priority::Bulk, Priority::Standard, Priority::Critical];
+
+    /// Number of priority classes (the batcher's lane count).
+    pub const COUNT: usize = 3;
+
+    /// Lane index (0 = lowest priority).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Canonical config-file / metrics-label name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Bulk => "bulk",
+            Priority::Standard => "standard",
+            Priority::Critical => "critical",
+        }
+    }
+
+    /// Parse a config-file name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bulk" => Priority::Bulk,
+            "standard" => Priority::Standard,
+            "critical" => Priority::Critical,
+            other => bail!(
+                "unknown priority '{other}' (expected bulk, standard or critical)"
+            ),
+        })
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Priority::Bulk,
+            1 => Priority::Standard,
+            2 => Priority::Critical,
+            other => bail!("unknown priority {other}"),
+        })
+    }
+}
+
 impl RequestKind {
     fn from_u8(v: u8) -> Result<Self> {
         Ok(match v {
@@ -79,6 +142,11 @@ pub struct InferRequest {
     /// Auth token ("" when auth is disabled).
     pub token: String,
     pub model: String,
+    /// Requested priority class. `None` lets the gateway resolve one
+    /// from the deployment's `server.priorities` defaults (per token,
+    /// then per model, then the global default — `standard` out of the
+    /// box).
+    pub priority: Option<Priority>,
     pub input: Tensor,
 }
 
@@ -91,6 +159,7 @@ impl InferRequest {
             trace_id: 0,
             token: String::new(),
             model: model.to_string(),
+            priority: None,
             input,
         }
     }
@@ -103,6 +172,7 @@ impl InferRequest {
             trace_id: 0,
             token: String::new(),
             model: String::new(),
+            priority: None,
             input: Tensor::zeros(vec![0]),
         }
     }
@@ -264,6 +334,12 @@ pub fn encode_request(req: &InferRequest) -> Vec<u8> {
     out.extend_from_slice(&req.trace_id.to_le_bytes());
     put_str8(&mut out, &req.token);
     put_str8(&mut out, &req.model);
+    // Priority byte: 0 = unset (gateway resolves a default), else the
+    // class shifted by one so `Bulk` is distinguishable from unset.
+    out.push(match req.priority {
+        None => 0,
+        Some(p) => p as u8 + 1,
+    });
     put_tensor(&mut out, &req.input);
     out
 }
@@ -276,9 +352,13 @@ pub fn decode_request(buf: &[u8]) -> Result<InferRequest> {
     let trace_id = c.u64()?;
     let token = c.str8()?;
     let model = c.str8()?;
+    let priority = match c.u8()? {
+        0 => None,
+        b => Some(Priority::from_u8(b - 1)?),
+    };
     let input = get_tensor(&mut c)?;
     c.done()?;
-    Ok(InferRequest { kind, request_id, trace_id, token, model, input })
+    Ok(InferRequest { kind, request_id, trace_id, token, model, priority, input })
 }
 
 /// Encode a response payload (without frame header).
@@ -363,6 +443,42 @@ mod tests {
         let buf = encode_request(&req);
         let got = decode_request(&buf).unwrap();
         assert_eq!(got, req);
+    }
+
+    #[test]
+    fn priority_roundtrips_all_classes() {
+        // None (unset) and every explicit class survive the wire.
+        let mut req = InferRequest::infer(1, "m", sample_tensor());
+        assert_eq!(decode_request(&encode_request(&req)).unwrap().priority, None);
+        for &p in Priority::ALL {
+            req.priority = Some(p);
+            let got = decode_request(&encode_request(&req)).unwrap();
+            assert_eq!(got.priority, Some(p), "class {p:?}");
+            assert_eq!(got, req);
+        }
+    }
+
+    #[test]
+    fn bad_priority_byte_rejected() {
+        let req = InferRequest::infer(1, "m", sample_tensor());
+        let mut buf = encode_request(&req);
+        // kind(1) + request_id(8) + trace_id(8) + token("",1) + model("m",2)
+        let prio_off = 1 + 8 + 8 + 1 + 2;
+        assert_eq!(buf[prio_off], 0, "unset priority encodes as 0");
+        buf[prio_off] = 9;
+        assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn priority_names_and_order() {
+        for &p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Bulk < Priority::Standard);
+        assert!(Priority::Standard < Priority::Critical);
+        assert_eq!(Priority::ALL.len(), Priority::COUNT);
+        assert_eq!(Priority::default(), Priority::Standard);
     }
 
     #[test]

@@ -29,5 +29,5 @@ pub mod codec;
 pub mod server;
 
 pub use client::RpcClient;
-pub use codec::{InferRequest, InferResponse, RequestKind, Status};
+pub use codec::{InferRequest, InferResponse, Priority, RequestKind, Status};
 pub use server::RpcServer;

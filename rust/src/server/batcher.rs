@@ -1,31 +1,42 @@
 //! Dynamic batching queue — Triton's "dynamic_batching" policy (§2.1),
-//! with model-affinity admission.
+//! with model-affinity admission and request-priority lanes.
 //!
 //! Requests land in a per-instance [`BatchQueue`] that keeps one
-//! sub-queue per model (the per-(instance, model) admission groups), so
-//! a popped batch never interleaves models and a model's backlog is
-//! directly observable ([`BatchQueue::depth_for`] — the signal the
-//! placement controller folds into its demand estimate).
+//! sub-queue per (model, [`Priority`]) — the admission lanes. Batches
+//! never interleave models, a model's backlog is directly observable
+//! ([`BatchQueue::depth_for`] — the signal the placement controller
+//! folds into its demand estimate), and within a model the lanes order
+//! service by urgency: `critical` ahead of `standard` ahead of `bulk`.
 //!
-//! How the executor picks *which* model to serve is the
+//! How the executor picks *which* lane to serve is the
 //! [`BatchMode`](crate::config::BatchMode):
 //!
-//! * **`Affinity`** (default): serve any model whose head request has
-//!   outlived its batching window (deadline order, oldest first), else
-//!   any model whose accumulated rows reached the preferred batch (most
-//!   rows first), else sleep until the earliest deadline. A cold model's
-//!   half-empty window never blocks a hot model's ready batch.
+//! * **`Affinity`** (default): serve any lane whose head request has
+//!   outlived its batching window — higher priority first, then oldest
+//!   head; else any lane whose accumulated rows reached the preferred
+//!   batch — higher priority first, then most rows (a ready critical
+//!   batch preempts an accumulating bulk window); else sleep until the
+//!   earliest deadline. A cold model's half-empty window never blocks a
+//!   hot model's ready batch, and a bulk backlog never delays a
+//!   critical head past its own `max_queue_delay`.
 //! * **`Fifo`**: always serve the model of the globally oldest request,
-//!   waiting out that model's window first — strict arrival order, the
-//!   pre-affinity behavior, kept as the `warm_load_ablation` baseline.
+//!   waiting out that model's window first — strict arrival order,
+//!   priority-blind, kept as the ablation baseline.
 //!
-//! Within a model, requests are always served in arrival order, and both
-//! modes flush a head request no later than its `max_queue_delay`.
+//! Within a (model, priority) lane, requests are always served in
+//! arrival order, and every lane head is flushed no later than its
+//! `max_queue_delay` *subject to priority*: an expired higher-priority
+//! head anywhere in the queue is served first (under sustained critical
+//! saturation, bulk waits — that is the point of the lanes).
 //!
-//! The queue is also where overload protection lands: pushes beyond
-//! `capacity` (summed across models) are rejected so the gateway can
-//! shed load with an `Overloaded` status instead of building unbounded
-//! latency (§2.2).
+//! The queue is also where overload protection lands: admission is
+//! bounded by total queued **rows** (multi-row requests count their
+//! real weight, not one slot). A push over the bound first tries
+//! **shed-from-bulk**: the newest strictly-lower-priority requests are
+//! evicted (answered `Overloaded`) to make room, so an incoming
+//! critical request is never rejected while bulk work occupies the
+//! queue. Only when no lower-priority rows remain is the push itself
+//! rejected for the gateway to shed at ingress (§2.2).
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
@@ -33,7 +44,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::config::BatchMode;
-use crate::rpc::codec::Status;
+use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
 use crate::util::clock::{Clock, Nanos};
 
@@ -79,6 +90,8 @@ pub enum ExecOutcome {
 /// One queued request.
 pub struct Pending {
     pub model: String,
+    /// Admission lane within the model (shed order, service order).
+    pub priority: Priority,
     pub input: Tensor,
     pub enqueued: Nanos,
     pub trace_id: u64,
@@ -92,40 +105,88 @@ impl Pending {
     }
 }
 
-/// One model's admission group: requests in arrival order, tagged with a
-/// queue-global sequence number so `Fifo` mode can reconstruct the
-/// global arrival order across groups.
-struct Group {
+/// One (model, priority) admission lane: requests in arrival order,
+/// tagged with a queue-global sequence number so `Fifo` mode can
+/// reconstruct the global arrival order across lanes.
+struct Lane {
     queue: VecDeque<(u64, Pending)>,
     rows: usize,
 }
 
+impl Lane {
+    fn new() -> Self {
+        Lane { queue: VecDeque::new(), rows: 0 }
+    }
+}
+
+/// One model's admission group: one lane per priority class, indexed by
+/// [`Priority::index`] (0 = bulk .. 2 = critical).
+struct Group {
+    lanes: [Lane; Priority::COUNT],
+}
+
+impl Group {
+    fn new() -> Self {
+        Group { lanes: std::array::from_fn(|_| Lane::new()) }
+    }
+
+    /// Queued requests across lanes.
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.len()).sum()
+    }
+
+    /// Queued rows across lanes.
+    fn rows(&self) -> usize {
+        self.lanes.iter().map(|l| l.rows).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.queue.is_empty())
+    }
+
+    /// Lane index holding the globally oldest request of this group.
+    fn oldest_lane(&self) -> Option<usize> {
+        (0..Priority::COUNT)
+            .filter(|&i| !self.lanes[i].queue.is_empty())
+            .min_by_key(|&i| self.lanes[i].queue[0].0)
+    }
+}
+
 struct Inner {
     groups: BTreeMap<String, Group>,
-    /// Total queued requests across groups (the capacity bound).
+    /// Total queued requests across groups (the demand-signal depth).
     len: usize,
+    /// Total queued rows across groups (the admission bound).
+    rows: usize,
     next_seq: u64,
     draining: bool,
+    /// Times a higher-priority lane was served past an older
+    /// lower-priority request (the preemption counter).
+    preemptions: u64,
 }
 
 /// What the selection pass decided to do.
 enum Pick {
-    /// Serve this model now.
-    Serve(String),
+    /// Serve this model now; `lane` targets one priority lane
+    /// (`None` = priority-blind global arrival order, the `Fifo` path).
+    Serve { model: String, lane: Option<usize> },
     /// Nothing servable yet; earliest head deadline in clock nanos.
     WaitUntil(Nanos),
 }
 
-/// Bounded, condvar-signalled batch queue with per-model groups.
+/// Bounded, condvar-signalled batch queue with per-(model, priority)
+/// admission lanes.
 pub struct BatchQueue {
     inner: Mutex<Inner>,
     available: Condvar,
+    /// Admission bound in total queued rows (a single over-large request
+    /// is still admitted into an empty queue and pops alone).
     capacity: usize,
     mode: BatchMode,
 }
 
 impl BatchQueue {
-    /// Queue holding at most `capacity` requests, with the default
+    /// Queue holding at most `capacity` rows, with the default
     /// model-affinity admission.
     pub fn new(capacity: usize) -> Self {
         Self::with_mode(capacity, BatchMode::Affinity)
@@ -138,8 +199,10 @@ impl BatchQueue {
             inner: Mutex::new(Inner {
                 groups: BTreeMap::new(),
                 len: 0,
+                rows: 0,
                 next_seq: 0,
                 draining: false,
+                preemptions: 0,
             }),
             available: Condvar::new(),
             capacity,
@@ -147,29 +210,85 @@ impl BatchQueue {
         }
     }
 
-    /// Enqueue a request. Fails fast when full or draining.
-    pub fn push(&self, pending: Pending) -> Result<(), Pending> {
+    /// Enqueue a request.
+    ///
+    /// Success returns the requests evicted to make room (empty in the
+    /// common case): when the row bound is hit, the newest strictly
+    /// lower-priority requests are shed first (shed-from-bulk) — the
+    /// caller must answer each victim `Overloaded`. Fails fast when
+    /// draining, or when full and no lower-priority rows can be shed.
+    pub fn push(&self, pending: Pending) -> Result<Vec<Pending>, Pending> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.draining || inner.len >= self.capacity {
+        if inner.draining {
             return Err(pending);
+        }
+        let rows = pending.rows();
+        let mut evicted = Vec::new();
+        if inner.len > 0 && inner.rows + rows > self.capacity {
+            // Shed-from-bulk: can evicting strictly lower-priority
+            // requests (never equal-or-higher) make enough room?
+            let lane_cap = pending.priority.index();
+            let evictable: usize = inner
+                .groups
+                .values()
+                .flat_map(|g| g.lanes[..lane_cap].iter())
+                .map(|l| l.rows)
+                .sum();
+            if inner.rows + rows > self.capacity + evictable {
+                return Err(pending);
+            }
+            while inner.rows + rows > self.capacity {
+                // Victim: the newest (highest seq) lower-priority request.
+                let mut victim: Option<(u64, String, usize)> = None;
+                for (model, group) in &inner.groups {
+                    for (li, lane) in group.lanes[..lane_cap].iter().enumerate() {
+                        if let Some(&(seq, _)) = lane.queue.back() {
+                            if victim.as_ref().is_none_or(|v| seq > v.0) {
+                                victim = Some((seq, model.clone(), li));
+                            }
+                        }
+                    }
+                }
+                let Some((_, model, li)) = victim else {
+                    // Unreachable given the feasibility check above.
+                    break;
+                };
+                let group = inner.groups.get_mut(&model).expect("victim group exists");
+                let (_, p) = group.lanes[li].queue.pop_back().expect("victim exists");
+                let r = p.rows();
+                group.lanes[li].rows -= r;
+                if group.is_empty() {
+                    inner.groups.remove(&model);
+                }
+                inner.rows -= r;
+                inner.len -= 1;
+                evicted.push(p);
+            }
         }
         let seq = inner.next_seq;
         inner.next_seq += 1;
         inner.len += 1;
-        let rows = pending.rows();
+        inner.rows += rows;
+        let li = pending.priority.index();
         let group = inner
             .groups
             .entry(pending.model.clone())
-            .or_insert_with(|| Group { queue: VecDeque::new(), rows: 0 });
-        group.rows += rows;
-        group.queue.push_back((seq, pending));
+            .or_insert_with(Group::new);
+        group.lanes[li].rows += rows;
+        group.lanes[li].queue.push_back((seq, pending));
         self.available.notify_one();
-        Ok(())
+        Ok(evicted)
     }
 
-    /// Current queue depth (requests, all models).
+    /// Current queue depth (requests, all models and priorities — the
+    /// demand signal stays request-count-based).
     pub fn depth(&self) -> usize {
         self.inner.lock().unwrap().len
+    }
+
+    /// Current queued rows (what the admission bound counts).
+    pub fn rows_queued(&self) -> usize {
+        self.inner.lock().unwrap().rows
     }
 
     /// Queued requests for one model — the per-model backlog the
@@ -180,21 +299,45 @@ impl BatchQueue {
             .unwrap()
             .groups
             .get(model)
-            .map(|g| g.queue.len())
+            .map(|g| g.len())
             .unwrap_or(0)
     }
 
     /// Per-model depth snapshot under a single lock acquisition (the
     /// executor's gauge refresh — one `depth_for` per model would take
-    /// the hot-path mutex once per model per wakeup).
+    /// the hot-path mutex once per model per wakeup). Groups whose
+    /// queues emptied are dropped on pop, so no zero-depth rows linger
+    /// for models long since unloaded.
     pub fn depths(&self) -> Vec<(String, usize)> {
         self.inner
             .lock()
             .unwrap()
             .groups
             .iter()
-            .map(|(m, g)| (m.clone(), g.queue.len()))
+            .filter(|(_, g)| !g.is_empty())
+            .map(|(m, g)| (m.clone(), g.len()))
             .collect()
+    }
+
+    /// Queued requests per priority class across all models, indexed by
+    /// [`Priority::index`] — one lock acquisition for the per-priority
+    /// depth gauges.
+    pub fn priority_depths(&self) -> [usize; Priority::COUNT] {
+        let inner = self.inner.lock().unwrap();
+        let mut out = [0usize; Priority::COUNT];
+        for group in inner.groups.values() {
+            for (li, lane) in group.lanes.iter().enumerate() {
+                out[li] += lane.queue.len();
+            }
+        }
+        out
+    }
+
+    /// Times a higher-priority lane was served past an older queued
+    /// lower-priority request (monotonic; feeds
+    /// `batch_preemptions_total`).
+    pub fn preemptions(&self) -> u64 {
+        self.inner.lock().unwrap().preemptions
     }
 
     /// Mark draining: pushes fail, pops continue until empty.
@@ -209,59 +352,73 @@ impl BatchQueue {
         inner.draining && inner.len == 0
     }
 
-    /// Decide which model to serve, or how long to wait. `Draining`
-    /// flushes everything immediately (oldest head first).
+    /// Decide which lane to serve, or how long to wait. `Draining`
+    /// flushes everything immediately (priority order, then oldest
+    /// head).
     fn select<F>(&self, inner: &Inner, now: Nanos, policy_for: &F) -> Pick
     where
         F: Fn(&str) -> BatchPolicy,
     {
         if self.mode == BatchMode::Fifo && !inner.draining {
-            // Global arrival order: the model of the oldest request, held
-            // until its own target/deadline (head-of-line semantics).
-            let (model, head) = inner
+            // Global arrival order, priority-blind: the model of the
+            // oldest request, held until its own target/deadline
+            // (head-of-line semantics — the ablation baseline).
+            let (model, head_enq) = inner
                 .groups
                 .iter()
-                .filter_map(|(m, g)| g.queue.front().map(|(seq, p)| (m, (*seq, p.enqueued))))
-                .min_by_key(|&(_, (seq, _))| seq)
-                .map(|(m, (_, enq))| (m.clone(), enq))
+                .filter_map(|(m, g)| {
+                    g.oldest_lane()
+                        .map(|li| (m, g.lanes[li].queue[0].0, g.lanes[li].queue[0].1.enqueued))
+                })
+                .min_by_key(|&(_, seq, _)| seq)
+                .map(|(m, _, enq)| (m.clone(), enq))
                 .expect("select called with requests queued");
             let policy = policy_for(&model);
             let group = &inner.groups[&model];
             let target = policy.preferred_rows.min(policy.max_rows).max(1);
-            let deadline = head + policy.max_queue_delay.as_nanos() as Nanos;
-            if group.rows >= target || now >= deadline {
-                return Pick::Serve(model);
+            let deadline = head_enq + policy.max_queue_delay.as_nanos() as Nanos;
+            if group.rows() >= target || now >= deadline {
+                return Pick::Serve { model, lane: None };
             }
             return Pick::WaitUntil(deadline);
         }
 
-        // Affinity (and any draining flush): deadline-expired heads
-        // first, oldest head first — the latency bound holds per model.
-        let mut expired: Option<(Nanos, String)> = None;
-        let mut ready: Option<(usize, String)> = None;
+        // Affinity (and any draining flush): expired heads first —
+        // priority order, then oldest head — so the latency bound holds
+        // per lane and urgency wins ties across lanes.
+        let mut expired: Option<(usize, Nanos, String)> = None;
+        let mut ready: Option<(usize, usize, String)> = None;
         let mut earliest: Option<Nanos> = None;
         for (model, group) in &inner.groups {
-            let Some((_, head)) = group.queue.front() else { continue };
             let policy = policy_for(model);
             let target = policy.preferred_rows.min(policy.max_rows).max(1);
-            let deadline = head.enqueued + policy.max_queue_delay.as_nanos() as Nanos;
-            if inner.draining || now >= deadline {
-                if expired.as_ref().is_none_or(|(e, _)| head.enqueued < *e) {
-                    expired = Some((head.enqueued, model.clone()));
+            for (li, lane) in group.lanes.iter().enumerate().rev() {
+                let Some((_, head)) = lane.queue.front() else { continue };
+                let deadline = head.enqueued + policy.max_queue_delay.as_nanos() as Nanos;
+                if inner.draining || now >= deadline {
+                    let better = expired
+                        .as_ref()
+                        .is_none_or(|&(p, e, _)| li > p || (li == p && head.enqueued < e));
+                    if better {
+                        expired = Some((li, head.enqueued, model.clone()));
+                    }
+                } else if lane.rows >= target {
+                    let better = ready
+                        .as_ref()
+                        .is_none_or(|&(p, r, _)| li > p || (li == p && lane.rows > r));
+                    if better {
+                        ready = Some((li, lane.rows, model.clone()));
+                    }
+                } else if earliest.as_ref().is_none_or(|e| deadline < *e) {
+                    earliest = Some(deadline);
                 }
-            } else if group.rows >= target {
-                if ready.as_ref().is_none_or(|(r, _)| group.rows > *r) {
-                    ready = Some((group.rows, model.clone()));
-                }
-            } else if earliest.as_ref().is_none_or(|e| deadline < *e) {
-                earliest = Some(deadline);
             }
         }
-        if let Some((_, model)) = expired {
-            return Pick::Serve(model);
+        if let Some((lane, _, model)) = expired {
+            return Pick::Serve { model, lane: Some(lane) };
         }
-        if let Some((_, model)) = ready {
-            return Pick::Serve(model);
+        if let Some((lane, _, model)) = ready {
+            return Pick::Serve { model, lane: Some(lane) };
         }
         Pick::WaitUntil(earliest.expect("some non-empty group has no pick"))
     }
@@ -275,7 +432,11 @@ impl BatchQueue {
     ///
     /// The policy's `max_rows` caps the batch at the largest compiled
     /// engine batch. A single over-large request is returned alone (the
-    /// executor splits it across engine calls).
+    /// executor splits it across engine calls). An affinity pop drains
+    /// the selected priority lane in arrival order, then fills the
+    /// remaining row budget from the model's other lanes (highest
+    /// priority first) — lower-priority rows ride along for free, they
+    /// never displace the selected lane.
     pub fn pop_batch<F>(
         &self,
         clock: &Clock,
@@ -307,9 +468,9 @@ impl BatchQueue {
             }
         }
 
-        // Phase 2: pick a model, waiting out batching windows as the
+        // Phase 2: pick a lane, waiting out batching windows as the
         // mode dictates. New pushes re-run the selection.
-        let model = loop {
+        let (model, lane) = loop {
             if inner.len == 0 {
                 // Drained out from under us (defensive: single-consumer
                 // queues cannot shrink here, but the contract allows it).
@@ -325,7 +486,7 @@ impl BatchQueue {
             }
             let now = clock.now();
             match self.select(&inner, now, &policy_for) {
-                Pick::Serve(model) => break model,
+                Pick::Serve { model, lane } => break (model, lane),
                 Pick::WaitUntil(deadline) => {
                     // Convert the *clock-time* deadline into a bounded
                     // real-time wait; the cap re-checks under dilation.
@@ -337,36 +498,103 @@ impl BatchQueue {
             }
         };
 
-        // Phase 3: pop the model's requests in arrival order up to the
+        // Preemption bookkeeping (counted after the pop): serving this
+        // lane is a preemption only if an older, strictly-lower-priority
+        // request is STILL queued afterwards — lower-priority requests
+        // that ride along in the popped batch were not jumped.
+        let served = match lane {
+            Some(li) if !inner.draining && li > 0 => {
+                Some((li, inner.groups[&model].lanes[li].queue[0].0))
+            }
+            _ => None,
+        };
+
+        // Phase 3: pop the lane's requests in arrival order up to the
         // row budget. An oversized head goes alone.
         let policy = policy_for(&model);
         let max_rows = policy.max_rows.max(1);
         let group = inner.groups.get_mut(&model).expect("selected group exists");
         let mut batch = Vec::new();
         let mut rows = 0usize;
-        while let Some((_, p)) = group.queue.front() {
-            let r = p.rows();
-            if batch.is_empty() && r > max_rows {
-                batch.push(group.queue.pop_front().unwrap().1);
-                rows += r;
-                break;
+        match lane {
+            Some(li) => {
+                Self::take_from_lane(&mut group.lanes[li], &mut batch, &mut rows, max_rows);
+                // Top up from the model's other lanes, urgent first.
+                for (l2, lane2) in group.lanes.iter_mut().enumerate().rev() {
+                    if l2 != li {
+                        Self::take_from_lane(lane2, &mut batch, &mut rows, max_rows);
+                    }
+                }
             }
-            if rows + r > max_rows {
-                break;
+            None => {
+                // Fifo: global arrival order across the model's lanes.
+                loop {
+                    let Some(li) = group.oldest_lane() else { break };
+                    let r = group.lanes[li].queue[0].1.rows();
+                    if batch.is_empty() && r > max_rows {
+                        let (_, p) = group.lanes[li].queue.pop_front().unwrap();
+                        group.lanes[li].rows -= r;
+                        rows += r;
+                        batch.push(p);
+                        break;
+                    }
+                    if rows + r > max_rows {
+                        break;
+                    }
+                    let (_, p) = group.lanes[li].queue.pop_front().unwrap();
+                    group.lanes[li].rows -= r;
+                    rows += r;
+                    batch.push(p);
+                }
             }
-            rows += r;
-            batch.push(group.queue.pop_front().unwrap().1);
         }
-        group.rows -= rows.min(group.rows);
-        if group.queue.is_empty() {
+        if group.is_empty() {
             inner.groups.remove(&model);
         }
+        inner.rows -= rows.min(inner.rows);
         inner.len -= batch.len();
-        // The selected group always has a head and the first iteration
+        if let Some((li, served_seq)) = served {
+            let jumped = inner.groups.values().any(|g| {
+                g.lanes[..li]
+                    .iter()
+                    .any(|l| l.queue.front().is_some_and(|&(s, _)| s < served_seq))
+            });
+            if jumped {
+                inner.preemptions += 1;
+            }
+        }
+        // The selected lane always has a head and the first iteration
         // always takes it (an oversized head goes alone), so a selected
         // pop can never come back empty.
         debug_assert!(!batch.is_empty());
         Some(batch)
+    }
+
+    /// Move requests off `lane`'s front into `batch` while they fit the
+    /// row budget; an oversized head is taken alone into an empty batch.
+    fn take_from_lane(
+        lane: &mut Lane,
+        batch: &mut Vec<Pending>,
+        rows: &mut usize,
+        max_rows: usize,
+    ) {
+        while let Some((_, p)) = lane.queue.front() {
+            let r = p.rows();
+            if batch.is_empty() && r > max_rows {
+                let (_, p) = lane.queue.pop_front().unwrap();
+                lane.rows -= r;
+                *rows += r;
+                batch.push(p);
+                return;
+            }
+            if *rows + r > max_rows {
+                return;
+            }
+            let (_, p) = lane.queue.pop_front().unwrap();
+            lane.rows -= r;
+            *rows += r;
+            batch.push(p);
+        }
     }
 }
 
@@ -375,19 +603,30 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
-    fn pending(model: &str, rows: usize, clock: &Clock) -> (Pending, mpsc::Receiver<ExecOutcome>) {
+    fn pending_prio(
+        model: &str,
+        rows: usize,
+        priority: Priority,
+        trace_id: u64,
+        clock: &Clock,
+    ) -> (Pending, mpsc::Receiver<ExecOutcome>) {
         let (tx, rx) = mpsc::channel();
         let shape = vec![rows, 2];
         (
             Pending {
                 model: model.into(),
+                priority,
                 input: Tensor::zeros(shape),
                 enqueued: clock.now(),
-                trace_id: 0,
+                trace_id,
                 reply: tx,
             },
             rx,
         )
+    }
+
+    fn pending(model: &str, rows: usize, clock: &Clock) -> (Pending, mpsc::Receiver<ExecOutcome>) {
+        pending_prio(model, rows, Priority::Standard, 0, clock)
     }
 
     fn policy(delay_ms: u64, rows: usize, max_rows: usize) -> impl Fn(&str) -> BatchPolicy {
@@ -466,7 +705,7 @@ mod tests {
     #[test]
     fn oversized_request_pops_alone() {
         let clock = Clock::real();
-        let q = BatchQueue::new(64);
+        let q = BatchQueue::new(128);
         let (p, _rx) = pending("m", 100, &clock);
         q.push(p).map_err(|_| ()).unwrap();
         let (p2, _rx2) = pending("m", 1, &clock);
@@ -488,6 +727,50 @@ mod tests {
         assert!(q.push(p1).is_ok());
         assert!(q.push(p2).is_ok());
         assert!(q.push(p3).is_err());
+    }
+
+    /// Regression (overload-accounting bug): the bound must count rows,
+    /// not requests — a few multi-row requests used to sail past a
+    /// request-count check.
+    #[test]
+    fn capacity_bounds_rows_not_requests() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(16);
+        let (p1, _r1) = pending("m", 8, &clock);
+        let (p2, _r2) = pending("m", 8, &clock);
+        assert!(q.push(p1).is_ok());
+        assert!(q.push(p2).is_ok());
+        assert_eq!(q.rows_queued(), 16);
+        // Two requests is nowhere near 16 *requests*, but a third
+        // 8-row tensor would put 24 rows behind a 16-row bound.
+        let (p3, _r3) = pending("m", 8, &clock);
+        assert!(q.push(p3).is_err(), "multi-row push sailed past the row bound");
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.rows_queued(), 16);
+    }
+
+    /// Regression (leak): groups whose queues emptied must not linger in
+    /// `groups` (and `depths()` must not emit zero-depth rows for them).
+    #[test]
+    fn empty_groups_dropped_after_pop() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        for model in ["a", "b"] {
+            let (p, _rx) = pending(model, 1, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            let batch = q
+                .pop_batch(&clock, policy(1, 1, 16), Duration::from_millis(100))
+                .unwrap();
+            assert_eq!(batch.len(), 1);
+        }
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.depth_for("a"), 0);
+        assert_eq!(q.depth_for("b"), 0);
+        assert!(
+            q.depths().is_empty(),
+            "served models still emit depth rows: {:?}",
+            q.depths()
+        );
     }
 
     #[test]
@@ -636,5 +919,151 @@ mod tests {
             .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
             .unwrap();
         assert!(batch.iter().all(|p| p.model == "b"));
+    }
+
+    // ----- priority lanes -----
+
+    #[test]
+    fn expired_heads_served_in_priority_order() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        // bulk arrives first, critical second; both expire (1 ms window)
+        let (pb, _rb) = pending_prio("m", 1, Priority::Bulk, 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        let (pc, _rc) = pending_prio("m", 1, Priority::Critical, 2, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // one batch: the critical lane is selected, and the bulk request
+        // rides along in the same same-model batch (row budget permits),
+        // with the critical request first.
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].priority, Priority::Critical);
+        assert_eq!(batch[1].priority, Priority::Bulk);
+    }
+
+    #[test]
+    fn ready_critical_batch_preempts_accumulating_bulk_window() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        // bulk accumulating in a wide window, across a DIFFERENT model so
+        // it cannot ride along; critical fills its preferred batch.
+        let (pb, _rb) = pending_prio("bulkmodel", 2, Priority::Bulk, 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        let mut _rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = pending_prio("critmodel", 1, Priority::Critical, 10 + i, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, policy(200, 4, 16), Duration::from_millis(500))
+            .unwrap();
+        assert!(batch.iter().all(|p| p.model == "critmodel"), "bulk window won");
+        assert_eq!(batch.len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(100), "waited on bulk's window");
+        assert_eq!(q.preemptions(), 1, "preemption not counted");
+    }
+
+    #[test]
+    fn shed_from_bulk_admits_critical_when_full() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(4);
+        let mut _rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = pending_prio("m", 1, Priority::Bulk, i, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        assert_eq!(q.rows_queued(), 4);
+        // Queue full of bulk: a critical push evicts the NEWEST bulk
+        // request instead of being rejected at ingress.
+        let (pc, _rc) = pending_prio("m", 1, Priority::Critical, 99, &clock);
+        let evicted = q.push(pc).expect("critical rejected while bulk queued");
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].priority, Priority::Bulk);
+        assert_eq!(evicted[0].trace_id, 3, "evicted an older bulk request, not the newest");
+        assert_eq!(q.rows_queued(), 4);
+        assert_eq!(q.priority_depths(), [3, 0, 1]);
+    }
+
+    #[test]
+    fn shed_evicts_multiple_bulk_rows_for_wide_critical() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(8);
+        let mut _rxs = Vec::new();
+        for i in 0..4 {
+            let (p, rx) = pending_prio("m", 2, Priority::Bulk, i, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        // 4-row critical needs two 2-row bulk evictions; newest first.
+        let (pc, _rc) = pending_prio("m", 4, Priority::Critical, 99, &clock);
+        let evicted = q.push(pc).expect("critical rejected");
+        assert_eq!(evicted.len(), 2);
+        assert_eq!(evicted[0].trace_id, 3);
+        assert_eq!(evicted[1].trace_id, 2);
+        assert_eq!(q.rows_queued(), 8);
+    }
+
+    #[test]
+    fn shed_never_evicts_equal_or_higher_priority() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(2);
+        let (p1, _r1) = pending_prio("m", 1, Priority::Standard, 0, &clock);
+        let (p2, _r2) = pending_prio("m", 1, Priority::Critical, 1, &clock);
+        q.push(p1).map_err(|_| ()).unwrap();
+        q.push(p2).map_err(|_| ()).unwrap();
+        // standard incoming: may not evict standard (equal) or critical
+        let (p3, _r3) = pending_prio("m", 1, Priority::Standard, 2, &clock);
+        assert!(q.push(p3).is_err(), "evicted an equal-or-higher priority request");
+        // critical incoming: the standard entry is fair game, not the
+        // critical one
+        let (p4, _r4) = pending_prio("m", 1, Priority::Critical, 3, &clock);
+        let evicted = q.push(p4).expect("critical rejected");
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].priority, Priority::Standard);
+        assert_eq!(q.priority_depths(), [0, 0, 2]);
+    }
+
+    #[test]
+    fn fifo_mode_is_priority_blind() {
+        let clock = Clock::real();
+        let q = BatchQueue::with_mode(64, BatchMode::Fifo);
+        let (pb, _rb) = pending_prio("m", 1, Priority::Bulk, 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        let (pc, _rc) = pending_prio("m", 1, Priority::Critical, 2, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // global arrival order: the bulk request is first in the batch
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].trace_id, 1, "fifo reordered by priority");
+        assert_eq!(batch[1].trace_id, 2);
+        assert_eq!(q.preemptions(), 0);
+    }
+
+    #[test]
+    fn draining_flush_covers_all_lanes() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let mut _rxs = Vec::new();
+        for (prio, id) in [(Priority::Bulk, 1), (Priority::Critical, 2), (Priority::Standard, 3)]
+        {
+            let (p, rx) = pending_prio("m", 1, prio, id, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        q.drain();
+        let batch = q
+            .pop_batch(&clock, policy(5000, 64, 64), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(q.drained());
     }
 }

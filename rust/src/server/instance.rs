@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use crate::config::{BatchMode, ExecutionMode, ModelConfig, ServiceModelConfig};
 use crate::metrics::registry::{labels, Registry};
-use crate::rpc::codec::Status;
+use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
 use crate::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
 use crate::server::repository::ModelRepository;
@@ -133,12 +133,21 @@ pub struct Instance {
     /// Per-model queued-request gauges (the batcher backlog the
     /// placement demand signal consumes).
     m_queue_depth_model: HashMap<String, crate::metrics::registry::Gauge>,
+    /// Per-priority queued-request gauges, indexed by
+    /// [`Priority::index`].
+    m_queue_depth_priority: [crate::metrics::registry::Gauge; Priority::COUNT],
+    /// Per-priority shed counters (ingress rejections + shed-from-bulk
+    /// evictions), indexed by [`Priority::index`].
+    m_shed_priority: [crate::metrics::registry::Counter; Priority::COUNT],
+    /// Higher-priority batches served past older lower-priority work.
+    m_preemptions: crate::metrics::registry::Counter,
 }
 
 /// Tuning knobs for [`Instance::start_with_opts`] beyond the model list.
 #[derive(Clone, Debug)]
 pub struct InstanceOptions {
-    /// Overload-shedding bound on the batch queue (requests).
+    /// Overload-shedding bound on the batch queue, in total queued
+    /// rows (multi-row requests count their real weight).
     pub queue_capacity: usize,
     /// Utilization averaging window in clock seconds.
     pub util_window: f64,
@@ -254,6 +263,28 @@ impl Instance {
                 )
             })
             .collect();
+        let prio_gauge = |p: &Priority| {
+            registry2.gauge(
+                "priority_queue_depth",
+                &labels(&[("instance", id), ("priority", p.name())]),
+            )
+        };
+        let prio_shed = |p: &Priority| {
+            registry2.counter(
+                "requests_shed_total",
+                &labels(&[("instance", id), ("priority", p.name())]),
+            )
+        };
+        let m_queue_depth_priority = [
+            prio_gauge(&Priority::Bulk),
+            prio_gauge(&Priority::Standard),
+            prio_gauge(&Priority::Critical),
+        ];
+        let m_shed_priority = [
+            prio_shed(&Priority::Bulk),
+            prio_shed(&Priority::Standard),
+            prio_shed(&Priority::Critical),
+        ];
         let instance = Arc::new(Instance {
             id: id.to_string(),
             queue: Arc::new(BatchQueue::with_mode(opts.queue_capacity, opts.batch_mode)),
@@ -283,6 +314,9 @@ impl Instance {
             m_models_loading: registry2.gauge("models_loading", &inst_labels),
             m_memory_used: registry2.gauge("instance_memory_used_bytes", &inst_labels),
             m_queue_depth_model,
+            m_queue_depth_priority,
+            m_shed_priority,
+            m_preemptions: registry2.counter("batch_preemptions_total", &inst_labels),
         });
         instance.refresh_placement_gauges();
         let exec = Arc::clone(&instance);
@@ -492,13 +526,29 @@ impl Instance {
         self.loading_inflight.store(loading > 0, Ordering::Relaxed);
     }
 
-    /// Submit a request; returns a receiver for the outcome. On rejection
-    /// the input tensor is handed back with the status so the caller can
-    /// retry another instance without cloning (the gateway hot path).
+    /// [`Instance::submit_prio`] at the default `standard` priority.
     pub fn submit(
         self: &Arc<Self>,
         model: &str,
         input: Tensor,
+        trace_id: u64,
+    ) -> Result<mpsc::Receiver<ExecOutcome>, (Status, Tensor)> {
+        self.submit_prio(model, input, Priority::Standard, trace_id)
+    }
+
+    /// Submit a request; returns a receiver for the outcome. On rejection
+    /// the input tensor is handed back with the status so the caller can
+    /// retry another instance without cloning (the gateway hot path).
+    ///
+    /// `priority` selects the batcher admission lane. When the queue is
+    /// full, a higher-priority submit may evict queued lower-priority
+    /// requests (shed-from-bulk) — the victims are answered `Overloaded`
+    /// here, so their waiting gateway threads return immediately.
+    pub fn submit_prio(
+        self: &Arc<Self>,
+        model: &str,
+        input: Tensor,
+        priority: Priority,
         trace_id: u64,
     ) -> Result<mpsc::Receiver<ExecOutcome>, (Status, Tensor)> {
         if self.state() != InstanceState::Ready {
@@ -527,17 +577,34 @@ impl Instance {
         let (tx, rx) = mpsc::channel();
         let pending = Pending {
             model: model.to_string(),
+            priority,
             input,
             enqueued: self.clock.now(),
             trace_id,
             reply: tx,
         };
         match self.queue.push(pending) {
-            Ok(()) => {
+            Ok(evicted) => {
+                for victim in evicted {
+                    self.m_shed_priority[victim.priority.index()].inc();
+                    let _ = victim.reply.send(ExecOutcome::Err {
+                        status: Status::Overloaded,
+                        message: format!(
+                            "instance {} shed {} request for {}-priority admission",
+                            self.id,
+                            victim.priority.name(),
+                            priority.name()
+                        ),
+                    });
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                }
                 self.inflight.fetch_add(1, Ordering::SeqCst);
                 Ok(rx)
             }
-            Err(pending) => Err((Status::Overloaded, pending.input)),
+            Err(pending) => {
+                self.m_shed_priority[priority.index()].inc();
+                Err((Status::Overloaded, pending.input))
+            }
         }
     }
 
@@ -548,7 +615,18 @@ impl Instance {
         input: Tensor,
         trace_id: u64,
     ) -> ExecOutcome {
-        match self.submit(model, input, trace_id) {
+        self.submit_and_wait_prio(model, input, Priority::Standard, trace_id)
+    }
+
+    /// [`Instance::submit_and_wait`] with an explicit priority class.
+    pub fn submit_and_wait_prio(
+        self: &Arc<Self>,
+        model: &str,
+        input: Tensor,
+        priority: Priority,
+        trace_id: u64,
+    ) -> ExecOutcome {
+        match self.submit_prio(model, input, priority, trace_id) {
             Ok(rx) => rx.recv().unwrap_or(ExecOutcome::Err {
                 status: Status::Internal,
                 message: "executor dropped request".into(),
@@ -603,6 +681,7 @@ impl Instance {
     fn run(self: Arc<Self>) {
         let mut queue_lat_ewma = 0.0f64;
         let mut last_refresh = self.clock.now_secs();
+        let mut last_preemptions = 0u64;
         loop {
             let batch = self.queue.pop_batch(
                 &self.clock,
@@ -629,6 +708,18 @@ impl Instance {
                     .map(|&(_, d)| d)
                     .unwrap_or(0);
                 gauge.set(d as f64);
+            }
+            // Per-priority lane depths + the preemption counter delta
+            // (the batcher counts under its own lock; the executor
+            // mirrors it into the registry).
+            let prio_depths = self.queue.priority_depths();
+            for (gauge, d) in self.m_queue_depth_priority.iter().zip(prio_depths) {
+                gauge.set(d as f64);
+            }
+            let preemptions = self.queue.preemptions();
+            if preemptions > last_preemptions {
+                self.m_preemptions.add(preemptions - last_preemptions);
+                last_preemptions = preemptions;
             }
             // Loading -> warm transitions are clock-driven (no event
             // fires), so the serving-set gauges need a refresh while a
@@ -1116,6 +1207,62 @@ mod tests {
         assert!(!inst.is_loading("icecube_cnn"));
         assert_eq!(inst.serving_set(), Vec::<String>::new());
         assert_eq!(inst.memory_used(), 0);
+        inst.stop();
+    }
+
+    #[test]
+    fn shed_from_bulk_replies_overloaded_to_victim() {
+        // Slow simulated service keeps the executor busy while the
+        // 2-row queue fills with bulk work.
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(300),
+                per_row: Duration::from_micros(1),
+            },
+            load_delay: None,
+        }];
+        let inst = Instance::start_with_opts(
+            "prio0",
+            Arc::clone(&SIM_REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            InstanceOptions {
+                queue_capacity: 2,
+                exec_mode: ExecutionMode::Simulated,
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        let _busy = inst
+            .submit_prio("icecube_cnn", cnn_input(1), Priority::Bulk, 0)
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(80)); // executor picked it up
+        let _b1 = inst
+            .submit_prio("icecube_cnn", cnn_input(1), Priority::Bulk, 1)
+            .unwrap();
+        let victim_rx = inst
+            .submit_prio("icecube_cnn", cnn_input(1), Priority::Bulk, 2)
+            .unwrap();
+        // Queue now holds capacity rows: a critical submit evicts the
+        // newest bulk request instead of being rejected at ingress.
+        let crit_rx = inst
+            .submit_prio("icecube_cnn", cnn_input(1), Priority::Critical, 3)
+            .unwrap();
+        match victim_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(ExecOutcome::Err { status, message }) => {
+                assert_eq!(status, Status::Overloaded);
+                assert!(message.contains("shed"), "{message}");
+            }
+            other => panic!("victim not shed promptly: {other:?}"),
+        }
+        match crit_rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(ExecOutcome::Ok { .. }) => {}
+            other => panic!("critical not served: {other:?}"),
+        }
         inst.stop();
     }
 

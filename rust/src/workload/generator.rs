@@ -12,7 +12,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::rpc::client::RpcClient;
-use crate::rpc::codec::Status;
+use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
 use crate::util::clock::Clock;
 use crate::util::rng::Rng;
@@ -32,21 +32,32 @@ pub struct WorkloadSpec {
     pub input_shape: Vec<usize>,
     /// Auth token ("" when the gateway has auth disabled).
     pub token: String,
+    /// Priority class tagged onto every request of this stream (the
+    /// workload's priority mix: run several specs/entries at different
+    /// classes).
+    pub priority: Priority,
     /// Pause between a response and the next request, in clock time
     /// (zero = fully closed loop).
     pub think_time: Duration,
 }
 
 impl WorkloadSpec {
-    /// Spec with no think time and no token.
+    /// Spec with no think time, no token, `standard` priority.
     pub fn new(model: &str, batch_rows: usize, input_shape: Vec<usize>) -> Self {
         WorkloadSpec {
             model: model.to_string(),
             batch_rows,
             input_shape,
             token: String::new(),
+            priority: Priority::Standard,
             think_time: Duration::ZERO,
         }
+    }
+
+    /// Same spec, tagged with a priority class.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
     }
 
     fn request_tensor(&self) -> Tensor {
@@ -235,11 +246,27 @@ pub struct ModelStats {
     pub errors: u64,
 }
 
+/// Per-entry statistics from a mixed run — one row per [`MixEntry`], so
+/// streams sharing a model but differing in priority (or shape) stay
+/// separable, each with its own latency summary.
+#[derive(Clone, Debug)]
+pub struct EntryStats {
+    pub model: String,
+    pub priority: Priority,
+    pub ok: u64,
+    pub shed: u64,
+    pub errors: u64,
+    /// End-to-end latency of this entry's completed requests.
+    pub latency: Summary,
+}
+
 /// Statistics for a whole mixed run.
 #[derive(Clone, Debug)]
 pub struct MixedReport {
     /// Per-model outcome counts, keyed by model name.
     pub per_model: BTreeMap<String, ModelStats>,
+    /// Per-entry outcome counts + latency, in [`MixEntry`] order.
+    pub per_entry: Vec<EntryStats>,
     /// End-to-end latency across all models.
     pub overall_latency: Summary,
     /// Whole-run duration in clock seconds.
@@ -263,10 +290,17 @@ impl MixedReport {
     }
 }
 
+struct EntryCounters {
+    ok: AtomicU64,
+    shed: AtomicU64,
+    errors: AtomicU64,
+    latency: Mutex<Summary>,
+}
+
 struct MixCounters {
     latency: Mutex<Summary>,
-    /// One (ok, shed, errors) triple per mix entry.
-    per_entry: Vec<(AtomicU64, AtomicU64, AtomicU64)>,
+    /// One counter set per mix entry.
+    per_entry: Vec<EntryCounters>,
 }
 
 /// Skewed multi-model load generator: each closed-loop client picks the
@@ -327,7 +361,12 @@ impl MixedPool {
             per_entry: self
                 .entries
                 .iter()
-                .map(|_| (AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)))
+                .map(|_| EntryCounters {
+                    ok: AtomicU64::new(0),
+                    shed: AtomicU64::new(0),
+                    errors: AtomicU64::new(0),
+                    latency: Mutex::new(Summary::new()),
+                })
                 .collect(),
         });
 
@@ -360,17 +399,29 @@ impl MixedPool {
             }
         }
 
-        // Merge by model name: two entries may target the same model
-        // (e.g. the same model at different request shapes/weights).
+        // Per-entry rows first (priority-separable), then merged by
+        // model name: two entries may target the same model (e.g. the
+        // same model at different priorities or shapes).
+        let mut per_entry = Vec::with_capacity(self.entries.len());
         let mut per_model: BTreeMap<String, ModelStats> = BTreeMap::new();
-        for (e, (ok, shed, errors)) in self.entries.iter().zip(counters.per_entry.iter()) {
+        for (e, c) in self.entries.iter().zip(counters.per_entry.iter()) {
+            let entry = EntryStats {
+                model: e.spec.model.clone(),
+                priority: e.spec.priority,
+                ok: c.ok.load(Ordering::SeqCst),
+                shed: c.shed.load(Ordering::SeqCst),
+                errors: c.errors.load(Ordering::SeqCst),
+                latency: c.latency.lock().unwrap().clone(),
+            };
             let stats = per_model.entry(e.spec.model.clone()).or_default();
-            stats.ok += ok.load(Ordering::SeqCst);
-            stats.shed += shed.load(Ordering::SeqCst);
-            stats.errors += errors.load(Ordering::SeqCst);
+            stats.ok += entry.ok;
+            stats.shed += entry.shed;
+            stats.errors += entry.errors;
+            per_entry.push(entry);
         }
         MixedReport {
             per_model,
+            per_entry,
             overall_latency: counters.latency.lock().unwrap().clone(),
             duration: self.clock.now_secs() - run_start,
         }
@@ -410,29 +461,30 @@ fn mixed_client_loop(
             roll -= e.weight;
         }
         let entry = &entries[idx];
-        let (ok, shed, errors) = &counters.per_entry[idx];
+        let c = &counters.per_entry[idx];
 
         let t0 = clock.now_secs();
-        match client.infer(&entry.spec.model, inputs[idx].clone()) {
+        match client.infer_prio(&entry.spec.model, inputs[idx].clone(), entry.spec.priority) {
             Ok(resp) => match resp.status {
                 Status::Ok => {
                     let dt = clock.now_secs() - t0;
                     counters.latency.lock().unwrap().observe(dt);
-                    ok.fetch_add(1, Ordering::Relaxed);
+                    c.latency.lock().unwrap().observe(dt);
+                    c.ok.fetch_add(1, Ordering::Relaxed);
                 }
                 Status::RateLimited | Status::Overloaded => {
-                    shed.fetch_add(1, Ordering::Relaxed);
+                    c.shed.fetch_add(1, Ordering::Relaxed);
                     clock.sleep(Duration::from_millis(10));
                 }
                 _ => {
-                    errors.fetch_add(1, Ordering::Relaxed);
+                    c.errors.fetch_add(1, Ordering::Relaxed);
                 }
             },
             Err(_) => {
-                errors.fetch_add(1, Ordering::Relaxed);
+                c.errors.fetch_add(1, Ordering::Relaxed);
                 // reconnect with the pool's (shared) token
                 match RpcClient::connect(addr) {
-                    Ok(c) => client = c.with_token(&entries[0].spec.token),
+                    Ok(fresh) => client = fresh.with_token(&entries[0].spec.token),
                     Err(_) => std::thread::sleep(Duration::from_millis(20)),
                 }
             }
@@ -454,7 +506,7 @@ fn client_loop(
     // may bind a moment after the pool launches.
     let mut client = loop {
         match RpcClient::connect(addr) {
-            Ok(c) => break c.with_token(&spec.token),
+            Ok(c) => break c.with_token(&spec.token).with_priority(spec.priority),
             Err(_) if !stop.load(Ordering::SeqCst) => {
                 std::thread::sleep(Duration::from_millis(10));
             }
@@ -488,7 +540,7 @@ fn client_loop(
                 counters.errors.fetch_add(1, Ordering::Relaxed);
                 // transport error: reconnect
                 match RpcClient::connect(addr) {
-                    Ok(c) => client = c.with_token(&spec.token),
+                    Ok(c) => client = c.with_token(&spec.token).with_priority(spec.priority),
                     Err(_) => std::thread::sleep(Duration::from_millis(20)),
                 }
             }
@@ -652,6 +704,42 @@ mod tests {
         );
         assert_eq!(report.total_ok(), hot_stats.ok);
         assert!(report.duration > 0.0);
+        gateway.shutdown();
+        for i in instances {
+            i.stop();
+        }
+    }
+
+    #[test]
+    fn mixed_pool_separates_priority_streams() {
+        let (gateway, instances, clock) = stack(2);
+        let critical = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3])
+            .with_priority(Priority::Critical);
+        let bulk = WorkloadSpec::new("icecube_cnn", 4, vec![16, 16, 3])
+            .with_priority(Priority::Bulk);
+        let pool = MixedPool::new(
+            &gateway.addr().to_string(),
+            vec![
+                MixEntry { spec: critical, weight: 0.5 },
+                MixEntry { spec: bulk, weight: 0.5 },
+            ],
+            clock,
+            7,
+        );
+        let report = pool.run(&Schedule::constant(2, Duration::from_millis(400)));
+        // Same model, two priority streams: per_entry keeps them apart,
+        // each with its own latency summary.
+        assert_eq!(report.per_entry.len(), 2);
+        let crit = &report.per_entry[0];
+        let blk = &report.per_entry[1];
+        assert_eq!(crit.priority, Priority::Critical);
+        assert_eq!(blk.priority, Priority::Bulk);
+        assert!(crit.ok > 0, "critical stream never served");
+        assert!(blk.ok > 0, "bulk stream never served");
+        assert_eq!(crit.latency.count(), crit.ok);
+        assert_eq!(blk.latency.count(), blk.ok);
+        // The per-model merge still folds both streams into one row.
+        assert_eq!(report.per_model["icecube_cnn"].ok, crit.ok + blk.ok);
         gateway.shutdown();
         for i in instances {
             i.stop();

@@ -19,7 +19,7 @@ pub mod generator;
 pub mod schedule;
 
 pub use generator::{
-    ClientPool, MixEntry, MixedPool, MixedReport, ModelStats, PhaseReport, RunReport,
-    WorkloadSpec,
+    ClientPool, EntryStats, MixEntry, MixedPool, MixedReport, ModelStats, PhaseReport,
+    RunReport, WorkloadSpec,
 };
 pub use schedule::{Phase, Schedule};

@@ -66,6 +66,23 @@ fn every_bench_is_registered_in_cargo_and_make() {
 }
 
 #[test]
+fn config_doc_documents_every_priority_lane() {
+    // The priority classes are schema surface (values of
+    // `server.priorities.*`): a lane added to the enum without a
+    // CONFIG.md entry must fail `make docs-check`, exactly like an
+    // undocumented schema key.
+    let doc = read_doc("CONFIG.md");
+    for p in supersonic::rpc::codec::Priority::ALL {
+        assert!(
+            doc.contains(&format!("`{}`", p.name())),
+            "docs/CONFIG.md does not document priority lane '{}'; the \
+             server.priorities section must name every class",
+            p.name()
+        );
+    }
+}
+
+#[test]
 fn operations_doc_mentions_make_targets() {
     // The runbook must stay anchored to the real build entry points.
     let doc = read_doc("OPERATIONS.md");

@@ -37,6 +37,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
             queue_capacity: 128,
             util_window: 5.0,
             batch_mode: Default::default(),
+            priorities: Default::default(),
         },
         gateway: GatewayConfig::default(),
         autoscaler: AutoscalerConfig { enabled: false, max_replicas: 6, ..Default::default() },

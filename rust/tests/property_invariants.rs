@@ -10,7 +10,7 @@ use supersonic::metrics::Registry;
 use supersonic::modelmesh::ModelRouter;
 use supersonic::rpc::codec::{
     decode_request, decode_response, encode_request, encode_response, InferRequest,
-    InferResponse, Status,
+    InferResponse, Priority, Status,
 };
 use supersonic::runtime::Tensor;
 use supersonic::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
@@ -23,6 +23,7 @@ fn pending(model: &str, rows: usize, clock: &Clock) -> (Pending, mpsc::Receiver<
     (
         Pending {
             model: model.into(),
+            priority: Priority::Standard,
             input: Tensor::zeros(vec![rows, 2]),
             enqueued: clock.now(),
             trace_id: 0,
@@ -705,6 +706,150 @@ fn prop_scale_down_never_starves_a_model_while_redundancy_exists() {
                 *coverage.get_mut(m).unwrap() -= 1;
             }
             remaining.retain(|(n, _)| n != victim);
+        }
+    });
+}
+
+#[test]
+fn prop_priority_lanes_preserve_arrival_order_within_class() {
+    // Within a model, arrival order still holds WITHIN a priority class:
+    // across random interleavings of models, classes and row counts,
+    // every popped sequence is strictly increasing in arrival order per
+    // (model, priority) — the lanes reorder classes, never peers.
+    check("arrival order holds within a priority", 40, |g: &mut Gen| {
+        let clock = Clock::real();
+        let q = BatchQueue::new(4096);
+        let classes = [Priority::Bulk, Priority::Standard, Priority::Critical];
+        let models = ["a", "b"];
+        let mut rxs = Vec::new();
+        for i in 0..g.usize(1..=40) {
+            let model = *g.choose(&models);
+            let (mut p, rx) = pending(model, g.usize(1..=3), &clock);
+            p.priority = *g.choose(&classes);
+            p.trace_id = i as u64;
+            q.push(p).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let max_rows = g.usize(4..=16);
+        let mut last_seen: std::collections::BTreeMap<(String, usize), u64> =
+            std::collections::BTreeMap::new();
+        loop {
+            let batch = q.pop_batch(
+                &clock,
+                |_| BatchPolicy {
+                    max_queue_delay: Duration::from_millis(0),
+                    preferred_rows: max_rows,
+                    max_rows,
+                },
+                Duration::from_millis(10),
+            );
+            let Some(batch) = batch else { break };
+            let model = batch[0].model.clone();
+            assert!(batch.iter().all(|p| p.model == model), "mixed-model batch");
+            for p in &batch {
+                let key = (model.clone(), p.priority.index());
+                if let Some(&prev) = last_seen.get(&key) {
+                    assert!(
+                        p.trace_id > prev,
+                        "{}-priority request {} served after {} within model '{model}'",
+                        p.priority.name(),
+                        p.trace_id,
+                        prev
+                    );
+                }
+                last_seen.insert(key, p.trace_id);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_critical_head_never_waits_behind_lower_priority_backlog() {
+    // A critical request's max_queue_delay bound is never exceeded
+    // because of a lower-priority batch: with an expired lower-priority
+    // backlog longer than one batch ahead of it IN THE SAME MODEL, the
+    // critical request is still part of the very first pop.
+    check("critical head served in the first pop", 30, |g: &mut Gen| {
+        let clock = Clock::real();
+        let q = BatchQueue::new(4096);
+        let mut rxs = Vec::new();
+        // Lower-priority backlog well beyond one batch's row budget.
+        let max_rows = g.usize(4..=8);
+        let lower = [Priority::Bulk, Priority::Standard];
+        for i in 0..g.usize(6..=20) {
+            let (mut p, rx) = pending("m", g.usize(2..=4), &clock);
+            p.priority = *g.choose(&lower);
+            p.trace_id = i as u64;
+            q.push(p).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let (mut pc, _rc) = pending("m", 1, &clock);
+        pc.priority = Priority::Critical;
+        pc.trace_id = 999;
+        q.push(pc).map_err(|_| ()).unwrap();
+        // Everything expires (5 ms window), so a priority-blind batcher
+        // would drain the backlog in arrival order across several pops
+        // before reaching the critical request.
+        std::thread::sleep(Duration::from_millis(10));
+        let batch = q
+            .pop_batch(
+                &clock,
+                |_| BatchPolicy {
+                    max_queue_delay: Duration::from_millis(5),
+                    preferred_rows: max_rows,
+                    max_rows,
+                },
+                Duration::from_millis(200),
+            )
+            .unwrap();
+        assert_eq!(
+            batch[0].trace_id, 999,
+            "critical request waited behind a lower-priority batch"
+        );
+    });
+}
+
+#[test]
+fn prop_shed_from_bulk_never_evicts_equal_or_higher_priority() {
+    // Overload eviction only ever removes STRICTLY lower-priority
+    // requests than the incoming one, and the row bound holds after
+    // every successful push.
+    check("shed-from-bulk evicts only lower classes", 60, |g: &mut Gen| {
+        let clock = Clock::real();
+        let capacity = g.usize(4..=12);
+        let q = BatchQueue::new(capacity);
+        let classes = [Priority::Bulk, Priority::Standard, Priority::Critical];
+        let models = ["a", "b"];
+        let mut rxs = Vec::new();
+        for i in 0..g.usize(5..=30) {
+            let model = *g.choose(&models);
+            let (mut p, rx) = pending(model, g.usize(1..=3), &clock);
+            let incoming = *g.choose(&classes);
+            p.priority = incoming;
+            p.trace_id = i as u64;
+            match q.push(p) {
+                Ok(evicted) => {
+                    for victim in &evicted {
+                        assert!(
+                            victim.priority < incoming,
+                            "{}-priority push evicted a {}-priority request",
+                            incoming.name(),
+                            victim.priority.name()
+                        );
+                    }
+                    assert!(
+                        q.rows_queued() <= capacity,
+                        "row bound violated after admission: {} > {capacity}",
+                        q.rows_queued()
+                    );
+                }
+                Err(_) => {
+                    // Rejection is only legal when the incoming request
+                    // could not fit even after shedding every strictly
+                    // lower-priority row.
+                }
+            }
+            rxs.push(rx);
         }
     });
 }
