@@ -6,13 +6,14 @@
 #   make test        — tier-1 test suite
 #   make bench       — run every bench binary
 #   make bench-priority — the priority-lanes ablation only
+#   make bench-backend  — the multi-backend heterogeneity ablation only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
 #                      OPERATIONS.md bench coverage)
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts build test bench bench-priority docs-check
+.PHONY: artifacts build test bench bench-priority bench-backend docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -27,11 +28,14 @@ bench:
 	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
 		modelmesh_ablation per_model_autoscale warm_load_ablation \
-		priority_ablation; do \
+		priority_ablation backend_ablation; do \
 		cargo bench --bench $$b; done
 
 bench-priority:
 	cd rust && cargo bench --bench priority_ablation
+
+bench-backend:
+	cd rust && cargo bench --bench backend_ablation
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,155 @@
+//! Backend ablation — homogeneous-GPU fleet vs a mixed CPU+GPU fleet at
+//! an EQUAL four-pod budget under skewed two-model traffic.
+//!
+//! Setup (see `experiments::backend_config`): the hot `particlenet`
+//! runs anywhere (pjrt preferred, onnx-sim fallback); the cold-but-
+//! constant `icecube_cnn` is a cheap **CPU-only** model
+//! (`backends: [onnx-sim]`) — the classic auxiliary model no GPU engine
+//! exists for. Traffic is 70/30 hot/cold.
+//!
+//! What the arms show:
+//!
+//! * **`backend-gpu-only`** (4 GPU pods) — the backend-locked fleet
+//!   cannot place the CPU-only model at all: its pool stays empty, its
+//!   whole stream is shed, and `model_backend_replicas` reads zero for
+//!   it (the "model stuck unplaceable" runbook symptom).
+//! * **`backend-mixed-1cpu`** (3 GPU + 1 CPU pod) — the heterogeneous
+//!   fleet serves both: the CPU pod hosts the CPU-only model, and the
+//!   hot model is boot-placed onto it too via an onnx-sim *fallback*
+//!   (pjrt has no capacity on a CPU pod), counted in
+//!   `backend_fallback_total`.
+//!
+//! The headline assertion: at the same pod budget, the mixed fleet
+//! serves strictly MORE total requests than the homogeneous fleet —
+//! offloading the cold/cheap model to CPU backends costs one GPU pod
+//! and buys the whole shed stream back — with at least one backend
+//! fallback recorded.
+//!
+//! Run: `cargo bench --bench backend_ablation` (or `make bench-backend`)
+
+use std::time::Duration;
+
+use supersonic::deployment::Deployment;
+use supersonic::experiments::{backend_config, backend_workload};
+use supersonic::util::bench::{Csv, Table};
+use supersonic::workload::Schedule;
+
+const PHASE: Duration = Duration::from_secs(40);
+const CLIENTS: usize = 12;
+
+struct Row {
+    label: String,
+    ok: u64,
+    hot_ok: u64,
+    cold_ok: u64,
+    cold_shed_err: u64,
+    fallbacks: f64,
+    latency_ms: f64,
+}
+
+fn run_arm(cpu_pods: usize, time_scale: f64) -> anyhow::Result<Row> {
+    let cfg = backend_config(time_scale, cpu_pods);
+    let label = cfg.name.clone();
+    let d = Deployment::up(cfg)?;
+    anyhow::ensure!(d.wait_ready(4, Duration::from_secs(60)), "fleet not ready");
+    let pool = backend_workload(&d.endpoint(), d.clock.clone());
+    let report = pool.run(&Schedule::constant(CLIENTS, PHASE));
+    let hot = &report.per_model["particlenet"];
+    let cold = &report.per_model["icecube_cnn"];
+    let row = Row {
+        label,
+        ok: report.total_ok(),
+        hot_ok: hot.ok,
+        cold_ok: cold.ok,
+        cold_shed_err: cold.shed + cold.errors,
+        fallbacks: d.store.sum_latest_prefix("backend_fallback_total"),
+        latency_ms: report.overall_latency.mean() * 1e3,
+    };
+    d.down();
+    Ok(row)
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== backend ablation: homogeneous GPU vs mixed CPU+GPU, equal 4-pod budget ==");
+    let time_scale = 10.0;
+    println!(
+        "{CLIENTS} clients, 70% GPU-capable hot model / 30% CPU-only cold model, \
+         {}s clock per arm (time_scale {time_scale}x)\n",
+        PHASE.as_secs(),
+    );
+
+    let gpu_only = run_arm(0, time_scale)?;
+    eprintln!("{} done ({} ok)", gpu_only.label, gpu_only.ok);
+    let mixed = run_arm(1, time_scale)?;
+    eprintln!("{} done ({} ok)", mixed.label, mixed.ok);
+
+    let mut table = Table::new(&[
+        "arm", "ok", "hot ok", "cold ok", "cold shed+err", "fallbacks",
+        "mean latency (ms)",
+    ]);
+    let mut csv = Csv::new(&[
+        "arm", "ok", "hot_ok", "cold_ok", "cold_shed_err", "fallbacks",
+        "mean_latency_ms",
+    ]);
+    for r in [&gpu_only, &mixed] {
+        table.row(&[
+            r.label.clone(),
+            r.ok.to_string(),
+            r.hot_ok.to_string(),
+            r.cold_ok.to_string(),
+            r.cold_shed_err.to_string(),
+            format!("{:.0}", r.fallbacks),
+            format!("{:.1}", r.latency_ms),
+        ]);
+        csv.row(&[
+            r.label.clone(),
+            r.ok.to_string(),
+            r.hot_ok.to_string(),
+            r.cold_ok.to_string(),
+            r.cold_shed_err.to_string(),
+            format!("{:.0}", r.fallbacks),
+            format!("{:.2}", r.latency_ms),
+        ]);
+    }
+    println!("{}", table.render());
+    let path = csv.save("backend_ablation")?;
+    println!("CSV: {}", path.display());
+
+    println!("\nchecks (equal 4-pod budget, identical traffic):");
+    println!(
+        "  total ok: gpu-only {} vs mixed {}",
+        gpu_only.ok, mixed.ok
+    );
+    println!(
+        "  cold stream: gpu-only {} ok / {} shed+err vs mixed {} ok ({:.0} fallbacks)",
+        gpu_only.cold_ok, gpu_only.cold_shed_err, mixed.cold_ok, mixed.fallbacks
+    );
+    // The homogeneous fleet must demonstrate the failure mode: the
+    // CPU-only model is unplaceable there, so nothing is ever served.
+    assert_eq!(
+        gpu_only.cold_ok, 0,
+        "gpu-only arm served a CPU-only model — the compatibility filter leaked"
+    );
+    assert!(
+        gpu_only.cold_shed_err > 0,
+        "cold stream produced no traffic in the gpu-only arm"
+    );
+    // The mixed fleet actually used its heterogeneity: the CPU-only
+    // model served, and at least one backend fallback was recorded
+    // (the hot model landing on a CPU pod via onnx-sim).
+    assert!(mixed.cold_ok > 0, "mixed arm never served the CPU-only model");
+    assert!(
+        mixed.fallbacks >= 1.0,
+        "no backend-fallback event counted in the mixed arm"
+    );
+    // The headline: heterogeneity wins at an equal pod budget.
+    assert!(
+        mixed.ok > gpu_only.ok,
+        "mixed CPU+GPU fleet should serve strictly more than homogeneous GPU at an \
+         equal pod budget (mixed {} vs gpu-only {})",
+        mixed.ok,
+        gpu_only.ok
+    );
+    Ok(())
+}

@@ -42,6 +42,7 @@ fn instance(
                 per_row: Duration::from_micros(per_row_us),
             },
             load_delay: None,
+            backends: Vec::new(),
         }],
         clock.clone(),
         registry.clone(),

@@ -11,9 +11,9 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, ExecutionMode,
-    GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig, MonitoringConfig,
-    PerModelScalingConfig, PlacementPolicy, PriorityConfig, ServerConfig,
-    ServiceModelConfig,
+    AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, EnginesConfig,
+    ExecutionMode, GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig,
+    MonitoringConfig, PerModelScalingConfig, PlacementPolicy, PriorityConfig,
+    ServerConfig, ServiceModelConfig,
 };
 pub use yaml::Value;

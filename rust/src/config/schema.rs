@@ -17,6 +17,13 @@ use anyhow::{bail, Context, Result};
 use super::yaml::{self, Value};
 use crate::rpc::codec::Priority;
 
+/// Wire/config names of every known inference backend, preference-list
+/// order-independent. The single source of truth shared by config
+/// validation (`server.models[].backends`, `engines.default_backend`),
+/// the engine registry ([`crate::engine::BackendRegistry`]) and the
+/// per-(model, backend) metrics label sets.
+pub const BACKEND_NAMES: &[&str] = &["pjrt", "onnx-sim"];
+
 /// Load-balancing policies the gateway supports (Envoy's menu, §2.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LbPolicy {
@@ -166,6 +173,12 @@ pub struct ModelConfig {
     /// time a placement load of this model spends in `Loading` before the
     /// replica turns warm. `None` inherits the global default.
     pub load_delay: Option<Duration>,
+    /// Backend preference list for this model (see [`BACKEND_NAMES`]).
+    /// Empty = the default preference (`engines.default_backend` first,
+    /// then every other known backend). A non-empty list is exclusive:
+    /// the model is *only* ever served by the named backends, so e.g.
+    /// `backends: [onnx-sim]` pins a model to CPU-capable pods.
+    pub backends: Vec<String>,
 }
 
 /// Request-priority policy (`server.priorities`) — Triton's
@@ -200,6 +213,12 @@ pub struct PriorityConfig {
     /// Pressure-gate scaling for critical: critical is admitted up to
     /// `factor × threshold` (≥ 1, so critical sheds last).
     pub critical_pressure_factor: f64,
+    /// Anti-starvation aging bound for the batcher's priority-first
+    /// selection: a below-critical lane whose head has waited longer
+    /// than this is promoted to the front of the next pop (once — it is
+    /// served), so sustained critical saturation cannot starve bulk
+    /// forever. Zero disables aging (the pure-priority PR-4 behavior).
+    pub max_bulk_wait: Duration,
 }
 
 impl Default for PriorityConfig {
@@ -211,6 +230,7 @@ impl Default for PriorityConfig {
             bulk_reserve: 0.25,
             bulk_pressure_factor: 0.5,
             critical_pressure_factor: 2.0,
+            max_bulk_wait: Duration::ZERO,
         }
     }
 }
@@ -436,6 +456,52 @@ impl ModelPlacementConfig {
     }
 }
 
+/// Multi-backend engine section (`engines`) — the pluggable runtime
+/// layer (Triton's TensorRT / ONNX Runtime backend menu, the paper's
+/// "different backends and coprocessor types" portability claim).
+///
+/// Two backends exist: `pjrt` (the compiled-artifact runtime; GPU-class
+/// pods only) and `onnx-sim` (a deterministic simulated CPU-capable
+/// second runtime with its own cost model). Each served model resolves
+/// a backend *preference list* — `server.models[].backends` when set,
+/// else `default_backend` followed by every other backend — and an
+/// instance serves the model on the first preferred backend its
+/// accelerator class supports (anything later is a *fallback*, counted
+/// in `backend_fallback_total`). `cpu_replicas` boots CPU-class pods
+/// next to the GPU fleet, turning the deployment heterogeneous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnginesConfig {
+    /// Backend preferred by models that list none (see [`BACKEND_NAMES`]).
+    pub default_backend: String,
+    /// CPU-class pods booted alongside the GPU fleet. They advertise
+    /// only CPU-capable backends, so they serve exactly the models
+    /// whose preference list includes one. Requires the modelmesh
+    /// (routing must follow advertised labels on a split fleet).
+    pub cpu_replicas: usize,
+    /// onnx-sim latency multiplier over the model's calibrated GPU
+    /// service model (CPU inference is slower). Must be > 0.
+    pub onnx_slowdown: f64,
+    /// onnx-sim warm-load delay multiplier (session init vs engine
+    /// build). Must be > 0.
+    pub onnx_load_multiplier: f64,
+    /// onnx-sim memory-footprint multiplier. Must be in (0, 1]: the
+    /// placement planner budgets with the unscaled footprint, so a
+    /// multiplier above 1 could overcommit an instance's memory.
+    pub onnx_memory_multiplier: f64,
+}
+
+impl Default for EnginesConfig {
+    fn default() -> Self {
+        EnginesConfig {
+            default_backend: "pjrt".into(),
+            cpu_replicas: 0,
+            onnx_slowdown: 4.0,
+            onnx_load_multiplier: 0.5,
+            onnx_memory_multiplier: 1.0,
+        }
+    }
+}
+
 /// Cluster substrate section (Kubernetes analogue).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -477,6 +543,8 @@ pub struct DeploymentConfig {
     pub monitoring: MonitoringConfig,
     /// Model placement / model-aware routing (the modelmesh).
     pub model_placement: ModelPlacementConfig,
+    /// Multi-backend engine layer (backend preferences, CPU fleet).
+    pub engines: EnginesConfig,
     /// Wall-clock dilation factor for experiments (1.0 = real time). See
     /// `util::clock`.
     pub time_scale: f64,
@@ -490,6 +558,7 @@ impl Default for ModelConfig {
             preferred_batch: 8,
             service_model: ServiceModelConfig::default(),
             load_delay: None,
+            backends: Vec::new(),
         }
     }
 }
@@ -591,6 +660,7 @@ impl Default for DeploymentConfig {
             cluster: ClusterConfig::default(),
             monitoring: MonitoringConfig::default(),
             model_placement: ModelPlacementConfig::default(),
+            engines: EnginesConfig::default(),
             time_scale: 1.0,
         }
     }
@@ -604,7 +674,7 @@ pub mod keys {
     /// Top-level sections.
     pub const ROOT: &[&str] = &[
         "name", "server", "gateway", "autoscaler", "cluster", "monitoring",
-        "model_placement", "time_scale",
+        "model_placement", "engines", "time_scale",
     ];
     /// `server` section.
     pub const SERVER: &[&str] = &[
@@ -614,11 +684,13 @@ pub mod keys {
     /// `server.priorities` subsection.
     pub const PRIORITIES: &[&str] = &[
         "default", "models", "tokens", "bulk_reserve", "bulk_pressure_factor",
-        "critical_pressure_factor",
+        "critical_pressure_factor", "max_bulk_wait",
     ];
     /// `server.models[]` entries.
-    pub const SERVER_MODEL: &[&str] =
-        &["name", "max_queue_delay", "preferred_batch", "service_model", "load_delay"];
+    pub const SERVER_MODEL: &[&str] = &[
+        "name", "max_queue_delay", "preferred_batch", "service_model", "load_delay",
+        "backends",
+    ];
     /// `server.models[].service_model`.
     pub const SERVICE_MODEL: &[&str] = &["base", "per_row"];
     /// `gateway` section.
@@ -647,6 +719,11 @@ pub mod keys {
         "policy", "memory_budget_mb", "load_threshold", "unload_threshold",
         "cooldown", "demand_window", "min_replicas_per_model", "load_delay",
     ];
+    /// `engines` section (the multi-backend layer).
+    pub const ENGINES: &[&str] = &[
+        "default_backend", "cpu_replicas", "onnx_slowdown", "onnx_load_multiplier",
+        "onnx_memory_multiplier",
+    ];
     /// Every (section, allowed keys) pair, for exhaustive iteration.
     pub const SECTIONS: &[(&str, &[&str])] = &[
         ("<root>", ROOT),
@@ -660,6 +737,7 @@ pub mod keys {
         ("cluster", CLUSTER),
         ("monitoring", MONITORING),
         ("model_placement", MODEL_PLACEMENT),
+        ("engines", ENGINES),
     ];
 }
 
@@ -800,12 +878,26 @@ impl DeploymentConfig {
                         None => None,
                         Some(_) => Some(get_duration(item, "load_delay", Duration::ZERO)?),
                     };
+                    let backends = match item.get("backends") {
+                        None => Vec::new(),
+                        Some(list) => list
+                            .as_seq()
+                            .context("'server.models[].backends' must be a sequence")?
+                            .iter()
+                            .map(|b| {
+                                b.as_str()
+                                    .context("'backends' entries must be backend names")
+                                    .map(String::from)
+                            })
+                            .collect::<Result<_>>()?,
+                    };
                     models.push(ModelConfig {
                         name: get_str(item, "name", "")?,
                         max_queue_delay: get_duration(item, "max_queue_delay", dm.max_queue_delay)?,
                         preferred_batch: get_usize(item, "preferred_batch", dm.preferred_batch)?,
                         service_model,
                         load_delay,
+                        backends,
                     });
                 }
                 models
@@ -851,6 +943,7 @@ impl DeploymentConfig {
                 "critical_pressure_factor",
                 d.server.priorities.critical_pressure_factor,
             )?,
+            max_bulk_wait: get_duration(pr, "max_bulk_wait", d.server.priorities.max_bulk_wait)?,
         };
         let server = ServerConfig {
             replicas: get_usize(sv, "replicas", d.server.replicas)?,
@@ -967,6 +1060,24 @@ impl DeploymentConfig {
             load_delay: get_duration(mp, "load_delay", d.model_placement.load_delay)?,
         };
 
+        let eg = root.get("engines").unwrap_or(&empty);
+        check_keys(eg, keys::ENGINES, "engines")?;
+        let engines = EnginesConfig {
+            default_backend: get_str(eg, "default_backend", &d.engines.default_backend)?,
+            cpu_replicas: get_usize(eg, "cpu_replicas", d.engines.cpu_replicas)?,
+            onnx_slowdown: get_f64(eg, "onnx_slowdown", d.engines.onnx_slowdown)?,
+            onnx_load_multiplier: get_f64(
+                eg,
+                "onnx_load_multiplier",
+                d.engines.onnx_load_multiplier,
+            )?,
+            onnx_memory_multiplier: get_f64(
+                eg,
+                "onnx_memory_multiplier",
+                d.engines.onnx_memory_multiplier,
+            )?,
+        };
+
         let cfg = DeploymentConfig {
             name,
             server,
@@ -975,6 +1086,7 @@ impl DeploymentConfig {
             cluster,
             monitoring,
             model_placement,
+            engines,
             time_scale,
         };
         cfg.validate()?;
@@ -1033,6 +1145,85 @@ impl DeploymentConfig {
         for m in &self.server.models {
             if m.service_model.service_secs(1) <= 0.0 {
                 bail!("model '{}' service_model must have positive service time", m.name);
+            }
+        }
+        // Multi-backend engine layer.
+        let eg = &self.engines;
+        if !BACKEND_NAMES.contains(&eg.default_backend.as_str()) {
+            bail!(
+                "engines.default_backend '{}' is not a known backend (expected one of: {})",
+                eg.default_backend,
+                BACKEND_NAMES.join(", ")
+            );
+        }
+        if eg.onnx_slowdown <= 0.0 {
+            bail!("engines.onnx_slowdown must be > 0");
+        }
+        if eg.onnx_load_multiplier <= 0.0 {
+            bail!("engines.onnx_load_multiplier must be > 0");
+        }
+        if !(eg.onnx_memory_multiplier > 0.0 && eg.onnx_memory_multiplier <= 1.0) {
+            bail!(
+                "engines.onnx_memory_multiplier must be in (0, 1]: the placement \
+                 planner budgets with the unscaled footprint, so a multiplier above 1 \
+                 could overcommit instance memory"
+            );
+        }
+        for m in &self.server.models {
+            let mut seen = std::collections::BTreeSet::new();
+            for b in &m.backends {
+                if !BACKEND_NAMES.contains(&b.as_str()) {
+                    bail!(
+                        "model '{}' names unknown backend '{}' (expected one of: {})",
+                        m.name,
+                        b,
+                        BACKEND_NAMES.join(", ")
+                    );
+                }
+                if !seen.insert(b.as_str()) {
+                    bail!("model '{}' lists backend '{}' twice", m.name, b);
+                }
+            }
+            // A model that cannot run on pjrt is invisible to GPU-class
+            // pods; without the modelmesh router the single global
+            // balancer would keep sending its requests to instances
+            // that cannot serve it.
+            if !m.backends.is_empty()
+                && !m.backends.iter().any(|b| b == "pjrt")
+                && !self.model_placement.mesh_enabled()
+            {
+                bail!(
+                    "model '{}' excludes the pjrt backend, which requires model-aware \
+                     routing: set model_placement.policy: dynamic or a \
+                     model_placement.memory_budget_mb > 0",
+                    m.name
+                );
+            }
+        }
+        if eg.cpu_replicas > 0 && !self.model_placement.mesh_enabled() {
+            bail!(
+                "engines.cpu_replicas requires the modelmesh (per-model routing must \
+                 follow advertised backends on a heterogeneous fleet): set \
+                 model_placement.policy: dynamic or a model_placement.memory_budget_mb > 0"
+            );
+        }
+        // No autoscaler flavor manages CPU capacity yet: the global
+        // trigger aggregates the whole fleet but scaling only adds GPU
+        // pods, so a saturated CPU-only model would ratchet GPU pods it
+        // can never use (per-model mode rejects the combination above).
+        if self.autoscaler.enabled && eg.cpu_replicas > 0 {
+            for m in &self.server.models {
+                if !m.backends.is_empty() && !m.backends.iter().any(|b| b == "pjrt") {
+                    bail!(
+                        "the autoscaler only scales GPU pods, but model '{}' excludes \
+                         the pjrt backend (backends: {:?}): its saturation would drive \
+                         GPU scale-ups that can never serve it; disable the autoscaler, \
+                         include pjrt in the model's backends, or size \
+                         engines.cpu_replicas statically for its load",
+                        m.name,
+                        m.backends
+                    );
+                }
             }
         }
         if self.gateway.worker_threads == 0 {
@@ -1102,6 +1293,21 @@ impl DeploymentConfig {
                     self.autoscaler.max_replicas
                 );
             }
+            // Per-model scaling spawns GPU-class boot-profile pods: a
+            // model that cannot run on pjrt would get dedicated pods
+            // that can never serve it while eating the shared budget.
+            for m in &self.server.models {
+                if !m.backends.is_empty() && !m.backends.iter().any(|b| b == "pjrt") {
+                    bail!(
+                        "autoscaler.per_model spawns GPU-class pods, but model '{}' \
+                         excludes the pjrt backend (backends: {:?}): its dedicated \
+                         pods could never serve it; disable per-model scaling or \
+                         include pjrt in the model's backends",
+                        m.name,
+                        m.backends
+                    );
+                }
+            }
         }
         let capacity = self.cluster.nodes * self.cluster.gpus_per_node;
         if self.autoscaler.max_replicas > capacity {
@@ -1113,10 +1319,27 @@ impl DeploymentConfig {
                 capacity
             );
         }
-        if self.server.replicas > capacity {
+        // CPU pods bind cluster slots for the whole run, so an enabled
+        // autoscaler must be able to reach its cap with them in place —
+        // otherwise scale-ups park GPU pods in Pending forever.
+        if self.autoscaler.enabled
+            && self.autoscaler.max_replicas + self.engines.cpu_replicas > capacity
+        {
             bail!(
-                "server.replicas ({}) exceeds cluster GPU capacity ({})",
+                "autoscaler.max_replicas ({}) + engines.cpu_replicas ({}) exceeds \
+                 cluster slot capacity ({}): the autoscaler could target more GPU \
+                 pods than free slots exist",
+                self.autoscaler.max_replicas,
+                self.engines.cpu_replicas,
+                capacity
+            );
+        }
+        if self.server.replicas + self.engines.cpu_replicas > capacity {
+            bail!(
+                "server.replicas ({}) + engines.cpu_replicas ({}) exceeds cluster \
+                 slot capacity ({})",
                 self.server.replicas,
+                self.engines.cpu_replicas,
                 capacity
             );
         }
@@ -1552,6 +1775,186 @@ model_placement:
                 );
             }
         }
+    }
+
+    #[test]
+    fn engines_defaults_are_homogeneous_pjrt() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert_eq!(cfg.engines, EnginesConfig::default());
+        assert_eq!(cfg.engines.default_backend, "pjrt");
+        assert_eq!(cfg.engines.cpu_replicas, 0);
+        assert!(cfg.server.models[0].backends.is_empty());
+    }
+
+    #[test]
+    fn engines_section_parses() {
+        let text = r#"
+server:
+  models:
+    - name: particlenet
+      backends: [pjrt, onnx-sim]
+    - name: icecube_cnn
+      backends: [onnx-sim]
+engines:
+  default_backend: pjrt
+  cpu_replicas: 2
+  onnx_slowdown: 2.5
+  onnx_load_multiplier: 0.25
+  onnx_memory_multiplier: 0.75
+model_placement:
+  policy: dynamic
+cluster:
+  nodes: 2
+  gpus_per_node: 2
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        assert_eq!(cfg.server.models[0].backends, vec!["pjrt", "onnx-sim"]);
+        assert_eq!(cfg.server.models[1].backends, vec!["onnx-sim"]);
+        assert_eq!(cfg.engines.cpu_replicas, 2);
+        assert_eq!(cfg.engines.onnx_slowdown, 2.5);
+        assert_eq!(cfg.engines.onnx_load_multiplier, 0.25);
+        assert_eq!(cfg.engines.onnx_memory_multiplier, 0.75);
+    }
+
+    #[test]
+    fn engines_bad_values_rejected() {
+        // unknown default backend
+        let e = DeploymentConfig::from_yaml("engines:\n  default_backend: tensorrt\n")
+            .unwrap_err();
+        assert!(e.to_string().contains("tensorrt"), "{e}");
+        // non-positive multipliers
+        assert!(DeploymentConfig::from_yaml("engines:\n  onnx_slowdown: 0\n").is_err());
+        assert!(DeploymentConfig::from_yaml("engines:\n  onnx_load_multiplier: 0\n").is_err());
+        // memory multiplier above 1 would overcommit planned budgets
+        let e = DeploymentConfig::from_yaml("engines:\n  onnx_memory_multiplier: 1.5\n")
+            .unwrap_err();
+        assert!(e.to_string().contains("overcommit"), "{e}");
+        // typo protection inside the section
+        assert!(DeploymentConfig::from_yaml("engines:\n  cpu_replcas: 1\n").is_err());
+    }
+
+    #[test]
+    fn model_backends_validated() {
+        // unknown backend name
+        let e = DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      backends: [cuda]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("cuda"), "{e}");
+        // duplicates
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      backends: [pjrt, pjrt]\n",
+        )
+        .is_err());
+        // a pjrt-excluding model needs model-aware routing...
+        let e = DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      backends: [onnx-sim]\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("model-aware routing"), "{e}");
+        // ...and is legal once the mesh is on
+        DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      backends: [onnx-sim]\n\
+             model_placement:\n  policy: dynamic\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn cpu_replicas_need_mesh_and_fit_capacity() {
+        let e = DeploymentConfig::from_yaml("engines:\n  cpu_replicas: 1\n").unwrap_err();
+        assert!(e.to_string().contains("modelmesh"), "{e}");
+        // cpu pods occupy cluster slots like gpu pods
+        let text = "server:\n  replicas: 3\nengines:\n  cpu_replicas: 2\n\
+                    model_placement:\n  policy: dynamic\ncluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("capacity"), "{e}");
+        // within capacity it validates
+        let text = "server:\n  replicas: 2\nengines:\n  cpu_replicas: 2\n\
+                    model_placement:\n  policy: dynamic\ncluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        DeploymentConfig::from_yaml(text).unwrap();
+    }
+
+    #[test]
+    fn autoscaler_budget_counts_cpu_pods() {
+        // Capacity 4, cpu pods pin 2 slots: an enabled autoscaler whose
+        // cap could target more GPU pods than the free slots is rejected.
+        let text = "server:\n  replicas: 2\nengines:\n  cpu_replicas: 2\n\
+                    autoscaler:\n  enabled: true\n  max_replicas: 4\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("free slots"), "{e}");
+        // A reachable cap validates...
+        let text = "server:\n  replicas: 2\nengines:\n  cpu_replicas: 2\n\
+                    autoscaler:\n  enabled: true\n  max_replicas: 2\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        DeploymentConfig::from_yaml(text).unwrap();
+        // ...and a disabled autoscaler's cap is inert, so cpu pods may
+        // fill the slots it nominally claims.
+        let text = "server:\n  replicas: 2\nengines:\n  cpu_replicas: 2\n\
+                    autoscaler:\n  max_replicas: 4\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 2\n  gpus_per_node: 2\n";
+        DeploymentConfig::from_yaml(text).unwrap();
+    }
+
+    #[test]
+    fn per_model_scaling_rejects_pjrt_excluding_models() {
+        // Per-model scaling spawns GPU-class boot-profile pods: a
+        // CPU-only model would get dedicated pods that can never serve
+        // it while eating the shared budget. (No CPU pods here, so the
+        // broader autoscaler-vs-CPU-only check does not fire first.)
+        let text = "server:\n  models:\n    - name: particlenet\n    - name: icecube_cnn\n      \
+                    backends: [onnx-sim]\n\
+                    autoscaler:\n  enabled: true\n  max_replicas: 6\n  per_model:\n    \
+                    enabled: true\nmodel_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 4\n  gpus_per_node: 2\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("GPU-class pods"), "{e}");
+        // The same fleet without per-model scaling is legal.
+        let text = "server:\n  models:\n    - name: particlenet\n    - name: icecube_cnn\n      \
+                    backends: [onnx-sim]\nengines:\n  cpu_replicas: 1\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 4\n  gpus_per_node: 2\n";
+        DeploymentConfig::from_yaml(text).unwrap();
+    }
+
+    #[test]
+    fn global_autoscaler_rejects_cpu_only_models_on_mixed_fleets() {
+        // A saturated CPU-only model would ratchet GPU scale-ups that
+        // can never serve it: rejected while the autoscaler is on...
+        let text = "server:\n  models:\n    - name: particlenet\n    - name: icecube_cnn\n      \
+                    backends: [onnx-sim]\nengines:\n  cpu_replicas: 1\n\
+                    autoscaler:\n  enabled: true\n  max_replicas: 6\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 4\n  gpus_per_node: 2\n";
+        let e = DeploymentConfig::from_yaml(text).unwrap_err();
+        assert!(e.to_string().contains("only scales GPU pods"), "{e}");
+        // ...and legal with the autoscaler off (statically sized fleet).
+        let text = "server:\n  models:\n    - name: particlenet\n    - name: icecube_cnn\n      \
+                    backends: [onnx-sim]\nengines:\n  cpu_replicas: 1\n\
+                    model_placement:\n  policy: dynamic\n\
+                    cluster:\n  nodes: 4\n  gpus_per_node: 2\n";
+        DeploymentConfig::from_yaml(text).unwrap();
+    }
+
+    #[test]
+    fn max_bulk_wait_parses() {
+        let cfg = DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    max_bulk_wait: 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.priorities.max_bulk_wait, Duration::from_secs_f64(1.5));
+        // default: aging disabled
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        assert!(cfg.server.priorities.max_bulk_wait.is_zero());
+        // negative rejected like every duration
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  priorities:\n    max_bulk_wait: -1\n"
+        )
+        .is_err());
     }
 
     #[test]

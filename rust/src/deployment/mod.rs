@@ -26,6 +26,7 @@ use anyhow::{Context, Result};
 
 use crate::autoscaler::{Autoscaler, DemandProbe, PerModelScaler};
 use crate::config::{DeploymentConfig, ExecutionMode, PerModelScalingConfig};
+use crate::engine::{AcceleratorClass, BackendRegistry, EngineCatalog};
 use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
 use crate::metrics::exposition::MetricsServer;
@@ -115,6 +116,63 @@ impl Deployment {
             }
         });
 
+        // Multi-backend engine layer: the deployment's backend set and
+        // each model's backend preference list. A model whose
+        // preferences match no pod class in this fleet can never be
+        // placed — boot anyway (the ablation baselines need it) but say
+        // so loudly.
+        let backend_registry = Arc::new(BackendRegistry::from_config(&cfg.engines));
+        let engine_catalog = Arc::new(EngineCatalog::resolve(&cfg.server.models, &cfg.engines));
+        {
+            let mut fleet_backends: Vec<String> = backend_registry
+                .for_class(AcceleratorClass::Gpu)
+                .iter()
+                .map(|b| b.name().to_string())
+                .collect();
+            if cfg.engines.cpu_replicas > 0 {
+                fleet_backends.extend(
+                    backend_registry
+                        .for_class(AcceleratorClass::Cpu)
+                        .iter()
+                        .map(|b| b.name().to_string()),
+                );
+            }
+            for m in &cfg.server.models {
+                let hostable = engine_catalog
+                    .backends_for(&m.name)
+                    .iter()
+                    .any(|b| fleet_backends.contains(b));
+                if !hostable {
+                    log::warn!(
+                        "model '{}' prefers backends {:?} but no pod class in this \
+                         fleet provides one: it will stay unplaceable (add \
+                         engines.cpu_replicas or widen server.models[].backends)",
+                        m.name,
+                        engine_catalog.backends_for(&m.name),
+                    );
+                }
+            }
+            // The global autoscaler's trigger metrics aggregate the
+            // whole fleet, CPU pods included, but its decisions only
+            // resize the GPU group — on a mixed fleet the signal is
+            // diluted by capacity scaling cannot touch. (CPU-only
+            // models under an enabled autoscaler are rejected by
+            // validation; this is the softer all-models-GPU-capable
+            // case.)
+            if cfg.autoscaler.enabled
+                && !cfg.autoscaler.per_model.enabled
+                && cfg.engines.cpu_replicas > 0
+            {
+                log::warn!(
+                    "global autoscaler on a mixed fleet: trigger metrics average \
+                     over {} CPU pod(s) whose capacity scaling cannot change — \
+                     expect a diluted signal (class-partitioned triggers are a \
+                     ROADMAP follow-on)",
+                    cfg.engines.cpu_replicas
+                );
+            }
+        }
+
         // Modelmesh: per-model routing + placement state, when enabled.
         let mesh_catalog: Option<Vec<(String, u64)>> = if cfg.model_placement.mesh_enabled() {
             let catalog: Vec<(String, u64)> = model_names
@@ -171,24 +229,34 @@ impl Deployment {
             let models = resolved_models;
             let clock = clock.clone();
             let registry = registry.clone();
-            let opts = crate::server::InstanceOptions {
+            let base_opts = crate::server::InstanceOptions {
                 queue_capacity: cfg.server.queue_capacity,
                 util_window: cfg.server.util_window,
                 exec_mode: cfg.server.execution,
                 batch_mode: cfg.server.batch_mode,
+                max_bulk_wait: cfg.server.priorities.max_bulk_wait,
+                catalog: Arc::clone(&engine_catalog),
+                ..Default::default()
             };
+            let backend_registry = Arc::clone(&backend_registry);
+            let engine_catalog = Arc::clone(&engine_catalog);
             let mesh = mesh_catalog
                 .clone()
                 .map(|catalog| (catalog, cfg.model_placement.budget_bytes()));
             let placement_seq = Arc::new(AtomicUsize::new(0));
-            Arc::new(move |name: &str, profile: Option<&str>| {
+            Arc::new(move |name: &str, profile: Option<&str>, accel: AcceleratorClass| {
+                // The pod's accelerator class fixes its backend set.
+                let backends = backend_registry.for_class(accel);
+                let backend_names: Vec<String> =
+                    backends.iter().map(|b| b.name().to_string()).collect();
+                let opts = crate::server::InstanceOptions { backends, ..base_opts.clone() };
                 let inst = Instance::start_with_opts(
                     name,
                     Arc::clone(&repo),
                     &models,
                     clock.clone(),
                     registry.clone(),
-                    opts.clone(),
+                    opts,
                 );
                 if let Some((catalog, budget)) = &mesh {
                     match profile {
@@ -203,8 +271,22 @@ impl Deployment {
                         // (which runs under static policy too) re-hosts any
                         // model the churn left without a replica.
                         None => {
+                            // Rotate only over the models this pod's
+                            // backend set can actually serve, so a CPU
+                            // pod's boot placement is not wasted on
+                            // GPU-only models.
+                            let hostable: Vec<(String, u64)> = catalog
+                                .iter()
+                                .filter(|(m, _)| {
+                                    engine_catalog
+                                        .backends_for(m)
+                                        .iter()
+                                        .any(|b| backend_names.contains(b))
+                                })
+                                .cloned()
+                                .collect();
                             let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
-                            inst.set_loaded_models(&initial_placement(catalog, *budget, idx));
+                            inst.set_loaded_models(&initial_placement(&hostable, *budget, idx));
                         }
                     }
                 }
@@ -224,7 +306,7 @@ impl Deployment {
             // bounds. Each pod carries its model as a boot profile.
             let targets =
                 initial_model_targets(initial, &model_names, &cfg.autoscaler.per_model);
-            Cluster::start_per_model(
+            let cluster = Cluster::start_per_model(
                 cfg.cluster.clone(),
                 cfg.server.startup_delay,
                 targets,
@@ -232,12 +314,17 @@ impl Deployment {
                 registry.clone(),
                 factory,
                 0x5057E5,
-            )
+            );
+            // The CPU-class group converges next to the per-model GPU
+            // groups (per-model targets never cover CPU pods).
+            cluster.set_cpu_desired(cfg.engines.cpu_replicas);
+            cluster
         } else {
-            Cluster::start(
+            Cluster::start_with_cpu(
                 cfg.cluster.clone(),
                 cfg.server.startup_delay,
                 initial,
+                cfg.engines.cpu_replicas,
                 clock.clone(),
                 registry.clone(),
                 factory,
@@ -288,6 +375,7 @@ impl Deployment {
                     cfg.model_placement.clone(),
                     catalog.clone(),
                     load_costs.clone(),
+                    engine_catalog.compat_map(),
                     Arc::clone(router),
                     store.clone(),
                     clock.clone(),
@@ -435,6 +523,7 @@ mod tests {
                         per_row: Duration::from_micros(100),
                     },
                     load_delay: None,
+                    backends: Vec::new(),
                 }],
                 repository: "artifacts".into(),
                 startup_delay: Duration::from_millis(10),
@@ -464,6 +553,7 @@ mod tests {
                 tracing: false,
             },
             model_placement: Default::default(),
+            engines: Default::default(),
             time_scale: 1.0,
         }
     }
@@ -557,6 +647,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             },
             ModelConfig {
                 name: "particlenet".into(),
@@ -567,6 +658,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             },
         ];
         // Fits either model alone (icecube_cnn ~152 KB, particlenet
@@ -620,6 +712,40 @@ mod tests {
         // icecube_cnn alone needs ~152 KB: 0.1 MB cannot host it.
         cfg.model_placement.memory_budget_mb = 0.1;
         assert!(Deployment::up(cfg).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_cpu_only_model() {
+        // 1 GPU pod + 1 CPU pod; the CNN is CPU-only (backends:
+        // [onnx-sim]) so it must land on — and serve from — the CPU pod,
+        // while the GNN keeps its GPU replica.
+        let mut cfg = two_model_mesh_cfg();
+        cfg.server.replicas = 1;
+        cfg.server.models[0].backends = vec!["onnx-sim".into()]; // icecube_cnn
+        // Both models fit together; the split is backend-driven.
+        cfg.model_placement.memory_budget_mb = 0.45;
+        cfg.engines.cpu_replicas = 1;
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        assert_eq!(d.cluster.running_cpu(), 1);
+        std::thread::sleep(Duration::from_millis(300)); // one reconcile pass
+        let router = d.router.as_ref().unwrap();
+        // The CPU-only model is hosted exactly on onnx-sim-capable pods.
+        let cnn_hosts = router.endpoints_for("icecube_cnn");
+        assert_eq!(cnn_hosts.len(), 1, "cpu-only model not placed");
+        assert!(cnn_hosts[0].backend_names().contains(&"onnx-sim".to_string()));
+        assert_eq!(
+            cnn_hosts[0].backend_for_model("icecube_cnn").as_deref(),
+            Some("onnx-sim")
+        );
+        // Both models serve end to end through the gateway.
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        let r1 = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(r1.status, Status::Ok, "{}", r1.error);
+        assert_eq!(r1.output.shape(), &[1, 3]);
+        let r2 = client.infer("particlenet", Tensor::zeros(vec![1, 64, 7])).unwrap();
+        assert_eq!(r2.status, Status::Ok, "{}", r2.error);
+        d.down();
     }
 
     #[test]

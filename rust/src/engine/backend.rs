@@ -1,0 +1,349 @@
+//! The [`Backend`] trait and its two implementations.
+//!
+//! A backend is the thing that actually runs a batch: the executor
+//! thread in [`Instance`](crate::server::Instance) pops a same-model
+//! batch, looks up the backend its serving set recorded for that model,
+//! and hands it an [`ExecCtx`]. Everything above the trait (batching,
+//! routing, placement, metrics) is backend-agnostic.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::{ExecutionMode, ServiceModelConfig};
+use crate::runtime::Tensor;
+use crate::server::repository::ModelEntry;
+use crate::util::clock::Clock;
+
+/// Everything a backend needs to run one same-model batch.
+pub struct ExecCtx<'a> {
+    /// The model being served (shapes, compiled engines, batch sizes).
+    pub entry: &'a ModelEntry,
+    /// One input tensor per request, in batch order.
+    pub inputs: &'a [&'a Tensor],
+    /// Total rows across `inputs`.
+    pub total_rows: usize,
+    /// The deployment's execution mode (`real` runs compiled engines
+    /// where the backend has them; `simulated` sleeps calibrated
+    /// service times).
+    pub mode: ExecutionMode,
+    /// The model's calibrated GPU service-time model; backends apply
+    /// their own latency multiplier on top.
+    pub service: ServiceModelConfig,
+    /// Deployment clock (time dilation applies to simulated service).
+    pub clock: &'a Clock,
+}
+
+/// One pluggable inference runtime.
+///
+/// Implementations must be cheap to share (`Arc<dyn Backend>` is cloned
+/// into every serving-set entry) and thread-safe: a fleet of executor
+/// threads calls [`Backend::execute`] concurrently. `RefUnwindSafe` is
+/// required so types embedding backends (instances, registries) stay
+/// usable across the property-test harness's `catch_unwind`.
+pub trait Backend:
+    Send + Sync + std::fmt::Debug + std::panic::RefUnwindSafe + std::panic::UnwindSafe
+{
+    /// Stable wire/config/metrics name (one of
+    /// [`config::schema::BACKEND_NAMES`](crate::config::schema::BACKEND_NAMES)).
+    fn name(&self) -> &'static str;
+
+    /// Capability tags: the [`AcceleratorClass`](super::AcceleratorClass)
+    /// names this backend can run on. A pod advertises exactly the
+    /// backends whose tags include its class.
+    fn capabilities(&self) -> &'static [&'static str];
+
+    /// Multiplier applied to a model's warm-load delay when this backend
+    /// serves it (engine build vs session init cost).
+    fn load_multiplier(&self) -> f64 {
+        1.0
+    }
+
+    /// Multiplier applied to a model's simulated memory footprint when
+    /// this backend serves it. Kept at or below 1.0 so the placement
+    /// planner (which budgets with the unscaled footprint) stays
+    /// conservative — see `DeploymentConfig::validate`.
+    fn memory_multiplier(&self) -> f64 {
+        1.0
+    }
+
+    /// Run one same-model batch; returns one output tensor per input,
+    /// in order.
+    fn execute(&self, ctx: &ExecCtx<'_>) -> Result<Vec<Tensor>>;
+}
+
+/// Chunked service time of a batch under the calibrated linear model:
+/// the batch is split by the model's largest engine batch, and each
+/// chunk is charged at the smallest compiled batch size that fits it
+/// (exactly how the real execution path pads) — shared by both
+/// simulated execution paths so the two backends differ only by their
+/// latency multiplier.
+fn chunked_service_secs(entry: &ModelEntry, total_rows: usize, service: ServiceModelConfig) -> f64 {
+    let max_engine = entry.max_batch();
+    let mut secs = 0.0f64;
+    let mut done = 0usize;
+    while done < total_rows {
+        let n = (total_rows - done).min(max_engine);
+        let padded = entry
+            .batch_sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(max_engine);
+        secs += service.service_secs(padded);
+        done += n;
+    }
+    secs
+}
+
+/// Sleep the (multiplied) service time and return zeroed outputs of the
+/// correct per-request shapes — the deterministic simulated execution
+/// path both backends share.
+fn execute_simulated(ctx: &ExecCtx<'_>, latency_multiplier: f64) -> Result<Vec<Tensor>> {
+    let secs = chunked_service_secs(ctx.entry, ctx.total_rows, ctx.service) * latency_multiplier;
+    ctx.clock.sleep(Duration::from_secs_f64(secs));
+    Ok(ctx
+        .inputs
+        .iter()
+        .map(|t| Tensor::zeros(vec![t.batch(), ctx.entry.output_dim]))
+        .collect())
+}
+
+/// The PJRT runtime as a backend: compiled AOT artifacts on GPU-class
+/// pods. Under `execution: simulated` it sleeps the model's calibrated
+/// service time instead (the pre-existing simulated-GPU path, unscaled).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PjrtBackend;
+
+impl PjrtBackend {
+    /// The canonical PJRT backend.
+    pub fn new() -> Self {
+        PjrtBackend
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> &'static [&'static str] {
+        &["gpu"]
+    }
+
+    fn execute(&self, ctx: &ExecCtx<'_>) -> Result<Vec<Tensor>> {
+        if ctx.mode == ExecutionMode::Simulated {
+            return execute_simulated(ctx, 1.0);
+        }
+        let entry = ctx.entry;
+        let max_engine = entry.max_batch();
+        let engines = entry.engines.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "model '{}' was loaded metadata-only; real execution unavailable",
+                entry.name
+            )
+        })?;
+
+        // Fast path — a single request that fits one engine call (the
+        // common case at low batch pressure): one pad, one execute, one
+        // slice, instead of the flatten/chunk/regroup pipeline below
+        // (saves 4 full tensor copies per request).
+        if ctx.inputs.len() == 1 && ctx.total_rows <= max_engine {
+            let engine = engines.engine_for(ctx.total_rows);
+            let eb = engine.batch_size();
+            let out = if ctx.total_rows == eb {
+                engine.execute(ctx.inputs[0])?
+            } else {
+                let padded = Tensor::stack_padded(std::slice::from_ref(ctx.inputs[0]), eb)?;
+                engine.execute(&padded)?.slice_rows(0, ctx.total_rows)?
+            };
+            return Ok(vec![out]);
+        }
+
+        let inputs: Vec<Tensor> = ctx.inputs.iter().map(|t| (*t).clone()).collect();
+
+        // Flatten all rows into one tensor, then chunk.
+        let flat = Tensor::stack_padded(&inputs, ctx.total_rows)?;
+        let mut out_rows: Vec<Tensor> = Vec::new();
+        let mut done = 0usize;
+        while done < ctx.total_rows {
+            let n = (ctx.total_rows - done).min(max_engine);
+            let chunk = flat.slice_rows(done, n)?;
+            let engine = engines.engine_for(n);
+            let eb = engine.batch_size();
+            let padded = Tensor::stack_padded(&[chunk], eb)?;
+            let out = engine.execute(&padded)?;
+            out_rows.push(out.slice_rows(0, n)?);
+            done += n;
+        }
+        let all_out = Tensor::stack_padded(&out_rows, ctx.total_rows)?;
+
+        // Split back per request.
+        let mut outputs = Vec::with_capacity(ctx.inputs.len());
+        let mut offset = 0usize;
+        for t in ctx.inputs {
+            let r = t.batch();
+            outputs.push(all_out.slice_rows(offset, r)?);
+            offset += r;
+        }
+        Ok(outputs)
+    }
+}
+
+/// Deterministic simulated ONNX-Runtime-style backend: CPU-capable,
+/// needs no compiled engines (and no `pjrt` cargo feature), and prices
+/// everything through its own cost model — a latency slowdown against
+/// the model's calibrated GPU service model, plus load/memory
+/// multipliers. Identical inputs always produce identical (zeroed)
+/// outputs and identical simulated timings.
+#[derive(Clone, Copy, Debug)]
+pub struct OnnxSimBackend {
+    /// Latency multiplier vs the model's GPU service model
+    /// (`engines.onnx_slowdown`).
+    pub slowdown: f64,
+    /// Warm-load delay multiplier (`engines.onnx_load_multiplier`):
+    /// session init is cheaper than engine compilation.
+    pub load_multiplier: f64,
+    /// Memory-footprint multiplier (`engines.onnx_memory_multiplier`),
+    /// validated to stay in (0, 1].
+    pub memory_multiplier: f64,
+}
+
+impl Default for OnnxSimBackend {
+    fn default() -> Self {
+        OnnxSimBackend { slowdown: 4.0, load_multiplier: 0.5, memory_multiplier: 1.0 }
+    }
+}
+
+impl Backend for OnnxSimBackend {
+    fn name(&self) -> &'static str {
+        "onnx-sim"
+    }
+
+    fn capabilities(&self) -> &'static [&'static str] {
+        &["cpu"]
+    }
+
+    fn load_multiplier(&self) -> f64 {
+        self.load_multiplier
+    }
+
+    fn memory_multiplier(&self) -> f64 {
+        self.memory_multiplier
+    }
+
+    fn execute(&self, ctx: &ExecCtx<'_>) -> Result<Vec<Tensor>> {
+        // Always the simulated path: this backend models a second
+        // runtime, it never touches PJRT engines — which is what makes
+        // it usable on CPU pods and without the `pjrt` feature.
+        execute_simulated(ctx, self.slowdown)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::ModelRepository;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn entry() -> Arc<ModelEntry> {
+        let repo = ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &["icecube_cnn".into()],
+        )
+        .unwrap();
+        repo.get("icecube_cnn").unwrap()
+    }
+
+    fn ctx<'a>(
+        entry: &'a ModelEntry,
+        inputs: &'a [&'a Tensor],
+        total_rows: usize,
+        clock: &'a Clock,
+    ) -> ExecCtx<'a> {
+        ExecCtx {
+            entry,
+            inputs,
+            total_rows,
+            mode: ExecutionMode::Simulated,
+            service: ServiceModelConfig {
+                base: Duration::from_millis(10),
+                per_row: Duration::from_millis(1),
+            },
+            clock,
+        }
+    }
+
+    #[test]
+    fn chunked_service_pads_to_engine_batches() {
+        let e = entry(); // batch sizes 1,2,4,8,16
+        let sm = ServiceModelConfig {
+            base: Duration::from_millis(10),
+            per_row: Duration::from_millis(1),
+        };
+        // 3 rows pad to the 4-engine: 10 + 4 = 14 ms
+        assert!((chunked_service_secs(&e, 3, sm) - 0.014).abs() < 1e-9);
+        // 20 rows chunk to 16 + 4: (10 + 16) + (10 + 4) = 40 ms
+        assert!((chunked_service_secs(&e, 20, sm) - 0.040).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pjrt_simulated_sleeps_base_service() {
+        let e = entry();
+        let clock = Clock::real();
+        let input = Tensor::zeros(vec![2, 16, 16, 3]);
+        let inputs = [&input];
+        let t0 = Instant::now();
+        let out = PjrtBackend::new().execute(&ctx(&e, &inputs, 2, &clock)).unwrap();
+        // padded to engine batch 2: 10 + 2 = 12 ms
+        assert!(t0.elapsed() >= Duration::from_millis(11));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[2, 3]);
+        assert!(out[0].data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn onnx_sim_applies_slowdown_and_stays_deterministic() {
+        let e = entry();
+        let clock = Clock::real();
+        let a = Tensor::zeros(vec![1, 16, 16, 3]);
+        let b = Tensor::zeros(vec![2, 16, 16, 3]);
+        let inputs = [&a, &b];
+        let backend = OnnxSimBackend { slowdown: 3.0, ..Default::default() };
+        let t0 = Instant::now();
+        let out = backend.execute(&ctx(&e, &inputs, 3, &clock)).unwrap();
+        // padded to engine batch 4: (10 + 4) * 3 = 42 ms
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].shape(), &[1, 3]);
+        assert_eq!(out[1].shape(), &[2, 3]);
+        let again = backend.execute(&ctx(&e, &inputs, 3, &clock)).unwrap();
+        assert_eq!(out[1], again[1], "onnx-sim output not deterministic");
+    }
+
+    #[test]
+    fn pjrt_real_without_engines_errors() {
+        let e = entry(); // metadata-only: no compiled engines
+        let clock = Clock::real();
+        let input = Tensor::zeros(vec![1, 16, 16, 3]);
+        let inputs = [&input];
+        let mut c = ctx(&e, &inputs, 1, &clock);
+        c.mode = ExecutionMode::Real;
+        let err = PjrtBackend::new().execute(&c).unwrap_err();
+        assert!(err.to_string().contains("metadata-only"), "{err}");
+    }
+
+    #[test]
+    fn capability_tags_partition_classes() {
+        use crate::engine::AcceleratorClass;
+        let pjrt = PjrtBackend::new();
+        let onnx = OnnxSimBackend::default();
+        assert!(pjrt.capabilities().contains(&AcceleratorClass::Gpu.name()));
+        assert!(!pjrt.capabilities().contains(&AcceleratorClass::Cpu.name()));
+        assert!(onnx.capabilities().contains(&AcceleratorClass::Cpu.name()));
+        assert!(!onnx.capabilities().contains(&AcceleratorClass::Gpu.name()));
+        assert_eq!(pjrt.load_multiplier(), 1.0);
+        assert!(onnx.load_multiplier() < 1.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Backend registry + per-model engine catalog.
+//!
+//! The [`BackendRegistry`] is the deployment's backend set (built once
+//! from the `engines.*` config); the [`EngineCatalog`] maps each served
+//! model to the backend variants that can serve it, in preference
+//! order. Together they answer the two questions the control plane
+//! asks: *which backends does this pod advertise* (by accelerator
+//! class) and *which backend should serve model M here* (first
+//! preference the pod supports — anything later is a fallback).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::config::schema::BACKEND_NAMES;
+use crate::config::{EnginesConfig, ModelConfig};
+
+use super::{AcceleratorClass, Backend, OnnxSimBackend, PjrtBackend};
+
+/// The deployment's backend set.
+pub struct BackendRegistry {
+    backends: Vec<Arc<dyn Backend>>,
+}
+
+impl BackendRegistry {
+    /// Registry with every known backend, parameterized by the
+    /// `engines.*` config (the onnx-sim cost model).
+    pub fn from_config(cfg: &EnginesConfig) -> Self {
+        BackendRegistry {
+            backends: vec![
+                Arc::new(PjrtBackend::new()),
+                Arc::new(OnnxSimBackend {
+                    slowdown: cfg.onnx_slowdown,
+                    load_multiplier: cfg.onnx_load_multiplier,
+                    memory_multiplier: cfg.onnx_memory_multiplier,
+                }),
+            ],
+        }
+    }
+
+    /// Look up a backend by wire name.
+    pub fn get(&self, name: &str) -> Option<Arc<dyn Backend>> {
+        self.backends.iter().find(|b| b.name() == name).cloned()
+    }
+
+    /// Every registered backend.
+    pub fn backends(&self) -> &[Arc<dyn Backend>] {
+        &self.backends
+    }
+
+    /// The backend set a pod of `class` advertises: every backend whose
+    /// capability tags include the class. Non-empty for both known
+    /// classes (onnx-sim covers `cpu`, pjrt covers `gpu`).
+    pub fn for_class(&self, class: AcceleratorClass) -> Vec<Arc<dyn Backend>> {
+        self.backends
+            .iter()
+            .filter(|b| b.capabilities().contains(&class.name()))
+            .cloned()
+            .collect()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        Self::from_config(&EnginesConfig::default())
+    }
+}
+
+/// Per-model backend preference lists.
+///
+/// A model with an explicit `server.models[].backends` list is served by
+/// exactly those backends, in that order; a model without one gets the
+/// default preference (`engines.default_backend` first, then every
+/// other known backend). Models absent from the catalog entirely (unit
+/// tests, hot-loaded models) also use the default preference.
+#[derive(Clone, Debug)]
+pub struct EngineCatalog {
+    prefs: BTreeMap<String, Vec<String>>,
+    default_prefs: Vec<String>,
+}
+
+impl EngineCatalog {
+    /// Resolve the catalog for a served model set.
+    pub fn resolve(models: &[ModelConfig], engines: &EnginesConfig) -> Self {
+        let default_prefs = Self::default_prefs_for(&engines.default_backend);
+        let prefs = models
+            .iter()
+            .map(|m| {
+                let p = if m.backends.is_empty() {
+                    default_prefs.clone()
+                } else {
+                    m.backends.clone()
+                };
+                (m.name.clone(), p)
+            })
+            .collect();
+        EngineCatalog { prefs, default_prefs }
+    }
+
+    fn default_prefs_for(default_backend: &str) -> Vec<String> {
+        let mut prefs = vec![default_backend.to_string()];
+        prefs.extend(
+            BACKEND_NAMES
+                .iter()
+                .filter(|b| **b != default_backend)
+                .map(|b| b.to_string()),
+        );
+        prefs
+    }
+
+    /// Has no model been cataloged? An empty catalog answers every
+    /// lookup with the default preference — consumers holding the model
+    /// list (e.g. [`Instance`](crate::server::Instance) construction)
+    /// use this to resolve a real catalog instead, so per-model
+    /// `backends` lists are honored even when no catalog was wired in.
+    pub fn is_empty(&self) -> bool {
+        self.prefs.is_empty()
+    }
+
+    /// Preference-ordered backend names for one model.
+    pub fn backends_for(&self, model: &str) -> &[String] {
+        self.prefs
+            .get(model)
+            .map(|p| p.as_slice())
+            .unwrap_or(&self.default_prefs)
+    }
+
+    /// May `backend` serve `model` at all?
+    pub fn compatible(&self, model: &str, backend: &str) -> bool {
+        self.backends_for(model).iter().any(|b| b == backend)
+    }
+
+    /// The backend that serves `model` on an instance advertising
+    /// `available`: the first preference present in the set, with its
+    /// preference rank (0 = preferred; anything greater is a fallback).
+    /// `None` when no available backend is compatible — the instance
+    /// cannot host the model.
+    pub fn select(
+        &self,
+        model: &str,
+        available: &[Arc<dyn Backend>],
+    ) -> Option<(Arc<dyn Backend>, usize)> {
+        self.backends_for(model)
+            .iter()
+            .enumerate()
+            .find_map(|(rank, name)| {
+                available
+                    .iter()
+                    .find(|b| b.name() == name.as_str())
+                    .map(|b| (Arc::clone(b), rank))
+            })
+    }
+
+    /// The compatibility map the placement planner consumes:
+    /// model → preference-ordered backend names, for every cataloged
+    /// model.
+    pub fn compat_map(&self) -> BTreeMap<String, Vec<String>> {
+        self.prefs.clone()
+    }
+}
+
+impl Default for EngineCatalog {
+    fn default() -> Self {
+        EngineCatalog {
+            prefs: BTreeMap::new(),
+            default_prefs: Self::default_prefs_for(BACKEND_NAMES[0]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn model(name: &str, backends: &[&str]) -> ModelConfig {
+        ModelConfig {
+            name: name.into(),
+            backends: backends.iter().map(|s| s.to_string()).collect(),
+            ..ModelConfig::default()
+        }
+    }
+
+    #[test]
+    fn registry_partitions_by_class() {
+        let reg = BackendRegistry::default();
+        let gpu: Vec<&str> =
+            reg.for_class(AcceleratorClass::Gpu).iter().map(|b| b.name()).collect();
+        let cpu: Vec<&str> =
+            reg.for_class(AcceleratorClass::Cpu).iter().map(|b| b.name()).collect();
+        assert_eq!(gpu, vec!["pjrt"]);
+        assert_eq!(cpu, vec!["onnx-sim"]);
+        assert!(reg.get("pjrt").is_some());
+        assert!(reg.get("onnx-sim").is_some());
+        assert!(reg.get("tensorrt").is_none());
+    }
+
+    #[test]
+    fn registry_applies_engines_config() {
+        let cfg = EnginesConfig {
+            onnx_slowdown: 2.5,
+            onnx_load_multiplier: 0.25,
+            onnx_memory_multiplier: 0.75,
+            ..EnginesConfig::default()
+        };
+        let reg = BackendRegistry::from_config(&cfg);
+        let onnx = reg.get("onnx-sim").unwrap();
+        assert_eq!(onnx.load_multiplier(), 0.25);
+        assert_eq!(onnx.memory_multiplier(), 0.75);
+    }
+
+    #[test]
+    fn catalog_resolves_defaults_and_overrides() {
+        let engines = EnginesConfig::default(); // default_backend: pjrt
+        let models = vec![model("free", &[]), model("cpu_only", &["onnx-sim"])];
+        let cat = EngineCatalog::resolve(&models, &engines);
+        assert_eq!(cat.backends_for("free"), ["pjrt", "onnx-sim"]);
+        assert_eq!(cat.backends_for("cpu_only"), ["onnx-sim"]);
+        // uncataloged models fall back to the default preference
+        assert_eq!(cat.backends_for("unknown"), ["pjrt", "onnx-sim"]);
+        assert!(cat.compatible("free", "onnx-sim"));
+        assert!(!cat.compatible("cpu_only", "pjrt"));
+    }
+
+    #[test]
+    fn default_backend_reorders_preference() {
+        let engines = EnginesConfig {
+            default_backend: "onnx-sim".into(),
+            ..EnginesConfig::default()
+        };
+        let cat = EngineCatalog::resolve(&[model("m", &[])], &engines);
+        assert_eq!(cat.backends_for("m"), ["onnx-sim", "pjrt"]);
+    }
+
+    #[test]
+    fn select_prefers_then_falls_back_then_refuses() {
+        let reg = BackendRegistry::default();
+        let engines = EnginesConfig::default();
+        let cat = EngineCatalog::resolve(
+            &[model("free", &[]), model("cpu_only", &["onnx-sim"])],
+            &engines,
+        );
+        let gpu = reg.for_class(AcceleratorClass::Gpu);
+        let cpu = reg.for_class(AcceleratorClass::Cpu);
+        // preferred backend available: rank 0
+        let (b, rank) = cat.select("free", &gpu).unwrap();
+        assert_eq!((b.name(), rank), ("pjrt", 0));
+        // only the second preference available: a fallback
+        let (b, rank) = cat.select("free", &cpu).unwrap();
+        assert_eq!((b.name(), rank), ("onnx-sim", 1));
+        // no compatible backend at all
+        assert!(cat.select("cpu_only", &gpu).is_none());
+        // selection never leaves the preference list
+        for avail in [&gpu, &cpu] {
+            if let Some((b, _)) = cat.select("cpu_only", avail) {
+                assert!(cat.compatible("cpu_only", b.name()));
+            }
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Multi-backend engine layer — pluggable inference runtimes.
+//!
+//! The paper's core portability claim is that the same serving
+//! infrastructure runs models on different *backends* (Triton's
+//! TensorRT / ONNX Runtime / PyTorch backends) over different
+//! *coprocessor types* (GPUs of several vendors, or plain CPUs). This
+//! module is that seam in the reproduction:
+//!
+//! * [`Backend`] — the runtime contract: a name, capability tags (which
+//!   accelerator classes it can run on), per-backend load/memory cost
+//!   multipliers, and batch execution.
+//! * [`PjrtBackend`] — the existing PJRT runtime wrapped as a backend:
+//!   executes compiled AOT artifacts (or the calibrated service-time
+//!   model under `execution: simulated`). GPU-class pods only.
+//! * [`OnnxSimBackend`] — a deterministic simulated second runtime (the
+//!   ONNX-Runtime-on-CPU analogue): CPU-capable, usable without the
+//!   `pjrt` cargo feature, with its own latency slowdown and load/memory
+//!   cost multipliers (`engines.*` config).
+//! * [`BackendRegistry`] — the deployment's backend set, and the mapping
+//!   from a pod's [`AcceleratorClass`] to the backends it advertises.
+//! * [`EngineCatalog`] — per-model backend preference lists (from
+//!   `server.models[].backends`, defaulting to `engines.default_backend`
+//!   first), and the selection rule instances use when loading a model:
+//!   first preferred backend the instance supports; any later pick is a
+//!   **fallback** (counted in `backend_fallback_total`).
+//!
+//! The rest of the control plane is backend-aware on top of this layer:
+//! pods advertise a backend set derived from their accelerator class,
+//! [`Instance`](crate::server::Instance) serving sets record which
+//! backend serves each model (charging per-backend load delays and
+//! memory), and [`PlacementCore`](crate::modelmesh::PlacementCore) only
+//! places a model on instances with a compatible backend — so a model
+//! configured `backends: [onnx-sim]` can never land on, be routed to,
+//! or be executed by a PJRT-only instance.
+
+pub mod backend;
+pub mod catalog;
+
+pub use backend::{Backend, ExecCtx, OnnxSimBackend, PjrtBackend};
+pub use catalog::{BackendRegistry, EngineCatalog};
+
+use anyhow::{bail, Result};
+
+/// Rust type names of every [`Backend`] implementation — the doc-sync
+/// gate (`rust/tests/docs_sync.rs`) requires each to appear in
+/// `docs/ARCHITECTURE.md`, so a new backend cannot land undocumented.
+pub const BACKEND_IMPLS: &[&str] = &["PjrtBackend", "OnnxSimBackend"];
+
+/// Coprocessor class a pod's node provides. Boot profiles carry one:
+/// the pod's instance advertises exactly the backends whose capability
+/// tags include this class, so a `cpu` pod never claims it can run PJRT
+/// engines and a heterogeneous fleet partitions cleanly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum AcceleratorClass {
+    /// GPU-slot pod (the classic Triton server shape).
+    #[default]
+    Gpu,
+    /// CPU-only pod (`engines.cpu_replicas`): no GPU engine can run
+    /// here, only CPU-capable backends.
+    Cpu,
+}
+
+impl AcceleratorClass {
+    /// Canonical capability-tag / config name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcceleratorClass::Gpu => "gpu",
+            AcceleratorClass::Cpu => "cpu",
+        }
+    }
+
+    /// Parse a capability-tag name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gpu" => AcceleratorClass::Gpu,
+            "cpu" => AcceleratorClass::Cpu,
+            other => bail!("unknown accelerator class '{other}' (expected gpu or cpu)"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accelerator_class_roundtrips() {
+        for c in [AcceleratorClass::Gpu, AcceleratorClass::Cpu] {
+            assert_eq!(AcceleratorClass::parse(c.name()).unwrap(), c);
+        }
+        assert!(AcceleratorClass::parse("tpu").is_err());
+        assert_eq!(AcceleratorClass::default(), AcceleratorClass::Gpu);
+    }
+
+    #[test]
+    fn backend_impls_cover_known_backends() {
+        // One Rust impl per wire-level backend name, and vice versa.
+        assert_eq!(BACKEND_IMPLS.len(), crate::config::schema::BACKEND_NAMES.len());
+    }
+}

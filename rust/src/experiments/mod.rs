@@ -166,6 +166,7 @@ pub fn fig_config(
                     per_row: Duration::from_micros(1500),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             repository: PathBuf::from("artifacts"),
             startup_delay: Duration::from_secs(10),
@@ -212,6 +213,7 @@ pub fn fig_config(
             tracing: false,
         },
         model_placement: ModelPlacementConfig::default(),
+        engines: EnginesConfig::default(),
         time_scale,
     }
 }
@@ -247,6 +249,7 @@ pub fn modelmesh_config(
         preferred_batch: 8,
         service_model: service,
         load_delay: None,
+        backends: Vec::new(),
     };
     DeploymentConfig {
         name: format!("mesh-{}", policy.name()),
@@ -300,6 +303,7 @@ pub fn modelmesh_config(
             min_replicas_per_model: 1,
             load_delay: Duration::ZERO,
         },
+        engines: EnginesConfig::default(),
         time_scale,
     }
 }
@@ -403,6 +407,124 @@ pub fn modelmesh_workload(addr: &str, hot_fraction: f64, clock: crate::util::clo
     crate::workload::MixedPool::hot_cold(addr, hot, cold, hot_fraction, clock, 0xAB1A7E)
 }
 
+/// Deployment for the backend ablation (`benches/backend_ablation.rs`):
+/// a four-pod budget split between GPU-class and CPU-class pods
+/// (`cpu_pods` of them). Two models share the fleet under skewed
+/// traffic: the hot `particlenet` runs anywhere (pjrt preferred,
+/// onnx-sim fallback), while the cold-but-constant `icecube_cnn` is a
+/// cheap **CPU-only** model (`backends: [onnx-sim]` — the classic
+/// ONNX-on-CPU auxiliary model no GPU engine exists for). A
+/// homogeneous-GPU fleet (`cpu_pods = 0`) therefore cannot place the
+/// cold model at all and sheds its whole stream; a mixed fleet serves
+/// it on the CPU pods — and boot-places the hot model there too via an
+/// onnx-sim *fallback* (counted in `backend_fallback_total`), since
+/// pjrt has no capacity on a CPU pod.
+pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
+    use crate::config::*;
+    use std::path::PathBuf;
+
+    assert!(cpu_pods < 4, "the ablation keeps a 4-pod budget");
+    let hot = ModelConfig {
+        name: "particlenet".into(),
+        max_queue_delay: Duration::from_millis(2),
+        preferred_batch: 8,
+        service_model: ServiceModelConfig {
+            base: Duration::from_millis(5),
+            per_row: Duration::from_micros(1500),
+        },
+        load_delay: None,
+        backends: vec!["pjrt".into(), "onnx-sim".into()],
+    };
+    let cold = ModelConfig {
+        name: "icecube_cnn".into(),
+        max_queue_delay: Duration::from_millis(2),
+        preferred_batch: 8,
+        // Cheap auxiliary model: a CPU backend serves it comfortably.
+        service_model: ServiceModelConfig {
+            base: Duration::from_millis(1),
+            per_row: Duration::from_micros(100),
+        },
+        load_delay: None,
+        backends: vec!["onnx-sim".into()],
+    };
+    DeploymentConfig {
+        name: if cpu_pods == 0 {
+            "backend-gpu-only".into()
+        } else {
+            format!("backend-mixed-{cpu_pods}cpu")
+        },
+        server: ServerConfig {
+            replicas: 4 - cpu_pods,
+            models: vec![hot, cold],
+            repository: PathBuf::from("artifacts"),
+            startup_delay: Duration::from_millis(500),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 64,
+            util_window: 10.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig {
+            listen: "127.0.0.1:0".into(),
+            lb_policy: LbPolicy::LeastConnection,
+            max_inflight_per_instance: 8,
+            ..GatewayConfig::default()
+        },
+        autoscaler: AutoscalerConfig {
+            enabled: false,
+            max_replicas: 4, // cluster capacity below
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 2,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(500),
+            termination_grace: Duration::from_secs(1),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(7200),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            policy: PlacementPolicy::Dynamic,
+            // Both models fit one instance together: the partition is
+            // driven by backend compatibility, not memory.
+            memory_budget_mb: 0.45,
+            load_threshold: 100.0,
+            unload_threshold: 40.0,
+            cooldown: Duration::from_secs(5),
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
+        },
+        engines: EnginesConfig {
+            cpu_replicas: cpu_pods,
+            // A CPU core runs the cheap model ~2x slower than the GPU
+            // service model — adequate for an auxiliary model.
+            onnx_slowdown: 2.0,
+            ..EnginesConfig::default()
+        },
+        time_scale,
+    }
+}
+
+/// The skewed two-model workload for the backend ablation: 70% hot
+/// (GPU-capable particlenet), 30% cold (CPU-only icecube_cnn), 1-row
+/// requests with a light think time.
+pub fn backend_workload(
+    addr: &str,
+    clock: crate::util::clock::Clock,
+) -> crate::workload::MixedPool {
+    let mut hot = WorkloadSpec::new("particlenet", 1, vec![64, 7]);
+    hot.think_time = Duration::from_millis(5);
+    let mut cold = WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3]);
+    cold.think_time = Duration::from_millis(5);
+    crate::workload::MixedPool::hot_cold(addr, hot, cold, 0.7, clock, 0xBACE)
+}
+
 /// Deployment for the priority ablation (`benches/priority_ablation.rs`):
 /// two fixed simulated GPU servers serving one model, sized so the bulk
 /// stream saturates them and queues stay near the row bound — exactly
@@ -427,6 +549,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
                     per_row: Duration::from_micros(1500),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             repository: PathBuf::from("artifacts"),
             startup_delay: Duration::from_millis(500),
@@ -465,6 +588,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
             tracing: false,
         },
         model_placement: ModelPlacementConfig::default(),
+        engines: EnginesConfig::default(),
         time_scale,
     }
 }
@@ -585,6 +709,53 @@ mod tests {
         for inst in d.cluster.endpoints() {
             assert!(inst.memory_used() <= budget, "{} over memory budget", inst.id);
         }
+        d.down();
+    }
+
+    #[test]
+    fn backend_configs_validate() {
+        for cpu_pods in [0, 1, 2] {
+            let cfg = backend_config(8.0, cpu_pods);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.engines.cpu_replicas, cpu_pods);
+            assert_eq!(cfg.server.replicas + cpu_pods, 4, "pod budget not equal");
+            assert!(cfg.model_placement.mesh_enabled());
+            assert_eq!(cfg.server.models[1].backends, vec!["onnx-sim".to_string()]);
+        }
+    }
+
+    #[test]
+    fn short_backend_run_holds_compat_invariant() {
+        use crate::workload::Schedule;
+        // Compressed mixed-fleet run: the CPU-only model must be served
+        // (on CPU pods exclusively), the hot model must keep its GPU
+        // replicas, and at least one fallback must have been counted
+        // (the hot model boot-placed onto a CPU pod via onnx-sim).
+        let cfg = backend_config(20.0, 1);
+        let d = crate::deployment::Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(4, Duration::from_secs(30)));
+        let pool = backend_workload(&d.endpoint(), d.clock.clone());
+        let report = pool.run(&Schedule::constant(10, Duration::from_secs(25)));
+        let cold = &report.per_model["icecube_cnn"];
+        assert!(cold.ok > 0, "CPU-only model never served: {:?}", report.per_model);
+        assert!(report.per_model["particlenet"].ok > 0, "hot model never served");
+        let router = d.router.as_ref().unwrap();
+        // Every replica of the CPU-only model advertises onnx-sim and
+        // serves the model on it — never a PJRT-only pod.
+        let replicas = router.endpoints_for("icecube_cnn");
+        assert!(!replicas.is_empty());
+        for inst in replicas {
+            assert!(
+                inst.backend_names().contains(&"onnx-sim".to_string()),
+                "{} hosts the CPU-only model without onnx-sim",
+                inst.id
+            );
+            assert_eq!(inst.backend_for_model("icecube_cnn").as_deref(), Some("onnx-sim"));
+        }
+        assert!(
+            d.store.sum_latest_prefix("backend_fallback_total") >= 1.0,
+            "no backend fallback recorded on the mixed fleet"
+        );
         d.down();
     }
 

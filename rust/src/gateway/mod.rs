@@ -438,6 +438,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             clock.clone(),
             registry.clone(),
@@ -585,6 +586,7 @@ mod tests {
                     per_row: Duration::from_micros(1),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             clock.clone(),
             registry.clone(),
@@ -643,6 +645,7 @@ mod tests {
                     per_row: Duration::from_micros(1),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             clock.clone(),
             registry.clone(),
@@ -921,6 +924,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             })
             .collect();
         let mk = |id: &str| {

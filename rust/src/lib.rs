@@ -28,6 +28,17 @@
 //! policies; with the default unlimited budget the deployment degenerates
 //! to the base all-models-everywhere setup.
 //!
+//! **Multi-backend engines** ([`engine`]) make the runtime pluggable:
+//! a [`Backend`](engine::Backend) trait with the PJRT runtime
+//! ([`engine::PjrtBackend`]) and a deterministic simulated CPU-capable
+//! second runtime ([`engine::OnnxSimBackend`]) behind it. Pods advertise
+//! a backend set derived from their accelerator class (`gpu` vs `cpu` —
+//! `engines.cpu_replicas` boots a CPU fleet next to the GPUs), each
+//! model resolves a backend preference list (`server.models[].backends`),
+//! and placement/routing only ever land a model where a compatible
+//! backend exists, falling back to a later-preference backend when the
+//! preferred one has no capacity.
+//!
 //! **Per-model autoscaling** (`autoscaler.per_model`) closes the loop
 //! between the two: instead of one global replica count, the autoscaler
 //! runs one scaling loop per served model, fed by the placement
@@ -46,6 +57,7 @@
 pub mod autoscaler;
 pub mod config;
 pub mod deployment;
+pub mod engine;
 pub mod experiments;
 pub mod gateway;
 pub mod metrics;

@@ -171,6 +171,19 @@ fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
         cfg.cluster.gpus_per_node,
         cfg.cluster.nodes * cfg.cluster.gpus_per_node
     );
+    if cfg.engines.cpu_replicas > 0 || cfg.server.models.iter().any(|m| !m.backends.is_empty()) {
+        println!(
+            "  engines:     default={}, {} cpu pod(s), onnx-sim {}x latency",
+            cfg.engines.default_backend,
+            cfg.engines.cpu_replicas,
+            cfg.engines.onnx_slowdown
+        );
+        for m in &cfg.server.models {
+            if !m.backends.is_empty() {
+                println!("    - {} backends: {}", m.name, m.backends.join(" > "));
+            }
+        }
+    }
     if cfg.model_placement.mesh_enabled() {
         println!(
             "  placement:   {} (budget {} MB/instance, thresholds {}/{} req/s, min {} replica(s)/model)",

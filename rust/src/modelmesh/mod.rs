@@ -59,10 +59,22 @@
 //! advertising only the hot model (boot profiles) and preferring
 //! scale-down victims whose serving sets are redundant.
 
+//! **Backends.** With the multi-backend engine layer
+//! ([`crate::engine`]), placement is additionally *backend-aware*:
+//! every instance view carries the backend set its pod's accelerator
+//! class advertises, and the planner only ever lands a model on an
+//! instance whose set intersects the model's preference list
+//! (`server.models[].backends`), preferring the model's first
+//! preference and falling back to later ones only when the preferred
+//! tier has no capacity. The demand signal is priority-weighted
+//! ([`placement::PRIORITY_DEMAND_WEIGHTS`]): a critical backlog scales
+//! its model before an equal bulk backlog.
+
 pub mod placement;
 pub mod router;
 
 pub use placement::{
-    initial_placement, InstanceView, Move, PlacementController, PlacementCore,
+    initial_placement, priority_weighted_backlog, InstanceView, Move,
+    PlacementController, PlacementCore, PRIORITY_DEMAND_WEIGHTS,
 };
 pub use router::ModelRouter;

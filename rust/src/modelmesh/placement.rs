@@ -36,12 +36,31 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
+use crate::config::schema::BACKEND_NAMES;
 use crate::config::{ModelPlacementConfig, PlacementPolicy};
 use crate::metrics::registry::{labels, Counter, Gauge, Registry};
 use crate::metrics::MetricStore;
 use crate::modelmesh::router::ModelRouter;
+use crate::rpc::codec::Priority;
 use crate::server::Instance;
 use crate::util::clock::Clock;
+
+/// Demand weight per priority class, indexed by [`Priority::index`]: a
+/// queued critical request pulls replicas harder than a queued standard
+/// one, and a bulk backlog pulls softer — so under equal backlogs the
+/// critical model scales first (the PR-4 priority classes reaching the
+/// placement signal).
+pub const PRIORITY_DEMAND_WEIGHTS: [f64; Priority::COUNT] = [0.5, 1.0, 2.0];
+
+/// Priority-weighted backlog: per-class queued-request counts folded
+/// into one demand number using [`PRIORITY_DEMAND_WEIGHTS`].
+pub fn priority_weighted_backlog(depths: [usize; Priority::COUNT]) -> f64 {
+    depths
+        .iter()
+        .zip(PRIORITY_DEMAND_WEIGHTS)
+        .map(|(&d, w)| d as f64 * w)
+        .sum()
+}
 
 /// Initial model set for instance number `instance_index`: models are
 /// taken in a rotation starting at `instance_index % catalog.len()` and
@@ -78,6 +97,11 @@ pub struct InstanceView {
     pub loading: BTreeSet<String>,
     /// Memory consumed by the serving set (warm + loading), bytes.
     pub mem_used: u64,
+    /// Backend names this instance advertises (its accelerator class's
+    /// backend set). An empty set means "unconstrained" — the legacy
+    /// single-runtime view; real instances always advertise at least
+    /// one backend.
+    pub backends: BTreeSet<String>,
 }
 
 impl InstanceView {
@@ -103,6 +127,11 @@ pub struct PlacementCore {
     catalog: Vec<(String, u64)>,
     /// Per-model warm-load time in clock seconds (missing = instant).
     load_costs: BTreeMap<String, f64>,
+    /// Per-model backend preference lists (missing model or an empty
+    /// map = unconstrained, the legacy single-runtime behavior). A move
+    /// only ever lands a model on an instance whose backend set
+    /// intersects its list.
+    compat: BTreeMap<String, Vec<String>>,
     /// Amortization horizon for the load charge, seconds.
     horizon: f64,
     /// (instance id, model) -> clock-seconds of the last move.
@@ -122,8 +151,52 @@ impl PlacementCore {
         catalog: Vec<(String, u64)>,
         load_costs: BTreeMap<String, f64>,
     ) -> Self {
+        Self::with_backends(cfg, catalog, load_costs, BTreeMap::new())
+    }
+
+    /// [`PlacementCore::with_load_costs`] with per-model backend
+    /// preference lists (the [`EngineCatalog`](crate::engine::EngineCatalog)
+    /// compat map): moves are planned only onto instances hosting a
+    /// compatible backend, preferring earlier-preference backends.
+    pub fn with_backends(
+        cfg: ModelPlacementConfig,
+        catalog: Vec<(String, u64)>,
+        load_costs: BTreeMap<String, f64>,
+        compat: BTreeMap<String, Vec<String>>,
+    ) -> Self {
         let horizon = cfg.load_cost_horizon().as_secs_f64();
-        PlacementCore { cfg, catalog, load_costs, horizon, cooldowns: BTreeMap::new() }
+        PlacementCore { cfg, catalog, load_costs, compat, horizon, cooldowns: BTreeMap::new() }
+    }
+
+    /// Can `view` host `model` at all — does its backend set intersect
+    /// the model's preference list? Unconstrained when the model has no
+    /// compat entry or the view carries no backend info (legacy views).
+    fn hostable(&self, view: &InstanceView, model: &str) -> bool {
+        match self.compat.get(model) {
+            None => true,
+            Some(prefs) => {
+                view.backends.is_empty() || prefs.iter().any(|b| view.backends.contains(b))
+            }
+        }
+    }
+
+    /// Preference rank of the backend `view` would serve `model` on
+    /// (0 = the model's preferred backend; higher = fallback). Used to
+    /// order grow candidates so the preferred backend's capacity is
+    /// consumed before falling back. Unconstrained views rank 0.
+    fn backend_rank(&self, view: &InstanceView, model: &str) -> usize {
+        match self.compat.get(model) {
+            None => 0,
+            Some(prefs) => {
+                if view.backends.is_empty() {
+                    return 0;
+                }
+                prefs
+                    .iter()
+                    .position(|b| view.backends.contains(b))
+                    .unwrap_or(usize::MAX)
+            }
+        }
     }
 
     /// Warm fraction of a new replica's guaranteed lifetime: the benefit
@@ -215,23 +288,27 @@ impl PlacementCore {
         let catalog = self.catalog.clone();
         for (model, mem) in &catalog {
             while present[model] < self.cfg.min_replicas_per_model {
-                // Preferred: an instance with free memory.
+                // Preferred: a backend-compatible instance with free
+                // memory — on the model's preferred backend when one
+                // exists, falling back otherwise.
                 let direct = views
                     .iter()
-                    .filter(|v| !v.present(model))
+                    .filter(|v| !v.present(model) && self.hostable(v, model))
                     .filter(|v| budget == 0 || v.mem_used + mem <= budget)
-                    .min_by_key(|v| (v.mem_used, v.loaded.len() + v.loading.len()))
+                    .min_by_key(|v| {
+                        (self.backend_rank(v, model), v.mem_used, v.loaded.len() + v.loading.len())
+                    })
                     .map(|v| v.id.clone());
                 let target = match direct {
                     Some(id) => Some(id),
                     None => {
                         // Evict the most-replicated surplus model from
-                        // some instance not hosting `model`, preferring
-                        // mid-load copies (canceling a load costs no
-                        // serving capacity).
+                        // some compatible instance not hosting `model`,
+                        // preferring mid-load copies (canceling a load
+                        // costs no serving capacity).
                         let evict = views
                             .iter()
-                            .filter(|v| !v.present(model))
+                            .filter(|v| !v.present(model) && self.hostable(v, model))
                             .filter_map(|v| {
                                 v.loaded
                                     .iter()
@@ -381,14 +458,20 @@ impl PlacementCore {
             .collect();
         hot.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
         for (model, mem, _load) in hot {
-            // Candidate: not already hosting (warm or mid-load), off
-            // cooldown, with free memory; prefer the emptiest instance.
+            // Candidate: backend-compatible, not already hosting (warm
+            // or mid-load), off cooldown, with free memory. Preference
+            // order: instances serving the model on its *preferred*
+            // backend first, then fallback backends (only used when the
+            // preferred tier has no capacity), emptiest instance within
+            // a tier.
             let candidate_id = views
                 .iter()
-                .filter(|v| !v.present(&model))
+                .filter(|v| !v.present(&model) && self.hostable(v, &model))
                 .filter(|v| self.cooldown_ok(now, &v.id, &model))
                 .filter(|v| budget == 0 || v.mem_used + mem <= budget)
-                .min_by_key(|v| (v.mem_used, v.loaded.len() + v.loading.len()))
+                .min_by_key(|v| {
+                    (self.backend_rank(v, &model), v.mem_used, v.loaded.len() + v.loading.len())
+                })
                 .map(|v| v.id.clone());
             if let Some(id) = candidate_id {
                 let v = views.iter_mut().find(|v| v.id == id).unwrap();
@@ -409,6 +492,9 @@ struct ModelHandles {
     replicas: Gauge,
     /// Replicas currently inside their warm-load window.
     loading: Gauge,
+    /// Warm replicas served per backend (`model_backend_replicas`),
+    /// keyed by backend name.
+    backend_replicas: BTreeMap<&'static str, Gauge>,
 }
 
 /// The running placement controller.
@@ -428,11 +514,15 @@ impl PlacementController {
     /// moves through `router`. `load_costs` maps model -> warm-load
     /// delay in clock seconds (the deployment resolves per-model
     /// overrides against `model_placement.load_delay`); missing entries
-    /// load free.
+    /// load free. `compat` is the engine catalog's per-model backend
+    /// preference map — the planner never lands a model on an instance
+    /// without a compatible backend (empty = unconstrained).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: ModelPlacementConfig,
         catalog: Vec<(String, u64)>,
         load_costs: BTreeMap<String, f64>,
+        compat: BTreeMap<String, Vec<String>>,
         router: Arc<ModelRouter>,
         store: MetricStore,
         clock: Clock,
@@ -442,6 +532,18 @@ impl PlacementController {
             .iter()
             .map(|(m, _)| {
                 let l = labels(&[("model", m)]);
+                let backend_replicas = BACKEND_NAMES
+                    .iter()
+                    .map(|b| {
+                        (
+                            *b,
+                            registry.gauge(
+                                "model_backend_replicas",
+                                &labels(&[("model", m), ("backend", b)]),
+                            ),
+                        )
+                    })
+                    .collect();
                 (
                     m.clone(),
                     ModelHandles {
@@ -449,15 +551,17 @@ impl PlacementController {
                         unloads: registry.counter("model_unload_events_total", &l),
                         replicas: registry.gauge("model_replicas", &l),
                         loading: registry.gauge("model_replicas_loading", &l),
+                        backend_replicas,
                     },
                 )
             })
             .collect();
         Arc::new(PlacementController {
-            core: Mutex::new(PlacementCore::with_load_costs(
+            core: Mutex::new(PlacementCore::with_backends(
                 cfg.clone(),
                 catalog.clone(),
                 load_costs,
+                compat,
             )),
             cfg,
             catalog,
@@ -473,23 +577,26 @@ impl PlacementController {
     /// demand window plus the live *per-model* batcher backlog across
     /// its pool (the affinity batcher's per-(instance, model) queues
     /// make this exact — an instance's backlog for other models is not
-    /// misattributed). This is the controller's export API — the
-    /// per-model autoscaler consumes the same signal the placement
-    /// planner does, so pod scaling and model placement pull in the same
-    /// direction.
+    /// misattributed). The backlog term is **priority-weighted**
+    /// ([`PRIORITY_DEMAND_WEIGHTS`]): a critical backlog pulls replicas
+    /// harder than an equal bulk backlog, so the models critical
+    /// traffic depends on scale first. This is the controller's export
+    /// API — the per-model autoscaler consumes the same signal the
+    /// placement planner does, so pod scaling and model placement pull
+    /// in the same direction.
     pub fn demand_for(&self, model: &str, now: f64) -> f64 {
         let series = format!("routed_requests_total{{model=\"{model}\"}}");
         let rate = self
             .store
             .rate_over(&series, now, self.cfg.demand_window)
             .unwrap_or(0.0);
-        let queued: usize = self
+        let queued: f64 = self
             .router
             .endpoints_for(model)
             .iter()
-            .map(|i| i.queue_depth_for(model))
+            .map(|i| priority_weighted_backlog(i.queue_depth_prio_for(model)))
             .sum();
-        rate + queued as f64
+        rate + queued
     }
 
     /// Demand for every catalog model at `now` (see
@@ -522,6 +629,7 @@ impl PlacementController {
                     loaded: warm.into_iter().collect(),
                     loading: loading.into_iter().collect(),
                     mem_used,
+                    backends: i.backend_names().into_iter().collect(),
                 }
             })
             .collect();
@@ -532,10 +640,24 @@ impl PlacementController {
             self.core.lock().unwrap().plan_repairs(now, &views)
         };
         self.apply(endpoints, moves);
+        // One consistent (warm model -> backend) snapshot per instance:
+        // the gauge refresh below must not re-take each instance's
+        // serving-set lock per (model, backend) pair, nor pair two
+        // non-atomic reads that could tear across a warm transition.
+        let served: Vec<_> = endpoints.iter().map(|i| i.warm_backends()).collect();
         for (m, h) in &self.per_model {
             h.replicas.set(self.router.replicas(m) as f64);
             h.loading
                 .set(endpoints.iter().filter(|i| i.is_loading(m)).count() as f64);
+            // Warm replicas per serving backend (the heterogeneity
+            // dashboard view: where does each model actually run).
+            for (backend, gauge) in &h.backend_replicas {
+                let n = served
+                    .iter()
+                    .filter(|s| s.get(m).map(String::as_str) == Some(*backend))
+                    .count();
+                gauge.set(n as f64);
+            }
         }
     }
 
@@ -599,6 +721,15 @@ mod tests {
             loaded: warm.iter().map(|m| m.to_string()).collect(),
             loading: loading.iter().map(|m| m.to_string()).collect(),
             mem_used: (warm.len() + loading.len()) as u64 * 600_000,
+            backends: BTreeSet::new(),
+        }
+    }
+
+    /// View with an explicit backend set.
+    fn view_backends(id: &str, warm: &[&str], backends: &[&str]) -> InstanceView {
+        InstanceView {
+            backends: backends.iter().map(|b| b.to_string()).collect(),
+            ..view(id, warm)
         }
     }
 
@@ -760,6 +891,7 @@ mod tests {
                 loaded: BTreeSet::new(),
                 loading: BTreeSet::new(),
                 mem_used: 0,
+                backends: BTreeSet::new(),
             },
         ];
         let moves = core.plan_repairs(0.0, &views);
@@ -842,6 +974,200 @@ mod tests {
                 .any(|m| matches!(m, Move::Load { model, .. } if model == "hot")),
             "planned a duplicate load while one was in flight: {moves:?}"
         );
+    }
+
+    /// Compat map: hot runs anywhere (pjrt preferred), cold is
+    /// onnx-sim-only (CPU-pinned).
+    fn compat() -> BTreeMap<String, Vec<String>> {
+        [
+            ("hot".to_string(), vec!["pjrt".to_string(), "onnx-sim".to_string()]),
+            ("cold".to_string(), vec!["onnx-sim".to_string()]),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    fn backend_core(c: ModelPlacementConfig) -> PlacementCore {
+        PlacementCore::with_backends(c, catalog(), BTreeMap::new(), compat())
+    }
+
+    #[test]
+    fn grow_never_lands_on_incompatible_backend() {
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = backend_core(c);
+        // cold is overloaded; the only instance without it is GPU-only
+        // (pjrt) — incompatible, so no load is planned at all.
+        let views = vec![
+            view_backends("cpu0", &["cold"], &["onnx-sim"]),
+            view_backends("gpu0", &["hot"], &["pjrt"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(50.0, 500.0));
+        assert!(
+            !moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "cold")),
+            "planned a cold load onto a pjrt-only instance: {moves:?}"
+        );
+    }
+
+    #[test]
+    fn repair_skips_incompatible_hosts_and_gives_up() {
+        // cold lost its last replica; the only candidates are GPU-only:
+        // the repair pass must give up, not place an unservable copy.
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = backend_core(c);
+        let views = vec![
+            view_backends("gpu0", &["hot"], &["pjrt"]),
+            view_backends("gpu1", &["hot"], &["pjrt"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(50.0, 5.0));
+        assert!(
+            !moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "cold")),
+            "repair placed cold on an incompatible instance: {moves:?}"
+        );
+        // With a CPU pod in the fleet, the repair lands there.
+        let views = vec![
+            view_backends("gpu0", &["hot"], &["pjrt"]),
+            view_backends("cpu0", &[], &["onnx-sim"]),
+        ];
+        let moves = core.plan(1.0, &views, &demand(50.0, 5.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "cpu0".to_string(), model: "cold".to_string() }]
+        );
+    }
+
+    #[test]
+    fn grow_prefers_preferred_backend_then_falls_back() {
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = backend_core(c.clone());
+        // hot is overloaded; both a GPU (preferred backend, fuller) and
+        // a CPU (fallback, already hosting cold) could take a replica:
+        // the preferred tier wins despite the memory tiebreak.
+        let views = vec![
+            view_backends("src", &["hot"], &["pjrt"]),
+            InstanceView {
+                mem_used: 600_000,
+                ..view_backends("gpu0", &[], &["pjrt"])
+            },
+            view_backends("cpu0", &["cold"], &["onnx-sim"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "gpu0".to_string(), model: "hot".to_string() }]
+        );
+        // With no pjrt capacity left, the fallback tier is used.
+        let mut core = backend_core(c);
+        let views = vec![
+            view_backends("src", &["hot"], &["pjrt"]),
+            view_backends("cpu0", &["cold"], &["onnx-sim"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "cpu0".to_string(), model: "hot".to_string() }]
+        );
+    }
+
+    #[test]
+    fn demand_for_scales_critical_backlog_before_equal_bulk() {
+        use crate::config::{ExecutionMode, LbPolicy, ModelConfig, ServiceModelConfig};
+        use crate::runtime::Tensor;
+        use crate::server::{InstanceOptions, ModelRepository};
+
+        // One stuck instance serving two models; equal-sized backlogs —
+        // bulk on the cnn, critical on particlenet — must yield a
+        // strictly higher demand signal for the critical model.
+        let models = ["icecube_cnn", "particlenet"];
+        let repo = Arc::new(
+            ModelRepository::load_metadata(
+                std::path::Path::new("artifacts"),
+                &models.map(String::from),
+            )
+            .unwrap(),
+        );
+        let model_cfgs: Vec<ModelConfig> = models
+            .iter()
+            .map(|m| ModelConfig {
+                name: m.to_string(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                // Huge base service: the executor sticks on the first
+                // request, so later submits stay queued.
+                service_model: ServiceModelConfig {
+                    base: Duration::from_secs(10),
+                    per_row: Duration::from_micros(1),
+                },
+                load_delay: None,
+                backends: Vec::new(),
+            })
+            .collect();
+        // 50x dilation keeps the stuck 10 s (clock) service — and the
+        // drain on stop() — at a few hundred real milliseconds.
+        let clock = Clock::scaled(50.0);
+        let inst = crate::server::Instance::start_with_opts(
+            "dw0",
+            Arc::clone(&repo),
+            &model_cfgs,
+            clock.clone(),
+            Registry::new(),
+            InstanceOptions { exec_mode: ExecutionMode::Simulated, ..Default::default() },
+        );
+        inst.mark_ready();
+        let cnn = || Tensor::zeros(vec![1, 16, 16, 3]);
+        let pn = || Tensor::zeros(vec![1, 64, 7]);
+        // Occupy the executor, then queue equal backlogs per model.
+        let mut rxs = Vec::new();
+        rxs.push(inst.submit("icecube_cnn", cnn(), 0).unwrap());
+        std::thread::sleep(Duration::from_millis(100));
+        for i in 0..3 {
+            rxs.push(inst.submit_prio("icecube_cnn", cnn(), Priority::Bulk, i).unwrap());
+            rxs.push(inst.submit_prio("particlenet", pn(), Priority::Critical, i).unwrap());
+        }
+        let registry = Registry::new();
+        let router = Arc::new(ModelRouter::new(
+            &models.map(String::from),
+            LbPolicy::RoundRobin,
+            0,
+            &registry,
+            7,
+        ));
+        router.sync(&[Arc::clone(&inst)]);
+        let catalog: Vec<(String, u64)> =
+            models.iter().map(|m| (m.to_string(), 1)).collect();
+        let controller = PlacementController::new(
+            cfg(),
+            catalog,
+            BTreeMap::new(),
+            BTreeMap::new(),
+            Arc::clone(&router),
+            MetricStore::new(Duration::from_secs(60)),
+            clock.clone(),
+            &registry,
+        );
+        let now = clock.now_secs();
+        let bulk_demand = controller.demand_for("icecube_cnn", now);
+        let critical_demand = controller.demand_for("particlenet", now);
+        assert!(
+            critical_demand > bulk_demand,
+            "equal backlogs, but critical ({critical_demand}) did not outweigh \
+             bulk ({bulk_demand})"
+        );
+        inst.stop();
+    }
+
+    #[test]
+    fn priority_weighted_backlog_orders_classes() {
+        // Equal backlogs: critical outweighs standard outweighs bulk.
+        let bulk = priority_weighted_backlog([10, 0, 0]);
+        let standard = priority_weighted_backlog([0, 10, 0]);
+        let critical = priority_weighted_backlog([0, 0, 10]);
+        assert!(critical > standard && standard > bulk, "{bulk} {standard} {critical}");
+        // Standard keeps the legacy unweighted semantics.
+        assert_eq!(standard, 10.0);
+        assert_eq!(priority_weighted_backlog([0, 0, 0]), 0.0);
     }
 
     #[test]

@@ -231,6 +231,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             })
             .collect();
         let inst = Instance::start_with_mode(
@@ -340,6 +341,7 @@ mod tests {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: Some(delay),
+                backends: Vec::new(),
             })
             .collect();
         let inst = Instance::start_with_mode(

@@ -6,6 +6,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::config::ClusterConfig;
+use crate::engine::AcceleratorClass;
 use crate::metrics::registry::{labels, Gauge, Counter, Registry};
 use crate::server::Instance;
 use crate::util::clock::Clock;
@@ -29,8 +30,12 @@ pub enum PodPhase {
 /// The second argument is the pod's boot profile: `Some(model)` when the
 /// pod was spawned by per-model autoscaling for one specific model (the
 /// instance should boot advertising only that model), `None` for generic
-/// pods (the factory applies its default initial placement).
-pub type InstanceFactory = Arc<dyn Fn(&str, Option<&str>) -> Arc<Instance> + Send + Sync>;
+/// pods (the factory applies its default initial placement). The third
+/// is the pod's accelerator class — the factory derives the instance's
+/// backend set from it (`gpu` pods advertise PJRT, `cpu` pods only
+/// CPU-capable backends).
+pub type InstanceFactory =
+    Arc<dyn Fn(&str, Option<&str>, AcceleratorClass) -> Arc<Instance> + Send + Sync>;
 
 /// Post-reconcile hook: invoked with the Ready endpoint snapshot after
 /// every reconcile pass. The modelmesh placement controller hangs off
@@ -50,6 +55,9 @@ struct Pod {
     /// Boot profile: the model this pod was spawned for (per-model
     /// scaling), `None` for generic pods.
     profile: Option<String>,
+    /// Accelerator class of the pod's slot (`gpu` for the classic
+    /// fleet, `cpu` for `engines.cpu_replicas` pods).
+    accel: AcceleratorClass,
 }
 
 struct State {
@@ -67,6 +75,10 @@ pub struct Cluster {
     clock: Clock,
     factory: InstanceFactory,
     desired: AtomicUsize,
+    /// CPU-class pod target (`engines.cpu_replicas`): a separate pod
+    /// group converged next to the GPU groups in every mode. CPU pods
+    /// never carry a model boot profile.
+    cpu_desired: AtomicUsize,
     /// Per-model pod targets when per-model autoscaling drives the
     /// cluster (`None` = classic single global target). Each pod carries
     /// the model it was spawned for as its boot profile, and the
@@ -110,6 +122,34 @@ impl Cluster {
             cfg,
             startup_delay,
             initial_replicas,
+            0,
+            None,
+            clock,
+            registry,
+            factory,
+            seed,
+        )
+    }
+
+    /// [`Cluster::start`] with an additional CPU-class pod group
+    /// (`engines.cpu_replicas`): `initial_cpu` pods boot with
+    /// [`AcceleratorClass::Cpu`], advertising only CPU-capable backends.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_cpu(
+        cfg: ClusterConfig,
+        startup_delay: Duration,
+        initial_replicas: usize,
+        initial_cpu: usize,
+        clock: Clock,
+        registry: Registry,
+        factory: InstanceFactory,
+        seed: u64,
+    ) -> Arc<Self> {
+        Self::start_inner(
+            cfg,
+            startup_delay,
+            initial_replicas,
+            initial_cpu,
             None,
             clock,
             registry,
@@ -136,6 +176,7 @@ impl Cluster {
             cfg,
             startup_delay,
             initial,
+            0,
             Some(targets),
             clock,
             registry,
@@ -149,6 +190,7 @@ impl Cluster {
         cfg: ClusterConfig,
         startup_delay: Duration,
         initial_replicas: usize,
+        initial_cpu: usize,
         targets: Option<BTreeMap<String, usize>>,
         clock: Clock,
         registry: Registry,
@@ -179,6 +221,7 @@ impl Cluster {
             clock: clock.clone(),
             factory,
             desired: AtomicUsize::new(initial_replicas),
+            cpu_desired: AtomicUsize::new(initial_cpu),
             model_desired: Mutex::new(targets),
             victim_floor: AtomicUsize::new(1),
             model_gauges: Mutex::new(model_gauges),
@@ -231,12 +274,34 @@ impl Cluster {
     }
 
     /// Current replica target: the global target, or the sum of the
-    /// per-model targets in per-model mode.
+    /// per-model targets in per-model mode. CPU-class pods are a
+    /// separate group (see [`Cluster::cpu_desired`]) and do not count
+    /// here — this is the autoscaler-facing GPU target.
     pub fn desired(&self) -> usize {
         match &*self.model_desired.lock().unwrap() {
             Some(targets) => targets.values().sum(),
             None => self.desired.load(Ordering::SeqCst),
         }
+    }
+
+    /// Set the CPU-class pod target (the `engines.cpu_replicas` group).
+    pub fn set_cpu_desired(&self, n: usize) {
+        self.cpu_desired.store(n, Ordering::SeqCst);
+    }
+
+    /// Current CPU-class pod target.
+    pub fn cpu_desired(&self) -> usize {
+        self.cpu_desired.load(Ordering::SeqCst)
+    }
+
+    /// Running CPU-class pods.
+    pub fn running_cpu(&self) -> usize {
+        let state = self.state.lock().unwrap();
+        state
+            .pods
+            .values()
+            .filter(|p| p.phase == PodPhase::Running && p.accel == AcceleratorClass::Cpu)
+            .count()
     }
 
     /// Set one model's pod target (per-model mode only; unknown models
@@ -332,10 +397,12 @@ impl Cluster {
         // (momentary over-kill).
         let targets: Option<BTreeMap<String, usize>> =
             self.model_desired.lock().unwrap().clone();
-        let desired_total: usize = match &targets {
-            Some(t) => t.values().sum(),
-            None => self.desired.load(Ordering::SeqCst),
-        };
+        let cpu_want = self.cpu_desired.load(Ordering::SeqCst);
+        let desired_total: usize = cpu_want
+            + match &targets {
+                Some(t) => t.values().sum::<usize>(),
+                None => self.desired.load(Ordering::SeqCst),
+            };
         let mut to_stop: Vec<Arc<Instance>> = Vec::new();
         {
             let mut state = self.state.lock().unwrap();
@@ -372,7 +439,8 @@ impl Cluster {
                                     .as_secs_f64();
                             self.m_pod_failures.inc();
                         } else {
-                            let instance = (self.factory)(&name, pod.profile.as_deref());
+                            let instance =
+                                (self.factory)(&name, pod.profile.as_deref(), pod.accel);
                             instance.mark_ready();
                             pod.instance = Some(Arc::clone(&instance));
                             pod.phase = PodPhase::Running;
@@ -395,15 +463,29 @@ impl Cluster {
 
             // 2. Converge replica counts on the snapshot: every pod group
             // (one per model in per-model mode, a single global group
-            // otherwise) independently.
+            // otherwise; the CPU-class group in every mode)
+            // independently.
             match &targets {
-                None => self.converge_group(&mut state, None, desired_total, now),
+                None => self.converge_group(
+                    &mut state,
+                    None,
+                    AcceleratorClass::Gpu,
+                    desired_total - cpu_want,
+                    now,
+                ),
                 Some(t) => {
                     for (model, want) in t {
-                        self.converge_group(&mut state, Some(model.as_str()), *want, now);
+                        self.converge_group(
+                            &mut state,
+                            Some(model.as_str()),
+                            AcceleratorClass::Gpu,
+                            *want,
+                            now,
+                        );
                     }
                 }
             }
+            self.converge_group(&mut state, None, AcceleratorClass::Cpu, cpu_want, now);
 
             self.m_desired.set(desired_total as f64);
             if let Some(t) = &targets {
@@ -437,28 +519,37 @@ impl Cluster {
         }
     }
 
-    /// Converge one pod group (pods whose boot profile equals `profile`)
-    /// to `want` replicas: spawn the deficit, or pick and kill the
-    /// surplus. Victim order: not-yet-Running pods first (they serve
-    /// nothing), then placement-aware selection among Running pods (see
+    /// Converge one pod group (pods whose boot profile equals `profile`
+    /// AND whose accelerator class equals `accel`) to `want` replicas:
+    /// spawn the deficit, or pick and kill the surplus. Victim order:
+    /// not-yet-Running pods first (they serve nothing), then
+    /// placement-aware selection among Running pods (see
     /// [`select_scale_down_victims`]) — youngest-first only breaks ties.
     fn converge_group(
         &self,
         state: &mut State,
         profile: Option<&str>,
+        accel: AcceleratorClass,
         want: usize,
         now: f64,
     ) {
         let group: Vec<String> = state
             .pods
             .iter()
-            .filter(|(_, p)| p.phase != PodPhase::Terminating && p.profile.as_deref() == profile)
+            .filter(|(_, p)| {
+                p.phase != PodPhase::Terminating
+                    && p.profile.as_deref() == profile
+                    && p.accel == accel
+            })
             .map(|(k, _)| k.clone())
             .collect();
 
         if group.len() < want {
             for _ in 0..(want - group.len()) {
-                let name = format!("triton-{}", state.next_pod_id);
+                let name = match accel {
+                    AcceleratorClass::Gpu => format!("triton-{}", state.next_pod_id),
+                    AcceleratorClass::Cpu => format!("triton-cpu-{}", state.next_pod_id),
+                };
                 state.next_pod_id += 1;
                 state.pods.insert(
                     name,
@@ -469,6 +560,7 @@ impl Cluster {
                         phase_deadline: now,
                         attempts: 0,
                         profile: profile.map(String::from),
+                        accel,
                     },
                 );
             }
@@ -670,7 +762,7 @@ mod tests {
     });
 
     fn factory(registry: Registry, clock: Clock) -> InstanceFactory {
-        Arc::new(move |name: &str, profile: Option<&str>| {
+        Arc::new(move |name: &str, profile: Option<&str>, _accel: AcceleratorClass| {
             let inst = Instance::start_with_mode(
                 name,
                 Arc::clone(&REPO),
@@ -921,6 +1013,56 @@ mod tests {
         }
         assert_eq!(cluster.running(), 1);
         assert_eq!(cluster.desired_for("unknown_model"), 0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cpu_group_converges_next_to_gpu_group() {
+        let registry = Registry::new();
+        let clock = Clock::real();
+        // Track the accelerator classes the factory saw, per pod name.
+        let classes = Arc::new(Mutex::new(BTreeMap::<String, AcceleratorClass>::new()));
+        let classes2 = Arc::clone(&classes);
+        let base = factory(registry.clone(), clock.clone());
+        let spy: InstanceFactory = Arc::new(move |name, profile, accel| {
+            classes2.lock().unwrap().insert(name.to_string(), accel);
+            base(name, profile, accel)
+        });
+        let cluster = Cluster::start_with_cpu(
+            fast_cfg(), // capacity 4
+            Duration::from_millis(10),
+            2,
+            1,
+            clock,
+            registry,
+            spy,
+            21,
+        );
+        assert_eq!(cluster.cpu_desired(), 1);
+        assert!(cluster.wait_ready(3, Duration::from_secs(5)));
+        assert_eq!(cluster.running_cpu(), 1);
+        let classes = classes.lock().unwrap().clone();
+        assert_eq!(
+            classes.values().filter(|&&c| c == AcceleratorClass::Cpu).count(),
+            1,
+            "{classes:?}"
+        );
+        assert_eq!(
+            classes.values().filter(|&&c| c == AcceleratorClass::Gpu).count(),
+            2,
+            "{classes:?}"
+        );
+        // the cpu group scales independently of the gpu target
+        cluster.set_cpu_desired(2);
+        assert!(cluster.wait_ready(4, Duration::from_secs(5)));
+        assert_eq!(cluster.running_cpu(), 2);
+        cluster.set_cpu_desired(0);
+        let t0 = std::time::Instant::now();
+        while cluster.running_cpu() > 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(cluster.running_cpu(), 0);
+        assert_eq!(cluster.running(), 2, "gpu group disturbed by cpu scaling");
         cluster.shutdown();
     }
 

@@ -30,6 +30,13 @@
 //!   The per-model autoscaler drives the targets through
 //!   [`Cluster::set_desired_for`].
 //!
+//! Pods carry an accelerator class
+//! ([`AcceleratorClass`](crate::engine::AcceleratorClass)) in their boot
+//! profile: the classic fleet is `gpu`, and [`Cluster::start_with_cpu`]
+//! (driven by `engines.cpu_replicas`) converges an additional `cpu` pod
+//! group next to it — CPU pods advertise only CPU-capable backends, so
+//! a heterogeneous fleet partitions by what each pod can actually run.
+//!
 //! Scale-down is placement-aware in both shapes: victim selection
 //! ([`select_scale_down_victims`]) prefers pods whose advertised models
 //! remain covered by at least the configured floor of other replicas, so

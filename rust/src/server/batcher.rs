@@ -27,7 +27,12 @@
 //! arrival order, and every lane head is flushed no later than its
 //! `max_queue_delay` *subject to priority*: an expired higher-priority
 //! head anywhere in the queue is served first (under sustained critical
-//! saturation, bulk waits — that is the point of the lanes).
+//! saturation, bulk waits — that is the point of the lanes). Waiting is
+//! bounded, though: **anti-starvation aging** (`server.priorities.
+//! max_bulk_wait`, zero = off) promotes a below-critical head that has
+//! waited past the bound to the front of the next pop — ahead of every
+//! un-aged lane, oldest aged head first — so sustained critical
+//! saturation delays bulk but can never starve it forever.
 //!
 //! The queue is also where overload protection lands: admission is
 //! bounded by total queued **rows** (multi-row requests count their
@@ -183,6 +188,9 @@ pub struct BatchQueue {
     /// is still admitted into an empty queue and pops alone).
     capacity: usize,
     mode: BatchMode,
+    /// Anti-starvation aging bound for below-critical lane heads
+    /// (`server.priorities.max_bulk_wait`; zero disables aging).
+    max_bulk_wait: Duration,
 }
 
 impl BatchQueue {
@@ -193,8 +201,15 @@ impl BatchQueue {
     }
 
     /// Queue with an explicit admission mode (`Fifo` is the ablation
-    /// baseline).
+    /// baseline) and aging disabled.
     pub fn with_mode(capacity: usize, mode: BatchMode) -> Self {
+        Self::with_aging(capacity, mode, Duration::ZERO)
+    }
+
+    /// [`BatchQueue::with_mode`] with an anti-starvation aging bound: a
+    /// below-critical lane head older than `max_bulk_wait` is promoted
+    /// to the front of priority-first selection (zero disables).
+    pub fn with_aging(capacity: usize, mode: BatchMode, max_bulk_wait: Duration) -> Self {
         BatchQueue {
             inner: Mutex::new(Inner {
                 groups: BTreeMap::new(),
@@ -207,6 +222,7 @@ impl BatchQueue {
             available: Condvar::new(),
             capacity,
             mode,
+            max_bulk_wait,
         }
     }
 
@@ -319,6 +335,21 @@ impl BatchQueue {
             .collect()
     }
 
+    /// Queued requests for one model, split by priority class and
+    /// indexed by [`Priority::index`] — the priority-aware backlog the
+    /// placement demand signal weights (a critical backlog should
+    /// attract replicas harder than an equal bulk backlog).
+    pub fn priority_depth_for(&self, model: &str) -> [usize; Priority::COUNT] {
+        let inner = self.inner.lock().unwrap();
+        let mut out = [0usize; Priority::COUNT];
+        if let Some(group) = inner.groups.get(model) {
+            for (li, lane) in group.lanes.iter().enumerate() {
+                out[li] = lane.queue.len();
+            }
+        }
+        out
+    }
+
     /// Queued requests per priority class across all models, indexed by
     /// [`Priority::index`] — one lock acquisition for the per-priority
     /// depth gauges.
@@ -385,8 +416,14 @@ impl BatchQueue {
 
         // Affinity (and any draining flush): expired heads first —
         // priority order, then oldest head — so the latency bound holds
-        // per lane and urgency wins ties across lanes.
-        let mut expired: Option<(usize, Nanos, String)> = None;
+        // per lane and urgency wins ties across lanes. Anti-starvation
+        // aging folds in here: a below-critical head older than
+        // `max_bulk_wait` competes at an *effective* priority above
+        // critical (oldest aged head first), so it is served in the
+        // very next pop no matter how deep the higher lanes are.
+        let aging = self.max_bulk_wait.as_nanos() as Nanos;
+        // (effective priority, enqueued, model, actual lane index)
+        let mut expired: Option<(usize, Nanos, String, usize)> = None;
         let mut ready: Option<(usize, usize, String)> = None;
         let mut earliest: Option<Nanos> = None;
         for (model, group) in &inner.groups {
@@ -395,12 +432,14 @@ impl BatchQueue {
             for (li, lane) in group.lanes.iter().enumerate().rev() {
                 let Some((_, head)) = lane.queue.front() else { continue };
                 let deadline = head.enqueued + policy.max_queue_delay.as_nanos() as Nanos;
-                if inner.draining || now >= deadline {
+                let aged = aging > 0 && li < Priority::COUNT - 1 && now >= head.enqueued + aging;
+                let eff = if aged { Priority::COUNT } else { li };
+                if inner.draining || aged || now >= deadline {
                     let better = expired
                         .as_ref()
-                        .is_none_or(|&(p, e, _)| li > p || (li == p && head.enqueued < e));
+                        .is_none_or(|&(p, e, _, _)| eff > p || (eff == p && head.enqueued < e));
                     if better {
-                        expired = Some((li, head.enqueued, model.clone()));
+                        expired = Some((eff, head.enqueued, model.clone(), li));
                     }
                 } else if lane.rows >= target {
                     let better = ready
@@ -409,12 +448,20 @@ impl BatchQueue {
                     if better {
                         ready = Some((li, lane.rows, model.clone()));
                     }
-                } else if earliest.as_ref().is_none_or(|e| deadline < *e) {
-                    earliest = Some(deadline);
+                } else {
+                    // Wake at whichever comes first: the batching
+                    // deadline or the head crossing the aging bound.
+                    let mut wake = deadline;
+                    if aging > 0 && li < Priority::COUNT - 1 {
+                        wake = wake.min(head.enqueued + aging);
+                    }
+                    if earliest.as_ref().is_none_or(|e| wake < *e) {
+                        earliest = Some(wake);
+                    }
                 }
             }
         }
-        if let Some((lane, _, model)) = expired {
+        if let Some((_, _, model, lane)) = expired {
             return Pick::Serve { model, lane: Some(lane) };
         }
         if let Some((lane, _, model)) = ready {
@@ -1046,6 +1093,88 @@ mod tests {
         assert_eq!(batch[0].trace_id, 1, "fifo reordered by priority");
         assert_eq!(batch[1].trace_id, 2);
         assert_eq!(q.preemptions(), 0);
+    }
+
+    #[test]
+    fn priority_depth_for_splits_one_models_lanes() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64);
+        let mut _rxs = Vec::new();
+        for (model, prio) in [
+            ("a", Priority::Bulk),
+            ("a", Priority::Bulk),
+            ("a", Priority::Critical),
+            ("b", Priority::Standard),
+        ] {
+            let (p, rx) = pending_prio(model, 1, prio, 0, &clock);
+            q.push(p).map_err(|_| ()).unwrap();
+            _rxs.push(rx);
+        }
+        assert_eq!(q.priority_depth_for("a"), [2, 0, 1]);
+        assert_eq!(q.priority_depth_for("b"), [0, 1, 0]);
+        assert_eq!(q.priority_depth_for("unknown"), [0, 0, 0]);
+    }
+
+    #[test]
+    fn aged_bulk_head_promoted_past_expired_critical() {
+        let clock = Clock::real();
+        let q = BatchQueue::with_aging(64, BatchMode::Affinity, Duration::from_millis(40));
+        // Bulk arrives on one model...
+        let (pb, _rb) = pending_prio("bulkmodel", 1, Priority::Bulk, 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        // ...and by the time it crosses the aging bound, expired
+        // critical work is queued on another model.
+        std::thread::sleep(Duration::from_millis(50));
+        let (pc, _rc) = pending_prio("critmodel", 1, Priority::Critical, 2, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        // Without aging the critical lane would win priority-first
+        // selection; the aged bulk head must be promoted past it once.
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch[0].trace_id, 1, "aged bulk head not promoted");
+        // The promotion is one pop: critical is served right after.
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch[0].trace_id, 2);
+    }
+
+    #[test]
+    fn aging_disabled_keeps_pure_priority_order() {
+        let clock = Clock::real();
+        let q = BatchQueue::new(64); // max_bulk_wait zero = off
+        let (pb, _rb) = pending_prio("bulkmodel", 1, Priority::Bulk, 1, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let (pc, _rc) = pending_prio("critmodel", 1, Priority::Critical, 2, &clock);
+        q.push(pc).map_err(|_| ()).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        let batch = q
+            .pop_batch(&clock, policy(1, 8, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch[0].trace_id, 2, "critical should win without aging");
+    }
+
+    #[test]
+    fn aging_wakes_sleeping_pop_at_the_bound() {
+        let clock = Clock::real();
+        // Wide 5 s batching window, 60 ms aging bound: the pop must wake
+        // at the bound, not the window.
+        let q = BatchQueue::with_aging(64, BatchMode::Affinity, Duration::from_millis(60));
+        let (pb, _rb) = pending_prio("m", 1, Priority::Bulk, 7, &clock);
+        q.push(pb).map_err(|_| ()).unwrap();
+        let t0 = std::time::Instant::now();
+        let batch = q
+            .pop_batch(&clock, policy(5000, 8, 16), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(batch[0].trace_id, 7);
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(50) && waited < Duration::from_millis(500),
+            "pop should wake near the aging bound, waited {waited:?}"
+        );
     }
 
     #[test]

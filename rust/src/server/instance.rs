@@ -19,6 +19,18 @@
 //! once the model's configured `load_delay` has elapsed. Bootstrap
 //! placements ([`Instance::set_loaded_models`]) skip the window: the
 //! pod's `startup_delay` already charges the initial load.
+//!
+//! **Backends.** Every serving-set entry also records which
+//! [`Backend`](crate::engine::Backend) serves the model here: the first
+//! entry of the model's preference list
+//! ([`EngineCatalog`](crate::engine::EngineCatalog)) that this
+//! instance's backend set supports. A model with no compatible backend
+//! cannot enter the serving set at all (`load_model` returns false,
+//! bootstrap skips it), the chosen backend's multipliers scale the
+//! model's warm-load delay and memory footprint, and the executor
+//! dispatches every batch through it. Picking any backend past the
+//! first preference is a *fallback*, counted in
+//! `backend_fallback_total`.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
@@ -26,6 +38,7 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::config::{BatchMode, ExecutionMode, ModelConfig, ServiceModelConfig};
+use crate::engine::{AcceleratorClass, Backend, BackendRegistry, EngineCatalog, ExecCtx};
 use crate::metrics::registry::{labels, Registry};
 use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
@@ -108,15 +121,20 @@ pub struct Instance {
     policies: HashMap<String, BatchPolicy>,
     exec_mode: ExecutionMode,
     service_models: HashMap<String, ServiceModelConfig>,
-    /// The serving set: model -> clock-nanos at which it is (or becomes)
-    /// warm. An entry with `warm_at` in the future is `Loading`: memory
-    /// is already charged, but the model is not advertised (the
-    /// Kubernetes pod-label mechanism from the dynamic-model-loading
-    /// design: the per-model load balancers build their address pools
-    /// from the *warm* entries only). The shared [`ModelRepository`] may
-    /// hold more models; only advertised ones are accepted by
-    /// [`Instance::submit`].
-    loaded: RwLock<BTreeMap<String, Nanos>>,
+    /// The serving set: model -> serving entry (warm-at clock-nanos +
+    /// the backend chosen for it). An entry with `warm_at` in the
+    /// future is `Loading`: memory is already charged, but the model is
+    /// not advertised (the Kubernetes pod-label mechanism from the
+    /// dynamic-model-loading design: the per-model load balancers build
+    /// their address pools from the *warm* entries only). The shared
+    /// [`ModelRepository`] may hold more models; only advertised ones
+    /// are accepted by [`Instance::submit`].
+    loaded: RwLock<BTreeMap<String, Serving>>,
+    /// The backend set this instance advertises (derived from its pod's
+    /// accelerator class; never empty).
+    backends: Vec<Arc<dyn Backend>>,
+    /// Per-model backend preference lists (shared, deployment-wide).
+    catalog: Arc<EngineCatalog>,
     /// Simulated warm-load window per model (clock time), from
     /// `ModelConfig::load_delay` (deployment-resolved; zero = instant).
     load_delays: HashMap<String, Duration>,
@@ -141,6 +159,20 @@ pub struct Instance {
     m_shed_priority: [crate::metrics::registry::Counter; Priority::COUNT],
     /// Higher-priority batches served past older lower-priority work.
     m_preemptions: crate::metrics::registry::Counter,
+    /// Requests executed per backend (`backend_inference_total`), keyed
+    /// by backend name.
+    m_backend_inference: HashMap<&'static str, crate::metrics::registry::Counter>,
+    /// Per-model fallback-selection counters (`backend_fallback_total`),
+    /// created lazily like the per-model request counters.
+    m_backend_fallback: Mutex<HashMap<String, crate::metrics::registry::Counter>>,
+}
+
+/// One serving-set entry.
+struct Serving {
+    /// Clock-nanos at which the model is (or becomes) warm.
+    warm_at: Nanos,
+    /// The backend that serves this model on this instance.
+    backend: Arc<dyn Backend>,
 }
 
 /// Tuning knobs for [`Instance::start_with_opts`] beyond the model list.
@@ -155,6 +187,21 @@ pub struct InstanceOptions {
     pub exec_mode: ExecutionMode,
     /// Batch admission policy (`Affinity` default, `Fifo` baseline).
     pub batch_mode: BatchMode,
+    /// Anti-starvation aging bound for the batcher's priority-first
+    /// selection (`server.priorities.max_bulk_wait`; zero = off).
+    pub max_bulk_wait: Duration,
+    /// The backend set this instance advertises — its pod's accelerator
+    /// class resolved through the
+    /// [`BackendRegistry`](crate::engine::BackendRegistry). Must be
+    /// non-empty; the default is the GPU-class set (PJRT only), which
+    /// preserves the classic single-runtime behavior.
+    pub backends: Vec<Arc<dyn Backend>>,
+    /// Per-model backend preference lists. Leaving the default (empty)
+    /// catalog makes the constructor resolve one from its model list,
+    /// so `ModelConfig::backends` is honored either way; deployments
+    /// pass the shared resolved catalog (which also carries the
+    /// configured `engines.default_backend`).
+    pub catalog: Arc<EngineCatalog>,
 }
 
 impl Default for InstanceOptions {
@@ -164,6 +211,9 @@ impl Default for InstanceOptions {
             util_window: 10.0,
             exec_mode: ExecutionMode::Real,
             batch_mode: BatchMode::Affinity,
+            max_bulk_wait: Duration::ZERO,
+            backends: BackendRegistry::default().for_class(AcceleratorClass::Gpu),
+            catalog: Arc::new(EngineCatalog::default()),
         }
     }
 }
@@ -285,9 +335,53 @@ impl Instance {
             prio_shed(&Priority::Standard),
             prio_shed(&Priority::Critical),
         ];
+        assert!(!opts.backends.is_empty(), "instance needs at least one backend");
+        // An unresolved (default, empty) catalog would treat every model
+        // as unconstrained; resolve one from the model list instead so
+        // per-model `backends` preferences are honored even when the
+        // caller wired no catalog (deployments always pass a resolved
+        // one, which also carries the `engines.default_backend` choice).
+        let catalog = if opts.catalog.is_empty() {
+            Arc::new(EngineCatalog::resolve(models, &crate::config::EnginesConfig::default()))
+        } else {
+            Arc::clone(&opts.catalog)
+        };
+        // Bootstrap serving set: every configured model this instance's
+        // backend set can serve, warm immediately (the pod's
+        // startup_delay already charged the initial load). Models with
+        // no compatible backend are skipped — the modelmesh invariant
+        // starts at birth.
+        // (Fallback events are counted on placement operations —
+        // `load_model` / `set_loaded_models` — not on this constructor
+        // bootstrap, which the deployment factory immediately replaces.)
+        let boot_serving: BTreeMap<String, Serving> = models
+            .iter()
+            .filter_map(|m| {
+                catalog.select(&m.name, &opts.backends).map(|(backend, _)| {
+                    (m.name.clone(), Serving { warm_at: 0, backend })
+                })
+            })
+            .collect();
+        let m_backend_inference: HashMap<&'static str, crate::metrics::registry::Counter> =
+            opts.backends
+                .iter()
+                .map(|b| {
+                    (
+                        b.name(),
+                        registry2.counter(
+                            "backend_inference_total",
+                            &labels(&[("instance", id), ("backend", b.name())]),
+                        ),
+                    )
+                })
+                .collect();
         let instance = Arc::new(Instance {
             id: id.to_string(),
-            queue: Arc::new(BatchQueue::with_mode(opts.queue_capacity, opts.batch_mode)),
+            queue: Arc::new(BatchQueue::with_aging(
+                opts.queue_capacity,
+                opts.batch_mode,
+                opts.max_bulk_wait,
+            )),
             state: AtomicU8::new(InstanceState::Starting as u8),
             inflight: AtomicUsize::new(0),
             repo,
@@ -307,7 +401,9 @@ impl Instance {
             policies,
             exec_mode: opts.exec_mode,
             service_models,
-            loaded: RwLock::new(models.iter().map(|m| (m.name.clone(), 0)).collect()),
+            loaded: RwLock::new(boot_serving),
+            backends: opts.backends,
+            catalog,
             load_delays,
             loading_inflight: std::sync::atomic::AtomicBool::new(false),
             m_models_loaded: registry2.gauge("models_loaded", &inst_labels),
@@ -317,6 +413,8 @@ impl Instance {
             m_queue_depth_priority,
             m_shed_priority,
             m_preemptions: registry2.counter("batch_preemptions_total", &inst_labels),
+            m_backend_inference,
+            m_backend_fallback: Mutex::new(HashMap::new()),
         });
         instance.refresh_placement_gauges();
         let exec = Arc::clone(&instance);
@@ -355,6 +453,12 @@ impl Instance {
         self.queue.depth_for(model)
     }
 
+    /// Queued requests for one model, split by priority class (indexed
+    /// by [`Priority::index`]) — the priority-aware demand signal.
+    pub fn queue_depth_prio_for(&self, model: &str) -> [usize; Priority::COUNT] {
+        self.queue.priority_depth_for(model)
+    }
+
     /// Utilization over the sliding window, as of now.
     pub fn utilization(&self) -> f64 {
         self.util.lock().unwrap().utilization(self.clock.now_secs())
@@ -364,21 +468,23 @@ impl Instance {
     /// serving set AND warm? A model mid-load answers false: routers must
     /// not send it traffic yet.
     pub fn advertises(&self, model: &str) -> bool {
+        let now = self.clock.now();
         self.loaded
             .read()
             .unwrap()
             .get(model)
-            .is_some_and(|&warm_at| self.clock.now() >= warm_at)
+            .is_some_and(|s| now >= s.warm_at)
     }
 
     /// Is `model` in the serving set but still inside its simulated
     /// warm-load window?
     pub fn is_loading(&self, model: &str) -> bool {
+        let now = self.clock.now();
         self.loaded
             .read()
             .unwrap()
             .get(model)
-            .is_some_and(|&warm_at| self.clock.now() < warm_at)
+            .is_some_and(|s| now < s.warm_at)
     }
 
     /// Currently advertised (warm) models, sorted. Models mid-load are
@@ -389,7 +495,7 @@ impl Instance {
             .read()
             .unwrap()
             .iter()
-            .filter(|&(_, &warm_at)| now >= warm_at)
+            .filter(|&(_, s)| now >= s.warm_at)
             .map(|(m, _)| m.clone())
             .collect()
     }
@@ -401,7 +507,7 @@ impl Instance {
             .read()
             .unwrap()
             .iter()
-            .filter(|&(_, &warm_at)| now < warm_at)
+            .filter(|&(_, s)| now < s.warm_at)
             .map(|(m, _)| m.clone())
             .collect()
     }
@@ -410,6 +516,47 @@ impl Instance {
     /// memory-occupancy view placement plans against.
     pub fn serving_set(&self) -> Vec<String> {
         self.loaded.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Names of the backends this instance advertises (its pod's
+    /// accelerator class resolved through the registry) — what the
+    /// placement planner's compatibility filter consumes.
+    pub fn backend_names(&self) -> Vec<String> {
+        self.backends.iter().map(|b| b.name().to_string()).collect()
+    }
+
+    /// The backend serving `model` on this instance (None when the
+    /// model is not in the serving set).
+    pub fn backend_for_model(&self, model: &str) -> Option<String> {
+        self.loaded
+            .read()
+            .unwrap()
+            .get(model)
+            .map(|s| s.backend.name().to_string())
+    }
+
+    /// Warm serving entries and their backend names, under ONE lock
+    /// acquisition and ONE clock read — the per-(model, backend) gauge
+    /// refresh snapshots each instance once instead of re-locking per
+    /// (model, backend) pair.
+    pub fn warm_backends(&self) -> BTreeMap<String, String> {
+        let now = self.clock.now();
+        self.loaded
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|&(_, s)| now >= s.warm_at)
+            .map(|(m, s)| (m.clone(), s.backend.name().to_string()))
+            .collect()
+    }
+
+    /// Simulated memory one loaded copy of `model` costs on `backend`
+    /// (the repository footprint scaled by the backend's multiplier).
+    fn scaled_memory(&self, model: &str, backend: &dyn Backend) -> u64 {
+        self.repo
+            .get(model)
+            .map(|e| (e.memory_bytes() as f64 * backend.memory_multiplier()).round() as u64)
+            .unwrap_or(0)
     }
 
     /// Consistent placement snapshot: (warm models, loading models,
@@ -423,13 +570,13 @@ impl Instance {
         let mut warm = Vec::new();
         let mut loading = Vec::new();
         let mut mem = 0u64;
-        for (m, &warm_at) in loaded.iter() {
-            if now >= warm_at {
+        for (m, s) in loaded.iter() {
+            if now >= s.warm_at {
                 warm.push(m.clone());
             } else {
                 loading.push(m.clone());
             }
-            mem += self.repo.get(m).map(|e| e.memory_bytes()).unwrap_or(0);
+            mem += self.scaled_memory(m, s.backend.as_ref());
         }
         (warm, loading, mem)
     }
@@ -438,15 +585,23 @@ impl Instance {
     /// (placement bootstrap: the instance factory applies the initial
     /// placement before the pod is marked Ready, and the pod's
     /// `startup_delay` already charged the initial model load). Names
-    /// absent from the repository are dropped.
+    /// absent from the repository — or with no backend this instance
+    /// supports — are dropped.
     pub fn set_loaded_models(&self, names: &[String]) {
         {
             let mut loaded = self.loaded.write().unwrap();
             loaded.clear();
             for n in names {
-                if self.repo.get(n).is_some() {
-                    loaded.insert(n.clone(), 0);
+                if self.repo.get(n).is_none() {
+                    continue;
                 }
+                let Some((backend, rank)) = self.catalog.select(n, &self.backends) else {
+                    continue;
+                };
+                if rank > 0 {
+                    self.fallback_counter(n).inc();
+                }
+                loaded.insert(n.clone(), Serving { warm_at: 0, backend });
             }
         }
         self.refresh_placement_gauges();
@@ -456,26 +611,37 @@ impl Instance {
     /// model-control call at the instance level — the engines live in
     /// the shared repository, so "loading" is paying the model's memory
     /// on this GPU and waiting out its simulated load window). The model
-    /// enters `Loading` for its configured `load_delay` (instantly warm
-    /// when zero) and is advertised only once warm. Returns false if the
-    /// repository has no such model or it was already in the serving set.
+    /// enters `Loading` for its configured `load_delay` scaled by the
+    /// chosen backend's load multiplier (instantly warm when zero) and
+    /// is advertised only once warm. The backend is the first entry of
+    /// the model's preference list this instance supports; choosing any
+    /// later entry counts a fallback. Returns false if the repository
+    /// has no such model, no compatible backend exists here, or it was
+    /// already in the serving set.
     pub fn load_model(&self, model: &str) -> bool {
         if self.repo.get(model).is_none() {
             return false;
         }
-        let delay = self.load_delays.get(model).copied().unwrap_or(Duration::ZERO);
+        let Some((backend, rank)) = self.catalog.select(model, &self.backends) else {
+            return false;
+        };
+        let base = self.load_delays.get(model).copied().unwrap_or(Duration::ZERO);
+        let delay = base.mul_f64(backend.load_multiplier());
         let warm_at = self.clock.now() + delay.as_nanos() as Nanos;
         let added = {
             use std::collections::btree_map::Entry;
             match self.loaded.write().unwrap().entry(model.to_string()) {
                 Entry::Occupied(_) => false,
                 Entry::Vacant(e) => {
-                    e.insert(warm_at);
+                    e.insert(Serving { warm_at, backend });
                     true
                 }
             }
         };
         if added {
+            if rank > 0 {
+                self.fallback_counter(model).inc();
+            }
             self.refresh_placement_gauges();
         }
         added
@@ -495,16 +661,16 @@ impl Instance {
     }
 
     /// Simulated GPU memory consumed by the serving set, in bytes (each
-    /// model costs [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes)).
-    /// Loading models count: their memory is committed the moment the
-    /// load starts.
+    /// model costs [`ModelEntry::memory_bytes`](crate::server::ModelEntry::memory_bytes)
+    /// scaled by its serving backend's memory multiplier). Loading
+    /// models count: their memory is committed the moment the load
+    /// starts.
     pub fn memory_used(&self) -> u64 {
         self.loaded
             .read()
             .unwrap()
-            .keys()
-            .filter_map(|m| self.repo.get(m))
-            .map(|e| e.memory_bytes())
+            .iter()
+            .map(|(m, s)| self.scaled_memory(m, s.backend.as_ref()))
             .sum()
     }
 
@@ -512,11 +678,10 @@ impl Instance {
         let now = self.clock.now();
         let (warm, loading, mem) = {
             let loaded = self.loaded.read().unwrap();
-            let warm = loaded.values().filter(|&&w| now >= w).count();
+            let warm = loaded.values().filter(|s| now >= s.warm_at).count();
             let mem: u64 = loaded
-                .keys()
-                .filter_map(|m| self.repo.get(m))
-                .map(|e| e.memory_bytes())
+                .iter()
+                .map(|(m, s)| self.scaled_memory(m, s.backend.as_ref()))
                 .sum();
             (warm, loaded.len() - warm, mem)
         };
@@ -677,6 +842,32 @@ impl Instance {
             .clone()
     }
 
+    fn fallback_counter(&self, model: &str) -> crate::metrics::registry::Counter {
+        let mut map = self.m_backend_fallback.lock().unwrap();
+        map.entry(model.to_string())
+            .or_insert_with(|| {
+                self.registry.counter(
+                    "backend_fallback_total",
+                    &labels(&[("instance", &self.id), ("model", model)]),
+                )
+            })
+            .clone()
+    }
+
+    /// The backend a batch for `model` executes on: the serving entry's
+    /// recorded backend, or — for a model unloaded mid-flight (graceful
+    /// unload still serves queued work) — whatever the catalog would
+    /// select here now. `None` is unreachable today (queued work implies
+    /// the model was advertised, which implies a compatible backend);
+    /// the executor answers it with an error rather than silently
+    /// executing on an incompatible backend.
+    fn backend_for(&self, model: &str) -> Option<Arc<dyn Backend>> {
+        if let Some(s) = self.loaded.read().unwrap().get(model) {
+            return Some(Arc::clone(&s.backend));
+        }
+        self.catalog.select(model, &self.backends).map(|(b, _)| b)
+    }
+
     /// Executor loop.
     fn run(self: Arc<Self>) {
         let mut queue_lat_ewma = 0.0f64;
@@ -755,9 +946,38 @@ impl Instance {
             let total_rows: usize = batch.iter().map(|p| p.rows()).sum();
             let t_exec_start = self.clock.now();
 
-            // Stack requests, execute (splitting over engine calls if a
-            // single request exceeds the largest compiled batch).
-            let result = self.execute_rows(&entry, &batch, total_rows);
+            // Dispatch to the serving backend: stack requests, execute
+            // (splitting over engine calls if a single request exceeds
+            // the largest compiled batch). Never fall back to an
+            // arbitrary backend — an unresolvable one (which queued work
+            // should make impossible) fails the batch loudly instead of
+            // quietly running a model where it must not run.
+            let Some(backend) = self.backend_for(&model) else {
+                debug_assert!(false, "queued batch for '{model}' with no backend");
+                for p in batch {
+                    let _ = p.reply.send(ExecOutcome::Err {
+                        status: Status::Internal,
+                        message: format!(
+                            "instance {} has no compatible backend for '{model}'",
+                            self.id
+                        ),
+                    });
+                    self.inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+                continue;
+            };
+            let result = {
+                let inputs: Vec<&Tensor> = batch.iter().map(|p| &p.input).collect();
+                let service = self.service_models.get(&model).copied().unwrap_or_default();
+                backend.execute(&ExecCtx {
+                    entry: entry.as_ref(),
+                    inputs: &inputs,
+                    total_rows,
+                    mode: self.exec_mode,
+                    service,
+                    clock: &self.clock,
+                })
+            };
             let t_exec_end = self.clock.now();
             let compute_s = (t_exec_end - t_exec_start) as f64 / 1e9;
             let compute_us = (compute_s * 1e6) as u32;
@@ -772,6 +992,9 @@ impl Instance {
             self.m_rows.add(total_rows as u64);
             self.m_compute_hist.observe(compute_s);
             self.requests_counter(&model).add(batch.len() as u64);
+            if let Some(c) = self.m_backend_inference.get(backend.name()) {
+                c.add(batch.len() as u64);
+            }
 
             // Respond per request.
             match result {
@@ -805,108 +1028,6 @@ impl Instance {
         }
     }
 
-    /// Stack `batch` and run it, chunking by the largest compiled batch.
-    /// Returns one output tensor per request, in order.
-    fn execute_rows(
-        &self,
-        entry: &crate::server::repository::ModelEntry,
-        batch: &[Pending],
-        total_rows: usize,
-    ) -> anyhow::Result<Vec<Tensor>> {
-        if self.exec_mode == ExecutionMode::Simulated {
-            return self.execute_simulated(entry, batch, total_rows);
-        }
-        let max_engine = entry.max_batch();
-        let engines = entry.engines.as_ref().ok_or_else(|| {
-            anyhow::anyhow!(
-                "model '{}' was loaded metadata-only; real execution unavailable",
-                entry.name
-            )
-        })?;
-
-        // Fast path — a single request that fits one engine call (the
-        // common case at low batch pressure): one pad, one execute, one
-        // slice, instead of the flatten/chunk/regroup pipeline below
-        // (saves 4 full tensor copies per request; see EXPERIMENTS §Perf).
-        if batch.len() == 1 && total_rows <= max_engine {
-            let engine = engines.engine_for(total_rows);
-            let eb = engine.batch_size();
-            let out = if total_rows == eb {
-                engine.execute(&batch[0].input)?
-            } else {
-                let padded =
-                    Tensor::stack_padded(std::slice::from_ref(&batch[0].input), eb)?;
-                engine.execute(&padded)?.slice_rows(0, total_rows)?
-            };
-            return Ok(vec![out]);
-        }
-
-        let inputs: Vec<Tensor> = batch.iter().map(|p| p.input.clone()).collect();
-
-        // Flatten all rows into one tensor, then chunk.
-        let flat = Tensor::stack_padded(&inputs, total_rows)?;
-        let mut out_rows: Vec<Tensor> = Vec::new();
-        let mut done = 0usize;
-        while done < total_rows {
-            let n = (total_rows - done).min(max_engine);
-            let chunk = flat.slice_rows(done, n)?;
-            let engine = engines.engine_for(n);
-            let eb = engine.batch_size();
-            let padded = Tensor::stack_padded(&[chunk], eb)?;
-            let out = engine.execute(&padded)?;
-            out_rows.push(out.slice_rows(0, n)?);
-            done += n;
-        }
-        let all_out = Tensor::stack_padded(&out_rows, total_rows)?;
-
-        // Split back per request.
-        let mut outputs = Vec::with_capacity(batch.len());
-        let mut offset = 0usize;
-        for p in batch {
-            let r = p.rows();
-            outputs.push(all_out.slice_rows(offset, r)?);
-            offset += r;
-        }
-        Ok(outputs)
-    }
-
-    /// Simulated-GPU execution: sleep the calibrated service time of the
-    /// batch (in clock time, so time dilation applies) and return zeroed
-    /// outputs of the correct shape. The batch is costed exactly like the
-    /// real path — chunked by the largest engine batch, each chunk padded
-    /// up to the engine size it would have run on.
-    fn execute_simulated(
-        &self,
-        entry: &crate::server::repository::ModelEntry,
-        batch: &[Pending],
-        total_rows: usize,
-    ) -> anyhow::Result<Vec<Tensor>> {
-        let sm = self
-            .service_models
-            .get(&entry.name)
-            .copied()
-            .unwrap_or_default();
-        let max_engine = entry.max_batch();
-        let mut service = 0.0f64;
-        let mut done = 0usize;
-        while done < total_rows {
-            let n = (total_rows - done).min(max_engine);
-            // The engine executes the smallest compiled batch >= n.
-            let padded = entry
-                .batch_sizes
-                .iter()
-                .copied()
-                .find(|&b| b >= n)
-                .unwrap_or(max_engine);
-            service += sm.service_secs(padded);
-            done += n;
-        }
-        self.clock.sleep(Duration::from_secs_f64(service));
-        Ok(batch
-            .iter()
-            .map(|p| Tensor::zeros(vec![p.rows(), entry.output_dim]))
-            .collect())
-    }
 }
 
 #[cfg(test)]
@@ -968,6 +1089,7 @@ mod tests {
                 per_row: Duration::from_micros(100),
             },
             load_delay: None,
+            backends: Vec::new(),
         }];
         let inst = Instance::start_with_mode(
             id,
@@ -1137,6 +1259,202 @@ mod tests {
         inst.stop();
     }
 
+    // ----- backend layer -----
+
+    fn catalog_for(models: &[(&str, &[&str])]) -> Arc<EngineCatalog> {
+        use crate::config::EnginesConfig;
+        let cfgs: Vec<ModelConfig> = models
+            .iter()
+            .map(|(name, backends)| ModelConfig {
+                name: name.to_string(),
+                backends: backends.iter().map(|s| s.to_string()).collect(),
+                ..ModelConfig::default()
+            })
+            .collect();
+        Arc::new(EngineCatalog::resolve(&cfgs, &EnginesConfig::default()))
+    }
+
+    fn backend_instance(
+        id: &str,
+        registry: Registry,
+        backends: Vec<Arc<dyn Backend>>,
+        catalog: Arc<EngineCatalog>,
+        load_delay: Option<Duration>,
+    ) -> Arc<Instance> {
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            load_delay,
+            backends: Vec::new(),
+        }];
+        let inst = Instance::start_with_opts(
+            id,
+            Arc::clone(&SIM_REPO),
+            &models,
+            Clock::real(),
+            registry,
+            InstanceOptions {
+                exec_mode: ExecutionMode::Simulated,
+                backends,
+                catalog,
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        inst
+    }
+
+    #[test]
+    fn cpu_instance_serves_via_onnx_fallback() {
+        use crate::metrics::registry::labels;
+        let registry = Registry::new();
+        let cat = catalog_for(&[("icecube_cnn", &[])]); // default prefs: pjrt first
+        let inst = backend_instance(
+            "be0",
+            registry.clone(),
+            BackendRegistry::default().for_class(AcceleratorClass::Cpu),
+            cat,
+            None,
+        );
+        assert_eq!(inst.backend_names(), vec!["onnx-sim".to_string()]);
+        assert!(inst.advertises("icecube_cnn"));
+        assert_eq!(inst.backend_for_model("icecube_cnn").as_deref(), Some("onnx-sim"));
+        // A placement bootstrap re-applies the serving set: choosing
+        // onnx-sim for a pjrt-preferring model is a counted fallback.
+        inst.set_loaded_models(&["icecube_cnn".into()]);
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Ok { output, .. } => assert_eq!(output.shape(), &[1, 3]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...and the execution landed on the onnx-sim backend counter.
+        let fallback = registry.counter(
+            "backend_fallback_total",
+            &labels(&[("instance", "be0"), ("model", "icecube_cnn")]),
+        );
+        assert_eq!(fallback.get(), 1, "bootstrap fallback not counted");
+        let executed = registry.counter(
+            "backend_inference_total",
+            &labels(&[("instance", "be0"), ("backend", "onnx-sim")]),
+        );
+        assert!(executed.get() >= 1, "onnx-sim execution not counted");
+        inst.stop();
+    }
+
+    #[test]
+    fn model_config_backends_honored_without_explicit_catalog() {
+        // No catalog wired in: the constructor resolves one from the
+        // model list, so a `backends: [onnx-sim]` ModelConfig still
+        // never lands on this default (pjrt-only) instance.
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            load_delay: None,
+            backends: vec!["onnx-sim".into()],
+        }];
+        let inst = Instance::start_with_opts(
+            "be4",
+            Arc::clone(&SIM_REPO),
+            &models,
+            Clock::real(),
+            Registry::new(),
+            InstanceOptions { exec_mode: ExecutionMode::Simulated, ..Default::default() },
+        );
+        inst.mark_ready();
+        assert!(!inst.advertises("icecube_cnn"));
+        assert!(!inst.load_model("icecube_cnn"));
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::ModelNotFound),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn cpu_only_model_never_enters_gpu_serving_set() {
+        let cat = catalog_for(&[("icecube_cnn", &["onnx-sim"])]);
+        let inst = backend_instance(
+            "be1",
+            Registry::new(),
+            BackendRegistry::default().for_class(AcceleratorClass::Gpu),
+            cat,
+            None,
+        );
+        // bootstrap skipped it, explicit loads refuse, submits see
+        // ModelNotFound — the acceptance-criterion invariant at the
+        // instance level.
+        assert!(!inst.advertises("icecube_cnn"));
+        assert!(!inst.load_model("icecube_cnn"));
+        assert_eq!(inst.serving_set(), Vec::<String>::new());
+        assert_eq!(inst.memory_used(), 0);
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 0) {
+            ExecOutcome::Err { status, .. } => assert_eq!(status, Status::ModelNotFound),
+            other => panic!("unexpected {other:?}"),
+        }
+        inst.stop();
+    }
+
+    #[test]
+    fn backend_load_multiplier_scales_warm_window() {
+        use crate::config::EnginesConfig;
+        // 400 ms base load delay, onnx load multiplier 0.25 → 100 ms.
+        let registry = BackendRegistry::from_config(&EnginesConfig {
+            onnx_load_multiplier: 0.25,
+            ..EnginesConfig::default()
+        });
+        let cat = catalog_for(&[("icecube_cnn", &["onnx-sim"])]);
+        let inst = backend_instance(
+            "be2",
+            Registry::new(),
+            registry.for_class(AcceleratorClass::Cpu),
+            cat,
+            Some(Duration::from_millis(400)),
+        );
+        assert!(inst.unload_model("icecube_cnn"));
+        assert!(inst.load_model("icecube_cnn"));
+        assert!(inst.is_loading("icecube_cnn"));
+        // At 200 ms the unscaled 400 ms window would still be loading;
+        // the 0.25x backend multiplier warmed it at 100 ms.
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(
+            inst.advertises("icecube_cnn"),
+            "backend load multiplier not applied to the warm window"
+        );
+        inst.stop();
+    }
+
+    #[test]
+    fn backend_memory_multiplier_scales_memory_used() {
+        use crate::config::EnginesConfig;
+        let registry = BackendRegistry::from_config(&EnginesConfig {
+            onnx_memory_multiplier: 0.5,
+            ..EnginesConfig::default()
+        });
+        let cat = catalog_for(&[("icecube_cnn", &["onnx-sim"])]);
+        let inst = backend_instance(
+            "be3",
+            Registry::new(),
+            registry.for_class(AcceleratorClass::Cpu),
+            cat,
+            None,
+        );
+        let entry = SIM_REPO.get("icecube_cnn").unwrap();
+        let expected = (entry.memory_bytes() as f64 * 0.5).round() as u64;
+        assert_eq!(inst.memory_used(), expected);
+        let (_, _, snapshot_mem) = inst.placement_snapshot();
+        assert_eq!(snapshot_mem, expected);
+        inst.stop();
+    }
+
     /// Instance whose model pays a real warm-load window on placement
     /// loads.
     fn slow_load_instance(id: &str, delay: Duration) -> Arc<Instance> {
@@ -1149,6 +1467,7 @@ mod tests {
                 per_row: Duration::from_micros(100),
             },
             load_delay: Some(delay),
+            backends: Vec::new(),
         }];
         let inst = Instance::start_with_opts(
             id,
@@ -1223,6 +1542,7 @@ mod tests {
                 per_row: Duration::from_micros(1),
             },
             load_delay: None,
+            backends: Vec::new(),
         }];
         let inst = Instance::start_with_opts(
             "prio0",
@@ -1286,6 +1606,7 @@ mod tests {
                 per_row: Duration::from_millis(1),
             },
             load_delay: None,
+            backends: Vec::new(),
         }];
         let inst = Instance::start_with_mode(
             "sim0",
@@ -1331,6 +1652,7 @@ mod tests {
                 per_row: Duration::from_millis(0),
             },
             load_delay: None,
+            backends: Vec::new(),
         }];
         // 20x dilation: the 200ms (clock) service takes ~10ms real.
         let inst = Instance::start_with_mode(

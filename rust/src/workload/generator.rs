@@ -589,6 +589,7 @@ mod tests {
                             per_row: Duration::from_micros(100),
                         },
                         load_delay: None,
+                        backends: Vec::new(),
                     }],
                     clock.clone(),
                     registry.clone(),

@@ -83,6 +83,27 @@ fn config_doc_documents_every_priority_lane() {
 }
 
 #[test]
+fn architecture_doc_names_every_backend_impl() {
+    // Every `Backend` implementation (by Rust type name) and every wire
+    // backend name must appear in the architecture doc's backend-layer
+    // section: a new runtime cannot land undocumented.
+    let doc = read_doc("ARCHITECTURE.md");
+    for name in supersonic::engine::BACKEND_IMPLS {
+        assert!(
+            doc.contains(name),
+            "docs/ARCHITECTURE.md does not mention backend implementation '{name}'; \
+             document it in the backend-layer section"
+        );
+    }
+    for name in supersonic::config::schema::BACKEND_NAMES {
+        assert!(
+            doc.contains(&format!("`{name}`")),
+            "docs/ARCHITECTURE.md does not name the `{name}` backend"
+        );
+    }
+}
+
+#[test]
 fn operations_doc_mentions_make_targets() {
     // The runbook must stay anchored to the real build entry points.
     let doc = read_doc("OPERATIONS.md");

@@ -30,6 +30,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
                     per_row: Duration::from_micros(100),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             repository: "artifacts".into(),
             startup_delay: Duration::from_millis(10),
@@ -55,6 +56,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
             tracing: false,
         },
         model_placement: Default::default(),
+        engines: Default::default(),
         time_scale: 1.0,
     }
 }

@@ -177,6 +177,7 @@ fn prop_lb_only_picks_ready_and_under_cap() {
                     per_row: Duration::from_millis(1),
                 },
                 load_delay: None,
+                backends: Vec::new(),
             }],
             clock.clone(),
             registry.clone(),
@@ -277,6 +278,7 @@ fn prop_router_only_routes_to_advertising_instances() {
                 per_row: Duration::from_micros(50),
             },
             load_delay: None,
+            backends: Vec::new(),
         })
         .collect();
     let mk = |id: &str| {
@@ -402,6 +404,7 @@ fn prop_no_request_ever_routed_to_loading_replica() {
                 per_row: Duration::from_micros(50),
             },
             load_delay: Some(LOAD_DELAY),
+            backends: Vec::new(),
         })
         .collect();
     let mk = |id: &str| {
@@ -567,7 +570,13 @@ fn prop_planner_never_unloads_last_warm_copy() {
                     }
                 }
                 let mem_used = (warm.len() + loading.len()) as u64 * mem;
-                InstanceView { id: format!("i{i}"), loaded: warm, loading, mem_used }
+                InstanceView {
+                    id: format!("i{i}"),
+                    loaded: warm,
+                    loading,
+                    mem_used,
+                    backends: BTreeSet::new(),
+                }
             })
             .collect();
         let demand: BTreeMap<String, f64> =
@@ -850,6 +859,373 @@ fn prop_shed_from_bulk_never_evicts_equal_or_higher_priority() {
                 }
             }
             rxs.push(rx);
+        }
+    });
+}
+
+#[test]
+fn prop_planner_never_lands_model_on_incompatible_backend() {
+    use std::collections::{BTreeMap, BTreeSet};
+    use supersonic::config::{ModelPlacementConfig, PlacementPolicy};
+    use supersonic::modelmesh::{InstanceView, Move, PlacementCore};
+
+    // The backend-compatibility invariant: whatever the demand, memory
+    // budget and fleet mix, a planning pass (repairs included) never
+    // plans a Load of a model onto an instance whose backend set does
+    // not intersect the model's preference list.
+    check("placement respects backend compatibility", 300, |g: &mut Gen| {
+        let n_models = g.usize(1..=3);
+        let models: Vec<String> = (0..n_models).map(|m| format!("m{m}")).collect();
+        let mem = 600_000u64;
+        let catalog: Vec<(String, u64)> = models.iter().map(|m| (m.clone(), mem)).collect();
+        // Random non-empty preference list per model.
+        let compat: BTreeMap<String, Vec<String>> = models
+            .iter()
+            .map(|m| {
+                let prefs = match g.usize(0..=2) {
+                    0 => vec!["pjrt".to_string()],
+                    1 => vec!["onnx-sim".to_string()],
+                    _ => vec!["pjrt".to_string(), "onnx-sim".to_string()],
+                };
+                (m.clone(), prefs)
+            })
+            .collect();
+        let cfg = ModelPlacementConfig {
+            policy: PlacementPolicy::Dynamic,
+            memory_budget_mb: g.usize(1..=n_models) as f64 * 0.6 + 0.05,
+            load_threshold: g.f64(50.0, 200.0),
+            unload_threshold: g.f64(0.0, 40.0),
+            cooldown: Duration::from_secs(g.usize(0..=5) as u64),
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
+        };
+        let mut core = PlacementCore::with_backends(cfg, catalog, BTreeMap::new(), compat.clone());
+
+        let n_inst = g.usize(1..=5);
+        let views: Vec<InstanceView> = (0..n_inst)
+            .map(|i| {
+                // gpu pod, cpu pod, or dual-class pod
+                let backends: BTreeSet<String> = match g.usize(0..=2) {
+                    0 => ["pjrt".to_string()].into(),
+                    1 => ["onnx-sim".to_string()].into(),
+                    _ => ["pjrt".to_string(), "onnx-sim".to_string()].into(),
+                };
+                let mut warm = BTreeSet::new();
+                let mut loading = BTreeSet::new();
+                for m in &models {
+                    // only seed placements that are themselves legal
+                    let hostable = compat[m].iter().any(|b| backends.contains(b));
+                    if hostable {
+                        match g.usize(0..=3) {
+                            0 => {
+                                warm.insert(m.clone());
+                            }
+                            1 => {
+                                loading.insert(m.clone());
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                let mem_used = (warm.len() + loading.len()) as u64 * mem;
+                InstanceView { id: format!("i{i}"), loaded: warm, loading, mem_used, backends }
+            })
+            .collect();
+        let demand: BTreeMap<String, f64> =
+            models.iter().map(|m| (m.clone(), g.f64(0.0, 500.0))).collect();
+
+        let moves = core.plan(g.f64(0.0, 100.0), &views, &demand);
+        for mv in &moves {
+            if let Move::Load { instance, model } = mv {
+                let view = views.iter().find(|v| &v.id == instance).expect("known instance");
+                assert!(
+                    compat[model].iter().any(|b| view.backends.contains(b)),
+                    "planned '{model}' onto {instance} (backends {:?}) without a \
+                     compatible backend: {moves:?}",
+                    view.backends
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_backend_selection_stays_in_preference_list() {
+    use supersonic::config::{EnginesConfig, ModelConfig};
+    use supersonic::engine::{BackendRegistry, EngineCatalog};
+
+    // Fallback selection never invents a backend: whatever subset of
+    // backends an instance advertises, the selected backend is in the
+    // model's preference list, at the first available rank.
+    let registry = BackendRegistry::default();
+    check("backend selection stays in the preference list", 200, |g: &mut Gen| {
+        let prefs: Vec<String> = match g.usize(0..=3) {
+            0 => vec!["pjrt".into()],
+            1 => vec!["onnx-sim".into()],
+            2 => vec!["pjrt".into(), "onnx-sim".into()],
+            _ => vec!["onnx-sim".into(), "pjrt".into()],
+        };
+        let model = ModelConfig {
+            name: "m".into(),
+            backends: prefs.clone(),
+            ..ModelConfig::default()
+        };
+        let catalog =
+            EngineCatalog::resolve(std::slice::from_ref(&model), &EnginesConfig::default());
+        let available: Vec<_> =
+            registry.backends().iter().filter(|_| g.bool()).cloned().collect();
+        match catalog.select("m", &available) {
+            None => {
+                // legal only when nothing available is compatible
+                assert!(
+                    !available.iter().any(|b| prefs.iter().any(|p| p == b.name())),
+                    "selection refused although {prefs:?} intersects the available set"
+                );
+            }
+            Some((backend, rank)) => {
+                assert_eq!(
+                    prefs[rank], backend.name(),
+                    "rank does not index the preference list"
+                );
+                // nothing earlier in the preference list was available
+                for earlier in &prefs[..rank] {
+                    assert!(
+                        !available.iter().any(|b| b.name() == earlier.as_str()),
+                        "fallback to rank {rank} although '{earlier}' was available"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cpu_only_model_never_served_by_gpu_instance() {
+    use supersonic::config::EnginesConfig;
+    use supersonic::engine::{AcceleratorClass, BackendRegistry, EngineCatalog};
+    use supersonic::server::InstanceOptions;
+
+    // The acceptance-criterion invariant, end to end: a model configured
+    // `backends: [onnx-sim]` is never placed on, routed to, or executed
+    // by a PJRT-only (GPU-class) instance — across arbitrary
+    // load/unload/sync/pick interleavings.
+    const CPU_ONLY: &str = "icecube_cnn";
+    const MODELS: [&str; 2] = ["icecube_cnn", "particlenet"];
+    let repo = Arc::new(
+        ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &MODELS.map(String::from),
+        )
+        .unwrap(),
+    );
+    let clock = Clock::real();
+    let registry = Registry::new();
+    let model_cfgs: Vec<ModelConfig> = MODELS
+        .iter()
+        .map(|m| ModelConfig {
+            name: m.to_string(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 4,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(1),
+                per_row: Duration::from_micros(50),
+            },
+            load_delay: None,
+            backends: if *m == CPU_ONLY {
+                vec!["onnx-sim".into()]
+            } else {
+                Vec::new()
+            },
+        })
+        .collect();
+    let engine_catalog = Arc::new(EngineCatalog::resolve(&model_cfgs, &EnginesConfig::default()));
+    let backend_registry = BackendRegistry::default();
+    let mk = |id: &str, class: AcceleratorClass| {
+        let inst = Instance::start_with_opts(
+            id,
+            Arc::clone(&repo),
+            &model_cfgs,
+            clock.clone(),
+            registry.clone(),
+            InstanceOptions {
+                exec_mode: ExecutionMode::Simulated,
+                backends: backend_registry.for_class(class),
+                catalog: Arc::clone(&engine_catalog),
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        inst
+    };
+    let input_for = |model: &str| match model {
+        "icecube_cnn" => Tensor::zeros(vec![1, 16, 16, 3]),
+        _ => Tensor::zeros(vec![1, 64, 7]),
+    };
+
+    check("cpu-only model never lands on a gpu instance", 15, |g: &mut Gen| {
+        let n = g.usize(2..=4);
+        let instances: Vec<(Arc<Instance>, AcceleratorClass)> = (0..n)
+            .map(|i| {
+                let class = if g.bool() { AcceleratorClass::Gpu } else { AcceleratorClass::Cpu };
+                (mk(&format!("ht-p{i}-{}", class.name()), class), class)
+            })
+            .collect();
+        let endpoints: Vec<Arc<Instance>> =
+            instances.iter().map(|(i, _)| Arc::clone(i)).collect();
+        let router = ModelRouter::new(
+            &MODELS.map(String::from),
+            *g.choose(&[LbPolicy::RoundRobin, LbPolicy::Random, LbPolicy::LeastConnection]),
+            0,
+            &Registry::new(),
+            g.u64(0..=u64::MAX),
+        );
+        router.sync(&endpoints);
+
+        for _ in 0..40 {
+            match g.usize(0..=3) {
+                0 => {
+                    let (inst, class) = &instances[g.usize(0..=n - 1)];
+                    router.load(inst, g.choose(&MODELS));
+                    if *class == AcceleratorClass::Gpu {
+                        assert!(
+                            !inst.serving_set().contains(&CPU_ONLY.to_string()),
+                            "{}: a load put the CPU-only model on a gpu instance",
+                            inst.id
+                        );
+                    }
+                }
+                1 => {
+                    let (inst, _) = &instances[g.usize(0..=n - 1)];
+                    router.unload(inst, g.choose(&MODELS));
+                }
+                2 => router.sync(&endpoints),
+                _ => {
+                    let model = *g.choose(&MODELS);
+                    if let Ok(picked) = router.pick(model) {
+                        if model == CPU_ONLY {
+                            assert!(
+                                picked.backend_names().contains(&"onnx-sim".to_string()),
+                                "routed the CPU-only model to {} (backends {:?})",
+                                picked.id,
+                                picked.backend_names()
+                            );
+                            assert_eq!(
+                                picked.backend_for_model(model).as_deref(),
+                                Some("onnx-sim")
+                            );
+                        }
+                        match picked.submit(model, input_for(model), 0) {
+                            Ok(_rx) => {}
+                            Err((status, _)) => assert_ne!(status, Status::ModelNotFound),
+                        }
+                    }
+                }
+            }
+        }
+        // Invariants hold at the end, for every GPU-class instance.
+        for (inst, class) in &instances {
+            if *class == AcceleratorClass::Gpu {
+                assert!(
+                    !inst.serving_set().contains(&CPU_ONLY.to_string()),
+                    "{} (gpu) holds the CPU-only model",
+                    inst.id
+                );
+                assert!(!inst.load_model(CPU_ONLY), "gpu instance accepted a cpu-only load");
+                match inst.submit(CPU_ONLY, input_for(CPU_ONLY), 0) {
+                    Ok(_) => panic!("{} (gpu) executed the CPU-only model", inst.id),
+                    Err((status, _)) => assert_eq!(status, Status::ModelNotFound),
+                }
+            }
+        }
+        for (inst, _) in instances {
+            inst.stop();
+        }
+    });
+}
+
+#[test]
+fn prop_aged_bulk_request_served_within_the_bound() {
+    use supersonic::config::BatchMode;
+
+    // The anti-starvation guarantee: under sustained critical pressure,
+    // every bulk request is still served within max_bulk_wait (plus
+    // scheduling slack) — and, with a wide un-fillable batching window,
+    // not meaningfully before it (the promotion is what serves it).
+    const BOUND: Duration = Duration::from_millis(60);
+    check("aged bulk served within the aging bound", 8, |g: &mut Gen| {
+        let clock = Clock::real();
+        let q = BatchQueue::with_aging(4096, BatchMode::Affinity, BOUND);
+        // Bulk requests on their own models, wide 5 s windows, a target
+        // they never fill: only aging can serve them.
+        let n_bulk = g.usize(1..=3);
+        let mut bulk_rxs = Vec::new();
+        let pushed_at = std::time::Instant::now();
+        for i in 0..n_bulk {
+            let (tx, rx) = mpsc::channel();
+            q.push(Pending {
+                model: format!("bulk{i}"),
+                priority: Priority::Bulk,
+                input: Tensor::zeros(vec![g.usize(1..=3), 2]),
+                enqueued: clock.now(),
+                trace_id: 1000 + i as u64,
+                reply: tx,
+            })
+            .map_err(|_| ())
+            .unwrap();
+            bulk_rxs.push(rx);
+        }
+        let policy = |model: &str| BatchPolicy {
+            max_queue_delay: if model.starts_with("bulk") {
+                Duration::from_secs(5)
+            } else {
+                Duration::from_millis(1)
+            },
+            preferred_rows: 64,
+            max_rows: 64,
+        };
+        // Sustained critical pressure: push + pop in a tight loop until
+        // every bulk request has been popped.
+        let mut served_at: Vec<Option<Duration>> = vec![None; n_bulk];
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        let mut _crit_rxs = Vec::new();
+        while served_at.iter().any(|s| s.is_none()) {
+            assert!(std::time::Instant::now() < deadline, "bulk starved: {served_at:?}");
+            let (tx, rx) = mpsc::channel();
+            q.push(Pending {
+                model: "crit".into(),
+                priority: Priority::Critical,
+                input: Tensor::zeros(vec![1, 2]),
+                enqueued: clock.now(),
+                trace_id: 0,
+                reply: tx,
+            })
+            .map_err(|_| ())
+            .unwrap();
+            _crit_rxs.push(rx);
+            std::thread::sleep(Duration::from_millis(2));
+            let batch = q
+                .pop_batch(&clock, policy, Duration::from_millis(50))
+                .expect("work is queued");
+            for p in &batch {
+                if p.trace_id >= 1000 {
+                    served_at[(p.trace_id - 1000) as usize] = Some(pushed_at.elapsed());
+                }
+            }
+        }
+        for (i, served) in served_at.iter().enumerate() {
+            let served = served.unwrap();
+            // Each aged head is promoted within one pop of crossing the
+            // bound; with up to 3 bulk lanes and ~2 ms pop cadence, a
+            // generous scheduling slack still pins the bound.
+            assert!(
+                served <= BOUND + Duration::from_millis(400),
+                "bulk{i} served only after {served:?} (bound {BOUND:?})"
+            );
+            assert!(
+                served >= Duration::from_millis(40),
+                "bulk{i} served at {served:?} — before aging could have promoted it"
+            );
         }
     });
 }
