@@ -7,13 +7,14 @@
 #   make bench       — run every bench binary
 #   make bench-priority — the priority-lanes ablation only
 #   make bench-backend  — the multi-backend heterogeneity ablation only
+#   make bench-trace    — the latency-breakdown / SLO-alerting bench only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
 #                      OPERATIONS.md bench coverage)
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts build test bench bench-priority bench-backend docs-check
+.PHONY: artifacts build test bench bench-priority bench-backend bench-trace docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -28,7 +29,7 @@ bench:
 	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
 		modelmesh_ablation per_model_autoscale warm_load_ablation \
-		priority_ablation backend_ablation; do \
+		priority_ablation backend_ablation latency_breakdown; do \
 		cargo bench --bench $$b; done
 
 bench-priority:
@@ -36,6 +37,9 @@ bench-priority:
 
 bench-backend:
 	cd rust && cargo bench --bench backend_ablation
+
+bench-trace:
+	cd rust && cargo bench --bench latency_breakdown
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,271 @@
+//! End-to-end latency breakdown + SLO burn-rate alerting under an
+//! overload/recovery cycle — the observability stack's acceptance bench.
+//!
+//! One traced deployment (2 simulated GPU servers, queue capacity far
+//! above the offered load so overload shows up as queueing, not
+//! shedding) runs three closed-loop phases:
+//!
+//!   steady (4 clients)  → overload (64 clients) → recovery (4 clients)
+//!
+//! Every request carries a wire-propagated trace id, so the gateway's
+//! stage recorder accumulates `request_stage_seconds{stage=...}` from
+//! real spans: gateway admit/ratelimit/route, batcher queue wait,
+//! batch assembly and backend compute. The SLO engine evaluates the
+//! per-model latency burn rate on its fast/slow windows throughout.
+//!
+//! Asserted:
+//!   1. the per-stage sums reconstruct total request latency within 5%;
+//!   2. queue time dominates compute during overload, compute dominates
+//!      queue at steady state;
+//!   3. the latency burn-rate alert fires during overload and resolves
+//!      after recovery, with zero alert events during the steady phase;
+//!   4. tracing-on throughput is within 5% of tracing-off at an equal
+//!      budget (separate two-arm steady run).
+//!
+//! Run: `cargo bench --bench latency_breakdown`
+
+use std::time::Duration;
+
+use supersonic::config::*;
+use supersonic::deployment::Deployment;
+use supersonic::metrics::registry::{labels, Registry};
+use supersonic::telemetry::{slo, STAGES, STAGE_HISTOGRAM};
+use supersonic::util::bench::{Csv, Table};
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+const TIME_SCALE: f64 = 10.0;
+const STEADY_CLIENTS: usize = 4;
+const OVERLOAD_CLIENTS: usize = 64;
+const PHASE: Duration = Duration::from_secs(30);
+const ROWS: usize = 8;
+
+fn bench_cfg(tracing: bool) -> DeploymentConfig {
+    DeploymentConfig {
+        name: if tracing { "trace-on".into() } else { "trace-off".into() },
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "particlenet".into(),
+                max_queue_delay: Duration::from_millis(2),
+                preferred_batch: 8,
+                // 8 requests x 8 rows batched: ~101 ms per full batch,
+                // so 64 closed-loop clients queue far past the 100 ms
+                // p99 target while 4 clients stay well under it.
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(5),
+                    per_row: Duration::from_micros(1500),
+                },
+                load_delay: None,
+                backends: Vec::new(),
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(100),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 10.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: false,
+            max_replicas: 2, // cluster capacity below
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(50),
+            termination_grace: Duration::from_millis(50),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(3600),
+            tracing,
+        },
+        model_placement: Default::default(),
+        engines: Default::default(),
+        observability: ObservabilityConfig {
+            trace_sample_rate: 1.0,
+            trace_capacity: 65536,
+            slo_fast_window: Duration::from_secs(15),
+            slo_slow_window: Duration::from_secs(40),
+            slo_eval_interval: Duration::from_secs(2),
+            slo_burn_threshold: 10.0,
+            slos: vec![SloConfig {
+                model: "particlenet".into(),
+                latency_p99: Duration::from_millis(100),
+                error_budget: 0.05,
+            }],
+        },
+        time_scale: TIME_SCALE,
+    }
+}
+
+/// Sum of every `request_stage_seconds{stage=...}` histogram, by stage.
+fn stage_sums(registry: &Registry) -> Vec<(&'static str, f64)> {
+    STAGES
+        .iter()
+        .map(|&s| {
+            (s, registry.histogram(STAGE_HISTOGRAM, &labels(&[("stage", s)])).snapshot().sum())
+        })
+        .collect()
+}
+
+fn sum_of(sums: &[(&'static str, f64)], stage: &str) -> f64 {
+    sums.iter().find(|(s, _)| *s == stage).map(|(_, v)| *v).unwrap_or(0.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    println!("== latency breakdown + SLO burn-rate alerting (overload/recovery) ==");
+    println!(
+        "2 servers, {STEADY_CLIENTS} -> {OVERLOAD_CLIENTS} -> {STEADY_CLIENTS} clients, \
+         {}s clock per phase, p99 target 100 ms, burn threshold 10x \
+         (time_scale {TIME_SCALE}x)\n",
+        PHASE.as_secs()
+    );
+
+    // ---- main traced run: steady -> overload -> recovery ----------------
+    let d = Deployment::up(bench_cfg(true))?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+    let slo_engine = d.slo.clone().expect("slo engine configured");
+
+    let spec = WorkloadSpec::new("particlenet", ROWS, vec![64, 7]).with_tracing();
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let schedule = Schedule::new()
+        .phase(STEADY_CLIENTS, PHASE)
+        .phase(OVERLOAD_CLIENTS, PHASE)
+        .phase(STEADY_CLIENTS, PHASE);
+
+    // Per-phase stage-sum snapshots, taken at each phase boundary.
+    let registry = d.registry.clone();
+    let engine = std::sync::Arc::clone(&slo_engine);
+    let mut snapshots: Vec<Vec<(&'static str, f64)>> = Vec::new();
+    let mut events_at_boundary: Vec<usize> = Vec::new();
+    let report = pool.run_with(&schedule, |i, c| {
+        eprintln!("-- phase {i}: {c} client(s)");
+        snapshots.push(stage_sums(&registry));
+        events_at_boundary.push(engine.events().len());
+    });
+    snapshots.push(stage_sums(&d.registry));
+
+    let total_hist = d.registry.histogram("request_total_seconds", &labels(&[])).snapshot();
+    let dropped = d.tracer.dropped();
+    let alert_log = slo_engine.render_log();
+    let events = slo_engine.events();
+    let resolved_at_end = !slo_engine.active("particlenet", "latency_burn_rate");
+    d.down();
+
+    // Per-phase deltas of the queue/compute stage sums.
+    let delta = |phase: usize, stage: &str| {
+        sum_of(&snapshots[phase + 1], stage) - sum_of(&snapshots[phase], stage)
+    };
+    let mut table = Table::new(&["phase", "clients", "ok", "queue (s)", "compute (s)", "p99 (s)"]);
+    let mut csv = Csv::new(&["phase", "clients", "ok", "queue_s", "compute_s", "p99_s"]);
+    for (i, p) in report.phases.iter().enumerate() {
+        let cells = [
+            ["steady", "overload", "recovery"][i].to_string(),
+            p.clients.to_string(),
+            p.ok.to_string(),
+            format!("{:.2}", delta(i, "queue")),
+            format!("{:.2}", delta(i, "compute")),
+            format!("{:.4}", p.latency.quantile(0.99)),
+        ];
+        table.row(&cells);
+        csv.row(&cells);
+    }
+    println!("{}", table.render());
+    let path = csv.save("latency_breakdown")?;
+    println!("CSV: {}", path.display());
+
+    println!("\nalert log:\n{}", if alert_log.is_empty() { "(empty)" } else { &alert_log });
+    println!("\nspans dropped: {dropped}");
+
+    // 1. Per-stage sums reconstruct total request latency.
+    let final_sums = snapshots.last().unwrap();
+    let stages_total: f64 = final_sums.iter().map(|(_, v)| v).sum();
+    let root_total = total_hist.sum();
+    println!(
+        "\nchecks:\n  stage reconstruction: sum(stages) {stages_total:.2}s vs \
+         root {root_total:.2}s"
+    );
+    assert!(root_total > 0.0, "no traced requests recorded");
+    assert!(
+        (stages_total - root_total).abs() <= 0.05 * root_total,
+        "stage sums ({stages_total:.2}s) do not reconstruct root latency \
+         ({root_total:.2}s) within 5%"
+    );
+
+    // 2. Queue dominates under overload; compute dominates at steady state.
+    println!(
+        "  steady  : queue {:.2}s vs compute {:.2}s (compute must dominate)",
+        delta(0, "queue"),
+        delta(0, "compute")
+    );
+    println!(
+        "  overload: queue {:.2}s vs compute {:.2}s (queue must dominate)",
+        delta(1, "queue"),
+        delta(1, "compute")
+    );
+    assert!(
+        delta(0, "compute") > delta(0, "queue"),
+        "compute should dominate queue at steady state"
+    );
+    assert!(
+        delta(1, "queue") > delta(1, "compute"),
+        "queue should dominate compute under overload"
+    );
+
+    // 3. Burn-rate alert: silent in steady, fires in overload, resolves.
+    assert_eq!(
+        events_at_boundary[1], 0,
+        "false-positive alert events during the steady phase"
+    );
+    let latency_events: Vec<_> =
+        events.iter().filter(|e| e.alert == "latency_burn_rate").collect();
+    assert!(
+        latency_events.iter().any(|e| e.kind == slo::AlertKind::Fired),
+        "latency burn-rate alert never fired during overload"
+    );
+    assert!(
+        latency_events.last().is_some_and(|e| e.kind == slo::AlertKind::Resolved),
+        "latency burn-rate alert did not resolve after recovery"
+    );
+    assert!(resolved_at_end, "alert still active after recovery");
+    println!(
+        "  alerts: {} fired/resolved transition(s), none before overload",
+        latency_events.len()
+    );
+
+    // ---- overhead arms: tracing on vs off at an equal budget ------------
+    println!("\n== tracing overhead: on vs off, {STEADY_CLIENTS}x steady load ==");
+    let mut throughput = Vec::new();
+    for tracing in [false, true] {
+        let d = Deployment::up(bench_cfg(tracing))?;
+        anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+        let mut spec = WorkloadSpec::new("particlenet", ROWS, vec![64, 7]);
+        spec.trace = tracing;
+        let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+        let r = pool.run(&Schedule::constant(8, Duration::from_secs(20)));
+        println!(
+            "  tracing {}: {:.1} req/s ({} ok)",
+            if tracing { "on " } else { "off" },
+            r.throughput(),
+            r.total_ok
+        );
+        throughput.push(r.throughput());
+        d.down();
+    }
+    let ratio = throughput[1] / throughput[0];
+    println!("  ratio on/off: {ratio:.3} (must be >= 0.95)");
+    assert!(
+        ratio >= 0.95,
+        "tracing costs more than 5% throughput: on {:.1} vs off {:.1} req/s",
+        throughput[1],
+        throughput[0]
+    );
+    Ok(())
+}

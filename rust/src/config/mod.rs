@@ -13,7 +13,7 @@ pub mod yaml;
 pub use schema::{
     AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, EnginesConfig,
     ExecutionMode, GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig,
-    MonitoringConfig, PerModelScalingConfig, PlacementPolicy, PriorityConfig,
-    ServerConfig, ServiceModelConfig,
+    MonitoringConfig, ObservabilityConfig, PerModelScalingConfig, PlacementPolicy,
+    PriorityConfig, ServerConfig, ServiceModelConfig, SloConfig,
 };
 pub use yaml::Value;

@@ -531,6 +531,50 @@ pub struct MonitoringConfig {
     pub tracing: bool,
 }
 
+/// One per-model SLO target (`observability.slos[]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloConfig {
+    /// Model the objective applies to (must be in `server.models`).
+    pub model: String,
+    /// Latency objective: 99% of OK requests complete within this bound
+    /// (the implied error budget is the remaining 1%).
+    pub latency_p99: Duration,
+    /// Allowed fraction of non-OK responses (error-rate budget).
+    pub error_budget: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            model: String::new(),
+            latency_p99: Duration::from_millis(500),
+            error_budget: 0.01,
+        }
+    }
+}
+
+/// Observability section: tracing depth/sampling and the SLO burn-rate
+/// alerting engine (§2.3's Tempo + Grafana-alerting analogue).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObservabilityConfig {
+    /// Head-sampling rate for traces in [0, 1] (decided once per trace
+    /// id, propagated on the wire so every hop agrees).
+    pub trace_sample_rate: f64,
+    /// Span buffer capacity (ring semantics; evictions are counted on
+    /// `trace_spans_dropped_total` and mark affected traces partial).
+    pub trace_capacity: usize,
+    /// Fast burn-rate window (the "5m" of the multi-window rule).
+    pub slo_fast_window: Duration,
+    /// Slow burn-rate window (the "1h" of the multi-window rule).
+    pub slo_slow_window: Duration,
+    /// Evaluation cadence of the SLO engine.
+    pub slo_eval_interval: Duration,
+    /// Burn-rate multiple (of budget) at which alerts fire.
+    pub slo_burn_threshold: f64,
+    /// Per-model SLO targets; empty disables the engine.
+    pub slos: Vec<SloConfig>,
+}
+
 /// Whole-deployment configuration (the Helm values analogue).
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeploymentConfig {
@@ -545,6 +589,8 @@ pub struct DeploymentConfig {
     pub model_placement: ModelPlacementConfig,
     /// Multi-backend engine layer (backend preferences, CPU fleet).
     pub engines: EnginesConfig,
+    /// Tracing depth/sampling and SLO burn-rate alerting.
+    pub observability: ObservabilityConfig,
     /// Wall-clock dilation factor for experiments (1.0 = real time). See
     /// `util::clock`.
     pub time_scale: f64,
@@ -650,6 +696,20 @@ impl Default for MonitoringConfig {
     }
 }
 
+impl Default for ObservabilityConfig {
+    fn default() -> Self {
+        ObservabilityConfig {
+            trace_sample_rate: 1.0,
+            trace_capacity: 65536,
+            slo_fast_window: Duration::from_secs(300),
+            slo_slow_window: Duration::from_secs(3600),
+            slo_eval_interval: Duration::from_secs(5),
+            slo_burn_threshold: 10.0,
+            slos: Vec::new(),
+        }
+    }
+}
+
 impl Default for DeploymentConfig {
     fn default() -> Self {
         DeploymentConfig {
@@ -661,6 +721,7 @@ impl Default for DeploymentConfig {
             monitoring: MonitoringConfig::default(),
             model_placement: ModelPlacementConfig::default(),
             engines: EnginesConfig::default(),
+            observability: ObservabilityConfig::default(),
             time_scale: 1.0,
         }
     }
@@ -674,7 +735,7 @@ pub mod keys {
     /// Top-level sections.
     pub const ROOT: &[&str] = &[
         "name", "server", "gateway", "autoscaler", "cluster", "monitoring",
-        "model_placement", "engines", "time_scale",
+        "model_placement", "engines", "observability", "time_scale",
     ];
     /// `server` section.
     pub const SERVER: &[&str] = &[
@@ -724,6 +785,13 @@ pub mod keys {
         "default_backend", "cpu_replicas", "onnx_slowdown", "onnx_load_multiplier",
         "onnx_memory_multiplier",
     ];
+    /// `observability` section (tracing + SLO alerting).
+    pub const OBSERVABILITY: &[&str] = &[
+        "trace_sample_rate", "trace_capacity", "slo_fast_window", "slo_slow_window",
+        "slo_eval_interval", "slo_burn_threshold", "slos",
+    ];
+    /// `observability.slos[]` entries.
+    pub const OBSERVABILITY_SLO: &[&str] = &["model", "latency_p99", "error_budget"];
     /// Every (section, allowed keys) pair, for exhaustive iteration.
     pub const SECTIONS: &[(&str, &[&str])] = &[
         ("<root>", ROOT),
@@ -738,6 +806,8 @@ pub mod keys {
         ("monitoring", MONITORING),
         ("model_placement", MODEL_PLACEMENT),
         ("engines", ENGINES),
+        ("observability", OBSERVABILITY),
+        ("observability.slos[]", OBSERVABILITY_SLO),
     ];
 }
 
@@ -1078,6 +1148,49 @@ impl DeploymentConfig {
             )?,
         };
 
+        let ob = root.get("observability").unwrap_or(&empty);
+        check_keys(ob, keys::OBSERVABILITY, "observability")?;
+        let slos = match ob.get("slos") {
+            None => Vec::new(),
+            Some(list) => {
+                let items = list
+                    .as_seq()
+                    .context("'observability.slos' must be a sequence")?;
+                let mut slos = Vec::new();
+                for item in items {
+                    check_keys(item, keys::OBSERVABILITY_SLO, "observability.slos[]")?;
+                    let ds = SloConfig::default();
+                    slos.push(SloConfig {
+                        model: get_str(item, "model", "")?,
+                        latency_p99: get_duration(item, "latency_p99", ds.latency_p99)?,
+                        error_budget: get_f64(item, "error_budget", ds.error_budget)?,
+                    });
+                }
+                slos
+            }
+        };
+        let observability = ObservabilityConfig {
+            trace_sample_rate: get_f64(
+                ob,
+                "trace_sample_rate",
+                d.observability.trace_sample_rate,
+            )?,
+            trace_capacity: get_usize(ob, "trace_capacity", d.observability.trace_capacity)?,
+            slo_fast_window: get_duration(ob, "slo_fast_window", d.observability.slo_fast_window)?,
+            slo_slow_window: get_duration(ob, "slo_slow_window", d.observability.slo_slow_window)?,
+            slo_eval_interval: get_duration(
+                ob,
+                "slo_eval_interval",
+                d.observability.slo_eval_interval,
+            )?,
+            slo_burn_threshold: get_f64(
+                ob,
+                "slo_burn_threshold",
+                d.observability.slo_burn_threshold,
+            )?,
+            slos,
+        };
+
         let cfg = DeploymentConfig {
             name,
             server,
@@ -1087,6 +1200,7 @@ impl DeploymentConfig {
             monitoring,
             model_placement,
             engines,
+            observability,
             time_scale,
         };
         cfg.validate()?;
@@ -1385,6 +1499,61 @@ impl DeploymentConfig {
                         horizon.as_secs_f64()
                     );
                 }
+            }
+        }
+        // Observability: tracing + SLO engine.
+        let ob = &self.observability;
+        if !(0.0..=1.0).contains(&ob.trace_sample_rate) {
+            bail!("observability.trace_sample_rate must be in [0, 1]");
+        }
+        if ob.trace_capacity == 0 {
+            bail!("observability.trace_capacity must be >= 1");
+        }
+        if ob.slo_burn_threshold <= 0.0 {
+            bail!("observability.slo_burn_threshold must be > 0");
+        }
+        if ob.slo_fast_window.is_zero() {
+            bail!("observability.slo_fast_window must be > 0");
+        }
+        if ob.slo_slow_window < ob.slo_fast_window {
+            bail!(
+                "observability.slo_slow_window ({:.1}s) must be >= slo_fast_window \
+                 ({:.1}s) (the slow window suppresses blips the fast window catches)",
+                ob.slo_slow_window.as_secs_f64(),
+                ob.slo_fast_window.as_secs_f64()
+            );
+        }
+        if ob.slo_eval_interval.is_zero() {
+            bail!("observability.slo_eval_interval must be > 0");
+        }
+        if ob.slo_eval_interval > ob.slo_fast_window {
+            bail!(
+                "observability.slo_eval_interval ({:.1}s) must not exceed \
+                 slo_fast_window ({:.1}s): the fast window needs at least two \
+                 evaluation points to compute a burn rate",
+                ob.slo_eval_interval.as_secs_f64(),
+                ob.slo_fast_window.as_secs_f64()
+            );
+        }
+        let mut slo_models = std::collections::BTreeSet::new();
+        for slo in &ob.slos {
+            if !self.server.models.iter().any(|m| m.name == slo.model) {
+                bail!(
+                    "observability.slos names model '{}', which is not in server.models",
+                    slo.model
+                );
+            }
+            if !slo_models.insert(slo.model.as_str()) {
+                bail!("observability.slos lists model '{}' twice", slo.model);
+            }
+            if slo.latency_p99.is_zero() {
+                bail!("observability.slos model '{}': latency_p99 must be > 0", slo.model);
+            }
+            if !(slo.error_budget > 0.0 && slo.error_budget <= 1.0) {
+                bail!(
+                    "observability.slos model '{}': error_budget must be in (0, 1]",
+                    slo.model
+                );
             }
         }
         if self.time_scale <= 0.0 {
@@ -2015,5 +2184,83 @@ model_placement:
         for p in [PlacementPolicy::Static, PlacementPolicy::Dynamic] {
             assert_eq!(PlacementPolicy::parse(p.name()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn observability_defaults() {
+        let cfg = DeploymentConfig::from_yaml("").unwrap();
+        let ob = &cfg.observability;
+        assert_eq!(ob.trace_sample_rate, 1.0);
+        assert_eq!(ob.trace_capacity, 65536);
+        assert_eq!(ob.slo_fast_window, Duration::from_secs(300));
+        assert_eq!(ob.slo_slow_window, Duration::from_secs(3600));
+        assert!(ob.slos.is_empty());
+    }
+
+    #[test]
+    fn observability_parses() {
+        let text = r#"
+observability:
+  trace_sample_rate: 0.25
+  trace_capacity: 1024
+  slo_fast_window: 60
+  slo_slow_window: 600
+  slo_eval_interval: 2
+  slo_burn_threshold: 4
+  slos:
+    - model: particlenet
+      latency_p99: 0.2
+      error_budget: 0.05
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let ob = &cfg.observability;
+        assert_eq!(ob.trace_sample_rate, 0.25);
+        assert_eq!(ob.trace_capacity, 1024);
+        assert_eq!(ob.slo_burn_threshold, 4.0);
+        assert_eq!(ob.slos.len(), 1);
+        assert_eq!(ob.slos[0].model, "particlenet");
+        assert!((ob.slos[0].latency_p99.as_secs_f64() - 0.2).abs() < 1e-9);
+        assert_eq!(ob.slos[0].error_budget, 0.05);
+    }
+
+    #[test]
+    fn observability_bad_values_rejected() {
+        assert!(
+            DeploymentConfig::from_yaml("observability:\n  trace_sample_rate: 1.5\n").is_err()
+        );
+        assert!(DeploymentConfig::from_yaml("observability:\n  trace_capacity: 0\n").is_err());
+        assert!(
+            DeploymentConfig::from_yaml("observability:\n  slo_burn_threshold: 0\n").is_err()
+        );
+        // slow window below fast window breaks the multi-window rule
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  slo_fast_window: 120\n  slo_slow_window: 60\n"
+        )
+        .is_err());
+        // eval interval must fit inside the fast window
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  slo_fast_window: 10\n  slo_eval_interval: 30\n"
+        )
+        .is_err());
+        // SLO for an unknown model
+        let e = DeploymentConfig::from_yaml(
+            "observability:\n  slos:\n    - model: nope\n",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("not in server.models"), "{e}");
+        // duplicate SLO entries
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  slos:\n    - model: particlenet\n    - model: particlenet\n"
+        )
+        .is_err());
+        // bad budget
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  slos:\n    - model: particlenet\n      error_budget: 0\n"
+        )
+        .is_err());
+        // typo protection
+        assert!(
+            DeploymentConfig::from_yaml("observability:\n  trace_sample_rte: 0.5\n").is_err()
+        );
     }
 }

@@ -35,6 +35,7 @@ use crate::modelmesh::{initial_placement, ModelRouter, PlacementController};
 use crate::orchestrator::{Cluster, InstanceFactory};
 use crate::runtime::PjrtRuntime;
 use crate::server::{Instance, ModelRepository};
+use crate::telemetry::slo::{SloEngine, SloTask};
 use crate::telemetry::Tracer;
 use crate::util::clock::Clock;
 
@@ -56,7 +57,10 @@ pub struct Deployment {
     pub router: Option<Arc<ModelRouter>>,
     /// Placement controller, when the modelmesh is active.
     pub placement: Option<Arc<PlacementController>>,
+    /// SLO burn-rate engine, when `observability.slos` is non-empty.
+    pub slo: Option<Arc<SloEngine>>,
     metrics_http: Option<MetricsServer>,
+    _slo_task: Option<SloTask>,
     _scraper: Scraper,
 }
 
@@ -97,10 +101,14 @@ impl Deployment {
             cfg.monitoring.scrape_interval,
         );
         let tracer = if cfg.monitoring.tracing {
-            Tracer::new(clock.clone(), 65536, true)
+            Tracer::new(clock.clone(), cfg.observability.trace_capacity, true)
+                .with_sample_rate(cfg.observability.trace_sample_rate)
         } else {
             Tracer::disabled()
         };
+        // Export drop accounting even when tracing is off: a flat-zero
+        // `trace_spans_dropped_total` is the healthy-baseline signal.
+        tracer.bind_registry(&registry);
 
         // Model repository: compile through PJRT only when instances will
         // actually execute.
@@ -236,6 +244,10 @@ impl Deployment {
                 batch_mode: cfg.server.batch_mode,
                 max_bulk_wait: cfg.server.priorities.max_bulk_wait,
                 catalog: Arc::clone(&engine_catalog),
+                // Shared with the gateway: server-side queue/batch/
+                // compute spans land in the same trace buffer the
+                // gateway reads its stage breakdown from.
+                tracer: tracer.clone(),
                 ..Default::default()
             };
             let backend_registry = Arc::clone(&backend_registry);
@@ -376,6 +388,7 @@ impl Deployment {
                     catalog.clone(),
                     load_costs.clone(),
                     engine_catalog.compat_map(),
+                    cfg.engines.onnx_slowdown,
                     Arc::clone(router),
                     store.clone(),
                     clock.clone(),
@@ -421,6 +434,26 @@ impl Deployment {
             registry.clone(),
         );
 
+        // SLO burn-rate engine: only when targets are configured. The
+        // task evaluates on the shared (possibly dilated) clock, so the
+        // fast/slow windows follow the experiment's time scale.
+        let (slo, slo_task) = if cfg.observability.slos.is_empty() {
+            (None, None)
+        } else {
+            let engine = Arc::new(SloEngine::new(
+                cfg.observability.clone(),
+                registry.clone(),
+                store.clone(),
+                clock.clone(),
+            ));
+            let task = SloTask::start(
+                Arc::clone(&engine),
+                clock.clone(),
+                cfg.observability.slo_eval_interval,
+            );
+            (Some(engine), Some(task))
+        };
+
         let metrics_http = if cfg.monitoring.listen.is_empty() {
             None
         } else {
@@ -460,7 +493,9 @@ impl Deployment {
             per_model_scaler,
             router,
             placement,
+            slo,
             metrics_http,
+            _slo_task: slo_task,
             _scraper: scraper,
         })
     }
@@ -554,6 +589,7 @@ mod tests {
             },
             model_placement: Default::default(),
             engines: Default::default(),
+            observability: Default::default(),
             time_scale: 1.0,
         }
     }

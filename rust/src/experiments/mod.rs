@@ -214,6 +214,7 @@ pub fn fig_config(
         },
         model_placement: ModelPlacementConfig::default(),
         engines: EnginesConfig::default(),
+        observability: ObservabilityConfig::default(),
         time_scale,
     }
 }
@@ -304,6 +305,7 @@ pub fn modelmesh_config(
             load_delay: Duration::ZERO,
         },
         engines: EnginesConfig::default(),
+        observability: ObservabilityConfig::default(),
         time_scale,
     }
 }
@@ -507,6 +509,7 @@ pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
             onnx_slowdown: 2.0,
             ..EnginesConfig::default()
         },
+        observability: ObservabilityConfig::default(),
         time_scale,
     }
 }
@@ -589,6 +592,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
         },
         model_placement: ModelPlacementConfig::default(),
         engines: EnginesConfig::default(),
+        observability: ObservabilityConfig::default(),
         time_scale,
     }
 }

@@ -35,7 +35,7 @@ use crate::rpc::codec::{InferRequest, InferResponse, Priority, RequestKind, Stat
 use crate::rpc::server::{Handler, RpcServer};
 use crate::server::batcher::ExecOutcome;
 use crate::server::Instance;
-use crate::telemetry::{Span, Tracer};
+use crate::telemetry::{slo, Span, StageRecorder, Tracer, ROOT_SPAN};
 use crate::util::clock::Clock;
 
 use auth::Authenticator;
@@ -136,6 +136,30 @@ impl Gateway {
             }
         };
         let m_latency = registry.histogram("gateway_latency_seconds", &labels(&[]));
+        // Per-model SLO feed: the burn-rate engine ([`slo::SloEngine`])
+        // reads these to judge each model against its latency / error
+        // targets. Latency is only observed for Ok responses (a shed
+        // request has no service latency); every non-Ok infer counts as
+        // an error against the model's budget.
+        let m_model_latency = {
+            let registry = registry.clone();
+            move |model: &str| {
+                registry.histogram(slo::MODEL_LATENCY_HIST, &labels(&[("model", model)]))
+            }
+        };
+        let m_model_requests = {
+            let registry = registry.clone();
+            move |model: &str| {
+                registry.counter(slo::MODEL_REQUESTS_COUNTER, &labels(&[("model", model)]))
+            }
+        };
+        let m_model_errors = {
+            let registry = registry.clone();
+            move |model: &str| {
+                registry.counter(slo::MODEL_ERRORS_COUNTER, &labels(&[("model", model)]))
+            }
+        };
+        let stage_recorder = StageRecorder::new(&registry);
         let m_shed = registry.counter("gateway_shed_total", &labels(&[]));
         let m_shed_priority: [_; Priority::COUNT] = [
             registry.counter("gateway_shed_priority_total", &labels(&[("priority", "bulk")])),
@@ -149,9 +173,17 @@ impl Gateway {
         let clock2 = clock.clone();
         let handler: Handler = Arc::new(move |req: InferRequest| {
             let t0 = clock2.now();
+            let ts0 = clock2.now_secs();
             let priority = priorities.resolve(req.priority, &req.token, &req.model);
+            // Honor the wire head-sampling bit server-side: an opted-out
+            // trace id is treated as untraced (0), so every span call on
+            // this hop — and every hop it fans out to — no-ops.
+            let trace = if req.sampled { req.trace_id } else { 0 };
+            let is_infer = req.kind == RequestKind::Infer;
+            let model = req.model.clone();
             let response = handle_request(
                 req,
+                trace,
                 priority,
                 &priorities,
                 &lb2,
@@ -160,17 +192,35 @@ impl Gateway {
                 &bucket,
                 pressure.as_deref(),
                 &tracer,
-                &clock2,
             );
             let dt = (clock2.now().saturating_sub(t0)) as f64 / 1e9;
             m_latency.observe(dt);
             m_requests(response.status).inc();
+            if is_infer {
+                m_model_requests(&model).inc();
+                if response.status == Status::Ok {
+                    m_model_latency(&model).observe(dt);
+                } else {
+                    m_model_errors(&model).inc();
+                }
+            }
             if matches!(
                 response.status,
                 Status::RateLimited | Status::Overloaded | Status::Unauthorized
             ) {
                 m_shed.inc();
                 m_shed_priority[priority.index()].inc();
+            }
+            if trace != 0 && tracer.enabled() {
+                // Close the root span over the whole pipeline, then fold
+                // the finished trace into the per-stage histograms.
+                tracer.record(Span {
+                    trace_id: trace,
+                    name: ROOT_SPAN.into(),
+                    start: ts0,
+                    end: clock2.now_secs(),
+                });
+                stage_recorder.observe(&tracer.trace(trace));
             }
             response
         });
@@ -207,10 +257,13 @@ impl Gateway {
 }
 
 /// The per-request policy pipeline. `priority` is the request's resolved
-/// class (explicit wire priority or a `server.priorities` default).
+/// class (explicit wire priority or a `server.priorities` default);
+/// `trace` is the effective trace id (0 when untraced or head-sampled
+/// out), stamped on every stage span and propagated to the instance.
 #[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: InferRequest,
+    trace: u64,
     priority: Priority,
     priorities: &PriorityConfig,
     lb: &LoadBalancer,
@@ -219,10 +272,7 @@ fn handle_request(
     bucket: &TokenBucket,
     pressure: Option<&PressureGate>,
     tracer: &Tracer,
-    clock: &Clock,
 ) -> InferResponse {
-    let gateway_start = clock.now_secs();
-
     // 0. Health probes bypass auth/limits: they answer "is the deployment
     //    routable" (the k8s readiness probe analogue).
     if req.kind == RequestKind::Health {
@@ -234,7 +284,11 @@ fn handle_request(
     }
 
     // 1. Authentication.
-    if !authenticator.check(&req.token) {
+    let admitted = {
+        let _stage = tracer.span(trace, "admit");
+        authenticator.check(&req.token)
+    };
+    if !admitted {
         return InferResponse::err(req.request_id, Status::Unauthorized, "invalid token");
     }
 
@@ -245,6 +299,7 @@ fn handle_request(
     // The reserve is clamped to burst - 1 so bulk always keeps at least
     // one usable token in a full bucket: a tiny burst with the default
     // reserve must rate-limit bulk *first*, never *forever*.
+    let ratelimit_stage = tracer.span(trace, "ratelimit");
     let reserve = if priority == Priority::Bulk {
         (bucket.burst() * priorities.bulk_reserve).min(bucket.burst() - 1.0).max(0.0)
     } else {
@@ -270,6 +325,7 @@ fn handle_request(
             );
         }
     }
+    drop(ratelimit_stage);
 
     // 3. Route. One retry on a *different* instance if the first pick
     //    rejects (it may have saturated between pick and submit) — the
@@ -283,7 +339,12 @@ fn handle_request(
     let mut last_status = Status::Overloaded;
     let mut last_msg = String::from("no ready instances");
     let mut rejected_by: Option<String> = None;
-    for _attempt in 0..2 {
+    for attempt in 0..2 {
+        // Each routing hop gets its own span — the first is "route", a
+        // second attempt is "retry" — covering pick + submit hand-off
+        // (the wait for the executor's reply is queue/compute time,
+        // reported by the server-side spans).
+        let hop_stage = tracer.span(trace, if attempt == 0 { "route" } else { "retry" });
         let instance = match router {
             Some(r) => match r.pick_excluding(&req.model, rejected_by.as_deref()) {
                 Ok(inst) => inst,
@@ -326,13 +387,14 @@ fn handle_request(
                 }
             },
         };
-        match instance.submit_prio(&req.model, input, priority, req.trace_id) {
+        match instance.submit_prio(&req.model, input, priority, trace) {
             Ok(rx) => {
+                drop(hop_stage);
                 let outcome = rx.recv().unwrap_or(ExecOutcome::Err {
                     status: Status::Internal,
                     message: "executor dropped request".into(),
                 });
-                return finish(req.request_id, req.trace_id, outcome, tracer, gateway_start, clock);
+                return finish(req.request_id, outcome);
             }
             Err((status, returned)) => {
                 input = returned;
@@ -355,52 +417,21 @@ fn handle_request(
     InferResponse::err(req.request_id, last_status, last_msg)
 }
 
-/// Convert an executor outcome into a wire response + tracing spans.
-fn finish(
-    request_id: u64,
-    trace_id: u64,
-    outcome: ExecOutcome,
-    tracer: &Tracer,
-    gateway_start: f64,
-    clock: &Clock,
-) -> InferResponse {
+/// Convert an executor outcome into a wire response. Tracing spans are
+/// no longer synthesized here: the batcher and executor record real
+/// queue/batch/compute spans against the propagated trace id, and the
+/// handler closes the root span around the whole pipeline.
+fn finish(request_id: u64, outcome: ExecOutcome) -> InferResponse {
     match outcome {
-        ExecOutcome::Ok { output, queue_us, compute_us, batch_rows } => {
-            if tracer.enabled() && trace_id != 0 {
-                let end = clock.now_secs();
-                let compute_s = compute_us as f64 / 1e6;
-                let queue_s = queue_us as f64 / 1e6;
-                // Reconstruct the server-side timeline right-aligned at
-                // response time: [gateway ... [queue][compute]] end.
-                tracer.record(Span {
-                    trace_id,
-                    name: "gateway".into(),
-                    start: gateway_start,
-                    end,
-                });
-                tracer.record(Span {
-                    trace_id,
-                    name: "queue".into(),
-                    start: end - compute_s - queue_s,
-                    end: end - compute_s,
-                });
-                tracer.record(Span {
-                    trace_id,
-                    name: "compute".into(),
-                    start: end - compute_s,
-                    end,
-                });
-            }
-            InferResponse {
-                status: Status::Ok,
-                request_id,
-                queue_us,
-                compute_us,
-                batch_size: batch_rows,
-                output,
-                error: String::new(),
-            }
-        }
+        ExecOutcome::Ok { output, queue_us, compute_us, batch_rows } => InferResponse {
+            status: Status::Ok,
+            request_id,
+            queue_us,
+            compute_us,
+            batch_size: batch_rows,
+            output,
+            error: String::new(),
+        },
         ExecOutcome::Err { status, message } => InferResponse::err(request_id, status, message),
     }
 }
@@ -856,9 +887,33 @@ mod tests {
     fn tracing_records_breakdown() {
         let clock = Clock::real();
         let registry = Registry::new();
-        let inst = sim_instance("tr-0", &clock, &registry);
-        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
         let tracer = Tracer::new(clock.clone(), 1024, true);
+        // The instance shares the tracer so queue/batch/compute spans
+        // from the server side land on the same trace id.
+        let inst = Instance::start_with_opts(
+            "tr-0",
+            Arc::clone(&REPO),
+            &[ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                load_delay: None,
+                backends: Vec::new(),
+            }],
+            clock.clone(),
+            registry.clone(),
+            crate::server::InstanceOptions {
+                exec_mode: ExecutionMode::Simulated,
+                tracer: tracer.clone(),
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
         let gateway = Gateway::start(
             &GatewayConfig::default(),
             endpoints,
@@ -875,8 +930,41 @@ mod tests {
         let view = tracer.trace(client.trace_id);
         let names: Vec<&str> = view.spans.iter().map(|s| s.name.as_str()).collect();
         assert!(names.contains(&"gateway"), "{names:?}");
+        assert!(names.contains(&"admit"), "{names:?}");
+        assert!(names.contains(&"ratelimit"), "{names:?}");
+        assert!(names.contains(&"route"), "{names:?}");
+        assert!(names.contains(&"queue"), "{names:?}");
         assert!(names.contains(&"compute"), "{names:?}");
         assert!(view.duration_of("compute") > 0.0);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    /// The wire sampling bit must be honored server-side: a request that
+    /// carries a trace id but was head-sampled *out* leaves no spans.
+    #[test]
+    fn sampled_out_request_leaves_no_spans() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("tr-1", &clock, &registry);
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+        let tracer = Tracer::new(clock.clone(), 1024, true);
+        let gateway = Gateway::start(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            tracer.clone(),
+            None,
+        )
+        .unwrap();
+        let mut client = RpcClient::connect(&gateway.addr().to_string())
+            .unwrap()
+            .with_trace(tracer.new_trace(), false);
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert_eq!(resp.status, Status::Ok);
+        assert!(tracer.trace(client.trace_id).spans.is_empty());
+        assert!(tracer.is_empty());
         gateway.shutdown();
         inst.stop();
     }

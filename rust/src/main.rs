@@ -196,6 +196,25 @@ fn cmd_check(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         println!("  placement:   off (all models on every instance)");
     }
+    println!(
+        "  observability: trace sample_rate={}, capacity={} span(s); SLO windows {}s/{}s, \
+         burn threshold {}x, eval every {}s",
+        cfg.observability.trace_sample_rate,
+        cfg.observability.trace_capacity,
+        cfg.observability.slo_fast_window.as_secs(),
+        cfg.observability.slo_slow_window.as_secs(),
+        cfg.observability.slo_burn_threshold,
+        cfg.observability.slo_eval_interval.as_secs(),
+    );
+    if cfg.observability.slos.is_empty() {
+        println!("    slos: none configured (burn-rate engine stays off)");
+    }
+    for s in &cfg.observability.slos {
+        println!(
+            "    - {}: latency_p99 <= {:?}, error_budget {}",
+            s.model, s.latency_p99, s.error_budget
+        );
+    }
     Ok(())
 }
 

@@ -134,6 +134,12 @@ pub struct PlacementCore {
     compat: BTreeMap<String, Vec<String>>,
     /// Amortization horizon for the load charge, seconds.
     horizon: f64,
+    /// Execution slowdown of a fallback-backend replica relative to
+    /// the preferred backend (the engines section's `onnx_slowdown`).
+    /// A replica serving on a fallback backend delivers `1/slowdown`
+    /// of a preferred replica's throughput, so grow scoring discounts
+    /// its value accordingly. `<= 1.0` disables the discount.
+    fallback_slowdown: f64,
     /// (instance id, model) -> clock-seconds of the last move.
     cooldowns: BTreeMap<(String, String), f64>,
 }
@@ -165,7 +171,22 @@ impl PlacementCore {
         compat: BTreeMap<String, Vec<String>>,
     ) -> Self {
         let horizon = cfg.load_cost_horizon().as_secs_f64();
-        PlacementCore { cfg, catalog, load_costs, compat, horizon, cooldowns: BTreeMap::new() }
+        PlacementCore {
+            cfg,
+            catalog,
+            load_costs,
+            compat,
+            horizon,
+            fallback_slowdown: 1.0,
+            cooldowns: BTreeMap::new(),
+        }
+    }
+
+    /// Charge fallback-backend replicas their execution slowdown when
+    /// scoring grow moves (see [`PlacementCore::exec_discount`]).
+    pub fn with_fallback_slowdown(mut self, slowdown: f64) -> Self {
+        self.fallback_slowdown = slowdown;
+        self
     }
 
     /// Can `view` host `model` at all — does its backend set intersect
@@ -196,6 +217,21 @@ impl PlacementCore {
                     .position(|b| view.backends.contains(b))
                     .unwrap_or(usize::MAX)
             }
+        }
+    }
+
+    /// Per-(instance, backend) execution-cost multiplier for landing
+    /// `model` on `view`: a replica serving on a fallback backend runs
+    /// `fallback_slowdown`× slower than on the model's preferred
+    /// backend, so it absorbs only `1/slowdown` of the demand a
+    /// preferred replica would — its marginal value is discounted the
+    /// same way the warm-load charge discounts a slow load. 1.0 on the
+    /// preferred backend and for unconstrained models/views.
+    fn exec_discount(&self, view: &InstanceView, model: &str) -> f64 {
+        if self.fallback_slowdown <= 1.0 || self.backend_rank(view, model) == 0 {
+            1.0
+        } else {
+            1.0 / self.fallback_slowdown
         }
     }
 
@@ -457,9 +493,12 @@ impl PlacementCore {
             })
             .collect();
         hot.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap_or(std::cmp::Ordering::Equal));
-        for (model, mem, _load) in hot {
+        for (model, mem, load) in hot {
             // Candidate: backend-compatible, not already hosting (warm
-            // or mid-load), off cooldown, with free memory. Preference
+            // or mid-load), off cooldown, with free memory, and worth
+            // its execution cost — a fallback-backend replica absorbs
+            // only `1/fallback_slowdown` of the demand, so its
+            // discounted benefit must still clear the bar. Preference
             // order: instances serving the model on its *preferred*
             // backend first, then fallback backends (only used when the
             // preferred tier has no capacity), emptiest instance within
@@ -469,6 +508,7 @@ impl PlacementCore {
                 .filter(|v| !v.present(&model) && self.hostable(v, &model))
                 .filter(|v| self.cooldown_ok(now, &v.id, &model))
                 .filter(|v| budget == 0 || v.mem_used + mem <= budget)
+                .filter(|v| load * self.exec_discount(v, &model) > self.cfg.load_threshold)
                 .min_by_key(|v| {
                     (self.backend_rank(v, &model), v.mem_used, v.loaded.len() + v.loading.len())
                 })
@@ -517,12 +557,15 @@ impl PlacementController {
     /// load free. `compat` is the engine catalog's per-model backend
     /// preference map — the planner never lands a model on an instance
     /// without a compatible backend (empty = unconstrained).
+    /// `fallback_slowdown` is the engines section's `onnx_slowdown`:
+    /// grow scoring discounts a fallback-backend replica's value by it.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: ModelPlacementConfig,
         catalog: Vec<(String, u64)>,
         load_costs: BTreeMap<String, f64>,
         compat: BTreeMap<String, Vec<String>>,
+        fallback_slowdown: f64,
         router: Arc<ModelRouter>,
         store: MetricStore,
         clock: Clock,
@@ -557,12 +600,10 @@ impl PlacementController {
             })
             .collect();
         Arc::new(PlacementController {
-            core: Mutex::new(PlacementCore::with_backends(
-                cfg.clone(),
-                catalog.clone(),
-                load_costs,
-                compat,
-            )),
+            core: Mutex::new(
+                PlacementCore::with_backends(cfg.clone(), catalog.clone(), load_costs, compat)
+                    .with_fallback_slowdown(fallback_slowdown),
+            ),
             cfg,
             catalog,
             router,
@@ -1072,6 +1113,54 @@ mod tests {
     }
 
     #[test]
+    fn gpu_candidate_outranks_equal_fallback_candidate() {
+        // hot is overloaded; two otherwise-equal empty candidates — one
+        // on the preferred backend (pjrt), one fallback-only (onnx-sim).
+        // The grow move must land on the GPU: a fallback replica is
+        // worth 1/slowdown as much per unit of demand.
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = backend_core(c).with_fallback_slowdown(4.0);
+        let views = vec![
+            view_backends("src", &["hot"], &["pjrt"]),
+            InstanceView { mem_used: 600_000, ..view_backends("gpu0", &[], &["pjrt"]) },
+            view_backends("cpu0", &["cold"], &["onnx-sim"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "gpu0".to_string(), model: "hot".to_string() }]
+        );
+    }
+
+    #[test]
+    fn fallback_candidate_needs_slowdown_times_more_load() {
+        // Only a fallback (onnx-sim) candidate is available and the
+        // replica would serve 4x slower there: demand that clears the
+        // bare threshold (150 > 100) is not worth a replica delivering
+        // a quarter of the throughput (150 * 1/4 = 37.5), but demand
+        // above slowdown * threshold is (500 * 1/4 = 125 > 100).
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = backend_core(c.clone()).with_fallback_slowdown(4.0);
+        let views = vec![
+            view_backends("src", &["hot"], &["pjrt"]),
+            view_backends("cpu0", &["cold"], &["onnx-sim"]),
+        ];
+        let moves = core.plan(0.0, &views, &demand(150.0, 50.0));
+        assert!(moves.is_empty(), "underwater fallback replica planned: {moves:?}");
+        let moves = core.plan(1.0, &views, &demand(500.0, 50.0));
+        assert_eq!(
+            moves,
+            vec![Move::Load { instance: "cpu0".to_string(), model: "hot".to_string() }]
+        );
+        // Sanity: without the discount the marginal demand does move.
+        let mut flat = backend_core(c);
+        let moves = flat.plan(0.0, &views, &demand(150.0, 50.0));
+        assert_eq!(moves.len(), 1, "{moves:?}");
+    }
+
+    #[test]
     fn demand_for_scales_critical_backlog_before_equal_bulk() {
         use crate::config::{ExecutionMode, LbPolicy, ModelConfig, ServiceModelConfig};
         use crate::runtime::Tensor;
@@ -1142,6 +1231,7 @@ mod tests {
             catalog,
             BTreeMap::new(),
             BTreeMap::new(),
+            1.0,
             Arc::clone(&router),
             MetricStore::new(Duration::from_secs(60)),
             clock.clone(),

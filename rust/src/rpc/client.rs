@@ -23,6 +23,10 @@ pub struct RpcClient {
     pub token: String,
     /// Trace id attached to every request (0 = untraced).
     pub trace_id: u64,
+    /// Head-sampling bit attached to every request. Defaults to true:
+    /// a non-zero `trace_id` traces unless the sampler opted it out
+    /// (see `Tracer::start_trace`).
+    pub sampled: bool,
     /// Priority class attached to every request (`None` lets the
     /// gateway resolve the deployment's configured default).
     pub priority: Option<Priority>,
@@ -33,7 +37,13 @@ impl RpcClient {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, token: String::new(), trace_id: 0, priority: None })
+        Ok(RpcClient {
+            stream,
+            token: String::new(),
+            trace_id: 0,
+            sampled: true,
+            priority: None,
+        })
     }
 
     /// Connect with a timeout.
@@ -43,7 +53,13 @@ impl RpcClient {
         let stream = TcpStream::connect_timeout(&sockaddr, timeout)
             .with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream, token: String::new(), trace_id: 0, priority: None })
+        Ok(RpcClient {
+            stream,
+            token: String::new(),
+            trace_id: 0,
+            sampled: true,
+            priority: None,
+        })
     }
 
     /// Set the auth token used for subsequent requests.
@@ -58,6 +74,14 @@ impl RpcClient {
         self
     }
 
+    /// Set the propagated trace context (id + head-sampling decision)
+    /// for subsequent requests.
+    pub fn with_trace(mut self, trace_id: u64, sampled: bool) -> Self {
+        self.trace_id = trace_id;
+        self.sampled = sampled;
+        self
+    }
+
     /// Issue an inference request and wait for the response.
     pub fn infer(&mut self, model: &str, input: Tensor) -> Result<InferResponse> {
         let request_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
@@ -65,6 +89,7 @@ impl RpcClient {
             kind: RequestKind::Infer,
             request_id,
             trace_id: self.trace_id,
+            sampled: self.sampled,
             token: self.token.clone(),
             model: model.to_string(),
             priority: self.priority,

@@ -139,6 +139,10 @@ pub struct InferRequest {
     pub request_id: u64,
     /// Trace id for distributed tracing (0 = not traced).
     pub trace_id: u64,
+    /// Head-sampling decision, made once where the trace id is minted
+    /// and honored by every hop: when false, servers record no spans
+    /// for this trace even if tracing is enabled.
+    pub sampled: bool,
     /// Auth token ("" when auth is disabled).
     pub token: String,
     pub model: String,
@@ -157,6 +161,9 @@ impl InferRequest {
             kind: RequestKind::Infer,
             request_id,
             trace_id: 0,
+            // Sampled-in by default: a non-zero trace id traces unless
+            // the head sampler explicitly opted the trace out.
+            sampled: true,
             token: String::new(),
             model: model.to_string(),
             priority: None,
@@ -170,6 +177,7 @@ impl InferRequest {
             kind: RequestKind::Health,
             request_id,
             trace_id: 0,
+            sampled: false,
             token: String::new(),
             model: String::new(),
             priority: None,
@@ -332,6 +340,8 @@ pub fn encode_request(req: &InferRequest) -> Vec<u8> {
     out.push(req.kind as u8);
     out.extend_from_slice(&req.request_id.to_le_bytes());
     out.extend_from_slice(&req.trace_id.to_le_bytes());
+    // Trace flags byte: bit 0 = head-sampling decision.
+    out.push(req.sampled as u8);
     put_str8(&mut out, &req.token);
     put_str8(&mut out, &req.model);
     // Priority byte: 0 = unset (gateway resolves a default), else the
@@ -350,6 +360,11 @@ pub fn decode_request(buf: &[u8]) -> Result<InferRequest> {
     let kind = RequestKind::from_u8(c.u8()?)?;
     let request_id = c.u64()?;
     let trace_id = c.u64()?;
+    let flags = c.u8()?;
+    if flags & !1 != 0 {
+        bail!("unknown trace flags {flags:#04x}");
+    }
+    let sampled = flags & 1 != 0;
     let token = c.str8()?;
     let model = c.str8()?;
     let priority = match c.u8()? {
@@ -358,7 +373,7 @@ pub fn decode_request(buf: &[u8]) -> Result<InferRequest> {
     };
     let input = get_tensor(&mut c)?;
     c.done()?;
-    Ok(InferRequest { kind, request_id, trace_id, token, model, priority, input })
+    Ok(InferRequest { kind, request_id, trace_id, sampled, token, model, priority, input })
 }
 
 /// Encode a response payload (without frame header).
@@ -462,11 +477,28 @@ mod tests {
     fn bad_priority_byte_rejected() {
         let req = InferRequest::infer(1, "m", sample_tensor());
         let mut buf = encode_request(&req);
-        // kind(1) + request_id(8) + trace_id(8) + token("",1) + model("m",2)
-        let prio_off = 1 + 8 + 8 + 1 + 2;
+        // kind(1) + request_id(8) + trace_id(8) + flags(1) + token("",1)
+        // + model("m",2)
+        let prio_off = 1 + 8 + 8 + 1 + 1 + 2;
         assert_eq!(buf[prio_off], 0, "unset priority encodes as 0");
         buf[prio_off] = 9;
         assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn sampling_bit_roundtrips_and_unknown_flags_rejected() {
+        let mut req = InferRequest::infer(3, "m", sample_tensor());
+        req.trace_id = 11;
+        req.sampled = false;
+        let got = decode_request(&encode_request(&req)).unwrap();
+        assert!(!got.sampled);
+        assert_eq!(got, req);
+        req.sampled = true;
+        assert!(decode_request(&encode_request(&req)).unwrap().sampled);
+        // flags byte sits right after kind + request_id + trace_id
+        let mut buf = encode_request(&req);
+        buf[1 + 8 + 8] = 0x82;
+        assert!(decode_request(&buf).is_err(), "unknown flag bits must be rejected");
     }
 
     #[test]

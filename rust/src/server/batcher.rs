@@ -51,6 +51,7 @@ use std::time::Duration;
 use crate::config::BatchMode;
 use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
+use crate::telemetry::{Span, Tracer};
 use crate::util::clock::{Clock, Nanos};
 
 /// Batching knobs for one model (from `config::ModelConfig`).
@@ -191,6 +192,10 @@ pub struct BatchQueue {
     /// Anti-starvation aging bound for below-critical lane heads
     /// (`server.priorities.max_bulk_wait`; zero disables aging).
     max_bulk_wait: Duration,
+    /// Records per-request enqueue→pop "queue" spans against the
+    /// propagated trace id (disabled by default; see
+    /// [`BatchQueue::with_tracer`]).
+    tracer: Tracer,
 }
 
 impl BatchQueue {
@@ -223,7 +228,16 @@ impl BatchQueue {
             capacity,
             mode,
             max_bulk_wait,
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Attach a tracer: every popped request records a "queue" span from
+    /// its enqueue time to the pop (the per-(model, priority) queue wait
+    /// of the latency breakdown).
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
     }
 
     /// Enqueue a request.
@@ -614,6 +628,18 @@ impl BatchQueue {
         // always takes it (an oversized head goes alone), so a selected
         // pop can never come back empty.
         debug_assert!(!batch.is_empty());
+        drop(inner);
+        if self.tracer.enabled() {
+            let popped = clock.now_secs();
+            for p in &batch {
+                self.tracer.record(Span {
+                    trace_id: p.trace_id,
+                    name: "queue".into(),
+                    start: p.enqueued as f64 / 1e9,
+                    end: popped,
+                });
+            }
+        }
         Some(batch)
     }
 
@@ -1175,6 +1201,25 @@ mod tests {
             waited >= Duration::from_millis(50) && waited < Duration::from_millis(500),
             "pop should wake near the aging bound, waited {waited:?}"
         );
+    }
+
+    #[test]
+    fn popped_requests_record_queue_spans() {
+        let clock = Clock::simulated();
+        let tracer = Tracer::new(clock.clone(), 64, true);
+        let q = BatchQueue::new(64).with_tracer(tracer.clone());
+        clock.advance(Duration::from_secs(1));
+        let (p, _rx) = pending_prio("m", 1, Priority::Standard, 42, &clock);
+        q.push(p).map_err(|_| ()).unwrap();
+        clock.advance(Duration::from_secs(2));
+        let batch = q
+            .pop_batch(&clock, policy(1, 1, 16), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(batch.len(), 1);
+        let v = tracer.trace(42);
+        assert_eq!(v.spans.len(), 1);
+        assert_eq!(v.spans[0].name, "queue");
+        assert!((v.duration_of("queue") - 2.0).abs() < 1e-6, "{}", v.duration_of("queue"));
     }
 
     #[test]

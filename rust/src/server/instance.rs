@@ -44,6 +44,7 @@ use crate::rpc::codec::{Priority, Status};
 use crate::runtime::Tensor;
 use crate::server::batcher::{BatchPolicy, BatchQueue, ExecOutcome, Pending};
 use crate::server::repository::ModelRepository;
+use crate::telemetry::{Span, Tracer};
 use crate::util::clock::{Clock, Nanos};
 
 /// Instance lifecycle state.
@@ -165,6 +166,13 @@ pub struct Instance {
     /// Per-model fallback-selection counters (`backend_fallback_total`),
     /// created lazily like the per-model request counters.
     m_backend_fallback: Mutex<HashMap<String, crate::metrics::registry::Counter>>,
+    /// Per-(model, priority) queue-wait histograms
+    /// (`queue_wait_seconds{instance,model,priority}`), created lazily
+    /// like the per-model request counters.
+    m_queue_wait: Mutex<HashMap<(String, usize), crate::metrics::registry::HistogramHandle>>,
+    /// Records server-side batch/compute spans (and shed terminal queue
+    /// spans) for traced requests; disabled by default.
+    tracer: Tracer,
 }
 
 /// One serving-set entry.
@@ -202,6 +210,9 @@ pub struct InstanceOptions {
     /// pass the shared resolved catalog (which also carries the
     /// configured `engines.default_backend`).
     pub catalog: Arc<EngineCatalog>,
+    /// Tracer shared with the gateway so server-side queue/batch/compute
+    /// spans land on the propagated trace id (disabled by default).
+    pub tracer: Tracer,
 }
 
 impl Default for InstanceOptions {
@@ -214,6 +225,7 @@ impl Default for InstanceOptions {
             max_bulk_wait: Duration::ZERO,
             backends: BackendRegistry::default().for_class(AcceleratorClass::Gpu),
             catalog: Arc::new(EngineCatalog::default()),
+            tracer: Tracer::disabled(),
         }
     }
 }
@@ -377,11 +389,14 @@ impl Instance {
                 .collect();
         let instance = Arc::new(Instance {
             id: id.to_string(),
-            queue: Arc::new(BatchQueue::with_aging(
-                opts.queue_capacity,
-                opts.batch_mode,
-                opts.max_bulk_wait,
-            )),
+            queue: Arc::new(
+                BatchQueue::with_aging(
+                    opts.queue_capacity,
+                    opts.batch_mode,
+                    opts.max_bulk_wait,
+                )
+                .with_tracer(opts.tracer.clone()),
+            ),
             state: AtomicU8::new(InstanceState::Starting as u8),
             inflight: AtomicUsize::new(0),
             repo,
@@ -415,6 +430,8 @@ impl Instance {
             m_preemptions: registry2.counter("batch_preemptions_total", &inst_labels),
             m_backend_inference,
             m_backend_fallback: Mutex::new(HashMap::new()),
+            m_queue_wait: Mutex::new(HashMap::new()),
+            tracer: opts.tracer,
         });
         instance.refresh_placement_gauges();
         let exec = Arc::clone(&instance);
@@ -750,8 +767,18 @@ impl Instance {
         };
         match self.queue.push(pending) {
             Ok(evicted) => {
+                let shed_at = self.clock.now_secs();
                 for victim in evicted {
                     self.m_shed_priority[victim.priority.index()].inc();
+                    // Terminal queue span: the victim's wait ended in an
+                    // eviction, not a pop — the trace still accounts for
+                    // the time it spent queued.
+                    self.tracer.record(Span {
+                        trace_id: victim.trace_id,
+                        name: "queue".into(),
+                        start: victim.enqueued as f64 / 1e9,
+                        end: shed_at,
+                    });
                     let _ = victim.reply.send(ExecOutcome::Err {
                         status: Status::Overloaded,
                         message: format!(
@@ -837,6 +864,26 @@ impl Instance {
                 self.registry.counter(
                     "inference_requests_total",
                     &labels(&[("instance", &self.id), ("model", model)]),
+                )
+            })
+            .clone()
+    }
+
+    fn queue_wait_hist(
+        &self,
+        model: &str,
+        priority: Priority,
+    ) -> crate::metrics::registry::HistogramHandle {
+        let mut map = self.m_queue_wait.lock().unwrap();
+        map.entry((model.to_string(), priority.index()))
+            .or_insert_with(|| {
+                self.registry.histogram(
+                    "queue_wait_seconds",
+                    &labels(&[
+                        ("instance", &self.id),
+                        ("model", model),
+                        ("priority", priority.name()),
+                    ]),
                 )
             })
             .clone()
@@ -981,6 +1028,31 @@ impl Instance {
             let t_exec_end = self.clock.now();
             let compute_s = (t_exec_end - t_exec_start) as f64 / 1e9;
             let compute_us = (compute_s * 1e6) as u32;
+
+            // Per-request stage telemetry: the (model, priority) queue
+            // wait, plus batch-assembly and compute spans on the
+            // propagated trace (the batcher already closed the "queue"
+            // span at the pop).
+            let t_exec_start_s = t_exec_start as f64 / 1e9;
+            let t_exec_end_s = t_exec_end as f64 / 1e9;
+            for p in &batch {
+                let wait = (t_exec_start.saturating_sub(p.enqueued)) as f64 / 1e9;
+                self.queue_wait_hist(&p.model, p.priority).observe(wait);
+                if self.tracer.enabled() && p.trace_id != 0 {
+                    self.tracer.record(Span {
+                        trace_id: p.trace_id,
+                        name: "batch".into(),
+                        start: now,
+                        end: t_exec_start_s,
+                    });
+                    self.tracer.record(Span {
+                        trace_id: p.trace_id,
+                        name: "compute".into(),
+                        start: t_exec_start_s,
+                        end: t_exec_end_s,
+                    });
+                }
+            }
 
             // Account busy time + metrics.
             {
@@ -1675,6 +1747,59 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert!(t0.elapsed() < Duration::from_millis(150), "took {:?}", t0.elapsed());
+        inst.stop();
+    }
+
+    #[test]
+    fn traced_request_records_server_spans() {
+        use crate::metrics::registry::labels;
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let tracer = Tracer::new(clock.clone(), 256, true);
+        let models = vec![ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            load_delay: None,
+            backends: Vec::new(),
+        }];
+        let inst = Instance::start_with_opts(
+            "tspan0",
+            Arc::clone(&SIM_REPO),
+            &models,
+            clock,
+            registry.clone(),
+            InstanceOptions {
+                exec_mode: ExecutionMode::Simulated,
+                tracer: tracer.clone(),
+                ..Default::default()
+            },
+        );
+        inst.mark_ready();
+        match inst.submit_and_wait("icecube_cnn", cnn_input(1), 77) {
+            ExecOutcome::Ok { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        let v = tracer.trace(77);
+        let names: Vec<&str> = v.spans.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"queue"), "{names:?}");
+        assert!(names.contains(&"batch"), "{names:?}");
+        assert!(names.contains(&"compute"), "{names:?}");
+        assert!(v.duration_of("compute") > 0.0);
+        // The per-(model, priority) queue-wait histogram observed it.
+        let h = registry.histogram(
+            "queue_wait_seconds",
+            &labels(&[
+                ("instance", "tspan0"),
+                ("model", "icecube_cnn"),
+                ("priority", "standard"),
+            ]),
+        );
+        assert_eq!(h.snapshot().count(), 1);
         inst.stop();
     }
 

@@ -7,13 +7,46 @@
 //! per-source latency breakdown (client -> gateway -> queue -> compute)
 //! that the §2.3 "breakdown of total request latency by source" metric
 //! reports.
+//!
+//! Trace context is propagated on the wire (`InferRequest::trace_id` plus
+//! a head-sampling bit), so one trace id follows a request across gateway
+//! admit / rate-limit / route, per-(model, priority) queue wait, batch
+//! assembly, backend execution and every retry hop. A [`StageRecorder`]
+//! folds finished traces into `request_stage_seconds{stage=...}`
+//! histograms, and [`slo`] evaluates burn-rate alerts over the resulting
+//! series.
 
-use std::collections::HashMap;
+pub mod slo;
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::collections::VecDeque;
 
+use crate::metrics::registry::{labels, Counter, HistogramHandle, Registry};
 use crate::util::clock::Clock;
+
+/// Name of the root (end-to-end) span recorded by the gateway.
+pub const ROOT_SPAN: &str = "gateway";
+
+/// Every stage label emitted on `request_stage_seconds{stage=...}`.
+///
+/// `admit`/`ratelimit`/`route`/`retry` are gateway-side, `queue`/`batch`/
+/// `compute` are server-side, and `other` is the residual of the root span
+/// not covered by any named stage (channel hand-off, reply delivery).
+pub const STAGES: &[&str] = &[
+    "admit", "ratelimit", "route", "retry", "queue", "batch", "compute", "other",
+];
+
+/// Series name for the per-stage latency breakdown histograms.
+pub const STAGE_HISTOGRAM: &str = "request_stage_seconds";
+
+/// Counter of spans evicted from the trace buffer before being read.
+pub const SPANS_DROPPED_COUNTER: &str = "trace_spans_dropped_total";
+
+/// Counter of finished traces skipped by the breakdown because part of
+/// their span set had already been evicted.
+pub const PARTIAL_TRACES_COUNTER: &str = "trace_partial_total";
 
 /// One finished span.
 #[derive(Clone, Debug)]
@@ -52,10 +85,28 @@ impl Drop for SpanGuard {
     }
 }
 
+/// Spans indexed by trace id plus an insertion-order ring for eviction.
+/// Keeping the index keyed by trace makes `trace()` O(spans of that
+/// trace) instead of a scan of the whole buffer — the gateway reads a
+/// trace back on every sampled request, so this is on the hot path.
 #[derive(Default)]
 struct Buffer {
-    spans: VecDeque<Span>,
+    /// Trace id of each retained span, oldest first (eviction order).
+    ring: VecDeque<u64>,
+    /// Per-trace spans in insertion order.
+    traces: HashMap<u64, Vec<Span>>,
+    /// Spans evicted since construction.
+    dropped: u64,
+    /// Trace ids that lost at least one span (bounded; see overflow).
+    dropped_traces: HashSet<u64>,
+    /// Set when `dropped_traces` itself overflowed: from then on every
+    /// trace is conservatively considered partial.
+    dropped_overflow: bool,
 }
+
+/// Bound on the evicted-trace-id set before we fall back to marking
+/// every trace partial.
+const DROPPED_TRACES_CAP: usize = 4096;
 
 /// Cheap-to-clone tracer handle.
 #[derive(Clone)]
@@ -64,7 +115,29 @@ pub struct Tracer {
     clock: Clock,
     capacity: usize,
     enabled: bool,
+    sample_rate: f64,
     next_trace: Arc<AtomicU64>,
+    /// Optional registry-backed counter mirroring `Buffer::dropped`
+    /// (shared across clones so late binding reaches every handle).
+    dropped_counter: Arc<Mutex<Option<Counter>>>,
+}
+
+impl fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Tracer")
+            .field("enabled", &self.enabled)
+            .field("capacity", &self.capacity)
+            .field("sample_rate", &self.sample_rate)
+            .finish()
+    }
+}
+
+/// splitmix64 finalizer — deterministic per-trace sampling decision.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
 }
 
 impl Tracer {
@@ -75,7 +148,9 @@ impl Tracer {
             clock,
             capacity,
             enabled,
+            sample_rate: 1.0,
             next_trace: Arc::new(AtomicU64::new(1)),
+            dropped_counter: Arc::new(Mutex::new(None)),
         }
     }
 
@@ -84,14 +159,62 @@ impl Tracer {
         Tracer::new(Clock::real(), 0, false)
     }
 
+    /// Set the head-sampling rate (fraction of traces recorded, [0, 1]).
+    pub fn with_sample_rate(mut self, rate: f64) -> Self {
+        self.sample_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
     /// Whether spans are being recorded.
     pub fn enabled(&self) -> bool {
         self.enabled
     }
 
+    /// Configured head-sampling rate.
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
     /// Allocate a fresh trace id.
     pub fn new_trace(&self) -> u64 {
         self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Head-based sampling decision for a trace id: deterministic, so
+    /// every hop of a request agrees without coordination.
+    pub fn sample(&self, trace_id: u64) -> bool {
+        if !self.enabled || trace_id == 0 || self.sample_rate <= 0.0 {
+            return false;
+        }
+        if self.sample_rate >= 1.0 {
+            return true;
+        }
+        let unit = (mix64(trace_id) >> 11) as f64 / (1u64 << 53) as f64;
+        unit < self.sample_rate
+    }
+
+    /// Allocate a trace id together with its head-sampling decision —
+    /// what a client stamps into the wire header.
+    pub fn start_trace(&self) -> (u64, bool) {
+        let id = self.new_trace();
+        (id, self.sample(id))
+    }
+
+    /// Mirror span drops into a registry counter
+    /// ([`SPANS_DROPPED_COUNTER`]). Binds retroactively: drops that
+    /// happened before the call are added to the counter.
+    pub fn bind_registry(&self, registry: &Registry) {
+        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[]));
+        let backlog = self.buffer.lock().unwrap().dropped;
+        if backlog > c.get() {
+            c.add(backlog - c.get());
+        }
+        *self.dropped_counter.lock().unwrap() = Some(c);
+    }
+
+    /// Spans evicted from the buffer since construction.
+    pub fn dropped(&self) -> u64 {
+        self.buffer.lock().unwrap().dropped
     }
 
     /// Start a span; it records itself when the guard drops.
@@ -110,32 +233,51 @@ impl Tracer {
     /// Record a pre-built span (for spans whose timing came from
     /// elsewhere, e.g. server-reported queue/compute micros).
     pub fn record(&self, span: Span) {
-        if !self.enabled {
+        if !self.enabled || span.trace_id == 0 {
             return;
         }
         let mut buf = self.buffer.lock().unwrap();
-        buf.spans.push_back(span);
-        while buf.spans.len() > self.capacity {
-            buf.spans.pop_front();
+        buf.traces.entry(span.trace_id).or_default().push(span.clone());
+        buf.ring.push_back(span.trace_id);
+        while buf.ring.len() > self.capacity {
+            let victim = buf.ring.pop_front().expect("ring non-empty");
+            if let Some(spans) = buf.traces.get_mut(&victim) {
+                if !spans.is_empty() {
+                    spans.remove(0);
+                }
+                if spans.is_empty() {
+                    buf.traces.remove(&victim);
+                }
+            }
+            buf.dropped += 1;
+            if buf.dropped_traces.len() >= DROPPED_TRACES_CAP {
+                buf.dropped_traces.clear();
+                buf.dropped_overflow = true;
+            }
+            if !buf.dropped_overflow {
+                buf.dropped_traces.insert(victim);
+            }
+            if let Some(c) = self.dropped_counter.lock().unwrap().as_ref() {
+                c.inc();
+            }
         }
     }
 
-    /// All spans of one trace, ordered by start time.
+    /// All spans of one trace, ordered by start time. The view is marked
+    /// partial when the buffer evicted spans belonging to this trace
+    /// (or overflowed its evicted-trace bookkeeping), so readers never
+    /// mistake a truncated breakdown for a complete one.
     pub fn trace(&self, trace_id: u64) -> TraceView {
         let buf = self.buffer.lock().unwrap();
-        let mut spans: Vec<Span> = buf
-            .spans
-            .iter()
-            .filter(|s| s.trace_id == trace_id)
-            .cloned()
-            .collect();
+        let mut spans: Vec<Span> = buf.traces.get(&trace_id).cloned().unwrap_or_default();
         spans.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
-        TraceView { spans }
+        let partial = buf.dropped_overflow || buf.dropped_traces.contains(&trace_id);
+        TraceView { spans, partial }
     }
 
     /// Total spans currently retained.
     pub fn len(&self) -> usize {
-        self.buffer.lock().unwrap().spans.len()
+        self.buffer.lock().unwrap().ring.len()
     }
 
     /// True if no spans retained.
@@ -148,7 +290,7 @@ impl Tracer {
     pub fn breakdown(&self) -> Vec<(String, f64, usize)> {
         let buf = self.buffer.lock().unwrap();
         let mut agg: HashMap<String, (f64, usize)> = HashMap::new();
-        for s in &buf.spans {
+        for s in buf.traces.values().flatten() {
             let e = agg.entry(s.name.clone()).or_insert((0.0, 0));
             e.0 += s.duration();
             e.1 += 1;
@@ -165,9 +307,17 @@ impl Tracer {
 /// The spans of one trace.
 pub struct TraceView {
     pub spans: Vec<Span>,
+    /// True when the trace buffer evicted spans of this trace: the view
+    /// is a lower bound, not the full request.
+    pub partial: bool,
 }
 
 impl TraceView {
+    /// Whether spans of this trace were evicted before being read.
+    pub fn is_partial(&self) -> bool {
+        self.partial
+    }
+
     /// Sum of span durations by name.
     pub fn duration_of(&self, name: &str) -> f64 {
         self.spans
@@ -188,6 +338,38 @@ impl TraceView {
         }
     }
 
+    /// Duration of the root ([`ROOT_SPAN`]) span, if present.
+    pub fn root_duration(&self) -> Option<f64> {
+        self.spans
+            .iter()
+            .filter(|s| s.name == ROOT_SPAN)
+            .map(|s| s.duration())
+            .fold(None, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
+    }
+
+    /// Critical-path analysis: per-stage durations in [`STAGES`] order,
+    /// with `other` set to the residual of the root span not covered by
+    /// any named stage. Returns `None` when the trace has no root span
+    /// or is partial (a truncated breakdown would be misleading).
+    pub fn stage_breakdown(&self) -> Option<Vec<(&'static str, f64)>> {
+        if self.partial {
+            return None;
+        }
+        let root = self.root_duration()?;
+        let mut rows: Vec<(&'static str, f64)> = Vec::with_capacity(STAGES.len());
+        let mut covered = 0.0;
+        for &stage in STAGES {
+            if stage == "other" {
+                continue;
+            }
+            let d = self.duration_of(stage);
+            covered += d;
+            rows.push((stage, d));
+        }
+        rows.push(("other", (root - covered).max(0.0)));
+        Some(rows)
+    }
+
     /// Render a flame-ish text view.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -203,7 +385,56 @@ impl TraceView {
                 s.name
             ));
         }
+        if self.partial {
+            out.push_str("(partial: spans were evicted from the buffer)\n");
+        }
         out
+    }
+}
+
+/// Folds finished traces into `request_stage_seconds{stage=...}`
+/// histograms plus a `request_total_seconds` histogram of root-span
+/// durations — the per-source latency breakdown of §2.3 as scrapeable
+/// series rather than a per-trace table.
+#[derive(Clone)]
+pub struct StageRecorder {
+    stages: Vec<(&'static str, HistogramHandle)>,
+    total: HistogramHandle,
+    partial: Counter,
+}
+
+impl StageRecorder {
+    /// Register the stage histograms (one per [`STAGES`] label).
+    pub fn new(registry: &Registry) -> Self {
+        let stages = STAGES
+            .iter()
+            .map(|&s| (s, registry.histogram(STAGE_HISTOGRAM, &labels(&[("stage", s)]))))
+            .collect();
+        StageRecorder {
+            stages,
+            total: registry.histogram("request_total_seconds", &labels(&[])),
+            partial: registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[])),
+        }
+    }
+
+    /// Observe one finished trace. Partial traces are counted (see
+    /// [`PARTIAL_TRACES_COUNTER`]) but not folded into the breakdown.
+    pub fn observe(&self, view: &TraceView) {
+        if view.partial {
+            self.partial.inc();
+            return;
+        }
+        let Some(rows) = view.stage_breakdown() else {
+            return;
+        };
+        for (stage, d) in rows {
+            if let Some((_, h)) = self.stages.iter().find(|(s, _)| *s == stage) {
+                h.observe(d);
+            }
+        }
+        if let Some(root) = view.root_duration() {
+            self.total.observe(root);
+        }
     }
 }
 
@@ -233,6 +464,7 @@ mod tests {
         assert!(tracer.span(tid, "x").is_none());
         tracer.record(Span { trace_id: tid, name: "y".into(), start: 0.0, end: 1.0 });
         assert!(tracer.is_empty());
+        assert!(!tracer.sample(tid));
     }
 
     #[test]
@@ -242,6 +474,7 @@ mod tests {
             tracer.record(Span { trace_id: 1, name: format!("s{i}"), start: 0.0, end: 1.0 });
         }
         assert_eq!(tracer.len(), 5);
+        assert_eq!(tracer.dropped(), 15);
     }
 
     #[test]
@@ -260,8 +493,8 @@ mod tests {
     fn breakdown_aggregates_by_name() {
         let tracer = Tracer::new(Clock::simulated(), 100, true);
         for i in 0..4 {
-            tracer.record(Span { trace_id: i, name: "queue".into(), start: 0.0, end: 1.0 });
-            tracer.record(Span { trace_id: i, name: "compute".into(), start: 1.0, end: 4.0 });
+            tracer.record(Span { trace_id: i + 1, name: "queue".into(), start: 0.0, end: 1.0 });
+            tracer.record(Span { trace_id: i + 1, name: "compute".into(), start: 1.0, end: 4.0 });
         }
         let rows = tracer.breakdown();
         assert_eq!(rows[0].0, "compute");
@@ -273,5 +506,84 @@ mod tests {
     fn zero_trace_id_not_recorded() {
         let tracer = Tracer::new(Clock::simulated(), 100, true);
         assert!(tracer.span(0, "x").is_none());
+        tracer.record(Span { trace_id: 0, name: "x".into(), start: 0.0, end: 1.0 });
+        assert!(tracer.is_empty());
+    }
+
+    #[test]
+    fn dropped_spans_counted_and_exported() {
+        let registry = Registry::new();
+        let tracer = Tracer::new(Clock::simulated(), 2, true);
+        tracer.record(Span { trace_id: 1, name: "a".into(), start: 0.0, end: 1.0 });
+        tracer.record(Span { trace_id: 2, name: "b".into(), start: 0.0, end: 1.0 });
+        tracer.bind_registry(&registry);
+        tracer.record(Span { trace_id: 3, name: "c".into(), start: 0.0, end: 1.0 });
+        assert_eq!(tracer.dropped(), 1);
+        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[]));
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn evicted_trace_flagged_partial() {
+        let tracer = Tracer::new(Clock::simulated(), 2, true);
+        tracer.record(Span { trace_id: 7, name: "a".into(), start: 0.0, end: 1.0 });
+        tracer.record(Span { trace_id: 7, name: "b".into(), start: 1.0, end: 2.0 });
+        tracer.record(Span { trace_id: 7, name: "c".into(), start: 2.0, end: 3.0 });
+        let v = tracer.trace(7);
+        assert!(v.is_partial());
+        assert_eq!(v.spans.len(), 2);
+        // An untouched trace stays complete.
+        tracer.record(Span { trace_id: 8, name: "d".into(), start: 0.0, end: 1.0 });
+        // 8's record evicted another span of 7, not of 8.
+        assert!(!tracer.trace(8).is_partial());
+    }
+
+    #[test]
+    fn sampling_deterministic_and_bounded() {
+        let tracer = Tracer::new(Clock::simulated(), 10, true).with_sample_rate(0.5);
+        let hits: Vec<bool> = (1..=1000u64).map(|id| tracer.sample(id)).collect();
+        let again: Vec<bool> = (1..=1000u64).map(|id| tracer.sample(id)).collect();
+        assert_eq!(hits, again, "sampling must be deterministic per id");
+        let n = hits.iter().filter(|&&b| b).count();
+        assert!(n > 350 && n < 650, "rate 0.5 sampled {n}/1000");
+        let all = Tracer::new(Clock::simulated(), 10, true).with_sample_rate(1.0);
+        assert!((1..=100u64).all(|id| all.sample(id)));
+        let none = Tracer::new(Clock::simulated(), 10, true).with_sample_rate(0.0);
+        assert!((1..=100u64).all(|id| !none.sample(id)));
+    }
+
+    #[test]
+    fn stage_breakdown_covers_root() {
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        tracer.record(Span { trace_id: 1, name: ROOT_SPAN.into(), start: 0.0, end: 10.0 });
+        tracer.record(Span { trace_id: 1, name: "admit".into(), start: 0.0, end: 1.0 });
+        tracer.record(Span { trace_id: 1, name: "queue".into(), start: 1.0, end: 5.0 });
+        tracer.record(Span { trace_id: 1, name: "compute".into(), start: 5.0, end: 9.0 });
+        let rows = tracer.trace(1).stage_breakdown().expect("complete trace");
+        let get = |n: &str| rows.iter().find(|(s, _)| *s == n).unwrap().1;
+        assert!((get("queue") - 4.0).abs() < 1e-9);
+        assert!((get("other") - 1.0).abs() < 1e-9);
+        let sum: f64 = rows.iter().map(|(_, d)| d).sum();
+        assert!((sum - 10.0).abs() < 1e-9, "stages must reconstruct the root");
+    }
+
+    #[test]
+    fn stage_recorder_observes_histograms() {
+        let registry = Registry::new();
+        let rec = StageRecorder::new(&registry);
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        tracer.record(Span { trace_id: 1, name: ROOT_SPAN.into(), start: 0.0, end: 4.0 });
+        tracer.record(Span { trace_id: 1, name: "compute".into(), start: 1.0, end: 4.0 });
+        rec.observe(&tracer.trace(1));
+        let h = registry.histogram(STAGE_HISTOGRAM, &labels(&[("stage", "compute")]));
+        assert_eq!(h.snapshot().count(), 1);
+        assert!((h.snapshot().sum() - 3.0).abs() < 1e-9);
+        // A partial trace is counted, not observed.
+        let small = Tracer::new(Clock::simulated(), 1, true);
+        small.record(Span { trace_id: 2, name: ROOT_SPAN.into(), start: 0.0, end: 1.0 });
+        small.record(Span { trace_id: 2, name: "compute".into(), start: 0.0, end: 1.0 });
+        rec.observe(&small.trace(2));
+        assert_eq!(registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[])).get(), 1);
+        assert_eq!(h.snapshot().count(), 1);
     }
 }

@@ -1,0 +1,450 @@
+//! SLO burn-rate alerting over the metric store — the Grafana-alerting
+//! analogue of §2.3, shaped after the multi-window burn-rate rules the
+//! CMS-scale deployments page on (fast window catches an active incident,
+//! slow window suppresses blips).
+//!
+//! Per-model targets come from the `observability.slos` config list. For
+//! each model the engine derives two burn rates from the store:
+//!
+//! * **latency**: fraction of OK requests slower than the `latency_p99`
+//!   target, divided by the implied 1% budget ([`LATENCY_BUDGET`]);
+//! * **error rate**: fraction of non-OK responses divided by the
+//!   configured `error_budget`.
+//!
+//! An alert fires when *both* the fast and slow window burn exceed
+//! `observability.slo_burn_threshold`, and resolves when the fast window
+//! drops back under it. Transitions are exported as
+//! `slo_alert_active{alert=...,model=...}` gauges and appended to a
+//! structured alert log ([`SloEngine::events`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::schema::ObservabilityConfig;
+use crate::metrics::registry::{labels, Gauge, Registry};
+use crate::metrics::store::MetricStore;
+use crate::util::clock::Clock;
+
+/// Every alert name the engine can fire (`alert=` label values).
+pub const SLO_ALERTS: &[&str] = &["latency_burn_rate", "error_budget_burn_rate"];
+
+/// Gauge series exporting alert state (1 = firing, 0 = resolved).
+pub const ALERT_GAUGE: &str = "slo_alert_active";
+
+/// Error budget implied by a p99 latency objective: 1% of requests may
+/// exceed the target.
+pub const LATENCY_BUDGET: f64 = 0.01;
+
+/// Per-model histogram of OK request latency, observed by the gateway
+/// and read back by the engine to count target breaches.
+pub const MODEL_LATENCY_HIST: &str = "gateway_model_latency_seconds";
+
+/// Per-model counter of all responses, observed by the gateway.
+pub const MODEL_REQUESTS_COUNTER: &str = "gateway_model_requests_total";
+
+/// Per-model counter of non-OK responses, observed by the gateway.
+pub const MODEL_ERRORS_COUNTER: &str = "gateway_model_errors_total";
+
+/// Alert transition direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertKind {
+    Fired,
+    Resolved,
+}
+
+/// One structured alert-log entry.
+#[derive(Clone, Debug)]
+pub struct AlertEvent {
+    /// Clock-seconds of the transition.
+    pub at: f64,
+    pub model: String,
+    /// One of [`SLO_ALERTS`].
+    pub alert: &'static str,
+    pub kind: AlertKind,
+    /// Burn rates observed at the transition (multiples of budget).
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+}
+
+impl AlertEvent {
+    /// One-line structured rendering for the alert log.
+    pub fn render(&self) -> String {
+        format!(
+            "t={:.1}s {} alert={} model={} burn_fast={:.2}x burn_slow={:.2}x",
+            self.at,
+            match self.kind {
+                AlertKind::Fired => "FIRED",
+                AlertKind::Resolved => "RESOLVED",
+            },
+            self.alert,
+            self.model,
+            self.burn_fast,
+            self.burn_slow
+        )
+    }
+}
+
+struct AlertSlot {
+    gauge: Gauge,
+    active: bool,
+}
+
+/// Burn-rate evaluator. Create once, call [`eval_once`](Self::eval_once)
+/// on a cadence (or let [`SloTask`] drive it on the clock).
+pub struct SloEngine {
+    cfg: ObservabilityConfig,
+    registry: Registry,
+    store: MetricStore,
+    clock: Clock,
+    slots: Mutex<BTreeMap<(String, &'static str), AlertSlot>>,
+    events: Mutex<Vec<AlertEvent>>,
+}
+
+impl SloEngine {
+    /// Engine over a registry (breach counting) and store (windowing).
+    pub fn new(
+        cfg: ObservabilityConfig,
+        registry: Registry,
+        store: MetricStore,
+        clock: Clock,
+    ) -> Self {
+        let slots = cfg
+            .slos
+            .iter()
+            .flat_map(|s| {
+                SLO_ALERTS.iter().map(|&alert| {
+                    let gauge = registry.gauge(
+                        ALERT_GAUGE,
+                        &labels(&[("alert", alert), ("model", &s.model)]),
+                    );
+                    gauge.set(0.0);
+                    ((s.model.clone(), alert), AlertSlot { gauge, active: false })
+                })
+            })
+            .collect();
+        SloEngine {
+            cfg,
+            registry,
+            store,
+            clock,
+            slots: Mutex::new(slots),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Evaluate every configured SLO once at the current clock time.
+    pub fn eval_once(&self) {
+        let now = self.clock.now_secs();
+        for slo in &self.cfg.slos {
+            // Snapshot the per-model latency histogram and publish
+            // good/total cumulative series so window deltas work even
+            // without the background scraper.
+            let h = self
+                .registry
+                .histogram(MODEL_LATENCY_HIST, &labels(&[("model", &slo.model)]))
+                .snapshot();
+            let good = count_at_or_below(&h, slo.latency_p99.as_secs_f64());
+            let ok_total = h.count() as f64;
+            let requests = self
+                .registry
+                .counter(MODEL_REQUESTS_COUNTER, &labels(&[("model", &slo.model)]))
+                .get() as f64;
+            let errors = self
+                .registry
+                .counter(MODEL_ERRORS_COUNTER, &labels(&[("model", &slo.model)]))
+                .get() as f64;
+            let m = &slo.model;
+            self.store.push(&format!("slo_good_total{{model=\"{m}\"}}"), now, good);
+            self.store.push(&format!("slo_ok_total{{model=\"{m}\"}}"), now, ok_total);
+            self.store.push(&format!("slo_requests_total{{model=\"{m}\"}}"), now, requests);
+            self.store.push(&format!("slo_errors_total{{model=\"{m}\"}}"), now, errors);
+
+            let latency_burn = |w: Duration| -> Option<f64> {
+                let d_ok = self.delta(&format!("slo_ok_total{{model=\"{m}\"}}"), now, w)?;
+                if d_ok <= 0.0 {
+                    return Some(0.0);
+                }
+                let d_good = self
+                    .delta(&format!("slo_good_total{{model=\"{m}\"}}"), now, w)
+                    .unwrap_or(0.0);
+                Some(((d_ok - d_good).max(0.0) / d_ok) / LATENCY_BUDGET)
+            };
+            let error_burn = |w: Duration| -> Option<f64> {
+                let d_req = self.delta(&format!("slo_requests_total{{model=\"{m}\"}}"), now, w)?;
+                if d_req <= 0.0 {
+                    return Some(0.0);
+                }
+                let d_err = self
+                    .delta(&format!("slo_errors_total{{model=\"{m}\"}}"), now, w)
+                    .unwrap_or(0.0);
+                Some((d_err.max(0.0) / d_req) / slo.error_budget.max(1e-9))
+            };
+
+            self.update_alert(
+                m,
+                "latency_burn_rate",
+                latency_burn(self.cfg.slo_fast_window),
+                latency_burn(self.cfg.slo_slow_window),
+                now,
+            );
+            self.update_alert(
+                m,
+                "error_budget_burn_rate",
+                error_burn(self.cfg.slo_fast_window),
+                error_burn(self.cfg.slo_slow_window),
+                now,
+            );
+        }
+    }
+
+    /// Last-minus-first delta of a cumulative series over the trailing
+    /// window; `None` until two points exist (no alerting on one sample).
+    fn delta(&self, series: &str, now: f64, window: Duration) -> Option<f64> {
+        let pts = self.store.range(series, now - window.as_secs_f64(), now);
+        if pts.len() < 2 {
+            return None;
+        }
+        Some(pts[pts.len() - 1].1 - pts[0].1)
+    }
+
+    fn update_alert(
+        &self,
+        model: &str,
+        alert: &'static str,
+        fast: Option<f64>,
+        slow: Option<f64>,
+        now: f64,
+    ) {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(slot) = slots.get_mut(&(model.to_string(), alert)) else {
+            return;
+        };
+        let (Some(fast), Some(slow)) = (fast, slow) else {
+            return;
+        };
+        let thr = self.cfg.slo_burn_threshold;
+        if !slot.active && fast >= thr && slow >= thr {
+            slot.active = true;
+            slot.gauge.set(1.0);
+            self.events.lock().unwrap().push(AlertEvent {
+                at: now,
+                model: model.to_string(),
+                alert,
+                kind: AlertKind::Fired,
+                burn_fast: fast,
+                burn_slow: slow,
+            });
+        } else if slot.active && fast < thr {
+            slot.active = false;
+            slot.gauge.set(0.0);
+            self.events.lock().unwrap().push(AlertEvent {
+                at: now,
+                model: model.to_string(),
+                alert,
+                kind: AlertKind::Resolved,
+                burn_fast: fast,
+                burn_slow: slow,
+            });
+        }
+    }
+
+    /// Whether an alert is currently firing.
+    pub fn active(&self, model: &str, alert: &str) -> bool {
+        let slots = self.slots.lock().unwrap();
+        SLO_ALERTS
+            .iter()
+            .find(|&&a| a == alert)
+            .and_then(|&a| slots.get(&(model.to_string(), a)))
+            .is_some_and(|s| s.active)
+    }
+
+    /// Structured alert log (transitions in evaluation order).
+    pub fn events(&self) -> Vec<AlertEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Rendered alert log, one line per transition.
+    pub fn render_log(&self) -> String {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| e.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Cumulative observations at or below `target`, interpolating linearly
+/// within the bucket that straddles it (same estimator family as
+/// `histogram_quantile`).
+fn count_at_or_below(h: &crate::util::stats::Histogram, target: f64) -> f64 {
+    let bounds = h.bounds();
+    let counts = h.counts();
+    let mut total = 0.0;
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = if i == 0 { 0.0 } else { bounds[i - 1] };
+        if i >= bounds.len() {
+            // +Inf bucket: nothing here is provably under a finite target.
+            break;
+        }
+        let hi = bounds[i];
+        if hi <= target {
+            total += c as f64;
+        } else if lo < target {
+            total += c as f64 * ((target - lo) / (hi - lo)).clamp(0.0, 1.0);
+        } else {
+            break;
+        }
+    }
+    total
+}
+
+/// Background evaluation loop on the shared clock (Scraper-style:
+/// dropping the task stops and joins the thread).
+pub struct SloTask {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl SloTask {
+    /// Evaluate `engine` every `interval` of clock time.
+    pub fn start(engine: Arc<SloEngine>, clock: Clock, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("slo-engine".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    engine.eval_once();
+                    clock.sleep(interval);
+                }
+            })
+            .expect("spawning slo engine");
+        SloTask { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for SloTask {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::SloConfig;
+
+    fn test_cfg() -> ObservabilityConfig {
+        ObservabilityConfig {
+            trace_sample_rate: 1.0,
+            trace_capacity: 1024,
+            slo_fast_window: Duration::from_secs(60),
+            slo_slow_window: Duration::from_secs(300),
+            slo_eval_interval: Duration::from_secs(5),
+            slo_burn_threshold: 10.0,
+            slos: vec![SloConfig {
+                model: "pn".into(),
+                latency_p99: Duration::from_millis(100),
+                error_budget: 0.01,
+            }],
+        }
+    }
+
+    fn engine() -> (SloEngine, Registry, Clock) {
+        let registry = Registry::new();
+        let store = MetricStore::new(Duration::from_secs(3600));
+        let clock = Clock::simulated();
+        let e = SloEngine::new(test_cfg(), registry.clone(), store, clock.clone());
+        (e, registry, clock)
+    }
+
+    #[test]
+    fn count_at_or_below_interpolates() {
+        let mut h = crate::util::stats::Histogram::new(vec![0.1, 0.2, 0.4]);
+        for v in [0.05, 0.15, 0.15, 0.3, 9.0] {
+            h.observe(v);
+        }
+        assert!((count_at_or_below(&h, 0.2) - 3.0).abs() < 1e-9);
+        // Halfway through the (0.2, 0.4] bucket: 3 + 0.5.
+        assert!((count_at_or_below(&h, 0.3) - 3.5).abs() < 1e-9);
+        // +Inf bucket observations never count as good.
+        assert!(count_at_or_below(&h, 100.0) <= 4.0);
+    }
+
+    #[test]
+    fn alert_fires_under_burn_and_resolves() {
+        let (e, registry, clock) = engine();
+        let h = registry.histogram(MODEL_LATENCY_HIST, &labels(&[("model", "pn")]));
+        let reqs = registry.counter(MODEL_REQUESTS_COUNTER, &labels(&[("model", "pn")]));
+        e.eval_once(); // baseline point
+        // Overload: every request far over the 100ms target.
+        for _ in 0..100 {
+            h.observe(1.0);
+            reqs.inc();
+        }
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert!(e.active("pn", "latency_burn_rate"), "burn 100x must fire");
+        assert!(!e.active("pn", "error_budget_burn_rate"));
+        // Recovery: fast requests push windowed breach fraction down.
+        for step in 0..8 {
+            clock.advance(Duration::from_secs(10));
+            for _ in 0..400 {
+                h.observe(0.001);
+                reqs.inc();
+            }
+            e.eval_once();
+            let _ = step;
+        }
+        assert!(!e.active("pn", "latency_burn_rate"), "must resolve in recovery");
+        let kinds: Vec<AlertKind> = e
+            .events()
+            .iter()
+            .filter(|ev| ev.alert == "latency_burn_rate")
+            .map(|ev| ev.kind)
+            .collect();
+        assert_eq!(kinds, vec![AlertKind::Fired, AlertKind::Resolved]);
+        assert!(e.render_log().contains("FIRED"));
+    }
+
+    #[test]
+    fn error_budget_alert() {
+        let (e, registry, clock) = engine();
+        let reqs = registry.counter(MODEL_REQUESTS_COUNTER, &labels(&[("model", "pn")]));
+        let errs = registry.counter(MODEL_ERRORS_COUNTER, &labels(&[("model", "pn")]));
+        e.eval_once();
+        reqs.add(100);
+        errs.add(50); // 50% errors on a 1% budget: burn 50x.
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert!(e.active("pn", "error_budget_burn_rate"));
+        let g = registry.gauge(
+            ALERT_GAUGE,
+            &labels(&[("alert", "error_budget_burn_rate"), ("model", "pn")]),
+        );
+        assert!((g.get() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_false_positive_at_steady_state() {
+        let (e, registry, clock) = engine();
+        let h = registry.histogram(MODEL_LATENCY_HIST, &labels(&[("model", "pn")]));
+        let reqs = registry.counter(MODEL_REQUESTS_COUNTER, &labels(&[("model", "pn")]));
+        for _ in 0..20 {
+            for _ in 0..50 {
+                h.observe(0.002);
+                reqs.inc();
+            }
+            clock.advance(Duration::from_secs(5));
+            e.eval_once();
+        }
+        assert!(e.events().is_empty(), "steady state must not page: {:?}", e.events());
+    }
+}

@@ -20,6 +20,10 @@ use crate::util::stats::Summary;
 
 use super::schedule::Schedule;
 
+/// Process-wide trace-id allocator for traced workload streams (0 is
+/// the reserved "untraced" id, so allocation starts at 1).
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
 /// What each client sends.
 #[derive(Clone, Debug)]
 pub struct WorkloadSpec {
@@ -39,6 +43,11 @@ pub struct WorkloadSpec {
     /// Pause between a response and the next request, in clock time
     /// (zero = fully closed loop).
     pub think_time: Duration,
+    /// Attach a fresh trace id (sampled) to every request, so the
+    /// deployment's tracer records a per-stage breakdown for this
+    /// stream. Off by default: untraced load measures the no-tracing
+    /// baseline.
+    pub trace: bool,
 }
 
 impl WorkloadSpec {
@@ -51,12 +60,19 @@ impl WorkloadSpec {
             token: String::new(),
             priority: Priority::Standard,
             think_time: Duration::ZERO,
+            trace: false,
         }
     }
 
     /// Same spec, tagged with a priority class.
     pub fn with_priority(mut self, priority: Priority) -> Self {
         self.priority = priority;
+        self
+    }
+
+    /// Same spec, with per-request trace propagation enabled.
+    pub fn with_tracing(mut self) -> Self {
+        self.trace = true;
         self
     }
 
@@ -516,6 +532,9 @@ fn client_loop(
     let input = spec.request_tensor();
 
     while !stop.load(Ordering::SeqCst) {
+        if spec.trace {
+            client.trace_id = NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed);
+        }
         let t0 = clock.now_secs();
         match client.infer(&spec.model, input.clone()) {
             Ok(resp) => {

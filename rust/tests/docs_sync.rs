@@ -111,3 +111,33 @@ fn operations_doc_mentions_make_targets() {
         assert!(doc.contains(target), "docs/OPERATIONS.md must mention `{target}`");
     }
 }
+
+#[test]
+fn operations_doc_documents_every_trace_stage() {
+    // The stage labels on `request_stage_seconds{stage=...}` are the
+    // vocabulary of the latency-breakdown runbook: a stage added to the
+    // tracer without a runbook entry must fail `make docs-check`.
+    let doc = read_doc("OPERATIONS.md");
+    for stage in supersonic::telemetry::STAGES {
+        assert!(
+            doc.contains(&format!("`{stage}`")),
+            "docs/OPERATIONS.md does not document trace stage '{stage}' \
+             (a request_stage_seconds label); explain it in the tracing \
+             runbook section"
+        );
+    }
+}
+
+#[test]
+fn operations_doc_documents_every_slo_alert() {
+    // Every alert name the burn-rate engine can fire must have a runbook
+    // entry — an undocumented page is an unactionable page.
+    let doc = read_doc("OPERATIONS.md");
+    for alert in supersonic::telemetry::slo::SLO_ALERTS {
+        assert!(
+            doc.contains(&format!("`{alert}`")),
+            "docs/OPERATIONS.md does not document SLO alert '{alert}'; \
+             the burn-rate runbook must cover every alert the engine fires"
+        );
+    }
+}

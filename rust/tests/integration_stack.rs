@@ -57,6 +57,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
         },
         model_placement: Default::default(),
         engines: Default::default(),
+        observability: Default::default(),
         time_scale: 1.0,
     }
 }

@@ -1,0 +1,110 @@
+//! Golden snapshot of the `/metrics` exposition for the observability
+//! series: the stage-breakdown histograms, the trace health counters and
+//! the SLO alert gauges. Deterministic (exact binary-fraction durations,
+//! simulated clock), so the rendered text is byte-stable: a change to
+//! series names, labels, or value formatting must update this golden on
+//! purpose.
+
+use std::time::Duration;
+
+use supersonic::config::{ObservabilityConfig, SloConfig};
+use supersonic::metrics::exposition::render;
+use supersonic::metrics::registry::Registry;
+use supersonic::metrics::store::MetricStore;
+use supersonic::telemetry::slo::SloEngine;
+use supersonic::telemetry::{Span, StageRecorder, Tracer, ROOT_SPAN};
+use supersonic::util::clock::Clock;
+
+fn span(trace_id: u64, name: &str, start: f64, end: f64) -> Span {
+    Span { trace_id, name: name.into(), start, end }
+}
+
+/// Everything except bucket expansion (19 lines per stage, elided to keep
+/// the golden readable; bucket invariants are property-tested in
+/// `property_invariants.rs`).
+const GOLDEN: &str = "\
+# TYPE request_stage_seconds histogram
+request_stage_seconds_sum{stage=\"admit\"} 0.125
+request_stage_seconds_count{stage=\"admit\"} 2
+request_stage_seconds_sum{stage=\"batch\"} 0.0625
+request_stage_seconds_count{stage=\"batch\"} 2
+request_stage_seconds_sum{stage=\"compute\"} 0.375
+request_stage_seconds_count{stage=\"compute\"} 2
+request_stage_seconds_sum{stage=\"other\"} 0.3125
+request_stage_seconds_count{stage=\"other\"} 2
+request_stage_seconds_sum{stage=\"queue\"} 0.25
+request_stage_seconds_count{stage=\"queue\"} 2
+request_stage_seconds_sum{stage=\"ratelimit\"} 0.125
+request_stage_seconds_count{stage=\"ratelimit\"} 2
+request_stage_seconds_sum{stage=\"retry\"} 0.125
+request_stage_seconds_count{stage=\"retry\"} 2
+request_stage_seconds_sum{stage=\"route\"} 0.125
+request_stage_seconds_count{stage=\"route\"} 2
+# TYPE request_total_seconds histogram
+request_total_seconds_sum 1.5
+request_total_seconds_count 2
+# TYPE slo_alert_active gauge
+slo_alert_active{alert=\"error_budget_burn_rate\",model=\"particlenet\"} 0
+slo_alert_active{alert=\"latency_burn_rate\",model=\"particlenet\"} 0
+# TYPE trace_partial_total counter
+trace_partial_total 1
+# TYPE trace_spans_dropped_total counter
+trace_spans_dropped_total 2";
+
+#[test]
+fn observability_series_exposition_matches_golden() {
+    let registry = Registry::new();
+    let recorder = StageRecorder::new(&registry);
+
+    // Two complete traces with exact-binary-fraction stage layouts.
+    let tracer = Tracer::new(Clock::simulated(), 1024, true);
+    tracer.record(span(1, ROOT_SPAN, 0.0, 1.0));
+    tracer.record(span(1, "admit", 0.0, 0.125));
+    tracer.record(span(1, "ratelimit", 0.125, 0.25));
+    tracer.record(span(1, "route", 0.25, 0.375));
+    tracer.record(span(1, "retry", 0.375, 0.5));
+    tracer.record(span(1, "queue", 0.5, 0.75));
+    tracer.record(span(1, "batch", 0.75, 0.8125));
+    tracer.record(span(1, "compute", 0.8125, 0.9375)); // other = 0.0625
+    tracer.record(span(2, ROOT_SPAN, 0.0, 0.5));
+    tracer.record(span(2, "compute", 0.25, 0.5)); // other = 0.25
+    recorder.observe(&tracer.trace(1));
+    recorder.observe(&tracer.trace(2));
+
+    // A tracer that overflows: two spans dropped, the surviving trace is
+    // partial and is counted instead of folded into the breakdown.
+    let small = Tracer::new(Clock::simulated(), 1, true);
+    small.bind_registry(&registry);
+    small.record(span(9, ROOT_SPAN, 0.0, 1.0));
+    small.record(span(9, "queue", 0.0, 0.5));
+    small.record(span(9, "compute", 0.5, 1.0));
+    recorder.observe(&small.trace(9));
+
+    // The SLO engine pre-registers its alert gauges at 0 (resolved).
+    let cfg = ObservabilityConfig {
+        slos: vec![SloConfig {
+            model: "particlenet".into(),
+            latency_p99: Duration::from_millis(100),
+            error_budget: 0.01,
+        }],
+        ..ObservabilityConfig::default()
+    };
+    let _engine = SloEngine::new(
+        cfg,
+        registry.clone(),
+        MetricStore::new(Duration::from_secs(3600)),
+        Clock::simulated(),
+    );
+
+    let text = render(&registry);
+    let filtered: Vec<&str> = text.lines().filter(|l| !l.contains("_bucket")).collect();
+    assert_eq!(
+        filtered.join("\n"),
+        GOLDEN,
+        "observability exposition drifted from the golden snapshot:\n{text}"
+    );
+
+    // Spot-check the elided bucket expansion: cumulative close at +Inf.
+    assert!(text.contains("request_stage_seconds_bucket{stage=\"compute\",le=\"+Inf\"} 2"));
+    assert!(text.contains("request_total_seconds_bucket{le=\"+Inf\"} 2"));
+}

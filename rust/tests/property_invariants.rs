@@ -1259,3 +1259,161 @@ fn prop_tensor_stack_slice_roundtrip() {
         }
     });
 }
+
+#[test]
+fn prop_trace_breakdown_reconstructs_root() {
+    use supersonic::telemetry::{Span, Tracer, ROOT_SPAN, STAGES};
+
+    // Stage spans laid out sequentially inside a root window must come
+    // back well-formed (end >= start, inside the root) and the critical-
+    // path breakdown must reconstruct the root duration exactly, with
+    // `other` absorbing the uncovered gaps.
+    check("trace breakdown reconstructs the root", 200, |g: &mut Gen| {
+        let tracer = Tracer::new(Clock::simulated(), 65536, true);
+        let named: Vec<&str> = STAGES.iter().copied().filter(|&s| s != "other").collect();
+        let trace_id = g.u64(1..=u64::MAX);
+        let root_start = g.f64(0.0, 100.0);
+        let root_end = root_start + g.f64(0.001, 50.0);
+        let mut expected: std::collections::BTreeMap<&str, f64> =
+            named.iter().map(|&s| (s, 0.0)).collect();
+        let mut t = root_start;
+        for _ in 0..g.usize(0..=10) {
+            let rem = root_end - t;
+            if rem <= 1e-9 {
+                break;
+            }
+            let gap = g.f64(0.0, rem / 4.0); // uncovered time -> "other"
+            let dur = g.f64(0.0, rem - gap);
+            let name = *g.choose(&named);
+            tracer.record(Span {
+                trace_id,
+                name: name.into(),
+                start: t + gap,
+                end: t + gap + dur,
+            });
+            *expected.get_mut(name).unwrap() += (t + gap + dur) - (t + gap);
+            t += gap + dur;
+        }
+        tracer.record(Span {
+            trace_id,
+            name: ROOT_SPAN.into(),
+            start: root_start,
+            end: root_end,
+        });
+
+        let view = tracer.trace(trace_id);
+        assert!(!view.is_partial(), "nothing was evicted");
+        for s in &view.spans {
+            assert!(s.end >= s.start, "span '{}' ends before it starts", s.name);
+            assert!(
+                s.start >= root_start - 1e-9 && s.end <= root_end + 1e-9,
+                "span '{}' escapes the root window",
+                s.name
+            );
+        }
+        let rows = view.stage_breakdown().expect("complete trace with a root span");
+        let root_dur = view.root_duration().unwrap();
+        for (stage, d) in &rows {
+            assert!(*d >= 0.0, "negative duration for stage '{stage}'");
+            if *stage != "other" {
+                let want = expected[stage];
+                assert!(
+                    (d - want).abs() <= 1e-9 * (1.0 + want),
+                    "stage '{stage}': breakdown {d} != recorded {want}"
+                );
+            }
+        }
+        let total: f64 = rows.iter().map(|(_, d)| d).sum();
+        assert!(
+            (total - root_dur).abs() <= 1e-6 * (1.0 + root_dur),
+            "stage sum {total} does not reconstruct root {root_dur}"
+        );
+
+        // Same invariants through the RAII guard path on a simulated
+        // clock: nested stage guards can never overlap-exceed the root.
+        let clock = Clock::simulated();
+        let guarded = Tracer::new(clock.clone(), 65536, true);
+        let tid = g.u64(1..=u64::MAX);
+        {
+            let _root = guarded.span(tid, ROOT_SPAN).unwrap();
+            for _ in 0..g.usize(0..=5) {
+                let stage = guarded.span(tid, *g.choose(&named)).unwrap();
+                clock.advance(Duration::from_micros(g.u64(0..=100_000)));
+                drop(stage);
+            }
+        }
+        let view = guarded.trace(tid);
+        assert!(view.spans.iter().all(|s| s.end >= s.start));
+        let rows = view.stage_breakdown().expect("root guard recorded");
+        assert!(rows.iter().all(|(_, d)| *d >= 0.0));
+        let total: f64 = rows.iter().map(|(_, d)| d).sum();
+        let root = view.root_duration().unwrap();
+        assert!(
+            (total - root).abs() <= 1e-6 * (1.0 + root),
+            "guard-path stage sum {total} != root {root}"
+        );
+    });
+}
+
+#[test]
+fn prop_stage_histogram_exposition_monotone_and_consistent() {
+    use supersonic::metrics::exposition::render;
+    use supersonic::metrics::registry::labels;
+    use supersonic::telemetry::{STAGES, STAGE_HISTOGRAM};
+
+    // The Prometheus text rendering of the stage histograms must keep
+    // cumulative bucket counts monotone, close at `+Inf` with the
+    // observation count, and agree with `_sum`/`_count` — for any mix of
+    // observations, including ones past the last finite bucket bound.
+    check("stage exposition monotone and consistent", 100, |g: &mut Gen| {
+        let registry = Registry::new();
+        let mut expected: Vec<(&str, u64, f64)> = Vec::new();
+        for &stage in STAGES {
+            let h = registry.histogram(STAGE_HISTOGRAM, &labels(&[("stage", stage)]));
+            let n = g.usize(0..=25);
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let v = g.f64(0.0, 200.0); // last finite bound is ~65 s
+                h.observe(v);
+                sum += v;
+            }
+            expected.push((stage, n as u64, sum));
+        }
+        let text = render(&registry);
+        for (stage, n, sum) in expected {
+            let bucket_prefix = format!("{STAGE_HISTOGRAM}_bucket{{stage=\"{stage}\",le=");
+            let buckets: Vec<u64> = text
+                .lines()
+                .filter(|l| l.starts_with(&bucket_prefix))
+                .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+                .collect();
+            assert!(!buckets.is_empty(), "no bucket lines for stage '{stage}'");
+            assert!(
+                buckets.windows(2).all(|w| w[0] <= w[1]),
+                "buckets not cumulative for stage '{stage}': {buckets:?}"
+            );
+            assert_eq!(
+                *buckets.last().unwrap(),
+                n,
+                "+Inf bucket disagrees with observation count for '{stage}'"
+            );
+            let value_of = |suffix: &str| -> f64 {
+                let prefix = format!("{STAGE_HISTOGRAM}{suffix}{{stage=\"{stage}\"}} ");
+                text.lines()
+                    .find(|l| l.starts_with(&prefix))
+                    .unwrap_or_else(|| panic!("missing series {prefix}"))
+                    .split_whitespace()
+                    .last()
+                    .unwrap()
+                    .parse()
+                    .unwrap()
+            };
+            assert_eq!(value_of("_count") as u64, n, "_count mismatch for '{stage}'");
+            let rendered_sum = value_of("_sum");
+            assert!(
+                (rendered_sum - sum).abs() <= 1e-9 * (1.0 + sum.abs()),
+                "_sum for '{stage}': rendered {rendered_sum} vs observed {sum}"
+            );
+        }
+    });
+}
