@@ -4,17 +4,28 @@
 #                      (the only step that runs Python; see python/compile/aot.py)
 #   make build       — release build of the Rust coordinator
 #   make test        — tier-1 test suite
-#   make bench       — run every bench binary
+#   make bench       — run every bench binary (full durations)
+#   make bench-smoke — run every bench binary in short deterministic
+#                      smoke mode (SUPERSONIC_SMOKE=1); the CI gate
 #   make bench-priority — the priority-lanes ablation only
 #   make bench-backend  — the multi-backend heterogeneity ablation only
 #   make bench-trace    — the latency-breakdown / SLO-alerting bench only
+#   make bench-rpc      — the streaming-RPC acceptance bench only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
-#                      OPERATIONS.md bench coverage)
+#                      OPERATIONS.md bench coverage, smoke registration)
 
 ARTIFACTS := rust/artifacts
 
-.PHONY: artifacts build test bench bench-priority bench-backend bench-trace docs-check
+# Every registered bench binary. tests/docs_sync.rs asserts this list
+# stays in sync with the [[bench]] entries in rust/Cargo.toml, so a new
+# bench cannot ship without joining `bench` and `bench-smoke`.
+BENCHES := batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
+	gateway_overhead lb_ablation scale_100_servers trigger_ablation \
+	modelmesh_ablation per_model_autoscale warm_load_ablation \
+	priority_ablation backend_ablation latency_breakdown rpc_streaming
+
+.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -26,11 +37,10 @@ test:
 	cd rust && cargo test -q
 
 bench:
-	cd rust && for b in batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
-		gateway_overhead lb_ablation scale_100_servers trigger_ablation \
-		modelmesh_ablation per_model_autoscale warm_load_ablation \
-		priority_ablation backend_ablation latency_breakdown; do \
-		cargo bench --bench $$b; done
+	cd rust && for b in $(BENCHES); do cargo bench --bench $$b; done
+
+bench-smoke:
+	cd rust && for b in $(BENCHES); do SUPERSONIC_SMOKE=1 cargo bench --bench $$b || exit 1; done
 
 bench-priority:
 	cd rust && cargo bench --bench priority_ablation
@@ -40,6 +50,9 @@ bench-backend:
 
 bench-trace:
 	cd rust && cargo bench --bench latency_breakdown
+
+bench-rpc:
+	cd rust && cargo bench --bench rpc_streaming
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -26,12 +26,14 @@
 //! fallback recorded.
 //!
 //! Run: `cargo bench --bench backend_ablation` (or `make bench-backend`)
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench backend_ablation`
+//! (mixed-fleet arm only, compressed, liveness only)
 
 use std::time::Duration;
 
 use supersonic::deployment::Deployment;
 use supersonic::experiments::{backend_config, backend_workload};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::Schedule;
 
 const PHASE: Duration = Duration::from_secs(40);
@@ -72,6 +74,12 @@ fn run_arm(cpu_pods: usize, time_scale: f64) -> anyhow::Result<Row> {
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== backend ablation: homogeneous GPU vs mixed CPU+GPU, equal 4-pod budget ==");
+    if smoke() {
+        let row = run_arm(1, 20.0)?;
+        println!("(smoke) mixed arm: {} ok ({} cold ok)", row.ok, row.cold_ok);
+        assert!(row.ok > 0, "mixed arm served nothing");
+        return Ok(());
+    }
     let time_scale = 10.0;
     println!(
         "{CLIENTS} clients, 70% GPU-capable hot model / 30% CPU-only cold model, \

@@ -13,16 +13,18 @@
 //! requests too long.
 //!
 //! Run: `cargo bench --bench batcher_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench batcher_ablation`
+//! (simulated execution instead of PJRT, one grid cell, liveness only)
 
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
-use supersonic::config::{GatewayConfig, ModelConfig};
+use supersonic::config::{ExecutionMode, GatewayConfig, ModelConfig};
 use supersonic::gateway::Gateway;
 use supersonic::metrics::Registry;
 use supersonic::server::{Instance, ModelRepository};
 use supersonic::telemetry::Tracer;
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, smoke_scaled, Csv, Table};
 use supersonic::util::clock::Clock;
 use supersonic::runtime::PjrtRuntime;
 use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
@@ -31,16 +33,28 @@ fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== §2.1 ablation: dynamic batching sweep (real ParticleNet via PJRT) ==\n");
 
-    let runtime = PjrtRuntime::cpu()?;
-    let repo = Arc::new(ModelRepository::load(
-        &runtime,
-        std::path::Path::new("artifacts"),
-        &["particlenet".into()],
-    )?);
+    // Smoke mode runs without the PJRT native library (absent in CI):
+    // metadata-only repository + simulated execution, one grid cell.
+    let (repo, exec_mode) = if smoke() {
+        let repo = Arc::new(ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &["particlenet".into()],
+        )?);
+        (repo, ExecutionMode::Simulated)
+    } else {
+        let runtime = PjrtRuntime::cpu()?;
+        let repo = Arc::new(ModelRepository::load(
+            &runtime,
+            std::path::Path::new("artifacts"),
+            &["particlenet".into()],
+        )?);
+        (repo, ExecutionMode::Real)
+    };
     let clock = Clock::real();
 
-    let delays_ms = [0u64, 2, 5, 20];
-    let preferred = [1usize, 4, 16];
+    let delays_ms: Vec<u64> = if smoke() { vec![2] } else { vec![0, 2, 5, 20] };
+    let preferred: Vec<usize> = if smoke() { vec![8] } else { vec![1, 4, 16] };
+    let run_secs = smoke_scaled(8, 3) as u64;
 
     let mut table = Table::new(&[
         "queue delay", "preferred batch", "ok", "req/s", "rows/s", "p50 ms", "p99 ms",
@@ -50,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     for &delay_ms in &delays_ms {
         for &pref in &preferred {
             let registry = Registry::new();
-            let inst = Instance::start(
+            let inst = Instance::start_with_mode(
                 "ba-0",
                 Arc::clone(&repo),
                 &[ModelConfig {
@@ -63,6 +77,7 @@ fn main() -> anyhow::Result<()> {
                 registry.clone(),
                 256,
                 5.0,
+                exec_mode,
             );
             inst.mark_ready();
             let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
@@ -78,8 +93,9 @@ fn main() -> anyhow::Result<()> {
             // 8 clients, 1 row each: batching must come from the server.
             let spec = WorkloadSpec::new("particlenet", 1, vec![64, 7]);
             let pool = ClientPool::new(&gateway.addr().to_string(), spec, clock.clone());
-            let report = pool.run(&Schedule::constant(8, Duration::from_secs(8)));
+            let report = pool.run(&Schedule::constant(8, Duration::from_secs(run_secs)));
             let p = &report.phases[0];
+            anyhow::ensure!(p.ok > 0, "cell delay={delay_ms}ms pref={pref} served nothing");
 
             table.row(&[
                 format!("{delay_ms} ms"),

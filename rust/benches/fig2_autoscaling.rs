@@ -7,20 +7,24 @@
 //! under `bench_results/`.
 //!
 //! Run: `cargo bench --bench fig2_autoscaling`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench fig2_autoscaling`
+//! (shorter, faster-dilated phases; liveness checks only — the
+//! scale-up/recovery assertions need the full-length phases)
 
 use std::time::Duration;
 
 use supersonic::experiments::{fig_config, fig_workload, run_deployment};
-use supersonic::util::bench::{ascii_chart, Csv, Table};
+use supersonic::util::bench::{ascii_chart, smoke, smoke_scaled, Csv, Table};
 use supersonic::workload::Schedule;
 
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== Fig. 2: load-based autoscaling timeline ==");
 
-    // 8x dilation, 240-second clock phases: ~95s wall.
-    let time_scale = 8.0;
-    let phase = Duration::from_secs(240);
+    // 8x dilation, 240-second clock phases: ~95s wall. Smoke compresses
+    // to 60-second phases at 24x (~8s wall).
+    let time_scale = if smoke() { 24.0 } else { 8.0 };
+    let phase = Duration::from_secs(smoke_scaled(240, 60) as u64);
     let cfg = fig_config(time_scale, None, phase);
     let schedule = Schedule::step_up_down(1, 10, phase);
     println!(
@@ -100,6 +104,12 @@ fn main() -> anyhow::Result<()> {
             .join("  ")
     );
 
+    let total_ok: u64 = result.report.phases.iter().map(|p| p.ok).sum();
+    assert!(total_ok > 0, "no requests served");
+    if smoke() {
+        println!("(smoke: scale-up/recovery assertions skipped — phases too short)");
+        return Ok(());
+    }
     assert!(result.peak_servers > 1, "autoscaler never scaled up");
     assert!(spike > settled, "latency did not recover after scale-up");
     Ok(())

@@ -8,11 +8,13 @@
 //! that the paper's scatter plot shows.
 //!
 //! Run: `cargo bench --bench fig3_static_vs_dynamic`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench fig3_static_vs_dynamic`
+//! (two arms, compressed phases, liveness checks only)
 
 use std::time::Duration;
 
 use supersonic::experiments::{fig_config, fig_workload, run_deployment};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, smoke_scaled, Csv, Table};
 use supersonic::workload::Schedule;
 
 struct Row {
@@ -29,8 +31,8 @@ fn main() -> anyhow::Result<()> {
     println!("== Fig. 3: static vs dynamic GPU allocation ==");
 
     // Faster dilation than Fig. 2 — five configurations to run.
-    let time_scale = 12.0;
-    let phase = Duration::from_secs(180);
+    let time_scale = if smoke() { 24.0 } else { 12.0 };
+    let phase = Duration::from_secs(smoke_scaled(180, 45) as u64);
     let schedule = Schedule::step_up_down(1, 10, phase);
     println!(
         "workload: 1 -> 10 -> 1 clients x {}s clock phases (time_scale {}x)\n",
@@ -38,8 +40,13 @@ fn main() -> anyhow::Result<()> {
         time_scale
     );
 
+    let arms: Vec<Option<usize>> = if smoke() {
+        vec![Some(1), None] // one static arm + dynamic, liveness only
+    } else {
+        vec![Some(1), Some(2), Some(4), Some(10), None]
+    };
     let mut rows: Vec<Row> = Vec::new();
-    for static_n in [Some(1usize), Some(2), Some(4), Some(10), None] {
+    for static_n in arms {
         let label = match static_n {
             Some(n) => format!("static-{n}"),
             None => "dynamic".to_string(),
@@ -82,6 +89,12 @@ fn main() -> anyhow::Result<()> {
     println!("{}", table.render());
     let path = csv.save("fig3_static_vs_dynamic")?;
     println!("CSV: {}", path.display());
+
+    assert!(rows.iter().all(|r| r.ok > 0), "an arm served nothing");
+    if smoke() {
+        println!("\n(smoke: static-vs-dynamic assertions skipped — phases too short)");
+        return Ok(());
+    }
 
     // The paper's qualitative claims.
     let get = |label: &str| rows.iter().find(|r| r.label == label).unwrap();

@@ -23,6 +23,9 @@
 //!      budget (separate two-arm steady run).
 //!
 //! Run: `cargo bench --bench latency_breakdown`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench latency_breakdown`
+//! (one short traced steady slice; stage-dominance and alert-lifecycle
+//! assertions need the full overload/recovery cycle)
 
 use std::time::Duration;
 
@@ -30,7 +33,7 @@ use supersonic::config::*;
 use supersonic::deployment::Deployment;
 use supersonic::metrics::registry::{labels, Registry};
 use supersonic::telemetry::{slo, STAGES, STAGE_HISTOGRAM};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
 
 const TIME_SCALE: f64 = 10.0;
@@ -100,6 +103,7 @@ fn bench_cfg(tracing: bool) -> DeploymentConfig {
                 error_budget: 0.05,
             }],
         },
+        rpc: Default::default(),
         time_scale: TIME_SCALE,
     }
 }
@@ -120,6 +124,21 @@ fn sum_of(sums: &[(&'static str, f64)], stage: &str) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
+    if smoke() {
+        println!("== latency breakdown (smoke): one traced steady slice ==");
+        let d = Deployment::up(bench_cfg(true))?;
+        anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+        let spec = WorkloadSpec::new("particlenet", ROWS, vec![64, 7]).with_tracing();
+        let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+        let report = pool.run(&Schedule::constant(STEADY_CLIENTS, Duration::from_secs(20)));
+        let sums = stage_sums(&d.registry);
+        let compute = sum_of(&sums, "compute");
+        d.down();
+        println!("(smoke) {} ok, compute stage sum {compute:.2}s", report.total_ok);
+        assert!(report.total_ok > 0, "no requests served in smoke slice");
+        assert!(compute > 0.0, "no compute spans recorded in smoke slice");
+        return Ok(());
+    }
     println!("== latency breakdown + SLO burn-rate alerting (overload/recovery) ==");
     println!(
         "2 servers, {STEADY_CLIENTS} -> {OVERLOAD_CLIENTS} -> {STEADY_CLIENTS} clients, \

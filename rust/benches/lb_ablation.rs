@@ -10,6 +10,8 @@
 //! and utilization-aware route around them.
 //!
 //! Run: `cargo bench --bench lb_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench lb_ablation`
+//! (one policy, shorter run, liveness only)
 
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
@@ -19,7 +21,7 @@ use supersonic::gateway::Gateway;
 use supersonic::metrics::Registry;
 use supersonic::server::{Instance, ModelRepository};
 use supersonic::telemetry::Tracer;
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, smoke_scaled, Csv, Table};
 use supersonic::util::clock::Clock;
 use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
 
@@ -64,12 +66,16 @@ fn main() -> anyhow::Result<()> {
         &["particlenet".into()],
     )?);
 
-    let policies = [
-        LbPolicy::RoundRobin,
-        LbPolicy::Random,
-        LbPolicy::LeastConnection,
-        LbPolicy::UtilizationAware,
-    ];
+    let policies: Vec<LbPolicy> = if smoke() {
+        vec![LbPolicy::LeastConnection]
+    } else {
+        vec![
+            LbPolicy::RoundRobin,
+            LbPolicy::Random,
+            LbPolicy::LeastConnection,
+            LbPolicy::UtilizationAware,
+        ]
+    };
 
     let mut table = Table::new(&[
         "policy", "ok", "req/s", "p50 ms", "p99 ms", "mean ms", "straggler share",
@@ -100,8 +106,10 @@ fn main() -> anyhow::Result<()> {
         // decisions dominate.
         let spec = WorkloadSpec::new("particlenet", 16, vec![64, 7]);
         let pool = ClientPool::new(&gateway.addr().to_string(), spec, clock.clone());
-        let report = pool.run(&Schedule::constant(12, Duration::from_secs(15)));
+        let run_secs = smoke_scaled(15, 4) as u64;
+        let report = pool.run(&Schedule::constant(12, Duration::from_secs(run_secs)));
         let p = &report.phases[0];
+        anyhow::ensure!(p.ok > 0, "{} arm served nothing", policy.name());
 
         // How much traffic landed on the stragglers?
         let snapshot = registry.snapshot();

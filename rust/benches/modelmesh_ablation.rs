@@ -12,13 +12,15 @@
 //! et al., arXiv:2312.06838).
 //!
 //! Run: `cargo bench --bench modelmesh_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench modelmesh_ablation`
+//! (dynamic arm only, compressed, liveness only)
 
 use std::time::Duration;
 
 use supersonic::config::PlacementPolicy;
 use supersonic::deployment::Deployment;
 use supersonic::experiments::{modelmesh_config, modelmesh_workload};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::Schedule;
 
 struct Row {
@@ -63,6 +65,12 @@ fn run_arm(policy: PlacementPolicy, time_scale: f64) -> anyhow::Result<Row> {
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== modelmesh ablation: static vs dynamic model placement ==");
+    if smoke() {
+        let row = run_arm(PlacementPolicy::Dynamic, 20.0)?;
+        println!("(smoke) dynamic arm: {} ok, {} shed", row.ok, row.shed);
+        assert!(row.ok > 0, "dynamic arm served nothing");
+        return Ok(());
+    }
     let time_scale = 8.0;
     println!(
         "4 instances, budget fits 1 model each, 16 clients, 90/10 hot/cold skew, \

@@ -17,12 +17,14 @@
 //! arXiv:2312.06838).
 //!
 //! Run: `cargo bench --bench per_model_autoscale`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench per_model_autoscale`
+//! (per-model arm only, compressed, liveness only)
 
 use std::time::Duration;
 
 use supersonic::deployment::Deployment;
 use supersonic::experiments::{modelmesh_workload, per_model_autoscale_config};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::Schedule;
 
 struct Row {
@@ -72,6 +74,12 @@ fn run_arm(per_model: bool, time_scale: f64) -> anyhow::Result<Row> {
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== per-model autoscaling ablation: global vs per-model targets ==");
+    if smoke() {
+        let row = run_arm(true, 20.0)?;
+        println!("(smoke) per-model arm: {} ok, {} pods", row.ok, row.pods);
+        assert!(row.ok > 0, "per-model arm served nothing");
+        return Ok(());
+    }
     let time_scale = 8.0;
     println!(
         "budget 6 pods, 24 clients, 90/10 hot/cold skew, 60s clock run \

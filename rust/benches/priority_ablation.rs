@@ -23,12 +23,14 @@
 //! recorded.
 //!
 //! Run: `cargo bench --bench priority_ablation` (or `make bench-priority`)
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench priority_ablation`
+//! (lanes arm only, compressed, liveness only)
 
 use std::time::Duration;
 
 use supersonic::deployment::Deployment;
 use supersonic::experiments::{priority_config, priority_workload};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::Schedule;
 
 const PHASE: Duration = Duration::from_secs(40);
@@ -71,6 +73,12 @@ fn run_arm(lanes: bool, time_scale: f64) -> anyhow::Result<Row> {
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== priority ablation: admission lanes vs priority-blind, equal pod budget ==");
+    if smoke() {
+        let row = run_arm(true, 20.0)?;
+        println!("(smoke) lanes arm: {} critical ok, {} bulk ok", row.crit_ok, row.bulk_ok);
+        assert!(row.crit_ok > 0, "lanes arm served no critical requests");
+        return Ok(());
+    }
     let time_scale = 4.0;
     println!(
         "2 instances, {CLIENTS} clients (85% 8-row bulk / 15% 1-row critical), \

@@ -1,0 +1,300 @@
+//! Streaming multiplexed sessions vs request-per-exchange — the RPC
+//! layer's acceptance bench.
+//!
+//! Phase A (throughput): one deployment (2 simulated replicas, demux
+//! dispatch at the gateway), three client arms at an equal pod budget:
+//!
+//!   * `serial`    — one blocking [`RpcClient`], one request in flight
+//!                   (the perf_analyzer model);
+//!   * `reconnect` — a fresh TCP connection per request (the worst case
+//!                   the session pool exists to avoid);
+//!   * `pipelined` — ONE [`RpcSession`] holding a 64-deep window of
+//!                   in-flight requests on a single connection.
+//!
+//! Asserted: the pipelined session sustains >= 5x the serial request
+//! rate. The win is real concurrency, not a micro-artifact: a serial
+//! connection is idle for a full round trip per request while the
+//! batcher could be folding its requests into in-flight batches.
+//!
+//! Phase B (semantics): per-request metadata must survive multiplexing.
+//! On one shared session carrying interleaved traffic through a gateway
+//! with auth + a pressure gate + tracing enabled:
+//!
+//!   * a critical, authed, traced request lands Ok and its trace id
+//!     accumulates real pipeline spans;
+//!   * a bulk request is shed (`RateLimited`) by the priority-aware gate
+//!     while the critical one on the SAME session passes;
+//!   * a forged token comes back `Unauthorized`.
+//!
+//! Run: `cargo bench --bench rpc_streaming`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench rpc_streaming`
+
+use std::collections::VecDeque;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use supersonic::config::*;
+use supersonic::deployment::Deployment;
+use supersonic::gateway::ratelimit::PressureGate;
+use supersonic::gateway::{auth, Gateway};
+use supersonic::metrics::Registry;
+use supersonic::rpc::codec::{InferRequest, RequestKind};
+use supersonic::rpc::{Priority, RpcClient, RpcSession, SessionOpts, Status};
+use supersonic::runtime::Tensor;
+use supersonic::server::Instance;
+use supersonic::telemetry::Tracer;
+use supersonic::util::bench::{smoke, smoke_scaled, Csv, Table};
+use supersonic::util::clock::Clock;
+
+const WINDOW: usize = 64;
+const ROWS: usize = 1;
+
+fn bench_cfg() -> DeploymentConfig {
+    DeploymentConfig {
+        name: "rpc-streaming".into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                load_delay: None,
+                backends: Vec::new(),
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(10),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 5.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig { max_replicas: 2, ..Default::default() },
+        cluster: ClusterConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(10),
+            termination_grace: Duration::from_millis(50),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(600),
+            tracing: false,
+        },
+        model_placement: Default::default(),
+        engines: Default::default(),
+        observability: Default::default(),
+        rpc: RpcConfig {
+            dispatch_threads: WINDOW,
+            max_inflight_per_conn: 2 * WINDOW,
+            ..Default::default()
+        },
+        time_scale: 1.0,
+    }
+}
+
+fn input() -> Tensor {
+    Tensor::zeros(vec![ROWS, 16, 16, 3])
+}
+
+/// Completed-ok count over `run` wall seconds, one blocking client.
+fn arm_serial(endpoint: &str, run: Duration) -> usize {
+    let mut client = RpcClient::connect(endpoint).unwrap();
+    let deadline = Instant::now() + run;
+    let mut ok = 0;
+    while Instant::now() < deadline {
+        if client.infer("icecube_cnn", input()).unwrap().status == Status::Ok {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+/// One fresh connection per request — prices the dial the pool avoids.
+fn arm_reconnect(endpoint: &str, run: Duration) -> usize {
+    let deadline = Instant::now() + run;
+    let mut ok = 0;
+    while Instant::now() < deadline {
+        let mut client = RpcClient::connect(endpoint).unwrap();
+        if client.infer("icecube_cnn", input()).unwrap().status == Status::Ok {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+/// One session, `WINDOW` requests in flight on one TCP connection.
+fn arm_pipelined(endpoint: &str, run: Duration) -> usize {
+    let session = RpcSession::connect(endpoint, SessionOpts::default()).unwrap();
+    let deadline = Instant::now() + run;
+    let mut window = VecDeque::new();
+    let mut ok = 0;
+    let req = InferRequest::infer(0, "icecube_cnn", input());
+    while Instant::now() < deadline {
+        if window.len() < WINDOW {
+            window.push_back(session.submit(&req).unwrap());
+        } else if window.pop_front().unwrap().wait().unwrap().status == Status::Ok {
+            ok += 1;
+        }
+    }
+    for reply in window {
+        if reply.wait().unwrap().status == Status::Ok {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+fn phase_a() -> anyhow::Result<()> {
+    let run = Duration::from_secs(smoke_scaled(10, 2) as u64);
+    println!(
+        "== phase A: throughput at equal pod budget (2 simulated replicas, \
+         {}s per arm{}) ==",
+        run.as_secs(),
+        if smoke() { ", smoke" } else { "" }
+    );
+    let d = Deployment::up(bench_cfg())?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+    let endpoint = d.endpoint();
+
+    let serial = arm_serial(&endpoint, run);
+    let reconnect = arm_reconnect(&endpoint, run);
+    let pipelined = arm_pipelined(&endpoint, run);
+    d.down();
+
+    let rate = |n: usize| n as f64 / run.as_secs_f64();
+    let mut table = Table::new(&["arm", "ok", "req/s", "vs serial"]);
+    let mut csv = Csv::new(&["arm", "ok", "rps"]);
+    for (name, n) in [("serial", serial), ("reconnect", reconnect), ("pipelined", pipelined)] {
+        table.row(&[
+            name.into(),
+            n.to_string(),
+            format!("{:.0}", rate(n)),
+            format!("{:.1}x", n as f64 / serial as f64),
+        ]);
+        csv.row(&[name.into(), n.to_string(), format!("{:.1}", rate(n))]);
+    }
+    println!("{}", table.render());
+    let path = csv.save("rpc_streaming")?;
+    println!("CSV: {}", path.display());
+
+    let speedup = pipelined as f64 / serial as f64;
+    assert!(serial > 0, "serial arm completed nothing");
+    assert!(
+        speedup >= 5.0,
+        "pipelined session only {speedup:.1}x the serial baseline \
+         ({pipelined} vs {serial} ok in {}s) — want >= 5x",
+        run.as_secs()
+    );
+    println!("pipelined speedup: {speedup:.1}x (>= 5x required)\n");
+    Ok(())
+}
+
+fn phase_b() -> anyhow::Result<()> {
+    println!("== phase B: metadata semantics on one multiplexed session ==");
+    let clock = Clock::real();
+    let registry = Registry::new();
+    let tracer = Tracer::new(clock.clone(), 4096, true);
+    let repo = Arc::new(
+        supersonic::server::ModelRepository::load_metadata(
+            std::path::Path::new("artifacts"),
+            &["icecube_cnn".into()],
+        )?,
+    );
+    let inst = Instance::start_with_mode(
+        "rpc-bench-0",
+        repo,
+        &[ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            load_delay: None,
+            backends: Vec::new(),
+        }],
+        clock.clone(),
+        registry.clone(),
+        64,
+        5.0,
+        ExecutionMode::Simulated,
+    );
+    inst.mark_ready();
+    let endpoints = Arc::new(RwLock::new(vec![Arc::clone(&inst)]));
+    // Pressure pinned over the standard threshold: bulk and standard
+    // shed, critical admits (2x factor). Auth secret set; demux on so
+    // the session's interleaved requests execute concurrently.
+    let secret = "bench-secret";
+    let gate = PressureGate::new(Box::new(|| 1.0), 0.6);
+    let gateway = Gateway::start_full(
+        &GatewayConfig { auth_secret: Some(secret.into()), ..Default::default() },
+        endpoints,
+        clock,
+        registry,
+        tracer.clone(),
+        Some(gate),
+        None,
+        PriorityConfig::default(),
+        &RpcConfig { dispatch_threads: 8, ..Default::default() },
+    )?;
+
+    let session =
+        RpcSession::connect(&gateway.addr().to_string(), SessionOpts::default()).unwrap();
+    let token = auth::mint_token(secret);
+    let trace_id = tracer.new_trace();
+    let mk = |token: &str, priority: Priority, trace_id: u64| InferRequest {
+        kind: RequestKind::Infer,
+        request_id: 0, // the session stamps the wire id
+        trace_id,
+        sampled: trace_id != 0,
+        token: token.to_string(),
+        model: "icecube_cnn".into(),
+        priority: Some(priority),
+        input: input(),
+    };
+
+    // Interleave all three on the one session before awaiting anything.
+    let critical = session.submit(&mk(&token, Priority::Critical, trace_id)).unwrap();
+    let bulk = session.submit(&mk(&token, Priority::Bulk, 0)).unwrap();
+    let forged = session.submit(&mk("deadbeef", Priority::Critical, 0)).unwrap();
+
+    let r_critical = critical.wait()?;
+    let r_bulk = bulk.wait()?;
+    let r_forged = forged.wait()?;
+    println!(
+        "critical/authed/traced: {}   bulk: {}   forged token: {}",
+        r_critical.status.name(),
+        r_bulk.status.name(),
+        r_forged.status.name()
+    );
+    assert_eq!(r_critical.status, Status::Ok, "{}", r_critical.error);
+    assert_eq!(r_bulk.status, Status::RateLimited, "bulk not shed by the gate");
+    assert_eq!(r_forged.status, Status::Unauthorized, "forged token admitted");
+
+    let view = tracer.trace(trace_id);
+    let names: Vec<&str> = view.spans.iter().map(|s| s.name.as_str()).collect();
+    for stage in ["admit", "route", "compute"] {
+        assert!(names.contains(&stage), "trace lost stage '{stage}' over the wire: {names:?}");
+    }
+    println!("trace {trace_id:#x} spans: {names:?}");
+    println!("metadata preserved per in-flight request: OK\n");
+
+    gateway.shutdown();
+    inst.stop();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    phase_a()?;
+    phase_b()
+}

@@ -8,23 +8,26 @@
 //! (max/min/stddev of per-instance request counts).
 //!
 //! Run: `cargo bench --bench scale_100_servers`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench scale_100_servers`
+//! (12-replica fleet, shorter burst — same code path, smaller scale)
 
 use std::time::Duration;
 
 use supersonic::config::DeploymentConfig;
 use supersonic::deployment::Deployment;
 use supersonic::metrics::registry::SampleValue;
-use supersonic::util::bench::Table;
+use supersonic::util::bench::{smoke_scaled, Table};
 use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
 
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
-    println!("== NRP-scale: 100 GPU-enabled inference servers (§3) ==\n");
+    let replicas = smoke_scaled(100, 12);
+    println!("== NRP-scale: {replicas} GPU-enabled inference servers (§3) ==\n");
 
     let mut cfg = DeploymentConfig::from_file(std::path::Path::new("configs/nrp.yaml"))?;
     // Pin the replica count: this bench measures scale, not scaling.
     cfg.autoscaler.enabled = false;
-    cfg.server.replicas = 100;
+    cfg.server.replicas = replicas;
     cfg.cluster.pod_failure_rate = 0.0;
     cfg.server.startup_delay = Duration::from_secs(5);
     cfg.cluster.pod_start_delay = Duration::from_secs(10);
@@ -35,22 +38,24 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let d = Deployment::up(cfg)?;
     anyhow::ensure!(
-        d.wait_ready(100, Duration::from_secs(120)),
-        "100 instances not ready (got {})",
+        d.wait_ready(replicas, Duration::from_secs(120)),
+        "{replicas} instances not ready (got {})",
         d.cluster.running()
     );
     let boot = t0.elapsed();
     println!(
-        "100 instances Ready in {:.1}s wall ({:.0}s cluster time)\n",
+        "{replicas} instances Ready in {:.1}s wall ({:.0}s cluster time)\n",
         boot.as_secs_f64(),
         boot.as_secs_f64() * d.cfg.time_scale
     );
 
-    // Wide burst: 64 clients, 60 clock seconds.
+    // Wide burst: 64 clients, 120 clock seconds (16 / 30 in smoke).
     let mut spec = WorkloadSpec::new("particlenet", 16, vec![64, 7]);
     spec.think_time = Duration::from_millis(30);
     let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
-    let report = pool.run(&Schedule::constant(64, Duration::from_secs(120)));
+    let clients = smoke_scaled(64, 16);
+    let burst = Duration::from_secs(smoke_scaled(120, 30) as u64);
+    let report = pool.run(&Schedule::constant(clients, burst));
     let p = &report.phases[0];
     anyhow::ensure!(p.ok > 0, "no requests served");
 
@@ -95,9 +100,9 @@ fn main() -> anyhow::Result<()> {
     table.row(&["per-instance req stddev".into(), format!("{:.1} ({:.0}% of mean)", var.sqrt(), 100.0 * var.sqrt() / mean.max(1e-9))]);
     println!("{}", table.render());
 
-    assert_eq!(d.cluster.running(), 100);
+    assert_eq!(d.cluster.running(), replicas);
     assert!(served as f64 >= 0.95 * per_instance.len() as f64, "load balancing left instances cold");
-    println!("checks: all 100 served traffic, fairness within expectation.");
+    println!("checks: all {replicas} served traffic, fairness within expectation.");
     d.down();
     Ok(())
 }

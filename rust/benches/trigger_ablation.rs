@@ -17,28 +17,34 @@
 //! the same knee.
 //!
 //! Run: `cargo bench --bench trigger_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench trigger_ablation`
+//! (default trigger only, compressed phases, liveness only)
 
 use std::time::Duration;
 
 use supersonic::experiments::{fig_config, fig_workload, run_deployment};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, smoke_scaled, Csv, Table};
 use supersonic::workload::Schedule;
 
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== §2.4 ablation: autoscaler trigger metrics ==");
 
-    let time_scale = 12.0;
-    let phase = Duration::from_secs(180);
+    let time_scale = if smoke() { 24.0 } else { 12.0 };
+    let phase = Duration::from_secs(smoke_scaled(180, 45) as u64);
     let schedule = Schedule::step_up_down(1, 10, phase);
 
     // (metric, threshold): thresholds target the same ~4-server knee.
-    let triggers: [(&str, f64); 4] = [
-        ("queue_latency_avg:30", 0.025), // seconds of queue wait/request
-        ("queue_latency_ewma", 0.025),   // seconds (smoothed gauge)
-        ("queue_depth_avg", 1.0),        // requests waiting per instance
-        ("gpu_utilization_avg", 0.85),   // busy fraction
-    ];
+    let triggers: Vec<(&str, f64)> = if smoke() {
+        vec![("queue_latency_avg:30", 0.025)] // paper default only
+    } else {
+        vec![
+            ("queue_latency_avg:30", 0.025), // seconds of queue wait/request
+            ("queue_latency_ewma", 0.025),   // seconds (smoothed gauge)
+            ("queue_depth_avg", 1.0),        // requests waiting per instance
+            ("gpu_utilization_avg", 0.85),   // busy fraction
+        ]
+    };
 
     let mut table = Table::new(&[
         "trigger", "peak servers", "avg latency (ms)", "p99 (ms)", "avg util", "ok",
@@ -51,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         cfg.autoscaler.metric = metric.to_string();
         cfg.autoscaler.threshold = threshold;
         let result = run_deployment(cfg, fig_workload(), &schedule, Duration::from_secs(5))?;
+        anyhow::ensure!(result.report.total_ok > 0, "trigger {metric} served nothing");
         table.row(&[
             metric.to_string(),
             result.peak_servers.to_string(),

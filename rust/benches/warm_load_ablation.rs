@@ -23,13 +23,15 @@
 //!   strictly MORE than fifo once loads are costed — asserted below.
 //!
 //! Run: `cargo bench --bench warm_load_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench warm_load_ablation`
+//! (costed-affinity arm only, compressed, liveness only)
 
 use std::time::Duration;
 
 use supersonic::config::BatchMode;
 use supersonic::deployment::Deployment;
 use supersonic::experiments::{modelmesh_workload, warm_load_config};
-use supersonic::util::bench::{Csv, Table};
+use supersonic::util::bench::{smoke, Csv, Table};
 use supersonic::workload::Schedule;
 
 const LOAD_DELAY: Duration = Duration::from_secs(3);
@@ -78,6 +80,12 @@ fn run_arm(load_delay: Duration, mode: BatchMode, time_scale: f64) -> anyhow::Re
 fn main() -> anyhow::Result<()> {
     supersonic::util::logging::init();
     println!("== warm-load ablation: instant vs costed loads x fifo vs affinity batching ==");
+    if smoke() {
+        let row = run_arm(LOAD_DELAY, BatchMode::Affinity, 20.0)?;
+        println!("(smoke) costed-affinity arm: {} ok, {:.0} loads", row.ok, row.load_events);
+        assert!(row.ok > 0, "costed-affinity arm served nothing");
+        return Ok(());
+    }
     let time_scale = 10.0;
     println!(
         "4 instances (budget fits both models), {CLIENTS} clients, 90/10 skew then \

@@ -14,6 +14,6 @@ pub use schema::{
     AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, EnginesConfig,
     ExecutionMode, GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig,
     MonitoringConfig, ObservabilityConfig, PerModelScalingConfig, PlacementPolicy,
-    PriorityConfig, ServerConfig, ServiceModelConfig, SloConfig,
+    PriorityConfig, RpcConfig, ServerConfig, ServiceModelConfig, SloConfig,
 };
 pub use yaml::Value;

@@ -304,6 +304,40 @@ pub struct GatewayConfig {
     pub max_connections: usize,
 }
 
+/// RPC transport section (`rpc`): streaming multiplexed sessions.
+///
+/// Governs the wire layer on both sides of the gateway: how deep a
+/// single client connection may pipeline, how many handler threads
+/// demultiplex those pipelines, and how the gateway's session pool dials
+/// backend instances when remote dispatch is enabled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RpcConfig {
+    /// Warm sessions the gateway keeps per backend address. When every
+    /// session is at the in-flight bound the pool reports exhaustion and
+    /// the request is shed as retryable `Overloaded`
+    /// (`rpc_pool_exhausted_total`).
+    pub pool_size: usize,
+    /// Pipelined requests allowed in flight per connection before the
+    /// server blocks the connection reader (TCP backpressure); the
+    /// session pool also refuses to check out sessions at this depth.
+    /// 0 disables the bound.
+    pub max_inflight_per_conn: usize,
+    /// Per-request deadline on pooled sessions and io timeout on
+    /// blocking clients that opt in: a hung backend surfaces as a
+    /// retryable error instead of blocking the caller forever.
+    pub io_timeout: Duration,
+    /// Shared demultiplexing handler threads at the gateway listener.
+    /// 0 keeps the sequential one-request-per-connection mode; set > 0
+    /// so pipelined sessions actually execute concurrently.
+    pub dispatch_threads: usize,
+    /// Forward routed requests to instances over their sonic-rpc
+    /// endpoints (through the session pool) instead of the in-process
+    /// submit path. The networked hop the paper's Envoy → Triton leg
+    /// takes; off by default because in-process dispatch is faster for
+    /// single-host simulation.
+    pub remote_dispatch: bool,
+}
+
 /// Per-model autoscaling subsection (`autoscaler.per_model`).
 ///
 /// When enabled, the single global replica target is replaced by one
@@ -582,6 +616,8 @@ pub struct DeploymentConfig {
     pub name: String,
     pub server: ServerConfig,
     pub gateway: GatewayConfig,
+    /// RPC transport tuning (session pooling, pipelining, io timeouts).
+    pub rpc: RpcConfig,
     pub autoscaler: AutoscalerConfig,
     pub cluster: ClusterConfig,
     pub monitoring: MonitoringConfig,
@@ -710,12 +746,25 @@ impl Default for ObservabilityConfig {
     }
 }
 
+impl Default for RpcConfig {
+    fn default() -> Self {
+        RpcConfig {
+            pool_size: 4,
+            max_inflight_per_conn: 64,
+            io_timeout: Duration::from_secs(10),
+            dispatch_threads: 0,
+            remote_dispatch: false,
+        }
+    }
+}
+
 impl Default for DeploymentConfig {
     fn default() -> Self {
         DeploymentConfig {
             name: "supersonic".into(),
             server: ServerConfig::default(),
             gateway: GatewayConfig::default(),
+            rpc: RpcConfig::default(),
             autoscaler: AutoscalerConfig::default(),
             cluster: ClusterConfig::default(),
             monitoring: MonitoringConfig::default(),
@@ -734,7 +783,7 @@ impl Default for DeploymentConfig {
 pub mod keys {
     /// Top-level sections.
     pub const ROOT: &[&str] = &[
-        "name", "server", "gateway", "autoscaler", "cluster", "monitoring",
+        "name", "server", "gateway", "rpc", "autoscaler", "cluster", "monitoring",
         "model_placement", "engines", "observability", "time_scale",
     ];
     /// `server` section.
@@ -758,6 +807,11 @@ pub mod keys {
     pub const GATEWAY: &[&str] = &[
         "listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret",
         "worker_threads", "max_inflight_per_instance", "max_connections",
+    ];
+    /// `rpc` section (streaming multiplexed transport).
+    pub const RPC: &[&str] = &[
+        "pool_size", "max_inflight_per_conn", "io_timeout", "dispatch_threads",
+        "remote_dispatch",
     ];
     /// `autoscaler` section.
     pub const AUTOSCALER: &[&str] = &[
@@ -800,6 +854,7 @@ pub mod keys {
         ("server.models[]", SERVER_MODEL),
         ("server.models[].service_model", SERVICE_MODEL),
         ("gateway", GATEWAY),
+        ("rpc", RPC),
         ("autoscaler", AUTOSCALER),
         ("autoscaler.per_model", AUTOSCALER_PER_MODEL),
         ("cluster", CLUSTER),
@@ -1061,6 +1116,20 @@ impl DeploymentConfig {
             max_connections: get_usize(gw, "max_connections", d.gateway.max_connections)?,
         };
 
+        let rp = root.get("rpc").unwrap_or(&empty);
+        check_keys(rp, keys::RPC, "rpc")?;
+        let rpc = RpcConfig {
+            pool_size: get_usize(rp, "pool_size", d.rpc.pool_size)?,
+            max_inflight_per_conn: get_usize(
+                rp,
+                "max_inflight_per_conn",
+                d.rpc.max_inflight_per_conn,
+            )?,
+            io_timeout: get_duration(rp, "io_timeout", d.rpc.io_timeout)?,
+            dispatch_threads: get_usize(rp, "dispatch_threads", d.rpc.dispatch_threads)?,
+            remote_dispatch: get_bool(rp, "remote_dispatch", d.rpc.remote_dispatch)?,
+        };
+
         let asc = root.get("autoscaler").unwrap_or(&empty);
         check_keys(asc, keys::AUTOSCALER, "autoscaler")?;
         let pm = asc.get("per_model").unwrap_or(&empty);
@@ -1195,6 +1264,7 @@ impl DeploymentConfig {
             name,
             server,
             gateway,
+            rpc,
             autoscaler,
             cluster,
             monitoring,
@@ -1231,6 +1301,22 @@ impl DeploymentConfig {
         }
         if self.server.util_window <= 0.0 {
             bail!("server.util_window must be > 0");
+        }
+        if self.rpc.pool_size == 0 {
+            bail!("rpc.pool_size must be >= 1");
+        }
+        if self.rpc.io_timeout.is_zero() {
+            bail!(
+                "rpc.io_timeout must be > 0 (it is the hung-backend bound; \
+                 a zero timeout would fail every pooled request immediately)"
+            );
+        }
+        if self.rpc.remote_dispatch && self.rpc.dispatch_threads == 0 {
+            bail!(
+                "rpc.remote_dispatch requires rpc.dispatch_threads >= 1: \
+                 instance rpc endpoints demultiplex the gateway's pipelined \
+                 sessions, which needs dispatch threads"
+            );
         }
         let pr = &self.server.priorities;
         for model in pr.models.keys() {

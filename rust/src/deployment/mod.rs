@@ -256,6 +256,7 @@ impl Deployment {
                 .clone()
                 .map(|catalog| (catalog, cfg.model_placement.budget_bytes()));
             let placement_seq = Arc::new(AtomicUsize::new(0));
+            let rpc_cfg = cfg.rpc.clone();
             Arc::new(move |name: &str, profile: Option<&str>, accel: AcceleratorClass| {
                 // The pod's accelerator class fixes its backend set.
                 let backends = backend_registry.for_class(accel);
@@ -300,6 +301,21 @@ impl Deployment {
                             let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
                             inst.set_loaded_models(&initial_placement(&hostable, *budget, idx));
                         }
+                    }
+                }
+                if rpc_cfg.remote_dispatch {
+                    // Remote dispatch: every pod exposes a sonic-rpc
+                    // endpoint (ephemeral port) for the gateway's session
+                    // pool to dial; demultiplexed so pooled sessions can
+                    // pipeline into it.
+                    let opts = crate::rpc::RpcServerOpts {
+                        workers: 2,
+                        max_connections: 0,
+                        max_inflight_per_conn: rpc_cfg.max_inflight_per_conn,
+                        dispatch_threads: rpc_cfg.dispatch_threads.max(1),
+                    };
+                    if let Err(e) = inst.serve_rpc("127.0.0.1:0", opts) {
+                        eprintln!("[deployment] pod {name}: rpc endpoint failed: {e:#}");
                     }
                 }
                 inst
@@ -367,7 +383,7 @@ impl Deployment {
             None
         };
 
-        let gateway = Gateway::start_with_priorities(
+        let gateway = Gateway::start_full(
             &cfg.gateway,
             cluster.endpoints_handle(),
             clock.clone(),
@@ -376,6 +392,7 @@ impl Deployment {
             pressure,
             router.clone(),
             cfg.server.priorities.clone(),
+            &cfg.rpc,
         )?;
 
         // Placement controller rides the cluster reconcile loop: pools
@@ -590,6 +607,7 @@ mod tests {
             model_placement: Default::default(),
             engines: Default::default(),
             observability: Default::default(),
+            rpc: Default::default(),
             time_scale: 1.0,
         }
     }
@@ -621,6 +639,26 @@ mod tests {
         assert_eq!(resp.output.shape(), &[1, 3]);
         // real model output is not all zeros
         assert!(resp.output.data().iter().any(|&v| v != 0.0));
+        d.down();
+    }
+
+    #[test]
+    fn remote_dispatch_deployment_serves() {
+        // Full stack over the wire twice: client -> gateway over TCP,
+        // gateway -> pod over a pooled multiplexed session.
+        let mut cfg = fast_cfg(ExecutionMode::Simulated);
+        cfg.rpc.remote_dispatch = true;
+        cfg.rpc.dispatch_threads = 4;
+        let d = Deployment::up(cfg).unwrap();
+        assert!(d.wait_ready(1, Duration::from_secs(5)));
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        for _ in 0..3 {
+            let resp = client.infer("icecube_cnn", Tensor::zeros(vec![2, 16, 16, 3])).unwrap();
+            assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+            assert_eq!(resp.output.shape(), &[2, 3]);
+        }
+        let pool = d.gateway.session_pool().expect("remote dispatch pools sessions");
+        assert_eq!(pool.connects(), 1, "routed hops must reuse the warm session");
         d.down();
     }
 

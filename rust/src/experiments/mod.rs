@@ -215,6 +215,7 @@ pub fn fig_config(
         model_placement: ModelPlacementConfig::default(),
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
+        rpc: Default::default(),
         time_scale,
     }
 }
@@ -306,6 +307,7 @@ pub fn modelmesh_config(
         },
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
+        rpc: Default::default(),
         time_scale,
     }
 }
@@ -510,6 +512,7 @@ pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
             ..EnginesConfig::default()
         },
         observability: ObservabilityConfig::default(),
+        rpc: Default::default(),
         time_scale,
     }
 }
@@ -593,6 +596,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
         model_placement: ModelPlacementConfig::default(),
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
+        rpc: Default::default(),
         time_scale,
     }
 }

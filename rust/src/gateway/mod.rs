@@ -21,6 +21,7 @@
 
 pub mod auth;
 pub mod lb;
+pub mod pool;
 pub mod ratelimit;
 
 use std::net::SocketAddr;
@@ -28,11 +29,11 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
-use crate::config::{GatewayConfig, PriorityConfig};
+use crate::config::{GatewayConfig, PriorityConfig, RpcConfig};
 use crate::metrics::registry::{labels, Registry};
 use crate::modelmesh::ModelRouter;
 use crate::rpc::codec::{InferRequest, InferResponse, Priority, RequestKind, Status};
-use crate::rpc::server::{Handler, RpcServer};
+use crate::rpc::server::{Handler, RpcServer, RpcServerOpts};
 use crate::server::batcher::ExecOutcome;
 use crate::server::Instance;
 use crate::telemetry::{slo, Span, StageRecorder, Tracer, ROOT_SPAN};
@@ -40,6 +41,7 @@ use crate::util::clock::Clock;
 
 use auth::Authenticator;
 use lb::LoadBalancer;
+use pool::SessionPool;
 use ratelimit::{PressureGate, TokenBucket};
 
 /// The running gateway: one TCP listener + the policy pipeline.
@@ -47,6 +49,8 @@ pub struct Gateway {
     server: Mutex<RpcServer>,
     addr: SocketAddr,
     lb: Arc<LoadBalancer>,
+    /// Warm backend sessions, present when `rpc.remote_dispatch` is on.
+    sessions: Option<Arc<SessionPool>>,
 }
 
 impl Gateway {
@@ -112,6 +116,37 @@ impl Gateway {
         router: Option<Arc<ModelRouter>>,
         priorities: PriorityConfig,
     ) -> Result<Self> {
+        Self::start_full(
+            cfg,
+            endpoints,
+            clock,
+            registry,
+            tracer,
+            pressure,
+            router,
+            priorities,
+            &RpcConfig::default(),
+        )
+    }
+
+    /// [`Gateway::start_with_priorities`] with an explicit `rpc` transport
+    /// section. `rpc.dispatch_threads > 0` turns on demultiplexed dispatch
+    /// at the listener (pipelined [`RpcSession`](crate::rpc::RpcSession)
+    /// clients execute concurrently); `rpc.remote_dispatch` forwards
+    /// routed requests to instances over their sonic-rpc endpoints
+    /// through a warm [`SessionPool`] instead of the in-process submit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_full(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+        router: Option<Arc<ModelRouter>>,
+        priorities: PriorityConfig,
+        rpc: &RpcConfig,
+    ) -> Result<Self> {
         let lb = Arc::new(LoadBalancer::new(
             cfg.lb_policy,
             endpoints,
@@ -169,8 +204,13 @@ impl Gateway {
                 .counter("gateway_shed_priority_total", &labels(&[("priority", "critical")])),
         ];
 
+        let sessions = rpc
+            .remote_dispatch
+            .then(|| Arc::new(SessionPool::new(rpc.clone(), &registry)));
+
         let lb2 = Arc::clone(&lb);
         let clock2 = clock.clone();
+        let sessions2 = sessions.clone();
         let handler: Handler = Arc::new(move |req: InferRequest| {
             let t0 = clock2.now();
             let ts0 = clock2.now_secs();
@@ -192,6 +232,7 @@ impl Gateway {
                 &bucket,
                 pressure.as_deref(),
                 &tracer,
+                sessions2.as_deref(),
             );
             let dt = (clock2.now().saturating_sub(t0)) as f64 / 1e9;
             m_latency.observe(dt);
@@ -225,14 +266,18 @@ impl Gateway {
             response
         });
 
-        let server = RpcServer::start_with_limit(
+        let server = RpcServer::start_with_opts(
             &cfg.listen,
-            cfg.worker_threads,
-            cfg.max_connections,
+            RpcServerOpts {
+                workers: cfg.worker_threads,
+                max_connections: cfg.max_connections,
+                max_inflight_per_conn: rpc.max_inflight_per_conn,
+                dispatch_threads: rpc.dispatch_threads,
+            },
             handler,
         )?;
         let addr = server.addr();
-        Ok(Gateway { server: Mutex::new(server), addr, lb })
+        Ok(Gateway { server: Mutex::new(server), addr, lb, sessions })
     }
 
     /// Bound address (resolves `:0` ephemeral listens).
@@ -248,6 +293,11 @@ impl Gateway {
     /// Open client connections.
     pub fn open_connections(&self) -> u64 {
         self.server.lock().unwrap().open_connections()
+    }
+
+    /// The backend session pool (present iff `rpc.remote_dispatch`).
+    pub fn session_pool(&self) -> Option<&SessionPool> {
+        self.sessions.as_deref()
     }
 
     /// Stop accepting and join the accept loop.
@@ -272,6 +322,7 @@ fn handle_request(
     bucket: &TokenBucket,
     pressure: Option<&PressureGate>,
     tracer: &Tracer,
+    sessions: Option<&SessionPool>,
 ) -> InferResponse {
     // 0. Health probes bypass auth/limits: they answer "is the deployment
     //    routable" (the k8s readiness probe analogue).
@@ -387,6 +438,44 @@ fn handle_request(
                 }
             },
         };
+        // Remote dispatch: when the session pool is on and the instance
+        // advertises a sonic-rpc endpoint, forward over the wire instead
+        // of the in-process submit. The request's resolved metadata rides
+        // the frame — priority class, effective trace id + sampling bit,
+        // auth token — so the backend sees exactly what this hop saw.
+        if let (Some(sess_pool), Some(backend)) = (sessions, instance.rpc_addr()) {
+            let fwd = InferRequest {
+                kind: RequestKind::Infer,
+                request_id: 0, // the session stamps its own wire id
+                trace_id: trace,
+                sampled: trace != 0,
+                token: req.token.clone(),
+                model: req.model.clone(),
+                priority: Some(priority),
+                input,
+            };
+            let hop = remote_hop(
+                sess_pool,
+                &backend,
+                &fwd,
+                router.is_some(),
+                req.request_id,
+                &instance.id,
+            );
+            match hop {
+                RemoteHop::Done(resp) => {
+                    drop(hop_stage);
+                    return resp;
+                }
+                RemoteHop::Retry { status, msg } => {
+                    input = fwd.input; // hand the tensor back for the retry
+                    last_status = status;
+                    last_msg = msg;
+                    rejected_by = Some(instance.id.clone());
+                    continue;
+                }
+            }
+        }
         match instance.submit_prio(&req.model, input, priority, trace) {
             Ok(rx) => {
                 drop(hop_stage);
@@ -415,6 +504,67 @@ fn handle_request(
         }
     }
     InferResponse::err(req.request_id, last_status, last_msg)
+}
+
+/// Outcome of one networked backend hop.
+enum RemoteHop {
+    /// A final answer for the client (success or a terminal error).
+    Done(InferResponse),
+    /// The hop failed in a way the route loop may retry elsewhere.
+    Retry { status: Status, msg: String },
+}
+
+/// Forward one routed request to `addr` over a pooled session. Transport
+/// failures (pool exhausted, dial/write failure, io timeout, dead
+/// session) come back as retryable `Overloaded` — the backend may be
+/// gone but its peers are not. Backend *responses* are final except
+/// `Overloaded` (it saturated between pick and dispatch) and a
+/// router-mode `ModelNotFound` (stale pool: the model just unloaded).
+fn remote_hop(
+    pool: &SessionPool,
+    addr: &str,
+    fwd: &InferRequest,
+    router_mode: bool,
+    client_id: u64,
+    instance_id: &str,
+) -> RemoteHop {
+    let session = match pool.checkout(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            return RemoteHop::Retry {
+                status: Status::Overloaded,
+                msg: format!("instance {instance_id}: {e:#}"),
+            }
+        }
+    };
+    let result = session.call(fwd);
+    if session.is_closed() {
+        pool.evict_closed(addr);
+    }
+    match result {
+        Ok(mut resp) => {
+            // The backend answered under the session's wire id; restore
+            // the client's id before the response leaves the gateway.
+            resp.request_id = client_id;
+            let retryable = resp.status == Status::Overloaded
+                || (resp.status == Status::ModelNotFound && router_mode);
+            if retryable {
+                RemoteHop::Retry {
+                    status: resp.status,
+                    msg: format!("instance {instance_id} rejected: {}", resp.status.name()),
+                }
+            } else {
+                RemoteHop::Done(resp)
+            }
+        }
+        Err(e) => {
+            pool.note_transport_error();
+            RemoteHop::Retry {
+                status: Status::Overloaded,
+                msg: format!("instance {instance_id} rpc hop failed: {e:#}"),
+            }
+        }
+    }
 }
 
 /// Convert an executor outcome into a wire response. Tracing spans are
@@ -1102,5 +1252,88 @@ mod tests {
         }
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(total, 30, "all requests served");
+    }
+
+    fn remote_rpc_cfg() -> RpcConfig {
+        RpcConfig {
+            remote_dispatch: true,
+            dispatch_threads: 4,
+            pool_size: 2,
+            io_timeout: Duration::from_millis(500),
+            ..Default::default()
+        }
+    }
+
+    fn start_remote_gateway(
+        inst: &Arc<Instance>,
+        clock: Clock,
+        registry: Registry,
+        rpc: &RpcConfig,
+    ) -> Gateway {
+        let endpoints = Arc::new(RwLock::new(vec![Arc::clone(inst)]));
+        Gateway::start_full(
+            &GatewayConfig::default(),
+            endpoints,
+            clock,
+            registry,
+            Tracer::disabled(),
+            None,
+            None,
+            PriorityConfig::default(),
+            rpc,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn remote_dispatch_serves_over_pooled_sessions() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("rd-0", &clock, &registry);
+        inst.serve_rpc(
+            "127.0.0.1:0",
+            crate::rpc::RpcServerOpts { workers: 2, dispatch_threads: 4, ..Default::default() },
+        )
+        .unwrap();
+        let gateway = start_remote_gateway(&inst, clock, registry, &remote_rpc_cfg());
+        // RpcClient verifies response ids against request ids, so these
+        // calls also prove the gateway rewrites the backend session's
+        // wire id back to the client's id.
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        for rows in [1usize, 4, 2] {
+            let resp = client.infer("icecube_cnn", cnn_input(rows)).unwrap();
+            assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+            assert_eq!(resp.output.shape(), &[rows, 3]);
+            assert!(resp.compute_us > 0, "latency breakdown lost on the wire");
+        }
+        let pool = gateway.session_pool().expect("remote dispatch pools sessions");
+        let backend = inst.rpc_addr().unwrap();
+        assert_eq!(pool.connects(), 1, "hops must reuse the warm session");
+        assert_eq!(pool.open_sessions(&backend), 1);
+        gateway.shutdown();
+        inst.stop();
+    }
+
+    /// Regression for the hung-backend hazard: a backend that accepts the
+    /// connection but never answers must cost one io timeout and come
+    /// back retryable (`Overloaded`), not block the gateway forever.
+    #[test]
+    fn hung_remote_backend_times_out_as_overloaded() {
+        let clock = Clock::real();
+        let registry = Registry::new();
+        let inst = sim_instance("rd-hung", &clock, &registry);
+        let silent = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let silent_addr = silent.local_addr().unwrap().to_string();
+        let _keeper = std::thread::spawn(move || silent.accept().map(|(s, _)| s));
+        inst.set_rpc_addr_for_test(&silent_addr);
+        let rpc = RpcConfig { io_timeout: Duration::from_millis(200), ..remote_rpc_cfg() };
+        let gateway = start_remote_gateway(&inst, clock, registry, &rpc);
+        let mut client = RpcClient::connect(&gateway.addr().to_string()).unwrap();
+        let t0 = std::time::Instant::now();
+        let resp = client.infer("icecube_cnn", cnn_input(1)).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "io timeout never fired");
+        assert_eq!(resp.status, Status::Overloaded, "{}", resp.error);
+        gateway.shutdown();
+        inst.stop();
     }
 }

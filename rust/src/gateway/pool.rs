@@ -1,0 +1,200 @@
+//! Session pool: warm multiplexed connections per backend address.
+//!
+//! When the gateway forwards routed requests over the network
+//! (`rpc.remote_dispatch`), dialing a fresh TCP connection per hop would
+//! dominate the request latency. The pool keeps up to `rpc.pool_size`
+//! warm [`RpcSession`]s per backend address; a routed hop checks one out
+//! (really: borrows a shared `Arc` — sessions are multiplexed, so many
+//! hops ride one session concurrently), pipelines its request, and the
+//! session's demultiplexing reader matches the response back by id.
+//!
+//! Checkout picks the least-loaded open session under the per-connection
+//! in-flight bound; when every session is saturated and the pool is at
+//! size, the hop is refused (`rpc_pool_exhausted_total`) and the gateway
+//! sheds the request as retryable `Overloaded` — the same backpressure
+//! story as the in-process submit path.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::config::RpcConfig;
+use crate::metrics::registry::{labels, Counter, Registry};
+use crate::rpc::session::{RpcSession, SessionOpts};
+
+/// Warm [`RpcSession`]s keyed by backend address.
+pub struct SessionPool {
+    cfg: RpcConfig,
+    sessions: Mutex<HashMap<String, Vec<Arc<RpcSession>>>>,
+    m_connects: Counter,
+    m_exhausted: Counter,
+    m_transport_errors: Counter,
+}
+
+impl SessionPool {
+    pub fn new(cfg: RpcConfig, registry: &Registry) -> Self {
+        SessionPool {
+            cfg,
+            sessions: Mutex::new(HashMap::new()),
+            m_connects: registry.counter("rpc_pool_connects_total", &labels(&[])),
+            m_exhausted: registry.counter("rpc_pool_exhausted_total", &labels(&[])),
+            m_transport_errors: registry.counter("rpc_transport_errors_total", &labels(&[])),
+        }
+    }
+
+    /// Borrow a session to `addr`: the least-loaded open session with
+    /// in-flight headroom, dialing a new one while the pool is under
+    /// `pool_size`. Fails when the pool is saturated (every session at
+    /// the in-flight bound) or the dial itself fails.
+    pub fn checkout(&self, addr: &str) -> Result<Arc<RpcSession>> {
+        let mut sessions = self.sessions.lock().unwrap();
+        let pool = sessions.entry(addr.to_string()).or_default();
+        // Drop sessions whose transport died; their waiters were already
+        // failed by the session's own poison path.
+        pool.retain(|s| !s.is_closed());
+
+        let cap = self.cfg.max_inflight_per_conn;
+        let best = pool
+            .iter()
+            .filter(|s| cap == 0 || s.in_flight() < cap)
+            .min_by_key(|s| s.in_flight())
+            .cloned();
+        if let Some(session) = best {
+            return Ok(session);
+        }
+        if pool.len() < self.cfg.pool_size {
+            let session = Arc::new(RpcSession::connect(
+                addr,
+                SessionOpts {
+                    connect_timeout: Some(self.cfg.io_timeout),
+                    io_timeout: Some(self.cfg.io_timeout),
+                },
+            )?);
+            self.m_connects.inc();
+            pool.push(Arc::clone(&session));
+            return Ok(session);
+        }
+        self.m_exhausted.inc();
+        bail!(
+            "session pool to {addr} exhausted: {} sessions all at the \
+             in-flight bound ({cap})",
+            pool.len()
+        );
+    }
+
+    /// Drop closed sessions for `addr` (called after a hop sees its
+    /// session die, so the next checkout redials instead of re-picking
+    /// the corpse).
+    pub fn evict_closed(&self, addr: &str) {
+        if let Some(pool) = self.sessions.lock().unwrap().get_mut(addr) {
+            pool.retain(|s| !s.is_closed());
+        }
+    }
+
+    /// Count a failed hop against `rpc_transport_errors_total`.
+    pub fn note_transport_error(&self) {
+        self.m_transport_errors.inc();
+    }
+
+    /// Open (non-closed) sessions currently pooled for `addr`.
+    pub fn open_sessions(&self, addr: &str) -> usize {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(addr)
+            .map(|p| p.iter().filter(|s| !s.is_closed()).count())
+            .unwrap_or(0)
+    }
+
+    /// Total dials performed over the pool's lifetime.
+    pub fn connects(&self) -> u64 {
+        self.m_connects.get()
+    }
+
+    /// Checkouts refused because every session was saturated.
+    pub fn exhausted(&self) -> u64 {
+        self.m_exhausted.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::codec::{InferRequest, InferResponse, RequestKind};
+    use crate::rpc::server::{Handler, RpcServer, RpcServerOpts};
+    use crate::runtime::Tensor;
+    use std::time::Duration;
+
+    fn echo_server() -> RpcServer {
+        let handler: Handler = Arc::new(|req: InferRequest| match req.kind {
+            RequestKind::Health => InferResponse::ok(req.request_id, Tensor::zeros(vec![0])),
+            RequestKind::Infer => InferResponse::ok(req.request_id, req.input),
+        });
+        RpcServer::start_with_opts(
+            "127.0.0.1:0",
+            RpcServerOpts { workers: 2, dispatch_threads: 4, ..Default::default() },
+            handler,
+        )
+        .unwrap()
+    }
+
+    fn pool_cfg(pool_size: usize, inflight: usize) -> RpcConfig {
+        RpcConfig {
+            pool_size,
+            max_inflight_per_conn: inflight,
+            io_timeout: Duration::from_secs(2),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn checkout_reuses_warm_session() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        let pool = SessionPool::new(pool_cfg(4, 0), &Registry::new());
+        let a = pool.checkout(&addr).unwrap();
+        a.infer("m", Tensor::zeros(vec![1])).unwrap();
+        let b = pool.checkout(&addr).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "idle session not reused");
+        assert_eq!(pool.connects(), 1, "reuse must not redial");
+    }
+
+    #[test]
+    fn saturated_pool_reports_exhaustion() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        // pool_size 1, in-flight cap 1: a silent backend (accepts, never
+        // answers) keeps the one slot occupied so the next checkout must
+        // report exhaustion instead of over-subscribing the session.
+        let silent = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let silent_addr = silent.local_addr().unwrap().to_string();
+        let keeper = std::thread::spawn(move || silent.accept().map(|(s, _)| s));
+        let pool = SessionPool::new(pool_cfg(1, 1), &Registry::new());
+        let s = pool.checkout(&silent_addr).unwrap();
+        let req = InferRequest::infer(0, "m", Tensor::zeros(vec![1]));
+        let _pending = s.submit(&req).unwrap(); // occupies the only slot
+        let err = pool.checkout(&silent_addr).unwrap_err();
+        assert!(format!("{err:#}").contains("exhausted"), "got: {err:#}");
+        assert_eq!(pool.exhausted(), 1);
+        // A different backend is unaffected.
+        assert!(pool.checkout(&addr).is_ok());
+        drop(keeper);
+    }
+
+    #[test]
+    fn closed_sessions_are_evicted_and_redialed() {
+        let server = echo_server();
+        let addr = server.addr().to_string();
+        let pool = SessionPool::new(pool_cfg(2, 0), &Registry::new());
+        let s = pool.checkout(&addr).unwrap();
+        s.shutdown();
+        assert!(s.is_closed());
+        pool.evict_closed(&addr);
+        assert_eq!(pool.open_sessions(&addr), 0);
+        let s2 = pool.checkout(&addr).unwrap();
+        assert!(!Arc::ptr_eq(&s, &s2));
+        s2.infer("m", Tensor::zeros(vec![1])).unwrap();
+        assert_eq!(pool.connects(), 2);
+    }
+}

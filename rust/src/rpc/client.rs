@@ -30,6 +30,9 @@ pub struct RpcClient {
     /// Priority class attached to every request (`None` lets the
     /// gateway resolve the deployment's configured default).
     pub priority: Option<Priority>,
+    /// Set once an io error may have left a partial frame on the stream;
+    /// further calls would read garbage, so they are refused.
+    desynced: bool,
 }
 
 impl RpcClient {
@@ -43,6 +46,7 @@ impl RpcClient {
             trace_id: 0,
             sampled: true,
             priority: None,
+            desynced: false,
         })
     }
 
@@ -59,7 +63,19 @@ impl RpcClient {
             trace_id: 0,
             sampled: true,
             priority: None,
+            desynced: false,
         })
+    }
+
+    /// Bound every subsequent read/write on the connection: a hung
+    /// backend surfaces as an io error after `timeout` instead of
+    /// blocking the caller forever. After a timeout the stream may hold
+    /// a partial frame, so the client refuses further calls — reconnect
+    /// (the gateway's session pool does this by evicting the session).
+    pub fn with_io_timeout(self, timeout: Duration) -> Result<Self> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        self.stream.set_write_timeout(Some(timeout))?;
+        Ok(self)
     }
 
     /// Set the auth token used for subsequent requests.
@@ -122,9 +138,26 @@ impl RpcClient {
 
     /// Send a raw request and match the response id.
     pub fn call(&mut self, req: InferRequest) -> Result<InferResponse> {
-        codec::write_frame(&mut self.stream, &codec::encode_request(&req))?;
-        let frame = codec::read_frame(&mut self.stream)?
-            .context("connection closed while awaiting response")?;
+        if self.desynced {
+            bail!("connection desynced by an earlier io timeout; reconnect");
+        }
+        // Streaming encode: the tensor payload goes out from the borrowed
+        // slice, no intermediate Vec (see codec::write_request_frame).
+        if let Err(e) = codec::write_request_frame(&mut self.stream, &req, req.request_id) {
+            self.desynced = true;
+            return Err(annotate_io_timeout(e).context("writing request"));
+        }
+        let frame = match codec::read_frame(&mut self.stream) {
+            Ok(Some(f)) => f,
+            Ok(None) => {
+                self.desynced = true;
+                bail!("connection closed while awaiting response");
+            }
+            Err(e) => {
+                self.desynced = true;
+                return Err(annotate_io_timeout(e).context("awaiting response"));
+            }
+        };
         let resp = codec::decode_response(&frame)?;
         // request_id 0 is the server's "could not even parse" escape hatch
         if resp.request_id != 0 && resp.request_id != req.request_id {
@@ -138,10 +171,30 @@ impl RpcClient {
     }
 }
 
+/// Wrap WouldBlock/TimedOut io errors with an explicit "io timeout"
+/// message so callers (and the gateway) can tell a hung backend from a
+/// protocol failure.
+fn annotate_io_timeout(e: anyhow::Error) -> anyhow::Error {
+    let timed_out = e
+        .downcast_ref::<std::io::Error>()
+        .is_some_and(|ioe| {
+            matches!(
+                ioe.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        });
+    if timed_out {
+        e.context("rpc io timeout")
+    } else {
+        e
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // Client/server integration tests live in rpc::server::tests (they
-    // need both halves); here we only test id assignment.
+    // need both halves); here we only test id assignment and timeout
+    // plumbing (which needs no server at all — just a silent listener).
     use super::*;
 
     #[test]
@@ -149,5 +202,28 @@ mod tests {
         let a = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         let b = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn io_timeout_unblocks_hung_backend_and_poisons_client() {
+        // Regression: before with_io_timeout existed, a backend that
+        // accepted the connection but never answered blocked infer()
+        // forever. Bind a listener that accepts and stays silent.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let keeper = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+
+        let mut client = RpcClient::connect(&addr)
+            .unwrap()
+            .with_io_timeout(Duration::from_millis(200))
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = client.infer("m", Tensor::zeros(vec![1])).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "timeout did not fire");
+        assert!(format!("{err:#}").contains("io timeout"), "got: {err:#}");
+        // The stream may hold a partial exchange now: refuse reuse.
+        let err2 = client.infer("m", Tensor::zeros(vec![1])).unwrap_err();
+        assert!(format!("{err2:#}").contains("desynced"), "got: {err2:#}");
+        drop(keeper);
     }
 }

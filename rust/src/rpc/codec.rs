@@ -424,6 +424,146 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// streaming encode — the zero-copy tensor path
+// ---------------------------------------------------------------------------
+//
+// `encode_request`/`encode_response` materialize the payload in a fresh
+// `Vec` (and `Tensor::to_bytes` a second one) before `write_frame` copies
+// it onto the socket. On the hot multiplexed path every hop would pay two
+// allocations plus a full copy per tensor. The `write_*_frame` functions
+// below stream the frame header and fields straight into the writer,
+// converting the borrowed f32 row data in fixed stack-buffer chunks, so a
+// routed request moves gateway -> backend with no intermediate payload
+// buffer.
+
+/// Wire size of a tensor body: ndim + dims + byte-len + f32 data.
+fn tensor_wire_len(t: &Tensor) -> usize {
+    1 + 4 * t.shape().len() + 4 + 4 * t.len()
+}
+
+/// Exact payload size [`write_request_frame`] streams (equals
+/// `encode_request(req).len()`).
+pub fn encoded_request_len(req: &InferRequest) -> usize {
+    1 + 8
+        + 8
+        + 1
+        + 1
+        + req.token.len()
+        + 1
+        + req.model.len()
+        + 1
+        + tensor_wire_len(&req.input)
+}
+
+/// Exact payload size [`write_response_frame`] streams (equals
+/// `encode_response(resp).len()`).
+pub fn encoded_response_len(resp: &InferResponse) -> usize {
+    let body = if resp.status == Status::Ok {
+        tensor_wire_len(&resp.output)
+    } else {
+        2 + resp.error.len().min(u16::MAX as usize)
+    };
+    1 + 8 + 4 + 4 + 4 + body
+}
+
+fn write_str8<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    if s.len() > u8::MAX as usize {
+        bail!("str8 overflow: {} bytes", s.len());
+    }
+    w.write_all(&[s.len() as u8])?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn write_tensor_body<W: Write>(w: &mut W, t: &Tensor) -> Result<()> {
+    let dims = t.shape();
+    if dims.len() > u8::MAX as usize {
+        bail!("tensor rank {} exceeds wire cap", dims.len());
+    }
+    w.write_all(&[dims.len() as u8])?;
+    for &d in dims {
+        w.write_all(&(d as u32).to_le_bytes())?;
+    }
+    w.write_all(&((t.len() * 4) as u32).to_le_bytes())?;
+    // Chunked conversion from the borrowed row slice: no per-hop Vec.
+    let mut buf = [0u8; 4096];
+    for chunk in t.data().chunks(buf.len() / 4) {
+        let mut n = 0;
+        for v in chunk {
+            buf[n..n + 4].copy_from_slice(&v.to_le_bytes());
+            n += 4;
+        }
+        w.write_all(&buf[..n])?;
+    }
+    Ok(())
+}
+
+/// Stream one request frame (header + payload) without materializing the
+/// payload. `request_id` overrides `req.request_id` on the wire so a
+/// multiplexed session can stamp its own id on a borrowed request without
+/// cloning it.
+pub fn write_request_frame<W: Write>(
+    w: &mut W,
+    req: &InferRequest,
+    request_id: u64,
+) -> Result<()> {
+    // Validate everything fallible before the first byte goes out: a
+    // mid-frame encode error would desync the whole multiplexed stream.
+    if req.token.len() > u8::MAX as usize || req.model.len() > u8::MAX as usize {
+        bail!("str8 overflow: token/model exceeds 255 bytes");
+    }
+    if req.input.shape().len() > u8::MAX as usize {
+        bail!("tensor rank {} exceeds wire cap", req.input.shape().len());
+    }
+    let len = encoded_request_len(req);
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds cap");
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[req.kind as u8])?;
+    w.write_all(&request_id.to_le_bytes())?;
+    w.write_all(&req.trace_id.to_le_bytes())?;
+    w.write_all(&[req.sampled as u8])?;
+    write_str8(w, &req.token)?;
+    write_str8(w, &req.model)?;
+    w.write_all(&[match req.priority {
+        None => 0,
+        Some(p) => p as u8 + 1,
+    }])?;
+    write_tensor_body(w, &req.input)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Stream one response frame (header + payload) without materializing the
+/// payload — the server-side half of the zero-copy path.
+pub fn write_response_frame<W: Write>(w: &mut W, resp: &InferResponse) -> Result<()> {
+    if resp.output.shape().len() > u8::MAX as usize {
+        bail!("tensor rank {} exceeds wire cap", resp.output.shape().len());
+    }
+    let len = encoded_response_len(resp);
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds cap");
+    }
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[resp.status as u8])?;
+    w.write_all(&resp.request_id.to_le_bytes())?;
+    w.write_all(&resp.queue_us.to_le_bytes())?;
+    w.write_all(&resp.compute_us.to_le_bytes())?;
+    w.write_all(&resp.batch_size.to_le_bytes())?;
+    if resp.status == Status::Ok {
+        write_tensor_body(w, &resp.output)?;
+    } else {
+        let bytes = resp.error.as_bytes();
+        let n = bytes.len().min(u16::MAX as usize);
+        w.write_all(&(n as u16).to_le_bytes())?;
+        w.write_all(&bytes[..n])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
 /// Read one length-prefixed frame. Returns None on clean EOF at a frame
 /// boundary.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
@@ -578,6 +718,58 @@ mod tests {
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut r = &buf[..];
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn streaming_request_frame_matches_buffered_encoding() {
+        let mut req = InferRequest::infer(7, "particlenet", sample_tensor());
+        req.token = "tok".into();
+        req.trace_id = 9;
+        req.sampled = false;
+        req.priority = Some(Priority::Critical);
+        let mut framed = Vec::new();
+        write_request_frame(&mut framed, &req, 123).unwrap();
+        let mut expected = req.clone();
+        expected.request_id = 123;
+        let payload = encode_request(&expected);
+        assert_eq!(encoded_request_len(&req), payload.len());
+        let mut want = (payload.len() as u32).to_le_bytes().to_vec();
+        want.extend_from_slice(&payload);
+        assert_eq!(framed, want);
+        // and it decodes back with the overridden id
+        let mut r = &framed[..];
+        let frame = read_frame(&mut r).unwrap().unwrap();
+        let got = decode_request(&frame).unwrap();
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn streaming_response_frame_matches_buffered_encoding() {
+        let mut ok = InferResponse::ok(42, sample_tensor());
+        ok.queue_us = 11;
+        ok.compute_us = 22;
+        ok.batch_size = 8;
+        let err = InferResponse::err(9, Status::Overloaded, "queue full");
+        for resp in [ok, err] {
+            let mut framed = Vec::new();
+            write_response_frame(&mut framed, &resp).unwrap();
+            let payload = encode_response(&resp);
+            assert_eq!(encoded_response_len(&resp), payload.len());
+            let mut want = (payload.len() as u32).to_le_bytes().to_vec();
+            want.extend_from_slice(&payload);
+            assert_eq!(framed, want, "status {:?}", resp.status);
+            let mut r = &framed[..];
+            let frame = read_frame(&mut r).unwrap().unwrap();
+            assert_eq!(decode_response(&frame).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn streaming_encode_rejects_oversized_token() {
+        let mut req = InferRequest::infer(1, "m", sample_tensor());
+        req.token = "x".repeat(300);
+        let mut out = Vec::new();
+        assert!(write_request_frame(&mut out, &req, 1).is_err());
     }
 
     #[test]

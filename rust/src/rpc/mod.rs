@@ -4,16 +4,16 @@
 //! (Fig. 1). Reimplementing HTTP/2 + protobuf from scratch is out of scope
 //! offline, so this is a compact length-prefixed binary protocol over TCP
 //! that preserves the same code path: serialization, socket backpressure,
-//! connection reuse, per-request metadata (auth token, trace id) and a
-//! server-side latency breakdown in every response (feeding the §2.3
-//! "breakdown of total request latency by source").
+//! connection reuse, per-request metadata (auth token, trace id,
+//! priority class) and a server-side latency breakdown in every response
+//! (feeding the §2.3 "breakdown of total request latency by source").
 //!
 //! Wire format (all integers little-endian):
 //!
 //! ```text
 //!     frame    := u32 payload_len ++ payload            (max 64 MiB)
 //!     request  := u8 kind ++ u64 request_id ++ u64 trace_id
-//!                 ++ str8 token ++ str8 model
+//!                 ++ u8 flags ++ str8 token ++ str8 model ++ u8 priority
 //!                 ++ u8 ndim ++ ndim*u32 dims ++ bytes32 tensor_data
 //!     response := u8 status ++ u64 request_id
 //!                 ++ u32 queue_us ++ u32 compute_us ++ u32 batch_size
@@ -23,11 +23,23 @@
 //!     str16    := u16 len ++ len bytes
 //!     bytes32  := u32 len ++ len bytes
 //! ```
-
+//!
+//! The `request_id` is the multiplexing key: a connection may carry many
+//! requests concurrently (pipelined frames), and the server answers in
+//! completion order — responses are matched back to callers by id, not by
+//! position in the stream. Two client types ride this:
+//!
+//! * [`RpcClient`] — blocking, one request in flight (id checked for
+//!   desync); the perf_analyzer model.
+//! * [`RpcSession`] — streaming multiplexed session: pipelined writes, a
+//!   demultiplexing reader, shared across threads; the gateway's session
+//!   pool keeps warm sessions per backend (see `gateway::pool`).
 pub mod client;
 pub mod codec;
 pub mod server;
+pub mod session;
 
 pub use client::RpcClient;
 pub use codec::{InferRequest, InferResponse, Priority, RequestKind, Status};
-pub use server::RpcServer;
+pub use server::{RpcServer, RpcServerOpts};
+pub use session::{PendingReply, RpcSession, SessionError, SessionOpts};

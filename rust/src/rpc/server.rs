@@ -1,15 +1,26 @@
 //! RPC server: TCP accept loop dispatching framed requests to a handler.
 //!
-//! Connection-per-thread on a bounded [`ThreadPool`]; each connection
-//! processes requests sequentially (clients that want parallelism open
-//! multiple connections, exactly like the perf_analyzer clients in the
-//! paper's test setup). The handler is synchronous: the gateway blocks the
-//! connection thread while the inference backend works, which gives
-//! natural per-connection backpressure.
+//! Two dispatch modes share the accept loop:
+//!
+//! * **Sequential** (`dispatch_threads = 0`, the legacy default for
+//!   `start`/`start_with_limit`): each connection thread reads a frame,
+//!   runs the handler inline, writes the response, repeats. One request
+//!   in flight per connection — the perf_analyzer model where clients
+//!   that want parallelism open multiple connections.
+//! * **Demultiplexed** (`dispatch_threads > 0`): the connection thread
+//!   only reads frames and hands them to a shared dispatch pool; handler
+//!   results are written back under a per-connection writer lock in
+//!   completion order, matched to callers by request id. This is what a
+//!   pipelined [`RpcSession`](super::session::RpcSession) needs to keep
+//!   many requests of one connection in flight. A per-connection in-flight
+//!   bound blocks the reader (TCP backpressure) instead of buffering
+//!   unboundedly.
 
+use std::io::BufWriter;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -18,6 +29,33 @@ use crate::util::pool::ThreadPool;
 
 /// Request handler: maps a decoded request to a response.
 pub type Handler = Arc<dyn Fn(InferRequest) -> InferResponse + Send + Sync>;
+
+/// Tuning knobs for [`RpcServer::start_with_opts`].
+#[derive(Clone, Debug)]
+pub struct RpcServerOpts {
+    /// Connection (reader) threads.
+    pub workers: usize,
+    /// Open-connection cap; beyond it new accepts are closed immediately
+    /// (Envoy's listener-level connection limiting). 0 disables.
+    pub max_connections: usize,
+    /// Per-connection pipelined-request bound; at the cap the connection
+    /// reader blocks, pushing back on the client through TCP. 0 disables.
+    pub max_inflight_per_conn: usize,
+    /// Shared handler threads for demultiplexed dispatch; 0 selects the
+    /// sequential (one request in flight per connection) mode.
+    pub dispatch_threads: usize,
+}
+
+impl Default for RpcServerOpts {
+    fn default() -> Self {
+        RpcServerOpts {
+            workers: 4,
+            max_connections: 0,
+            max_inflight_per_conn: 64,
+            dispatch_threads: 0,
+        }
+    }
+}
 
 /// Framed-TCP RPC server.
 pub struct RpcServer {
@@ -44,6 +82,15 @@ impl RpcServer {
         max_connections: usize,
         handler: Handler,
     ) -> Result<Self> {
+        Self::start_with_opts(
+            listen,
+            RpcServerOpts { workers, max_connections, ..Default::default() },
+            handler,
+        )
+    }
+
+    /// Full-control constructor; see [`RpcServerOpts`].
+    pub fn start_with_opts(listen: &str, opts: RpcServerOpts, handler: Handler) -> Result<Self> {
         let listener =
             TcpListener::bind(listen).with_context(|| format!("binding rpc listener {listen}"))?;
         let addr = listener.local_addr()?;
@@ -56,12 +103,14 @@ impl RpcServer {
         let accept_handle = std::thread::Builder::new()
             .name("rpc-accept".into())
             .spawn(move || {
-                let pool = ThreadPool::new(workers, "rpc-conn");
+                let pool = ThreadPool::new(opts.workers, "rpc-conn");
+                let dispatch = (opts.dispatch_threads > 0)
+                    .then(|| Arc::new(ThreadPool::new(opts.dispatch_threads, "rpc-dispatch")));
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
-                            if max_connections > 0
-                                && open2.load(Ordering::SeqCst) >= max_connections as u64
+                            if opts.max_connections > 0
+                                && open2.load(Ordering::SeqCst) >= opts.max_connections as u64
                             {
                                 drop(stream); // refuse: close immediately
                                 continue;
@@ -69,19 +118,27 @@ impl RpcServer {
                             let handler = Arc::clone(&handler);
                             let stop3 = Arc::clone(&stop2);
                             let open3 = Arc::clone(&open2);
+                            let dispatch = dispatch.clone();
+                            let max_inflight = opts.max_inflight_per_conn;
                             open3.fetch_add(1, Ordering::SeqCst);
                             pool.execute(move || {
-                                let _ = handle_connection(stream, handler, stop3);
+                                let _ = handle_connection(
+                                    stream,
+                                    handler,
+                                    stop3,
+                                    dispatch,
+                                    max_inflight,
+                                );
                                 open3.fetch_sub(1, Ordering::SeqCst);
                             });
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(1));
+                            std::thread::sleep(Duration::from_millis(1));
                         }
                         Err(_) => break,
                     }
                 }
-                // pool drops here, joining in-flight connections
+                // pools drop here, joining in-flight connections/handlers
             })
             .expect("spawning rpc accept thread");
 
@@ -113,22 +170,41 @@ impl Drop for RpcServer {
     }
 }
 
+/// In-flight accounting for one demultiplexed connection.
+struct Inflight {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
 fn handle_connection(
-    mut stream: TcpStream,
+    stream: TcpStream,
     handler: Handler,
     stop: Arc<AtomicBool>,
+    dispatch: Option<Arc<ThreadPool>>,
+    max_inflight: usize,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
     // Bounded read timeout so connection threads notice shutdown.
-    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut reader = stream.try_clone()?;
+    let writer = Arc::new(Mutex::new(BufWriter::new(stream)));
+    let inflight = Arc::new(Inflight { count: Mutex::new(0), cv: Condvar::new() });
+
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
         let frame = match codec::read_frame(&mut reader) {
             Ok(Some(f)) => f,
-            Ok(None) => return Ok(()), // clean EOF
+            Ok(None) => {
+                // Clean EOF: drain outstanding dispatched requests so the
+                // client's pending pipeline still gets its responses.
+                let mut n = inflight.count.lock().unwrap();
+                while *n > 0 {
+                    n = inflight.cv.wait_timeout(n, Duration::from_millis(100)).unwrap().0;
+                }
+                return Ok(());
+            }
             Err(e) => {
                 // timeouts surface as WouldBlock/TimedOut io errors: retry
                 if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
@@ -142,11 +218,51 @@ fn handle_connection(
                 return Err(e);
             }
         };
-        let response = match codec::decode_request(&frame) {
-            Ok(req) => handler(req),
-            Err(e) => InferResponse::err(0, codec::Status::BadRequest, e.to_string()),
-        };
-        codec::write_frame(&mut stream, &codec::encode_response(&response))?;
+
+        match &dispatch {
+            None => {
+                // Sequential mode: handle inline, one in flight.
+                let response = match codec::decode_request(&frame) {
+                    Ok(req) => handler(req),
+                    Err(e) => InferResponse::err(0, codec::Status::BadRequest, e.to_string()),
+                };
+                let mut w = writer.lock().unwrap();
+                codec::write_response_frame(&mut *w, &response)?;
+            }
+            Some(pool) => {
+                // Demultiplexed mode: block at the in-flight bound (TCP
+                // backpressure), then hand off to the dispatch pool.
+                {
+                    let mut n = inflight.count.lock().unwrap();
+                    while max_inflight > 0 && *n >= max_inflight {
+                        n = inflight.cv.wait_timeout(n, Duration::from_millis(100)).unwrap().0;
+                        if stop.load(Ordering::SeqCst) {
+                            return Ok(());
+                        }
+                    }
+                    *n += 1;
+                }
+                let handler = Arc::clone(&handler);
+                let writer = Arc::clone(&writer);
+                let inflight = Arc::clone(&inflight);
+                pool.execute(move || {
+                    let response = match codec::decode_request(&frame) {
+                        Ok(req) => handler(req),
+                        Err(e) => {
+                            InferResponse::err(0, codec::Status::BadRequest, e.to_string())
+                        }
+                    };
+                    {
+                        // A dead connection just drops the write; the
+                        // reader notices on its next read.
+                        let mut w = writer.lock().unwrap();
+                        let _ = codec::write_response_frame(&mut *w, &response);
+                    }
+                    *inflight.count.lock().unwrap() -= 1;
+                    inflight.cv.notify_all();
+                });
+            }
+        }
     }
 }
 
@@ -157,8 +273,8 @@ mod tests {
     use crate::rpc::codec::{RequestKind, Status};
     use crate::runtime::Tensor;
 
-    fn echo_server() -> RpcServer {
-        let handler: Handler = Arc::new(|req: InferRequest| match req.kind {
+    fn echo_handler() -> Handler {
+        Arc::new(|req: InferRequest| match req.kind {
             RequestKind::Health => InferResponse::ok(req.request_id, Tensor::zeros(vec![0])),
             RequestKind::Infer => {
                 let mut out = req.input.clone();
@@ -167,8 +283,11 @@ mod tests {
                 }
                 InferResponse::ok(req.request_id, out)
             }
-        });
-        RpcServer::start("127.0.0.1:0", 4, handler).unwrap()
+        })
+    }
+
+    fn echo_server() -> RpcServer {
+        RpcServer::start("127.0.0.1:0", 4, echo_handler()).unwrap()
     }
 
     #[test]
@@ -240,5 +359,80 @@ mod tests {
             // succeed at the TCP level on some platforms, but requests fail.
             true
         });
+    }
+
+    #[test]
+    fn demux_answers_pipelined_frames() {
+        // Raw pipelining against the demultiplexed server: write a burst
+        // of frames before reading anything, then collect responses in
+        // arrival order and match by request id.
+        let server = RpcServer::start_with_opts(
+            "127.0.0.1:0",
+            RpcServerOpts { workers: 1, dispatch_threads: 4, ..Default::default() },
+            echo_handler(),
+        )
+        .unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = stream.try_clone().unwrap();
+        for id in 1..=10u64 {
+            let req = InferRequest::infer(
+                id,
+                "m",
+                Tensor::new(vec![1], vec![id as f32]).unwrap(),
+            );
+            codec::write_request_frame(&mut stream, &req, id).unwrap();
+        }
+        let mut seen = std::collections::HashMap::new();
+        for _ in 0..10 {
+            let frame = codec::read_frame(&mut reader).unwrap().unwrap();
+            let resp = codec::decode_response(&frame).unwrap();
+            assert_eq!(resp.status, Status::Ok);
+            seen.insert(resp.request_id, resp.output.data()[0]);
+        }
+        for id in 1..=10u64 {
+            assert_eq!(seen[&id], 2.0 * id as f32, "request {id} got wrong payload");
+        }
+    }
+
+    #[test]
+    fn demux_inflight_bound_backpressures_but_serves_all() {
+        // With a bound of 2 and a slow handler, a 16-deep burst still gets
+        // 16 correct responses — the reader just absorbs them gradually.
+        let slow: Handler = Arc::new(|req: InferRequest| {
+            std::thread::sleep(Duration::from_millis(5));
+            InferResponse::ok(req.request_id, req.input)
+        });
+        let server = RpcServer::start_with_opts(
+            "127.0.0.1:0",
+            RpcServerOpts {
+                workers: 1,
+                dispatch_threads: 4,
+                max_inflight_per_conn: 2,
+                ..Default::default()
+            },
+            slow,
+        )
+        .unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = stream.try_clone().unwrap();
+        let writer = std::thread::spawn(move || {
+            for id in 1..=16u64 {
+                let req = InferRequest::infer(
+                    id,
+                    "m",
+                    Tensor::new(vec![1], vec![id as f32]).unwrap(),
+                );
+                codec::write_request_frame(&mut stream, &req, id).unwrap();
+            }
+        });
+        let mut ids = std::collections::HashSet::new();
+        for _ in 0..16 {
+            let frame = codec::read_frame(&mut reader).unwrap().unwrap();
+            let resp = codec::decode_response(&frame).unwrap();
+            assert_eq!(resp.output.data(), &[resp.request_id as f32]);
+            ids.insert(resp.request_id);
+        }
+        assert_eq!(ids.len(), 16);
+        writer.join().unwrap();
     }
 }

@@ -1,0 +1,439 @@
+//! Streaming multiplexed RPC session: many requests in flight on one
+//! TCP connection.
+//!
+//! The blocking [`RpcClient`](super::RpcClient) is one-request-per-exchange:
+//! it writes a frame, then blocks until the matching response frame comes
+//! back, so a connection is idle for a full round trip per request. Real
+//! SuperSONIC deployments speak gRPC streams through Envoy — the client
+//! keeps the pipe full and the server answers in whatever order batching
+//! finishes. [`RpcSession`] is that model for sonic-rpc:
+//!
+//! * **Pipelined writes** — [`RpcSession::submit`] stamps a session-local
+//!   request id, streams the frame (zero-copy tensor path, see
+//!   `codec::write_request_frame`), and returns a [`PendingReply`]
+//!   immediately; callers fan out as many submits as they like.
+//! * **Demultiplexing reader** — one background thread reads response
+//!   frames and matches them to waiting callers by request id, so
+//!   responses may arrive in any order (the server executes concurrently).
+//! * **Per-request deadlines** — an optional io timeout bounds how long a
+//!   caller waits; an expired request fails with [`SessionError::Timeout`]
+//!   while the session itself stays usable (the late response, if it ever
+//!   lands, is discarded).
+//!
+//! A session is `Sync`: the gateway's session pool shares one `Arc<RpcSession>`
+//! across request threads.
+
+use std::collections::HashMap;
+use std::io::BufWriter;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{self, InferRequest, InferResponse};
+use crate::runtime::Tensor;
+
+/// Distinguishable session failures — the gateway maps these onto
+/// retryable statuses (a timed-out or dead backend hop becomes
+/// `Overloaded`, letting the router retry a different replica).
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    /// No response within the configured io timeout.
+    #[error("rpc io timeout after {0:?}")]
+    Timeout(Duration),
+    /// The connection died (EOF, reset, or a poisoned write).
+    #[error("rpc session closed: {0}")]
+    Closed(String),
+}
+
+/// Tuning for a session; `Default` gives no timeouts (wait forever).
+#[derive(Clone, Debug, Default)]
+pub struct SessionOpts {
+    /// TCP connect timeout (`None` = OS default).
+    pub connect_timeout: Option<Duration>,
+    /// Per-request deadline from submit to matched response.
+    pub io_timeout: Option<Duration>,
+}
+
+struct PendingEntry {
+    tx: mpsc::Sender<Result<InferResponse, SessionError>>,
+    deadline: Option<Instant>,
+}
+
+struct SessionInner {
+    writer: Mutex<BufWriter<TcpStream>>,
+    pending: Mutex<HashMap<u64, PendingEntry>>,
+    next_id: AtomicU64,
+    closed: AtomicBool,
+    io_timeout: Option<Duration>,
+    /// Unmatched response frames seen by the reader (late responses after
+    /// a timeout, or a server desync) — exposed for tests/metrics.
+    orphans: AtomicU64,
+}
+
+impl SessionInner {
+    /// Fail every waiter and mark the session dead.
+    fn poison(&self, why: &str) {
+        self.closed.store(true, Ordering::SeqCst);
+        let mut pending = self.pending.lock().unwrap();
+        for (_, entry) in pending.drain() {
+            let _ = entry.tx.send(Err(SessionError::Closed(why.to_string())));
+        }
+    }
+}
+
+/// A multiplexed sonic-rpc session over one TCP connection.
+pub struct RpcSession {
+    inner: Arc<SessionInner>,
+    stream: TcpStream,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Handle to one in-flight request; consume with [`PendingReply::wait`].
+pub struct PendingReply {
+    rx: mpsc::Receiver<Result<InferResponse, SessionError>>,
+    request_id: u64,
+}
+
+impl PendingReply {
+    /// The wire id the session stamped on the request.
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    /// Block until the matched response arrives (or the deadline/session
+    /// failure surfaces as [`SessionError`]).
+    pub fn wait(self) -> Result<InferResponse> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e.into()),
+            // The sender half only drops with the session torn down.
+            Err(_) => Err(SessionError::Closed("session dropped".into()).into()),
+        }
+    }
+}
+
+impl RpcSession {
+    /// Connect a session to `addr` ("host:port").
+    pub fn connect(addr: &str, opts: SessionOpts) -> Result<Self> {
+        let stream = match opts.connect_timeout {
+            Some(t) => {
+                let sockaddr: std::net::SocketAddr =
+                    addr.parse().with_context(|| format!("parsing address {addr}"))?;
+                TcpStream::connect_timeout(&sockaddr, t)
+                    .with_context(|| format!("connecting session to {addr}"))?
+            }
+            None => TcpStream::connect(addr)
+                .with_context(|| format!("connecting session to {addr}"))?,
+        };
+        stream.set_nodelay(true)?;
+
+        let inner = Arc::new(SessionInner {
+            writer: Mutex::new(BufWriter::new(stream.try_clone()?)),
+            pending: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            closed: AtomicBool::new(false),
+            io_timeout: opts.io_timeout,
+            orphans: AtomicU64::new(0),
+        });
+
+        let reader_stream = stream.try_clone()?;
+        // Short poll so the reader notices shutdown and sweeps deadlines
+        // even while the socket is quiet.
+        reader_stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+        let inner2 = Arc::clone(&inner);
+        let reader = std::thread::Builder::new()
+            .name("rpc-session-reader".into())
+            .spawn(move || reader_loop(reader_stream, inner2))
+            .expect("spawning session reader");
+
+        Ok(RpcSession { inner, stream, reader: Mutex::new(Some(reader)) })
+    }
+
+    /// Pipeline one request: stamp a session-local request id, stream the
+    /// frame, and return immediately with a [`PendingReply`]. The caller
+    /// keeps ownership of `req` (and its tensor) — on a transport error
+    /// the same request can be retried on another session without a clone.
+    pub fn submit(&self, req: &InferRequest) -> Result<PendingReply> {
+        if self.is_closed() {
+            bail!(SessionError::Closed("session already closed".into()));
+        }
+        let request_id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let deadline = self.inner.io_timeout.map(|t| Instant::now() + t);
+        self.inner
+            .pending
+            .lock()
+            .unwrap()
+            .insert(request_id, PendingEntry { tx, deadline });
+
+        let write_result = {
+            let mut w = self.inner.writer.lock().unwrap();
+            codec::write_request_frame(&mut *w, req, request_id)
+        };
+        if let Err(e) = write_result {
+            self.inner.pending.lock().unwrap().remove(&request_id);
+            // A partial frame poisons the byte stream for everyone.
+            self.inner.poison(&format!("write failed: {e}"));
+            return Err(e.context("writing pipelined request"));
+        }
+        Ok(PendingReply { rx, request_id })
+    }
+
+    /// Submit and block for the matched response.
+    pub fn call(&self, req: &InferRequest) -> Result<InferResponse> {
+        self.submit(req)?.wait()
+    }
+
+    /// Convenience inference call with default metadata (no token/trace,
+    /// gateway-resolved priority). For per-request metadata build an
+    /// [`InferRequest`] and use [`RpcSession::submit`]/[`RpcSession::call`].
+    pub fn infer(&self, model: &str, input: Tensor) -> Result<InferResponse> {
+        self.call(&InferRequest::infer(0, model, input))
+    }
+
+    /// Requests currently awaiting responses.
+    pub fn in_flight(&self) -> usize {
+        self.inner.pending.lock().unwrap().len()
+    }
+
+    /// True once the transport died or the session was shut down; a
+    /// closed session fails all submits and should be discarded.
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+
+    /// Responses that matched no waiting request (late after timeout).
+    pub fn orphan_responses(&self) -> u64 {
+        self.inner.orphans.load(Ordering::SeqCst)
+    }
+
+    /// Close the transport and join the reader; pending requests fail
+    /// with [`SessionError::Closed`].
+    pub fn shutdown(&self) {
+        self.inner.poison("session shut down");
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RpcSession {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, inner: Arc<SessionInner>) {
+    loop {
+        if inner.closed.load(Ordering::SeqCst) {
+            return;
+        }
+        match codec::read_frame(&mut stream) {
+            Ok(Some(frame)) => match codec::decode_response(&frame) {
+                Ok(resp) => {
+                    let entry = inner.pending.lock().unwrap().remove(&resp.request_id);
+                    match entry {
+                        Some(e) => {
+                            let _ = e.tx.send(Ok(resp));
+                        }
+                        None => {
+                            inner.orphans.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Undecodable response: framing may still be intact,
+                    // but the caller it belonged to can never be matched.
+                    // Treat as a protocol failure and poison.
+                    inner.poison(&format!("undecodable response: {e}"));
+                    return;
+                }
+            },
+            Ok(None) => {
+                inner.poison("connection closed by peer");
+                return;
+            }
+            Err(e) => {
+                let timeout_tick = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|ioe| {
+                        matches!(
+                            ioe.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if !timeout_tick {
+                    inner.poison(&format!("read failed: {e}"));
+                    return;
+                }
+            }
+        }
+        sweep_deadlines(&inner);
+    }
+}
+
+/// Fail requests whose deadline passed; the session stays open.
+fn sweep_deadlines(inner: &SessionInner) {
+    let now = Instant::now();
+    let timeout = match inner.io_timeout {
+        Some(t) => t,
+        None => return,
+    };
+    let mut pending = inner.pending.lock().unwrap();
+    let expired: Vec<u64> = pending
+        .iter()
+        .filter(|(_, e)| e.deadline.is_some_and(|d| d <= now))
+        .map(|(&id, _)| id)
+        .collect();
+    for id in expired {
+        if let Some(e) = pending.remove(&id) {
+            let _ = e.tx.send(Err(SessionError::Timeout(timeout)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::codec::{RequestKind, Status};
+    use crate::rpc::server::{Handler, RpcServer, RpcServerOpts};
+
+    fn echo_handler() -> Handler {
+        Arc::new(|req: InferRequest| match req.kind {
+            RequestKind::Health => InferResponse::ok(req.request_id, Tensor::zeros(vec![0])),
+            RequestKind::Infer => InferResponse::ok(req.request_id, req.input),
+        })
+    }
+
+    fn demux_server(handler: Handler) -> RpcServer {
+        RpcServer::start_with_opts(
+            "127.0.0.1:0",
+            RpcServerOpts { workers: 2, dispatch_threads: 8, ..Default::default() },
+            handler,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pipelined_requests_match_their_responses() {
+        let server = demux_server(echo_handler());
+        let session =
+            RpcSession::connect(&server.addr().to_string(), SessionOpts::default()).unwrap();
+        let mut replies = Vec::new();
+        for i in 0..32 {
+            let req =
+                InferRequest::infer(0, "m", Tensor::new(vec![1], vec![i as f32]).unwrap());
+            replies.push((i, session.submit(&req).unwrap()));
+        }
+        for (i, reply) in replies {
+            let resp = reply.wait().unwrap();
+            assert_eq!(resp.status, Status::Ok);
+            assert_eq!(resp.output.data(), &[i as f32], "response matched wrong request");
+        }
+        assert_eq!(session.in_flight(), 0);
+    }
+
+    #[test]
+    fn out_of_order_responses_demultiplex() {
+        // Server delays inversely to the payload: first-submitted finishes
+        // last, so responses come back in reverse order.
+        let handler: Handler = Arc::new(|req: InferRequest| {
+            let v = req.input.data()[0];
+            std::thread::sleep(Duration::from_millis((40.0 - 10.0 * v) as u64));
+            InferResponse::ok(req.request_id, req.input)
+        });
+        let server = demux_server(handler);
+        let session =
+            RpcSession::connect(&server.addr().to_string(), SessionOpts::default()).unwrap();
+        let replies: Vec<_> = (0..4)
+            .map(|i| {
+                let req =
+                    InferRequest::infer(0, "m", Tensor::new(vec![1], vec![i as f32]).unwrap());
+                (i, session.submit(&req).unwrap())
+            })
+            .collect();
+        for (i, reply) in replies {
+            assert_eq!(reply.wait().unwrap().output.data(), &[i as f32]);
+        }
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let server = demux_server(echo_handler());
+        let session = Arc::new(
+            RpcSession::connect(&server.addr().to_string(), SessionOpts::default()).unwrap(),
+        );
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let session = Arc::clone(&session);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..16 {
+                    let v = (t * 1000 + i) as f32;
+                    let req =
+                        InferRequest::infer(0, "m", Tensor::new(vec![1], vec![v]).unwrap());
+                    let resp = session.call(&req).unwrap();
+                    assert_eq!(resp.output.data(), &[v], "cross-talk between threads");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn io_timeout_fails_request_but_session_survives() {
+        // A handler that never answers one specific request.
+        let handler: Handler = Arc::new(|req: InferRequest| {
+            if req.input.data().first() == Some(&-1.0) {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+            InferResponse::ok(req.request_id, req.input)
+        });
+        let server = demux_server(handler);
+        let session = RpcSession::connect(
+            &server.addr().to_string(),
+            SessionOpts { io_timeout: Some(Duration::from_millis(200)), ..Default::default() },
+        )
+        .unwrap();
+        let hung =
+            InferRequest::infer(0, "m", Tensor::new(vec![1], vec![-1.0]).unwrap());
+        let reply = session.submit(&hung).unwrap();
+        let err = reply.wait().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SessionError>(), Some(SessionError::Timeout(_))),
+            "expected Timeout, got {err}"
+        );
+        // Session is still usable for well-behaved requests.
+        assert!(!session.is_closed());
+        let ok = InferRequest::infer(0, "m", Tensor::new(vec![1], vec![5.0]).unwrap());
+        assert_eq!(session.call(&ok).unwrap().output.data(), &[5.0]);
+    }
+
+    #[test]
+    fn peer_close_fails_pending_and_closes_session() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let accepter = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(100));
+            drop(stream); // close without answering
+        });
+        let session = RpcSession::connect(&addr, SessionOpts::default()).unwrap();
+        let req = InferRequest::infer(0, "m", Tensor::new(vec![1], vec![1.0]).unwrap());
+        let reply = session.submit(&req).unwrap();
+        let err = reply.wait().unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SessionError>(), Some(SessionError::Closed(_))),
+            "expected Closed, got {err}"
+        );
+        assert!(session.is_closed());
+        assert!(session.submit(&req).is_err(), "closed session must refuse submits");
+        accepter.join().unwrap();
+    }
+}

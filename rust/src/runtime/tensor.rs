@@ -19,8 +19,19 @@ pub struct Tensor {
 
 impl Tensor {
     /// Build from shape + data; validates element count.
+    ///
+    /// The element count is computed with checked multiplication: shapes
+    /// arrive straight off the wire (`codec::get_tensor`), and a hostile
+    /// dim list like `[u32::MAX, u32::MAX, 2]` must come back as `Err`,
+    /// not an overflow panic in debug builds.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
+        let mut n: usize = 1;
+        for &d in &shape {
+            n = match n.checked_mul(d) {
+                Some(n) => n,
+                None => bail!("shape {:?} overflows the element count", shape),
+            };
+        }
         if n != data.len() {
             bail!(
                 "shape {:?} implies {} elements, got {}",
@@ -184,6 +195,14 @@ mod tests {
     fn new_validates_count() {
         assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn new_rejects_overflowing_shape() {
+        // Adversarial wire shapes must error, not panic on overflow.
+        let huge = u32::MAX as usize;
+        assert!(Tensor::new(vec![huge, huge, huge], vec![0.0; 4]).is_err());
+        assert!(Tensor::new(vec![usize::MAX, 2], Vec::new()).is_err());
     }
 
     #[test]

@@ -108,6 +108,12 @@ pub struct Instance {
     clock: Clock,
     util: Mutex<UtilWindow>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Remote-dispatch endpoint: the sonic-rpc server started by
+    /// [`Instance::serve_rpc`] (None when dispatch is in-process).
+    rpc: Mutex<Option<crate::rpc::RpcServer>>,
+    /// Advertised rpc address — what the gateway's session pool dials.
+    /// Kept separate from `rpc` so tests can point it at a hung listener.
+    rpc_addr: RwLock<Option<String>>,
     // metrics handles
     m_requests: Mutex<HashMap<String, crate::metrics::registry::Counter>>,
     m_rows: crate::metrics::registry::Counter,
@@ -403,6 +409,8 @@ impl Instance {
             clock: clock.clone(),
             util: Mutex::new(UtilWindow::new(opts.util_window)),
             handle: Mutex::new(None),
+            rpc: Mutex::new(None),
+            rpc_addr: RwLock::new(None),
             m_requests: Mutex::new(HashMap::new()),
             m_rows: registry.counter("inference_rows_total", &inst_labels),
             m_batches: registry.counter("inference_batches_total", &inst_labels),
@@ -837,14 +845,96 @@ impl Instance {
         self.queue.drain();
     }
 
-    /// Drain and join the executor.
+    /// Drain and join the executor (and the rpc endpoint, if serving).
     pub fn stop(&self) {
         self.drain();
+        if let Some(mut server) = self.rpc.lock().unwrap().take() {
+            server.shutdown();
+        }
+        *self.rpc_addr.write().unwrap() = None;
         if let Some(h) = self.handle.lock().unwrap().take() {
             let _ = h.join();
         }
         self.state
             .store(InstanceState::Stopped as u8, Ordering::SeqCst);
+    }
+
+    /// Expose this instance over sonic-rpc: the remote-dispatch path,
+    /// where the gateway's session pool forwards routed requests to this
+    /// endpoint over TCP instead of calling [`Instance::submit_prio`]
+    /// in-process. Per-request metadata survives the hop: the propagated
+    /// trace id (honoring the head-sampling bit) lands on the batcher's
+    /// queue/batch/compute spans, and the explicit wire priority class
+    /// picks the batcher lane (the gateway resolves priority defaults
+    /// before forwarding, so an unset class falls back to `standard`).
+    ///
+    /// Returns the bound address (resolving `:0`), which is also
+    /// advertised via [`Instance::rpc_addr`]. The endpoint stops with
+    /// [`Instance::stop`].
+    pub fn serve_rpc(
+        self: &Arc<Self>,
+        listen: &str,
+        opts: crate::rpc::RpcServerOpts,
+    ) -> anyhow::Result<std::net::SocketAddr> {
+        use crate::rpc::codec::{InferRequest, InferResponse, RequestKind};
+        // Weak handler: the server must not keep a stopped instance alive
+        // (Instance owns the server — an Arc would be a cycle).
+        let weak = Arc::downgrade(self);
+        let handler: crate::rpc::server::Handler = Arc::new(move |req: InferRequest| {
+            let Some(inst) = weak.upgrade() else {
+                return InferResponse::err(
+                    req.request_id,
+                    Status::Overloaded,
+                    "instance stopped",
+                );
+            };
+            match req.kind {
+                RequestKind::Health => {
+                    if inst.state() == InstanceState::Ready {
+                        InferResponse::ok(req.request_id, Tensor::zeros(vec![0]))
+                    } else {
+                        InferResponse::err(req.request_id, Status::Overloaded, "not ready")
+                    }
+                }
+                RequestKind::Infer => {
+                    let trace = if req.sampled { req.trace_id } else { 0 };
+                    let priority = req.priority.unwrap_or_default();
+                    match inst.submit_and_wait_prio(&req.model, req.input, priority, trace) {
+                        ExecOutcome::Ok { output, queue_us, compute_us, batch_rows } => {
+                            InferResponse {
+                                status: Status::Ok,
+                                request_id: req.request_id,
+                                queue_us,
+                                compute_us,
+                                batch_size: batch_rows,
+                                output,
+                                error: String::new(),
+                            }
+                        }
+                        ExecOutcome::Err { status, message } => {
+                            InferResponse::err(req.request_id, status, message)
+                        }
+                    }
+                }
+            }
+        });
+        let server = crate::rpc::RpcServer::start_with_opts(listen, opts, handler)?;
+        let addr = server.addr();
+        *self.rpc_addr.write().unwrap() = Some(addr.to_string());
+        *self.rpc.lock().unwrap() = Some(server);
+        Ok(addr)
+    }
+
+    /// The advertised sonic-rpc endpoint (None = in-process dispatch).
+    pub fn rpc_addr(&self) -> Option<String> {
+        self.rpc_addr.read().unwrap().clone()
+    }
+
+    /// Test hook: advertise an arbitrary rpc endpoint (e.g. a listener
+    /// that never answers, for io-timeout regressions) without starting
+    /// a server.
+    pub fn set_rpc_addr_for_test(&self, addr: &str) {
+        *self.rpc_addr.write().unwrap() = Some(addr.to_string());
     }
 
     fn policy_for(&self, model: &str) -> BatchPolicy {

@@ -11,6 +11,24 @@ use std::time::Instant;
 
 use super::stats::Summary;
 
+/// True when the bench runs in CI smoke mode (`SUPERSONIC_SMOKE=1`):
+/// benches shrink durations/iterations to a few seconds total so
+/// `make bench-smoke` can execute every registered bench as a build
+/// gate. Assertions stay on — smoke mode shortens, it does not skip.
+pub fn smoke() -> bool {
+    std::env::var("SUPERSONIC_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` normally, `short` under [`smoke`] — for sizing iteration
+/// counts, client fleets, and run durations in one place.
+pub fn smoke_scaled(full: usize, short: usize) -> usize {
+    if smoke() {
+        short
+    } else {
+        full
+    }
+}
+
 /// Timed micro/meso-benchmark runner.
 pub struct Bencher {
     warmup: usize,

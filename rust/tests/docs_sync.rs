@@ -66,6 +66,39 @@ fn every_bench_is_registered_in_cargo_and_make() {
 }
 
 #[test]
+fn every_bench_is_smoke_registered() {
+    // `make bench-smoke` is a CI gate: it runs every bench in short
+    // deterministic mode. The Makefile drives both `bench` and
+    // `bench-smoke` from one `BENCHES :=` list, so this gate checks that
+    // every bench binary on disk appears in that list — a bench missing
+    // from it would compile forever without its runtime path ever being
+    // exercised.
+    let makefile =
+        fs::read_to_string(Path::new(env!("CARGO_MANIFEST_DIR")).join("../Makefile")).unwrap();
+    let benches_list: String = makefile
+        .lines()
+        .skip_while(|l| !l.starts_with("BENCHES :="))
+        .take_while(|l| l.starts_with("BENCHES :=") || l.starts_with('\t'))
+        .collect::<Vec<_>>()
+        .join(" ");
+    assert!(
+        !benches_list.is_empty(),
+        "Makefile must define the BENCHES := list driving bench/bench-smoke"
+    );
+    assert!(
+        makefile.contains("bench-smoke:") && makefile.contains("SUPERSONIC_SMOKE=1"),
+        "Makefile must keep the bench-smoke target running with SUPERSONIC_SMOKE=1"
+    );
+    for stem in bench_stems() {
+        assert!(
+            benches_list.split_whitespace().any(|w| w == stem),
+            "rust/benches/{stem}.rs is not in the Makefile BENCHES list — \
+             it will never run under `make bench-smoke` (the CI gate)"
+        );
+    }
+}
+
+#[test]
 fn config_doc_documents_every_priority_lane() {
     // The priority classes are schema surface (values of
     // `server.priorities.*`): a lane added to the enum without a

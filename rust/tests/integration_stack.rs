@@ -12,7 +12,8 @@ use supersonic::config::{
 use supersonic::deployment::Deployment;
 use supersonic::gateway::auth;
 use supersonic::rpc::client::RpcClient;
-use supersonic::rpc::codec::Status;
+use supersonic::rpc::codec::{InferRequest, Status};
+use supersonic::rpc::{RpcSession, SessionOpts};
 use supersonic::runtime::Tensor;
 use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
 
@@ -58,6 +59,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
         model_placement: Default::default(),
         engines: Default::default(),
         observability: Default::default(),
+        rpc: Default::default(),
         time_scale: 1.0,
     }
 }
@@ -88,6 +90,83 @@ fn full_stack_serves_under_concurrency() {
     }
     let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
     assert_eq!(total, 24);
+    d.down();
+}
+
+#[test]
+fn multiplexed_session_no_cross_talk_under_concurrency() {
+    // N threads x M pipelined requests on ONE shared TCP connection
+    // through the real gateway stack, demultiplexed dispatch on. Every
+    // request carries a distinguishable payload (its row count), and the
+    // simulated executor answers [rows, 3] — so any response matched to
+    // the wrong in-flight request shows up as a shape mismatch.
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.rpc.dispatch_threads = 8;
+    cfg.rpc.max_inflight_per_conn = 256;
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+
+    let session = Arc::new(RpcSession::connect(&d.endpoint(), SessionOpts::default()).unwrap());
+    let threads = 4;
+    let per_thread = 24;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let session = Arc::clone(&session);
+        handles.push(std::thread::spawn(move || {
+            let rows_of = |j: usize| 1 + (t * per_thread + j) % 13;
+            // Pipeline: submit the whole batch, then await the replies —
+            // all M stay in flight together, interleaved with the other
+            // threads' traffic on the same socket.
+            let pending: Vec<_> = (0..per_thread)
+                .map(|j| {
+                    let req = InferRequest::infer(0, "icecube_cnn", cnn(rows_of(j)));
+                    session.submit(&req).unwrap()
+                })
+                .collect();
+            let mut mixups = 0;
+            for (j, reply) in pending.into_iter().enumerate() {
+                let resp = reply.wait().unwrap();
+                assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+                if resp.output.shape() != [rows_of(j), 3] {
+                    mixups += 1;
+                }
+            }
+            mixups
+        }));
+    }
+    let mixups: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(mixups, 0, "responses matched to the wrong in-flight request");
+    d.down();
+}
+
+#[test]
+fn remote_dispatch_stack_no_cross_talk() {
+    // Same cross-talk property with the second hop enabled: client
+    // session -> gateway -> pooled backend session -> instance RPC
+    // endpoint. Request ids are restamped at each hop; payload shapes
+    // prove the responses still come back to the right caller.
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.rpc.remote_dispatch = true;
+    cfg.rpc.dispatch_threads = 4;
+    cfg.rpc.max_inflight_per_conn = 64;
+    cfg.rpc.pool_size = 2;
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(2, Duration::from_secs(10)));
+
+    let session = RpcSession::connect(&d.endpoint(), SessionOpts::default()).unwrap();
+    let pending: Vec<_> = (0..32)
+        .map(|j| {
+            let req = InferRequest::infer(0, "icecube_cnn", cnn(1 + j % 13));
+            session.submit(&req).unwrap()
+        })
+        .collect();
+    for (j, reply) in pending.into_iter().enumerate() {
+        let resp = reply.wait().unwrap();
+        assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+        assert_eq!(resp.output.shape(), &[1 + j % 13, 3], "cross-request mixup at {j}");
+    }
+    let pool = d.gateway.session_pool().expect("remote dispatch enables the session pool");
+    assert!(pool.connects() >= 1, "gateway never dialed a backend session");
     d.down();
 }
 
