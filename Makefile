@@ -11,6 +11,7 @@
 #   make bench-backend  — the multi-backend heterogeneity ablation only
 #   make bench-trace    — the latency-breakdown / SLO-alerting bench only
 #   make bench-rpc      — the streaming-RPC acceptance bench only
+#   make bench-canary   — the canary-rollout / auto-rollback bench only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
 #                      OPERATIONS.md bench coverage, smoke registration)
@@ -23,9 +24,10 @@ ARTIFACTS := rust/artifacts
 BENCHES := batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 	gateway_overhead lb_ablation scale_100_servers trigger_ablation \
 	modelmesh_ablation per_model_autoscale warm_load_ablation \
-	priority_ablation backend_ablation latency_breakdown rpc_streaming
+	priority_ablation backend_ablation latency_breakdown rpc_streaming \
+	canary_rollout
 
-.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc docs-check
+.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc bench-canary docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -53,6 +55,9 @@ bench-trace:
 
 bench-rpc:
 	cd rust && cargo bench --bench rpc_streaming
+
+bench-canary:
+	cd rust && cargo bench --bench canary_rollout
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

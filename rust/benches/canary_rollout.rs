@@ -1,0 +1,322 @@
+//! Model-version lifecycle under traffic — the canary/rollback
+//! acceptance bench.
+//!
+//! Two arms over the same two-pod simulated fleet (CNN at v1 incumbent
+//! + v2 canary splitting the bare name, GNN as cross-traffic):
+//!
+//! * **rolling upgrade** — the canary is healthy (v2 == v1 speed) and
+//!   takes 25% of bare-name traffic; halfway through a mixed-priority
+//!   closed-loop run the operator promotes it
+//!   ([`Deployment::promote_canary`]), swapping the incumbent mid-flight.
+//!   Asserted: zero errors (a `ModelNotFound` during the swap would land
+//!   here) and zero sheds across the whole run, both versions actually
+//!   served before the promote, and the rollback evaluator stayed quiet.
+//!
+//! * **poisoned canary** — v2 is 25x slower, so every request it serves
+//!   costs >= 60 ms against the incumbent's ~5 ms. The auto-rollback
+//!   evaluator (canary p99 vs incumbent p99 over the SLO fast/slow
+//!   windows) must tear the split down on its own. Asserted: exactly one
+//!   `model_version_rollback_total` fire with the `canary_auto_rollback`
+//!   alert, zero errors, and a recovery-phase p99 *below the poisoned
+//!   version's minimum service time* — proof the bare name is back on
+//!   the incumbent within one slow window of the rollback.
+//!
+//! Run: `cargo bench --bench canary_rollout`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench canary_rollout`
+//! (short healthy-upgrade slice; the poisoned arm needs the full
+//! windowed run)
+
+use std::time::Duration;
+
+use supersonic::config::*;
+use supersonic::deployment::Deployment;
+use supersonic::metrics::registry::labels;
+use supersonic::rpc::Priority;
+use supersonic::telemetry::rollback::{ROLLBACK_ALERT, ROLLBACK_COUNTER, VERSION_REQUESTS_COUNTER};
+use supersonic::util::bench::{smoke, Csv, Table};
+use supersonic::workload::{ClientPool, MixEntry, MixedPool, Schedule, WorkloadSpec};
+
+const TIME_SCALE: f64 = 10.0;
+const ROWS: usize = 4;
+const CLIENTS: usize = 12;
+const PHASE: Duration = Duration::from_secs(20);
+/// Poisoned-canary service-time multiplier. Any request the poisoned
+/// version serves takes at least `POISON_SLOWDOWN x (base + rows x
+/// per_row)` = 25 x 2.4 ms = 60 ms, so a recovery-phase p99 below
+/// [`POISON_FLOOR`] proves the canary is out of the serving path.
+const POISON_SLOWDOWN: f64 = 25.0;
+const POISON_FLOOR: f64 = POISON_SLOWDOWN * (0.002 + ROWS as f64 * 0.0001);
+
+fn bench_cfg(name: &str, canary_slowdown: f64, weight: f64) -> DeploymentConfig {
+    let cnn_service = ServiceModelConfig {
+        base: Duration::from_millis(2),
+        per_row: Duration::from_micros(100),
+    };
+    DeploymentConfig {
+        name: name.into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![
+                ModelConfig {
+                    name: "icecube_cnn".into(),
+                    max_queue_delay: Duration::from_millis(1),
+                    preferred_batch: 8,
+                    service_model: cnn_service,
+                    versions: vec![
+                        VersionSpec { version: 1, slowdown: 1.0 },
+                        VersionSpec { version: 2, slowdown: canary_slowdown },
+                    ],
+                    incumbent: Some(1),
+                    canary: Some(CanaryConfig { version: 2, weight }),
+                    ..ModelConfig::default()
+                },
+                ModelConfig {
+                    name: "particlenet".into(),
+                    max_queue_delay: Duration::from_millis(1),
+                    preferred_batch: 8,
+                    service_model: ServiceModelConfig {
+                        base: Duration::from_millis(2),
+                        per_row: Duration::from_micros(100),
+                    },
+                    ..ModelConfig::default()
+                },
+            ],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(50),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 10.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: false,
+            max_replicas: 2,
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 1,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(50),
+            termination_grace: Duration::from_millis(50),
+            pod_failure_rate: 0.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(3600),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            // Both CNN versions (~152 KB each) plus the GNN (~87 KB) fit
+            // on every pod: the rollout is routing-, not placement-bound.
+            memory_budget_mb: 0.45,
+            ..ModelPlacementConfig::default()
+        },
+        engines: Default::default(),
+        observability: ObservabilityConfig {
+            slo_fast_window: Duration::from_secs(8),
+            slo_slow_window: Duration::from_secs(20),
+            slo_eval_interval: Duration::from_secs(1),
+            rollback_latency_factor: 2.0,
+            rollback_error_margin: 0.05,
+            rollback_min_requests: 20,
+            ..ObservabilityConfig::default()
+        },
+        rpc: Default::default(),
+        time_scale: TIME_SCALE,
+    }
+}
+
+/// Mixed-priority closed-loop traffic: critical + bulk lanes on the
+/// versioned CNN (via its bare name) and a standard GNN cross-stream.
+fn mixed_entries() -> Vec<MixEntry> {
+    vec![
+        MixEntry {
+            spec: WorkloadSpec::new("icecube_cnn", ROWS, vec![16, 16, 3])
+                .with_priority(Priority::Critical),
+            weight: 2.0,
+        },
+        MixEntry {
+            spec: WorkloadSpec::new("icecube_cnn", ROWS, vec![16, 16, 3])
+                .with_priority(Priority::Bulk),
+            weight: 2.0,
+        },
+        MixEntry {
+            spec: WorkloadSpec::new("particlenet", ROWS, vec![64, 7]),
+            weight: 1.0,
+        },
+    ]
+}
+
+fn version_requests(d: &Deployment, version: &str) -> u64 {
+    d.registry
+        .counter(VERSION_REQUESTS_COUNTER, &labels(&[("model", "icecube_cnn"), ("version", version)]))
+        .get()
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    if smoke() {
+        println!("== canary rollout (smoke): short healthy upgrade slice ==");
+        let d = Deployment::up(bench_cfg("canary-smoke", 1.0, 0.25))?;
+        anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+        let pool = MixedPool::new(&d.endpoint(), mixed_entries(), d.clock.clone(), 7);
+        let h = std::thread::spawn(move || pool.run(&Schedule::constant(4, Duration::from_secs(10))));
+        d.clock.sleep(Duration::from_secs(5));
+        anyhow::ensure!(d.promote_canary("icecube_cnn"), "promote failed");
+        let report = h.join().unwrap();
+        d.down();
+        println!("(smoke) {} ok, {} errors", report.total_ok(), report.total_errors());
+        assert!(report.total_ok() > 0, "no requests served in smoke slice");
+        assert_eq!(report.total_errors(), 0, "errors during smoke upgrade");
+        return Ok(());
+    }
+
+    println!("== canary rollout: rolling upgrade + poisoned-canary auto-rollback ==");
+    println!(
+        "2 pods, {CLIENTS} mixed-priority clients, {}s clock per phase, \
+         rollback windows 8s/20s (time_scale {TIME_SCALE}x)\n",
+        PHASE.as_secs()
+    );
+    let mut table =
+        Table::new(&["arm", "ok", "shed", "errors", "p99 early (s)", "p99 late (s)", "rollbacks"]);
+    let mut csv = Csv::new(&["arm", "ok", "shed", "errors", "p99_early_s", "p99_late_s", "rollbacks"]);
+
+    // ---- arm 1: healthy canary, promoted mid-traffic --------------------
+    let d = Deployment::up(bench_cfg("canary-upgrade", 1.0, 0.25))?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+    let rollback = d.rollback.clone().expect("canary config arms the rollback engine");
+    let pool = MixedPool::new(&d.endpoint(), mixed_entries(), d.clock.clone(), 7);
+    let half = PHASE;
+    let h = std::thread::spawn(move || {
+        pool.run(&Schedule::constant(CLIENTS, 2 * PHASE))
+    });
+    d.clock.sleep(half);
+    let v1_before = version_requests(&d, "v1");
+    let v2_before = version_requests(&d, "v2");
+    anyhow::ensure!(d.promote_canary("icecube_cnn"), "promote_canary failed mid-traffic");
+    let report = h.join().unwrap();
+
+    let router = d.router.clone().expect("mesh router");
+    let promoted_incumbent = d.repository.incumbent("icecube_cnn");
+    let split_after = router.canary_of("icecube_cnn");
+    let rollbacks_1 =
+        d.registry.counter(ROLLBACK_COUNTER, &labels(&[("model", "icecube_cnn")])).get();
+    let quiet = !rollback.rolled_back("icecube_cnn") && rollback.events().is_empty();
+    d.down();
+
+    let cnn = &report.per_model["icecube_cnn"];
+    println!(
+        "upgrade : {} ok / {} shed / {} errors; v1 {} + v2 {} requests before promote",
+        report.total_ok(),
+        report.total_shed(),
+        report.total_errors(),
+        v1_before,
+        v2_before
+    );
+    for e in &report.per_entry {
+        println!(
+            "  {:<14} {:?}: {} ok, p99 {:.4}s",
+            e.model,
+            e.priority,
+            e.ok,
+            e.latency.quantile(0.99)
+        );
+    }
+    let cells = [
+        "upgrade".to_string(),
+        report.total_ok().to_string(),
+        report.total_shed().to_string(),
+        report.total_errors().to_string(),
+        format!("{:.4}", report.overall_latency.quantile(0.99)),
+        format!("{:.4}", report.overall_latency.quantile(0.99)),
+        rollbacks_1.to_string(),
+    ];
+    table.row(&cells);
+    csv.row(&cells);
+
+    assert!(report.total_ok() > 0 && cnn.ok > 0, "no CNN traffic served");
+    assert_eq!(
+        report.total_errors(),
+        0,
+        "errors (ModelNotFound would land here) during the rolling upgrade"
+    );
+    assert_eq!(report.total_shed(), 0, "shed spike during the rolling upgrade");
+    assert!(
+        v1_before > 0 && v2_before > 0,
+        "canary split must exercise both versions before the promote \
+         (v1 {v1_before}, v2 {v2_before})"
+    );
+    assert_eq!(promoted_incumbent, Some(2), "promotion must advance the incumbent");
+    assert!(split_after.is_none(), "promotion must tear the split down");
+    assert_eq!(rollbacks_1, 0, "healthy canary must not auto-roll back");
+    assert!(quiet, "rollback evaluator fired on a healthy canary");
+
+    // ---- arm 2: poisoned canary, auto-rollback --------------------------
+    println!("\n== poisoned canary: v2 at {POISON_SLOWDOWN}x service time, 30% split ==");
+    let d = Deployment::up(bench_cfg("canary-poisoned", POISON_SLOWDOWN, 0.3))?;
+    anyhow::ensure!(d.wait_ready(2, Duration::from_secs(30)), "fleet not ready");
+    let rollback = d.rollback.clone().expect("canary config arms the rollback engine");
+
+    let spec = WorkloadSpec::new("icecube_cnn", ROWS, vec![16, 16, 3]);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    // Poison phase long enough for both burn windows to fill and fire;
+    // recovery phase is exactly one slow window.
+    let schedule = Schedule::new()
+        .phase(8, PHASE + Duration::from_secs(5))
+        .phase(8, d.cfg.observability.slo_slow_window);
+    let report = pool.run_with(&schedule, |i, c| eprintln!("-- phase {i}: {c} client(s)"));
+
+    let rollbacks_2 =
+        d.registry.counter(ROLLBACK_COUNTER, &labels(&[("model", "icecube_cnn")])).get();
+    let rolled = rollback.rolled_back("icecube_cnn");
+    let events = rollback.events();
+    let split_after = d.router.as_ref().unwrap().canary_of("icecube_cnn");
+    let alert_log = rollback.render_log();
+    d.down();
+
+    let p99_poison = report.phases[0].latency.quantile(0.99);
+    let p99_recovery = report.phases[1].latency.quantile(0.99);
+    println!(
+        "poisoned: {} ok / {} errors; p99 poison {:.4}s -> recovery {:.4}s \
+         (floor {POISON_FLOOR:.3}s); {} rollback(s)",
+        report.total_ok, report.total_errors, p99_poison, p99_recovery, rollbacks_2
+    );
+    println!("alert log:\n{}", if alert_log.is_empty() { "(empty)" } else { &alert_log });
+    let cells = [
+        "poisoned".to_string(),
+        report.total_ok.to_string(),
+        report.total_shed.to_string(),
+        report.total_errors.to_string(),
+        format!("{p99_poison:.4}"),
+        format!("{p99_recovery:.4}"),
+        rollbacks_2.to_string(),
+    ];
+    table.row(&cells);
+    csv.row(&cells);
+    println!("\n{}", table.render());
+    let path = csv.save("canary_rollout")?;
+    println!("CSV: {}", path.display());
+
+    assert!(rolled, "poisoned canary never auto-rolled back");
+    assert_eq!(rollbacks_2, 1, "exactly one rollback must fire");
+    assert_eq!(events.len(), 1, "exactly one rollback event expected");
+    assert_eq!(events[0].alert, ROLLBACK_ALERT);
+    assert!(split_after.is_none(), "rollback must clear the canary split");
+    assert_eq!(report.total_errors, 0, "rollback must not surface request errors");
+    // Every poisoned-version request costs >= POISON_FLOOR of service
+    // time alone, so a recovery p99 below it means <1% of the recovery
+    // phase touched v2: the incumbent is back within one slow window.
+    assert!(
+        p99_recovery < POISON_FLOOR,
+        "recovery p99 {p99_recovery:.4}s not below the poisoned floor \
+         {POISON_FLOOR:.3}s: incumbent not restored within one slow window"
+    );
+    assert!(
+        p99_poison > p99_recovery,
+        "poison-phase p99 ({p99_poison:.4}s) should exceed recovery p99 ({p99_recovery:.4}s)"
+    );
+    Ok(())
+}

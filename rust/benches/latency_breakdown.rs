@@ -60,6 +60,7 @@ fn bench_cfg(tracing: bool) -> DeploymentConfig {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             repository: "artifacts".into(),
             startup_delay: Duration::from_millis(100),
@@ -102,6 +103,7 @@ fn bench_cfg(tracing: bool) -> DeploymentConfig {
                 latency_p99: Duration::from_millis(100),
                 error_budget: 0.05,
             }],
+            ..ObservabilityConfig::default()
         },
         rpc: Default::default(),
         time_scale: TIME_SCALE,

@@ -45,6 +45,7 @@ fn instance(
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }],
         clock.clone(),
         registry.clone(),

@@ -64,6 +64,7 @@ fn bench_cfg() -> DeploymentConfig {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             repository: "artifacts".into(),
             startup_delay: Duration::from_millis(10),
@@ -221,6 +222,7 @@ fn phase_b() -> anyhow::Result<()> {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }],
         clock.clone(),
         registry.clone(),

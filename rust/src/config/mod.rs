@@ -11,9 +11,10 @@ pub mod schema;
 pub mod yaml;
 
 pub use schema::{
-    AutoscalerConfig, BatchMode, ClusterConfig, DeploymentConfig, EnginesConfig,
-    ExecutionMode, GatewayConfig, LbPolicy, ModelConfig, ModelPlacementConfig,
-    MonitoringConfig, ObservabilityConfig, PerModelScalingConfig, PlacementPolicy,
-    PriorityConfig, RpcConfig, ServerConfig, ServiceModelConfig, SloConfig,
+    AutoscalerConfig, BatchMode, CanaryConfig, ClusterConfig, DeploymentConfig,
+    EnginesConfig, ExecutionMode, GatewayConfig, LbPolicy, ModelConfig,
+    ModelPlacementConfig, MonitoringConfig, ObservabilityConfig, PerModelScalingConfig,
+    PlacementPolicy, PriorityConfig, RpcConfig, ServerConfig, ServiceModelConfig,
+    SloConfig, VersionSpec,
 };
 pub use yaml::Value;

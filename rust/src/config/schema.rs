@@ -179,6 +179,57 @@ pub struct ModelConfig {
     /// the model is *only* ever served by the named backends, so e.g.
     /// `backends: [onnx-sim]` pins a model to CPU-capable pods.
     pub backends: Vec<String>,
+    /// Registered versions of this model (Triton's versioned repository
+    /// entries). Empty = the model is served unversioned under its bare
+    /// name. Non-empty expands the deployment catalog to `name@vN`
+    /// entries sharing the base model's weights.
+    pub versions: Vec<VersionSpec>,
+    /// The version unversioned client traffic lands on. `None` defaults
+    /// to the first listed version.
+    pub incumbent: Option<u32>,
+    /// Active canary split: `weight` of unversioned traffic routes to
+    /// `version` instead of the incumbent.
+    pub canary: Option<CanaryConfig>,
+    /// Operator override: pin ALL unversioned traffic to this version,
+    /// disabling default/canary routing (the rollback escape hatch).
+    pub pinned_version: Option<u32>,
+}
+
+/// One registered model version (`server.models[].versions[]`). A YAML
+/// list item may be a bare version number or a map with knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VersionSpec {
+    /// Version number; served as `name@vN`.
+    pub version: u32,
+    /// Simulated service-time multiplier relative to the base model
+    /// (experiment knob: a poisoned canary is a version with a large
+    /// slowdown). 1.0 = identical to the base.
+    pub slowdown: f64,
+}
+
+impl Default for VersionSpec {
+    fn default() -> Self {
+        VersionSpec { version: 1, slowdown: 1.0 }
+    }
+}
+
+/// Canary split for one model (`server.models[].canary`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CanaryConfig {
+    /// The version receiving canary traffic (must be registered and
+    /// distinct from the incumbent).
+    pub version: u32,
+    /// Fraction of unversioned traffic routed to the canary, in (0, 1).
+    pub weight: f64,
+}
+
+impl ModelConfig {
+    /// The incumbent version: the explicit `incumbent`, else the first
+    /// listed version. `None` when the model is unversioned.
+    pub fn incumbent_version(&self) -> Option<u32> {
+        self.incumbent
+            .or_else(|| self.versions.first().map(|v| v.version))
+    }
 }
 
 /// Request-priority policy (`server.priorities`) — Triton's
@@ -607,6 +658,16 @@ pub struct ObservabilityConfig {
     pub slo_burn_threshold: f64,
     /// Per-model SLO targets; empty disables the engine.
     pub slos: Vec<SloConfig>,
+    /// Canary auto-rollback: the canary's windowed p99 may exceed the
+    /// incumbent's by at most this factor before rollback fires (both
+    /// burn windows must agree). Must be >= 1.
+    pub rollback_latency_factor: f64,
+    /// Canary auto-rollback: absolute error-rate margin the canary may
+    /// exceed the incumbent by before rollback fires.
+    pub rollback_error_margin: f64,
+    /// Minimum windowed request count (per arm) before the rollback
+    /// comparison is trusted — guards against deciding on noise.
+    pub rollback_min_requests: u64,
 }
 
 /// Whole-deployment configuration (the Helm values analogue).
@@ -641,6 +702,10 @@ impl Default for ModelConfig {
             service_model: ServiceModelConfig::default(),
             load_delay: None,
             backends: Vec::new(),
+            versions: Vec::new(),
+            incumbent: None,
+            canary: None,
+            pinned_version: None,
         }
     }
 }
@@ -742,6 +807,9 @@ impl Default for ObservabilityConfig {
             slo_eval_interval: Duration::from_secs(5),
             slo_burn_threshold: 10.0,
             slos: Vec::new(),
+            rollback_latency_factor: 2.0,
+            rollback_error_margin: 0.05,
+            rollback_min_requests: 20,
         }
     }
 }
@@ -799,10 +867,15 @@ pub mod keys {
     /// `server.models[]` entries.
     pub const SERVER_MODEL: &[&str] = &[
         "name", "max_queue_delay", "preferred_batch", "service_model", "load_delay",
-        "backends",
+        "backends", "versions", "incumbent", "canary", "pinned_version",
     ];
     /// `server.models[].service_model`.
     pub const SERVICE_MODEL: &[&str] = &["base", "per_row"];
+    /// `server.models[].versions[]` map entries (a list item may also be
+    /// a bare version number).
+    pub const VERSION: &[&str] = &["version", "slowdown"];
+    /// `server.models[].canary`.
+    pub const CANARY: &[&str] = &["version", "weight"];
     /// `gateway` section.
     pub const GATEWAY: &[&str] = &[
         "listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret",
@@ -843,6 +916,7 @@ pub mod keys {
     pub const OBSERVABILITY: &[&str] = &[
         "trace_sample_rate", "trace_capacity", "slo_fast_window", "slo_slow_window",
         "slo_eval_interval", "slo_burn_threshold", "slos",
+        "rollback_latency_factor", "rollback_error_margin", "rollback_min_requests",
     ];
     /// `observability.slos[]` entries.
     pub const OBSERVABILITY_SLO: &[&str] = &["model", "latency_p99", "error_budget"];
@@ -853,6 +927,8 @@ pub mod keys {
         ("server.priorities", PRIORITIES),
         ("server.models[]", SERVER_MODEL),
         ("server.models[].service_model", SERVICE_MODEL),
+        ("server.models[].versions[]", VERSION),
+        ("server.models[].canary", CANARY),
         ("gateway", GATEWAY),
         ("rpc", RPC),
         ("autoscaler", AUTOSCALER),
@@ -924,6 +1000,17 @@ fn get_str(v: &Value, key: &str, default: &str) -> Result<String> {
             .with_context(|| format!("'{key}' must be a string"))?
             .to_string()),
     }
+}
+
+/// A version number: a non-negative integer that fits in u32.
+fn version_number(x: &Value, what: &str) -> Result<u32> {
+    let i = x
+        .as_i64()
+        .with_context(|| format!("'{what}' must be an integer version"))?;
+    if i < 0 || i > u32::MAX as i64 {
+        bail!("'{what}' version out of range: {i}");
+    }
+    Ok(i as u32)
 }
 
 /// Durations are written as float seconds (e.g. `poll_interval: 0.5`).
@@ -1016,6 +1103,67 @@ impl DeploymentConfig {
                             })
                             .collect::<Result<_>>()?,
                     };
+                    let versions = match item.get("versions") {
+                        None => Vec::new(),
+                        Some(list) => {
+                            let entries = list
+                                .as_seq()
+                                .context("'server.models[].versions' must be a sequence")?;
+                            let mut out = Vec::new();
+                            for entry in entries {
+                                // A bare integer is shorthand for
+                                // `{version: N}` with default knobs.
+                                if entry.as_i64().is_some() {
+                                    out.push(VersionSpec {
+                                        version: version_number(
+                                            entry,
+                                            "server.models[].versions[]",
+                                        )?,
+                                        slowdown: 1.0,
+                                    });
+                                    continue;
+                                }
+                                check_keys(entry, keys::VERSION, "server.models[].versions[]")?;
+                                let v = entry.get("version").context(
+                                    "'server.models[].versions[]' map entries need 'version'",
+                                )?;
+                                out.push(VersionSpec {
+                                    version: version_number(
+                                        v,
+                                        "server.models[].versions[].version",
+                                    )?,
+                                    slowdown: get_f64(entry, "slowdown", 1.0)?,
+                                });
+                            }
+                            out
+                        }
+                    };
+                    let incumbent = match item.get("incumbent") {
+                        None => None,
+                        Some(x) => Some(version_number(x, "server.models[].incumbent")?),
+                    };
+                    let canary = match item.get("canary") {
+                        None => None,
+                        Some(c) => {
+                            check_keys(c, keys::CANARY, "server.models[].canary")?;
+                            let v = c
+                                .get("version")
+                                .context("'server.models[].canary' needs 'version'")?;
+                            let weight = c
+                                .get("weight")
+                                .context("'server.models[].canary' needs 'weight'")?
+                                .as_f64()
+                                .context("'canary.weight' must be a number")?;
+                            Some(CanaryConfig {
+                                version: version_number(v, "server.models[].canary.version")?,
+                                weight,
+                            })
+                        }
+                    };
+                    let pinned_version = match item.get("pinned_version") {
+                        None => None,
+                        Some(x) => Some(version_number(x, "server.models[].pinned_version")?),
+                    };
                     models.push(ModelConfig {
                         name: get_str(item, "name", "")?,
                         max_queue_delay: get_duration(item, "max_queue_delay", dm.max_queue_delay)?,
@@ -1023,6 +1171,10 @@ impl DeploymentConfig {
                         service_model,
                         load_delay,
                         backends,
+                        versions,
+                        incumbent,
+                        canary,
+                        pinned_version,
                     });
                 }
                 models
@@ -1258,6 +1410,21 @@ impl DeploymentConfig {
                 d.observability.slo_burn_threshold,
             )?,
             slos,
+            rollback_latency_factor: get_f64(
+                ob,
+                "rollback_latency_factor",
+                d.observability.rollback_latency_factor,
+            )?,
+            rollback_error_margin: get_f64(
+                ob,
+                "rollback_error_margin",
+                d.observability.rollback_error_margin,
+            )?,
+            rollback_min_requests: get_usize(
+                ob,
+                "rollback_min_requests",
+                d.observability.rollback_min_requests as usize,
+            )? as u64,
         };
 
         let cfg = DeploymentConfig {
@@ -1288,6 +1455,13 @@ impl DeploymentConfig {
         for m in &self.server.models {
             if m.name.is_empty() {
                 bail!("model name must not be empty");
+            }
+            if m.name.contains('@') {
+                bail!(
+                    "model name '{}' must not contain '@' (reserved for \
+                     versioned serving names like 'name@v2')",
+                    m.name
+                );
             }
             if m.preferred_batch == 0 {
                 bail!("model '{}' preferred_batch must be >= 1", m.name);
@@ -1398,6 +1572,89 @@ impl DeploymentConfig {
                      model_placement.memory_budget_mb > 0",
                     m.name
                 );
+            }
+        }
+        // Model-version lifecycle (canary routing + rollback).
+        for m in &self.server.models {
+            let mut versions = std::collections::BTreeSet::new();
+            for v in &m.versions {
+                if !versions.insert(v.version) {
+                    bail!("model '{}' lists version {} twice", m.name, v.version);
+                }
+                if v.slowdown <= 0.0 {
+                    bail!(
+                        "model '{}' version {} slowdown must be > 0",
+                        m.name,
+                        v.version
+                    );
+                }
+            }
+            if m.versions.is_empty() {
+                if m.incumbent.is_some() || m.canary.is_some() || m.pinned_version.is_some() {
+                    bail!(
+                        "model '{}' sets incumbent/canary/pinned_version without \
+                         listing any versions",
+                        m.name
+                    );
+                }
+                continue;
+            }
+            if !self.model_placement.mesh_enabled() {
+                bail!(
+                    "model '{}' lists versions, which requires model-aware routing \
+                     (make-before-break swaps need per-version placement): set \
+                     model_placement.policy: dynamic or a \
+                     model_placement.memory_budget_mb > 0",
+                    m.name
+                );
+            }
+            let incumbent = m.incumbent.unwrap_or(m.versions[0].version);
+            if !versions.contains(&incumbent) {
+                bail!(
+                    "model '{}' incumbent version {} is not in its versions list",
+                    m.name,
+                    incumbent
+                );
+            }
+            if let Some(c) = &m.canary {
+                if !versions.contains(&c.version) {
+                    bail!(
+                        "model '{}' canary version {} is not in its versions list",
+                        m.name,
+                        c.version
+                    );
+                }
+                if c.version == incumbent {
+                    bail!(
+                        "model '{}' canary version {} is the incumbent — a canary \
+                         must be a different version",
+                        m.name,
+                        c.version
+                    );
+                }
+                if !(c.weight > 0.0 && c.weight < 1.0) {
+                    bail!(
+                        "model '{}' canary weight must be in (0, 1), got {}",
+                        m.name,
+                        c.weight
+                    );
+                }
+                if m.pinned_version.is_some() {
+                    bail!(
+                        "model '{}' sets both canary and pinned_version; a pin \
+                         disables canary routing — choose one",
+                        m.name
+                    );
+                }
+            }
+            if let Some(p) = m.pinned_version {
+                if !versions.contains(&p) {
+                    bail!(
+                        "model '{}' pinned_version {} is not in its versions list",
+                        m.name,
+                        p
+                    );
+                }
             }
         }
         if eg.cpu_replicas > 0 && !self.model_placement.mesh_enabled() {
@@ -1600,6 +1857,21 @@ impl DeploymentConfig {
         }
         if ob.slo_fast_window.is_zero() {
             bail!("observability.slo_fast_window must be > 0");
+        }
+        if ob.rollback_latency_factor < 1.0 {
+            bail!(
+                "observability.rollback_latency_factor must be >= 1 (a factor \
+                 below 1 would roll back a canary faster than the incumbent)"
+            );
+        }
+        if ob.rollback_error_margin < 0.0 {
+            bail!("observability.rollback_error_margin must be >= 0");
+        }
+        if ob.rollback_min_requests == 0 {
+            bail!(
+                "observability.rollback_min_requests must be >= 1 (the rollback \
+                 comparison needs at least one request per arm)"
+            );
         }
         if ob.slo_slow_window < ob.slo_fast_window {
             bail!(
@@ -2348,5 +2620,119 @@ observability:
         assert!(
             DeploymentConfig::from_yaml("observability:\n  trace_sample_rte: 0.5\n").is_err()
         );
+    }
+
+    #[test]
+    fn model_versions_parse() {
+        let text = r#"
+server:
+  models:
+    - name: particlenet
+      versions:
+        - 1
+        - version: 2
+          slowdown: 3.5
+      incumbent: 1
+      canary:
+        version: 2
+        weight: 0.1
+model_placement:
+  policy: dynamic
+observability:
+  rollback_latency_factor: 4
+  rollback_error_margin: 0.1
+  rollback_min_requests: 5
+"#;
+        let cfg = DeploymentConfig::from_yaml(text).unwrap();
+        let m = &cfg.server.models[0];
+        assert_eq!(
+            m.versions,
+            vec![
+                VersionSpec { version: 1, slowdown: 1.0 },
+                VersionSpec { version: 2, slowdown: 3.5 },
+            ]
+        );
+        assert_eq!(m.incumbent_version(), Some(1));
+        assert_eq!(m.canary, Some(CanaryConfig { version: 2, weight: 0.1 }));
+        assert_eq!(m.pinned_version, None);
+        let ob = &cfg.observability;
+        assert_eq!(ob.rollback_latency_factor, 4.0);
+        assert_eq!(ob.rollback_error_margin, 0.1);
+        assert_eq!(ob.rollback_min_requests, 5);
+        // implicit incumbent = first listed version
+        let cfg = DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      versions: [3, 4]\n\
+             model_placement:\n  policy: dynamic\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.server.models[0].incumbent_version(), Some(3));
+        // unversioned models stay unversioned
+        let cfg = DeploymentConfig::from_yaml("server:\n  models:\n    - name: particlenet\n")
+            .unwrap();
+        assert_eq!(cfg.server.models[0].incumbent_version(), None);
+    }
+
+    #[test]
+    fn model_versions_bad_values_rejected() {
+        let versioned = |tail: &str| {
+            format!(
+                "server:\n  models:\n    - name: particlenet\n      versions: [1, 2]\n{tail}\
+                 model_placement:\n  policy: dynamic\n"
+            )
+        };
+        // '@' is reserved for versioned serving names
+        assert!(
+            DeploymentConfig::from_yaml("server:\n  models:\n    - name: pn@v1\n").is_err()
+        );
+        // versions require the modelmesh (make-before-break placement)
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      versions: [1, 2]\n"
+        )
+        .is_err());
+        // duplicate version numbers
+        assert!(DeploymentConfig::from_yaml(&versioned("")
+            .replace("[1, 2]", "[1, 1]"))
+        .is_err());
+        // incumbent outside the versions list
+        assert!(DeploymentConfig::from_yaml(&versioned("      incumbent: 9\n")).is_err());
+        // canary must name a registered, non-incumbent version
+        assert!(DeploymentConfig::from_yaml(&versioned(
+            "      canary:\n        version: 9\n        weight: 0.5\n"
+        ))
+        .is_err());
+        assert!(DeploymentConfig::from_yaml(&versioned(
+            "      canary:\n        version: 1\n        weight: 0.5\n"
+        ))
+        .is_err());
+        // canary weight must be in (0, 1)
+        assert!(DeploymentConfig::from_yaml(&versioned(
+            "      canary:\n        version: 2\n        weight: 1.5\n"
+        ))
+        .is_err());
+        // canary + pin are mutually exclusive
+        assert!(DeploymentConfig::from_yaml(&versioned(
+            "      canary:\n        version: 2\n        weight: 0.5\n      pinned_version: 1\n"
+        ))
+        .is_err());
+        // pin outside the versions list
+        assert!(DeploymentConfig::from_yaml(&versioned("      pinned_version: 7\n")).is_err());
+        // slowdown must be positive
+        assert!(DeploymentConfig::from_yaml(&versioned("")
+            .replace("[1, 2]", "[{version: 1, slowdown: 0}]"))
+        .is_err());
+        // version knobs without versions
+        assert!(DeploymentConfig::from_yaml(
+            "server:\n  models:\n    - name: particlenet\n      incumbent: 1\n"
+        )
+        .is_err());
+        // rollback knobs are validated
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  rollback_latency_factor: 0.5\n"
+        )
+        .is_err());
+        assert!(DeploymentConfig::from_yaml(
+            "observability:\n  rollback_min_requests: 0\n"
+        )
+        .is_err());
     }
 }

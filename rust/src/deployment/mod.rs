@@ -25,7 +25,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::autoscaler::{Autoscaler, DemandProbe, PerModelScaler};
-use crate::config::{DeploymentConfig, ExecutionMode, PerModelScalingConfig};
+use crate::config::{DeploymentConfig, ExecutionMode, ModelConfig, PerModelScalingConfig};
 use crate::engine::{AcceleratorClass, BackendRegistry, EngineCatalog};
 use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
@@ -34,7 +34,10 @@ use crate::metrics::{MetricStore, Registry, Scraper};
 use crate::modelmesh::{initial_placement, ModelRouter, PlacementController};
 use crate::orchestrator::{Cluster, InstanceFactory};
 use crate::runtime::PjrtRuntime;
-use crate::server::{Instance, ModelRepository};
+use crate::server::{split_version, versioned_name, Instance, ModelRepository};
+use crate::telemetry::rollback::{
+    CanaryProbe, CanarySnapshot, RollbackAction, RollbackEngine, RollbackTask,
+};
 use crate::telemetry::slo::{SloEngine, SloTask};
 use crate::telemetry::Tracer;
 use crate::util::clock::Clock;
@@ -59,8 +62,12 @@ pub struct Deployment {
     pub placement: Option<Arc<PlacementController>>,
     /// SLO burn-rate engine, when `observability.slos` is non-empty.
     pub slo: Option<Arc<SloEngine>>,
+    /// Canary auto-rollback evaluator, when any model configures a
+    /// `canary` split.
+    pub rollback: Option<Arc<RollbackEngine>>,
     metrics_http: Option<MetricsServer>,
     _slo_task: Option<SloTask>,
+    _rollback_task: Option<RollbackTask>,
     _scraper: Scraper,
 }
 
@@ -124,6 +131,63 @@ impl Deployment {
             }
         });
 
+        // Versioned rollouts: each configured `versions:` entry becomes
+        // its own servable config `base@vN` sharing the base weights (the
+        // repository registers the same entry under the versioned key),
+        // and the incumbent version is recorded so boot profiles resolve
+        // to it. A version's `slowdown` scales the simulated service
+        // model — how experiments ship a deliberately slower canary.
+        let mut serving_models: Vec<ModelConfig> = Vec::new();
+        for m in &cfg.server.models {
+            if m.versions.is_empty() {
+                serving_models.push(m.clone());
+                continue;
+            }
+            for spec in &m.versions {
+                repository.register_version(&m.name, spec.version)?;
+                let mut vm = m.clone();
+                vm.name = versioned_name(&m.name, spec.version);
+                vm.versions = Vec::new();
+                vm.incumbent = None;
+                vm.canary = None;
+                vm.pinned_version = None;
+                if (spec.slowdown - 1.0).abs() > f64::EPSILON {
+                    let scale = |d: Duration| Duration::from_secs_f64(d.as_secs_f64() * spec.slowdown);
+                    vm.service_model.base = scale(vm.service_model.base);
+                    vm.service_model.per_row = scale(vm.service_model.per_row);
+                }
+                serving_models.push(vm);
+            }
+            if let Some(v) = m.incumbent_version() {
+                repository.set_incumbent(&m.name, v);
+            }
+        }
+        let serving_names: Vec<String> =
+            serving_models.iter().map(|m| m.name.clone()).collect();
+        // The versions a rollout actively serves (incumbent + canary +
+        // pin); other listed versions stay registered but boot cold.
+        let active_serving: std::collections::BTreeSet<String> = cfg
+            .server
+            .models
+            .iter()
+            .flat_map(|m| {
+                if m.versions.is_empty() {
+                    return vec![m.name.clone()];
+                }
+                let mut active: Vec<String> = Vec::new();
+                if let Some(v) = m.incumbent_version() {
+                    active.push(versioned_name(&m.name, v));
+                }
+                if let Some(c) = &m.canary {
+                    active.push(versioned_name(&m.name, c.version));
+                }
+                if let Some(p) = m.pinned_version {
+                    active.push(versioned_name(&m.name, p));
+                }
+                active
+            })
+            .collect();
+
         // Multi-backend engine layer: the deployment's backend set and
         // each model's backend preference list. A model whose
         // preferences match no pod class in this fleet can never be
@@ -183,7 +247,7 @@ impl Deployment {
 
         // Modelmesh: per-model routing + placement state, when enabled.
         let mesh_catalog: Option<Vec<(String, u64)>> = if cfg.model_placement.mesh_enabled() {
-            let catalog: Vec<(String, u64)> = model_names
+            let catalog: Vec<(String, u64)> = serving_names
                 .iter()
                 .map(|n| {
                     let entry = repository.get(n).expect("model just loaded");
@@ -207,19 +271,41 @@ impl Deployment {
         };
         let router = mesh_catalog.as_ref().map(|_| {
             Arc::new(ModelRouter::new(
-                &model_names,
+                &serving_names,
                 cfg.gateway.lb_policy,
                 cfg.gateway.max_inflight_per_instance,
                 &registry,
                 0x4D455348, // "MESH"
             ))
         });
+        // Version routing state: the bare name defaults to the incumbent,
+        // a configured canary installs the weighted split, and a pin
+        // overrides both (the operator's manual escape hatch).
+        if let Some(r) = &router {
+            for m in &cfg.server.models {
+                let Some(inc) = m.incumbent_version() else { continue };
+                let inc_name = versioned_name(&m.name, inc);
+                r.set_version_default(&m.name, &inc_name);
+                if let Some(c) = &m.canary {
+                    r.set_canary(
+                        &m.name,
+                        &inc_name,
+                        &versioned_name(&m.name, c.version),
+                        c.weight,
+                        0x43414E52, // "CANR"
+                    );
+                }
+                if let Some(p) = m.pinned_version {
+                    r.pin_version(&m.name, &versioned_name(&m.name, p));
+                }
+            }
+        }
 
         // Resolve each served model's effective warm-load delay once
         // (per-model override falling back to model_placement.load_delay)
         // so the instances and the placement controller price the same
         // load.
-        let mut resolved_models = cfg.server.models.clone();
+        let mut resolved_models = serving_models;
         for m in &mut resolved_models {
             m.load_delay = Some(cfg.effective_load_delay(m));
         }
@@ -275,8 +361,15 @@ impl Deployment {
                     match profile {
                         // Boot profile (per-model autoscaling): the pod
                         // was spawned for one model and advertises only
-                        // it. Placement may load more onto it later.
-                        Some(model) => inst.set_loaded_models(&[model.to_string()]),
+                        // it. Placement may load more onto it later. The
+                        // profile names the *base* model; the repository
+                        // resolves it to the current incumbent version,
+                        // so pods booting after a promotion come up on
+                        // the new version without a respawn (the
+                        // make-before-break boot-profile retag).
+                        Some(model) => {
+                            inst.set_loaded_models(&[repo.serving_name(model)])
+                        }
                         // The rotation index is a plain counter, so a pod
                         // replacing a failed one may boot with a different
                         // slot than the pod it replaces. That is fine: the
@@ -287,9 +380,13 @@ impl Deployment {
                             // Rotate only over the models this pod's
                             // backend set can actually serve, so a CPU
                             // pod's boot placement is not wasted on
-                            // GPU-only models.
+                            // GPU-only models — and only over versions a
+                            // rollout actively serves (incumbent, canary,
+                            // pin): spare versions stay registered but
+                            // boot cold.
                             let hostable: Vec<(String, u64)> = catalog
                                 .iter()
+                                .filter(|(m, _)| active_serving.contains(m))
                                 .filter(|(m, _)| {
                                     engine_catalog
                                         .backends_for(m)
@@ -400,17 +497,47 @@ impl Deployment {
         // toward demand.
         let placement = match (&mesh_catalog, &router) {
             (Some(catalog), Some(router)) => {
+                // Versioned entries inherit the base model's backend
+                // preferences in the planner's compat map (the engine
+                // catalog already resolves versioned lookups that way).
+                let mut compat = engine_catalog.compat_map();
+                for (name, _) in catalog {
+                    let (base, v) = split_version(name);
+                    if v.is_some() && !compat.contains_key(name) {
+                        if let Some(prefs) = compat.get(base).cloned() {
+                            compat.insert(name.clone(), prefs);
+                        }
+                    }
+                }
                 let controller = PlacementController::new(
                     cfg.model_placement.clone(),
                     catalog.clone(),
                     load_costs.clone(),
-                    engine_catalog.compat_map(),
+                    compat,
                     cfg.engines.onnx_slowdown,
                     Arc::clone(router),
                     store.clone(),
                     clock.clone(),
                     &registry,
                 );
+                // Spare versions (registered but neither incumbent,
+                // canary nor pin) retire toward the incumbent from boot:
+                // the planner never grows them and drains any stray copy.
+                for m in &cfg.server.models {
+                    let Some(inc) = m.incumbent_version() else { continue };
+                    for spec in &m.versions {
+                        let v = spec.version;
+                        let active = v == inc
+                            || m.canary.as_ref().is_some_and(|c| c.version == v)
+                            || m.pinned_version == Some(v);
+                        if !active {
+                            controller.set_successor(
+                                &versioned_name(&m.name, v),
+                                &versioned_name(&m.name, inc),
+                            );
+                        }
+                    }
+                }
                 let hooked = Arc::clone(&controller);
                 cluster.set_reconcile_hook(Arc::new(move |eps| hooked.reconcile(eps)));
                 Some(controller)
@@ -471,6 +598,71 @@ impl Deployment {
             (Some(engine), Some(task))
         };
 
+        // Canary auto-rollback: armed when any model configures a canary
+        // split. The probe reads the router's live split set (promotions
+        // and manual clears are picked up on the next evaluation); the
+        // action tears the split down and retires the canary through the
+        // placement controller's make-before-break path.
+        let any_canary = cfg.server.models.iter().any(|m| m.canary.is_some());
+        let (rollback, rollback_task) = match (&router, any_canary) {
+            (Some(r), true) => {
+                let bases: Vec<String> = cfg
+                    .server
+                    .models
+                    .iter()
+                    .filter(|m| m.canary.is_some())
+                    .map(|m| m.name.clone())
+                    .collect();
+                let probe: CanaryProbe = {
+                    let router = Arc::clone(r);
+                    Box::new(move || {
+                        bases
+                            .iter()
+                            .filter_map(|b| {
+                                router.canary_of(b).map(|(incumbent, canary, _)| {
+                                    CanarySnapshot {
+                                        base: b.clone(),
+                                        incumbent,
+                                        canary,
+                                    }
+                                })
+                            })
+                            .collect()
+                    })
+                };
+                let action: RollbackAction = {
+                    let router = Arc::clone(r);
+                    let placement = placement.clone();
+                    Box::new(move |snap: &CanarySnapshot| {
+                        log::warn!(
+                            "canary auto-rollback: '{}' reverts to '{}'",
+                            snap.base,
+                            snap.incumbent
+                        );
+                        router.clear_canary(&snap.base);
+                        if let Some(p) = &placement {
+                            p.set_successor(&snap.canary, &snap.incumbent);
+                        }
+                    })
+                };
+                let engine = Arc::new(RollbackEngine::new(
+                    cfg.observability.clone(),
+                    registry.clone(),
+                    store.clone(),
+                    clock.clone(),
+                    probe,
+                    action,
+                ));
+                let task = RollbackTask::start(
+                    Arc::clone(&engine),
+                    clock.clone(),
+                    cfg.observability.slo_eval_interval,
+                );
+                (Some(engine), Some(task))
+            }
+            _ => (None, None),
+        };
+
         let metrics_http = if cfg.monitoring.listen.is_empty() {
             None
         } else {
@@ -511,10 +703,43 @@ impl Deployment {
             router,
             placement,
             slo,
+            rollback,
             metrics_http,
             _slo_task: slo_task,
+            _rollback_task: rollback_task,
             _scraper: scraper,
         })
+    }
+
+    /// Promote `base`'s live canary to incumbent: the bare name routes to
+    /// the new version, the split is torn down, and the old incumbent
+    /// retires through the placement controller's make-before-break path
+    /// (its last warm copy stays pinned until the new incumbent is warm
+    /// somewhere). Returns `false` when no canary split is live for
+    /// `base`.
+    pub fn promote_canary(&self, base: &str) -> bool {
+        let Some(router) = &self.router else {
+            return false;
+        };
+        let Some((incumbent, canary, _)) = router.canary_of(base) else {
+            return false;
+        };
+        let (_, Some(v)) = split_version(&canary) else {
+            return false;
+        };
+        self.repository.set_incumbent(base, v);
+        router.set_version_default(base, &canary);
+        router.clear_canary(base);
+        if let Some(p) = &self.placement {
+            p.set_successor(&incumbent, &canary);
+        }
+        if let Some(rb) = &self.rollback {
+            // A promoted split is finished: re-arm so the *next* canary
+            // for this base can auto-roll back too.
+            rb.rearm(base);
+        }
+        log::info!("canary promoted: '{base}' now serves '{canary}'");
+        true
     }
 
     /// Load a config file and boot.
@@ -574,8 +799,7 @@ mod tests {
                         base: Duration::from_millis(2),
                         per_row: Duration::from_micros(100),
                     },
-                    load_delay: None,
-                    backends: Vec::new(),
+                    ..ModelConfig::default()
                 }],
                 repository: "artifacts".into(),
                 startup_delay: Duration::from_millis(10),
@@ -722,6 +946,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             },
             ModelConfig {
                 name: "particlenet".into(),
@@ -733,6 +958,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             },
         ];
         // Fits either model alone (icecube_cnn ~152 KB, particlenet
@@ -819,6 +1045,50 @@ mod tests {
         assert_eq!(r1.output.shape(), &[1, 3]);
         let r2 = client.infer("particlenet", Tensor::zeros(vec![1, 64, 7])).unwrap();
         assert_eq!(r2.status, Status::Ok, "{}", r2.error);
+        d.down();
+    }
+
+    fn canary_cfg() -> DeploymentConfig {
+        use crate::config::{CanaryConfig, VersionSpec};
+        let mut cfg = two_model_mesh_cfg();
+        // Both CNN versions (~152 KB each) plus the GNN (~87 KB) fit on
+        // one pod together.
+        cfg.model_placement.memory_budget_mb = 0.45;
+        cfg.server.models[0].versions = vec![
+            VersionSpec { version: 1, slowdown: 1.0 },
+            VersionSpec { version: 2, slowdown: 1.0 },
+        ];
+        cfg.server.models[0].canary = Some(CanaryConfig { version: 2, weight: 0.5 });
+        cfg
+    }
+
+    #[test]
+    fn canary_deployment_splits_then_promotes() {
+        let d = Deployment::up(canary_cfg()).unwrap();
+        assert!(d.wait_ready(2, Duration::from_secs(5)));
+        assert!(d.rollback.is_some(), "canary config must arm the rollback engine");
+        std::thread::sleep(Duration::from_millis(300)); // one reconcile pass
+        let router = Arc::clone(d.router.as_ref().unwrap());
+        assert!(router.replicas("icecube_cnn@v1") >= 1);
+        assert!(router.replicas("icecube_cnn@v2") >= 1);
+        assert_eq!(d.repository.incumbent("icecube_cnn"), Some(1));
+        // The bare name serves through the live 50/50 split.
+        let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+        for _ in 0..32 {
+            let r = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+            assert_eq!(r.status, Status::Ok, "{}", r.error);
+            assert_eq!(r.output.shape(), &[1, 3]);
+        }
+        // Promotion tears the split down, advances the incumbent, and
+        // keeps the bare name serving (now on v2).
+        assert!(d.promote_canary("icecube_cnn"));
+        assert!(router.canary_of("icecube_cnn").is_none());
+        assert_eq!(d.repository.incumbent("icecube_cnn"), Some(2));
+        assert!(!d.promote_canary("icecube_cnn"), "no live split left to promote");
+        for _ in 0..8 {
+            let r = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+            assert_eq!(r.status, Status::Ok, "{}", r.error);
+        }
         d.down();
     }
 

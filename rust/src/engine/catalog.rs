@@ -118,10 +118,19 @@ impl EngineCatalog {
 
     /// Preference-ordered backend names for one model.
     pub fn backends_for(&self, model: &str) -> &[String] {
-        self.prefs
-            .get(model)
-            .map(|p| p.as_slice())
-            .unwrap_or(&self.default_prefs)
+        if let Some(p) = self.prefs.get(model) {
+            return p;
+        }
+        // A versioned name not cataloged explicitly inherits its base
+        // model's preferences (versions share weights and hence backend
+        // constraints) before the catalog-wide default applies.
+        let (base, version) = crate::server::split_version(model);
+        if version.is_some() {
+            if let Some(p) = self.prefs.get(base) {
+                return p;
+            }
+        }
+        &self.default_prefs
     }
 
     /// May `backend` serve `model` at all?

@@ -167,6 +167,7 @@ pub fn fig_config(
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             repository: PathBuf::from("artifacts"),
             startup_delay: Duration::from_secs(10),
@@ -252,6 +253,7 @@ pub fn modelmesh_config(
         service_model: service,
         load_delay: None,
         backends: Vec::new(),
+        ..ModelConfig::default()
     };
     DeploymentConfig {
         name: format!("mesh-{}", policy.name()),
@@ -438,6 +440,7 @@ pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
         },
         load_delay: None,
         backends: vec!["pjrt".into(), "onnx-sim".into()],
+        ..ModelConfig::default()
     };
     let cold = ModelConfig {
         name: "icecube_cnn".into(),
@@ -450,6 +453,7 @@ pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
         },
         load_delay: None,
         backends: vec!["onnx-sim".into()],
+        ..ModelConfig::default()
     };
     DeploymentConfig {
         name: if cpu_pods == 0 {
@@ -556,6 +560,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             repository: PathBuf::from("artifacts"),
             startup_delay: Duration::from_millis(500),

@@ -36,7 +36,7 @@ use crate::rpc::codec::{InferRequest, InferResponse, Priority, RequestKind, Stat
 use crate::rpc::server::{Handler, RpcServer, RpcServerOpts};
 use crate::server::batcher::ExecOutcome;
 use crate::server::Instance;
-use crate::telemetry::{slo, Span, StageRecorder, Tracer, ROOT_SPAN};
+use crate::telemetry::{rollback, slo, Span, StageRecorder, Tracer, ROOT_SPAN};
 use crate::util::clock::Clock;
 
 use auth::Authenticator;
@@ -194,6 +194,36 @@ impl Gateway {
                 registry.counter(slo::MODEL_ERRORS_COUNTER, &labels(&[("model", model)]))
             }
         };
+        // Per-(model, version) feed for the canary rollback evaluator:
+        // stamped only when version routing rewrote the request, labeled
+        // with the base name + the concrete version it landed on.
+        let m_version_requests = {
+            let registry = registry.clone();
+            move |model: &str, version: &str| {
+                registry.counter(
+                    rollback::VERSION_REQUESTS_COUNTER,
+                    &labels(&[("model", model), ("version", version)]),
+                )
+            }
+        };
+        let m_version_latency = {
+            let registry = registry.clone();
+            move |model: &str, version: &str| {
+                registry.histogram(
+                    rollback::VERSION_LATENCY_HIST,
+                    &labels(&[("model", model), ("version", version)]),
+                )
+            }
+        };
+        let m_version_errors = {
+            let registry = registry.clone();
+            move |model: &str, version: &str| {
+                registry.counter(
+                    rollback::VERSION_ERRORS_COUNTER,
+                    &labels(&[("model", model), ("version", version)]),
+                )
+            }
+        };
         let stage_recorder = StageRecorder::new(&registry);
         let m_shed = registry.counter("gateway_shed_total", &labels(&[]));
         let m_shed_priority: [_; Priority::COUNT] = [
@@ -221,6 +251,20 @@ impl Gateway {
             let trace = if req.sampled { req.trace_id } else { 0 };
             let is_infer = req.kind == RequestKind::Infer;
             let model = req.model.clone();
+            // Version routing: rewrite an unversioned infer request to
+            // the concrete versioned pool it should hit (pinned ->
+            // canary split -> incumbent, with warm-replica fallback).
+            // The SLO feed below keeps the client-facing base name.
+            let mut req = req;
+            if is_infer {
+                if let Some(r) = router.as_deref() {
+                    let routed = r.resolve(&req.model);
+                    if routed != req.model {
+                        req.model = routed;
+                    }
+                }
+            }
+            let routed_model = req.model.clone();
             let response = handle_request(
                 req,
                 trace,
@@ -243,6 +287,15 @@ impl Gateway {
                     m_model_latency(&model).observe(dt);
                 } else {
                     m_model_errors(&model).inc();
+                }
+                if let (base, Some(v)) = crate::server::split_version(&routed_model) {
+                    let version = format!("v{v}");
+                    m_version_requests(base, &version).inc();
+                    if response.status == Status::Ok {
+                        m_version_latency(base, &version).observe(dt);
+                    } else {
+                        m_version_errors(base, &version).inc();
+                    }
                 }
             }
             if matches!(
@@ -620,6 +673,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             clock.clone(),
             registry.clone(),
@@ -768,6 +822,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             clock.clone(),
             registry.clone(),
@@ -827,6 +882,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             clock.clone(),
             registry.clone(),
@@ -1053,6 +1109,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             clock.clone(),
             registry.clone(),
@@ -1163,6 +1220,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             })
             .collect();
         let mk = |id: &str| {

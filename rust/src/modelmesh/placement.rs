@@ -42,7 +42,8 @@ use crate::metrics::registry::{labels, Counter, Gauge, Registry};
 use crate::metrics::MetricStore;
 use crate::modelmesh::router::ModelRouter;
 use crate::rpc::codec::Priority;
-use crate::server::Instance;
+use crate::server::{split_version, Instance};
+use crate::telemetry::rollback::VERSION_REPLICAS_GAUGE;
 use crate::util::clock::Clock;
 
 /// Demand weight per priority class, indexed by [`Priority::index`]: a
@@ -142,6 +143,12 @@ pub struct PlacementCore {
     fallback_slowdown: f64,
     /// (instance id, model) -> clock-seconds of the last move.
     cooldowns: BTreeMap<(String, String), f64>,
+    /// Retiring model -> successor model (make-before-break). A retiring
+    /// model has no replica floor of its own and attracts no growth, but
+    /// its *last warm copy* is pinned until the successor is warm
+    /// somewhere — a version swap never passes through a state where no
+    /// version of the name can serve.
+    successors: BTreeMap<String, String>,
 }
 
 impl PlacementCore {
@@ -179,6 +186,33 @@ impl PlacementCore {
             horizon,
             fallback_slowdown: 1.0,
             cooldowns: BTreeMap::new(),
+            successors: BTreeMap::new(),
+        }
+    }
+
+    /// Mark `retiring` as superseded by `successor`: its replica floor
+    /// drops to zero and the planner drains it — but never unloads its
+    /// last warm copy while no warm copy of `successor` exists (the
+    /// make-before-break half of a version swap).
+    pub fn set_successor(&mut self, retiring: &str, successor: &str) {
+        self.successors
+            .insert(retiring.to_string(), successor.to_string());
+    }
+
+    /// Undo [`PlacementCore::set_successor`] (a rolled-back canary may be
+    /// re-promoted later). Returns whether a mapping existed.
+    pub fn clear_successor(&mut self, retiring: &str) -> bool {
+        self.successors.remove(retiring).is_some()
+    }
+
+    /// Replica floor for `model`: the configured minimum, except retiring
+    /// models which owe nothing — `removal_safe` still pins their last
+    /// warm copy until the successor serves.
+    fn floor_for(&self, model: &str) -> usize {
+        if self.successors.contains_key(model) {
+            0
+        } else {
+            self.cfg.min_replicas_per_model
         }
     }
 
@@ -287,6 +321,12 @@ impl PlacementCore {
     /// model below its floors? Present count must stay at the floor, and
     /// — when the copy is warm — so must the *warm* count: the last warm
     /// copies are pinned while a replacement is still mid-load.
+    ///
+    /// Retiring models (see [`PlacementCore::set_successor`]) use the
+    /// make-before-break rule instead: a mid-load copy is always
+    /// cancelable, and a warm copy may go only while another warm copy of
+    /// the model *or of its successor* remains — the swap never strands
+    /// the name with nothing warm.
     fn removal_safe(
         &self,
         view: &InstanceView,
@@ -294,6 +334,13 @@ impl PlacementCore {
         present: &BTreeMap<String, usize>,
         warm: &BTreeMap<String, usize>,
     ) -> bool {
+        if let Some(succ) = self.successors.get(model) {
+            if !view.loaded.contains(model) {
+                return true;
+            }
+            return warm[model] > 1
+                || warm.get(succ.as_str()).copied().unwrap_or(0) >= 1;
+        }
         let min = self.cfg.min_replicas_per_model;
         if present[model] <= min {
             return false;
@@ -323,7 +370,7 @@ impl PlacementCore {
         let budget = self.cfg.budget_bytes();
         let catalog = self.catalog.clone();
         for (model, mem) in &catalog {
-            while present[model] < self.cfg.min_replicas_per_model {
+            while present[model] < self.floor_for(model) {
                 // Preferred: a backend-compatible instance with free
                 // memory — on the model's preferred backend when one
                 // exists, falling back otherwise.
@@ -447,12 +494,16 @@ impl PlacementCore {
 
         // Phase 1 — shrink cold models with surplus replicas. Runs first
         // so the freed memory is available to hot loads in the same pass.
+        // Retiring models drain regardless of demand (retirement is a
+        // version decision, not a load signal) — `removal_safe` keeps
+        // the make-before-break pin on their last warm copy.
         for (model, mem) in &catalog {
             let r = present[model];
-            if r <= self.cfg.min_replicas_per_model {
+            if r <= self.floor_for(model) {
                 continue;
             }
-            if per_replica(model, r) >= self.cfg.unload_threshold {
+            let retiring = self.successors.contains_key(model);
+            if !retiring && per_replica(model, r) >= self.cfg.unload_threshold {
                 continue;
             }
             // Victim: prefer canceling a mid-load copy (it serves
@@ -487,6 +538,7 @@ impl PlacementCore {
         // a move must be worth its load time.
         let mut hot: Vec<(String, u64, f64)> = catalog
             .iter()
+            .filter(|(m, _)| !self.successors.contains_key(m))
             .filter_map(|(m, mem)| {
                 let load = per_replica(m, present[m]) * self.load_discount(m);
                 (load > self.cfg.load_threshold).then(|| (m.clone(), *mem, load))
@@ -535,6 +587,10 @@ struct ModelHandles {
     /// Warm replicas served per backend (`model_backend_replicas`),
     /// keyed by backend name.
     backend_replicas: BTreeMap<&'static str, Gauge>,
+    /// For versioned catalog entries (`base@vN`): the same replica count
+    /// re-exported as `model_version_replicas{model="base", version="vN"}`
+    /// — the per-version dashboard view of a rollout.
+    version_replicas: Option<Gauge>,
 }
 
 /// The running placement controller.
@@ -587,6 +643,13 @@ impl PlacementController {
                         )
                     })
                     .collect();
+                let version_replicas = match split_version(m) {
+                    (base, Some(v)) => Some(registry.gauge(
+                        VERSION_REPLICAS_GAUGE,
+                        &labels(&[("model", base), ("version", &format!("v{v}"))]),
+                    )),
+                    _ => None,
+                };
                 (
                     m.clone(),
                     ModelHandles {
@@ -595,6 +658,7 @@ impl PlacementController {
                         replicas: registry.gauge("model_replicas", &l),
                         loading: registry.gauge("model_replicas_loading", &l),
                         backend_replicas,
+                        version_replicas,
                     },
                 )
             })
@@ -625,7 +689,24 @@ impl PlacementController {
     /// API — the per-model autoscaler consumes the same signal the
     /// placement planner does, so pod scaling and model placement pull
     /// in the same direction.
+    /// Version-blindness guard: asked about a bare name, the signal
+    /// aggregates over every catalog version of it (`base@vN`), so the
+    /// pod autoscaler sees the canary's backlog too — a rollout's demand
+    /// does not vanish from the scaler when it splits across versions.
     pub fn demand_for(&self, model: &str, now: f64) -> f64 {
+        let names: Vec<&str> = self
+            .catalog
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .filter(|n| *n == model || split_version(n).0 == model)
+            .collect();
+        if names.is_empty() {
+            return self.demand_one(model, now);
+        }
+        names.iter().map(|n| self.demand_one(n, now)).sum()
+    }
+
+    fn demand_one(&self, model: &str, now: f64) -> f64 {
         let series = format!("routed_requests_total{{model=\"{model}\"}}");
         let rate = self
             .store
@@ -687,7 +768,11 @@ impl PlacementController {
         // non-atomic reads that could tear across a warm transition.
         let served: Vec<_> = endpoints.iter().map(|i| i.warm_backends()).collect();
         for (m, h) in &self.per_model {
-            h.replicas.set(self.router.replicas(m) as f64);
+            let warm = self.router.replicas(m) as f64;
+            h.replicas.set(warm);
+            if let Some(g) = &h.version_replicas {
+                g.set(warm);
+            }
             h.loading
                 .set(endpoints.iter().filter(|i| i.is_loading(m)).count() as f64);
             // Warm replicas per serving backend (the heterogeneity
@@ -700,6 +785,21 @@ impl PlacementController {
                 gauge.set(n as f64);
             }
         }
+    }
+
+    /// Begin a make-before-break swap: `retiring` drains (floor zero, no
+    /// growth) but its last warm copy stays pinned until `successor` is
+    /// warm somewhere. Called on canary promotion (old incumbent retires)
+    /// and on auto-rollback (the canary retires).
+    pub fn set_successor(&self, retiring: &str, successor: &str) {
+        log::info!("modelmesh: retiring '{retiring}' in favor of '{successor}'");
+        self.core.lock().unwrap().set_successor(retiring, successor);
+    }
+
+    /// Undo [`PlacementController::set_successor`]; returns whether a
+    /// mapping existed.
+    pub fn clear_successor(&self, retiring: &str) -> bool {
+        self.core.lock().unwrap().clear_successor(retiring)
     }
 
     fn apply(&self, endpoints: &[Arc<Instance>], moves: Vec<Move>) {
@@ -1189,8 +1289,7 @@ mod tests {
                     base: Duration::from_secs(10),
                     per_row: Duration::from_micros(1),
                 },
-                load_delay: None,
-                backends: Vec::new(),
+                ..ModelConfig::default()
             })
             .collect();
         // 50x dilation keeps the stuck 10 s (clock) service — and the
@@ -1258,6 +1357,127 @@ mod tests {
         // Standard keeps the legacy unweighted semantics.
         assert_eq!(standard, 10.0);
         assert_eq!(priority_weighted_backlog([0, 0, 0]), 0.0);
+    }
+
+    /// Two versions of one model, 600 KB each, plus the unrelated cold.
+    fn versioned_catalog() -> Vec<(String, u64)> {
+        vec![
+            ("m@v1".to_string(), 600_000),
+            ("m@v2".to_string(), 600_000),
+            ("cold".to_string(), 600_000),
+        ]
+    }
+
+    #[test]
+    fn retiring_version_drains_only_after_successor_is_warm() {
+        let mut c = cfg();
+        c.memory_budget_mb = 0.0;
+        let mut core = PlacementCore::new(c, versioned_catalog());
+        core.set_successor("m@v1", "m@v2");
+        // Successor still mid-load: the retiring version's last warm copy
+        // is pinned even though its floor is zero and it drains on sight.
+        let views = vec![
+            view_loading("i0", &["m@v1"], &[]),
+            view_loading("i1", &["cold"], &["m@v2"]),
+        ];
+        let moves = core.plan(0.0, &views, &BTreeMap::new());
+        assert!(
+            !moves
+                .iter()
+                .any(|m| matches!(m, Move::Unload { model, .. } if model == "m@v1")),
+            "unloaded the last warm copy before the successor was warm: {moves:?}"
+        );
+        // Successor warm somewhere: the retiring copy goes, demand or not.
+        let views = vec![
+            view_loading("i0", &["m@v1"], &[]),
+            view_loading("i1", &["cold", "m@v2"], &[]),
+        ];
+        let moves = core.plan(10.0, &views, &BTreeMap::new());
+        assert!(
+            moves
+                .iter()
+                .any(|m| matches!(m, Move::Unload { instance, model }
+                    if instance == "i0" && model == "m@v1")),
+            "retiring version did not drain once the successor was warm: {moves:?}"
+        );
+        // And the drained version is never repaired back or grown again.
+        let gone = vec![view("i0", &["cold"]), view("i1", &["cold", "m@v2"])];
+        let demand: BTreeMap<String, f64> =
+            [("m@v1".to_string(), 10_000.0)].into_iter().collect();
+        let moves = core.plan(20.0, &gone, &demand);
+        assert!(
+            !moves
+                .iter()
+                .any(|m| matches!(m, Move::Load { model, .. } if model == "m@v1")),
+            "retired version re-placed: {moves:?}"
+        );
+        // clear_successor restores the normal floor: the repair pass
+        // re-hosts it again (a rolled-back canary can come back).
+        assert!(core.clear_successor("m@v1"));
+        assert!(!core.clear_successor("m@v1"));
+        let moves = core.plan(30.0, &gone, &BTreeMap::new());
+        assert!(
+            moves
+                .iter()
+                .any(|m| matches!(m, Move::Load { model, .. } if model == "m@v1")),
+            "cleared successor did not restore the floor: {moves:?}"
+        );
+    }
+
+    #[test]
+    fn repair_may_evict_retiring_version_with_warm_successor() {
+        // Full fleet; cold lost its replica. The only safe victim is the
+        // retiring m@v1 — its successor m@v2 is warm elsewhere, so even
+        // its *last* warm copy is fair game for the repair eviction.
+        let mut core = PlacementCore::new(cfg(), versioned_catalog());
+        core.set_successor("m@v1", "m@v2");
+        let views = vec![view("i0", &["m@v1"]), view("i1", &["m@v2"])];
+        let moves = core.plan(0.0, &views, &BTreeMap::new());
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Unload { model, .. } if model == "m@v1")),
+            "{moves:?}"
+        );
+        assert!(
+            moves.iter().any(|m| matches!(m, Move::Load { model, .. } if model == "cold")),
+            "{moves:?}"
+        );
+    }
+
+    #[test]
+    fn demand_for_aggregates_versions_of_a_name() {
+        use crate::config::LbPolicy;
+
+        let registry = Registry::new();
+        let names = ["m@v1".to_string(), "m@v2".to_string()];
+        let router =
+            Arc::new(ModelRouter::new(&names, LbPolicy::RoundRobin, 0, &registry, 7));
+        let store = MetricStore::new(Duration::from_secs(60));
+        // Cumulative routed-request counters for both versions: 10/s on
+        // the incumbent, 2/s on the canary over the 10 s demand window.
+        for (name, rate) in [("m@v1", 10.0), ("m@v2", 2.0)] {
+            let series = format!("routed_requests_total{{model=\"{name}\"}}");
+            store.push(&series, 0.0, 0.0);
+            store.push(&series, 10.0, rate * 10.0);
+        }
+        let catalog: Vec<(String, u64)> =
+            names.iter().map(|n| (n.clone(), 1)).collect();
+        let controller = PlacementController::new(
+            cfg(),
+            catalog,
+            BTreeMap::new(),
+            BTreeMap::new(),
+            1.0,
+            router,
+            store,
+            Clock::real(),
+            &registry,
+        );
+        // Per-version signals stay exact...
+        assert!((controller.demand_for("m@v1", 10.0) - 10.0).abs() < 1e-9);
+        assert!((controller.demand_for("m@v2", 10.0) - 2.0).abs() < 1e-9);
+        // ...and the bare name the pod scaler asks about sees their sum,
+        // not zero (the version-blindness fix).
+        assert!((controller.demand_for("m", 10.0) - 12.0).abs() < 1e-9);
     }
 
     #[test]

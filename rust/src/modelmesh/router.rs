@@ -10,13 +10,14 @@
 //! `Overloaded` — exactly what the single-balancer gateway reports today.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::config::LbPolicy;
 use crate::gateway::lb::LoadBalancer;
 use crate::metrics::registry::{labels, Counter, Registry};
 use crate::rpc::codec::Status;
-use crate::server::{Instance, InstanceState};
+use crate::server::{split_version, Instance, InstanceState};
 
 struct Pool {
     /// Live endpoint list, shared with this model's balancer.
@@ -28,9 +29,37 @@ struct Pool {
     unserved: Counter,
 }
 
+/// An active canary split for one base model name: `weight` of traffic
+/// goes to `canary`, the rest to `incumbent` (both versioned names).
+struct CanaryRoute {
+    incumbent: String,
+    canary: String,
+    weight: f64,
+    /// Per-request sequence hashed into the split decision so the
+    /// traffic fraction is deterministic for a fixed seed yet free of
+    /// the phase-locking a plain round-robin modulus would exhibit.
+    seq: AtomicU64,
+    seed: u64,
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// The model-aware routing table.
 pub struct ModelRouter {
     pools: BTreeMap<String, Pool>,
+    /// Base name -> incumbent versioned name (where unversioned client
+    /// requests land when no canary/pin applies).
+    defaults: RwLock<BTreeMap<String, String>>,
+    /// Base name -> active canary split.
+    canary: RwLock<BTreeMap<String, CanaryRoute>>,
+    /// Base name -> operator-pinned versioned name (overrides both the
+    /// default and any canary split — the config escape hatch).
+    pinned: RwLock<BTreeMap<String, String>>,
 }
 
 impl ModelRouter {
@@ -64,12 +93,113 @@ impl ModelRouter {
                 },
             );
         }
-        ModelRouter { pools }
+        ModelRouter {
+            pools,
+            defaults: RwLock::new(BTreeMap::new()),
+            canary: RwLock::new(BTreeMap::new()),
+            pinned: RwLock::new(BTreeMap::new()),
+        }
     }
 
     /// Models in the catalog.
     pub fn models(&self) -> Vec<String> {
         self.pools.keys().cloned().collect()
+    }
+
+    /// Route unversioned requests for `base` to `versioned` (the
+    /// incumbent). Called at boot and again on canary promotion.
+    pub fn set_version_default(&self, base: &str, versioned: &str) {
+        self.defaults
+            .write()
+            .unwrap()
+            .insert(base.to_string(), versioned.to_string());
+    }
+
+    /// Install a canary split for `base`: `weight` of traffic to
+    /// `canary`, the rest to `incumbent`. Replaces any existing split.
+    pub fn set_canary(&self, base: &str, incumbent: &str, canary: &str, weight: f64, seed: u64) {
+        self.canary.write().unwrap().insert(
+            base.to_string(),
+            CanaryRoute {
+                incumbent: incumbent.to_string(),
+                canary: canary.to_string(),
+                weight,
+                seq: AtomicU64::new(0),
+                seed,
+            },
+        );
+    }
+
+    /// Tear down the canary split for `base` (rollback or promotion).
+    /// Returns false if no split was active.
+    pub fn clear_canary(&self, base: &str) -> bool {
+        self.canary.write().unwrap().remove(base).is_some()
+    }
+
+    /// The active split for `base` as (incumbent, canary, weight).
+    pub fn canary_of(&self, base: &str) -> Option<(String, String, f64)> {
+        self.canary
+            .read()
+            .unwrap()
+            .get(base)
+            .map(|r| (r.incumbent.clone(), r.canary.clone(), r.weight))
+    }
+
+    /// Pin all traffic for `base` to `versioned`, overriding the
+    /// default and any canary split (operator override from config).
+    pub fn pin_version(&self, base: &str, versioned: &str) {
+        self.pinned
+            .write()
+            .unwrap()
+            .insert(base.to_string(), versioned.to_string());
+    }
+
+    /// Resolve a client-facing model name to the concrete versioned
+    /// pool it should hit. Versioned requests pass through untouched;
+    /// unversioned requests walk pinned -> canary split -> incumbent
+    /// default, falling past any choice whose pool currently has no
+    /// warm replica to the next one — and, last, to *any* version of
+    /// the base with a live pool — so a mid-swap rollout never turns
+    /// into `ModelNotFound` while some version is warm somewhere.
+    pub fn resolve(&self, name: &str) -> String {
+        if split_version(name).1.is_some() {
+            return name.to_string();
+        }
+        if let Some(p) = self.pinned.read().unwrap().get(name) {
+            return p.clone();
+        }
+        if let Some(route) = self.canary.read().unwrap().get(name) {
+            let n = route.seq.fetch_add(1, Ordering::Relaxed);
+            let frac = (splitmix64(n ^ route.seed) >> 11) as f64 / (1u64 << 53) as f64;
+            let (first, second) = if frac < route.weight {
+                (&route.canary, &route.incumbent)
+            } else {
+                (&route.incumbent, &route.canary)
+            };
+            if self.replicas(first) > 0 {
+                return first.clone();
+            }
+            if self.replicas(second) > 0 {
+                return second.clone();
+            }
+        }
+        let default = self.defaults.read().unwrap().get(name).cloned();
+        if let Some(d) = &default {
+            if self.replicas(d) > 0 {
+                return d.clone();
+            }
+            // Default drained mid-swap: any warm version of the base
+            // keeps serving rather than shedding.
+            for (pool_name, pool) in &self.pools {
+                if split_version(pool_name).0 == name
+                    && !pool.endpoints.read().unwrap().is_empty()
+                {
+                    return pool_name.clone();
+                }
+            }
+            return d.clone();
+        }
+        name.to_string()
     }
 
     /// Pick an instance for one request to `model`. `Err(ModelNotFound)`
@@ -232,6 +362,7 @@ mod tests {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             })
             .collect();
         let inst = Instance::start_with_mode(
@@ -342,6 +473,7 @@ mod tests {
                 },
                 load_delay: Some(delay),
                 backends: Vec::new(),
+                ..ModelConfig::default()
             })
             .collect();
         let inst = Instance::start_with_mode(
@@ -378,6 +510,55 @@ mod tests {
         assert_eq!(r.replicas("icecube_cnn"), 1);
         assert_eq!(r.pick("icecube_cnn").unwrap().id, "rw0");
         a.stop();
+    }
+
+    #[test]
+    fn resolve_walks_version_chain() {
+        REPO.register_version("icecube_cnn", 1).unwrap();
+        REPO.register_version("icecube_cnn", 2).unwrap();
+        let mut cat = catalog();
+        cat.push("icecube_cnn@v1".into());
+        cat.push("icecube_cnn@v2".into());
+        let r = ModelRouter::new(&cat, LbPolicy::RoundRobin, 0, &Registry::new(), 7);
+        // unversioned name with no default passes through untouched
+        assert_eq!(r.resolve("particlenet"), "particlenet");
+        // versioned requests are never rewritten
+        assert_eq!(r.resolve("icecube_cnn@v2"), "icecube_cnn@v2");
+        r.set_version_default("icecube_cnn", "icecube_cnn@v1");
+        // nothing warm anywhere: resolve still lands on the default so
+        // the request sheds Overloaded, not ModelNotFound
+        assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v1");
+        let a = instance("rv-a");
+        a.set_loaded_models(&["icecube_cnn@v1".to_string()]);
+        r.sync(&[Arc::clone(&a)]);
+        assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v1");
+        // canary installed but not yet warm: every request falls back
+        // to the incumbent — no shed spike while the canary loads
+        r.set_canary("icecube_cnn", "icecube_cnn@v1", "icecube_cnn@v2", 0.25, 42);
+        for _ in 0..64 {
+            assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v1");
+        }
+        // canary warm: the split tracks the configured weight
+        let b = instance("rv-b");
+        b.set_loaded_models(&["icecube_cnn@v2".to_string()]);
+        r.sync(&[Arc::clone(&a), Arc::clone(&b)]);
+        let hits = (0..4000)
+            .filter(|_| r.resolve("icecube_cnn") == "icecube_cnn@v2")
+            .count();
+        assert!((800..1200).contains(&hits), "canary fraction {hits}/4000");
+        // incumbent drained mid-swap: the split keeps serving from the
+        // canary side instead of shedding
+        r.sync(&[Arc::clone(&b)]);
+        assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v2");
+        assert!(r.clear_canary("icecube_cnn"));
+        assert!(!r.clear_canary("icecube_cnn"));
+        // default drained but v2 warm: fall to any warm version of the base
+        assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v2");
+        // pin overrides everything
+        r.pin_version("icecube_cnn", "icecube_cnn@v1");
+        assert_eq!(r.resolve("icecube_cnn"), "icecube_cnn@v1");
+        a.stop();
+        b.stop();
     }
 
     #[test]

@@ -650,7 +650,9 @@ impl Instance {
         let Some((backend, rank)) = self.catalog.select(model, &self.backends) else {
             return false;
         };
-        let base = self.load_delays.get(model).copied().unwrap_or(Duration::ZERO);
+        let base = Self::model_cfg(&self.load_delays, model)
+            .copied()
+            .unwrap_or(Duration::ZERO);
         let delay = base.mul_f64(backend.load_multiplier());
         let warm_at = self.clock.now() + delay.as_nanos() as Nanos;
         let added = {
@@ -937,8 +939,19 @@ impl Instance {
         *self.rpc_addr.write().unwrap() = Some(addr.to_string());
     }
 
+    /// Per-model config lookup with version fallback: a versioned name
+    /// (`base@vN`) not configured explicitly inherits the base model's
+    /// entry — runtime-registered versions behave like their base until
+    /// the deployment expands dedicated configs for them.
+    fn model_cfg<'a, V>(map: &'a HashMap<String, V>, model: &str) -> Option<&'a V> {
+        map.get(model).or_else(|| {
+            let (base, version) = crate::server::split_version(model);
+            version.and_then(|_| map.get(base))
+        })
+    }
+
     fn policy_for(&self, model: &str) -> BatchPolicy {
-        let mut policy = self.policies.get(model).cloned().unwrap_or_default();
+        let mut policy = Self::model_cfg(&self.policies, model).cloned().unwrap_or_default();
         // Cap batches at the model's largest compiled engine batch: folding
         // further only chains engine calls serially (see BatchPolicy docs).
         if let Some(entry) = self.repo.get(model) {
@@ -1105,7 +1118,9 @@ impl Instance {
             };
             let result = {
                 let inputs: Vec<&Tensor> = batch.iter().map(|p| &p.input).collect();
-                let service = self.service_models.get(&model).copied().unwrap_or_default();
+                let service = Self::model_cfg(&self.service_models, &model)
+                    .copied()
+                    .unwrap_or_default();
                 backend.execute(&ExecCtx {
                     entry: entry.as_ref(),
                     inputs: &inputs,
@@ -1252,6 +1267,7 @@ mod tests {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_mode(
             id,
@@ -1522,6 +1538,7 @@ mod tests {
             },
             load_delay: None,
             backends: vec!["onnx-sim".into()],
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_opts(
             "be4",
@@ -1630,6 +1647,7 @@ mod tests {
             },
             load_delay: Some(delay),
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_opts(
             id,
@@ -1705,6 +1723,7 @@ mod tests {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_opts(
             "prio0",
@@ -1769,6 +1788,7 @@ mod tests {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_mode(
             "sim0",
@@ -1815,6 +1835,7 @@ mod tests {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         // 20x dilation: the 200ms (clock) service takes ~10ms real.
         let inst = Instance::start_with_mode(
@@ -1856,6 +1877,7 @@ mod tests {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         }];
         let inst = Instance::start_with_opts(
             "tspan0",

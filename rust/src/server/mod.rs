@@ -16,4 +16,4 @@ pub mod instance;
 pub mod repository;
 
 pub use instance::{Instance, InstanceOptions, InstanceState};
-pub use repository::{ModelEntry, ModelRepository};
+pub use repository::{split_version, versioned_name, ModelEntry, ModelRepository};

@@ -16,7 +16,7 @@
 //! the serialized executor, not the compiled code — same as Triton pods
 //! sharing a model store.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -24,6 +24,32 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::yaml;
 use crate::runtime::{EngineSet, PjrtRuntime};
+
+/// Canonical serving name of one model version: `base@vN`.
+pub fn versioned_name(base: &str, version: u32) -> String {
+    format!("{base}@v{version}")
+}
+
+/// Split a serving name into (base, version). `"pn@v2"` → `("pn", Some(2))`;
+/// a name without a `@vN` suffix is its own base.
+pub fn split_version(name: &str) -> (&str, Option<u32>) {
+    if let Some((base, v)) = name.rsplit_once("@v") {
+        if !base.is_empty() && !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(n) = v.parse::<u32>() {
+                return (base, Some(n));
+            }
+        }
+    }
+    (name, None)
+}
+
+/// The registered versions of one base name, with the incumbent (the
+/// version unversioned requests resolve to by default).
+#[derive(Clone, Debug)]
+struct VersionSet {
+    versions: BTreeSet<u32>,
+    incumbent: u32,
+}
 
 /// Parsed per-model metadata + compiled engines.
 pub struct ModelEntry {
@@ -93,6 +119,8 @@ impl ModelEntry {
 pub struct ModelRepository {
     root: PathBuf,
     models: std::sync::RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    /// Per-base-name version sets (`base@vN` lifecycle bookkeeping).
+    versions: std::sync::RwLock<BTreeMap<String, VersionSet>>,
 }
 
 impl std::fmt::Debug for ModelRepository {
@@ -166,7 +194,78 @@ impl ModelRepository {
         Ok(ModelRepository {
             root: root.to_path_buf(),
             models: std::sync::RwLock::new(models),
+            versions: std::sync::RwLock::new(BTreeMap::new()),
         })
+    }
+
+    /// Register version `N` of an already-loaded base model, serving it
+    /// under the `base@vN` name. Every version shares the base entry's
+    /// compiled engines and metadata (the Triton version-directory
+    /// analogue: one repository entry, several numbered versions of it);
+    /// behavioral differences between versions are modeled by the
+    /// per-version service-model config. The first registered version
+    /// becomes the incumbent.
+    pub fn register_version(&self, base: &str, version: u32) -> Result<Arc<ModelEntry>> {
+        let entry = self
+            .get(base)
+            .with_context(|| format!("registering version of unloaded model '{base}'"))?;
+        let name = versioned_name(base, version);
+        self.models
+            .write()
+            .unwrap()
+            .insert(name, Arc::clone(&entry));
+        let mut versions = self.versions.write().unwrap();
+        let set = versions.entry(base.to_string()).or_insert(VersionSet {
+            versions: BTreeSet::new(),
+            incumbent: version,
+        });
+        set.versions.insert(version);
+        Ok(entry)
+    }
+
+    /// Mark `version` as the incumbent of `base`. Returns false when the
+    /// version was never registered (the incumbent is unchanged).
+    pub fn set_incumbent(&self, base: &str, version: u32) -> bool {
+        let mut versions = self.versions.write().unwrap();
+        match versions.get_mut(base) {
+            Some(set) if set.versions.contains(&version) => {
+                set.incumbent = version;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Incumbent version of `base`, if it has registered versions.
+    pub fn incumbent(&self, base: &str) -> Option<u32> {
+        self.versions.read().unwrap().get(base).map(|s| s.incumbent)
+    }
+
+    /// Registered versions of `base`, ascending.
+    pub fn versions(&self, base: &str) -> Vec<u32> {
+        self.versions
+            .read()
+            .unwrap()
+            .get(base)
+            .map(|s| s.versions.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Resolve the serving name a cold pod should boot with: a base name
+    /// with registered versions maps to its *current* incumbent's
+    /// versioned name; explicit versioned names and unversioned models
+    /// pass through. This is the boot-profile retag hook — after a
+    /// promote, replacement pods of the same group boot the new version
+    /// without a kill+respawn of the group.
+    pub fn serving_name(&self, name: &str) -> String {
+        let (base, version) = split_version(name);
+        if version.is_some() {
+            return name.to_string();
+        }
+        match self.incumbent(base) {
+            Some(v) => versioned_name(base, v),
+            None => name.to_string(),
+        }
     }
 
     /// Hot-load a model from the repository directory at runtime
@@ -347,5 +446,48 @@ mod tests {
         let err = ModelRepository::load_metadata(&artifacts_root(), &["missing_model".into()])
             .unwrap_err();
         assert!(err.to_string().contains("missing_model"));
+    }
+
+    #[test]
+    fn version_name_roundtrip() {
+        assert_eq!(versioned_name("pn", 2), "pn@v2");
+        assert_eq!(split_version("pn@v2"), ("pn", Some(2)));
+        assert_eq!(split_version("pn"), ("pn", None));
+        // malformed suffixes are not versions
+        assert_eq!(split_version("pn@vx"), ("pn@vx", None));
+        assert_eq!(split_version("pn@v"), ("pn@v", None));
+        assert_eq!(split_version("@v1"), ("@v1", None));
+        // nested-looking names split on the last marker
+        assert_eq!(split_version("a@v1@v2"), ("a@v1", Some(2)));
+    }
+
+    #[test]
+    fn version_registry_lifecycle() {
+        let repo =
+            ModelRepository::load_metadata(&artifacts_root(), &["particlenet".into()]).unwrap();
+        assert!(repo.incumbent("particlenet").is_none());
+        assert_eq!(repo.serving_name("particlenet"), "particlenet");
+
+        // registering versions serves them under base@vN, sharing the entry
+        repo.register_version("particlenet", 1).unwrap();
+        repo.register_version("particlenet", 2).unwrap();
+        assert_eq!(repo.versions("particlenet"), vec![1, 2]);
+        assert_eq!(repo.incumbent("particlenet"), Some(1));
+        let base = repo.get("particlenet").unwrap();
+        let v2 = repo.get("particlenet@v2").unwrap();
+        assert!(Arc::ptr_eq(&base, &v2), "versions share the base entry");
+
+        // boot-profile retag follows the incumbent
+        assert_eq!(repo.serving_name("particlenet"), "particlenet@v1");
+        assert!(repo.set_incumbent("particlenet", 2));
+        assert_eq!(repo.serving_name("particlenet"), "particlenet@v2");
+        // explicit versioned names pass through unchanged
+        assert_eq!(repo.serving_name("particlenet@v1"), "particlenet@v1");
+
+        // unknown versions / bases are rejected
+        assert!(!repo.set_incumbent("particlenet", 9));
+        assert_eq!(repo.incumbent("particlenet"), Some(2));
+        assert!(!repo.set_incumbent("nope", 1));
+        assert!(repo.register_version("nope", 1).is_err());
     }
 }

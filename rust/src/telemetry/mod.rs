@@ -16,6 +16,7 @@
 //! histograms, and [`slo`] evaluates burn-rate alerts over the resulting
 //! series.
 
+pub mod rollback;
 pub mod slo;
 
 use std::collections::{HashMap, HashSet, VecDeque};

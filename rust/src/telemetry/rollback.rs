@@ -1,0 +1,533 @@
+//! Canary auto-rollback — the promotion safety net of the model-version
+//! lifecycle. While a canary split is live, the gateway stamps
+//! per-(model, version) requests/errors/latency; this evaluator compares
+//! the canary arm against the incumbent arm over the same fast/slow
+//! burn-rate windows the SLO engine uses ([`super::slo`]) and, when the
+//! canary is worse on both windows — error rate above the incumbent's by
+//! more than `observability.rollback_error_margin`, or windowed p99
+//! above `rollback_latency_factor` × the incumbent's — it triggers the
+//! deployment's rollback action (tear down the split, swap placement
+//! back), counts `model_version_rollback_total{model=...}`, raises the
+//! `canary_auto_rollback` alert, and appends a structured alert-log
+//! entry. One rollback per model per canary: after firing, the model is
+//! ignored until a new split is installed.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::config::schema::ObservabilityConfig;
+use crate::metrics::registry::{labels, Registry};
+use crate::metrics::store::MetricStore;
+use crate::server::split_version;
+use crate::telemetry::slo::{AlertEvent, AlertKind, ALERT_GAUGE};
+use crate::util::clock::Clock;
+
+/// Alert name raised when an automatic rollback fires.
+pub const ROLLBACK_ALERT: &str = "canary_auto_rollback";
+
+/// Counter of automatic rollbacks, labeled by base model name.
+pub const ROLLBACK_COUNTER: &str = "model_version_rollback_total";
+
+/// Per-(model, version) counter of infer responses routed by version.
+pub const VERSION_REQUESTS_COUNTER: &str = "model_version_requests_total";
+
+/// Per-(model, version) counter of non-OK infer responses.
+pub const VERSION_ERRORS_COUNTER: &str = "model_version_errors_total";
+
+/// Per-(model, version) histogram of OK request latency.
+pub const VERSION_LATENCY_HIST: &str = "gateway_model_version_latency_seconds";
+
+/// Per-(model, version) gauge of warm replicas, set by the placement
+/// controller on every reconcile.
+pub const VERSION_REPLICAS_GAUGE: &str = "model_version_replicas";
+
+/// Every version-lifecycle metric name, for the docs-sync gate.
+pub const VERSION_METRICS: &[&str] = &[
+    VERSION_REQUESTS_COUNTER,
+    VERSION_ERRORS_COUNTER,
+    VERSION_LATENCY_HIST,
+    VERSION_REPLICAS_GAUGE,
+    ROLLBACK_COUNTER,
+];
+
+/// One live canary the evaluator watches: the base (client-facing) name
+/// plus the two concrete versioned names under comparison.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CanarySnapshot {
+    pub base: String,
+    /// Versioned incumbent name (e.g. `pn@v1`).
+    pub incumbent: String,
+    /// Versioned canary name (e.g. `pn@v2`).
+    pub canary: String,
+}
+
+/// Reads the live canary set (the deployment points this at
+/// `ModelRouter::canary_of` so splits installed or cleared at runtime
+/// are picked up on the next evaluation).
+pub type CanaryProbe = Box<dyn Fn() -> Vec<CanarySnapshot> + Send + Sync>;
+
+/// Invoked once per fired rollback (tear down the split, restore
+/// placement). Runs on the evaluator thread.
+pub type RollbackAction = Box<dyn Fn(&CanarySnapshot) + Send + Sync>;
+
+/// The canary-vs-incumbent evaluator. Create once, call
+/// [`eval_once`](Self::eval_once) on a cadence (or let [`RollbackTask`]
+/// drive it on the clock).
+pub struct RollbackEngine {
+    cfg: ObservabilityConfig,
+    registry: Registry,
+    store: MetricStore,
+    clock: Clock,
+    probe: CanaryProbe,
+    action: RollbackAction,
+    /// Base names whose rollback already fired — one shot per split.
+    done: Mutex<BTreeSet<String>>,
+    events: Mutex<Vec<AlertEvent>>,
+}
+
+/// One arm's windowed deltas: requests, errors, and per-bucket latency
+/// counts over the trailing window.
+struct ArmWindow {
+    requests: f64,
+    errors: f64,
+    lat_deltas: Vec<f64>,
+}
+
+impl RollbackEngine {
+    /// Engine over the shared registry (gateway version feed) and store
+    /// (windowing), with a live-canary probe and a rollback action.
+    pub fn new(
+        cfg: ObservabilityConfig,
+        registry: Registry,
+        store: MetricStore,
+        clock: Clock,
+        probe: CanaryProbe,
+        action: RollbackAction,
+    ) -> Self {
+        RollbackEngine {
+            cfg,
+            registry,
+            store,
+            clock,
+            probe,
+            action,
+            done: Mutex::new(BTreeSet::new()),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Evaluate every live canary once at the current clock time.
+    pub fn eval_once(&self) {
+        let now = self.clock.now_secs();
+        for snap in (self.probe)() {
+            if self.done.lock().unwrap().contains(&snap.base) {
+                continue;
+            }
+            // Publish cumulative per-arm series so window deltas work
+            // (same pattern as the SLO engine's slo_*_total feed).
+            self.push_arm(&snap.base, &snap.incumbent, now);
+            self.push_arm(&snap.base, &snap.canary, now);
+
+            let fast = self.window(&snap, now, self.cfg.slo_fast_window);
+            let slow = self.window(&snap, now, self.cfg.slo_slow_window);
+            let (Some(fast), Some(slow)) = (fast, slow) else {
+                continue;
+            };
+            if fast.0 && slow.0 {
+                self.fire(&snap, now, fast.1, slow.1);
+            }
+        }
+    }
+
+    /// Version label for a versioned name (`pn@v2` -> `v2`).
+    fn version_label(name: &str) -> Option<String> {
+        split_version(name).1.map(|v| format!("v{v}"))
+    }
+
+    /// Push one arm's cumulative counters + latency buckets into the
+    /// store at `now`.
+    fn push_arm(&self, base: &str, arm: &str, now: f64) {
+        let Some(ver) = Self::version_label(arm) else {
+            return;
+        };
+        let l = labels(&[("model", base), ("version", &ver)]);
+        let requests = self.registry.counter(VERSION_REQUESTS_COUNTER, &l).get() as f64;
+        let errors = self.registry.counter(VERSION_ERRORS_COUNTER, &l).get() as f64;
+        self.store
+            .push(&format!("rollback_requests_total{{model=\"{base}\",version=\"{ver}\"}}"), now, requests);
+        self.store
+            .push(&format!("rollback_errors_total{{model=\"{base}\",version=\"{ver}\"}}"), now, errors);
+        let h = self.registry.histogram(VERSION_LATENCY_HIST, &l).snapshot();
+        for (i, &c) in h.counts().iter().enumerate() {
+            self.store.push(
+                &format!(
+                    "rollback_lat_bucket{{model=\"{base}\",version=\"{ver}\",bucket=\"{i}\"}}"
+                ),
+                now,
+                c as f64,
+            );
+        }
+    }
+
+    /// Last-minus-first delta of a cumulative series over the trailing
+    /// window; `None` until two points exist.
+    fn delta(&self, series: &str, now: f64, window: Duration) -> Option<f64> {
+        let pts = self.store.range(series, now - window.as_secs_f64(), now);
+        if pts.len() < 2 {
+            return None;
+        }
+        Some(pts[pts.len() - 1].1 - pts[0].1)
+    }
+
+    /// One arm's windowed deltas; `None` until the window holds two
+    /// samples of the request series.
+    fn arm_window(&self, base: &str, arm: &str, now: f64, w: Duration) -> Option<ArmWindow> {
+        let ver = Self::version_label(arm)?;
+        let requests = self.delta(
+            &format!("rollback_requests_total{{model=\"{base}\",version=\"{ver}\"}}"),
+            now,
+            w,
+        )?;
+        let errors = self
+            .delta(
+                &format!("rollback_errors_total{{model=\"{base}\",version=\"{ver}\"}}"),
+                now,
+                w,
+            )
+            .unwrap_or(0.0);
+        let l = labels(&[("model", base), ("version", &ver)]);
+        let nbuckets = self.registry.histogram(VERSION_LATENCY_HIST, &l).snapshot().counts().len();
+        let lat_deltas = (0..nbuckets)
+            .map(|i| {
+                self.delta(
+                    &format!(
+                        "rollback_lat_bucket{{model=\"{base}\",version=\"{ver}\",bucket=\"{i}\"}}"
+                    ),
+                    now,
+                    w,
+                )
+                .unwrap_or(0.0)
+                .max(0.0)
+            })
+            .collect();
+        Some(ArmWindow { requests, errors, lat_deltas })
+    }
+
+    /// Judge one window: `Some((breach, severity))` once both arms have
+    /// enough windowed traffic to compare, `None` otherwise. `severity`
+    /// is the worse of the two normalized excesses (1.0 = right at the
+    /// rollback threshold), recorded on the alert event.
+    fn window(&self, snap: &CanarySnapshot, now: f64, w: Duration) -> Option<(bool, f64)> {
+        let inc = self.arm_window(&snap.base, &snap.incumbent, now, w)?;
+        let can = self.arm_window(&snap.base, &snap.canary, now, w)?;
+        let min = self.cfg.rollback_min_requests as f64;
+        if inc.requests < min || can.requests < min {
+            return None;
+        }
+        let inc_err = inc.errors.max(0.0) / inc.requests;
+        let can_err = can.errors.max(0.0) / can.requests;
+        let margin = self.cfg.rollback_error_margin.max(1e-9);
+        let err_severity = (can_err - inc_err) / margin;
+
+        // Latency is compared only when both arms served OK requests in
+        // the window (the histogram counts OK responses only); an
+        // all-error canary is caught by the error comparison.
+        let bounds = self
+            .registry
+            .histogram(
+                VERSION_LATENCY_HIST,
+                &labels(&[
+                    ("model", &snap.base),
+                    ("version", &Self::version_label(&snap.incumbent).unwrap_or_default()),
+                ]),
+            )
+            .snapshot()
+            .bounds()
+            .to_vec();
+        let inc_total: f64 = inc.lat_deltas.iter().sum();
+        let can_total: f64 = can.lat_deltas.iter().sum();
+        let lat_severity = if inc_total >= 1.0 && can_total >= 1.0 {
+            let inc_p99 = quantile_from_deltas(&bounds, &inc.lat_deltas, 0.99);
+            let can_p99 = quantile_from_deltas(&bounds, &can.lat_deltas, 0.99);
+            if inc_p99 > 0.0 {
+                (can_p99 / inc_p99) / self.cfg.rollback_latency_factor
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+        let severity = err_severity.max(lat_severity);
+        Some((severity > 1.0, severity))
+    }
+
+    /// Fire the rollback for one canary: run the action, export the
+    /// alert + counter, log the event, and mark the base done.
+    fn fire(&self, snap: &CanarySnapshot, now: f64, fast: f64, slow: f64) {
+        (self.action)(snap);
+        self.registry
+            .counter(ROLLBACK_COUNTER, &labels(&[("model", &snap.base)]))
+            .inc();
+        self.registry
+            .gauge(
+                ALERT_GAUGE,
+                &labels(&[("alert", ROLLBACK_ALERT), ("model", &snap.base)]),
+            )
+            .set(1.0);
+        self.events.lock().unwrap().push(AlertEvent {
+            at: now,
+            model: snap.base.clone(),
+            alert: ROLLBACK_ALERT,
+            kind: AlertKind::Fired,
+            burn_fast: fast,
+            burn_slow: slow,
+        });
+        self.done.lock().unwrap().insert(snap.base.clone());
+    }
+
+    /// Has a rollback fired for `base` (since the last re-arm)?
+    pub fn rolled_back(&self, base: &str) -> bool {
+        self.done.lock().unwrap().contains(base)
+    }
+
+    /// Re-arm `base` after a new canary split is installed, so the next
+    /// bad version can roll back too.
+    pub fn rearm(&self, base: &str) {
+        self.done.lock().unwrap().remove(base);
+        self.registry
+            .gauge(ALERT_GAUGE, &labels(&[("alert", ROLLBACK_ALERT), ("model", base)]))
+            .set(0.0);
+    }
+
+    /// Structured alert log (rollbacks in evaluation order).
+    pub fn events(&self) -> Vec<AlertEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Rendered alert log, one line per rollback.
+    pub fn render_log(&self) -> String {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|e| e.render())
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Quantile estimate over a windowed (delta) bucket histogram, linearly
+/// interpolating within the straddling bucket — `histogram_quantile`
+/// over `increase(bucket[w])`. `deltas` has one entry per bucket, the
+/// last being +Inf; a quantile landing there answers the highest finite
+/// bound (the estimator's conventional clamp).
+fn quantile_from_deltas(bounds: &[f64], deltas: &[f64], q: f64) -> f64 {
+    let total: f64 = deltas.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = q.clamp(0.0, 1.0) * total;
+    let mut cum = 0.0;
+    for (i, &d) in deltas.iter().enumerate() {
+        if cum + d >= target && d > 0.0 {
+            if i >= bounds.len() {
+                return bounds.last().copied().unwrap_or(0.0);
+            }
+            let lo = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let hi = bounds[i];
+            return lo + (hi - lo) * ((target - cum) / d).clamp(0.0, 1.0);
+        }
+        cum += d;
+    }
+    bounds.last().copied().unwrap_or(0.0)
+}
+
+/// Background evaluation loop on the shared clock (Scraper-style:
+/// dropping the task stops and joins the thread).
+pub struct RollbackTask {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RollbackTask {
+    /// Evaluate `engine` every `interval` of clock time.
+    pub fn start(engine: Arc<RollbackEngine>, clock: Clock, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("rollback-engine".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    engine.eval_once();
+                    clock.sleep(interval);
+                }
+            })
+            .expect("spawning rollback engine");
+        RollbackTask { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for RollbackTask {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn test_cfg() -> ObservabilityConfig {
+        ObservabilityConfig {
+            slo_fast_window: Duration::from_secs(60),
+            slo_slow_window: Duration::from_secs(300),
+            rollback_latency_factor: 2.0,
+            rollback_error_margin: 0.05,
+            rollback_min_requests: 10,
+            ..ObservabilityConfig::default()
+        }
+    }
+
+    fn engine(
+        cfg: ObservabilityConfig,
+    ) -> (Arc<RollbackEngine>, Registry, Clock, Arc<AtomicUsize>) {
+        let registry = Registry::new();
+        let store = MetricStore::new(Duration::from_secs(3600));
+        let clock = Clock::simulated();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let fired2 = Arc::clone(&fired);
+        let probe: CanaryProbe = Box::new(|| {
+            vec![CanarySnapshot {
+                base: "pn".into(),
+                incumbent: "pn@v1".into(),
+                canary: "pn@v2".into(),
+            }]
+        });
+        let action: RollbackAction = Box::new(move |snap| {
+            assert_eq!(snap.canary, "pn@v2");
+            fired2.fetch_add(1, Ordering::SeqCst);
+        });
+        let e = Arc::new(RollbackEngine::new(
+            cfg,
+            registry.clone(),
+            store,
+            clock.clone(),
+            probe,
+            action,
+        ));
+        (e, registry, clock, fired)
+    }
+
+    fn feed(registry: &Registry, ver: &str, n: u64, errs: u64, latency: f64) {
+        let l = labels(&[("model", "pn"), ("version", ver)]);
+        registry.counter(VERSION_REQUESTS_COUNTER, &l).add(n);
+        registry.counter(VERSION_ERRORS_COUNTER, &l).add(errs);
+        let h = registry.histogram(VERSION_LATENCY_HIST, &l);
+        for _ in 0..(n - errs) {
+            h.observe(latency);
+        }
+    }
+
+    #[test]
+    fn quantile_from_deltas_interpolates() {
+        let bounds = vec![0.1, 0.2, 0.4];
+        // 10 in (0, 0.1], 10 in (0.2, 0.4], none beyond.
+        let deltas = vec![10.0, 0.0, 10.0, 0.0];
+        // Median sits exactly at the first bound.
+        assert!((quantile_from_deltas(&bounds, &deltas, 0.5) - 0.1).abs() < 1e-9);
+        // 75th percentile: halfway through the (0.2, 0.4] bucket.
+        assert!((quantile_from_deltas(&bounds, &deltas, 0.75) - 0.3).abs() < 1e-9);
+        // All mass in +Inf clamps to the highest finite bound.
+        assert!((quantile_from_deltas(&bounds, &[0.0, 0.0, 0.0, 5.0], 0.99) - 0.4).abs() < 1e-9);
+        assert_eq!(quantile_from_deltas(&bounds, &[0.0; 4], 0.99), 0.0);
+    }
+
+    #[test]
+    fn slow_canary_rolls_back_once() {
+        let (e, registry, clock, fired) = engine(test_cfg());
+        e.eval_once(); // baseline points
+        // Incumbent fast, canary ~20x slower: p99 ratio far above the
+        // 2x factor on both windows.
+        feed(&registry, "v1", 100, 0, 0.005);
+        feed(&registry, "v2", 40, 0, 0.1);
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "rollback must fire");
+        assert!(e.rolled_back("pn"));
+        assert_eq!(
+            registry.counter(ROLLBACK_COUNTER, &labels(&[("model", "pn")])).get(),
+            1
+        );
+        assert!(
+            (registry
+                .gauge(ALERT_GAUGE, &labels(&[("alert", ROLLBACK_ALERT), ("model", "pn")]))
+                .get()
+                - 1.0)
+                .abs()
+                < 1e-9
+        );
+        assert!(e.render_log().contains(ROLLBACK_ALERT));
+        // One-shot: further evaluations must not fire again.
+        feed(&registry, "v1", 100, 0, 0.005);
+        feed(&registry, "v2", 40, 0, 0.1);
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // Re-arming (new split) makes it eligible again.
+        e.rearm("pn");
+        assert!(!e.rolled_back("pn"));
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn erroring_canary_rolls_back() {
+        let (e, registry, clock, fired) = engine(test_cfg());
+        e.eval_once();
+        // Same latency both arms, but the canary errors 50% against a
+        // 5% margin.
+        feed(&registry, "v1", 100, 0, 0.005);
+        feed(&registry, "v2", 40, 20, 0.005);
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        let ev = &e.events()[0];
+        assert_eq!(ev.alert, ROLLBACK_ALERT);
+        assert_eq!(ev.kind, AlertKind::Fired);
+        assert!(ev.burn_fast > 1.0);
+    }
+
+    #[test]
+    fn healthy_canary_left_alone() {
+        let (e, registry, clock, fired) = engine(test_cfg());
+        e.eval_once();
+        for _ in 0..5 {
+            feed(&registry, "v1", 100, 1, 0.005);
+            feed(&registry, "v2", 40, 0, 0.006);
+            clock.advance(Duration::from_secs(10));
+            e.eval_once();
+        }
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "healthy canary must survive");
+        assert!(e.events().is_empty());
+    }
+
+    #[test]
+    fn min_requests_guards_noise() {
+        let (e, registry, clock, fired) = engine(test_cfg());
+        e.eval_once();
+        // Canary horribly slow but only 3 windowed requests (< 10 min):
+        // too little evidence to roll back.
+        feed(&registry, "v1", 100, 0, 0.005);
+        feed(&registry, "v2", 3, 0, 1.0);
+        clock.advance(Duration::from_secs(10));
+        e.eval_once();
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+    }
+}

@@ -354,6 +354,7 @@ mod tests {
                 latency_p99: Duration::from_millis(100),
                 error_budget: 0.01,
             }],
+            ..ObservabilityConfig::default()
         }
     }
 

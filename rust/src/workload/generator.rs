@@ -609,6 +609,7 @@ mod tests {
                         },
                         load_delay: None,
                         backends: Vec::new(),
+                        ..ModelConfig::default()
                     }],
                     clock.clone(),
                     registry.clone(),

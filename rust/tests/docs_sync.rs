@@ -162,6 +162,36 @@ fn operations_doc_documents_every_trace_stage() {
 }
 
 #[test]
+fn operations_doc_documents_every_version_metric() {
+    // The model-version lifecycle exports its own metric family
+    // (per-version traffic, replica gauges, the rollback counter): every
+    // name must appear in the canary runbook, or a dashboard built from
+    // the docs silently misses the rollout signals.
+    let doc = read_doc("OPERATIONS.md");
+    for metric in supersonic::telemetry::rollback::VERSION_METRICS {
+        assert!(
+            doc.contains(&format!("`{metric}`")),
+            "docs/OPERATIONS.md does not document version metric '{metric}'; \
+             the canary_rollout runbook must cover every version-lifecycle \
+             series"
+        );
+    }
+}
+
+#[test]
+fn operations_doc_documents_rollback_alert() {
+    // The auto-rollback alert is a page: it needs a runbook entry with
+    // rollback troubleshooting, same contract as the SLO alerts.
+    let doc = read_doc("OPERATIONS.md");
+    let alert = supersonic::telemetry::rollback::ROLLBACK_ALERT;
+    assert!(
+        doc.contains(&format!("`{alert}`")),
+        "docs/OPERATIONS.md does not document the '{alert}' alert; the \
+         canary_rollout runbook must explain why it fires and how to recover"
+    );
+}
+
+#[test]
 fn operations_doc_documents_every_slo_alert() {
     // Every alert name the burn-rate engine can fire must have a runbook
     // entry — an undocumented page is an unactionable page.

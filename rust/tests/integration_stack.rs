@@ -32,6 +32,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             repository: "artifacts".into(),
             startup_delay: Duration::from_millis(10),
@@ -302,6 +303,92 @@ fn pod_failures_recovered_under_load() {
     let report = pool.run(&Schedule::constant(2, Duration::from_millis(500)));
     assert!(report.total_ok > 0);
     assert_eq!(report.total_errors, 0);
+    d.down();
+}
+
+#[test]
+fn rolling_upgrade_with_pod_kill_serves_continuously() {
+    use supersonic::config::{CanaryConfig, VersionSpec};
+    use supersonic::metrics::registry::labels;
+    use supersonic::telemetry::rollback::VERSION_REQUESTS_COUNTER;
+
+    // Rolling upgrade chaos: icecube_cnn serves v1 (incumbent) with a
+    // 30% v2 canary over the full TCP gateway + session-pool stack.
+    // Mid-traffic we kill one pod, then promote the canary — the bare
+    // name must keep serving throughout: zero errors (a ModelNotFound
+    // during the swap would land there) and a served counter that only
+    // ever moves forward.
+    let mut cfg = base_cfg(ExecutionMode::Simulated);
+    cfg.rpc.remote_dispatch = true;
+    cfg.rpc.pool_size = 2;
+    cfg.server.replicas = 3;
+    cfg.server.models[0].versions =
+        vec![VersionSpec { version: 1, slowdown: 1.0 }, VersionSpec { version: 2, slowdown: 1.0 }];
+    cfg.server.models[0].incumbent = Some(1);
+    cfg.server.models[0].canary = Some(CanaryConfig { version: 2, weight: 0.3 });
+    // Both versions (~152 KB each) fit on every pod: the upgrade is
+    // routing-bound, not placement-bound.
+    cfg.model_placement.memory_budget_mb = 0.45;
+    let d = Deployment::up(cfg).unwrap();
+    assert!(d.wait_ready(3, Duration::from_secs(10)));
+    std::thread::sleep(Duration::from_millis(300)); // placement reconcile
+
+    let spec = WorkloadSpec::new("icecube_cnn", 2, vec![16, 16, 3]);
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let worker = std::thread::spawn(move || pool.run(&Schedule::constant(6, Duration::from_millis(1600))));
+
+    let served = |d: &Deployment| {
+        ["v1", "v2"]
+            .into_iter()
+            .map(|v| {
+                d.registry
+                    .counter(VERSION_REQUESTS_COUNTER, &labels(&[("model", "icecube_cnn"), ("version", v)]))
+                    .get()
+            })
+            .sum::<u64>()
+    };
+    // Sample the served counter every 25ms while the chaos plays out.
+    let mut samples = Vec::new();
+    let mut at_kill = 0;
+    let mut at_promote = 0;
+    let t0 = std::time::Instant::now();
+    let mut killed = false;
+    let mut promoted = false;
+    while t0.elapsed() < Duration::from_millis(1500) {
+        samples.push(served(&d));
+        if !killed && t0.elapsed() >= Duration::from_millis(400) {
+            d.cluster.set_desired(2); // kill one pod mid-traffic
+            at_kill = *samples.last().unwrap();
+            killed = true;
+        }
+        if !promoted && t0.elapsed() >= Duration::from_millis(800) {
+            assert!(served(&d) > at_kill, "serving stalled after the pod kill");
+            let v2_before = d
+                .registry
+                .counter(VERSION_REQUESTS_COUNTER, &labels(&[("model", "icecube_cnn"), ("version", "v2")]))
+                .get();
+            assert!(v2_before > 0, "canary arm never served before the promote");
+            assert!(d.promote_canary("icecube_cnn"), "promote_canary failed mid-traffic");
+            at_promote = *samples.last().unwrap();
+            promoted = true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let report = worker.join().unwrap();
+    samples.push(served(&d));
+
+    assert!(killed && promoted, "chaos schedule never ran");
+    assert_eq!(report.total_errors, 0, "errors during the rolling upgrade + pod kill");
+    assert!(report.total_ok > 50, "ok={}", report.total_ok);
+    // Served counter is monotone non-decreasing across every sample and
+    // keeps moving after both chaos events.
+    assert!(
+        samples.windows(2).all(|w| w[1] >= w[0]),
+        "served counter went backwards: {samples:?}"
+    );
+    assert!(*samples.last().unwrap() > at_promote, "serving stalled after the promote");
+    assert_eq!(d.repository.incumbent("icecube_cnn"), Some(2));
+    assert!(d.router.as_ref().unwrap().canary_of("icecube_cnn").is_none());
     d.down();
 }
 

@@ -23,6 +23,21 @@ fn span(trace_id: u64, name: &str, start: f64, end: f64) -> Span {
 /// the golden readable; bucket invariants are property-tested in
 /// `property_invariants.rs`).
 const GOLDEN: &str = "\
+# TYPE gateway_model_version_latency_seconds histogram
+gateway_model_version_latency_seconds_sum{model=\"icecube_cnn\",version=\"v1\"} 0.375
+gateway_model_version_latency_seconds_count{model=\"icecube_cnn\",version=\"v1\"} 2
+gateway_model_version_latency_seconds_sum{model=\"icecube_cnn\",version=\"v2\"} 0.375
+gateway_model_version_latency_seconds_count{model=\"icecube_cnn\",version=\"v2\"} 2
+# TYPE model_version_errors_total counter
+model_version_errors_total{model=\"icecube_cnn\",version=\"v2\"} 1
+# TYPE model_version_replicas gauge
+model_version_replicas{model=\"icecube_cnn\",version=\"v1\"} 1
+model_version_replicas{model=\"icecube_cnn\",version=\"v2\"} 1
+# TYPE model_version_requests_total counter
+model_version_requests_total{model=\"icecube_cnn\",version=\"v1\"} 6
+model_version_requests_total{model=\"icecube_cnn\",version=\"v2\"} 2
+# TYPE model_version_rollback_total counter
+model_version_rollback_total{model=\"icecube_cnn\"} 1
 # TYPE request_stage_seconds histogram
 request_stage_seconds_sum{stage=\"admit\"} 0.125
 request_stage_seconds_count{stage=\"admit\"} 2
@@ -79,6 +94,26 @@ fn observability_series_exposition_matches_golden() {
     small.record(span(9, "queue", 0.0, 0.5));
     small.record(span(9, "compute", 0.5, 1.0));
     recorder.observe(&small.trace(9));
+
+    // The version-lifecycle series a live canary split exports: gateway
+    // per-(model, version) traffic, placement's replica gauges, and one
+    // fired auto-rollback.
+    use supersonic::metrics::registry::labels;
+    use supersonic::telemetry::rollback::{
+        ROLLBACK_COUNTER, VERSION_ERRORS_COUNTER, VERSION_LATENCY_HIST, VERSION_REPLICAS_GAUGE,
+        VERSION_REQUESTS_COUNTER,
+    };
+    for (ver, n) in [("v1", 6u64), ("v2", 2)] {
+        let l = labels(&[("model", "icecube_cnn"), ("version", ver)]);
+        registry.counter(VERSION_REQUESTS_COUNTER, &l).add(n);
+        registry.histogram(VERSION_LATENCY_HIST, &l).observe(0.125);
+        registry.histogram(VERSION_LATENCY_HIST, &l).observe(0.25);
+        registry.gauge(VERSION_REPLICAS_GAUGE, &l).set(1.0);
+    }
+    registry
+        .counter(VERSION_ERRORS_COUNTER, &labels(&[("model", "icecube_cnn"), ("version", "v2")]))
+        .add(1);
+    registry.counter(ROLLBACK_COUNTER, &labels(&[("model", "icecube_cnn")])).inc();
 
     // The SLO engine pre-registers its alert gauges at 0 (resolved).
     let cfg = ObservabilityConfig {

@@ -178,6 +178,7 @@ fn prop_lb_only_picks_ready_and_under_cap() {
                 },
                 load_delay: None,
                 backends: Vec::new(),
+                ..ModelConfig::default()
             }],
             clock.clone(),
             registry.clone(),
@@ -279,6 +280,7 @@ fn prop_router_only_routes_to_advertising_instances() {
             },
             load_delay: None,
             backends: Vec::new(),
+            ..ModelConfig::default()
         })
         .collect();
     let mk = |id: &str| {
@@ -405,6 +407,7 @@ fn prop_no_request_ever_routed_to_loading_replica() {
             },
             load_delay: Some(LOAD_DELAY),
             backends: Vec::new(),
+            ..ModelConfig::default()
         })
         .collect();
     let mk = |id: &str| {
@@ -613,6 +616,163 @@ fn prop_planner_never_unloads_last_warm_copy() {
                     "'{m}' dropped from {before} to {} warm copies (floor {floor}): {moves:?}",
                     warm_after[m.as_str()]
                 );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_make_before_break_keeps_a_version_warm() {
+    use std::collections::{BTreeMap, BTreeSet};
+    use supersonic::config::{ModelPlacementConfig, PlacementPolicy};
+    use supersonic::modelmesh::{InstanceView, Move, PlacementCore};
+    use supersonic::server::split_version;
+
+    // The version-lifecycle serving invariant: across random
+    // interleavings of rollout direction flips (canary promote /
+    // rollback, i.e. which version is retiring), pod churn, load
+    // completions and planning passes, a plan's unloads never take a
+    // base model from "some version warm somewhere" to "no version warm
+    // anywhere". A retiring version may drain to zero copies — but only
+    // make-before-break, once its successor holds a warm copy.
+    check("make-before-break keeps a version warm per base", 250, |g: &mut Gen| {
+        let n_bases = g.usize(1..=2);
+        let bases: Vec<String> = (0..n_bases).map(|b| format!("m{b}")).collect();
+        let versioned: Vec<String> = bases
+            .iter()
+            .flat_map(|b| [format!("{b}@v1"), format!("{b}@v2")])
+            .collect();
+        let mem = 600_000u64;
+        let catalog: Vec<(String, u64)> = versioned.iter().map(|m| (m.clone(), mem)).collect();
+        let cfg = ModelPlacementConfig {
+            policy: PlacementPolicy::Dynamic,
+            // fits 1..=4 versioned copies per instance (plus slack)
+            memory_budget_mb: g.usize(1..=4) as f64 * 0.6 + 0.05,
+            load_threshold: g.f64(50.0, 200.0),
+            unload_threshold: g.f64(0.0, 40.0),
+            cooldown: Duration::ZERO,
+            demand_window: Duration::from_secs(10),
+            min_replicas_per_model: 1,
+            load_delay: Duration::ZERO,
+        };
+        let costs: BTreeMap<String, f64> = versioned
+            .iter()
+            .filter(|_| g.bool())
+            .map(|m| (m.clone(), g.f64(0.0, 8.0)))
+            .collect();
+        let mut core = PlacementCore::with_load_costs(cfg, catalog, costs);
+
+        // Fleet state we evolve by hand: per-instance warm + mid-load sets.
+        let n_inst = g.usize(2..=4);
+        let ids: Vec<String> = (0..n_inst).map(|i| format!("i{i}")).collect();
+        let mut warm: BTreeMap<String, BTreeSet<String>> =
+            ids.iter().map(|i| (i.clone(), BTreeSet::new())).collect();
+        let mut loading: BTreeMap<String, BTreeSet<String>> =
+            ids.iter().map(|i| (i.clone(), BTreeSet::new())).collect();
+        // Seed: every base serves v1 somewhere; extra copies at random.
+        for (k, b) in bases.iter().enumerate() {
+            warm.get_mut(&ids[k % n_inst]).unwrap().insert(format!("{b}@v1"));
+        }
+        for id in &ids {
+            for m in &versioned {
+                match g.usize(0..=4) {
+                    0 => {
+                        warm.get_mut(id).unwrap().insert(m.clone());
+                    }
+                    1 => {
+                        if !warm[id].contains(m) {
+                            loading.get_mut(id).unwrap().insert(m.clone());
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        let warm_copies = |warm: &BTreeMap<String, BTreeSet<String>>, name: &str| {
+            warm.values().filter(|set| set.iter().any(|m| split_version(m).0 == name || m == name)).count()
+        };
+
+        let mut now = 0.0;
+        for _round in 0..6 {
+            now += 1.0;
+            // Lifecycle ops: flip each base's rollout direction at random
+            // (promote = v1 retires into v2, rollback = v2 retires into
+            // v1, steady = no retirement).
+            for b in &bases {
+                let (v1, v2) = (format!("{b}@v1"), format!("{b}@v2"));
+                match g.usize(0..=3) {
+                    0 => {
+                        core.clear_successor(&v2);
+                        core.set_successor(&v1, &v2);
+                    }
+                    1 => {
+                        core.clear_successor(&v1);
+                        core.set_successor(&v2, &v1);
+                    }
+                    2 => {
+                        core.clear_successor(&v1);
+                        core.clear_successor(&v2);
+                    }
+                    _ => {} // keep the previous direction
+                }
+            }
+            // Pod churn: occasionally wipe one instance (crash).
+            if g.usize(0..=4) == 0 {
+                let victim = ids[g.usize(0..=n_inst - 1)].clone();
+                warm.get_mut(&victim).unwrap().clear();
+                loading.get_mut(&victim).unwrap().clear();
+            }
+
+            let views: Vec<InstanceView> = ids
+                .iter()
+                .map(|id| InstanceView {
+                    id: id.clone(),
+                    loaded: warm[id].clone(),
+                    loading: loading[id].clone(),
+                    mem_used: (warm[id].len() + loading[id].len()) as u64 * mem,
+                    backends: BTreeSet::new(),
+                })
+                .collect();
+            let demand: BTreeMap<String, f64> =
+                versioned.iter().map(|m| (m.clone(), g.f64(0.0, 500.0))).collect();
+            let moves = core.plan(now, &views, &demand);
+
+            // Replay the plan's warm unloads per *base* name: whatever the
+            // interleaving, a base that entered the round warm must leave
+            // it warm (in some version, on some instance).
+            let before: BTreeMap<&str, usize> =
+                bases.iter().map(|b| (b.as_str(), warm_copies(&warm, b))).collect();
+            for mv in &moves {
+                match mv {
+                    Move::Load { instance, model } => {
+                        if !warm[instance].contains(model) {
+                            loading.get_mut(instance).unwrap().insert(model.clone());
+                        }
+                    }
+                    Move::Unload { instance, model } => {
+                        warm.get_mut(instance).unwrap().remove(model);
+                        loading.get_mut(instance).unwrap().remove(model);
+                    }
+                }
+            }
+            for b in &bases {
+                if before[b.as_str()] >= 1 {
+                    assert!(
+                        warm_copies(&warm, b) >= 1,
+                        "base '{b}' lost its last warm version to a planning pass \
+                         (round state {warm:?}, moves {moves:?})"
+                    );
+                }
+            }
+            // Random subset of mid-loads warm up before the next round.
+            for id in &ids {
+                let done: Vec<String> =
+                    loading[id].iter().filter(|_| g.bool()).cloned().collect();
+                for m in done {
+                    loading.get_mut(id).unwrap().remove(&m);
+                    warm.get_mut(id).unwrap().insert(m);
+                }
             }
         }
     });
@@ -1037,6 +1197,7 @@ fn prop_cpu_only_model_never_served_by_gpu_instance() {
             } else {
                 Vec::new()
             },
+            ..ModelConfig::default()
         })
         .collect();
     let engine_catalog = Arc::new(EngineCatalog::resolve(&model_cfgs, &EnginesConfig::default()));
