@@ -12,6 +12,7 @@
 #   make bench-trace    — the latency-breakdown / SLO-alerting bench only
 #   make bench-rpc      — the streaming-RPC acceptance bench only
 #   make bench-canary   — the canary-rollout / auto-rollback bench only
+#   make bench-federation — the multi-site federation ablation bench only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
 #                      OPERATIONS.md bench coverage, smoke registration)
@@ -25,9 +26,9 @@ BENCHES := batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 	gateway_overhead lb_ablation scale_100_servers trigger_ablation \
 	modelmesh_ablation per_model_autoscale warm_load_ablation \
 	priority_ablation backend_ablation latency_breakdown rpc_streaming \
-	canary_rollout
+	canary_rollout federation_ablation
 
-.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc bench-canary docs-check
+.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc bench-canary bench-federation docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -58,6 +59,9 @@ bench-rpc:
 
 bench-canary:
 	cd rust && cargo bench --bench canary_rollout
+
+bench-federation:
+	cd rust && cargo bench --bench federation_ablation
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

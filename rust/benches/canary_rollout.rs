@@ -67,7 +67,7 @@ fn bench_cfg(name: &str, canary_slowdown: f64, weight: f64) -> DeploymentConfig 
                         VersionSpec { version: 2, slowdown: canary_slowdown },
                     ],
                     incumbent: Some(1),
-                    canary: Some(CanaryConfig { version: 2, weight }),
+                    canary: Some(CanaryConfig { version: 2, weight, ..CanaryConfig::default() }),
                     ..ModelConfig::default()
                 },
                 ModelConfig {
@@ -125,6 +125,7 @@ fn bench_cfg(name: &str, canary_slowdown: f64, weight: f64) -> DeploymentConfig 
             ..ObservabilityConfig::default()
         },
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale: TIME_SCALE,
     }
 }

@@ -1,0 +1,337 @@
+//! Multi-site federation vs single cluster — the federation acceptance
+//! bench.
+//!
+//! Two arms carrying the SAME skewed, bursty, mixed-priority traffic on
+//! an equal total pod count:
+//!
+//! * **single-site** — one 6-pod cluster with per-model autoscaling (the
+//!   pre-federation control plane). Healthy end to end: this arm is the
+//!   no-WAN-overhead baseline.
+//! * **federated** — three sites (2 pods each, gateway homed at the
+//!   first) behind the federation router and the global budget
+//!   rebalancer. Mid-run the WHOLE home site is killed
+//!   ([`Federation::fail_site`]) and later recovered.
+//!
+//! Asserted on the federated arm: zero request errors and a bounded
+//! critical-lane p99 across the entire run (service continues through
+//! the outage on the surviving sites), spillover visible in the
+//! per-site counters, and repatriation — the recovered home site takes
+//! fresh traffic before the run ends.
+//!
+//! Run: `cargo bench --bench federation_ablation`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench federation_ablation`
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use supersonic::config::*;
+use supersonic::deployment::Deployment;
+use supersonic::rpc::Priority;
+use supersonic::util::bench::{smoke, Csv, Table};
+use supersonic::workload::{MixEntry, MixedPool, Schedule, WorkloadSpec};
+
+const TIME_SCALE: f64 = 8.0;
+const HOME: &str = "purdue";
+/// Whole-run critical p99 ceiling for the federated arm (clock seconds).
+/// Critical service time is ~2.4 ms; the bound leaves room for burst
+/// queueing and the WAN penalty but not for an outage-shaped stall.
+const CRITICAL_P99_BOUND: f64 = 0.5;
+
+fn models() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "icecube_cnn".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            ..ModelConfig::default()
+        },
+        ModelConfig {
+            name: "particlenet".into(),
+            max_queue_delay: Duration::from_millis(1),
+            preferred_batch: 8,
+            service_model: ServiceModelConfig {
+                base: Duration::from_millis(2),
+                per_row: Duration::from_micros(100),
+            },
+            ..ModelConfig::default()
+        },
+    ]
+}
+
+fn base_cfg(name: &str, replicas: usize) -> DeploymentConfig {
+    DeploymentConfig {
+        name: name.into(),
+        server: ServerConfig {
+            replicas,
+            models: models(),
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(50),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 10.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: true,
+            min_replicas: 2,
+            max_replicas: 12,
+            poll_interval: Duration::from_millis(500),
+            per_model: PerModelScalingConfig {
+                enabled: true,
+                threshold: 60.0,
+                min_replicas: 1,
+                max_replicas: 4,
+            },
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 4,
+            gpus_per_node: 3,
+            pod_start_delay: Duration::from_millis(50),
+            termination_grace: Duration::from_millis(50),
+            pod_failure_rate: 0.0,
+        },
+        federation: Default::default(),
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(3600),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            // Both models (~240 KB combined) fit on every pod: the arms
+            // differ in topology, not in placement pressure.
+            memory_budget_mb: 0.45,
+            ..ModelPlacementConfig::default()
+        },
+        engines: Default::default(),
+        observability: Default::default(),
+        rpc: Default::default(),
+        time_scale: TIME_SCALE,
+    }
+}
+
+fn site(name: &str, wan: &[(&str, f64)]) -> SiteConfig {
+    SiteConfig {
+        name: name.into(),
+        pod_budget: 4,
+        replicas: 2,
+        nodes: 2,
+        gpus_per_node: 2,
+        cpu_replicas: 0,
+        wan: wan
+            .iter()
+            .map(|(p, s)| (p.to_string(), Duration::from_secs_f64(*s)))
+            .collect::<BTreeMap<_, _>>(),
+    }
+}
+
+fn federated_cfg(name: &str) -> DeploymentConfig {
+    let mut cfg = base_cfg(name, 2);
+    cfg.federation = FederationConfig {
+        sites: vec![
+            site(HOME, &[("nrp", 0.002), ("uchicago", 0.004)]),
+            site("nrp", &[]),
+            site("uchicago", &[]),
+        ],
+        gateway_site: HOME.into(),
+        rebalance_interval: Duration::from_millis(500),
+        spillover_queue_depth: 4.0,
+    };
+    cfg
+}
+
+/// Skewed mixed-priority traffic: a light critical lane and a heavy
+/// (4x weight, 8x rows) bulk lane, 80/20 skewed toward the CNN.
+fn mixed_entries() -> Vec<MixEntry> {
+    vec![
+        MixEntry {
+            spec: WorkloadSpec::new("icecube_cnn", 1, vec![16, 16, 3])
+                .with_priority(Priority::Critical),
+            weight: 1.0,
+        },
+        MixEntry {
+            spec: WorkloadSpec::new("icecube_cnn", 8, vec![16, 16, 3])
+                .with_priority(Priority::Bulk),
+            weight: 3.0,
+        },
+        MixEntry {
+            spec: WorkloadSpec::new("particlenet", 4, vec![64, 7]),
+            weight: 1.0,
+        },
+    ]
+}
+
+/// Bursty schedule: warm-up, a 3x client burst, then a long cool-down
+/// (the outage + recovery window in the federated arm).
+fn bursty() -> Schedule {
+    Schedule::new()
+        .phase(4, Duration::from_secs(8))
+        .phase(12, Duration::from_secs(10))
+        .phase(4, Duration::from_secs(22))
+}
+
+fn critical_p99(report: &supersonic::workload::MixedReport) -> f64 {
+    report
+        .per_entry
+        .iter()
+        .filter(|e| e.priority == Priority::Critical)
+        .map(|e| e.latency.quantile(0.99))
+        .fold(0.0, f64::max)
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    if smoke() {
+        // Short continuity slice: boot the 3-site federation, kill the
+        // home site under live traffic, recover it, and require
+        // error-free service throughout. The spillover / p99 /
+        // repatriation acceptance checks need the full run's timeline.
+        println!("== federation ablation (smoke): outage continuity slice ==");
+        let d = Deployment::up(federated_cfg("fed-smoke"))?;
+        let fed = std::sync::Arc::clone(d.federation.as_ref().expect("federated deployment"));
+        anyhow::ensure!(d.wait_ready(6, Duration::from_secs(30)), "federated fleet not ready");
+        let pool = MixedPool::new(&d.endpoint(), mixed_entries(), d.clock.clone(), 11);
+        let h =
+            std::thread::spawn(move || pool.run(&Schedule::constant(4, Duration::from_secs(12))));
+        d.clock.sleep(Duration::from_secs(4));
+        anyhow::ensure!(fed.fail_site(HOME), "fail_site({HOME})");
+        d.clock.sleep(Duration::from_secs(4));
+        anyhow::ensure!(fed.recover_site(HOME), "recover_site({HOME})");
+        let report = h.join().unwrap();
+        d.down();
+        println!("(smoke) {} ok, {} errors", report.total_ok(), report.total_errors());
+        anyhow::ensure!(report.total_ok() > 0, "no requests served in smoke slice");
+        anyhow::ensure!(report.total_errors() == 0, "errors across the smoke outage");
+        return Ok(());
+    }
+
+    let mut table = Table::new(&[
+        "arm", "ok", "shed", "errors", "critical p99 (s)", "spillover", "wan hops",
+    ]);
+    let mut csv = Csv::new(&[
+        "arm", "ok", "shed", "errors", "critical_p99_s", "spillover", "wan_hops",
+    ]);
+
+    // ---- arm 1: single site, equal total pods, healthy ------------------
+    println!("== single-site arm: 6 pods, no failure (baseline) ==");
+    let d = Deployment::up(base_cfg("fed-single", 6))?;
+    anyhow::ensure!(d.wait_ready(6, Duration::from_secs(30)), "single-site fleet not ready");
+    let pool = MixedPool::new(&d.endpoint(), mixed_entries(), d.clock.clone(), 11);
+    let report = pool.run(&bursty());
+    let single_p99 = critical_p99(&report);
+    println!(
+        "single  : {} ok / {} shed / {} errors, critical p99 {:.4}s",
+        report.total_ok(),
+        report.total_shed(),
+        report.total_errors(),
+        single_p99
+    );
+    let cells = [
+        "single-site".to_string(),
+        report.total_ok().to_string(),
+        report.total_shed().to_string(),
+        report.total_errors().to_string(),
+        format!("{single_p99:.4}"),
+        "0".to_string(),
+        "0".to_string(),
+    ];
+    table.row(&cells);
+    csv.row(&cells);
+    anyhow::ensure!(report.total_ok() > 0, "single-site arm served nothing");
+    anyhow::ensure!(report.total_errors() == 0, "single-site arm errored");
+    d.down();
+
+    // ---- arm 2: 3-site federation, home-site outage mid-run -------------
+    println!("\n== federated arm: 3 sites x 2 pods, home-site outage mid-burst ==");
+    let d = Deployment::up(federated_cfg("fed-multi"))?;
+    let fed = std::sync::Arc::clone(d.federation.as_ref().expect("federated deployment"));
+    anyhow::ensure!(d.wait_ready(6, Duration::from_secs(30)), "federated fleet not ready");
+    let pool = MixedPool::new(&d.endpoint(), mixed_entries(), d.clock.clone(), 11);
+    let schedule = bursty();
+    let h = std::thread::spawn(move || pool.run(&schedule));
+
+    // Outage window: kill the home site early in the burst, recover it
+    // at the start of the cool-down, leaving most of the last phase for
+    // repatriated traffic.
+    d.clock.sleep(Duration::from_secs(10));
+    println!("-- failing site '{HOME}' mid-burst");
+    anyhow::ensure!(fed.fail_site(HOME), "fail_site({HOME})");
+    d.clock.sleep(Duration::from_secs(10));
+    let home_before_recovery = fed.router.site_requests(HOME);
+    println!("-- recovering site '{HOME}'");
+    anyhow::ensure!(fed.recover_site(HOME), "recover_site({HOME})");
+
+    let report = h.join().unwrap();
+    let fed_p99 = critical_p99(&report);
+    let spillover = fed.router.spillover_total();
+    let home_after = fed.router.site_requests(HOME);
+    let per_site: Vec<(String, u64)> = ["purdue", "nrp", "uchicago"]
+        .iter()
+        .map(|s| (s.to_string(), fed.router.site_requests(s)))
+        .collect();
+    let wan_hops: u64 = per_site
+        .iter()
+        .filter(|(s, _)| s != HOME)
+        .map(|(_, n)| *n)
+        .sum();
+    d.down();
+
+    println!(
+        "federated: {} ok / {} shed / {} errors, critical p99 {:.4}s",
+        report.total_ok(),
+        report.total_shed(),
+        report.total_errors(),
+        fed_p99
+    );
+    for (s, n) in &per_site {
+        println!("  site {s:<10} {n} requests");
+    }
+    println!(
+        "  spillover {spillover}, home requests {home_before_recovery} at recovery -> {home_after} at end"
+    );
+    let cells = [
+        "federated".to_string(),
+        report.total_ok().to_string(),
+        report.total_shed().to_string(),
+        report.total_errors().to_string(),
+        format!("{fed_p99:.4}"),
+        spillover.to_string(),
+        wan_hops.to_string(),
+    ];
+    table.row(&cells);
+    csv.row(&cells);
+    println!("\n{}", table.render());
+    let path = csv.save("federation_ablation")?;
+    println!("CSV: {}", path.display());
+
+    anyhow::ensure!(report.total_ok() > 0, "federated arm served nothing");
+    anyhow::ensure!(
+        report.total_errors() == 0,
+        "request errors during the site outage (service did not continue)"
+    );
+    anyhow::ensure!(
+        fed_p99 < CRITICAL_P99_BOUND,
+        "critical p99 {fed_p99:.4}s breached the {CRITICAL_P99_BOUND}s bound through the outage"
+    );
+    anyhow::ensure!(
+        per_site.iter().all(|(_, n)| *n > 0),
+        "every site must carry traffic across the run: {per_site:?}"
+    );
+    anyhow::ensure!(
+        spillover > 0,
+        "no spillover recorded: the burst never overflowed the cheapest site"
+    );
+    anyhow::ensure!(
+        home_after > home_before_recovery,
+        "no repatriation: home site took no traffic after recovery \
+         ({home_before_recovery} -> {home_after})"
+    );
+    Ok(())
+}

@@ -106,6 +106,7 @@ fn bench_cfg(tracing: bool) -> DeploymentConfig {
             ..ObservabilityConfig::default()
         },
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale: TIME_SCALE,
     }
 }

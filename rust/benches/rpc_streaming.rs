@@ -97,6 +97,7 @@ fn bench_cfg() -> DeploymentConfig {
             max_inflight_per_conn: 2 * WINDOW,
             ..Default::default()
         },
+        federation: Default::default(),
         time_scale: 1.0,
     }
 }

@@ -49,6 +49,13 @@ pub use metric::MetricQuery;
 /// so scaling and placement react to the same signal.
 pub type DemandProbe = Arc<dyn Fn(&str, f64) -> f64 + Send + Sync>;
 
+/// CPU-share probe for the CPU-group scaler: `model -> fraction of the
+/// model's warm replicas that are CPU pods` (0.0 when the model has no
+/// warm replicas). The deployment wires this to the mesh router's pool
+/// view, classifying an endpoint as CPU when its backend set lacks the
+/// GPU runtime.
+pub type CpuShareProbe = Arc<dyn Fn(&str) -> f64 + Send + Sync>;
+
 /// A scaling decision from one evaluation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Decision {
@@ -266,6 +273,20 @@ impl PerModelPlanner {
         PerModelPlanner { cores, budget: cfg.max_replicas }
     }
 
+    /// Replace the shared total-pod budget. In federated mode the global
+    /// rebalancer shifts budget between the site-local planners through
+    /// this — a site absorbing spillover is granted pods that a quiet
+    /// site gives up, while each site's planner still decides *which
+    /// models* spend them.
+    pub fn set_budget(&mut self, budget: usize) {
+        self.budget = budget;
+    }
+
+    /// The current shared total-pod budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
     /// One evaluation over all models: total `demand` and `current` pod
     /// targets in, `(model, new target)` changes out. Models are visited
     /// hottest (highest per-replica demand) first, so the shared budget
@@ -332,6 +353,9 @@ pub struct PerModelScaler {
     cfg: AutoscalerConfig,
     clock: Clock,
     stop: Arc<AtomicBool>,
+    /// Paused scalers hold all targets (federation: a failed site's
+    /// scaler must not fight the outage drain).
+    paused: AtomicBool,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     per_model: BTreeMap<String, ModelScaleHandles>,
 }
@@ -346,10 +370,42 @@ impl PerModelScaler {
         clock: Clock,
         registry: Registry,
     ) -> Arc<Self> {
+        Self::start_inner(cfg, models, cluster, demand, clock, registry, None)
+    }
+
+    /// [`PerModelScaler::start`] as one federation site's local scaler:
+    /// the `autoscaler_model_*` series gain a `site` label and the
+    /// planner's budget becomes the site's slice of the global pod
+    /// budget, adjusted at runtime by the rebalancer via
+    /// [`PerModelScaler::set_budget`].
+    pub fn start_for_site(
+        cfg: AutoscalerConfig,
+        models: Vec<String>,
+        cluster: Arc<Cluster>,
+        demand: DemandProbe,
+        clock: Clock,
+        registry: Registry,
+        site: &str,
+    ) -> Arc<Self> {
+        Self::start_inner(cfg, models, cluster, demand, clock, registry, Some(site))
+    }
+
+    fn start_inner(
+        cfg: AutoscalerConfig,
+        models: Vec<String>,
+        cluster: Arc<Cluster>,
+        demand: DemandProbe,
+        clock: Clock,
+        registry: Registry,
+        site: Option<&str>,
+    ) -> Arc<Self> {
         let per_model = models
             .iter()
             .map(|m| {
-                let l = labels(&[("model", m)]);
+                let l = match site {
+                    None => labels(&[("model", m)]),
+                    Some(site) => labels(&[("model", m), ("site", site)]),
+                };
                 (
                     m.clone(),
                     ModelScaleHandles {
@@ -369,6 +425,7 @@ impl PerModelScaler {
             cfg: cfg.clone(),
             clock: clock.clone(),
             stop: Arc::new(AtomicBool::new(false)),
+            paused: AtomicBool::new(false),
             handle: Mutex::new(None),
             per_model,
         });
@@ -386,9 +443,31 @@ impl PerModelScaler {
         scaler
     }
 
+    /// Replace the planner's shared pod budget (see
+    /// [`PerModelPlanner::set_budget`]). Takes effect on the next
+    /// evaluation; an over-budget fleet shrinks through the normal
+    /// scale-down path rather than being culled immediately.
+    pub fn set_budget(&self, budget: usize) {
+        self.planner.lock().unwrap().set_budget(budget);
+    }
+
+    /// Suspend target changes (outage drain). The poll loop keeps
+    /// running but every evaluation holds.
+    pub fn pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Resume target changes after [`PerModelScaler::pause`].
+    pub fn resume(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+
     /// One synchronous evaluation (used by the poll loop and by tests).
     /// Returns the number of target changes applied.
     pub fn evaluate_once(&self) -> usize {
+        if self.paused.load(Ordering::SeqCst) {
+            return 0;
+        }
         let now = self.clock.now_secs();
         let mut demand = BTreeMap::new();
         let mut current = BTreeMap::new();
@@ -415,6 +494,109 @@ impl PerModelScaler {
             h.desired.set(*n as f64);
         }
         changes.len()
+    }
+
+    /// Stop the poll loop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// CPU-group autoscaler (mixed-fleet follow-on): drives
+/// [`Cluster::set_cpu_desired`] from the *class-partitioned* demand
+/// signal. The trigger metric is the CPU pods' share of each
+/// CPU-servable model's demand — `Σ demand(m) × cpu_share(m)` divided by
+/// the current CPU pod count — so GPU backlog no longer inflates (or
+/// masks) the CPU group's trigger, which was the failure mode behind the
+/// earlier mixed-fleet validation warning. Bounds come from
+/// `engines.cpu_replicas` (floor) and `engines.cpu_max_replicas` (cap);
+/// the threshold is shared with per-model scaling
+/// (`autoscaler.per_model.threshold`), both being per-replica demand.
+pub struct CpuScaler {
+    core: Mutex<ScalerCore>,
+    demand: DemandProbe,
+    cpu_share: CpuShareProbe,
+    cluster: Arc<Cluster>,
+    /// CPU-servable models (compat includes a CPU backend).
+    models: Vec<String>,
+    cfg: AutoscalerConfig,
+    clock: Clock,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    m_demand: Gauge,
+    m_desired: Gauge,
+}
+
+impl CpuScaler {
+    /// Start polling every `cfg.poll_interval` of clock time. `cpu_min`
+    /// / `cpu_max` are the CPU group's bounds (`engines.cpu_replicas` /
+    /// `engines.effective_cpu_max()`); the remaining knobs (cooldown,
+    /// stabilization, step, per-model threshold) come from `cfg`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        cfg: &AutoscalerConfig,
+        cpu_min: usize,
+        cpu_max: usize,
+        models: Vec<String>,
+        cluster: Arc<Cluster>,
+        demand: DemandProbe,
+        cpu_share: CpuShareProbe,
+        clock: Clock,
+        registry: Registry,
+    ) -> Arc<Self> {
+        let mut core_cfg = cfg.clone();
+        core_cfg.threshold = cfg.per_model.threshold;
+        core_cfg.min_replicas = cpu_min;
+        core_cfg.max_replicas = cpu_max;
+        let l = labels(&[]);
+        let scaler = Arc::new(CpuScaler {
+            core: Mutex::new(ScalerCore::new(core_cfg.clone(), clock.now_secs())),
+            demand,
+            cpu_share,
+            cluster,
+            models,
+            cfg: core_cfg,
+            clock: clock.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            m_demand: registry.gauge("autoscaler_cpu_demand", &l),
+            m_desired: registry.gauge("autoscaler_cpu_desired", &l),
+        });
+        let s = Arc::clone(&scaler);
+        let handle = std::thread::Builder::new()
+            .name("cpu-autoscaler".into())
+            .spawn(move || {
+                while !s.stop.load(Ordering::SeqCst) {
+                    s.evaluate_once();
+                    s.clock.sleep(s.cfg.poll_interval);
+                }
+            })
+            .expect("spawning cpu autoscaler");
+        *scaler.handle.lock().unwrap() = Some(handle);
+        scaler
+    }
+
+    /// One synchronous evaluation (used by the poll loop and by tests).
+    pub fn evaluate_once(&self) -> Decision {
+        let now = self.clock.now_secs();
+        let total: f64 = self
+            .models
+            .iter()
+            .map(|m| (self.demand)(m, now) * (self.cpu_share)(m))
+            .sum();
+        self.m_demand.set(total);
+        let current = self.cluster.cpu_desired();
+        let per_replica = total / current.max(1) as f64;
+        let decision = self.core.lock().unwrap().evaluate(now, per_replica, current);
+        if let Some(n) = decision.target() {
+            log::info!("cpu autoscaler: cpu demand {total:.1}, cpu pods {current} -> {n}");
+            self.cluster.set_cpu_desired(n);
+        }
+        self.m_desired.set(self.cluster.cpu_desired() as f64);
+        decision
     }
 
     /// Stop the poll loop.

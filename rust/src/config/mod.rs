@@ -12,9 +12,9 @@ pub mod yaml;
 
 pub use schema::{
     AutoscalerConfig, BatchMode, CanaryConfig, ClusterConfig, DeploymentConfig,
-    EnginesConfig, ExecutionMode, GatewayConfig, LbPolicy, ModelConfig,
-    ModelPlacementConfig, MonitoringConfig, ObservabilityConfig, PerModelScalingConfig,
-    PlacementPolicy, PriorityConfig, RpcConfig, ServerConfig, ServiceModelConfig,
-    SloConfig, VersionSpec,
+    EnginesConfig, ExecutionMode, FederationConfig, GatewayConfig, LbPolicy,
+    ModelConfig, ModelPlacementConfig, MonitoringConfig, ObservabilityConfig,
+    PerModelScalingConfig, PlacementPolicy, PriorityConfig, RpcConfig, ServerConfig,
+    ServiceModelConfig, SiteConfig, SloConfig, VersionSpec,
 };
 pub use yaml::Value;

@@ -214,13 +214,35 @@ impl Default for VersionSpec {
 }
 
 /// Canary split for one model (`server.models[].canary`).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct CanaryConfig {
     /// The version receiving canary traffic (must be registered and
     /// distinct from the incumbent).
     pub version: u32,
     /// Fraction of unversioned traffic routed to the canary, in (0, 1).
+    /// With a `ramp`, this is the *starting* weight (the first stage).
     pub weight: f64,
+    /// Optional staged weight ramp (e.g. `[0.01, 0.1, 0.5]`): the split
+    /// starts at the first stage and advances to the next one every
+    /// `ramp_interval` — but only while the auto-rollback evaluator
+    /// stays quiet for the model. Stages must be strictly increasing,
+    /// each in (0, 1). Empty = fixed `weight` (no ramp). When a ramp is
+    /// set, `weight` must be omitted (the ramp defines it).
+    pub ramp: Vec<f64>,
+    /// Clock time between ramp stage advances. Must be > 0 when `ramp`
+    /// is non-empty.
+    pub ramp_interval: Duration,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        CanaryConfig {
+            version: 2,
+            weight: 0.1,
+            ramp: Vec::new(),
+            ramp_interval: Duration::from_secs(30),
+        }
+    }
 }
 
 impl ModelConfig {
@@ -563,6 +585,13 @@ pub struct EnginesConfig {
     /// whose preference list includes one. Requires the modelmesh
     /// (routing must follow advertised labels on a split fleet).
     pub cpu_replicas: usize,
+    /// Ceiling for per-model CPU autoscaling: when above `cpu_replicas`
+    /// (and the per-model scaler is enabled), a dedicated CPU trigger —
+    /// fed only by the CPU-attributed share of each CPU-servable model's
+    /// demand, so GPU load cannot ratchet CPU pods — drives
+    /// `Cluster::set_cpu_desired` between `cpu_replicas` (floor) and
+    /// this cap. 0 (default) = the CPU group stays statically sized.
+    pub cpu_max_replicas: usize,
     /// onnx-sim latency multiplier over the model's calibrated GPU
     /// service model (CPU inference is slower). Must be > 0.
     pub onnx_slowdown: f64,
@@ -580,10 +609,24 @@ impl Default for EnginesConfig {
         EnginesConfig {
             default_backend: "pjrt".into(),
             cpu_replicas: 0,
+            cpu_max_replicas: 0,
             onnx_slowdown: 4.0,
             onnx_load_multiplier: 0.5,
             onnx_memory_multiplier: 1.0,
         }
+    }
+}
+
+impl EnginesConfig {
+    /// Largest CPU group any configuration can reach (the scaler's
+    /// ceiling when CPU autoscaling is on, the static size otherwise).
+    pub fn effective_cpu_max(&self) -> usize {
+        self.cpu_max_replicas.max(self.cpu_replicas)
+    }
+
+    /// Is the per-model CPU scaler configured to actually move the group?
+    pub fn cpu_scaling_enabled(&self) -> bool {
+        self.cpu_max_replicas > self.cpu_replicas
     }
 }
 
@@ -601,6 +644,103 @@ pub struct ClusterConfig {
     pub termination_grace: Duration,
     /// Probability a pod start fails and is retried (failure injection).
     pub pod_failure_rate: f64,
+}
+
+/// One federation site (`federation.sites[]`): an independent cluster
+/// with its own pod budget, accelerator mix and WAN distance to the
+/// other sites (the paper's Purdue / NRP / UChicago facilities).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteConfig {
+    /// Site name (labels every per-site metric series and pod name).
+    pub name: String,
+    /// Ceiling on GPU pods the per-site scaler may run. The global
+    /// rebalancer shifts budget *between* sites, conserving the sum of
+    /// the configured budgets.
+    pub pod_budget: usize,
+    /// Initial GPU pods booted at this site.
+    pub replicas: usize,
+    /// Node count of this site's cluster.
+    pub nodes: usize,
+    /// GPU slots per node at this site.
+    pub gpus_per_node: usize,
+    /// CPU-class pods booted at this site (accelerator mix).
+    pub cpu_replicas: usize,
+    /// WAN round-trip latency from this site to each named peer site
+    /// (float seconds). Missing peers (and the site itself) cost zero.
+    /// The federation gateway is homed at `federation.gateway_site`, so
+    /// only that site's map prices remote hops.
+    pub wan: BTreeMap<String, Duration>,
+}
+
+impl Default for SiteConfig {
+    fn default() -> Self {
+        SiteConfig {
+            name: String::new(),
+            pod_budget: 4,
+            replicas: 1,
+            nodes: 2,
+            gpus_per_node: 2,
+            cpu_replicas: 0,
+            wan: BTreeMap::new(),
+        }
+    }
+}
+
+/// Multi-site federation section (`federation`). Empty `sites` (the
+/// default) keeps the deployment single-cluster and byte-identical to
+/// the pre-federation behavior. With two or more sites the control
+/// plane goes hierarchical: per-site clusters, placement loops and
+/// per-model scalers, a federation-tier gateway routing each model's
+/// traffic to the cheapest site with warm capacity, and a global
+/// rebalancer shifting pod budget between sites from site-labeled
+/// demand.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FederationConfig {
+    /// The federated sites. Empty = federation off (single cluster).
+    pub sites: Vec<SiteConfig>,
+    /// Site the federation gateway is homed at (its `wan` map prices
+    /// remote hops). Empty = the first listed site.
+    pub gateway_site: String,
+    /// Cadence of the global budget rebalancer (and of its site-outage
+    /// detection).
+    pub rebalance_interval: Duration,
+    /// Mean queued requests per warm replica above which a site counts
+    /// as saturated: the federation router then spills the model's
+    /// traffic over to the next-cheapest site with warm capacity.
+    pub spillover_queue_depth: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            sites: Vec::new(),
+            gateway_site: String::new(),
+            rebalance_interval: Duration::from_secs(5),
+            spillover_queue_depth: 8.0,
+        }
+    }
+}
+
+impl FederationConfig {
+    /// Is multi-site federation active?
+    pub fn enabled(&self) -> bool {
+        !self.sites.is_empty()
+    }
+
+    /// The effective gateway home site (explicit or first listed).
+    pub fn gateway_site(&self) -> &str {
+        if self.gateway_site.is_empty() {
+            self.sites.first().map(|s| s.name.as_str()).unwrap_or("")
+        } else {
+            &self.gateway_site
+        }
+    }
+
+    /// Sum of the configured per-site pod budgets (conserved by the
+    /// rebalancer).
+    pub fn total_budget(&self) -> usize {
+        self.sites.iter().map(|s| s.pod_budget).sum()
+    }
 }
 
 /// Monitoring section (Prometheus analogue, §2.3).
@@ -681,6 +821,8 @@ pub struct DeploymentConfig {
     pub rpc: RpcConfig,
     pub autoscaler: AutoscalerConfig,
     pub cluster: ClusterConfig,
+    /// Multi-site federation (empty `sites` = single-cluster mode).
+    pub federation: FederationConfig,
     pub monitoring: MonitoringConfig,
     /// Model placement / model-aware routing (the modelmesh).
     pub model_placement: ModelPlacementConfig,
@@ -835,6 +977,7 @@ impl Default for DeploymentConfig {
             rpc: RpcConfig::default(),
             autoscaler: AutoscalerConfig::default(),
             cluster: ClusterConfig::default(),
+            federation: FederationConfig::default(),
             monitoring: MonitoringConfig::default(),
             model_placement: ModelPlacementConfig::default(),
             engines: EnginesConfig::default(),
@@ -851,8 +994,8 @@ impl Default for DeploymentConfig {
 pub mod keys {
     /// Top-level sections.
     pub const ROOT: &[&str] = &[
-        "name", "server", "gateway", "rpc", "autoscaler", "cluster", "monitoring",
-        "model_placement", "engines", "observability", "time_scale",
+        "name", "server", "gateway", "rpc", "autoscaler", "cluster", "federation",
+        "monitoring", "model_placement", "engines", "observability", "time_scale",
     ];
     /// `server` section.
     pub const SERVER: &[&str] = &[
@@ -875,7 +1018,7 @@ pub mod keys {
     /// a bare version number).
     pub const VERSION: &[&str] = &["version", "slowdown"];
     /// `server.models[].canary`.
-    pub const CANARY: &[&str] = &["version", "weight"];
+    pub const CANARY: &[&str] = &["version", "weight", "ramp", "ramp_interval"];
     /// `gateway` section.
     pub const GATEWAY: &[&str] = &[
         "listen", "lb_policy", "rate_limit_rps", "rate_limit_burst", "auth_secret",
@@ -900,6 +1043,15 @@ pub mod keys {
         "nodes", "gpus_per_node", "pod_start_delay", "termination_grace",
         "pod_failure_rate",
     ];
+    /// `federation` section (multi-site mode).
+    pub const FEDERATION: &[&str] = &[
+        "sites", "gateway_site", "rebalance_interval", "spillover_queue_depth",
+    ];
+    /// `federation.sites[]` entries.
+    pub const FEDERATION_SITE: &[&str] = &[
+        "name", "pod_budget", "replicas", "nodes", "gpus_per_node", "cpu_replicas",
+        "wan",
+    ];
     /// `monitoring` section.
     pub const MONITORING: &[&str] = &["listen", "scrape_interval", "retention", "tracing"];
     /// `model_placement` section.
@@ -909,8 +1061,8 @@ pub mod keys {
     ];
     /// `engines` section (the multi-backend layer).
     pub const ENGINES: &[&str] = &[
-        "default_backend", "cpu_replicas", "onnx_slowdown", "onnx_load_multiplier",
-        "onnx_memory_multiplier",
+        "default_backend", "cpu_replicas", "cpu_max_replicas", "onnx_slowdown",
+        "onnx_load_multiplier", "onnx_memory_multiplier",
     ];
     /// `observability` section (tracing + SLO alerting).
     pub const OBSERVABILITY: &[&str] = &[
@@ -934,6 +1086,8 @@ pub mod keys {
         ("autoscaler", AUTOSCALER),
         ("autoscaler.per_model", AUTOSCALER_PER_MODEL),
         ("cluster", CLUSTER),
+        ("federation", FEDERATION),
+        ("federation.sites[]", FEDERATION_SITE),
         ("monitoring", MONITORING),
         ("model_placement", MODEL_PLACEMENT),
         ("engines", ENGINES),
@@ -1149,14 +1303,44 @@ impl DeploymentConfig {
                             let v = c
                                 .get("version")
                                 .context("'server.models[].canary' needs 'version'")?;
-                            let weight = c
-                                .get("weight")
-                                .context("'server.models[].canary' needs 'weight'")?
-                                .as_f64()
-                                .context("'canary.weight' must be a number")?;
+                            let ramp = match c.get("ramp") {
+                                None => Vec::new(),
+                                Some(list) => list
+                                    .as_seq()
+                                    .context("'canary.ramp' must be a sequence of weights")?
+                                    .iter()
+                                    .map(|w| {
+                                        w.as_f64()
+                                            .context("'canary.ramp' entries must be numbers")
+                                    })
+                                    .collect::<Result<_>>()?,
+                            };
+                            let weight = match (c.get("weight"), ramp.first()) {
+                                (Some(w), None) => {
+                                    w.as_f64().context("'canary.weight' must be a number")?
+                                }
+                                // The ramp defines the weight schedule;
+                                // a separate fixed weight would conflict.
+                                (Some(_), Some(_)) => bail!(
+                                    "'server.models[].canary' sets both 'weight' and \
+                                     'ramp'; the ramp's first stage is the starting \
+                                     weight — drop 'weight'"
+                                ),
+                                (None, Some(first)) => *first,
+                                (None, None) => bail!(
+                                    "'server.models[].canary' needs 'weight' (or a 'ramp')"
+                                ),
+                            };
+                            let dc = CanaryConfig::default();
                             Some(CanaryConfig {
                                 version: version_number(v, "server.models[].canary.version")?,
                                 weight,
+                                ramp,
+                                ramp_interval: get_duration(
+                                    c,
+                                    "ramp_interval",
+                                    dc.ramp_interval,
+                                )?,
                             })
                         }
                     };
@@ -1320,6 +1504,66 @@ impl DeploymentConfig {
             pod_failure_rate: get_f64(cl, "pod_failure_rate", d.cluster.pod_failure_rate)?,
         };
 
+        let fe = root.get("federation").unwrap_or(&empty);
+        check_keys(fe, keys::FEDERATION, "federation")?;
+        let sites = match fe.get("sites") {
+            None => Vec::new(),
+            Some(list) => {
+                let items = list
+                    .as_seq()
+                    .context("'federation.sites' must be a sequence")?;
+                let mut sites = Vec::new();
+                for item in items {
+                    check_keys(item, keys::FEDERATION_SITE, "federation.sites[]")?;
+                    let ds = SiteConfig::default();
+                    let wan = match item.get("wan") {
+                        None => BTreeMap::new(),
+                        Some(map) => {
+                            let entries = map.as_map().context(
+                                "'federation.sites[].wan' must be a map of \
+                                 site: seconds",
+                            )?;
+                            let mut wan = BTreeMap::new();
+                            for (peer, secs) in entries {
+                                let secs = secs.as_f64().with_context(|| {
+                                    format!("'wan.{peer}' must be seconds (number)")
+                                })?;
+                                if secs < 0.0 {
+                                    bail!("'wan.{peer}' must be non-negative");
+                                }
+                                wan.insert(peer.clone(), Duration::from_secs_f64(secs));
+                            }
+                            wan
+                        }
+                    };
+                    sites.push(SiteConfig {
+                        name: get_str(item, "name", "")?,
+                        pod_budget: get_usize(item, "pod_budget", ds.pod_budget)?,
+                        replicas: get_usize(item, "replicas", ds.replicas)?,
+                        nodes: get_usize(item, "nodes", ds.nodes)?,
+                        gpus_per_node: get_usize(item, "gpus_per_node", ds.gpus_per_node)?,
+                        cpu_replicas: get_usize(item, "cpu_replicas", ds.cpu_replicas)?,
+                        wan,
+                    });
+                }
+                sites
+            }
+        };
+        let federation = FederationConfig {
+            sites,
+            gateway_site: get_str(fe, "gateway_site", &d.federation.gateway_site)?,
+            rebalance_interval: get_duration(
+                fe,
+                "rebalance_interval",
+                d.federation.rebalance_interval,
+            )?,
+            spillover_queue_depth: get_f64(
+                fe,
+                "spillover_queue_depth",
+                d.federation.spillover_queue_depth,
+            )?,
+        };
+
         let mon = root.get("monitoring").unwrap_or(&empty);
         check_keys(mon, keys::MONITORING, "monitoring")?;
         let monitoring = MonitoringConfig {
@@ -1356,6 +1600,7 @@ impl DeploymentConfig {
         let engines = EnginesConfig {
             default_backend: get_str(eg, "default_backend", &d.engines.default_backend)?,
             cpu_replicas: get_usize(eg, "cpu_replicas", d.engines.cpu_replicas)?,
+            cpu_max_replicas: get_usize(eg, "cpu_max_replicas", d.engines.cpu_max_replicas)?,
             onnx_slowdown: get_f64(eg, "onnx_slowdown", d.engines.onnx_slowdown)?,
             onnx_load_multiplier: get_f64(
                 eg,
@@ -1434,6 +1679,7 @@ impl DeploymentConfig {
             rpc,
             autoscaler,
             cluster,
+            federation,
             monitoring,
             model_placement,
             engines,
@@ -1543,6 +1789,30 @@ impl DeploymentConfig {
                  could overcommit instance memory"
             );
         }
+        if eg.cpu_max_replicas > 0 {
+            if eg.cpu_max_replicas < eg.cpu_replicas {
+                bail!(
+                    "engines.cpu_max_replicas ({}) is below cpu_replicas ({}): the \
+                     CPU scaler's ceiling cannot sit under its floor",
+                    eg.cpu_max_replicas,
+                    eg.cpu_replicas
+                );
+            }
+            if eg.cpu_replicas == 0 {
+                bail!(
+                    "engines.cpu_max_replicas requires engines.cpu_replicas >= 1: \
+                     CPU autoscaling grows an existing CPU group, it does not \
+                     bootstrap one from zero"
+                );
+            }
+            if eg.cpu_max_replicas > eg.cpu_replicas && !self.autoscaler.enabled {
+                bail!(
+                    "engines.cpu_max_replicas above cpu_replicas needs \
+                     autoscaler.enabled: true (nothing else drives \
+                     Cluster::set_cpu_desired)"
+                );
+            }
+        }
         for m in &self.server.models {
             let mut seen = std::collections::BTreeSet::new();
             for b in &m.backends {
@@ -1637,6 +1907,35 @@ impl DeploymentConfig {
                         "model '{}' canary weight must be in (0, 1), got {}",
                         m.name,
                         c.weight
+                    );
+                }
+                let mut prev = 0.0;
+                for (i, w) in c.ramp.iter().enumerate() {
+                    if !(*w > 0.0 && *w < 1.0) {
+                        bail!(
+                            "model '{}' canary ramp stage {} must be in (0, 1), got {}",
+                            m.name,
+                            i,
+                            w
+                        );
+                    }
+                    if *w <= prev {
+                        bail!(
+                            "model '{}' canary ramp must be strictly increasing \
+                             (stage {} is {} after {})",
+                            m.name,
+                            i,
+                            w,
+                            prev
+                        );
+                    }
+                    prev = *w;
+                }
+                if !c.ramp.is_empty() && c.ramp_interval.is_zero() {
+                    bail!(
+                        "model '{}' canary ramp_interval must be > 0 when a ramp \
+                         is set",
+                        m.name
                     );
                 }
                 if m.pinned_version.is_some() {
@@ -1780,14 +2079,14 @@ impl DeploymentConfig {
         // autoscaler must be able to reach its cap with them in place —
         // otherwise scale-ups park GPU pods in Pending forever.
         if self.autoscaler.enabled
-            && self.autoscaler.max_replicas + self.engines.cpu_replicas > capacity
+            && self.autoscaler.max_replicas + self.engines.effective_cpu_max() > capacity
         {
             bail!(
-                "autoscaler.max_replicas ({}) + engines.cpu_replicas ({}) exceeds \
+                "autoscaler.max_replicas ({}) + the largest CPU group ({}) exceeds \
                  cluster slot capacity ({}): the autoscaler could target more GPU \
                  pods than free slots exist",
                 self.autoscaler.max_replicas,
-                self.engines.cpu_replicas,
+                self.engines.effective_cpu_max(),
                 capacity
             );
         }
@@ -1802,6 +2101,116 @@ impl DeploymentConfig {
         }
         if !(0.0..=1.0).contains(&self.cluster.pod_failure_rate) {
             bail!("cluster.pod_failure_rate must be in [0, 1]");
+        }
+        // Multi-site federation.
+        let fed = &self.federation;
+        if fed.enabled() {
+            if fed.sites.len() < 2 {
+                bail!(
+                    "federation.sites needs at least 2 sites (one site is just \
+                     the single-cluster mode — drop the federation section)"
+                );
+            }
+            if !self.model_placement.mesh_enabled() {
+                bail!(
+                    "federation requires the modelmesh (site-local placement \
+                     drives the warm-capacity signal): set model_placement.policy: \
+                     dynamic or a model_placement.memory_budget_mb > 0"
+                );
+            }
+            if !(self.autoscaler.enabled && self.autoscaler.per_model.enabled) {
+                bail!(
+                    "federation requires autoscaler.per_model.enabled: the global \
+                     rebalancer shifts the per-site scalers' pod budgets — with no \
+                     site-local per-model scaler there is nothing to rebalance"
+                );
+            }
+            if fed.rebalance_interval.is_zero() {
+                bail!("federation.rebalance_interval must be > 0");
+            }
+            if fed.spillover_queue_depth <= 0.0 {
+                bail!("federation.spillover_queue_depth must be > 0");
+            }
+            if self.engines.cpu_replicas > 0 || self.engines.cpu_max_replicas > 0 {
+                bail!(
+                    "federation sizes CPU groups per site \
+                     (federation.sites[].cpu_replicas); engines.cpu_replicas / \
+                     cpu_max_replicas must stay 0 in federated mode"
+                );
+            }
+            let mut names = std::collections::BTreeSet::new();
+            for s in &fed.sites {
+                if s.name.is_empty() {
+                    bail!("federation.sites[] entries need a non-empty 'name'");
+                }
+                if !names.insert(s.name.as_str()) {
+                    bail!("federation.sites lists site '{}' twice", s.name);
+                }
+            }
+            if !fed.gateway_site.is_empty() && !names.contains(fed.gateway_site.as_str()) {
+                bail!(
+                    "federation.gateway_site '{}' is not a listed site",
+                    fed.gateway_site
+                );
+            }
+            let floor = self.autoscaler.per_model.min_replicas * self.server.models.len();
+            for s in &fed.sites {
+                let cap = s.nodes * s.gpus_per_node;
+                if s.replicas == 0 {
+                    bail!("federation site '{}' needs replicas >= 1", s.name);
+                }
+                if s.replicas > s.pod_budget {
+                    bail!(
+                        "federation site '{}' boots {} replicas over its pod_budget {}",
+                        s.name,
+                        s.replicas,
+                        s.pod_budget
+                    );
+                }
+                // Every site must be able to hold every model's minimum:
+                // the rebalancer floors each site's budget there, and
+                // outage recovery re-seeds a site at exactly the mins.
+                if s.pod_budget < floor {
+                    bail!(
+                        "federation site '{}' pod_budget ({}) is below the per-model \
+                         floor ({} min_replicas x {} models = {}): the site could \
+                         not keep every model warm",
+                        s.name,
+                        s.pod_budget,
+                        self.autoscaler.per_model.min_replicas,
+                        self.server.models.len(),
+                        floor
+                    );
+                }
+                if s.pod_budget + s.cpu_replicas > cap {
+                    bail!(
+                        "federation site '{}' pod_budget ({}) + cpu_replicas ({}) \
+                         exceeds its slot capacity ({} nodes x {} gpus = {})",
+                        s.name,
+                        s.pod_budget,
+                        s.cpu_replicas,
+                        s.nodes,
+                        s.gpus_per_node,
+                        cap
+                    );
+                }
+                for peer in s.wan.keys() {
+                    if !names.contains(peer.as_str()) {
+                        bail!(
+                            "federation site '{}' wan map names unknown site '{}'",
+                            s.name,
+                            peer
+                        );
+                    }
+                    if peer == &s.name {
+                        bail!(
+                            "federation site '{}' wan map prices a hop to itself \
+                             (local dispatch is free by definition)",
+                            s.name
+                        );
+                    }
+                }
+            }
         }
         if self.model_placement.memory_budget_mb < 0.0 {
             bail!("model_placement.memory_budget_mb must be >= 0");
@@ -2653,7 +3062,10 @@ observability:
             ]
         );
         assert_eq!(m.incumbent_version(), Some(1));
-        assert_eq!(m.canary, Some(CanaryConfig { version: 2, weight: 0.1 }));
+        assert_eq!(
+            m.canary,
+            Some(CanaryConfig { version: 2, weight: 0.1, ..CanaryConfig::default() })
+        );
         assert_eq!(m.pinned_version, None);
         let ob = &cfg.observability;
         assert_eq!(ob.rollback_latency_factor, 4.0);

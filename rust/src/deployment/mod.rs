@@ -24,14 +24,17 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::autoscaler::{Autoscaler, DemandProbe, PerModelScaler};
-use crate::config::{DeploymentConfig, ExecutionMode, ModelConfig, PerModelScalingConfig};
+use crate::autoscaler::{Autoscaler, CpuScaler, CpuShareProbe, DemandProbe, PerModelScaler};
+use crate::config::{
+    ClusterConfig, DeploymentConfig, ExecutionMode, ModelConfig, PerModelScalingConfig,
+};
 use crate::engine::{AcceleratorClass, BackendRegistry, EngineCatalog};
+use crate::federation::{Federation, FederationRouter, Rebalancer, Site};
 use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
 use crate::metrics::exposition::MetricsServer;
 use crate::metrics::{MetricStore, Registry, Scraper};
-use crate::modelmesh::{initial_placement, ModelRouter, PlacementController};
+use crate::modelmesh::{initial_placement, ModelRouter, PlacementController, RampTask};
 use crate::orchestrator::{Cluster, InstanceFactory};
 use crate::runtime::PjrtRuntime;
 use crate::server::{split_version, versioned_name, Instance, ModelRepository};
@@ -65,6 +68,16 @@ pub struct Deployment {
     /// Canary auto-rollback evaluator, when any model configures a
     /// `canary` split.
     pub rollback: Option<Arc<RollbackEngine>>,
+    /// Multi-site federation control plane, when `federation.sites` is
+    /// non-empty. The single-cluster fields above then describe the
+    /// gateway site's slice of the deployment (`cluster`, `router` and
+    /// `placement` are that site's); the other sites live here.
+    pub federation: Option<Arc<Federation>>,
+    /// Class-partitioned CPU autoscaler, when `engines.cpu_max_replicas`
+    /// lifts the CPU group's ceiling above its floor.
+    pub cpu_scaler: Option<Arc<CpuScaler>>,
+    /// Staged canary ramp loops (one per model with `canary.ramp`).
+    ramp_tasks: Vec<RampTask>,
     metrics_http: Option<MetricsServer>,
     _slo_task: Option<SloTask>,
     _rollback_task: Option<RollbackTask>,
@@ -94,6 +107,9 @@ impl Deployment {
     /// Boot a deployment (`helm install`).
     pub fn up(cfg: DeploymentConfig) -> Result<Self> {
         cfg.validate()?;
+        if cfg.federation.enabled() {
+            return Self::up_federated(cfg);
+        }
         let clock = if (cfg.time_scale - 1.0).abs() < f64::EPSILON {
             Clock::real()
         } else {
@@ -227,19 +243,22 @@ impl Deployment {
             // The global autoscaler's trigger metrics aggregate the
             // whole fleet, CPU pods included, but its decisions only
             // resize the GPU group — on a mixed fleet the signal is
-            // diluted by capacity scaling cannot touch. (CPU-only
+            // diluted by capacity scaling cannot touch, unless the
+            // class-partitioned CPU scaler (`engines.cpu_max_replicas`)
+            // is managing the CPU group from its own trigger. (CPU-only
             // models under an enabled autoscaler are rejected by
             // validation; this is the softer all-models-GPU-capable
             // case.)
             if cfg.autoscaler.enabled
                 && !cfg.autoscaler.per_model.enabled
                 && cfg.engines.cpu_replicas > 0
+                && !cfg.engines.cpu_scaling_enabled()
             {
                 log::warn!(
                     "global autoscaler on a mixed fleet: trigger metrics average \
                      over {} CPU pod(s) whose capacity scaling cannot change — \
-                     expect a diluted signal (class-partitioned triggers are a \
-                     ROADMAP follow-on)",
+                     expect a diluted signal (set engines.cpu_max_replicas to put \
+                     the CPU group under its own class-partitioned trigger)",
                     cfg.engines.cpu_replicas
                 );
             }
@@ -566,6 +585,52 @@ impl Deployment {
             }
             _ => None,
         };
+        // Class-partitioned CPU autoscaling (`engines.cpu_max_replicas`):
+        // a dedicated trigger fed only by the CPU-attributed share of
+        // each model's demand drives `Cluster::set_cpu_desired` between
+        // the configured floor and ceiling — GPU saturation cannot
+        // ratchet CPU pods, and vice versa. Validation guarantees the
+        // mesh (and so placement + router) whenever this is enabled.
+        let cpu_scaler = match (&placement, &router) {
+            (Some(p), Some(r))
+                if cfg.autoscaler.enabled && cfg.engines.cpu_scaling_enabled() =>
+            {
+                let demand: DemandProbe = {
+                    let p = Arc::clone(p);
+                    Arc::new(move |model: &str, now: f64| p.demand_for(model, now))
+                };
+                // A model's CPU share is the CPU-class fraction of its
+                // warm endpoints: demand on a model served entirely by
+                // GPU pods contributes nothing to the CPU trigger.
+                let cpu_share: CpuShareProbe = {
+                    let r = Arc::clone(r);
+                    let repo = Arc::clone(&repository);
+                    Arc::new(move |model: &str| {
+                        let eps = r.endpoints_for(&repo.serving_name(model));
+                        if eps.is_empty() {
+                            return 0.0;
+                        }
+                        let cpu = eps
+                            .iter()
+                            .filter(|i| !i.backend_names().iter().any(|b| b == "pjrt"))
+                            .count();
+                        cpu as f64 / eps.len() as f64
+                    })
+                };
+                Some(CpuScaler::start(
+                    &cfg.autoscaler,
+                    cfg.engines.cpu_replicas,
+                    cfg.engines.effective_cpu_max(),
+                    model_names.clone(),
+                    Arc::clone(&cluster),
+                    demand,
+                    cpu_share,
+                    clock.clone(),
+                    registry.clone(),
+                ))
+            }
+            _ => None,
+        };
         let mut global_scaler_cfg = cfg.autoscaler.clone();
         if per_model_scaler.is_some() {
             global_scaler_cfg.enabled = false;
@@ -663,6 +728,20 @@ impl Deployment {
             _ => (None, None),
         };
 
+        // Staged canary ramps: one clock loop per model with a
+        // configured `canary.ramp`, advancing the split stage by stage
+        // while the rollback evaluator stays quiet for the model.
+        let ramp_tasks = match &router {
+            Some(r) => Self::start_ramp_tasks(
+                &cfg,
+                vec![Arc::clone(r)],
+                rollback.clone(),
+                &clock,
+                &registry,
+            ),
+            None => Vec::new(),
+        };
+
         let metrics_http = if cfg.monitoring.listen.is_empty() {
             None
         } else {
@@ -704,6 +783,588 @@ impl Deployment {
             placement,
             slo,
             rollback,
+            federation: None,
+            cpu_scaler,
+            ramp_tasks,
+            metrics_http,
+            _slo_task: slo_task,
+            _rollback_task: rollback_task,
+            _scraper: scraper,
+        })
+    }
+
+    /// One [`RampTask`] per model with a configured `canary.ramp`. In
+    /// federated mode `routers` carries every site's router with the
+    /// policy (gateway-site) router first; the task advances the split
+    /// on all of them in lock-step.
+    fn start_ramp_tasks(
+        cfg: &DeploymentConfig,
+        routers: Vec<Arc<ModelRouter>>,
+        rollback: Option<Arc<RollbackEngine>>,
+        clock: &Clock,
+        registry: &Registry,
+    ) -> Vec<RampTask> {
+        let mut tasks = Vec::new();
+        for m in &cfg.server.models {
+            let Some(c) = &m.canary else { continue };
+            if c.ramp.is_empty() {
+                continue;
+            }
+            let Some(inc) = m.incumbent_version() else { continue };
+            tasks.push(RampTask::start(
+                routers.clone(),
+                m.name.clone(),
+                versioned_name(&m.name, inc),
+                versioned_name(&m.name, c.version),
+                c.ramp.clone(),
+                c.ramp_interval,
+                c.weight,
+                0x43414E52, // "CANR" — same split hash as the initial install
+                rollback.clone(),
+                clock.clone(),
+                registry,
+            ));
+        }
+        tasks
+    }
+
+    /// Boot a multi-site federation (`federation.sites` non-empty): one
+    /// full site control plane — cluster, mesh router, placement loop,
+    /// per-model scaler — per configured site, a federation-tier router
+    /// in front of them, the global budget rebalancer, and ONE gateway
+    /// homed at `federation.gateway_site`. The single-cluster fields of
+    /// the returned [`Deployment`] alias the gateway site's components.
+    fn up_federated(cfg: DeploymentConfig) -> Result<Self> {
+        let clock = if (cfg.time_scale - 1.0).abs() < f64::EPSILON {
+            Clock::real()
+        } else {
+            Clock::scaled(cfg.time_scale)
+        };
+        let registry = Registry::new();
+        let store = MetricStore::new(cfg.monitoring.retention);
+        let scraper = Scraper::start(
+            registry.clone(),
+            store.clone(),
+            clock.clone(),
+            cfg.monitoring.scrape_interval,
+        );
+        let tracer = if cfg.monitoring.tracing {
+            Tracer::new(clock.clone(), cfg.observability.trace_capacity, true)
+                .with_sample_rate(cfg.observability.trace_sample_rate)
+        } else {
+            Tracer::disabled()
+        };
+        tracer.bind_registry(&registry);
+
+        let model_names: Vec<String> =
+            cfg.server.models.iter().map(|m| m.name.clone()).collect();
+        let repository = Arc::new(match cfg.server.execution {
+            ExecutionMode::Real => {
+                let runtime = PjrtRuntime::cpu().context("creating PJRT client")?;
+                ModelRepository::load(&runtime, &cfg.server.repository, &model_names)?
+            }
+            ExecutionMode::Simulated => {
+                ModelRepository::load_metadata(&cfg.server.repository, &model_names)?
+            }
+        });
+
+        // Version expansion: identical to the single-cluster path — the
+        // same servable set exists at every site.
+        let mut serving_models: Vec<ModelConfig> = Vec::new();
+        for m in &cfg.server.models {
+            if m.versions.is_empty() {
+                serving_models.push(m.clone());
+                continue;
+            }
+            for spec in &m.versions {
+                repository.register_version(&m.name, spec.version)?;
+                let mut vm = m.clone();
+                vm.name = versioned_name(&m.name, spec.version);
+                vm.versions = Vec::new();
+                vm.incumbent = None;
+                vm.canary = None;
+                vm.pinned_version = None;
+                if (spec.slowdown - 1.0).abs() > f64::EPSILON {
+                    let scale = |d: Duration| Duration::from_secs_f64(d.as_secs_f64() * spec.slowdown);
+                    vm.service_model.base = scale(vm.service_model.base);
+                    vm.service_model.per_row = scale(vm.service_model.per_row);
+                }
+                serving_models.push(vm);
+            }
+            if let Some(v) = m.incumbent_version() {
+                repository.set_incumbent(&m.name, v);
+            }
+        }
+        let serving_names: Vec<String> =
+            serving_models.iter().map(|m| m.name.clone()).collect();
+        let active_serving: std::collections::BTreeSet<String> = cfg
+            .server
+            .models
+            .iter()
+            .flat_map(|m| {
+                if m.versions.is_empty() {
+                    return vec![m.name.clone()];
+                }
+                let mut active: Vec<String> = Vec::new();
+                if let Some(v) = m.incumbent_version() {
+                    active.push(versioned_name(&m.name, v));
+                }
+                if let Some(c) = &m.canary {
+                    active.push(versioned_name(&m.name, c.version));
+                }
+                if let Some(p) = m.pinned_version {
+                    active.push(versioned_name(&m.name, p));
+                }
+                active
+            })
+            .collect();
+
+        let backend_registry = Arc::new(BackendRegistry::from_config(&cfg.engines));
+        let engine_catalog = Arc::new(EngineCatalog::resolve(&cfg.server.models, &cfg.engines));
+        {
+            // CPU groups are sized per site in federated mode.
+            let any_cpu = cfg.federation.sites.iter().any(|s| s.cpu_replicas > 0);
+            let mut fleet_backends: Vec<String> = backend_registry
+                .for_class(AcceleratorClass::Gpu)
+                .iter()
+                .map(|b| b.name().to_string())
+                .collect();
+            if any_cpu {
+                fleet_backends.extend(
+                    backend_registry
+                        .for_class(AcceleratorClass::Cpu)
+                        .iter()
+                        .map(|b| b.name().to_string()),
+                );
+            }
+            for m in &cfg.server.models {
+                let hostable = engine_catalog
+                    .backends_for(&m.name)
+                    .iter()
+                    .any(|b| fleet_backends.contains(b));
+                if !hostable {
+                    log::warn!(
+                        "model '{}' prefers backends {:?} but no pod class in this \
+                         federation provides one: it will stay unplaceable (add \
+                         federation.sites[].cpu_replicas or widen \
+                         server.models[].backends)",
+                        m.name,
+                        engine_catalog.backends_for(&m.name),
+                    );
+                }
+            }
+        }
+
+        // Federation validation guarantees the mesh, so the placement
+        // catalog always exists here.
+        let catalog: Vec<(String, u64)> = serving_names
+            .iter()
+            .map(|n| {
+                let entry = repository.get(n).expect("model just loaded");
+                (n.clone(), entry.memory_bytes())
+            })
+            .collect();
+        let budget = cfg.model_placement.budget_bytes();
+        if budget > 0 {
+            for (name, mem) in &catalog {
+                anyhow::ensure!(
+                    *mem <= budget,
+                    "model '{name}' needs {mem} bytes but \
+                     model_placement.memory_budget_mb allows only {budget} \
+                     bytes per instance",
+                );
+            }
+        }
+
+        let mut resolved_models = serving_models;
+        for m in &mut resolved_models {
+            m.load_delay = Some(cfg.effective_load_delay(m));
+        }
+        let load_costs: BTreeMap<String, f64> = resolved_models
+            .iter()
+            .map(|m| (m.name.clone(), m.load_delay.unwrap_or_default().as_secs_f64()))
+            .collect();
+
+        // ONE instance factory shared by every site's cluster: pods come
+        // up with site-prefixed names (the cluster adds the prefix) but
+        // identical serving behavior. The boot-rotation counter is
+        // shared too, so initial placements stay balanced federation-
+        // wide rather than identical per site.
+        let factory: InstanceFactory = {
+            let repo = Arc::clone(&repository);
+            let models = resolved_models;
+            let clock = clock.clone();
+            let registry = registry.clone();
+            let base_opts = crate::server::InstanceOptions {
+                queue_capacity: cfg.server.queue_capacity,
+                util_window: cfg.server.util_window,
+                exec_mode: cfg.server.execution,
+                batch_mode: cfg.server.batch_mode,
+                max_bulk_wait: cfg.server.priorities.max_bulk_wait,
+                catalog: Arc::clone(&engine_catalog),
+                tracer: tracer.clone(),
+                ..Default::default()
+            };
+            let backend_registry = Arc::clone(&backend_registry);
+            let engine_catalog = Arc::clone(&engine_catalog);
+            let mesh = Some((catalog.clone(), budget));
+            let placement_seq = Arc::new(AtomicUsize::new(0));
+            let rpc_cfg = cfg.rpc.clone();
+            let active_serving = active_serving.clone();
+            Arc::new(move |name: &str, profile: Option<&str>, accel: AcceleratorClass| {
+                let backends = backend_registry.for_class(accel);
+                let backend_names: Vec<String> =
+                    backends.iter().map(|b| b.name().to_string()).collect();
+                let opts = crate::server::InstanceOptions { backends, ..base_opts.clone() };
+                let inst = Instance::start_with_opts(
+                    name,
+                    Arc::clone(&repo),
+                    &models,
+                    clock.clone(),
+                    registry.clone(),
+                    opts,
+                );
+                if let Some((catalog, budget)) = &mesh {
+                    match profile {
+                        Some(model) => {
+                            inst.set_loaded_models(&[repo.serving_name(model)])
+                        }
+                        None => {
+                            let hostable: Vec<(String, u64)> = catalog
+                                .iter()
+                                .filter(|(m, _)| active_serving.contains(m))
+                                .filter(|(m, _)| {
+                                    engine_catalog
+                                        .backends_for(m)
+                                        .iter()
+                                        .any(|b| backend_names.contains(b))
+                                })
+                                .cloned()
+                                .collect();
+                            let idx = placement_seq.fetch_add(1, Ordering::SeqCst);
+                            inst.set_loaded_models(&initial_placement(&hostable, *budget, idx));
+                        }
+                    }
+                }
+                if rpc_cfg.remote_dispatch {
+                    let opts = crate::rpc::RpcServerOpts {
+                        workers: 2,
+                        max_connections: 0,
+                        max_inflight_per_conn: rpc_cfg.max_inflight_per_conn,
+                        dispatch_threads: rpc_cfg.dispatch_threads.max(1),
+                    };
+                    if let Err(e) = inst.serve_rpc("127.0.0.1:0", opts) {
+                        eprintln!("[deployment] pod {name}: rpc endpoint failed: {e:#}");
+                    }
+                }
+                inst
+            })
+        };
+
+        // Versioned compat inheritance, shared by every site's planner.
+        let mut compat = engine_catalog.compat_map();
+        for (name, _) in &catalog {
+            let (base, v) = split_version(name);
+            if v.is_some() && !compat.contains_key(name) {
+                if let Some(prefs) = compat.get(base).cloned() {
+                    compat.insert(name.clone(), prefs);
+                }
+            }
+        }
+
+        // Per-site control planes. Every site's router installs the SAME
+        // version-routing state with the SAME canary hash seed, so a
+        // request hashes to the same version at whichever site serves it.
+        let mut sites: Vec<Arc<Site>> = Vec::new();
+        for (i, sc) in cfg.federation.sites.iter().enumerate() {
+            let router = Arc::new(ModelRouter::new_for_site(
+                &serving_names,
+                cfg.gateway.lb_policy,
+                cfg.gateway.max_inflight_per_instance,
+                &registry,
+                0x4D455348 ^ i as u64, // "MESH" + site index
+                &sc.name,
+            ));
+            for m in &cfg.server.models {
+                let Some(inc) = m.incumbent_version() else { continue };
+                let inc_name = versioned_name(&m.name, inc);
+                router.set_version_default(&m.name, &inc_name);
+                if let Some(c) = &m.canary {
+                    router.set_canary(
+                        &m.name,
+                        &inc_name,
+                        &versioned_name(&m.name, c.version),
+                        c.weight,
+                        0x43414E52, // "CANR" — identical at every site
+                    );
+                }
+                if let Some(p) = m.pinned_version {
+                    router.pin_version(&m.name, &versioned_name(&m.name, p));
+                }
+            }
+
+            let site_cluster_cfg = ClusterConfig {
+                nodes: sc.nodes,
+                gpus_per_node: sc.gpus_per_node,
+                pod_start_delay: cfg.cluster.pod_start_delay,
+                termination_grace: cfg.cluster.termination_grace,
+                pod_failure_rate: cfg.cluster.pod_failure_rate,
+            };
+            let targets =
+                initial_model_targets(sc.replicas, &model_names, &cfg.autoscaler.per_model);
+            let cluster = Cluster::start_per_model_site(
+                site_cluster_cfg,
+                cfg.server.startup_delay,
+                targets,
+                sc.cpu_replicas,
+                &sc.name,
+                clock.clone(),
+                registry.clone(),
+                Arc::clone(&factory),
+                0x5057E5 ^ i as u64,
+            );
+            cluster.set_victim_floor(cfg.model_placement.min_replicas_per_model);
+
+            let placement = PlacementController::new_for_site(
+                cfg.model_placement.clone(),
+                catalog.clone(),
+                load_costs.clone(),
+                compat.clone(),
+                cfg.engines.onnx_slowdown,
+                Arc::clone(&router),
+                store.clone(),
+                clock.clone(),
+                &registry,
+                &sc.name,
+            );
+            for m in &cfg.server.models {
+                let Some(inc) = m.incumbent_version() else { continue };
+                for spec in &m.versions {
+                    let v = spec.version;
+                    let active = v == inc
+                        || m.canary.as_ref().is_some_and(|c| c.version == v)
+                        || m.pinned_version == Some(v);
+                    if !active {
+                        placement.set_successor(
+                            &versioned_name(&m.name, v),
+                            &versioned_name(&m.name, inc),
+                        );
+                    }
+                }
+            }
+            let hooked = Arc::clone(&placement);
+            cluster.set_reconcile_hook(Arc::new(move |eps| hooked.reconcile(eps)));
+
+            // The site-local scaler's pod budget starts at the site's
+            // configured slice; the rebalancer moves it afterwards.
+            let mut scaler_cfg = cfg.autoscaler.clone();
+            scaler_cfg.max_replicas = sc.pod_budget;
+            let probe: DemandProbe = {
+                let p = Arc::clone(&placement);
+                Arc::new(move |model: &str, now: f64| p.demand_for(model, now))
+            };
+            let scaler = PerModelScaler::start_for_site(
+                scaler_cfg,
+                model_names.clone(),
+                Arc::clone(&cluster),
+                probe,
+                clock.clone(),
+                registry.clone(),
+                &sc.name,
+            );
+
+            sites.push(Site::new(
+                sc.name.clone(),
+                cluster,
+                router,
+                placement,
+                scaler,
+                sc.pod_budget,
+                cfg.autoscaler.per_model.min_replicas,
+                model_names.clone(),
+            ));
+        }
+
+        let pairs: Vec<(String, Arc<ModelRouter>)> = sites
+            .iter()
+            .map(|s| (s.name.clone(), Arc::clone(&s.router)))
+            .collect();
+        let fed_router = FederationRouter::new(&cfg.federation, &pairs, &registry);
+        let rebalancer =
+            Rebalancer::start(&cfg.federation, sites.clone(), clock.clone(), &registry);
+
+        let gateway_site = cfg.federation.gateway_site().to_string();
+        let home = sites
+            .iter()
+            .position(|s| s.name == gateway_site)
+            .unwrap_or(0);
+
+        let pressure = if cfg.gateway.rate_limit_rps > 0.0 {
+            let store2 = store.clone();
+            let threshold = cfg.autoscaler.threshold * 20.0;
+            Some(PressureGate::new(
+                Box::new(move || {
+                    store2.avg_latest_prefix("queue_latency_seconds").unwrap_or(0.0)
+                }),
+                threshold,
+            ))
+        } else {
+            None
+        };
+        let gateway = Gateway::start_federated(
+            &cfg.gateway,
+            sites[home].cluster.endpoints_handle(),
+            clock.clone(),
+            registry.clone(),
+            tracer.clone(),
+            pressure,
+            Arc::clone(&fed_router),
+            cfg.server.priorities.clone(),
+            &cfg.rpc,
+        )?;
+
+        // The global single-cluster autoscaler has no role here: the
+        // site-local per-model scalers + the rebalancer own capacity.
+        // It is started inert so the Deployment surface stays uniform.
+        let mut global_scaler_cfg = cfg.autoscaler.clone();
+        global_scaler_cfg.enabled = false;
+        let autoscaler = Autoscaler::start(
+            global_scaler_cfg,
+            Arc::clone(&sites[home].cluster),
+            store.clone(),
+            clock.clone(),
+            registry.clone(),
+        );
+
+        let (slo, slo_task) = if cfg.observability.slos.is_empty() {
+            (None, None)
+        } else {
+            let engine = Arc::new(SloEngine::new(
+                cfg.observability.clone(),
+                registry.clone(),
+                store.clone(),
+                clock.clone(),
+            ));
+            let task = SloTask::start(
+                Arc::clone(&engine),
+                clock.clone(),
+                cfg.observability.slo_eval_interval,
+            );
+            (Some(engine), Some(task))
+        };
+
+        // Auto-rollback reads the policy (gateway-site) router's split
+        // set and tears a bad canary down at EVERY site.
+        let any_canary = cfg.server.models.iter().any(|m| m.canary.is_some());
+        let (rollback, rollback_task) = if any_canary {
+            let bases: Vec<String> = cfg
+                .server
+                .models
+                .iter()
+                .filter(|m| m.canary.is_some())
+                .map(|m| m.name.clone())
+                .collect();
+            let probe: CanaryProbe = {
+                let router = Arc::clone(fed_router.policy_router());
+                Box::new(move || {
+                    bases
+                        .iter()
+                        .filter_map(|b| {
+                            router.canary_of(b).map(|(incumbent, canary, _)| {
+                                CanarySnapshot {
+                                    base: b.clone(),
+                                    incumbent,
+                                    canary,
+                                }
+                            })
+                        })
+                        .collect()
+                })
+            };
+            let action: RollbackAction = {
+                let sites = sites.clone();
+                Box::new(move |snap: &CanarySnapshot| {
+                    log::warn!(
+                        "canary auto-rollback: '{}' reverts to '{}' (all sites)",
+                        snap.base,
+                        snap.incumbent
+                    );
+                    for s in &sites {
+                        s.router.clear_canary(&snap.base);
+                        s.placement.set_successor(&snap.canary, &snap.incumbent);
+                    }
+                })
+            };
+            let engine = Arc::new(RollbackEngine::new(
+                cfg.observability.clone(),
+                registry.clone(),
+                store.clone(),
+                clock.clone(),
+                probe,
+                action,
+            ));
+            let task = RollbackTask::start(
+                Arc::clone(&engine),
+                clock.clone(),
+                cfg.observability.slo_eval_interval,
+            );
+            (Some(engine), Some(task))
+        } else {
+            (None, None)
+        };
+
+        // Canary ramps advance the split on every site's router in
+        // lock-step; the policy router leads (it is the split of record).
+        let mut ramp_routers: Vec<Arc<ModelRouter>> =
+            vec![Arc::clone(fed_router.policy_router())];
+        for s in &sites {
+            if !Arc::ptr_eq(&s.router, fed_router.policy_router()) {
+                ramp_routers.push(Arc::clone(&s.router));
+            }
+        }
+        let ramp_tasks =
+            Self::start_ramp_tasks(&cfg, ramp_routers, rollback.clone(), &clock, &registry);
+
+        let metrics_http = if cfg.monitoring.listen.is_empty() {
+            None
+        } else {
+            Some(MetricsServer::start(&cfg.monitoring.listen, registry.clone())?)
+        };
+
+        log::info!(
+            "deployment '{}' up (federated): {} sites, {} models, {} initial pods, gateway@{}",
+            cfg.name,
+            sites.len(),
+            model_names.len(),
+            sites.iter().map(|s| s.cluster.desired()).sum::<usize>(),
+            gateway_site,
+        );
+
+        let federation = Arc::new(Federation {
+            sites: sites.clone(),
+            router: Arc::clone(&fed_router),
+            rebalancer,
+        });
+        Ok(Deployment {
+            cfg,
+            clock,
+            registry,
+            store,
+            tracer,
+            repository,
+            cluster: Arc::clone(&sites[home].cluster),
+            gateway,
+            autoscaler,
+            // Site-local scalers live in `federation.sites`; the
+            // single-cluster slot stays empty so teardown is single-owner.
+            per_model_scaler: None,
+            router: Some(Arc::clone(&sites[home].router)),
+            placement: Some(Arc::clone(&sites[home].placement)),
+            slo,
+            rollback,
+            federation: Some(federation),
+            cpu_scaler: None,
+            ramp_tasks,
             metrics_http,
             _slo_task: slo_task,
             _rollback_task: rollback_task,
@@ -728,10 +1389,23 @@ impl Deployment {
             return false;
         };
         self.repository.set_incumbent(base, v);
-        router.set_version_default(base, &canary);
-        router.clear_canary(base);
-        if let Some(p) = &self.placement {
-            p.set_successor(&incumbent, &canary);
+        match &self.federation {
+            // Federated: promote at every site in one pass, so no site
+            // keeps splitting traffic to a retired incumbent.
+            Some(f) => {
+                for s in &f.sites {
+                    s.router.set_version_default(base, &canary);
+                    s.router.clear_canary(base);
+                    s.placement.set_successor(&incumbent, &canary);
+                }
+            }
+            None => {
+                router.set_version_default(base, &canary);
+                router.clear_canary(base);
+                if let Some(p) = &self.placement {
+                    p.set_successor(&incumbent, &canary);
+                }
+            }
         }
         if let Some(rb) = &self.rollback {
             // A promoted split is finished: re-arm so the *next* canary
@@ -759,18 +1433,42 @@ impl Deployment {
     }
 
     /// Block until `n` instances are Ready (true) or `timeout` elapses.
+    /// In federated mode `n` counts Ready pods across every site.
     pub fn wait_ready(&self, n: usize, timeout: Duration) -> bool {
-        self.cluster.wait_ready(n, timeout)
+        match &self.federation {
+            None => self.cluster.wait_ready(n, timeout),
+            Some(f) => {
+                let deadline = std::time::Instant::now() + timeout;
+                while std::time::Instant::now() < deadline {
+                    if f.running() >= n {
+                        return true;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                f.running() >= n
+            }
+        }
     }
 
     /// Tear down in reverse boot order (`helm uninstall`).
     pub fn down(self) {
+        for t in &self.ramp_tasks {
+            t.shutdown();
+        }
+        if let Some(s) = &self.cpu_scaler {
+            s.shutdown();
+        }
         if let Some(s) = &self.per_model_scaler {
             s.shutdown();
         }
         self.autoscaler.shutdown();
         self.gateway.shutdown();
-        self.cluster.shutdown();
+        match &self.federation {
+            // Federated: every site's scaler + cluster (the aliased
+            // gateway-site `cluster` is among them — shut down once).
+            Some(f) => f.shutdown(),
+            None => self.cluster.shutdown(),
+        }
         // scraper + metrics_http stop on drop
     }
 }
@@ -832,6 +1530,7 @@ mod tests {
             engines: Default::default(),
             observability: Default::default(),
             rpc: Default::default(),
+            federation: Default::default(),
             time_scale: 1.0,
         }
     }
@@ -1058,7 +1757,8 @@ mod tests {
             VersionSpec { version: 1, slowdown: 1.0 },
             VersionSpec { version: 2, slowdown: 1.0 },
         ];
-        cfg.server.models[0].canary = Some(CanaryConfig { version: 2, weight: 0.5 });
+        cfg.server.models[0].canary =
+            Some(CanaryConfig { version: 2, weight: 0.5, ..CanaryConfig::default() });
         cfg
     }
 

@@ -217,6 +217,7 @@ pub fn fig_config(
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale,
     }
 }
@@ -310,6 +311,7 @@ pub fn modelmesh_config(
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale,
     }
 }
@@ -517,6 +519,7 @@ pub fn backend_config(time_scale: f64, cpu_pods: usize) -> DeploymentConfig {
         },
         observability: ObservabilityConfig::default(),
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale,
     }
 }
@@ -602,6 +605,7 @@ pub fn priority_config(time_scale: f64, name: &str) -> DeploymentConfig {
         engines: EnginesConfig::default(),
         observability: ObservabilityConfig::default(),
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale,
     }
 }

@@ -1,0 +1,687 @@
+//! Multi-site federation — hierarchical placement, autoscaling and
+//! routing across clusters (§3's multi-cluster deployments, lifted into
+//! one control plane).
+//!
+//! The paper's production footprint is not one cluster: SuperSONIC runs
+//! simultaneously at Purdue (Geddes/Anvil), NRP and UChicago, each site
+//! with its own pod budget and accelerator mix, fronted by per-site
+//! gateways. This module reproduces that as a *federation*: N
+//! [`Site`]s, each a full single-cluster control plane (cluster + mesh
+//! router + placement controller + per-model scaler), behind one
+//! federation-tier router and one global rebalancer.
+//!
+//! * [`FederationRouter`] — site-aware routing. Each request goes to
+//!   the cheapest site (by WAN penalty from the gateway site) that has
+//!   warm capacity for the model; when a site's per-warm-replica queue
+//!   depth crosses `federation.spillover_queue_depth` it is demoted
+//!   behind unsaturated sites, so traffic *spills over* to remote warm
+//!   capacity instead of queueing locally — and repatriates as soon as
+//!   the home site drops back under the threshold ([`site_order`] is
+//!   the pure, property-tested ordering rule). A site with zero warm
+//!   replicas for the model is never picked.
+//! * [`Rebalancer`] — the hierarchical budget loop. Site-local
+//!   [`PerModelScaler`]s decide *which models* get pods; the rebalancer
+//!   decides *how many pods each site may spend*, shifting the global
+//!   budget toward the sites whose site-labeled demand signal
+//!   (`routed_requests_total{model=...,site=...}`) runs hot. It also
+//!   detects whole-site outages (a previously-up site draining to zero
+//!   running pods) and raises `slo_alert_active{alert="site_outage"}`.
+//! * [`Site::fail`] / [`Site::recover`] — chaos hooks: failing a site
+//!   pauses its scaler and drains its targets to zero; recovery re-seeds
+//!   every model at its per-model floor so the site has warm capacity to
+//!   repatriate onto (without the seed, a recovered site would never
+//!   receive traffic, never accrue demand, and never scale back up).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::autoscaler::PerModelScaler;
+use crate::config::FederationConfig;
+use crate::metrics::registry::{labels, Counter, Gauge, Registry};
+use crate::modelmesh::{ModelRouter, PlacementController};
+use crate::orchestrator::Cluster;
+use crate::rpc::codec::Status;
+use crate::server::Instance;
+use crate::telemetry::slo::ALERT_GAUGE;
+use crate::util::clock::Clock;
+
+/// Every federation-tier metric family, for the docs gate.
+pub const FEDERATION_METRICS: &[&str] = &[
+    "federation_site_requests_total",
+    "federation_spillover_total",
+    "federation_site_budget",
+    "federation_wan_hops_total",
+];
+
+/// `alert=` label value for the whole-site outage alert.
+pub const SITE_OUTAGE_ALERT: &str = "site_outage";
+
+/// One site's routing-relevant state, as seen at pick time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SiteView {
+    /// Warm replicas of the model at this site.
+    pub warm: usize,
+    /// Queued requests per warm replica (0 when `warm == 0`).
+    pub queued_per_warm: f64,
+    /// WAN penalty from the gateway site, seconds (0 = local).
+    pub wan_cost: f64,
+}
+
+/// The federation routing rule, pure for property testing: the order in
+/// which sites should be tried for one request.
+///
+/// * Sites with `warm == 0` are **excluded** — a request is never sent
+///   to a site without warm capacity for its model.
+/// * Unsaturated sites (`queued_per_warm < saturation_depth`) come
+///   first, cheapest WAN penalty first — steady state routes local.
+/// * Saturated sites follow, again cheapest first — when *every* warm
+///   site is saturated the request still lands somewhere warm rather
+///   than erroring (spillover degrades latency before availability).
+pub fn site_order(views: &[SiteView], saturation_depth: f64) -> Vec<usize> {
+    let by_cost = |order: &mut Vec<usize>| {
+        order.sort_by(|&a, &b| {
+            views[a]
+                .wan_cost
+                .partial_cmp(&views[b].wan_cost)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+    };
+    let mut unsat: Vec<usize> = Vec::new();
+    let mut sat: Vec<usize> = Vec::new();
+    for (i, v) in views.iter().enumerate() {
+        if v.warm == 0 {
+            continue;
+        }
+        if v.queued_per_warm < saturation_depth {
+            unsat.push(i);
+        } else {
+            sat.push(i);
+        }
+    }
+    by_cost(&mut unsat);
+    by_cost(&mut sat);
+    unsat.extend(sat);
+    unsat
+}
+
+/// WAN penalty between two sites from the config's per-site `wan` maps.
+/// The maps are treated as symmetric: `a -> b` falls back to `b -> a`,
+/// and an unlisted pair costs nothing.
+pub fn wan_between(cfg: &FederationConfig, a: &str, b: &str) -> Duration {
+    if a == b {
+        return Duration::ZERO;
+    }
+    let find = |x: &str, y: &str| {
+        cfg.sites
+            .iter()
+            .find(|s| s.name == x)
+            .and_then(|s| s.wan.get(y).copied())
+    };
+    find(a, b).or_else(|| find(b, a)).unwrap_or(Duration::ZERO)
+}
+
+/// A successful federation pick: the replica, the site it lives at, and
+/// the WAN penalty the gateway must pay to reach it.
+pub struct FedPick {
+    pub instance: Arc<Instance>,
+    pub site: String,
+    pub wan: Duration,
+}
+
+struct FedEndpoint {
+    name: String,
+    router: Arc<ModelRouter>,
+    wan: Duration,
+    m_requests: Counter,
+    m_spillover: Counter,
+    m_wan_hops: Counter,
+}
+
+/// Site-aware routing tier: wraps the per-site [`ModelRouter`]s behind
+/// one pick/resolve surface the gateway consumes.
+pub struct FederationRouter {
+    sites: Vec<FedEndpoint>,
+    /// Index of the gateway's home site — version-routing policy
+    /// (pin/canary resolution) is read from this site's router.
+    policy: usize,
+    spillover_depth: f64,
+}
+
+impl FederationRouter {
+    /// Router over `(site name, site router)` pairs; WAN penalties are
+    /// taken from `cfg` relative to the gateway site.
+    pub fn new(
+        cfg: &FederationConfig,
+        sites: &[(String, Arc<ModelRouter>)],
+        registry: &Registry,
+    ) -> Arc<Self> {
+        let gateway = cfg.gateway_site();
+        let endpoints: Vec<FedEndpoint> = sites
+            .iter()
+            .map(|(name, router)| {
+                let l = labels(&[("site", name)]);
+                FedEndpoint {
+                    name: name.clone(),
+                    router: Arc::clone(router),
+                    wan: wan_between(cfg, &gateway, name),
+                    m_requests: registry.counter("federation_site_requests_total", &l),
+                    m_spillover: registry.counter("federation_spillover_total", &l),
+                    m_wan_hops: registry.counter("federation_wan_hops_total", &l),
+                }
+            })
+            .collect();
+        let policy = endpoints
+            .iter()
+            .position(|e| e.name == gateway)
+            .unwrap_or(0);
+        Arc::new(FederationRouter { sites: endpoints, policy, spillover_depth: cfg.spillover_queue_depth })
+    }
+
+    /// Version resolution on the policy site's router, with warm counts
+    /// summed over every site — a version drained at one site keeps
+    /// resolving while it is warm anywhere in the federation.
+    pub fn resolve(&self, name: &str) -> String {
+        let warm = |m: &str| -> usize { self.sites.iter().map(|s| s.router.replicas(m)).sum() };
+        self.sites[self.policy].router.resolve_with(name, &warm)
+    }
+
+    /// The policy site's router (canary/pin state of record).
+    pub fn policy_router(&self) -> &Arc<ModelRouter> {
+        &self.sites[self.policy].router
+    }
+
+    /// Current [`SiteView`]s for `model`, in site order.
+    pub fn views_for(&self, model: &str) -> Vec<SiteView> {
+        self.sites
+            .iter()
+            .map(|s| {
+                let warm = s.router.replicas(model);
+                let queued: usize = s
+                    .router
+                    .endpoints_for(model)
+                    .iter()
+                    .map(|i| i.queue_depth_for(model))
+                    .sum();
+                SiteView {
+                    warm,
+                    queued_per_warm: if warm == 0 { 0.0 } else { queued as f64 / warm as f64 },
+                    wan_cost: s.wan.as_secs_f64(),
+                }
+            })
+            .collect()
+    }
+
+    /// Pick a replica for `model` (already version-resolved), skipping
+    /// the replica named `exclude` on retries. Sites are tried in
+    /// [`site_order`]; the first successful site-local pick wins. A pick
+    /// that lands anywhere but the cheapest warm site counts as
+    /// spillover; one that leaves the gateway site pays (and counts) a
+    /// WAN hop.
+    pub fn pick_excluding(
+        &self,
+        model: &str,
+        exclude: Option<&str>,
+    ) -> Result<FedPick, Status> {
+        let views = self.views_for(model);
+        let order = site_order(&views, self.spillover_depth);
+        if order.is_empty() {
+            return Err(if self.sites.iter().any(|s| s.router.serves(model)) {
+                Status::Overloaded
+            } else {
+                Status::ModelNotFound
+            });
+        }
+        let cheapest = views
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.warm > 0)
+            .min_by(|(_, a), (_, b)| {
+                a.wan_cost
+                    .partial_cmp(&b.wan_cost)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(i, _)| i);
+        for idx in order {
+            let s = &self.sites[idx];
+            if let Ok(instance) = s.router.pick_excluding(model, exclude) {
+                s.m_requests.inc();
+                if Some(idx) != cheapest {
+                    s.m_spillover.inc();
+                }
+                if s.wan > Duration::ZERO {
+                    s.m_wan_hops.inc();
+                }
+                return Ok(FedPick { instance, site: s.name.clone(), wan: s.wan });
+            }
+        }
+        Err(Status::Overloaded)
+    }
+
+    /// Whether any site has a Ready instance (federation health probe).
+    pub fn ready(&self) -> bool {
+        self.sites.iter().any(|s| s.router.ready_instances() > 0)
+    }
+
+    /// Requests routed to `site` so far (repatriation probe for tests).
+    pub fn site_requests(&self, site: &str) -> u64 {
+        self.sites
+            .iter()
+            .find(|s| s.name == site)
+            .map(|s| s.m_requests.get())
+            .unwrap_or(0)
+    }
+
+    /// Total spillover picks so far.
+    pub fn spillover_total(&self) -> u64 {
+        self.sites.iter().map(|s| s.m_spillover.get()).sum()
+    }
+}
+
+/// One federated site: a full single-cluster control plane plus the
+/// federation bookkeeping (budget slice, outage drain state).
+pub struct Site {
+    pub name: String,
+    pub cluster: Arc<Cluster>,
+    pub router: Arc<ModelRouter>,
+    pub placement: Arc<PlacementController>,
+    pub scaler: Arc<PerModelScaler>,
+    /// Configured pod budget (the rebalancer's proportional prior).
+    base_budget: usize,
+    /// Per-model floor the site re-seeds to on recovery.
+    min_per_model: usize,
+    models: Vec<String>,
+    saved_cpu: AtomicUsize,
+    failed: AtomicBool,
+}
+
+impl Site {
+    /// Wrap one booted site control plane.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: String,
+        cluster: Arc<Cluster>,
+        router: Arc<ModelRouter>,
+        placement: Arc<PlacementController>,
+        scaler: Arc<PerModelScaler>,
+        base_budget: usize,
+        min_per_model: usize,
+        models: Vec<String>,
+    ) -> Arc<Self> {
+        Arc::new(Site {
+            name,
+            cluster,
+            router,
+            placement,
+            scaler,
+            base_budget,
+            min_per_model,
+            models,
+            saved_cpu: AtomicUsize::new(0),
+            failed: AtomicBool::new(false),
+        })
+    }
+
+    /// Whether [`Site::fail`] has been called without a matching
+    /// [`Site::recover`].
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    /// Minimum pods this site needs while up (per-model floors).
+    fn floor(&self) -> usize {
+        self.min_per_model.max(1) * self.models.len()
+    }
+
+    /// Aggregate demand over the site's catalog at `now`.
+    fn demand(&self, now: f64) -> f64 {
+        self.models.iter().map(|m| self.placement.demand_for(m, now)).sum()
+    }
+
+    /// Chaos hook: take the whole site down. Pauses the site scaler (so
+    /// it cannot fight the drain) and drives every pod target — GPU and
+    /// CPU — to zero; the cluster's converge loop then kills the pods
+    /// and the routers drop the endpoints.
+    pub fn fail(&self) {
+        if self.failed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        log::warn!("federation: site '{}' failing", self.name);
+        self.scaler.pause();
+        for m in &self.models {
+            self.cluster.set_desired_for(m, 0);
+        }
+        self.saved_cpu.store(self.cluster.cpu_desired(), Ordering::SeqCst);
+        self.cluster.set_cpu_desired(0);
+    }
+
+    /// Chaos hook: bring the site back. Every model is re-seeded at its
+    /// per-model floor — the warm capacity repatriation needs — and the
+    /// scaler resumes to grow from there as demand returns.
+    pub fn recover(&self) {
+        if !self.failed.swap(false, Ordering::SeqCst) {
+            return;
+        }
+        log::info!("federation: site '{}' recovering", self.name);
+        for m in &self.models {
+            self.cluster.set_desired_for(m, self.min_per_model.max(1));
+        }
+        self.cluster
+            .set_cpu_desired(self.saved_cpu.load(Ordering::SeqCst));
+        self.scaler.resume();
+    }
+}
+
+struct SiteHandles {
+    budget: Gauge,
+    alert: Gauge,
+    /// Latch: the outage alert only fires for a site that has been up.
+    ever_up: AtomicBool,
+}
+
+/// The global budget loop: periodically re-divides the federation-wide
+/// pod budget between sites in proportion to their aggregated demand
+/// (each up site keeps at least its per-model floors), and flags
+/// whole-site outages.
+pub struct Rebalancer {
+    sites: Vec<Arc<Site>>,
+    total_budget: usize,
+    interval: Duration,
+    clock: Clock,
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    per_site: Vec<SiteHandles>,
+}
+
+impl Rebalancer {
+    /// Start the loop at `cfg.rebalance_interval` of clock time.
+    pub fn start(
+        cfg: &FederationConfig,
+        sites: Vec<Arc<Site>>,
+        clock: Clock,
+        registry: &Registry,
+    ) -> Arc<Self> {
+        let per_site = sites
+            .iter()
+            .map(|s| {
+                let l = labels(&[("site", &s.name)]);
+                let alert_l = labels(&[("alert", SITE_OUTAGE_ALERT), ("site", &s.name)]);
+                let h = SiteHandles {
+                    budget: registry.gauge("federation_site_budget", &l),
+                    alert: registry.gauge(ALERT_GAUGE, &alert_l),
+                    ever_up: AtomicBool::new(false),
+                };
+                h.budget.set(s.base_budget as f64);
+                h.alert.set(0.0);
+                h
+            })
+            .collect();
+        let rb = Arc::new(Rebalancer {
+            total_budget: cfg.total_budget(),
+            interval: cfg.rebalance_interval,
+            sites,
+            clock: clock.clone(),
+            stop: Arc::new(AtomicBool::new(false)),
+            handle: Mutex::new(None),
+            per_site,
+        });
+        let r = Arc::clone(&rb);
+        let handle = std::thread::Builder::new()
+            .name("fed-rebalancer".into())
+            .spawn(move || {
+                while !r.stop.load(Ordering::SeqCst) {
+                    r.tick();
+                    r.clock.sleep(r.interval);
+                }
+            })
+            .expect("spawning federation rebalancer");
+        *rb.handle.lock().unwrap() = Some(handle);
+        rb
+    }
+
+    /// One rebalance pass (used by the loop and by tests).
+    pub fn tick(&self) {
+        let now = self.clock.now_secs();
+        let n = self.sites.len();
+        let mut up = vec![false; n];
+        let mut demand = vec![0.0; n];
+        for (i, s) in self.sites.iter().enumerate() {
+            let running = s.cluster.running();
+            let h = &self.per_site[i];
+            if running > 0 {
+                h.ever_up.store(true, Ordering::SeqCst);
+            }
+            let outage = h.ever_up.load(Ordering::SeqCst) && running == 0;
+            if outage && h.alert.get() == 0.0 {
+                log::warn!("federation: site '{}' outage detected", s.name);
+            }
+            h.alert.set(if outage { 1.0 } else { 0.0 });
+            up[i] = running > 0 && !s.is_failed();
+            demand[i] = if up[i] { s.demand(now) } else { 0.0 };
+        }
+
+        // Floors first: every up site keeps room for its per-model
+        // minima. The spare budget is split in proportion to demand
+        // (largest-remainder rounding); with no demand anywhere, the
+        // configured base budgets serve as the prior.
+        let floors: Vec<usize> = self
+            .sites
+            .iter()
+            .zip(&up)
+            .map(|(s, u)| if *u { s.floor() } else { 0 })
+            .collect();
+        let floor_sum: usize = floors.iter().sum();
+        let spare = self.total_budget.saturating_sub(floor_sum);
+        let weights: Vec<f64> = if demand.iter().any(|d| *d > 0.0) {
+            demand.clone()
+        } else {
+            self.sites
+                .iter()
+                .zip(&up)
+                .map(|(s, u)| if *u { s.base_budget as f64 } else { 0.0 })
+                .collect()
+        };
+        let wsum: f64 = weights.iter().sum();
+        let mut assigned = floors.clone();
+        if wsum > 0.0 && spare > 0 {
+            let exact: Vec<f64> = weights.iter().map(|w| spare as f64 * w / wsum).collect();
+            let mut rounded: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+            let mut left = spare.saturating_sub(rounded.iter().sum());
+            let mut frac: Vec<(usize, f64)> = exact
+                .iter()
+                .enumerate()
+                .map(|(i, e)| (i, e - e.floor()))
+                .collect();
+            frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            for (i, _) in frac {
+                if left == 0 {
+                    break;
+                }
+                if up[i] {
+                    rounded[i] += 1;
+                    left -= 1;
+                }
+            }
+            for i in 0..n {
+                assigned[i] += rounded[i];
+            }
+        }
+        for (i, s) in self.sites.iter().enumerate() {
+            if up[i] {
+                s.scaler.set_budget(assigned[i]);
+            }
+            self.per_site[i].budget.set(assigned[i] as f64);
+        }
+    }
+
+    /// Stop the loop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The whole federation: sites, the routing tier and the budget loop.
+pub struct Federation {
+    pub sites: Vec<Arc<Site>>,
+    pub router: Arc<FederationRouter>,
+    pub rebalancer: Arc<Rebalancer>,
+}
+
+impl Federation {
+    /// Look a site up by name.
+    pub fn site(&self, name: &str) -> Option<&Arc<Site>> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+
+    /// Chaos hook: kill the named site (see [`Site::fail`]). Returns
+    /// false for an unknown name.
+    pub fn fail_site(&self, name: &str) -> bool {
+        match self.site(name) {
+            Some(s) => {
+                s.fail();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Chaos hook: recover the named site (see [`Site::recover`]).
+    pub fn recover_site(&self, name: &str) -> bool {
+        match self.site(name) {
+            Some(s) => {
+                s.recover();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Running pods across every site.
+    pub fn running(&self) -> usize {
+        self.sites.iter().map(|s| s.cluster.running()).sum()
+    }
+
+    /// Desired pods across every site.
+    pub fn desired(&self) -> usize {
+        self.sites.iter().map(|s| s.cluster.desired()).sum()
+    }
+
+    /// Per-site running pod counts (diagnostics).
+    pub fn running_by_site(&self) -> BTreeMap<String, usize> {
+        self.sites
+            .iter()
+            .map(|s| (s.name.clone(), s.cluster.running()))
+            .collect()
+    }
+
+    /// Tear the federation down: the budget loop first (so it cannot
+    /// fight the drain), then every site's scaler and cluster.
+    pub fn shutdown(&self) {
+        self.rebalancer.shutdown();
+        for s in &self.sites {
+            s.scaler.shutdown();
+            s.cluster.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(warm: usize, q: f64, wan: f64) -> SiteView {
+        SiteView { warm, queued_per_warm: q, wan_cost: wan }
+    }
+
+    #[test]
+    fn order_prefers_cheapest_unsaturated() {
+        let views = [v(2, 0.0, 0.03), v(2, 0.0, 0.0), v(2, 0.0, 0.05)];
+        assert_eq!(site_order(&views, 8.0), vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn order_excludes_cold_sites() {
+        let views = [v(0, 0.0, 0.0), v(1, 0.0, 0.05)];
+        assert_eq!(site_order(&views, 8.0), vec![1]);
+        assert!(site_order(&[v(0, 0.0, 0.0)], 8.0).is_empty());
+    }
+
+    #[test]
+    fn saturated_home_spills_to_remote() {
+        // Home site (wan 0) saturated, remote warm and idle: remote first.
+        let views = [v(2, 10.0, 0.0), v(2, 0.0, 0.05)];
+        assert_eq!(site_order(&views, 8.0), vec![1, 0]);
+        // Home recovers under the threshold: traffic repatriates.
+        let views = [v(2, 3.0, 0.0), v(2, 0.0, 0.05)];
+        assert_eq!(site_order(&views, 8.0), vec![0, 1]);
+    }
+
+    #[test]
+    fn all_saturated_still_ordered_by_cost() {
+        let views = [v(1, 20.0, 0.05), v(1, 30.0, 0.0)];
+        assert_eq!(site_order(&views, 8.0), vec![1, 0]);
+    }
+
+    #[test]
+    fn property_order_never_contains_cold_site() {
+        use crate::util::quick::{check, Gen};
+        check("site_order excludes warm==0", 300, |g: &mut Gen| {
+            let n = g.usize(1..=6);
+            let views: Vec<SiteView> = (0..n)
+                .map(|_| v(g.usize(0..=3), g.f64(0.0, 20.0), g.f64(0.0, 0.2)))
+                .collect();
+            let depth = g.f64(0.1, 15.0);
+            let order = site_order(&views, depth);
+            for &i in &order {
+                assert!(views[i].warm > 0, "cold site {i} in order {order:?}");
+            }
+            // Completeness: every warm site appears exactly once.
+            let warm = views.iter().filter(|v| v.warm > 0).count();
+            assert_eq!(order.len(), warm);
+            let mut seen = order.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), order.len());
+        });
+    }
+
+    #[test]
+    fn property_unsaturated_precede_saturated() {
+        use crate::util::quick::{check, Gen};
+        check("unsaturated sites sort first", 300, |g: &mut Gen| {
+            let n = g.usize(2..=6);
+            let views: Vec<SiteView> = (0..n)
+                .map(|_| v(g.usize(0..=3), g.f64(0.0, 20.0), g.f64(0.0, 0.2)))
+                .collect();
+            let depth = g.f64(0.1, 15.0);
+            let order = site_order(&views, depth);
+            let mut seen_saturated = false;
+            for &i in &order {
+                let sat = views[i].queued_per_warm >= depth;
+                assert!(
+                    !(seen_saturated && !sat),
+                    "unsaturated site after saturated one: {order:?}"
+                );
+                seen_saturated |= sat;
+            }
+        });
+    }
+
+    #[test]
+    fn wan_lookup_is_symmetric_with_fallback() {
+        use crate::config::SiteConfig;
+        let mut a = SiteConfig { name: "a".into(), ..SiteConfig::default() };
+        a.wan.insert("b".into(), Duration::from_millis(30));
+        let b = SiteConfig { name: "b".into(), ..SiteConfig::default() };
+        let cfg = FederationConfig { sites: vec![a, b], ..FederationConfig::default() };
+        assert_eq!(wan_between(&cfg, "a", "b"), Duration::from_millis(30));
+        assert_eq!(wan_between(&cfg, "b", "a"), Duration::from_millis(30));
+        assert_eq!(wan_between(&cfg, "a", "a"), Duration::ZERO);
+        assert_eq!(wan_between(&cfg, "a", "zz"), Duration::ZERO);
+    }
+}

@@ -26,10 +26,12 @@ pub mod ratelimit;
 
 use std::net::SocketAddr;
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::config::{GatewayConfig, PriorityConfig, RpcConfig};
+use crate::federation::FederationRouter;
 use crate::metrics::registry::{labels, Registry};
 use crate::modelmesh::ModelRouter;
 use crate::rpc::codec::{InferRequest, InferResponse, Priority, RequestKind, Status};
@@ -147,6 +149,57 @@ impl Gateway {
         priorities: PriorityConfig,
         rpc: &RpcConfig,
     ) -> Result<Self> {
+        Self::start_inner(
+            cfg, endpoints, clock, registry, tracer, pressure, router, priorities, rpc, None,
+        )
+    }
+
+    /// [`Gateway::start_full`] as the federation-tier gateway: every
+    /// infer request resolves and routes through `federation` — to the
+    /// cheapest site with warm capacity for its model, spilling over on
+    /// saturation — and a pick that lands at a remote site pays that
+    /// site's WAN penalty before dispatch. `endpoints` is the gateway
+    /// site's endpoint handle (health-probe fallback only; infer traffic
+    /// never routes through the global balancer in federated mode).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_federated(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+        federation: Arc<FederationRouter>,
+        priorities: PriorityConfig,
+        rpc: &RpcConfig,
+    ) -> Result<Self> {
+        Self::start_inner(
+            cfg,
+            endpoints,
+            clock,
+            registry,
+            tracer,
+            pressure,
+            None,
+            priorities,
+            rpc,
+            Some(federation),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_inner(
+        cfg: &GatewayConfig,
+        endpoints: Arc<RwLock<Vec<Arc<Instance>>>>,
+        clock: Clock,
+        registry: Registry,
+        tracer: Tracer,
+        pressure: Option<PressureGate>,
+        router: Option<Arc<ModelRouter>>,
+        priorities: PriorityConfig,
+        rpc: &RpcConfig,
+        fed: Option<Arc<FederationRouter>>,
+    ) -> Result<Self> {
         let lb = Arc::new(LoadBalancer::new(
             cfg.lb_policy,
             endpoints,
@@ -257,7 +310,12 @@ impl Gateway {
             // The SLO feed below keeps the client-facing base name.
             let mut req = req;
             if is_infer {
-                if let Some(r) = router.as_deref() {
+                if let Some(f) = fed.as_deref() {
+                    let routed = f.resolve(&req.model);
+                    if routed != req.model {
+                        req.model = routed;
+                    }
+                } else if let Some(r) = router.as_deref() {
                     let routed = r.resolve(&req.model);
                     if routed != req.model {
                         req.model = routed;
@@ -272,6 +330,8 @@ impl Gateway {
                 &priorities,
                 &lb2,
                 router.as_deref(),
+                fed.as_deref(),
+                &clock2,
                 &authenticator,
                 &bucket,
                 pressure.as_deref(),
@@ -371,6 +431,8 @@ fn handle_request(
     priorities: &PriorityConfig,
     lb: &LoadBalancer,
     router: Option<&ModelRouter>,
+    fed: Option<&FederationRouter>,
+    clock: &Clock,
     authenticator: &Authenticator,
     bucket: &TokenBucket,
     pressure: Option<&PressureGate>,
@@ -378,9 +440,14 @@ fn handle_request(
     sessions: Option<&SessionPool>,
 ) -> InferResponse {
     // 0. Health probes bypass auth/limits: they answer "is the deployment
-    //    routable" (the k8s readiness probe analogue).
+    //    routable" (the k8s readiness probe analogue). Federated, that
+    //    means "is anything ready at ANY site".
     if req.kind == RequestKind::Health {
-        return if lb.healthy_count() > 0 {
+        let healthy = match fed {
+            Some(f) => f.ready(),
+            None => lb.healthy_count() > 0,
+        };
+        return if healthy {
             InferResponse::ok(req.request_id, crate::runtime::Tensor::zeros(vec![0]))
         } else {
             InferResponse::err(req.request_id, Status::Overloaded, "no ready instances")
@@ -449,32 +516,41 @@ fn handle_request(
         // (the wait for the executor's reply is queue/compute time,
         // reported by the server-side spans).
         let hop_stage = tracer.span(trace, if attempt == 0 { "route" } else { "retry" });
-        let instance = match router {
-            Some(r) => match r.pick_excluding(&req.model, rejected_by.as_deref()) {
-                Ok(inst) => inst,
+        let no_replica_msg = |status: Status, rejected_by: &Option<String>, last: Status| match status
+        {
+            Status::ModelNotFound => {
+                format!("model '{}' not in the serving catalog", req.model)
+            }
+            _ => match rejected_by {
+                None => format!("no replica for model '{}' accepting work", req.model),
+                Some(id) => format!(
+                    "no other replica for model '{}' after instance {id} rejected: {}",
+                    req.model,
+                    last.name()
+                ),
+            },
+        };
+        let (instance, wan) = match (fed, router) {
+            // Federated: site-aware pick; a remote-site hop carries the
+            // configured WAN penalty back for the dispatch below.
+            (Some(f), _) => match f.pick_excluding(&req.model, rejected_by.as_deref()) {
+                Ok(pick) => (pick.instance, pick.wan),
                 Err(status) => {
-                    last_msg = match status {
-                        Status::ModelNotFound => {
-                            format!("model '{}' not in the serving catalog", req.model)
-                        }
-                        _ => match &rejected_by {
-                            None => {
-                                format!("no replica for model '{}' accepting work", req.model)
-                            }
-                            Some(id) => format!(
-                                "no other replica for model '{}' after instance {id} \
-                                 rejected: {}",
-                                req.model,
-                                last_status.name()
-                            ),
-                        },
-                    };
+                    last_msg = no_replica_msg(status, &rejected_by, last_status);
                     last_status = status;
                     break;
                 }
             },
-            None => match lb.pick_excluding(rejected_by.as_deref()) {
-                Some(inst) => inst,
+            (None, Some(r)) => match r.pick_excluding(&req.model, rejected_by.as_deref()) {
+                Ok(inst) => (inst, Duration::ZERO),
+                Err(status) => {
+                    last_msg = no_replica_msg(status, &rejected_by, last_status);
+                    last_status = status;
+                    break;
+                }
+            },
+            (None, None) => match lb.pick_excluding(rejected_by.as_deref()) {
+                Some(inst) => (inst, Duration::ZERO),
                 None => {
                     // No routable replica on THIS attempt: report that,
                     // not a stale earlier rejection (a retry that finds
@@ -491,6 +567,12 @@ fn handle_request(
                 }
             },
         };
+        // WAN penalty: a request spilled to a remote site pays the
+        // inter-site latency before the hand-off (both directions are
+        // folded into the one configured cost).
+        if wan > Duration::ZERO {
+            clock.sleep(wan);
+        }
         // Remote dispatch: when the session pool is on and the instance
         // advertises a sonic-rpc endpoint, forward over the wire instead
         // of the in-process submit. The request's resolved metadata rides
@@ -511,7 +593,7 @@ fn handle_request(
                 sess_pool,
                 &backend,
                 &fwd,
-                router.is_some(),
+                router.is_some() || fed.is_some(),
                 req.request_id,
                 &instance.id,
             );
@@ -547,7 +629,7 @@ fn handle_request(
                 // a router-mode ModelNotFound, which can be a stale pool.
                 let terminal = match status {
                     Status::BadRequest => true,
-                    Status::ModelNotFound => router.is_none(),
+                    Status::ModelNotFound => router.is_none() && fed.is_none(),
                     _ => false,
                 };
                 if terminal {

@@ -39,6 +39,16 @@
 //! backend exists, falling back to a later-preference backend when the
 //! preferred one has no capacity.
 //!
+//! **Multi-site federation** ([`federation`]) lifts the whole control
+//! plane one level up: the `federation` config section boots N sites —
+//! each with its own cluster, mesh router, placement controller and
+//! per-model scaler — behind one federation-tier gateway that routes
+//! every request to the cheapest site (by WAN penalty) with warm
+//! capacity, spills over when a site saturates, and repatriates when it
+//! recovers. A global rebalancer shifts per-model pod budget between
+//! sites from the site-labeled demand signal and raises a `site_outage`
+//! alert when a whole site drains.
+//!
 //! **Per-model autoscaling** (`autoscaler.per_model`) closes the loop
 //! between the two: instead of one global replica count, the autoscaler
 //! runs one scaling loop per served model, fed by the placement
@@ -59,6 +69,7 @@ pub mod config;
 pub mod deployment;
 pub mod engine;
 pub mod experiments;
+pub mod federation;
 pub mod gateway;
 pub mod metrics;
 pub mod modelmesh;

@@ -71,10 +71,12 @@
 //! its model before an equal bulk backlog.
 
 pub mod placement;
+pub mod ramp;
 pub mod router;
 
 pub use placement::{
     initial_placement, priority_weighted_backlog, InstanceView, Move,
     PlacementController, PlacementCore, PRIORITY_DEMAND_WEIGHTS,
 };
+pub use ramp::RampTask;
 pub use router::ModelRouter;

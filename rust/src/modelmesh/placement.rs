@@ -603,6 +603,10 @@ pub struct PlacementController {
     core: Mutex<PlacementCore>,
     per_model: BTreeMap<String, ModelHandles>,
     m_moves: Counter,
+    /// Federation site this controller is local to (`None` =
+    /// single-cluster). Scopes the demand signal to the site's
+    /// `routed_requests_total{model=...,site=...}` series.
+    site: Option<String>,
 }
 
 impl PlacementController {
@@ -627,10 +631,64 @@ impl PlacementController {
         clock: Clock,
         registry: &Registry,
     ) -> Arc<Self> {
+        Self::new_inner(
+            cfg, catalog, load_costs, compat, fallback_slowdown, router, store, clock, registry,
+            None,
+        )
+    }
+
+    /// [`PlacementController::new`] as one federation site's local loop:
+    /// every placement series gains a `site` label and the demand signal
+    /// reads the site-labeled routed counters, so each site places from
+    /// its own traffic while the global rebalancer aggregates across
+    /// sites.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_for_site(
+        cfg: ModelPlacementConfig,
+        catalog: Vec<(String, u64)>,
+        load_costs: BTreeMap<String, f64>,
+        compat: BTreeMap<String, Vec<String>>,
+        fallback_slowdown: f64,
+        router: Arc<ModelRouter>,
+        store: MetricStore,
+        clock: Clock,
+        registry: &Registry,
+        site: &str,
+    ) -> Arc<Self> {
+        Self::new_inner(
+            cfg, catalog, load_costs, compat, fallback_slowdown, router, store, clock, registry,
+            Some(site),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn new_inner(
+        cfg: ModelPlacementConfig,
+        catalog: Vec<(String, u64)>,
+        load_costs: BTreeMap<String, f64>,
+        compat: BTreeMap<String, Vec<String>>,
+        fallback_slowdown: f64,
+        router: Arc<ModelRouter>,
+        store: MetricStore,
+        clock: Clock,
+        registry: &Registry,
+        site: Option<&str>,
+    ) -> Arc<Self> {
+        // Label helper: appends the site pair in federated mode, so the
+        // same series names serve both modes (single-site stays
+        // label-identical to the pre-federation exposition).
+        let with_site = |pairs: &[(&str, &str)]| match site {
+            None => labels(pairs),
+            Some(site) => {
+                let mut all: Vec<(&str, &str)> = pairs.to_vec();
+                all.push(("site", site));
+                labels(&all)
+            }
+        };
         let per_model = catalog
             .iter()
             .map(|(m, _)| {
-                let l = labels(&[("model", m)]);
+                let l = with_site(&[("model", m)]);
                 let backend_replicas = BACKEND_NAMES
                     .iter()
                     .map(|b| {
@@ -638,7 +696,7 @@ impl PlacementController {
                             *b,
                             registry.gauge(
                                 "model_backend_replicas",
-                                &labels(&[("model", m), ("backend", b)]),
+                                &with_site(&[("model", m), ("backend", b)]),
                             ),
                         )
                     })
@@ -646,7 +704,7 @@ impl PlacementController {
                 let version_replicas = match split_version(m) {
                     (base, Some(v)) => Some(registry.gauge(
                         VERSION_REPLICAS_GAUGE,
-                        &labels(&[("model", base), ("version", &format!("v{v}"))]),
+                        &with_site(&[("model", base), ("version", &format!("v{v}"))]),
                     )),
                     _ => None,
                 };
@@ -674,7 +732,8 @@ impl PlacementController {
             store,
             clock,
             per_model,
-            m_moves: registry.counter("placement_moves_total", &labels(&[])),
+            m_moves: registry.counter("placement_moves_total", &with_site(&[])),
+            site: site.map(String::from),
         })
     }
 
@@ -707,7 +766,13 @@ impl PlacementController {
     }
 
     fn demand_one(&self, model: &str, now: f64) -> f64 {
-        let series = format!("routed_requests_total{{model=\"{model}\"}}");
+        // Labels render alphabetically, so `model` precedes `site`.
+        let series = match &self.site {
+            None => format!("routed_requests_total{{model=\"{model}\"}}"),
+            Some(site) => {
+                format!("routed_requests_total{{model=\"{model}\",site=\"{site}\"}}")
+            }
+        };
         let rate = self
             .store
             .rate_over(&series, now, self.cfg.demand_window)

@@ -1,0 +1,138 @@
+//! Staged canary weight ramps.
+//!
+//! A canary that jumps straight to its target weight exposes that much
+//! traffic to a bad version at once. With `server.models[].canary.ramp`
+//! configured (e.g. `[0.01, 0.1, 0.5]`), the split instead starts at the
+//! first stage and a [`RampTask`] advances it one stage per
+//! `canary.ramp_interval` — but only while the auto-rollback evaluator
+//! ([`RollbackEngine`](crate::telemetry::rollback::RollbackEngine))
+//! stays quiet for the model. A rollback (or promotion, or any operator
+//! action that tears the split down) halts the ramp where it stands;
+//! the blast radius of a regressing canary is whatever stage it had
+//! earned, not the final weight.
+//!
+//! [`next_stage`] is the pure advancement rule; [`RampTask`] is the
+//! clock loop. In federated mode one task advances the split on every
+//! site's router in lock-step (same stages, same hash seed), keeping
+//! the version split consistent across sites.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::metrics::registry::{labels, Gauge, Registry};
+use crate::modelmesh::ModelRouter;
+use crate::telemetry::rollback::RollbackEngine;
+use crate::util::clock::Clock;
+
+/// The next ramp stage strictly above `current`, or `None` when the
+/// ramp is exhausted (the split holds at its final stage until promoted
+/// or rolled back).
+pub fn next_stage(ramp: &[f64], current: f64) -> Option<f64> {
+    ramp.iter().copied().find(|w| *w > current + 1e-12)
+}
+
+/// The running ramp loop for one model's canary split.
+pub struct RampTask {
+    stop: Arc<AtomicBool>,
+    handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl RampTask {
+    /// Advance `base`'s canary split through `ramp` every `interval` of
+    /// clock time, starting from `start_weight`. Each advance re-installs
+    /// the split on every router in `routers` with the same `seed`. The
+    /// ramp halts permanently when the rollback engine has fired for
+    /// `base`, when the split is no longer live (promoted / rolled back /
+    /// replaced), or when the final stage is reached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        routers: Vec<Arc<ModelRouter>>,
+        base: String,
+        incumbent: String,
+        canary: String,
+        ramp: Vec<f64>,
+        interval: Duration,
+        start_weight: f64,
+        seed: u64,
+        rollback: Option<Arc<RollbackEngine>>,
+        clock: Clock,
+        registry: &Registry,
+    ) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let gauge: Gauge = registry.gauge("canary_ramp_weight", &labels(&[("model", &base)]));
+        gauge.set(start_weight);
+        let handle = std::thread::Builder::new()
+            .name("canary-ramp".into())
+            .spawn(move || {
+                let mut current = start_weight;
+                loop {
+                    clock.sleep(interval);
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Some(rb) = &rollback {
+                        if rb.rolled_back(&base) {
+                            log::warn!("canary ramp: '{base}' rolled back, halting at {current}");
+                            break;
+                        }
+                    }
+                    // The policy router (index 0) is the split of record;
+                    // a torn-down or replaced split ends the ramp.
+                    let live = routers[0]
+                        .canary_of(&base)
+                        .map(|(_, c, _)| c == canary)
+                        .unwrap_or(false);
+                    if !live {
+                        break;
+                    }
+                    let Some(next) = next_stage(&ramp, current) else {
+                        log::info!("canary ramp: '{base}' complete at weight {current}");
+                        break;
+                    };
+                    for r in &routers {
+                        r.set_canary(&base, &incumbent, &canary, next, seed);
+                    }
+                    gauge.set(next);
+                    log::info!("canary ramp: '{base}' {current} -> {next}");
+                    current = next;
+                }
+            })
+            .expect("spawning canary ramp");
+        RampTask { stop, handle: Mutex::new(Some(handle)) }
+    }
+
+    /// Stop the loop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_stage_walks_the_ramp() {
+        let ramp = [0.01, 0.1, 0.5];
+        assert_eq!(next_stage(&ramp, 0.01), Some(0.1));
+        assert_eq!(next_stage(&ramp, 0.1), Some(0.5));
+        assert_eq!(next_stage(&ramp, 0.5), None);
+        // A weight between stages advances to the next strictly above.
+        assert_eq!(next_stage(&ramp, 0.05), Some(0.1));
+        // Starting below the first stage enters the ramp.
+        assert_eq!(next_stage(&ramp, 0.0), Some(0.01));
+    }
+
+    #[test]
+    fn next_stage_is_float_tolerant() {
+        // 0.1 reconstructed through arithmetic must not re-match itself.
+        let ramp = [0.1, 0.5];
+        let current = 0.3 - 0.2; // 0.09999999999999998, within 1e-12 of 0.1
+        assert_eq!(next_stage(&ramp, current), Some(0.5));
+    }
+}

@@ -73,6 +73,32 @@ impl ModelRouter {
         registry: &Registry,
         seed: u64,
     ) -> Self {
+        Self::new_inner(catalog, policy, max_inflight, registry, seed, None)
+    }
+
+    /// [`ModelRouter::new`] for one federation site: the per-model
+    /// routed/unserved counters gain a `site` label, so each site's
+    /// demand signal (and the global rebalancer reading it) stays
+    /// separable from the other sites'.
+    pub fn new_for_site(
+        catalog: &[String],
+        policy: LbPolicy,
+        max_inflight: usize,
+        registry: &Registry,
+        seed: u64,
+        site: &str,
+    ) -> Self {
+        Self::new_inner(catalog, policy, max_inflight, registry, seed, Some(site))
+    }
+
+    fn new_inner(
+        catalog: &[String],
+        policy: LbPolicy,
+        max_inflight: usize,
+        registry: &Registry,
+        seed: u64,
+        site: Option<&str>,
+    ) -> Self {
         let mut pools = BTreeMap::new();
         for (i, model) in catalog.iter().enumerate() {
             let endpoints = Arc::new(RwLock::new(Vec::new()));
@@ -82,7 +108,10 @@ impl ModelRouter {
                 max_inflight,
                 seed ^ ((i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)),
             );
-            let l = labels(&[("model", model)]);
+            let l = match site {
+                None => labels(&[("model", model)]),
+                Some(site) => labels(&[("model", model), ("site", site)]),
+            };
             pools.insert(
                 model.clone(),
                 Pool {
@@ -162,6 +191,14 @@ impl ModelRouter {
     /// the base with a live pool — so a mid-swap rollout never turns
     /// into `ModelNotFound` while some version is warm somewhere.
     pub fn resolve(&self, name: &str) -> String {
+        self.resolve_with(name, &|pool| self.replicas(pool))
+    }
+
+    /// [`ModelRouter::resolve`] with an injected warm-replica probe.
+    /// The federation router resolves on its policy router but probes
+    /// warm counts summed over *all* sites, so a version drained at one
+    /// site keeps resolving while it is warm anywhere in the federation.
+    pub fn resolve_with(&self, name: &str, warm: &dyn Fn(&str) -> usize) -> String {
         if split_version(name).1.is_some() {
             return name.to_string();
         }
@@ -176,24 +213,22 @@ impl ModelRouter {
             } else {
                 (&route.incumbent, &route.canary)
             };
-            if self.replicas(first) > 0 {
+            if warm(first) > 0 {
                 return first.clone();
             }
-            if self.replicas(second) > 0 {
+            if warm(second) > 0 {
                 return second.clone();
             }
         }
         let default = self.defaults.read().unwrap().get(name).cloned();
         if let Some(d) = &default {
-            if self.replicas(d) > 0 {
+            if warm(d) > 0 {
                 return d.clone();
             }
             // Default drained mid-swap: any warm version of the base
             // keeps serving rather than shedding.
-            for (pool_name, pool) in &self.pools {
-                if split_version(pool_name).0 == name
-                    && !pool.endpoints.read().unwrap().is_empty()
-                {
+            for pool_name in self.pools.keys() {
+                if split_version(pool_name).0 == name && warm(pool_name) > 0 {
                     return pool_name.clone();
                 }
             }
@@ -285,6 +320,13 @@ impl ModelRouter {
                 .collect();
             *pool.endpoints.write().unwrap() = members;
         }
+    }
+
+    /// Whether `model` is in this router's catalog (has a pool). The
+    /// federation router uses this to tell "unknown model" from "known
+    /// but nowhere warm" when every site comes up empty.
+    pub fn serves(&self, model: &str) -> bool {
+        self.pools.contains_key(model)
     }
 
     /// Instances currently in `model`'s pool (replica count source).

@@ -72,6 +72,10 @@ struct State {
 pub struct Cluster {
     cfg: ClusterConfig,
     startup_delay: Duration,
+    /// Pod-name prefix: empty for a single-cluster deployment,
+    /// `"{site}-"` for a federated site's cluster, so pod (and therefore
+    /// instance) names stay unique across the federation.
+    pod_prefix: String,
     clock: Clock,
     factory: InstanceFactory,
     desired: AtomicUsize,
@@ -124,6 +128,7 @@ impl Cluster {
             initial_replicas,
             0,
             None,
+            None,
             clock,
             registry,
             factory,
@@ -150,6 +155,7 @@ impl Cluster {
             startup_delay,
             initial_replicas,
             initial_cpu,
+            None,
             None,
             clock,
             registry,
@@ -178,6 +184,38 @@ impl Cluster {
             initial,
             0,
             Some(targets),
+            None,
+            clock,
+            registry,
+            factory,
+            seed,
+        )
+    }
+
+    /// [`Cluster::start_per_model`] as one federation site: pods are
+    /// named `{site}-triton-N` (unique instance ids across sites), every
+    /// cluster metric series carries a `site` label, and the site's CPU
+    /// group boots alongside the per-model GPU groups.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_per_model_site(
+        cfg: ClusterConfig,
+        startup_delay: Duration,
+        targets: BTreeMap<String, usize>,
+        initial_cpu: usize,
+        site: &str,
+        clock: Clock,
+        registry: Registry,
+        factory: InstanceFactory,
+        seed: u64,
+    ) -> Arc<Self> {
+        let initial = targets.values().sum();
+        Self::start_inner(
+            cfg,
+            startup_delay,
+            initial,
+            initial_cpu,
+            Some(targets),
+            Some(site),
             clock,
             registry,
             factory,
@@ -192,6 +230,7 @@ impl Cluster {
         initial_replicas: usize,
         initial_cpu: usize,
         targets: Option<BTreeMap<String, usize>>,
+        site: Option<&str>,
         clock: Clock,
         registry: Registry,
         factory: InstanceFactory,
@@ -200,12 +239,18 @@ impl Cluster {
         let free_slots = (0..cfg.nodes)
             .map(|_| (0..cfg.gpus_per_node).collect())
             .collect();
-        let l = labels(&[]);
+        let l = match site {
+            None => labels(&[]),
+            Some(site) => labels(&[("site", site)]),
+        };
         let model_gauges: BTreeMap<String, (Gauge, Gauge)> = targets
             .iter()
             .flatten()
             .map(|(m, _)| {
-                let ml = labels(&[("model", m)]);
+                let ml = match site {
+                    None => labels(&[("model", m)]),
+                    Some(site) => labels(&[("model", m), ("site", site)]),
+                };
                 (
                     m.clone(),
                     (
@@ -218,6 +263,7 @@ impl Cluster {
         let cluster = Arc::new(Cluster {
             cfg,
             startup_delay,
+            pod_prefix: site.map(|s| format!("{s}-")).unwrap_or_default(),
             clock: clock.clone(),
             factory,
             desired: AtomicUsize::new(initial_replicas),
@@ -547,8 +593,12 @@ impl Cluster {
         if group.len() < want {
             for _ in 0..(want - group.len()) {
                 let name = match accel {
-                    AcceleratorClass::Gpu => format!("triton-{}", state.next_pod_id),
-                    AcceleratorClass::Cpu => format!("triton-cpu-{}", state.next_pod_id),
+                    AcceleratorClass::Gpu => {
+                        format!("{}triton-{}", self.pod_prefix, state.next_pod_id)
+                    }
+                    AcceleratorClass::Cpu => {
+                        format!("{}triton-cpu-{}", self.pod_prefix, state.next_pod_id)
+                    }
                 };
                 state.next_pod_id += 1;
                 state.pods.insert(

@@ -192,6 +192,50 @@ fn operations_doc_documents_rollback_alert() {
 }
 
 #[test]
+fn operations_doc_documents_every_federation_metric() {
+    // The federation tier exports its own metric family (per-site
+    // traffic, spillover, WAN hops, budget): every name must appear in
+    // the federation runbook, or the site-outage troubleshooting guide
+    // points at series nobody documented.
+    let doc = read_doc("OPERATIONS.md");
+    for metric in supersonic::federation::FEDERATION_METRICS {
+        assert!(
+            doc.contains(&format!("`{metric}`")),
+            "docs/OPERATIONS.md does not document federation metric '{metric}'; \
+             the federation_ablation runbook must cover every federation series"
+        );
+    }
+}
+
+#[test]
+fn operations_doc_documents_site_outage_alert() {
+    // A whole-site outage is a page: it needs a runbook entry with
+    // spillover/repatriation troubleshooting, same contract as the SLO
+    // and rollback alerts.
+    let doc = read_doc("OPERATIONS.md");
+    let alert = supersonic::federation::SITE_OUTAGE_ALERT;
+    assert!(
+        doc.contains(&format!("`{alert}`")),
+        "docs/OPERATIONS.md does not document the '{alert}' alert; the \
+         federation runbook must explain why it fires and how traffic \
+         fails over and repatriates"
+    );
+}
+
+#[test]
+fn operations_doc_documents_cpu_scaler_metrics() {
+    // The class-partitioned CPU scaler's trigger/target gauges must be
+    // documented next to the autoscaling runbook.
+    let doc = read_doc("OPERATIONS.md");
+    for metric in ["autoscaler_cpu_demand", "autoscaler_cpu_desired", "canary_ramp_weight"] {
+        assert!(
+            doc.contains(&format!("`{metric}`")),
+            "docs/OPERATIONS.md does not document metric '{metric}'"
+        );
+    }
+}
+
+#[test]
 fn operations_doc_documents_every_slo_alert() {
     // Every alert name the burn-rate engine can fire must have a runbook
     // entry — an undocumented page is an unactionable page.

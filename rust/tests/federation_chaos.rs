@@ -1,0 +1,271 @@
+//! Federation chaos test: kill a whole site under live traffic, assert
+//! the federation keeps serving (spillover to the surviving sites),
+//! raises the `site_outage` alert, and repatriates traffic to the home
+//! site after it recovers.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use supersonic::config::{
+    AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, FederationConfig,
+    GatewayConfig, ModelConfig, ModelPlacementConfig, MonitoringConfig,
+    PerModelScalingConfig, ServerConfig, ServiceModelConfig, SiteConfig,
+};
+use supersonic::deployment::Deployment;
+use supersonic::federation::SITE_OUTAGE_ALERT;
+use supersonic::metrics::exposition::render;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::Tensor;
+
+const HOME: &str = "purdue";
+
+fn site(name: &str, wan: &[(&str, f64)]) -> SiteConfig {
+    SiteConfig {
+        name: name.into(),
+        pod_budget: 4,
+        replicas: 2,
+        nodes: 2,
+        gpus_per_node: 2,
+        cpu_replicas: 0,
+        wan: wan
+            .iter()
+            .map(|(peer, secs)| (peer.to_string(), Duration::from_secs_f64(*secs)))
+            .collect::<BTreeMap<_, _>>(),
+    }
+}
+
+fn fed_cfg() -> DeploymentConfig {
+    DeploymentConfig {
+        name: "fedtest".into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                ..ModelConfig::default()
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(10),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 256,
+            util_window: 5.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 6,
+            poll_interval: Duration::from_millis(100),
+            per_model: PerModelScalingConfig {
+                enabled: true,
+                // High threshold: this test exercises outage/repatriation,
+                // not scale-ups — keep the pod counts stable.
+                threshold: 10_000.0,
+                min_replicas: 1,
+                max_replicas: 4,
+            },
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 3,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(20),
+            termination_grace: Duration::from_millis(20),
+            pod_failure_rate: 0.0,
+        },
+        federation: FederationConfig {
+            sites: vec![
+                site(HOME, &[("nrp", 0.002), ("uchicago", 0.004)]),
+                site("nrp", &[]),
+                site("uchicago", &[]),
+            ],
+            gateway_site: HOME.into(),
+            rebalance_interval: Duration::from_millis(200),
+            spillover_queue_depth: 8.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_millis(100),
+            retention: Duration::from_secs(600),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            memory_budget_mb: 4096.0,
+            ..ModelPlacementConfig::default()
+        },
+        engines: Default::default(),
+        observability: Default::default(),
+        rpc: Default::default(),
+        time_scale: 4.0,
+    }
+}
+
+/// Poll `probe` every 10ms until it returns true or `timeout` elapses.
+fn wait_for(timeout: Duration, probe: impl Fn() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if probe() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    probe()
+}
+
+#[test]
+fn site_outage_keeps_serving_and_repatriates() {
+    let d = Deployment::up(fed_cfg()).unwrap();
+    let fed = Arc::clone(d.federation.as_ref().expect("federated deployment"));
+    // 3 sites x 2 replicas.
+    assert!(d.wait_ready(6, Duration::from_secs(10)), "federation never became ready");
+
+    // Continuous traffic from a background client for the whole run.
+    let stop = Arc::new(AtomicBool::new(false));
+    let ok = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicUsize::new(0));
+    let driver = {
+        let addr = d.endpoint();
+        let (stop, ok, failed) = (Arc::clone(&stop), Arc::clone(&ok), Arc::clone(&failed));
+        std::thread::spawn(move || {
+            let mut client = RpcClient::connect(&addr).unwrap();
+            while !stop.load(Ordering::SeqCst) {
+                match client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])) {
+                    Ok(resp) if resp.status == Status::Ok => {
+                        ok.fetch_add(1, Ordering::SeqCst);
+                    }
+                    _ => {
+                        failed.fetch_add(1, Ordering::SeqCst);
+                        // The gateway stream is dead after an I/O error;
+                        // reconnect and keep driving.
+                        if let Ok(c) = RpcClient::connect(&addr) {
+                            client = c;
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    };
+
+    // Phase 1: healthy federation — the home (gateway) site is cheapest
+    // and must carry traffic.
+    assert!(
+        wait_for(Duration::from_secs(5), || fed.router.site_requests(HOME) > 10),
+        "home site never served while healthy: {:?}",
+        fed.running_by_site()
+    );
+
+    // Phase 2: kill the whole home site mid-traffic.
+    assert!(fed.fail_site(HOME));
+    assert!(
+        wait_for(Duration::from_secs(10), || {
+            fed.running_by_site().get(HOME) == Some(&0)
+        }),
+        "home site pods never drained: {:?}",
+        fed.running_by_site()
+    );
+    let ok_at_outage = ok.load(Ordering::SeqCst);
+    let home_at_outage = fed.router.site_requests(HOME);
+    let remote_at_outage: u64 =
+        fed.router.site_requests("nrp") + fed.router.site_requests("uchicago");
+
+    // Service must continue on the surviving sites...
+    assert!(
+        wait_for(Duration::from_secs(5), || {
+            ok.load(Ordering::SeqCst) > ok_at_outage + 20
+        }),
+        "traffic stalled during the site outage"
+    );
+    // ...routed to the remote sites, not the dead one.
+    let remote_now: u64 =
+        fed.router.site_requests("nrp") + fed.router.site_requests("uchicago");
+    assert!(remote_now > remote_at_outage, "remote sites took no spillover traffic");
+    assert_eq!(
+        fed.router.site_requests(HOME),
+        home_at_outage,
+        "requests were routed to a site with zero warm capacity"
+    );
+    // The rebalancer flags the outage.
+    assert!(
+        wait_for(Duration::from_secs(5), || {
+            render(&d.registry).contains(&format!(
+                "slo_alert_active{{alert=\"{SITE_OUTAGE_ALERT}\",site=\"{HOME}\"}} 1"
+            ))
+        }),
+        "site_outage alert never fired for the dead site"
+    );
+
+    // Phase 3: recover the site; traffic must repatriate to the cheapest
+    // (home) site once its capacity is warm again.
+    assert!(fed.recover_site(HOME));
+    assert!(
+        wait_for(Duration::from_secs(10), || {
+            fed.running_by_site().get(HOME).copied().unwrap_or(0) > 0
+        }),
+        "home site never came back: {:?}",
+        fed.running_by_site()
+    );
+    let home_at_recovery = fed.router.site_requests(HOME);
+    assert!(
+        wait_for(Duration::from_secs(10), || {
+            fed.router.site_requests(HOME) > home_at_recovery + 10
+        }),
+        "traffic never repatriated to the recovered home site"
+    );
+    // The alert resolves once the site is back.
+    assert!(
+        wait_for(Duration::from_secs(5), || {
+            render(&d.registry).contains(&format!(
+                "slo_alert_active{{alert=\"{SITE_OUTAGE_ALERT}\",site=\"{HOME}\"}} 0"
+            ))
+        }),
+        "site_outage alert never resolved after recovery"
+    );
+
+    stop.store(true, Ordering::SeqCst);
+    driver.join().unwrap();
+    let (ok, failed) = (ok.load(Ordering::SeqCst), failed.load(Ordering::SeqCst));
+    // Continuous service: the overwhelming majority of requests succeed
+    // through the outage (a handful may race the pod drain).
+    assert!(ok > 100, "too little traffic flowed: ok={ok}");
+    assert!(
+        failed * 20 <= ok,
+        "more than 5% of requests failed across the outage: ok={ok} failed={failed}"
+    );
+    d.down();
+}
+
+#[test]
+fn federated_routing_spills_over_and_prices_wan_hops() {
+    // Structural smoke on the routing tier itself: with the home site
+    // drained, every pick is a WAN hop to a remote site.
+    let d = Deployment::up(fed_cfg()).unwrap();
+    let fed = Arc::clone(d.federation.as_ref().expect("federated deployment"));
+    assert!(d.wait_ready(6, Duration::from_secs(10)));
+    assert!(fed.fail_site(HOME));
+    assert!(wait_for(Duration::from_secs(10), || {
+        fed.running_by_site().get(HOME) == Some(&0)
+    }));
+
+    let mut client = RpcClient::connect(&d.endpoint()).unwrap();
+    for _ in 0..10 {
+        let resp = client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])).unwrap();
+        assert_eq!(resp.status, Status::Ok, "{}", resp.error);
+    }
+    assert_eq!(fed.router.site_requests(HOME), 0, "dead site must take no traffic");
+    assert!(
+        fed.router.site_requests("nrp") + fed.router.site_requests("uchicago") >= 10,
+        "remote sites must carry the load"
+    );
+    d.down();
+}

@@ -61,6 +61,7 @@ fn base_cfg(execution: ExecutionMode) -> DeploymentConfig {
         engines: Default::default(),
         observability: Default::default(),
         rpc: Default::default(),
+        federation: Default::default(),
         time_scale: 1.0,
     }
 }
@@ -325,7 +326,8 @@ fn rolling_upgrade_with_pod_kill_serves_continuously() {
     cfg.server.models[0].versions =
         vec![VersionSpec { version: 1, slowdown: 1.0 }, VersionSpec { version: 2, slowdown: 1.0 }];
     cfg.server.models[0].incumbent = Some(1);
-    cfg.server.models[0].canary = Some(CanaryConfig { version: 2, weight: 0.3 });
+    cfg.server.models[0].canary =
+        Some(CanaryConfig { version: 2, weight: 0.3, ..CanaryConfig::default() });
     // Both versions (~152 KB each) fit on every pod: the upgrade is
     // routing-bound, not placement-bound.
     cfg.model_placement.memory_budget_mb = 0.45;

@@ -23,6 +23,20 @@ fn span(trace_id: u64, name: &str, start: f64, end: f64) -> Span {
 /// the golden readable; bucket invariants are property-tested in
 /// `property_invariants.rs`).
 const GOLDEN: &str = "\
+# TYPE canary_ramp_weight gauge
+canary_ramp_weight{model=\"icecube_cnn\"} 0.1
+# TYPE federation_site_budget gauge
+federation_site_budget{site=\"nrp\"} 3
+federation_site_budget{site=\"purdue\"} 5
+# TYPE federation_site_requests_total counter
+federation_site_requests_total{site=\"nrp\"} 5
+federation_site_requests_total{site=\"purdue\"} 9
+# TYPE federation_spillover_total counter
+federation_spillover_total{site=\"nrp\"} 2
+federation_spillover_total{site=\"purdue\"} 0
+# TYPE federation_wan_hops_total counter
+federation_wan_hops_total{site=\"nrp\"} 2
+federation_wan_hops_total{site=\"purdue\"} 0
 # TYPE gateway_model_version_latency_seconds histogram
 gateway_model_version_latency_seconds_sum{model=\"icecube_cnn\",version=\"v1\"} 0.375
 gateway_model_version_latency_seconds_count{model=\"icecube_cnn\",version=\"v1\"} 2
@@ -61,6 +75,8 @@ request_total_seconds_count 2
 # TYPE slo_alert_active gauge
 slo_alert_active{alert=\"error_budget_burn_rate\",model=\"particlenet\"} 0
 slo_alert_active{alert=\"latency_burn_rate\",model=\"particlenet\"} 0
+slo_alert_active{alert=\"site_outage\",site=\"nrp\"} 1
+slo_alert_active{alert=\"site_outage\",site=\"purdue\"} 0
 # TYPE trace_partial_total counter
 trace_partial_total 1
 # TYPE trace_spans_dropped_total counter
@@ -114,6 +130,30 @@ fn observability_series_exposition_matches_golden() {
         .counter(VERSION_ERRORS_COUNTER, &labels(&[("model", "icecube_cnn"), ("version", "v2")]))
         .add(1);
     registry.counter(ROLLBACK_COUNTER, &labels(&[("model", "icecube_cnn")])).inc();
+
+    // Federation-tier series: a ramping canary's current weight, the
+    // per-site routed/spillover/WAN counters, the rebalancer's budget
+    // gauges, and a whole-site outage alert (fired for one site,
+    // resolved for the other).
+    {
+        use supersonic::federation::SITE_OUTAGE_ALERT;
+        use supersonic::telemetry::slo::ALERT_GAUGE;
+        registry
+            .gauge("canary_ramp_weight", &labels(&[("model", "icecube_cnn")]))
+            .set(0.1);
+        for (site, requests, spill, wan, budget, outage) in
+            [("nrp", 5u64, 2u64, 2u64, 3.0, 1.0), ("purdue", 9, 0, 0, 5.0, 0.0)]
+        {
+            let l = labels(&[("site", site)]);
+            registry.counter("federation_site_requests_total", &l).add(requests);
+            registry.counter("federation_spillover_total", &l).add(spill);
+            registry.counter("federation_wan_hops_total", &l).add(wan);
+            registry.gauge("federation_site_budget", &l).set(budget);
+            registry
+                .gauge(ALERT_GAUGE, &labels(&[("alert", SITE_OUTAGE_ALERT), ("site", site)]))
+                .set(outage);
+        }
+    }
 
     // The SLO engine pre-registers its alert gauges at 0 (resolved).
     let cfg = ObservabilityConfig {
