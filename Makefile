@@ -13,6 +13,7 @@
 #   make bench-rpc      — the streaming-RPC acceptance bench only
 #   make bench-canary   — the canary-rollout / auto-rollback bench only
 #   make bench-federation — the multi-site federation ablation bench only
+#   make bench-explain  — the control-plane observability bench only
 #   make docs-check  — doc gates only: rustdoc -D warnings + the
 #                      doc-sync tests (CONFIG.md schema coverage,
 #                      OPERATIONS.md bench coverage, smoke registration)
@@ -26,9 +27,9 @@ BENCHES := batcher_ablation fig2_autoscaling fig3_static_vs_dynamic \
 	gateway_overhead lb_ablation scale_100_servers trigger_ablation \
 	modelmesh_ablation per_model_autoscale warm_load_ablation \
 	priority_ablation backend_ablation latency_breakdown rpc_streaming \
-	canary_rollout federation_ablation
+	canary_rollout federation_ablation control_plane_observability
 
-.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc bench-canary bench-federation docs-check
+.PHONY: artifacts build test bench bench-smoke bench-priority bench-backend bench-trace bench-rpc bench-canary bench-federation bench-explain docs-check
 
 artifacts:
 	cd python && python -m compile.aot --out ../$(ARTIFACTS)
@@ -62,6 +63,9 @@ bench-canary:
 
 bench-federation:
 	cd rust && cargo bench --bench federation_ablation
+
+bench-explain:
+	cd rust && cargo bench --bench control_plane_observability
 
 docs-check:
 	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -1,0 +1,297 @@
+//! Control-plane observability — the flight-recorder acceptance bench.
+//!
+//! One 3-site federated deployment (gateway homed at the first site)
+//! carries steady traced traffic while the WHOLE home site is killed
+//! mid-run and later recovered. Asserted:
+//!
+//! 1. **Explainability** — the flight recorder reconstructs the outage
+//!    incident with zero missing links and in timestamp order:
+//!    `site_outage` -> `budget_shift` -> `spillover`/`failover` ->
+//!    `site_recovered` -> `repatriation`, and `supersonic explain`'s
+//!    rendering of the ledger is non-empty.
+//! 2. **Cross-site trace propagation** — spilled requests fold a
+//!    site-labeled `wan` stage, and the per-stage sums reconstruct the
+//!    end-to-end (`request_total_seconds`) latency within 5%.
+//! 3. **Overhead** — recorder-on throughput is within 5% of a
+//!    recorder-off arm (`flight_recorder_capacity: 0`) carrying the
+//!    same schedule through the same outage.
+//!
+//! Run: `cargo bench --bench control_plane_observability`
+//! Smoke: `SUPERSONIC_SMOKE=1 cargo bench --bench control_plane_observability`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use supersonic::config::*;
+use supersonic::deployment::Deployment;
+use supersonic::metrics::exposition::render;
+use supersonic::telemetry::flight::ExplainFilter;
+use supersonic::util::bench::{smoke, Csv, Table};
+use supersonic::workload::{ClientPool, Schedule, WorkloadSpec};
+
+const TIME_SCALE: f64 = 8.0;
+const HOME: &str = "purdue";
+
+fn site(name: &str, wan: &[(&str, f64)]) -> SiteConfig {
+    SiteConfig {
+        name: name.into(),
+        pod_budget: 4,
+        replicas: 2,
+        nodes: 2,
+        gpus_per_node: 2,
+        cpu_replicas: 0,
+        wan: wan
+            .iter()
+            .map(|(p, s)| (p.to_string(), Duration::from_secs_f64(*s)))
+            .collect::<BTreeMap<_, _>>(),
+    }
+}
+
+fn bench_cfg(name: &str, recorder_capacity: usize) -> DeploymentConfig {
+    DeploymentConfig {
+        name: name.into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                ..ModelConfig::default()
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(50),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 512,
+            util_window: 10.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 6,
+            poll_interval: Duration::from_millis(500),
+            per_model: PerModelScalingConfig {
+                enabled: true,
+                // The bench exercises outage/repatriation, not scale-ups:
+                // keep the pod counts stable.
+                threshold: 10_000.0,
+                min_replicas: 1,
+                max_replicas: 4,
+            },
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 3,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(50),
+            termination_grace: Duration::from_millis(50),
+            pod_failure_rate: 0.0,
+        },
+        federation: FederationConfig {
+            sites: vec![
+                site(HOME, &[("nrp", 0.002), ("uchicago", 0.004)]),
+                site("nrp", &[]),
+                site("uchicago", &[]),
+            ],
+            gateway_site: HOME.into(),
+            rebalance_interval: Duration::from_millis(500),
+            spillover_queue_depth: 4.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_secs(1),
+            retention: Duration::from_secs(3600),
+            tracing: true,
+        },
+        model_placement: ModelPlacementConfig {
+            memory_budget_mb: 4096.0,
+            ..ModelPlacementConfig::default()
+        },
+        engines: Default::default(),
+        observability: ObservabilityConfig {
+            trace_sample_rate: 1.0,
+            trace_capacity: 65536,
+            flight_recorder_capacity: recorder_capacity,
+            ..ObservabilityConfig::default()
+        },
+        rpc: Default::default(),
+        time_scale: TIME_SCALE,
+    }
+}
+
+/// One arm's observable outcome, captured before teardown.
+struct Arm {
+    ok: u64,
+    errors: u64,
+    /// (complete, in_order) for the home-site outage chain, if a
+    /// recorder was armed.
+    chain: Option<(bool, bool)>,
+    explain: String,
+    /// Sum over every `request_stage_seconds` series (all label sets).
+    stage_sum: f64,
+    /// `request_total_seconds` sum (root-span durations).
+    total_sum: f64,
+    /// A `wan` stage labeled with a non-local serving site exists.
+    wan_site: bool,
+}
+
+/// Fold the exposition text into the reconstruction inputs: the summed
+/// per-stage time, the summed end-to-end time, and whether any spilled
+/// request left a site-labeled `wan` series behind.
+fn fold_exposition(text: &str) -> (f64, f64, bool) {
+    let value = |line: &str| line.rsplit(' ').next().unwrap_or("0").parse::<f64>().unwrap_or(0.0);
+    let mut stage_sum = 0.0;
+    let mut total_sum = 0.0;
+    let mut wan_site = false;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("request_stage_seconds_sum") {
+            stage_sum += value(line);
+            if rest.contains("stage=\"wan\"") && !rest.contains("site=\"local\"") {
+                wan_site = true;
+            }
+        } else if line.starts_with("request_total_seconds_sum") {
+            total_sum = value(line);
+        }
+    }
+    (stage_sum, total_sum, wan_site)
+}
+
+/// Boot the federation, drive `3 * phase` of steady traced traffic with
+/// the home site dead for the middle third, and capture the arm outcome.
+fn run_arm(name: &str, recorder_capacity: usize, phase: Duration) -> anyhow::Result<Arm> {
+    let d = Deployment::up(bench_cfg(name, recorder_capacity))?;
+    let fed = Arc::clone(d.federation.as_ref().expect("federated deployment"));
+    anyhow::ensure!(d.wait_ready(6, Duration::from_secs(30)), "federated fleet not ready");
+    let spec = WorkloadSpec::new("icecube_cnn", 4, vec![16, 16, 3]).with_tracing();
+    let pool = ClientPool::new(&d.endpoint(), spec, d.clock.clone());
+    let schedule = Schedule::constant(6, 3 * phase);
+    let h = std::thread::spawn(move || pool.run(&schedule));
+
+    d.clock.sleep(phase);
+    anyhow::ensure!(fed.fail_site(HOME), "fail_site({HOME})");
+    d.clock.sleep(phase);
+    anyhow::ensure!(fed.recover_site(HOME), "recover_site({HOME})");
+    let report = h.join().unwrap();
+
+    let (chain, explain) = match &d.flight {
+        Some(f) => {
+            let chains = f.outage_chains();
+            let home = chains.iter().find(|c| c.site == HOME);
+            (
+                Some((
+                    home.map(|c| c.complete()).unwrap_or(false),
+                    home.map(|c| c.in_order()).unwrap_or(false),
+                )),
+                f.explain(&ExplainFilter::default()),
+            )
+        }
+        None => (None, String::new()),
+    };
+    let (stage_sum, total_sum, wan_site) = fold_exposition(&render(&d.registry));
+    d.down();
+    Ok(Arm {
+        ok: report.total_ok,
+        errors: report.total_errors,
+        chain,
+        explain,
+        stage_sum,
+        total_sum,
+        wan_site,
+    })
+}
+
+/// The explainability + reconstruction acceptance checks (both modes).
+fn check_recorder_arm(arm: &Arm) -> anyhow::Result<()> {
+    anyhow::ensure!(arm.ok > 0, "no requests served");
+    anyhow::ensure!(arm.errors == 0, "request errors across the outage");
+    let (complete, in_order) = arm.chain.expect("recorder-on arm has a ledger");
+    anyhow::ensure!(
+        complete,
+        "outage chain has missing links:\n{}",
+        arm.explain
+    );
+    anyhow::ensure!(
+        in_order,
+        "outage chain links are out of timestamp order:\n{}",
+        arm.explain
+    );
+    anyhow::ensure!(
+        arm.explain.contains("site_outage") && arm.explain.contains("repatriation"),
+        "explain output does not render the incident:\n{}",
+        arm.explain
+    );
+    anyhow::ensure!(
+        arm.wan_site,
+        "no site-labeled wan stage: spilled requests lost their WAN hop"
+    );
+    anyhow::ensure!(arm.total_sum > 0.0, "no traced requests folded");
+    let drift = (arm.stage_sum - arm.total_sum).abs() / arm.total_sum;
+    anyhow::ensure!(
+        drift <= 0.05,
+        "stage breakdown does not reconstruct end-to-end latency: \
+         stages {:.3}s vs total {:.3}s ({:.1}% drift)",
+        arm.stage_sum,
+        arm.total_sum,
+        drift * 100.0
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    supersonic::util::logging::init();
+    if smoke() {
+        println!("== control-plane observability (smoke): short outage slice ==");
+        let arm = run_arm("cpobs-smoke", 4096, Duration::from_secs(5))?;
+        check_recorder_arm(&arm)?;
+        println!(
+            "(smoke) {} ok, chain complete and ordered, stages {:.2}s vs total {:.2}s",
+            arm.ok, arm.stage_sum, arm.total_sum
+        );
+        return Ok(());
+    }
+
+    println!("== control-plane observability: recorder on/off through a site outage ==");
+    let phase = Duration::from_secs(10);
+    let mut table = Table::new(&["arm", "ok", "errors", "stage sum (s)", "total sum (s)"]);
+    let mut csv = Csv::new(&["arm", "ok", "errors", "stage_sum_s", "total_sum_s"]);
+
+    println!("-- recorder-off arm (flight_recorder_capacity: 0)");
+    let off = run_arm("cpobs-off", 0, phase)?;
+    anyhow::ensure!(off.ok > 0, "recorder-off arm served nothing");
+    anyhow::ensure!(off.chain.is_none(), "capacity 0 must disable the recorder");
+
+    println!("-- recorder-on arm (default capacity)");
+    let on = run_arm("cpobs-on", 4096, phase)?;
+    check_recorder_arm(&on)?;
+
+    for (name, arm) in [("recorder-off", &off), ("recorder-on", &on)] {
+        let cells = [
+            name.to_string(),
+            arm.ok.to_string(),
+            arm.errors.to_string(),
+            format!("{:.3}", arm.stage_sum),
+            format!("{:.3}", arm.total_sum),
+        ];
+        table.row(&cells);
+        csv.row(&cells);
+    }
+    println!("\n{}", table.render());
+    let path = csv.save("control_plane_observability")?;
+    println!("CSV: {}", path.display());
+    println!("\n{}", on.explain);
+
+    anyhow::ensure!(
+        on.ok as f64 >= 0.95 * off.ok as f64,
+        "flight recorder costs more than 5% throughput: on {} vs off {}",
+        on.ok,
+        off.ok
+    );
+    Ok(())
+}

@@ -39,6 +39,7 @@ use crate::config::AutoscalerConfig;
 use crate::metrics::registry::{labels, Counter, Gauge, Registry};
 use crate::metrics::MetricStore;
 use crate::orchestrator::Cluster;
+use crate::telemetry::flight::{DecisionEvent, LoopTicker, RecorderHandle};
 use crate::util::clock::Clock;
 
 pub use metric::MetricQuery;
@@ -160,6 +161,8 @@ pub struct Autoscaler {
     m_metric: crate::metrics::registry::Gauge,
     m_scale_ups: crate::metrics::registry::Counter,
     m_scale_downs: crate::metrics::registry::Counter,
+    recorder: RecorderHandle,
+    ticker: LoopTicker,
 }
 
 impl Autoscaler {
@@ -184,6 +187,8 @@ impl Autoscaler {
             m_metric: registry.gauge("autoscaler_metric", &l),
             m_scale_ups: registry.counter("autoscaler_scale_ups_total", &l),
             m_scale_downs: registry.counter("autoscaler_scale_downs_total", &l),
+            recorder: RecorderHandle::default(),
+            ticker: LoopTicker::new(&registry, clock, "autoscaler"),
         });
         if cfg.enabled {
             let s = Arc::clone(&scaler);
@@ -191,7 +196,7 @@ impl Autoscaler {
                 .name("autoscaler".into())
                 .spawn(move || {
                     while !s.stop.load(Ordering::SeqCst) {
-                        s.evaluate_once();
+                        s.ticker.tick(|| s.evaluate_once());
                         s.clock.sleep(s.cfg.poll_interval);
                     }
                 })
@@ -199,6 +204,12 @@ impl Autoscaler {
             *scaler.handle.lock().unwrap() = Some(handle);
         }
         scaler
+    }
+
+    /// The flight-recorder slot scaling decisions land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// One synchronous evaluation (used by the poll loop and by
@@ -226,6 +237,16 @@ impl Autoscaler {
                 self.cluster.set_desired(n);
             }
             Decision::Hold => {}
+        }
+        if let Some(n) = decision.target() {
+            self.recorder.record(
+                DecisionEvent::new("autoscaler", "scale_target")
+                    .input("metric", metric)
+                    .input("threshold", self.cfg.threshold)
+                    .input("from", current as f64)
+                    .input("to", n as f64)
+                    .action(format!("global desired {current} -> {n}")),
+            );
         }
         decision
     }
@@ -358,6 +379,10 @@ pub struct PerModelScaler {
     paused: AtomicBool,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     per_model: BTreeMap<String, ModelScaleHandles>,
+    /// Site label on decision events in federated mode.
+    site: Option<String>,
+    recorder: RecorderHandle,
+    ticker: LoopTicker,
 }
 
 impl PerModelScaler {
@@ -428,19 +453,28 @@ impl PerModelScaler {
             paused: AtomicBool::new(false),
             handle: Mutex::new(None),
             per_model,
+            site: site.map(str::to_string),
+            recorder: RecorderHandle::default(),
+            ticker: LoopTicker::new(&registry, clock, "per_model_scaler"),
         });
         let s = Arc::clone(&scaler);
         let handle = std::thread::Builder::new()
             .name("per-model-autoscaler".into())
             .spawn(move || {
                 while !s.stop.load(Ordering::SeqCst) {
-                    s.evaluate_once();
+                    s.ticker.tick(|| s.evaluate_once());
                     s.clock.sleep(s.cfg.poll_interval);
                 }
             })
             .expect("spawning per-model autoscaler");
         *scaler.handle.lock().unwrap() = Some(handle);
         scaler
+    }
+
+    /// The flight-recorder slot scaling decisions land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// Replace the planner's shared pod budget (see
@@ -477,7 +511,11 @@ impl PerModelScaler {
             demand.insert(m.clone(), d);
             current.insert(m.clone(), self.cluster.desired_for(m));
         }
-        let changes = self.planner.lock().unwrap().plan(now, &demand, &current);
+        let (changes, budget) = {
+            let mut planner = self.planner.lock().unwrap();
+            let changes = planner.plan(now, &demand, &current);
+            (changes, planner.budget())
+        };
         for (model, n) in &changes {
             let cur = current[model];
             let h = &self.per_model[model];
@@ -492,6 +530,17 @@ impl PerModelScaler {
             );
             self.cluster.set_desired_for(model, *n);
             h.desired.set(*n as f64);
+            let mut ev = DecisionEvent::new("per_model_scaler", "scale_target")
+                .model(model)
+                .input("demand", demand[model])
+                .input("from", cur as f64)
+                .input("to", *n as f64)
+                .input("budget", budget as f64)
+                .action(format!("'{model}' pods {cur} -> {n}"));
+            if let Some(site) = &self.site {
+                ev = ev.site(site);
+            }
+            self.recorder.record(ev);
         }
         changes.len()
     }
@@ -528,6 +577,8 @@ pub struct CpuScaler {
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     m_demand: Gauge,
     m_desired: Gauge,
+    recorder: RecorderHandle,
+    ticker: LoopTicker,
 }
 
 impl CpuScaler {
@@ -564,19 +615,27 @@ impl CpuScaler {
             handle: Mutex::new(None),
             m_demand: registry.gauge("autoscaler_cpu_demand", &l),
             m_desired: registry.gauge("autoscaler_cpu_desired", &l),
+            recorder: RecorderHandle::default(),
+            ticker: LoopTicker::new(&registry, clock, "cpu_scaler"),
         });
         let s = Arc::clone(&scaler);
         let handle = std::thread::Builder::new()
             .name("cpu-autoscaler".into())
             .spawn(move || {
                 while !s.stop.load(Ordering::SeqCst) {
-                    s.evaluate_once();
+                    s.ticker.tick(|| s.evaluate_once());
                     s.clock.sleep(s.cfg.poll_interval);
                 }
             })
             .expect("spawning cpu autoscaler");
         *scaler.handle.lock().unwrap() = Some(handle);
         scaler
+    }
+
+    /// The flight-recorder slot scaling decisions land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// One synchronous evaluation (used by the poll loop and by tests).
@@ -594,6 +653,14 @@ impl CpuScaler {
         if let Some(n) = decision.target() {
             log::info!("cpu autoscaler: cpu demand {total:.1}, cpu pods {current} -> {n}");
             self.cluster.set_cpu_desired(n);
+            self.recorder.record(
+                DecisionEvent::new("cpu_scaler", "cpu_target")
+                    .input("cpu_demand", total)
+                    .input("per_replica", per_replica)
+                    .input("from", current as f64)
+                    .input("to", n as f64)
+                    .action(format!("cpu pods {current} -> {n}")),
+            );
         }
         self.m_desired.set(self.cluster.cpu_desired() as f64);
         decision

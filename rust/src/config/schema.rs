@@ -788,6 +788,12 @@ pub struct ObservabilityConfig {
     /// Span buffer capacity (ring semantics; evictions are counted on
     /// `trace_spans_dropped_total` and mark affected traces partial).
     pub trace_capacity: usize,
+    /// Control-plane flight recorder capacity: decision events retained
+    /// (ring semantics). 0 disables the recorder entirely.
+    pub flight_recorder_capacity: usize,
+    /// How far back `explain` looks (clock seconds) when no explicit
+    /// `since` bound is given.
+    pub explain_horizon: Duration,
     /// Fast burn-rate window (the "5m" of the multi-window rule).
     pub slo_fast_window: Duration,
     /// Slow burn-rate window (the "1h" of the multi-window rule).
@@ -944,6 +950,8 @@ impl Default for ObservabilityConfig {
         ObservabilityConfig {
             trace_sample_rate: 1.0,
             trace_capacity: 65536,
+            flight_recorder_capacity: 4096,
+            explain_horizon: Duration::from_secs(600),
             slo_fast_window: Duration::from_secs(300),
             slo_slow_window: Duration::from_secs(3600),
             slo_eval_interval: Duration::from_secs(5),
@@ -1066,7 +1074,8 @@ pub mod keys {
     ];
     /// `observability` section (tracing + SLO alerting).
     pub const OBSERVABILITY: &[&str] = &[
-        "trace_sample_rate", "trace_capacity", "slo_fast_window", "slo_slow_window",
+        "trace_sample_rate", "trace_capacity", "flight_recorder_capacity",
+        "explain_horizon", "slo_fast_window", "slo_slow_window",
         "slo_eval_interval", "slo_burn_threshold", "slos",
         "rollback_latency_factor", "rollback_error_margin", "rollback_min_requests",
     ];
@@ -1642,6 +1651,12 @@ impl DeploymentConfig {
                 d.observability.trace_sample_rate,
             )?,
             trace_capacity: get_usize(ob, "trace_capacity", d.observability.trace_capacity)?,
+            flight_recorder_capacity: get_usize(
+                ob,
+                "flight_recorder_capacity",
+                d.observability.flight_recorder_capacity,
+            )?,
+            explain_horizon: get_duration(ob, "explain_horizon", d.observability.explain_horizon)?,
             slo_fast_window: get_duration(ob, "slo_fast_window", d.observability.slo_fast_window)?,
             slo_slow_window: get_duration(ob, "slo_slow_window", d.observability.slo_slow_window)?,
             slo_eval_interval: get_duration(
@@ -2260,6 +2275,12 @@ impl DeploymentConfig {
         }
         if ob.trace_capacity == 0 {
             bail!("observability.trace_capacity must be >= 1");
+        }
+        if ob.explain_horizon.is_zero() {
+            bail!(
+                "observability.explain_horizon must be > 0 (a zero horizon \
+                 would make every explain query come back empty)"
+            );
         }
         if ob.slo_burn_threshold <= 0.0 {
             bail!("observability.slo_burn_threshold must be > 0");

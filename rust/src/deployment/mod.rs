@@ -32,12 +32,13 @@ use crate::engine::{AcceleratorClass, BackendRegistry, EngineCatalog};
 use crate::federation::{Federation, FederationRouter, Rebalancer, Site};
 use crate::gateway::ratelimit::PressureGate;
 use crate::gateway::Gateway;
-use crate::metrics::exposition::MetricsServer;
+use crate::metrics::exposition::{DebugProvider, MetricsServer};
 use crate::metrics::{MetricStore, Registry, Scraper};
 use crate::modelmesh::{initial_placement, ModelRouter, PlacementController, RampTask};
 use crate::orchestrator::{Cluster, InstanceFactory};
 use crate::runtime::PjrtRuntime;
 use crate::server::{split_version, versioned_name, Instance, ModelRepository};
+use crate::telemetry::flight::{ExplainFilter, FlightRecorder};
 use crate::telemetry::rollback::{
     CanaryProbe, CanarySnapshot, RollbackAction, RollbackEngine, RollbackTask,
 };
@@ -76,6 +77,11 @@ pub struct Deployment {
     /// Class-partitioned CPU autoscaler, when `engines.cpu_max_replicas`
     /// lifts the CPU group's ceiling above its floor.
     pub cpu_scaler: Option<Arc<CpuScaler>>,
+    /// Control-plane flight recorder, when
+    /// `observability.flight_recorder_capacity` is non-zero. Every
+    /// control loop's decisions land here; query with
+    /// [`FlightRecorder::explain`] or `supersonic explain`.
+    pub flight: Option<Arc<FlightRecorder>>,
     /// Staged canary ramp loops (one per model with `canary.ramp`).
     ramp_tasks: Vec<RampTask>,
     metrics_http: Option<MetricsServer>,
@@ -132,6 +138,18 @@ impl Deployment {
         // Export drop accounting even when tracing is off: a flat-zero
         // `trace_spans_dropped_total` is the healthy-baseline signal.
         tracer.bind_registry(&registry);
+
+        // Control-plane flight recorder: one bounded ring every control
+        // loop reports its decisions into (installed below, once the
+        // loops exist).
+        let flight = (cfg.observability.flight_recorder_capacity > 0).then(|| {
+            Arc::new(FlightRecorder::new(
+                clock.clone(),
+                cfg.observability.flight_recorder_capacity,
+                cfg.observability.explain_horizon.as_secs_f64(),
+                registry.clone(),
+            ))
+        });
 
         // Model repository: compile through PJRT only when instances will
         // actually execute.
@@ -742,10 +760,38 @@ impl Deployment {
             None => Vec::new(),
         };
 
+        // Point every control loop's recorder handle at the shared ring.
+        if let Some(f) = &flight {
+            if let Some(p) = &placement {
+                p.recorder().install(Arc::clone(f));
+            }
+            if let Some(s) = &per_model_scaler {
+                s.recorder().install(Arc::clone(f));
+            }
+            if let Some(s) = &cpu_scaler {
+                s.recorder().install(Arc::clone(f));
+            }
+            autoscaler.recorder().install(Arc::clone(f));
+            if let Some(rb) = &rollback {
+                rb.recorder().install(Arc::clone(f));
+            }
+            for t in &ramp_tasks {
+                t.recorder().install(Arc::clone(f));
+            }
+        }
+
         let metrics_http = if cfg.monitoring.listen.is_empty() {
             None
         } else {
-            Some(MetricsServer::start(&cfg.monitoring.listen, registry.clone())?)
+            let debug: Option<DebugProvider> = flight.as_ref().map(|f| {
+                let f = Arc::clone(f);
+                Arc::new(move || f.explain(&ExplainFilter::default())) as DebugProvider
+            });
+            Some(MetricsServer::start_with_debug(
+                &cfg.monitoring.listen,
+                registry.clone(),
+                debug,
+            )?)
         };
 
         log::info!(
@@ -785,6 +831,7 @@ impl Deployment {
             rollback,
             federation: None,
             cpu_scaler,
+            flight,
             ramp_tasks,
             metrics_http,
             _slo_task: slo_task,
@@ -855,6 +902,17 @@ impl Deployment {
             Tracer::disabled()
         };
         tracer.bind_registry(&registry);
+
+        // Control-plane flight recorder (installed into every site's
+        // loops plus the federation tier below).
+        let flight = (cfg.observability.flight_recorder_capacity > 0).then(|| {
+            Arc::new(FlightRecorder::new(
+                clock.clone(),
+                cfg.observability.flight_recorder_capacity,
+                cfg.observability.explain_horizon.as_secs_f64(),
+                registry.clone(),
+            ))
+        });
 
         let model_names: Vec<String> =
             cfg.server.models.iter().map(|m| m.name.clone()).collect();
@@ -1325,10 +1383,36 @@ impl Deployment {
         let ramp_tasks =
             Self::start_ramp_tasks(&cfg, ramp_routers, rollback.clone(), &clock, &registry);
 
+        // Point every control loop — per site and federation-tier — at
+        // the shared flight-recorder ring.
+        if let Some(f) = &flight {
+            for s in &sites {
+                s.placement.recorder().install(Arc::clone(f));
+                s.scaler.recorder().install(Arc::clone(f));
+            }
+            fed_router.recorder().install(Arc::clone(f));
+            rebalancer.recorder().install(Arc::clone(f));
+            autoscaler.recorder().install(Arc::clone(f));
+            if let Some(rb) = &rollback {
+                rb.recorder().install(Arc::clone(f));
+            }
+            for t in &ramp_tasks {
+                t.recorder().install(Arc::clone(f));
+            }
+        }
+
         let metrics_http = if cfg.monitoring.listen.is_empty() {
             None
         } else {
-            Some(MetricsServer::start(&cfg.monitoring.listen, registry.clone())?)
+            let debug: Option<DebugProvider> = flight.as_ref().map(|f| {
+                let f = Arc::clone(f);
+                Arc::new(move || f.explain(&ExplainFilter::default())) as DebugProvider
+            });
+            Some(MetricsServer::start_with_debug(
+                &cfg.monitoring.listen,
+                registry.clone(),
+                debug,
+            )?)
         };
 
         log::info!(
@@ -1364,6 +1448,7 @@ impl Deployment {
             rollback,
             federation: Some(federation),
             cpu_scaler: None,
+            flight,
             ramp_tasks,
             metrics_http,
             _slo_task: slo_task,

@@ -13,12 +13,17 @@
 //! * [`FederationRouter`] — site-aware routing. Each request goes to
 //!   the cheapest site (by WAN penalty from the gateway site) that has
 //!   warm capacity for the model; when a site's per-warm-replica queue
-//!   depth crosses `federation.spillover_queue_depth` it is demoted
-//!   behind unsaturated sites, so traffic *spills over* to remote warm
-//!   capacity instead of queueing locally — and repatriates as soon as
-//!   the home site drops back under the threshold ([`site_order`] is
-//!   the pure, property-tested ordering rule). A site with zero warm
-//!   replicas for the model is never picked.
+//!   depth crosses its *derived knee* — the configured
+//!   `federation.spillover_queue_depth` scaled by the site's share of
+//!   the rebalancer's current budget split ([`derived_depths`]), so the
+//!   router and rebalancer cannot disagree mid-budget-shift — it is
+//!   demoted behind unsaturated sites, so traffic *spills over* to
+//!   remote warm capacity instead of queueing locally — and repatriates
+//!   as soon as the home site drops back under its knee ([`site_order`]
+//!   is the pure, property-tested ordering rule). A site with zero warm
+//!   replicas for the model is never picked. Spillover onsets, home-site
+//!   failovers and repatriations land in the control-plane flight
+//!   recorder with the derived knee they were decided from.
 //! * [`Rebalancer`] — the hierarchical budget loop. Site-local
 //!   [`PerModelScaler`]s decide *which models* get pods; the rebalancer
 //!   decides *how many pods each site may spend*, shifting the global
@@ -44,6 +49,7 @@ use crate::modelmesh::{ModelRouter, PlacementController};
 use crate::orchestrator::Cluster;
 use crate::rpc::codec::Status;
 use crate::server::Instance;
+use crate::telemetry::flight::{DecisionEvent, LoopTicker, RecorderHandle};
 use crate::telemetry::slo::ALERT_GAUGE;
 use crate::util::clock::Clock;
 
@@ -80,6 +86,15 @@ pub struct SiteView {
 ///   site is saturated the request still lands somewhere warm rather
 ///   than erroring (spillover degrades latency before availability).
 pub fn site_order(views: &[SiteView], saturation_depth: f64) -> Vec<usize> {
+    site_order_with_depths(views, &vec![saturation_depth; views.len()])
+}
+
+/// [`site_order`] with a per-site saturation knee: `depths[i]` is the
+/// queue depth at which site `i` is demoted. This is the form the
+/// federation router actually runs — knees come from [`derived_depths`]
+/// over the rebalancer's live budget split. A missing depth (shorter
+/// slice) never demotes that site.
+pub fn site_order_with_depths(views: &[SiteView], depths: &[f64]) -> Vec<usize> {
     let by_cost = |order: &mut Vec<usize>| {
         order.sort_by(|&a, &b| {
             views[a]
@@ -95,7 +110,7 @@ pub fn site_order(views: &[SiteView], saturation_depth: f64) -> Vec<usize> {
         if v.warm == 0 {
             continue;
         }
-        if v.queued_per_warm < saturation_depth {
+        if v.queued_per_warm < depths.get(i).copied().unwrap_or(f64::MAX) {
             unsat.push(i);
         } else {
             sat.push(i);
@@ -105,6 +120,25 @@ pub fn site_order(views: &[SiteView], saturation_depth: f64) -> Vec<usize> {
     by_cost(&mut sat);
     unsat.extend(sat);
     unsat
+}
+
+/// Per-site spillover knees derived from the rebalancer's current budget
+/// split: a site holding `share` of the federation budget saturates at
+/// `base_depth * share * nsites`, clamped to ≥ 1.0. Equal budgets reduce
+/// to the static `base_depth` (backwards compatible); a budget-starved
+/// site is demoted earlier; a budget-rich site absorbs more queueing
+/// before spilling. With no budget signal at all (sum ≤ 0) the static
+/// depth applies everywhere.
+pub fn derived_depths(base_depth: f64, budgets: &[f64]) -> Vec<f64> {
+    let n = budgets.len();
+    let total: f64 = budgets.iter().map(|b| b.max(0.0)).sum();
+    if total <= 0.0 {
+        return vec![base_depth; n];
+    }
+    budgets
+        .iter()
+        .map(|b| (base_depth * b.max(0.0) * n as f64 / total).max(1.0))
+        .collect()
 }
 
 /// WAN penalty between two sites from the config's per-site `wan` maps.
@@ -138,7 +172,16 @@ struct FedEndpoint {
     m_requests: Counter,
     m_spillover: Counter,
     m_wan_hops: Counter,
+    /// The site's live pod budget — the *same* registry gauge the
+    /// rebalancer writes (`federation_site_budget{site=...}`), read back
+    /// at pick time to derive the spillover knee.
+    budget: Gauge,
 }
+
+/// `away_cause` states for the router's episode tracking.
+const AWAY_NONE: usize = 0;
+const AWAY_SPILLOVER: usize = 1;
+const AWAY_FAILOVER: usize = 2;
 
 /// Site-aware routing tier: wraps the per-site [`ModelRouter`]s behind
 /// one pick/resolve surface the gateway consumes.
@@ -148,6 +191,14 @@ pub struct FederationRouter {
     /// (pin/canary resolution) is read from this site's router.
     policy: usize,
     spillover_depth: f64,
+    recorder: RecorderHandle,
+    /// Why traffic is currently landing away from the home site
+    /// (`AWAY_*`): decision events fire on transitions, not per pick.
+    away_cause: AtomicUsize,
+    /// Home-site knee (milli-units) the current away episode was decided
+    /// from; a rebalancer budget shift moves it and re-fires the event
+    /// with the fresh knee.
+    away_knee: AtomicUsize,
 }
 
 impl FederationRouter {
@@ -163,6 +214,13 @@ impl FederationRouter {
             .iter()
             .map(|(name, router)| {
                 let l = labels(&[("site", name)]);
+                let budget = registry.gauge("federation_site_budget", &l);
+                // Seed with the configured budget so knees are sane
+                // before the rebalancer's first tick overwrites this
+                // (same gauge handle — the registry deduplicates).
+                if let Some(sc) = cfg.sites.iter().find(|s| &s.name == name) {
+                    budget.set(sc.pod_budget as f64);
+                }
                 FedEndpoint {
                     name: name.clone(),
                     router: Arc::clone(router),
@@ -170,6 +228,7 @@ impl FederationRouter {
                     m_requests: registry.counter("federation_site_requests_total", &l),
                     m_spillover: registry.counter("federation_spillover_total", &l),
                     m_wan_hops: registry.counter("federation_wan_hops_total", &l),
+                    budget,
                 }
             })
             .collect();
@@ -177,7 +236,27 @@ impl FederationRouter {
             .iter()
             .position(|e| e.name == gateway)
             .unwrap_or(0);
-        Arc::new(FederationRouter { sites: endpoints, policy, spillover_depth: cfg.spillover_queue_depth })
+        Arc::new(FederationRouter {
+            sites: endpoints,
+            policy,
+            spillover_depth: cfg.spillover_queue_depth,
+            recorder: RecorderHandle::default(),
+            away_cause: AtomicUsize::new(AWAY_NONE),
+            away_knee: AtomicUsize::new(usize::MAX),
+        })
+    }
+
+    /// The flight-recorder slot routing decisions land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
+    }
+
+    /// Current per-site spillover knees, derived from the rebalancer's
+    /// live budget split (in site order — diagnostics and benches).
+    pub fn current_depths(&self) -> Vec<f64> {
+        let budgets: Vec<f64> = self.sites.iter().map(|s| s.budget.get()).collect();
+        derived_depths(self.spillover_depth, &budgets)
     }
 
     /// Version resolution on the policy site's router, with warm counts
@@ -216,17 +295,18 @@ impl FederationRouter {
 
     /// Pick a replica for `model` (already version-resolved), skipping
     /// the replica named `exclude` on retries. Sites are tried in
-    /// [`site_order`]; the first successful site-local pick wins. A pick
-    /// that lands anywhere but the cheapest warm site counts as
-    /// spillover; one that leaves the gateway site pays (and counts) a
-    /// WAN hop.
+    /// [`site_order_with_depths`] under budget-derived knees; the first
+    /// successful site-local pick wins. A pick that lands anywhere but
+    /// the cheapest warm site counts as spillover; one that leaves the
+    /// gateway site pays (and counts) a WAN hop.
     pub fn pick_excluding(
         &self,
         model: &str,
         exclude: Option<&str>,
     ) -> Result<FedPick, Status> {
         let views = self.views_for(model);
-        let order = site_order(&views, self.spillover_depth);
+        let depths = self.current_depths();
+        let order = site_order_with_depths(&views, &depths);
         if order.is_empty() {
             return Err(if self.sites.iter().any(|s| s.router.serves(model)) {
                 Status::Overloaded
@@ -254,10 +334,69 @@ impl FederationRouter {
                 if s.wan > Duration::ZERO {
                     s.m_wan_hops.inc();
                 }
+                self.note_pick(model, idx, &views, &depths);
                 return Ok(FedPick { instance, site: s.name.clone(), wan: s.wan });
             }
         }
         Err(Status::Overloaded)
+    }
+
+    /// Flight-recorder bookkeeping for one successful pick. Events fire
+    /// on *episode transitions*, not per pick: the first pick routed
+    /// away from the home site records a `spillover` (home warm but over
+    /// its knee) or `failover` (home cold) onset; a changed cause or a
+    /// materially-moved home knee (the rebalancer shifted budget under
+    /// the episode) re-fires with the fresh inputs; the first pick back
+    /// on the home site records `repatriation` and re-arms.
+    fn note_pick(&self, model: &str, idx: usize, views: &[SiteView], depths: &[f64]) {
+        let home = self.policy;
+        let knee = depths.get(home).copied().unwrap_or(self.spillover_depth);
+        if idx == home {
+            if self.away_cause.swap(AWAY_NONE, Ordering::SeqCst) != AWAY_NONE {
+                self.away_knee.store(usize::MAX, Ordering::SeqCst);
+                self.recorder.record(
+                    DecisionEvent::new("federation_router", "repatriation")
+                        .model(model)
+                        .site(&self.sites[home].name)
+                        .input("derived_knee", knee)
+                        .input("home_queued_per_warm", views[home].queued_per_warm)
+                        .action(format!(
+                            "traffic back on home site '{}'",
+                            self.sites[home].name
+                        )),
+                );
+            }
+            return;
+        }
+        let home_view = &views[home];
+        if home_view.warm > 0 && home_view.queued_per_warm < knee {
+            // Home was pickable but its local pick failed transiently —
+            // not an away episode, leave the latch alone.
+            return;
+        }
+        let cause = if home_view.warm == 0 { AWAY_FAILOVER } else { AWAY_SPILLOVER };
+        // Knee quantized to milli-units: float jitter must not re-fire.
+        let knee_q = (knee * 1000.0).round() as usize;
+        let prev_cause = self.away_cause.swap(cause, Ordering::SeqCst);
+        let prev_knee = self.away_knee.swap(knee_q, Ordering::SeqCst);
+        if prev_cause == cause && prev_knee == knee_q {
+            return;
+        }
+        let (kind, why) = if cause == AWAY_FAILOVER {
+            ("failover", "home site has no warm capacity")
+        } else {
+            ("spillover", "home site over its derived knee")
+        };
+        self.recorder.record(
+            DecisionEvent::new("federation_router", kind)
+                .model(model)
+                .site(&self.sites[idx].name)
+                .input("derived_knee", knee)
+                .input("home_queued_per_warm", home_view.queued_per_warm)
+                .input("home_warm", home_view.warm as f64)
+                .action(format!("routed to '{}' ({why})", self.sites[idx].name))
+                .alternative(self.sites[home].name.clone(), home_view.queued_per_warm),
+        );
     }
 
     /// Whether any site has a Ready instance (federation health probe).
@@ -393,6 +532,8 @@ pub struct Rebalancer {
     stop: Arc<AtomicBool>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
     per_site: Vec<SiteHandles>,
+    recorder: RecorderHandle,
+    ticker: LoopTicker,
 }
 
 impl Rebalancer {
@@ -426,19 +567,27 @@ impl Rebalancer {
             stop: Arc::new(AtomicBool::new(false)),
             handle: Mutex::new(None),
             per_site,
+            recorder: RecorderHandle::default(),
+            ticker: LoopTicker::new(registry, clock, "rebalancer"),
         });
         let r = Arc::clone(&rb);
         let handle = std::thread::Builder::new()
             .name("fed-rebalancer".into())
             .spawn(move || {
                 while !r.stop.load(Ordering::SeqCst) {
-                    r.tick();
+                    r.ticker.tick(|| r.tick());
                     r.clock.sleep(r.interval);
                 }
             })
             .expect("spawning federation rebalancer");
         *rb.handle.lock().unwrap() = Some(handle);
         rb
+    }
+
+    /// The flight-recorder slot budget decisions land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// One rebalance pass (used by the loop and by tests).
@@ -456,6 +605,20 @@ impl Rebalancer {
             let outage = h.ever_up.load(Ordering::SeqCst) && running == 0;
             if outage && h.alert.get() == 0.0 {
                 log::warn!("federation: site '{}' outage detected", s.name);
+                self.recorder.record(
+                    DecisionEvent::new("rebalancer", "site_outage")
+                        .site(&s.name)
+                        .input("running", running as f64)
+                        .action(format!("latched site_outage alert for '{}'", s.name)),
+                );
+            }
+            if !outage && h.alert.get() == 1.0 {
+                self.recorder.record(
+                    DecisionEvent::new("rebalancer", "site_recovered")
+                        .site(&s.name)
+                        .input("running", running as f64)
+                        .action(format!("cleared site_outage alert for '{}'", s.name)),
+                );
             }
             h.alert.set(if outage { 1.0 } else { 0.0 });
             up[i] = running > 0 && !s.is_failed();
@@ -511,6 +674,21 @@ impl Rebalancer {
         for (i, s) in self.sites.iter().enumerate() {
             if up[i] {
                 s.scaler.set_budget(assigned[i]);
+            }
+            let prev = self.per_site[i].budget.get();
+            if (prev - assigned[i] as f64).abs() >= 0.5 {
+                self.recorder.record(
+                    DecisionEvent::new("rebalancer", "budget_shift")
+                        .site(&s.name)
+                        .input("from", prev)
+                        .input("to", assigned[i] as f64)
+                        .input("demand", demand[i])
+                        .input("floor", floors[i] as f64)
+                        .action(format!(
+                            "site '{}' budget {:.0} -> {}",
+                            s.name, prev, assigned[i]
+                        )),
+                );
             }
             self.per_site[i].budget.set(assigned[i] as f64);
         }
@@ -670,6 +848,30 @@ mod tests {
                 seen_saturated |= sat;
             }
         });
+    }
+
+    #[test]
+    fn derived_depths_follow_budget_share() {
+        // Equal budgets reduce to the static depth.
+        assert_eq!(derived_depths(8.0, &[4.0, 4.0, 4.0]), vec![8.0, 8.0, 8.0]);
+        // A 3:1 budget split moves the knees 3:1 around the base.
+        assert_eq!(derived_depths(8.0, &[6.0, 2.0]), vec![12.0, 4.0]);
+        // A zero-budget (drained) site clamps at 1.0, never 0.
+        let d = derived_depths(8.0, &[8.0, 0.0]);
+        assert_eq!(d, vec![16.0, 1.0]);
+        // No budget signal at all: static depth everywhere.
+        assert_eq!(derived_depths(8.0, &[0.0, 0.0]), vec![8.0, 8.0]);
+    }
+
+    #[test]
+    fn per_site_knees_change_the_order() {
+        // Home (wan 0) queues 5 deep: saturated under a knee of 4,
+        // unsaturated under the static 8.
+        let views = [v(2, 5.0, 0.0), v(2, 0.0, 0.05)];
+        assert_eq!(site_order_with_depths(&views, &[4.0, 8.0]), vec![1, 0]);
+        assert_eq!(site_order_with_depths(&views, &[8.0, 8.0]), vec![0, 1]);
+        // Uniform depths match the static-rule wrapper.
+        assert_eq!(site_order(&views, 8.0), site_order_with_depths(&views, &[8.0, 8.0]));
     }
 
     #[test]

@@ -323,6 +323,7 @@ impl Gateway {
                 }
             }
             let routed_model = req.model.clone();
+            let mut serving_site: Option<String> = None;
             let response = handle_request(
                 req,
                 trace,
@@ -337,6 +338,7 @@ impl Gateway {
                 pressure.as_deref(),
                 &tracer,
                 sessions2.as_deref(),
+                &mut serving_site,
             );
             let dt = (clock2.now().saturating_sub(t0)) as f64 / 1e9;
             m_latency.observe(dt);
@@ -367,14 +369,21 @@ impl Gateway {
             }
             if trace != 0 && tracer.enabled() {
                 // Close the root span over the whole pipeline, then fold
-                // the finished trace into the per-stage histograms.
+                // the finished trace into the per-stage histograms —
+                // attributed to the serving site when the request was
+                // routed by the federation layer, so a spilled request's
+                // wan stage lands on the site that actually served it.
                 tracer.record(Span {
                     trace_id: trace,
                     name: ROOT_SPAN.into(),
                     start: ts0,
                     end: clock2.now_secs(),
                 });
-                stage_recorder.observe(&tracer.trace(trace));
+                let view = tracer.trace(trace);
+                match serving_site.as_deref() {
+                    Some(site) => stage_recorder.observe_from(&view, site),
+                    None => stage_recorder.observe(&view),
+                }
             }
             response
         });
@@ -423,6 +432,9 @@ impl Gateway {
 /// class (explicit wire priority or a `server.priorities` default);
 /// `trace` is the effective trace id (0 when untraced or head-sampled
 /// out), stamped on every stage span and propagated to the instance.
+/// `serving_site` reports the federated site of the final pick back to
+/// the caller (left `None` outside federation) so the finished trace can
+/// be attributed to the site that served it.
 #[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: InferRequest,
@@ -438,6 +450,7 @@ fn handle_request(
     pressure: Option<&PressureGate>,
     tracer: &Tracer,
     sessions: Option<&SessionPool>,
+    serving_site: &mut Option<String>,
 ) -> InferResponse {
     // 0. Health probes bypass auth/limits: they answer "is the deployment
     //    routable" (the k8s readiness probe analogue). Federated, that
@@ -514,8 +527,12 @@ fn handle_request(
         // Each routing hop gets its own span — the first is "route", a
         // second attempt is "retry" — covering pick + submit hand-off
         // (the wait for the executor's reply is queue/compute time,
-        // reported by the server-side spans).
-        let hop_stage = tracer.span(trace, if attempt == 0 { "route" } else { "retry" });
+        // reported by the server-side spans). A cross-site WAN hop gets
+        // its own site-attributed "wan" span BETWEEN the pick and the
+        // dispatch, outside both hop spans, so stage durations still sum
+        // to the root span.
+        let hop_name = if attempt == 0 { "route" } else { "retry" };
+        let pick_stage = tracer.span(trace, hop_name);
         let no_replica_msg = |status: Status, rejected_by: &Option<String>, last: Status| match status
         {
             Status::ModelNotFound => {
@@ -534,7 +551,10 @@ fn handle_request(
             // Federated: site-aware pick; a remote-site hop carries the
             // configured WAN penalty back for the dispatch below.
             (Some(f), _) => match f.pick_excluding(&req.model, rejected_by.as_deref()) {
-                Ok(pick) => (pick.instance, pick.wan),
+                Ok(pick) => {
+                    *serving_site = Some(pick.site);
+                    (pick.instance, pick.wan)
+                }
                 Err(status) => {
                     last_msg = no_replica_msg(status, &rejected_by, last_status);
                     last_status = status;
@@ -569,10 +589,18 @@ fn handle_request(
         };
         // WAN penalty: a request spilled to a remote site pays the
         // inter-site latency before the hand-off (both directions are
-        // folded into the one configured cost).
+        // folded into the one configured cost). The hop is recorded as
+        // a "wan" span attributed to the serving site — the span guard
+        // carries a site-scoped tracer facade so the cross-site leg of
+        // a spilled request shows up in its stage breakdown.
+        drop(pick_stage);
         if wan > Duration::ZERO {
+            let _wan_stage = serving_site
+                .as_deref()
+                .and_then(|site| tracer.for_site(site).span(trace, "wan"));
             clock.sleep(wan);
         }
+        let hop_stage = tracer.span(trace, hop_name);
         // Remote dispatch: when the session pool is on and the instance
         // advertises a sonic-rpc endpoint, forward over the wire instead
         // of the in-process submit. The request's resolved metadata rides

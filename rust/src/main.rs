@@ -70,6 +70,7 @@ fn run(args: &[String]) -> Result<()> {
         "check" => cmd_check(&flags),
         "infer" => cmd_infer(&flags),
         "loadtest" => cmd_loadtest(&flags),
+        "explain" => cmd_explain(&flags),
         "token" => cmd_token(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -87,6 +88,7 @@ fn print_usage() {
          \x20 supersonic check    --config <yaml>\n\
          \x20 supersonic infer    --addr <host:port> --model <name> [--rows N] [--count N] [--token T] [--priority bulk|standard|critical]\n\
          \x20 supersonic loadtest --config <yaml> --schedule C:S,C:S,... [--rows N] [--model NAME] [--priority P]\n\
+         \x20 supersonic explain  --config <yaml> [--model M] [--site S] [--since SECS] [--duration SECS] [--fail-site S]\n\
          \x20 supersonic token    --secret <secret>\n"
     );
 }
@@ -350,6 +352,92 @@ fn cmd_loadtest(flags: &HashMap<String, String>) -> Result<()> {
         report.throughput(),
         report.overall_latency.mean()
     );
+    d.down();
+    Ok(())
+}
+
+/// Boot the deployment, drive a short burst of traffic (optionally
+/// killing and recovering one site mid-run), then print the flight
+/// recorder's causal explain view for the requested scope.
+fn cmd_explain(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = DeploymentConfig::from_file(std::path::Path::new(flag(flags, "config")?))?;
+    let duration: f64 = flags
+        .get("duration")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--duration must be seconds")?
+        .unwrap_or(6.0);
+    let since_back: Option<f64> = flags
+        .get("since")
+        .map(|s| s.parse())
+        .transpose()
+        .context("--since must be seconds (how far back to explain)")?;
+    if cfg.observability.flight_recorder_capacity == 0 {
+        bail!("flight recorder disabled: set observability.flight_recorder_capacity > 0");
+    }
+
+    let token = cfg
+        .gateway
+        .auth_secret
+        .as_deref()
+        .map(auth::mint_token)
+        .unwrap_or_default();
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| cfg.server.models[0].name.clone());
+    let d = Deployment::up(cfg)?;
+    if !d.wait_ready(1, Duration::from_secs(60)) {
+        bail!("deployment did not become ready");
+    }
+    let flight = d.flight.clone().expect("capacity > 0 arms the recorder");
+
+    // Drive traffic so the control loops have decisions worth
+    // explaining; a --fail-site outage is injected a third of the way
+    // in and recovered at two thirds, leaving time for the rebalancer
+    // and router to react on both edges.
+    let input_shape = d
+        .repository
+        .get(&d.repository.serving_name(&model))
+        .with_context(|| format!("model '{model}' not served"))?
+        .input_shape
+        .clone();
+    let mut full_shape = vec![4];
+    full_shape.extend_from_slice(&input_shape);
+    let mut client = RpcClient::connect(&d.endpoint())?;
+    if !token.is_empty() {
+        client = client.with_token(&token);
+    }
+    let fail_site = flags.get("fail-site").map(|s| s.as_str());
+    let t0 = std::time::Instant::now();
+    let total = Duration::from_secs_f64(duration);
+    let mut failed = false;
+    let mut recovered = false;
+    while t0.elapsed() < total {
+        let _ = client.infer(&model, Tensor::zeros(full_shape.clone()));
+        if let (Some(site), Some(f)) = (fail_site, &d.federation) {
+            if !failed && t0.elapsed() > total / 3 {
+                failed = true;
+                if !f.fail_site(site) {
+                    bail!("--fail-site '{site}' does not name a configured site");
+                }
+                println!("# injected outage: site '{site}' down");
+            }
+            if failed && !recovered && t0.elapsed() > total * 2 / 3 {
+                recovered = true;
+                f.recover_site(site);
+                println!("# injected recovery: site '{site}' back");
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let filter = supersonic::telemetry::flight::ExplainFilter {
+        model: flags.get("model").cloned(),
+        site: flags.get("site").cloned(),
+        since: since_back.map(|back| d.clock.now_secs() - back),
+    };
+    print!("{}", flight.explain(&filter));
     d.down();
     Ok(())
 }

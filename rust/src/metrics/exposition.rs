@@ -73,7 +73,14 @@ pub fn render(registry: &Registry) -> String {
     out
 }
 
-/// Minimal HTTP/1.1 server exposing `/metrics` (and `/healthz`).
+/// Producer of the `/debug` section body — a plain-text diagnostic
+/// rendered on demand (the control-plane explain view in the full
+/// deployment). Kept as a trait object so the metrics layer stays
+/// ignorant of the telemetry types feeding it.
+pub type DebugProvider = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Minimal HTTP/1.1 server exposing `/metrics` (and `/healthz`, plus a
+/// `/debug` diagnostic section when a provider is wired).
 pub struct MetricsServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -83,6 +90,16 @@ pub struct MetricsServer {
 impl MetricsServer {
     /// Bind and serve in a background thread.
     pub fn start(listen: &str, registry: Registry) -> Result<Self> {
+        Self::start_with_debug(listen, registry, None)
+    }
+
+    /// Like [`MetricsServer::start`], additionally serving `debug()`'s
+    /// output under `/debug` (404 when no provider is given).
+    pub fn start_with_debug(
+        listen: &str,
+        registry: Registry,
+        debug: Option<DebugProvider>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(listen)
             .with_context(|| format!("binding metrics endpoint {listen}"))?;
         let addr = listener.local_addr()?;
@@ -107,6 +124,12 @@ impl MetricsServer {
                             let (status, body) = match path {
                                 "/metrics" => ("200 OK", render(&registry)),
                                 "/healthz" => ("200 OK", "ok\n".to_string()),
+                                "/debug" => match &debug {
+                                    Some(d) => ("200 OK", d()),
+                                    None => {
+                                        ("404 Not Found", "no debug provider\n".to_string())
+                                    }
+                                },
                                 _ => ("404 Not Found", "not found\n".to_string()),
                             };
                             let resp = format!(
@@ -192,6 +215,30 @@ mod tests {
         stream.read_to_string(&mut resp).unwrap();
         assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
         assert!(resp.contains("up_total 1"));
+    }
+
+    #[test]
+    fn http_endpoint_serves_debug_section() {
+        let r = Registry::new();
+        let provider: DebugProvider = Arc::new(|| "== control-plane explain ==\n".to_string());
+        let server = MetricsServer::start_with_debug("127.0.0.1:0", r, Some(provider)).unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        stream
+            .write_all(b"GET /debug HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("control-plane explain"));
+        // Without a provider the path 404s.
+        let bare = MetricsServer::start("127.0.0.1:0", Registry::new()).unwrap();
+        let mut stream = std::net::TcpStream::connect(bare.addr()).unwrap();
+        stream
+            .write_all(b"GET /debug HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
     }
 
     #[test]

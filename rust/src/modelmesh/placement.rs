@@ -43,6 +43,7 @@ use crate::metrics::MetricStore;
 use crate::modelmesh::router::ModelRouter;
 use crate::rpc::codec::Priority;
 use crate::server::{split_version, Instance};
+use crate::telemetry::flight::{DecisionEvent, LoopTicker, RecorderHandle};
 use crate::telemetry::rollback::VERSION_REPLICAS_GAUGE;
 use crate::util::clock::Clock;
 
@@ -457,6 +458,19 @@ impl PlacementCore {
     /// Repair-only pass for the `static` policy: restore lost models,
     /// plan no demand-driven moves.
     pub fn plan_repairs(&mut self, now: f64, views: &[InstanceView]) -> Vec<Move> {
+        self.plan_repairs_tagged(now, views)
+            .into_iter()
+            .map(|(m, _)| m)
+            .collect()
+    }
+
+    /// [`PlacementCore::plan_repairs`] with each move tagged by its
+    /// decision kind (always `"repair"` here) for the flight recorder.
+    pub fn plan_repairs_tagged(
+        &mut self,
+        now: f64,
+        views: &[InstanceView],
+    ) -> Vec<(Move, &'static str)> {
         if views.is_empty() {
             return Vec::new();
         }
@@ -464,7 +478,7 @@ impl PlacementCore {
         let (mut present, mut warm) = self.counts(&views);
         let mut moves = Vec::new();
         self.repair(now, &mut views, &mut present, &mut warm, &mut moves);
-        moves
+        moves.into_iter().map(|m| (m, "repair")).collect()
     }
 
     /// Plan one reconcile pass: repairs first, then at most one unload
@@ -477,7 +491,23 @@ impl PlacementCore {
         views: &[InstanceView],
         demand: &BTreeMap<String, f64>,
     ) -> Vec<Move> {
-        let mut moves = Vec::new();
+        self.plan_tagged(now, views, demand)
+            .into_iter()
+            .map(|(m, _)| m)
+            .collect()
+    }
+
+    /// [`PlacementCore::plan`] with each move tagged by its decision
+    /// kind for the flight recorder: `"repair"` (floor restoration),
+    /// `"shrink"` (cold surplus unload), `"swap"` (retiring-version
+    /// drain), `"grow"` (hot load).
+    pub fn plan_tagged(
+        &mut self,
+        now: f64,
+        views: &[InstanceView],
+        demand: &BTreeMap<String, f64>,
+    ) -> Vec<(Move, &'static str)> {
+        let mut moves: Vec<(Move, &'static str)> = Vec::new();
         if views.is_empty() {
             return moves;
         }
@@ -487,7 +517,9 @@ impl PlacementCore {
         let (mut present, mut warm) = self.counts(&views);
 
         // Phase 0 — restore anything below its replica floor.
-        self.repair(now, &mut views, &mut present, &mut warm, &mut moves);
+        let mut repairs = Vec::new();
+        self.repair(now, &mut views, &mut present, &mut warm, &mut repairs);
+        moves.extend(repairs.into_iter().map(|m| (m, "repair")));
 
         let d = |m: &str| demand.get(m).copied().unwrap_or(0.0);
         let per_replica = |m: &str, r: usize| d(m) / r.max(1) as f64;
@@ -527,7 +559,10 @@ impl PlacementCore {
                     *warm.get_mut(model).unwrap() -= 1;
                 }
                 self.stamp(now, &id, model);
-                moves.push(Move::Unload { instance: id, model: model.clone() });
+                moves.push((
+                    Move::Unload { instance: id, model: model.clone() },
+                    if retiring { "swap" } else { "shrink" },
+                ));
             }
         }
 
@@ -571,7 +606,7 @@ impl PlacementCore {
                 v.mem_used += mem;
                 *present.get_mut(&model).unwrap() += 1;
                 self.stamp(now, &id, &model);
-                moves.push(Move::Load { instance: id, model });
+                moves.push((Move::Load { instance: id, model }, "grow"));
             }
         }
         moves
@@ -607,6 +642,8 @@ pub struct PlacementController {
     /// single-cluster). Scopes the demand signal to the site's
     /// `routed_requests_total{model=...,site=...}` series.
     site: Option<String>,
+    recorder: RecorderHandle,
+    ticker: LoopTicker,
 }
 
 impl PlacementController {
@@ -730,11 +767,19 @@ impl PlacementController {
             catalog,
             router,
             store,
+            ticker: LoopTicker::new(registry, clock.clone(), "placement"),
             clock,
             per_model,
             m_moves: registry.counter("placement_moves_total", &with_site(&[])),
             site: site.map(String::from),
+            recorder: RecorderHandle::default(),
         })
+    }
+
+    /// The flight-recorder slot placement decisions land in (installed
+    /// by the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// Demand signal for one model: scraped routed-request rate over the
@@ -799,8 +844,13 @@ impl PlacementController {
     /// labels, then plan and apply placement moves — min-replica repairs
     /// under both policies (a model whose last pod died must be
     /// re-hosted), demand-driven moves under `dynamic` only. Called from
-    /// the cluster reconcile loop.
+    /// the cluster reconcile loop; each pass lands in the placement
+    /// loop-health series.
     pub fn reconcile(&self, endpoints: &[Arc<Instance>]) {
+        self.ticker.tick(|| self.reconcile_inner(endpoints));
+    }
+
+    fn reconcile_inner(&self, endpoints: &[Arc<Instance>]) {
         self.router.sync(endpoints);
         let now = self.clock.now_secs();
         let views: Vec<InstanceView> = endpoints
@@ -820,13 +870,14 @@ impl PlacementController {
                 }
             })
             .collect();
-        let moves = if self.cfg.policy == PlacementPolicy::Dynamic {
+        let (moves, demand) = if self.cfg.policy == PlacementPolicy::Dynamic {
             let demand = self.demand_snapshot(now);
-            self.core.lock().unwrap().plan(now, &views, &demand)
+            let moves = self.core.lock().unwrap().plan_tagged(now, &views, &demand);
+            (moves, Some(demand))
         } else {
-            self.core.lock().unwrap().plan_repairs(now, &views)
+            (self.core.lock().unwrap().plan_repairs_tagged(now, &views), None)
         };
-        self.apply(endpoints, moves);
+        self.apply(endpoints, moves, demand.as_ref());
         // One consistent (warm model -> backend) snapshot per instance:
         // the gauge refresh below must not re-take each instance's
         // serving-set lock per (model, backend) pair, nor pair two
@@ -867,8 +918,13 @@ impl PlacementController {
         self.core.lock().unwrap().clear_successor(retiring)
     }
 
-    fn apply(&self, endpoints: &[Arc<Instance>], moves: Vec<Move>) {
-        for mv in moves {
+    fn apply(
+        &self,
+        endpoints: &[Arc<Instance>],
+        moves: Vec<(Move, &'static str)>,
+        demand: Option<&BTreeMap<String, f64>>,
+    ) {
+        for (mv, kind) in moves {
             match mv {
                 Move::Load { instance, model } => {
                     if let Some(inst) = endpoints.iter().find(|i| i.id == instance) {
@@ -876,6 +932,7 @@ impl PlacementController {
                             log::info!("modelmesh: loaded '{model}' on {instance}");
                             self.per_model[&model].loads.inc();
                             self.m_moves.inc();
+                            self.record_move(kind, &model, &instance, "load", demand);
                         }
                     }
                 }
@@ -885,11 +942,33 @@ impl PlacementController {
                             log::info!("modelmesh: unloaded '{model}' from {instance}");
                             self.per_model[&model].unloads.inc();
                             self.m_moves.inc();
+                            self.record_move(kind, &model, &instance, "unload", demand);
                         }
                     }
                 }
             }
         }
+    }
+
+    /// One applied placement move into the flight recorder.
+    fn record_move(
+        &self,
+        kind: &'static str,
+        model: &str,
+        instance: &str,
+        verb: &str,
+        demand: Option<&BTreeMap<String, f64>>,
+    ) {
+        let mut ev = DecisionEvent::new("placement", kind)
+            .model(model)
+            .action(format!("{verb} '{model}' on {instance}"));
+        if let Some(d) = demand.and_then(|d| d.get(model)) {
+            ev = ev.input("demand", *d);
+        }
+        if let Some(site) = &self.site {
+            ev = ev.site(site);
+        }
+        self.recorder.record(ev);
     }
 }
 

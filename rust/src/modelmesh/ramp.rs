@@ -22,6 +22,7 @@ use std::time::Duration;
 
 use crate::metrics::registry::{labels, Gauge, Registry};
 use crate::modelmesh::ModelRouter;
+use crate::telemetry::flight::{DecisionEvent, LoopTicker, RecorderHandle};
 use crate::telemetry::rollback::RollbackEngine;
 use crate::util::clock::Clock;
 
@@ -36,6 +37,7 @@ pub fn next_stage(ramp: &[f64], current: f64) -> Option<f64> {
 pub struct RampTask {
     stop: Arc<AtomicBool>,
     handle: Mutex<Option<std::thread::JoinHandle<()>>>,
+    recorder: RecorderHandle,
 }
 
 impl RampTask {
@@ -63,6 +65,9 @@ impl RampTask {
         let stop2 = Arc::clone(&stop);
         let gauge: Gauge = registry.gauge("canary_ramp_weight", &labels(&[("model", &base)]));
         gauge.set(start_weight);
+        let recorder = RecorderHandle::default();
+        let rec = recorder.clone();
+        let ticker = LoopTicker::new(registry, clock.clone(), "ramp");
         let handle = std::thread::Builder::new()
             .name("canary-ramp".into())
             .spawn(move || {
@@ -72,35 +77,58 @@ impl RampTask {
                     if stop2.load(Ordering::SeqCst) {
                         break;
                     }
-                    if let Some(rb) = &rollback {
-                        if rb.rolled_back(&base) {
-                            log::warn!("canary ramp: '{base}' rolled back, halting at {current}");
-                            break;
+                    let advanced = ticker.tick(|| {
+                        if let Some(rb) = &rollback {
+                            if rb.rolled_back(&base) {
+                                log::warn!(
+                                    "canary ramp: '{base}' rolled back, halting at {current}"
+                                );
+                                return None;
+                            }
                         }
+                        // The policy router (index 0) is the split of
+                        // record; a torn-down or replaced split ends the
+                        // ramp.
+                        let live = routers[0]
+                            .canary_of(&base)
+                            .map(|(_, c, _)| c == canary)
+                            .unwrap_or(false);
+                        if !live {
+                            return None;
+                        }
+                        let Some(next) = next_stage(&ramp, current) else {
+                            log::info!("canary ramp: '{base}' complete at weight {current}");
+                            return None;
+                        };
+                        for r in &routers {
+                            r.set_canary(&base, &incumbent, &canary, next, seed);
+                        }
+                        gauge.set(next);
+                        log::info!("canary ramp: '{base}' {current} -> {next}");
+                        rec.record(
+                            DecisionEvent::new("ramp", "ramp_advance")
+                                .model(&base)
+                                .version(&canary)
+                                .input("from", current)
+                                .input("to", next)
+                                .action(format!("canary '{canary}' weight {current} -> {next}")),
+                        );
+                        Some(next)
+                    });
+                    match advanced {
+                        Some(next) => current = next,
+                        None => break,
                     }
-                    // The policy router (index 0) is the split of record;
-                    // a torn-down or replaced split ends the ramp.
-                    let live = routers[0]
-                        .canary_of(&base)
-                        .map(|(_, c, _)| c == canary)
-                        .unwrap_or(false);
-                    if !live {
-                        break;
-                    }
-                    let Some(next) = next_stage(&ramp, current) else {
-                        log::info!("canary ramp: '{base}' complete at weight {current}");
-                        break;
-                    };
-                    for r in &routers {
-                        r.set_canary(&base, &incumbent, &canary, next, seed);
-                    }
-                    gauge.set(next);
-                    log::info!("canary ramp: '{base}' {current} -> {next}");
-                    current = next;
                 }
             })
             .expect("spawning canary ramp");
-        RampTask { stop, handle: Mutex::new(Some(handle)) }
+        RampTask { stop, handle: Mutex::new(Some(handle)), recorder }
+    }
+
+    /// The flight-recorder slot ramp advances land in (installed by the
+    /// deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// Stop the loop.

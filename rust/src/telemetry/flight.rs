@@ -1,0 +1,589 @@
+//! Control-plane flight recorder — the decision ledger.
+//!
+//! Eight control loops (placement, per-model + CPU scalers, the inert
+//! global autoscaler, rebalancer, federation router, rollback, ramp)
+//! mutate the fleet; before this module their decisions were observable
+//! only through side effects. A [`FlightRecorder`] keeps a bounded,
+//! clock-stamped ring of structured [`DecisionEvent`]s — who decided
+//! what, from which inputs, over which rejected alternatives — and
+//! [`FlightRecorder::explain`] joins them into the causal chains an
+//! operator reads during an incident (site kill → `site_outage` latch →
+//! budget shift → spillover → repatriation).
+//!
+//! Loop health rides alongside: [`LoopTicker`] wraps each loop body in a
+//! `control_loop_tick_seconds{loop=...}` histogram and a
+//! `control_loop_last_run_seconds{loop=...}` staleness gauge, and every
+//! recorded event bumps `control_decisions_total{loop=...,kind=...}` —
+//! a wedged loop is an alertable signal instead of silent drift.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::registry::{labels, Gauge, HistogramHandle, Registry};
+use crate::util::clock::Clock;
+
+/// Counter of recorded decisions, labeled `{loop=...,kind=...}`.
+pub const DECISIONS_COUNTER: &str = "control_decisions_total";
+
+/// Histogram of loop-body durations (clock seconds), labeled `{loop=...}`.
+pub const LOOP_TICK_HISTOGRAM: &str = "control_loop_tick_seconds";
+
+/// Gauge of each loop's last completed tick (clock seconds), labeled
+/// `{loop=...}` — `now - gauge` is the loop's staleness.
+pub const LOOP_LAST_RUN_GAUGE: &str = "control_loop_last_run_seconds";
+
+/// Every actor-loop label emitted on decision events and loop-health
+/// series. Documented in OPERATIONS.md (test-enforced).
+pub const LOOP_LABELS: &[&str] = &[
+    "placement",
+    "per_model_scaler",
+    "cpu_scaler",
+    "autoscaler",
+    "rebalancer",
+    "federation_router",
+    "rollback",
+    "ramp",
+];
+
+/// Every decision kind a control loop can record. Documented in
+/// OPERATIONS.md (test-enforced).
+pub const DECISION_KINDS: &[&str] = &[
+    "grow",
+    "shrink",
+    "repair",
+    "swap",
+    "scale_target",
+    "cpu_target",
+    "budget_shift",
+    "site_outage",
+    "site_recovered",
+    "spillover",
+    "failover",
+    "repatriation",
+    "rollback",
+    "ramp_advance",
+];
+
+/// One control-plane decision: who decided what, from which inputs.
+#[derive(Clone, Debug)]
+pub struct DecisionEvent {
+    /// Clock seconds at record time (stamped by the recorder).
+    pub at: f64,
+    /// Actor loop (one of [`LOOP_LABELS`]).
+    pub loop_name: &'static str,
+    /// Decision kind (one of [`DECISION_KINDS`]).
+    pub kind: &'static str,
+    /// Model the decision concerns, when model-scoped.
+    pub model: Option<String>,
+    /// Site the decision concerns, when site-scoped.
+    pub site: Option<String>,
+    /// Model version, when version-scoped (canary/rollback/ramp).
+    pub version: Option<String>,
+    /// Compact numeric snapshot of the inputs the loop decided from
+    /// (demand, budgets, thresholds, derived knees).
+    pub inputs: Vec<(&'static str, f64)>,
+    /// The action taken, rendered for humans.
+    pub action: String,
+    /// Rejected alternatives and their scores, where cheap to capture.
+    pub alternatives: Vec<(String, f64)>,
+}
+
+impl DecisionEvent {
+    /// Event skeleton; the recorder stamps `at` when it is recorded.
+    pub fn new(loop_name: &'static str, kind: &'static str) -> Self {
+        debug_assert!(LOOP_LABELS.contains(&loop_name), "undeclared loop '{loop_name}'");
+        debug_assert!(DECISION_KINDS.contains(&kind), "undeclared kind '{kind}'");
+        DecisionEvent {
+            at: 0.0,
+            loop_name,
+            kind,
+            model: None,
+            site: None,
+            version: None,
+            inputs: Vec::new(),
+            action: String::new(),
+            alternatives: Vec::new(),
+        }
+    }
+
+    /// Scope to a model.
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = Some(model.to_string());
+        self
+    }
+
+    /// Scope to a site.
+    pub fn site(mut self, site: &str) -> Self {
+        self.site = Some(site.to_string());
+        self
+    }
+
+    /// Scope to a model version.
+    pub fn version(mut self, version: &str) -> Self {
+        self.version = Some(version.to_string());
+        self
+    }
+
+    /// Attach one numeric input.
+    pub fn input(mut self, key: &'static str, value: f64) -> Self {
+        self.inputs.push((key, value));
+        self
+    }
+
+    /// Set the human-rendered action.
+    pub fn action(mut self, action: impl Into<String>) -> Self {
+        self.action = action.into();
+        self
+    }
+
+    /// Attach one rejected alternative and its score.
+    pub fn alternative(mut self, name: impl Into<String>, score: f64) -> Self {
+        self.alternatives.push((name.into(), score));
+        self
+    }
+
+    /// One explain line: `t=12.3s [rebalancer] budget_shift site=nrp ...`.
+    pub fn render(&self) -> String {
+        let mut out = format!("t={:.1}s [{}] {}", self.at, self.loop_name, self.kind);
+        if let Some(m) = &self.model {
+            let _ = write!(out, " model={m}");
+        }
+        if let Some(s) = &self.site {
+            let _ = write!(out, " site={s}");
+        }
+        if let Some(v) = &self.version {
+            let _ = write!(out, " version={v}");
+        }
+        if !self.inputs.is_empty() {
+            out.push_str(" inputs:");
+            for (k, v) in &self.inputs {
+                let _ = write!(out, " {k}={v:.3}");
+            }
+        }
+        if !self.action.is_empty() {
+            let _ = write!(out, " -> {}", self.action);
+        }
+        if !self.alternatives.is_empty() {
+            out.push_str(" (rejected:");
+            for (name, score) in &self.alternatives {
+                let _ = write!(out, " {name}={score:.3}");
+            }
+            out.push(')');
+        }
+        out
+    }
+}
+
+/// Filter for [`FlightRecorder::explain`] / [`FlightRecorder::events`].
+/// Label filters keep matching events plus unscoped ones (a fleet-wide
+/// budget shift is part of any model's story); `since` bounds the window.
+#[derive(Clone, Debug, Default)]
+pub struct ExplainFilter {
+    pub model: Option<String>,
+    pub site: Option<String>,
+    /// Only events at or after this clock time; `None` falls back to the
+    /// configured explain horizon before now.
+    pub since: Option<f64>,
+}
+
+impl ExplainFilter {
+    fn matches(&self, ev: &DecisionEvent) -> bool {
+        if let Some(m) = &self.model {
+            if ev.model.as_deref().is_some_and(|em| em != m && !em.starts_with(&format!("{m}@"))) {
+                return false;
+            }
+        }
+        if let Some(s) = &self.site {
+            if ev.site.as_deref().is_some_and(|es| es != s) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// One joined outage incident: the causal chain `explain` renders and
+/// the observability bench asserts link by link.
+#[derive(Clone, Debug)]
+pub struct OutageChain {
+    pub site: String,
+    pub outage: DecisionEvent,
+    /// First budget shift after the outage latched (the rebalancer
+    /// moving pods off the dead site).
+    pub budget_shift: Option<DecisionEvent>,
+    /// First router spillover/failover after the outage.
+    pub spillover: Option<DecisionEvent>,
+    /// The site's recovery, when it happened inside the window.
+    pub recovered: Option<DecisionEvent>,
+    /// First post-recovery pick of the site (traffic coming home).
+    pub repatriation: Option<DecisionEvent>,
+}
+
+impl OutageChain {
+    /// All five links present.
+    pub fn complete(&self) -> bool {
+        self.budget_shift.is_some()
+            && self.spillover.is_some()
+            && self.recovered.is_some()
+            && self.repatriation.is_some()
+    }
+
+    /// Links are in non-decreasing timestamp order.
+    pub fn in_order(&self) -> bool {
+        let mut prev = self.outage.at;
+        for ev in [&self.budget_shift, &self.spillover, &self.recovered, &self.repatriation]
+            .into_iter()
+            .flatten()
+        {
+            if ev.at < prev {
+                return false;
+            }
+            prev = ev.at;
+        }
+        true
+    }
+}
+
+/// Bounded, clock-stamped ring of [`DecisionEvent`]s shared by every
+/// control loop of one deployment.
+pub struct FlightRecorder {
+    clock: Clock,
+    capacity: usize,
+    horizon: f64,
+    registry: Registry,
+    ring: Mutex<VecDeque<DecisionEvent>>,
+}
+
+impl FlightRecorder {
+    /// Recorder retaining up to `capacity` events; `horizon` (seconds)
+    /// is how far back `explain` looks when no `since` bound is given.
+    pub fn new(clock: Clock, capacity: usize, horizon: f64, registry: Registry) -> Self {
+        FlightRecorder {
+            clock,
+            capacity: capacity.max(1),
+            horizon,
+            registry,
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Stamp and retain one decision; bumps
+    /// `control_decisions_total{loop=...,kind=...}`.
+    pub fn record(&self, mut ev: DecisionEvent) {
+        ev.at = self.clock.now_secs();
+        self.registry
+            .counter(DECISIONS_COUNTER, &labels(&[("loop", ev.loop_name), ("kind", ev.kind)]))
+            .inc();
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(ev);
+        while ring.len() > self.capacity {
+            ring.pop_front();
+        }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> Vec<DecisionEvent> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Retained events matching `filter`, oldest first.
+    pub fn events_matching(&self, filter: &ExplainFilter) -> Vec<DecisionEvent> {
+        let since = filter.since.unwrap_or_else(|| self.clock.now_secs() - self.horizon);
+        self.ring
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|ev| ev.at >= since && filter.matches(ev))
+            .cloned()
+            .collect()
+    }
+
+    /// Number of retained events.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// True when nothing has been recorded (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Join retained events into per-site outage incident chains,
+    /// oldest incident first (unfiltered: incident joining needs the
+    /// fleet-wide ledger, not a label slice).
+    pub fn outage_chains(&self) -> Vec<OutageChain> {
+        let events = self.events();
+        let mut chains = Vec::new();
+        for (i, ev) in events.iter().enumerate() {
+            if ev.kind != "site_outage" {
+                continue;
+            }
+            let site = ev.site.clone().unwrap_or_default();
+            let after = &events[i..];
+            let find = |kind: &str, same_site: bool, not_before: f64| {
+                after
+                    .iter()
+                    .find(|e| {
+                        e.kind == kind
+                            && e.at >= not_before
+                            && (!same_site || e.site.as_deref() == Some(site.as_str()))
+                    })
+                    .cloned()
+            };
+            let recovered = find("site_recovered", true, ev.at);
+            let repatriation = recovered
+                .as_ref()
+                .and_then(|r| find("repatriation", true, r.at));
+            chains.push(OutageChain {
+                budget_shift: find("budget_shift", false, ev.at),
+                spillover: find("spillover", false, ev.at).or_else(|| find("failover", false, ev.at)),
+                recovered,
+                repatriation,
+                site,
+                outage: ev.clone(),
+            });
+        }
+        chains
+    }
+
+    /// Text rendering of the filtered ledger plus joined outage chains —
+    /// the `supersonic explain` / metrics `/debug` payload.
+    pub fn explain(&self, filter: &ExplainFilter) -> String {
+        let events = self.events_matching(filter);
+        let mut out = String::new();
+        let scope = |label: &str, v: &Option<String>| match v {
+            Some(v) => format!(" {label}={v}"),
+            None => String::new(),
+        };
+        let _ = writeln!(
+            out,
+            "== control-plane explain{}{} ({} events, t={:.1}s) ==",
+            scope("model", &filter.model),
+            scope("site", &filter.site),
+            events.len(),
+            self.clock.now_secs(),
+        );
+        for ev in &events {
+            let _ = writeln!(out, "{}", ev.render());
+        }
+        let since = filter.since.unwrap_or_else(|| self.clock.now_secs() - self.horizon);
+        for chain in self.outage_chains() {
+            if chain.outage.at < since {
+                continue;
+            }
+            if let Some(s) = &filter.site {
+                if &chain.site != s {
+                    continue;
+                }
+            }
+            let _ = writeln!(
+                out,
+                "\n-- incident: site '{}' outage at t={:.1}s --",
+                chain.site, chain.outage.at
+            );
+            let links: [(&str, &Option<DecisionEvent>); 4] = [
+                ("budget_shift", &chain.budget_shift),
+                ("spillover", &chain.spillover),
+                ("recovered", &chain.recovered),
+                ("repatriation", &chain.repatriation),
+            ];
+            let _ = writeln!(out, "  1. {}", chain.outage.render());
+            let mut n = 2;
+            for (name, link) in links {
+                match link {
+                    Some(ev) => {
+                        let _ = writeln!(out, "  {n}. {}", ev.render());
+                        n += 1;
+                    }
+                    None => {
+                        let _ = writeln!(out, "  -  {name}: (not yet)");
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Late-installable recorder slot: control loops are constructed before
+/// the deployment builds the recorder, so each holds a cheap handle that
+/// no-ops until [`RecorderHandle::install`] runs (mirrors the cluster's
+/// `set_reconcile_hook` pattern — constructor signatures stay put).
+#[derive(Clone, Default)]
+pub struct RecorderHandle {
+    inner: Arc<Mutex<Option<Arc<FlightRecorder>>>>,
+}
+
+impl RecorderHandle {
+    /// Point this handle (and every clone of it) at a live recorder.
+    pub fn install(&self, rec: Arc<FlightRecorder>) {
+        *self.inner.lock().unwrap() = Some(rec);
+    }
+
+    /// True once a recorder is installed.
+    pub fn is_installed(&self) -> bool {
+        self.inner.lock().unwrap().is_some()
+    }
+
+    /// Record `ev` if a recorder is installed; no-op otherwise.
+    pub fn record(&self, ev: DecisionEvent) {
+        let rec = self.inner.lock().unwrap().clone();
+        if let Some(rec) = rec {
+            rec.record(ev);
+        }
+    }
+}
+
+/// Loop-health instrumentation: wraps each loop body in a tick-duration
+/// histogram and a last-run staleness gauge (both clock time, so
+/// simulated-clock tests stay deterministic).
+pub struct LoopTicker {
+    clock: Clock,
+    hist: HistogramHandle,
+    last_run: Gauge,
+}
+
+impl LoopTicker {
+    /// Register this loop's health series.
+    pub fn new(registry: &Registry, clock: Clock, loop_name: &str) -> Self {
+        LoopTicker {
+            hist: registry.histogram(LOOP_TICK_HISTOGRAM, &labels(&[("loop", loop_name)])),
+            last_run: registry.gauge(LOOP_LAST_RUN_GAUGE, &labels(&[("loop", loop_name)])),
+            clock,
+        }
+    }
+
+    /// Run one loop body, observing its duration and stamping the
+    /// last-run gauge on completion.
+    pub fn tick<T>(&self, body: impl FnOnce() -> T) -> T {
+        let t0 = self.clock.now_secs();
+        let out = body();
+        let now = self.clock.now_secs();
+        self.hist.observe((now - t0).max(0.0));
+        self.last_run.set(now);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn recorder(capacity: usize) -> (Clock, Arc<FlightRecorder>, Registry) {
+        let clock = Clock::simulated();
+        let registry = Registry::new();
+        let rec = Arc::new(FlightRecorder::new(clock.clone(), capacity, 600.0, registry.clone()));
+        (clock, rec, registry)
+    }
+
+    #[test]
+    fn ring_bounded_and_counted() {
+        let (clock, rec, registry) = recorder(3);
+        for _ in 0..5 {
+            clock.advance(Duration::from_secs(1));
+            rec.record(DecisionEvent::new("rebalancer", "budget_shift").site("nrp"));
+        }
+        assert_eq!(rec.len(), 3);
+        let c = registry.counter(
+            DECISIONS_COUNTER,
+            &labels(&[("loop", "rebalancer"), ("kind", "budget_shift")]),
+        );
+        assert_eq!(c.get(), 5, "evictions do not uncount decisions");
+        let events = rec.events();
+        assert!((events[0].at - 3.0).abs() < 1e-9, "oldest retained is the 3rd");
+    }
+
+    #[test]
+    fn filter_scopes_by_label_and_time() {
+        let (clock, rec, _r) = recorder(64);
+        clock.advance(Duration::from_secs(1));
+        rec.record(DecisionEvent::new("per_model_scaler", "scale_target").model("cnn"));
+        clock.advance(Duration::from_secs(1));
+        rec.record(DecisionEvent::new("per_model_scaler", "scale_target").model("gnn"));
+        clock.advance(Duration::from_secs(1));
+        rec.record(DecisionEvent::new("rebalancer", "budget_shift").site("nrp"));
+        let f = ExplainFilter { model: Some("cnn".into()), ..Default::default() };
+        let evs = rec.events_matching(&f);
+        // The unscoped-by-model budget shift stays in cnn's story.
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.model.as_deref() != Some("gnn")));
+        let f = ExplainFilter { since: Some(2.5), ..Default::default() };
+        assert_eq!(rec.events_matching(&f).len(), 1);
+        // Versioned serving names match their base-model filter.
+        rec.record(DecisionEvent::new("rollback", "rollback").model("cnn@v2"));
+        let f = ExplainFilter { model: Some("cnn".into()), ..Default::default() };
+        assert_eq!(rec.events_matching(&f).len(), 3);
+    }
+
+    #[test]
+    fn outage_chain_joins_in_order() {
+        let (clock, rec, _r) = recorder(64);
+        let step = |c: &Clock| c.advance(Duration::from_secs(1));
+        step(&clock);
+        rec.record(DecisionEvent::new("federation_router", "spillover").site("nrp"));
+        step(&clock);
+        rec.record(DecisionEvent::new("rebalancer", "site_outage").site("purdue"));
+        step(&clock);
+        rec.record(DecisionEvent::new("rebalancer", "budget_shift").site("nrp"));
+        step(&clock);
+        rec.record(DecisionEvent::new("federation_router", "spillover").site("uchicago"));
+        step(&clock);
+        rec.record(DecisionEvent::new("rebalancer", "site_recovered").site("purdue"));
+        step(&clock);
+        rec.record(DecisionEvent::new("federation_router", "repatriation").site("purdue"));
+        let chains = rec.outage_chains();
+        assert_eq!(chains.len(), 1);
+        let c = &chains[0];
+        assert_eq!(c.site, "purdue");
+        assert!(c.complete(), "all links present: {c:?}");
+        assert!(c.in_order());
+        // The pre-outage spillover must not be picked as the chain link.
+        assert!(c.spillover.as_ref().unwrap().at > c.outage.at);
+        let text = rec.explain(&ExplainFilter::default());
+        assert!(text.contains("incident: site 'purdue'"));
+        assert!(text.contains("site_outage"));
+        assert!(text.contains("repatriation"));
+    }
+
+    #[test]
+    fn handle_noops_until_installed() {
+        let handle = RecorderHandle::default();
+        handle.record(DecisionEvent::new("ramp", "ramp_advance").model("cnn"));
+        let (_clock, rec, _r) = recorder(8);
+        handle.install(Arc::clone(&rec));
+        handle.record(DecisionEvent::new("ramp", "ramp_advance").model("cnn"));
+        assert_eq!(rec.len(), 1, "pre-install events are dropped, post-install kept");
+    }
+
+    #[test]
+    fn loop_ticker_observes_clock_time() {
+        let clock = Clock::simulated();
+        let registry = Registry::new();
+        let t = LoopTicker::new(&registry, clock.clone(), "rebalancer");
+        clock.advance(Duration::from_secs(5));
+        t.tick(|| clock.advance(Duration::from_millis(250)));
+        let h = registry.histogram(LOOP_TICK_HISTOGRAM, &labels(&[("loop", "rebalancer")]));
+        assert_eq!(h.snapshot().count(), 1);
+        assert!((h.snapshot().sum() - 0.25).abs() < 1e-9);
+        let g = registry.gauge(LOOP_LAST_RUN_GAUGE, &labels(&[("loop", "rebalancer")]));
+        assert!((g.get() - 5.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn render_includes_inputs_and_alternatives() {
+        let ev = DecisionEvent::new("placement", "grow")
+            .model("cnn")
+            .site("purdue")
+            .input("demand", 120.0)
+            .action("load cnn on pod-3")
+            .alternative("pod-1", 0.4);
+        let line = ev.render();
+        assert!(line.contains("[placement] grow"));
+        assert!(line.contains("model=cnn"));
+        assert!(line.contains("demand=120.000"));
+        assert!(line.contains("pod-3"));
+        assert!(line.contains("pod-1=0.400"));
+    }
+}

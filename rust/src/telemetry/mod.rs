@@ -16,6 +16,7 @@
 //! histograms, and [`slo`] evaluates burn-rate alerts over the resulting
 //! series.
 
+pub mod flight;
 pub mod rollback;
 pub mod slo;
 
@@ -33,21 +34,31 @@ pub const ROOT_SPAN: &str = "gateway";
 /// Every stage label emitted on `request_stage_seconds{stage=...}`.
 ///
 /// `admit`/`ratelimit`/`route`/`retry` are gateway-side, `queue`/`batch`/
-/// `compute` are server-side, and `other` is the residual of the root span
-/// not covered by any named stage (channel hand-off, reply delivery).
+/// `compute` are server-side, `wan` is the cross-site hop a federated
+/// request pays when served away from the gateway site (its histogram is
+/// additionally labeled by serving site), and `other` is the residual of
+/// the root span not covered by any named stage (channel hand-off, reply
+/// delivery).
 pub const STAGES: &[&str] = &[
-    "admit", "ratelimit", "route", "retry", "queue", "batch", "compute", "other",
+    "admit", "ratelimit", "route", "retry", "wan", "queue", "batch", "compute", "other",
 ];
 
 /// Series name for the per-stage latency breakdown histograms.
 pub const STAGE_HISTOGRAM: &str = "request_stage_seconds";
 
-/// Counter of spans evicted from the trace buffer before being read.
+/// Counter of spans evicted from the trace buffer before being read,
+/// labeled by the site that recorded the evicted span (`site="local"`
+/// outside federation) — N sites share one buffer and one registry, so
+/// an unlabeled counter would let a single noisy site mask the others.
 pub const SPANS_DROPPED_COUNTER: &str = "trace_spans_dropped_total";
 
 /// Counter of finished traces skipped by the breakdown because part of
-/// their span set had already been evicted.
+/// their span set had already been evicted, labeled by the site that
+/// served the request (`site="local"` outside federation).
 pub const PARTIAL_TRACES_COUNTER: &str = "trace_partial_total";
+
+/// Site label attributed to spans and traces outside federation.
+pub const LOCAL_SITE: &str = "local";
 
 /// One finished span.
 #[derive(Clone, Debug)]
@@ -92,8 +103,9 @@ impl Drop for SpanGuard {
 /// trace back on every sampled request, so this is on the hot path.
 #[derive(Default)]
 struct Buffer {
-    /// Trace id of each retained span, oldest first (eviction order).
-    ring: VecDeque<u64>,
+    /// (trace id, recording site) of each retained span, oldest first
+    /// (eviction order); the site attributes drops to their origin.
+    ring: VecDeque<(u64, Arc<str>)>,
     /// Per-trace spans in insertion order.
     traces: HashMap<u64, Vec<Span>>,
     /// Spans evicted since construction.
@@ -109,6 +121,15 @@ struct Buffer {
 /// every trace partial.
 const DROPPED_TRACES_CAP: usize = 4096;
 
+/// Registry binding for drop accounting: one counter per recording
+/// site, created lazily as sites record spans (shared across clones so
+/// late binding reaches every handle).
+#[derive(Default)]
+struct DropBinding {
+    registry: Option<Registry>,
+    counters: HashMap<Arc<str>, Counter>,
+}
+
 /// Cheap-to-clone tracer handle.
 #[derive(Clone)]
 pub struct Tracer {
@@ -117,10 +138,11 @@ pub struct Tracer {
     capacity: usize,
     enabled: bool,
     sample_rate: f64,
+    /// Site this handle attributes its spans to ([`LOCAL_SITE`] unless
+    /// re-scoped via [`Tracer::for_site`]).
+    site: Arc<str>,
     next_trace: Arc<AtomicU64>,
-    /// Optional registry-backed counter mirroring `Buffer::dropped`
-    /// (shared across clones so late binding reaches every handle).
-    dropped_counter: Arc<Mutex<Option<Counter>>>,
+    drop_binding: Arc<Mutex<DropBinding>>,
 }
 
 impl fmt::Debug for Tracer {
@@ -150,9 +172,20 @@ impl Tracer {
             capacity,
             enabled,
             sample_rate: 1.0,
+            site: Arc::from(LOCAL_SITE),
             next_trace: Arc::new(AtomicU64::new(1)),
-            dropped_counter: Arc::new(Mutex::new(None)),
+            drop_binding: Arc::new(Mutex::new(DropBinding::default())),
         }
+    }
+
+    /// Facade attributing this handle's spans to `site`. The buffer,
+    /// sampling state and registry binding stay SHARED with the parent
+    /// (one trace id still joins spans across sites); only the drop
+    /// accounting label changes.
+    pub fn for_site(&self, site: &str) -> Tracer {
+        let mut t = self.clone();
+        t.site = Arc::from(site);
+        t
     }
 
     /// Disabled tracer (all ops are no-ops).
@@ -201,16 +234,19 @@ impl Tracer {
         (id, self.sample(id))
     }
 
-    /// Mirror span drops into a registry counter
+    /// Mirror span drops into per-site registry counters
     /// ([`SPANS_DROPPED_COUNTER`]). Binds retroactively: drops that
-    /// happened before the call are added to the counter.
+    /// happened before the call are added to this handle's site counter
+    /// (their origin sites were not tracked yet).
     pub fn bind_registry(&self, registry: &Registry) {
-        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[]));
+        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[("site", &self.site)]));
         let backlog = self.buffer.lock().unwrap().dropped;
         if backlog > c.get() {
             c.add(backlog - c.get());
         }
-        *self.dropped_counter.lock().unwrap() = Some(c);
+        let mut b = self.drop_binding.lock().unwrap();
+        b.counters.insert(Arc::clone(&self.site), c);
+        b.registry = Some(registry.clone());
     }
 
     /// Spans evicted from the buffer since construction.
@@ -239,9 +275,9 @@ impl Tracer {
         }
         let mut buf = self.buffer.lock().unwrap();
         buf.traces.entry(span.trace_id).or_default().push(span.clone());
-        buf.ring.push_back(span.trace_id);
+        buf.ring.push_back((span.trace_id, Arc::clone(&self.site)));
         while buf.ring.len() > self.capacity {
-            let victim = buf.ring.pop_front().expect("ring non-empty");
+            let (victim, site) = buf.ring.pop_front().expect("ring non-empty");
             if let Some(spans) = buf.traces.get_mut(&victim) {
                 if !spans.is_empty() {
                     spans.remove(0);
@@ -258,8 +294,14 @@ impl Tracer {
             if !buf.dropped_overflow {
                 buf.dropped_traces.insert(victim);
             }
-            if let Some(c) = self.dropped_counter.lock().unwrap().as_ref() {
-                c.inc();
+            let mut b = self.drop_binding.lock().unwrap();
+            if let Some(reg) = b.registry.clone() {
+                b.counters
+                    .entry(Arc::clone(&site))
+                    .or_insert_with(|| {
+                        reg.counter(SPANS_DROPPED_COUNTER, &labels(&[("site", &site)]))
+                    })
+                    .inc();
             }
         }
     }
@@ -399,37 +441,87 @@ impl TraceView {
 /// series rather than a per-trace table.
 #[derive(Clone)]
 pub struct StageRecorder {
+    registry: Registry,
     stages: Vec<(&'static str, HistogramHandle)>,
     total: HistogramHandle,
-    partial: Counter,
+    /// Per-site partial counters and per-site `wan` stage histograms,
+    /// created lazily as serving sites appear.
+    by_site: Arc<Mutex<SiteSeries>>,
+}
+
+#[derive(Default)]
+struct SiteSeries {
+    partial: HashMap<String, Counter>,
+    wan: HashMap<String, HistogramHandle>,
 }
 
 impl StageRecorder {
-    /// Register the stage histograms (one per [`STAGES`] label).
+    /// Register the stage histograms (one per [`STAGES`] label). The
+    /// `wan` stage is excluded here: it is only observed site-labeled,
+    /// so its series appear per serving site on first cross-site hop.
     pub fn new(registry: &Registry) -> Self {
         let stages = STAGES
             .iter()
+            .filter(|&&s| s != "wan")
             .map(|&s| (s, registry.histogram(STAGE_HISTOGRAM, &labels(&[("stage", s)]))))
             .collect();
-        StageRecorder {
+        let rec = StageRecorder {
+            registry: registry.clone(),
             stages,
             total: registry.histogram("request_total_seconds", &labels(&[])),
-            partial: registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[])),
-        }
+            by_site: Arc::new(Mutex::new(SiteSeries::default())),
+        };
+        // Pre-create the local partial counter so the family is present
+        // (at 0) in every exposition, like the other trace series.
+        rec.partial_counter(LOCAL_SITE);
+        rec
     }
 
-    /// Observe one finished trace. Partial traces are counted (see
-    /// [`PARTIAL_TRACES_COUNTER`]) but not folded into the breakdown.
+    fn partial_counter(&self, site: &str) -> Counter {
+        let mut s = self.by_site.lock().unwrap();
+        s.partial
+            .entry(site.to_string())
+            .or_insert_with(|| {
+                self.registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[("site", site)]))
+            })
+            .clone()
+    }
+
+    fn wan_histogram(&self, site: &str) -> HistogramHandle {
+        let mut s = self.by_site.lock().unwrap();
+        s.wan
+            .entry(site.to_string())
+            .or_insert_with(|| {
+                self.registry
+                    .histogram(STAGE_HISTOGRAM, &labels(&[("stage", "wan"), ("site", site)]))
+            })
+            .clone()
+    }
+
+    /// Observe one finished trace served locally.
     pub fn observe(&self, view: &TraceView) {
+        self.observe_from(view, LOCAL_SITE);
+    }
+
+    /// Observe one finished trace served by `site` (the federated
+    /// gateway's final pick). Partial traces are counted per site (see
+    /// [`PARTIAL_TRACES_COUNTER`]) but not folded into the breakdown; a
+    /// non-zero `wan` stage folds into a site-labeled histogram so one
+    /// site's WAN tax is visible on its own.
+    pub fn observe_from(&self, view: &TraceView, site: &str) {
         if view.partial {
-            self.partial.inc();
+            self.partial_counter(site).inc();
             return;
         }
         let Some(rows) = view.stage_breakdown() else {
             return;
         };
         for (stage, d) in rows {
-            if let Some((_, h)) = self.stages.iter().find(|(s, _)| *s == stage) {
+            if stage == "wan" {
+                if d > 0.0 {
+                    self.wan_histogram(site).observe(d);
+                }
+            } else if let Some((_, h)) = self.stages.iter().find(|(s, _)| *s == stage) {
                 h.observe(d);
             }
         }
@@ -520,8 +612,27 @@ mod tests {
         tracer.bind_registry(&registry);
         tracer.record(Span { trace_id: 3, name: "c".into(), start: 0.0, end: 1.0 });
         assert_eq!(tracer.dropped(), 1);
-        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[]));
+        let c = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[("site", LOCAL_SITE)]));
         assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn dropped_spans_attributed_to_recording_site() {
+        let registry = Registry::new();
+        let tracer = Tracer::new(Clock::simulated(), 2, true);
+        tracer.bind_registry(&registry);
+        let remote = tracer.for_site("nrp");
+        remote.record(Span { trace_id: 1, name: "a".into(), start: 0.0, end: 1.0 });
+        remote.record(Span { trace_id: 2, name: "b".into(), start: 0.0, end: 1.0 });
+        // Overflow evicts remote-recorded spans: the drop lands on nrp's
+        // counter, not on local's — and the shared buffer still joins.
+        tracer.record(Span { trace_id: 3, name: "c".into(), start: 0.0, end: 1.0 });
+        tracer.record(Span { trace_id: 4, name: "d".into(), start: 0.0, end: 1.0 });
+        let local = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[("site", LOCAL_SITE)]));
+        let nrp = registry.counter(SPANS_DROPPED_COUNTER, &labels(&[("site", "nrp")]));
+        assert_eq!(nrp.get(), 2, "both evictions were nrp-recorded spans");
+        assert_eq!(local.get(), 0);
+        assert_eq!(tracer.len(), 2);
     }
 
     #[test]
@@ -584,7 +695,35 @@ mod tests {
         small.record(Span { trace_id: 2, name: ROOT_SPAN.into(), start: 0.0, end: 1.0 });
         small.record(Span { trace_id: 2, name: "compute".into(), start: 0.0, end: 1.0 });
         rec.observe(&small.trace(2));
-        assert_eq!(registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[])).get(), 1);
+        let partial = registry.counter(PARTIAL_TRACES_COUNTER, &labels(&[("site", LOCAL_SITE)]));
+        assert_eq!(partial.get(), 1);
         assert_eq!(h.snapshot().count(), 1);
+    }
+
+    #[test]
+    fn wan_stage_folds_site_labeled() {
+        let registry = Registry::new();
+        let rec = StageRecorder::new(&registry);
+        let tracer = Tracer::new(Clock::simulated(), 100, true);
+        tracer.record(Span { trace_id: 1, name: ROOT_SPAN.into(), start: 0.0, end: 5.0 });
+        tracer.record(Span { trace_id: 1, name: "wan".into(), start: 0.0, end: 2.0 });
+        tracer.record(Span { trace_id: 1, name: "compute".into(), start: 2.0, end: 5.0 });
+        let view = tracer.trace(1);
+        let rows = view.stage_breakdown().expect("complete trace");
+        let get = |n: &str| rows.iter().find(|(s, _)| *s == n).unwrap().1;
+        assert!((get("wan") - 2.0).abs() < 1e-9);
+        let sum: f64 = rows.iter().map(|(_, d)| d).sum();
+        assert!((sum - 5.0).abs() < 1e-9, "wan must stay inside the reconstruction");
+        rec.observe_from(&view, "uchicago");
+        let h = registry
+            .histogram(STAGE_HISTOGRAM, &labels(&[("stage", "wan"), ("site", "uchicago")]));
+        assert_eq!(h.snapshot().count(), 1);
+        assert!((h.snapshot().sum() - 2.0).abs() < 1e-9);
+        // The same trace folded without a site attributes its wan time
+        // to the local label — wan series only exist where observed.
+        rec.observe(&tracer.trace(1));
+        let local_wan = registry
+            .histogram(STAGE_HISTOGRAM, &labels(&[("stage", "wan"), ("site", LOCAL_SITE)]));
+        assert_eq!(local_wan.snapshot().count(), 1);
     }
 }

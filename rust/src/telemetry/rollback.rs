@@ -21,6 +21,7 @@ use crate::config::schema::ObservabilityConfig;
 use crate::metrics::registry::{labels, Registry};
 use crate::metrics::store::MetricStore;
 use crate::server::split_version;
+use crate::telemetry::flight::{DecisionEvent, LoopTicker, RecorderHandle};
 use crate::telemetry::slo::{AlertEvent, AlertKind, ALERT_GAUGE};
 use crate::util::clock::Clock;
 
@@ -85,6 +86,7 @@ pub struct RollbackEngine {
     /// Base names whose rollback already fired — one shot per split.
     done: Mutex<BTreeSet<String>>,
     events: Mutex<Vec<AlertEvent>>,
+    recorder: RecorderHandle,
 }
 
 /// One arm's windowed deltas: requests, errors, and per-bucket latency
@@ -115,7 +117,14 @@ impl RollbackEngine {
             action,
             done: Mutex::new(BTreeSet::new()),
             events: Mutex::new(Vec::new()),
+            recorder: RecorderHandle::default(),
         }
+    }
+
+    /// The flight-recorder slot rollback firings land in (installed by
+    /// the deployment once the recorder exists).
+    pub fn recorder(&self) -> &RecorderHandle {
+        &self.recorder
     }
 
     /// Evaluate every live canary once at the current clock time.
@@ -284,6 +293,17 @@ impl RollbackEngine {
             burn_fast: fast,
             burn_slow: slow,
         });
+        self.recorder.record(
+            DecisionEvent::new("rollback", "rollback")
+                .model(&snap.base)
+                .version(&snap.canary)
+                .input("severity_fast", fast)
+                .input("severity_slow", slow)
+                .action(format!(
+                    "rolled '{}' back to '{}'",
+                    snap.canary, snap.incumbent
+                )),
+        );
         self.done.lock().unwrap().insert(snap.base.clone());
     }
 
@@ -356,11 +376,12 @@ impl RollbackTask {
     pub fn start(engine: Arc<RollbackEngine>, clock: Clock, interval: Duration) -> Self {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let ticker = LoopTicker::new(&engine.registry, clock.clone(), "rollback");
         let handle = std::thread::Builder::new()
             .name("rollback-engine".into())
             .spawn(move || {
                 while !stop2.load(Ordering::SeqCst) {
-                    engine.eval_once();
+                    ticker.tick(|| engine.eval_once());
                     clock.sleep(interval);
                 }
             })

@@ -236,6 +236,48 @@ fn operations_doc_documents_cpu_scaler_metrics() {
 }
 
 #[test]
+fn operations_doc_documents_every_decision_kind() {
+    // The flight recorder's decision kinds are the vocabulary of the
+    // `supersonic explain` runbook: a kind added to the recorder without
+    // a runbook entry must fail `make docs-check`.
+    let doc = read_doc("OPERATIONS.md");
+    for kind in supersonic::telemetry::flight::DECISION_KINDS {
+        assert!(
+            doc.contains(&format!("`{kind}`")),
+            "docs/OPERATIONS.md does not document decision kind '{kind}' \
+             (a control_decisions_total label and explain-output string); \
+             cover it in the control-plane explain runbook"
+        );
+    }
+}
+
+#[test]
+fn operations_doc_documents_every_control_loop() {
+    // Every control loop the recorder and the loop-health series label
+    // by name must appear in the runbook — the staleness-troubleshooting
+    // entry points operators at these labels.
+    let doc = read_doc("OPERATIONS.md");
+    for l in supersonic::telemetry::flight::LOOP_LABELS {
+        assert!(
+            doc.contains(&format!("`{l}`")),
+            "docs/OPERATIONS.md does not document control loop '{l}' \
+             (a control_loop_* / control_decisions_total label); name it \
+             in the loop-health runbook section"
+        );
+    }
+    for metric in [
+        "control_decisions_total",
+        "control_loop_tick_seconds",
+        "control_loop_last_run_seconds",
+    ] {
+        assert!(
+            doc.contains(&format!("`{metric}`")),
+            "docs/OPERATIONS.md does not document metric '{metric}'"
+        );
+    }
+}
+
+#[test]
 fn operations_doc_documents_every_slo_alert() {
     // Every alert name the burn-rate engine can fire must have a runbook
     // entry — an undocumented page is an unactionable page.

@@ -1,0 +1,327 @@
+//! Flight-recorder property test: across randomized interleavings of
+//! load bursts, site failure/recovery (whole-site pod churn) and idle
+//! settling, every control-loop mutation that is observable through
+//! public state must have a matching [`DecisionEvent`] in the recorder —
+//! and the ledger itself must stay well-formed (bounded, time-ordered,
+//! label vocabulary closed over the declared catalogs).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use supersonic::config::{
+    AutoscalerConfig, ClusterConfig, DeploymentConfig, ExecutionMode, FederationConfig,
+    GatewayConfig, ModelConfig, ModelPlacementConfig, MonitoringConfig, PerModelScalingConfig,
+    ServerConfig, ServiceModelConfig, SiteConfig,
+};
+use supersonic::deployment::Deployment;
+use supersonic::rpc::client::RpcClient;
+use supersonic::rpc::codec::Status;
+use supersonic::runtime::Tensor;
+use supersonic::telemetry::flight::{DecisionEvent, FlightRecorder, DECISION_KINDS, LOOP_LABELS};
+use supersonic::util::quick::{check, Gen};
+
+const SITES: [&str; 3] = ["purdue", "nrp", "uchicago"];
+const HOME: &str = "purdue";
+
+fn site(name: &str, wan: &[(&str, f64)]) -> SiteConfig {
+    SiteConfig {
+        name: name.into(),
+        pod_budget: 4,
+        replicas: 2,
+        nodes: 2,
+        gpus_per_node: 2,
+        cpu_replicas: 0,
+        wan: wan
+            .iter()
+            .map(|(peer, secs)| (peer.to_string(), Duration::from_secs_f64(*secs)))
+            .collect::<BTreeMap<_, _>>(),
+    }
+}
+
+fn fed_cfg() -> DeploymentConfig {
+    DeploymentConfig {
+        name: "flighttest".into(),
+        server: ServerConfig {
+            replicas: 2,
+            models: vec![ModelConfig {
+                name: "icecube_cnn".into(),
+                max_queue_delay: Duration::from_millis(1),
+                preferred_batch: 8,
+                service_model: ServiceModelConfig {
+                    base: Duration::from_millis(2),
+                    per_row: Duration::from_micros(100),
+                },
+                ..ModelConfig::default()
+            }],
+            repository: "artifacts".into(),
+            startup_delay: Duration::from_millis(10),
+            execution: ExecutionMode::Simulated,
+            queue_capacity: 256,
+            util_window: 5.0,
+            batch_mode: Default::default(),
+            priorities: Default::default(),
+        },
+        gateway: GatewayConfig::default(),
+        autoscaler: AutoscalerConfig {
+            enabled: true,
+            min_replicas: 1,
+            max_replicas: 6,
+            poll_interval: Duration::from_millis(100),
+            per_model: PerModelScalingConfig {
+                enabled: true,
+                // Scale-ups are not the subject here: keep pod counts
+                // stable so the induced mutations are the ones we check.
+                threshold: 10_000.0,
+                min_replicas: 1,
+                max_replicas: 4,
+            },
+            ..AutoscalerConfig::default()
+        },
+        cluster: ClusterConfig {
+            nodes: 3,
+            gpus_per_node: 2,
+            pod_start_delay: Duration::from_millis(20),
+            termination_grace: Duration::from_millis(20),
+            pod_failure_rate: 0.0,
+        },
+        federation: FederationConfig {
+            sites: vec![
+                site(HOME, &[("nrp", 0.002), ("uchicago", 0.004)]),
+                site("nrp", &[]),
+                site("uchicago", &[]),
+            ],
+            gateway_site: HOME.into(),
+            rebalance_interval: Duration::from_millis(200),
+            spillover_queue_depth: 8.0,
+        },
+        monitoring: MonitoringConfig {
+            listen: String::new(),
+            scrape_interval: Duration::from_millis(100),
+            retention: Duration::from_secs(600),
+            tracing: false,
+        },
+        model_placement: ModelPlacementConfig {
+            memory_budget_mb: 4096.0,
+            ..ModelPlacementConfig::default()
+        },
+        engines: Default::default(),
+        observability: Default::default(),
+        rpc: Default::default(),
+        time_scale: 4.0,
+    }
+}
+
+fn wait_for(timeout: Duration, probe: impl Fn() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if probe() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    probe()
+}
+
+/// True when an event of `kind` for `site` exists at or after `since`
+/// (clock seconds).
+fn has_event(flight: &FlightRecorder, kind: &str, site: &str, since: f64) -> bool {
+    flight
+        .events()
+        .iter()
+        .any(|e| e.kind == kind && e.site.as_deref() == Some(site) && e.at >= since)
+}
+
+fn burst(addr: &str, n: usize) {
+    let mut client = match RpcClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    for _ in 0..n {
+        match client.infer("icecube_cnn", Tensor::zeros(vec![1, 16, 16, 3])) {
+            Ok(resp) if resp.status == Status::Ok => {}
+            // A dead gateway stream needs a fresh connection.
+            _ => match RpcClient::connect(addr) {
+                Ok(c) => client = c,
+                Err(_) => return,
+            },
+        }
+    }
+}
+
+/// The ledger must be structurally sound no matter what happened:
+/// stamped in time order, bounded, and closed over the declared loop and
+/// kind vocabularies (the docs gates cover exactly these catalogs).
+fn assert_ledger_well_formed(events: &[DecisionEvent]) {
+    let mut prev = f64::NEG_INFINITY;
+    for e in events {
+        assert!(
+            LOOP_LABELS.contains(&e.loop_name),
+            "undeclared loop label '{}' in the ledger",
+            e.loop_name
+        );
+        assert!(
+            DECISION_KINDS.contains(&e.kind),
+            "undeclared decision kind '{}' in the ledger",
+            e.kind
+        );
+        assert!(
+            e.at >= prev,
+            "ledger out of time order: {} after {prev}",
+            e.at
+        );
+        prev = e.at;
+    }
+}
+
+#[test]
+fn every_observable_mutation_has_a_decision_event() {
+    // Two seeded iterations: a random interleaving prefix for variety,
+    // then a forced kill -> burst -> recover tail so every run exercises
+    // the full outage chain.
+    check("flight_recorder_ledger", 2, |g: &mut Gen| {
+        let d = Deployment::up(fed_cfg()).unwrap();
+        let fed = Arc::clone(d.federation.as_ref().expect("federated deployment"));
+        let flight = Arc::clone(d.flight.as_ref().expect("recorder armed by default"));
+        assert!(d.wait_ready(6, Duration::from_secs(10)), "federation never became ready");
+        let addr = d.endpoint();
+
+        // Random interleaving prefix: bursts, kills, recoveries, settles.
+        let mut down = [false; 3];
+        for _ in 0..g.u64(2..=4) {
+            match g.u64(0..=3) {
+                0 => burst(&addr, 20),
+                1 => {
+                    let i = g.u64(0..=2) as usize;
+                    if !down[i] && down.iter().filter(|&&x| x).count() < 2 {
+                        let t0 = d.clock.now_secs();
+                        assert!(fed.fail_site(SITES[i]));
+                        down[i] = true;
+                        // Drain, then the rebalancer must ledger the outage.
+                        assert!(
+                            wait_for(Duration::from_secs(10), || {
+                                fed.running_by_site().get(SITES[i]) == Some(&0)
+                            }),
+                            "site '{}' never drained",
+                            SITES[i]
+                        );
+                        assert!(
+                            wait_for(Duration::from_secs(5), || {
+                                has_event(&flight, "site_outage", SITES[i], t0)
+                            }),
+                            "site '{}' drained with no site_outage event",
+                            SITES[i]
+                        );
+                    }
+                }
+                2 => {
+                    let i = g.u64(0..=2) as usize;
+                    if down[i] {
+                        let t0 = d.clock.now_secs();
+                        assert!(fed.recover_site(SITES[i]));
+                        down[i] = false;
+                        assert!(
+                            wait_for(Duration::from_secs(10), || {
+                                has_event(&flight, "site_recovered", SITES[i], t0)
+                            }),
+                            "site '{}' recovered with no site_recovered event",
+                            SITES[i]
+                        );
+                    }
+                }
+                _ => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+
+        // Forced tail: home outage under load, then recovery. This is the
+        // chain `supersonic explain` reconstructs; here we assert each
+        // link's event exists against the public state that proves the
+        // mutation happened.
+        if down[0] {
+            fed.recover_site(HOME);
+            down[0] = false;
+        }
+        // The rebalancer must see home up (and hand its budget back)
+        // before the kill, or the kill has no budget left to move; a
+        // home-landing pick also re-arms the router's away latch so the
+        // tail's failover is a fresh episode, not a deduped continuation.
+        assert!(wait_for(Duration::from_secs(10), || {
+            fed.running_by_site().get(HOME).copied().unwrap_or(0) > 0
+        }));
+        let home_before = fed.router.site_requests(HOME);
+        assert!(
+            wait_for(Duration::from_secs(10), || {
+                burst(&addr, 5);
+                fed.router.site_requests(HOME) > home_before
+            }),
+            "healthy home site never took traffic"
+        );
+        std::thread::sleep(Duration::from_millis(300));
+        let t_kill = d.clock.now_secs();
+        assert!(fed.fail_site(HOME));
+        assert!(
+            wait_for(Duration::from_secs(10), || {
+                fed.running_by_site().get(HOME) == Some(&0)
+            }),
+            "home site never drained"
+        );
+        // Public state: the dead site's pods are gone -> ledger link.
+        assert!(
+            wait_for(Duration::from_secs(5), || has_event(&flight, "site_outage", HOME, t_kill)),
+            "home drain left no site_outage event"
+        );
+        // Public state: remote sites serve while home is dead -> the
+        // router must have recorded leaving the home site.
+        let remote_before =
+            fed.router.site_requests("nrp") + fed.router.site_requests("uchicago");
+        burst(&addr, 40);
+        let remote_after =
+            fed.router.site_requests("nrp") + fed.router.site_requests("uchicago");
+        if remote_after > remote_before {
+            assert!(
+                wait_for(Duration::from_secs(5), || {
+                    flight.events().iter().any(|e| {
+                        (e.kind == "failover" || e.kind == "spillover") && e.at >= t_kill
+                    })
+                }),
+                "traffic left the dead home site with no failover/spillover event"
+            );
+        }
+        // Public state: the rebalancer moved the dead site's budget to
+        // the survivors (its budget gauge drops to the floor) -> every
+        // budget move must be ledgered for its site.
+        assert!(
+            wait_for(Duration::from_secs(5), || {
+                has_event(&flight, "budget_shift", HOME, t_kill)
+            }),
+            "home budget moved with no budget_shift event"
+        );
+
+        let t_back = d.clock.now_secs();
+        assert!(fed.recover_site(HOME));
+        assert!(
+            wait_for(Duration::from_secs(10), || {
+                fed.running_by_site().get(HOME).copied().unwrap_or(0) > 0
+                    && has_event(&flight, "site_recovered", HOME, t_back)
+            }),
+            "home recovery left no site_recovered event"
+        );
+        // Repatriation: once home is warm and cheapest again, picks land
+        // back on it and the router ledgers the return.
+        assert!(
+            wait_for(Duration::from_secs(10), || {
+                burst(&addr, 10);
+                has_event(&flight, "repatriation", HOME, t_back)
+            }),
+            "traffic repatriated with no repatriation event"
+        );
+
+        let events = flight.events();
+        assert_ledger_well_formed(&events);
+        assert!(
+            events.len() <= d.cfg.observability.flight_recorder_capacity,
+            "ring exceeded its configured capacity"
+        );
+        d.down();
+    });
+}

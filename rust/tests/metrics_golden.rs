@@ -25,6 +25,14 @@ fn span(trace_id: u64, name: &str, start: f64, end: f64) -> Span {
 const GOLDEN: &str = "\
 # TYPE canary_ramp_weight gauge
 canary_ramp_weight{model=\"icecube_cnn\"} 0.1
+# TYPE control_decisions_total counter
+control_decisions_total{kind=\"budget_shift\",loop=\"rebalancer\"} 1
+control_decisions_total{kind=\"spillover\",loop=\"federation_router\"} 1
+# TYPE control_loop_last_run_seconds gauge
+control_loop_last_run_seconds{loop=\"rebalancer\"} 0.25
+# TYPE control_loop_tick_seconds histogram
+control_loop_tick_seconds_sum{loop=\"rebalancer\"} 0.25
+control_loop_tick_seconds_count{loop=\"rebalancer\"} 1
 # TYPE federation_site_budget gauge
 federation_site_budget{site=\"nrp\"} 3
 federation_site_budget{site=\"purdue\"} 5
@@ -78,9 +86,9 @@ slo_alert_active{alert=\"latency_burn_rate\",model=\"particlenet\"} 0
 slo_alert_active{alert=\"site_outage\",site=\"nrp\"} 1
 slo_alert_active{alert=\"site_outage\",site=\"purdue\"} 0
 # TYPE trace_partial_total counter
-trace_partial_total 1
+trace_partial_total{site=\"local\"} 1
 # TYPE trace_spans_dropped_total counter
-trace_spans_dropped_total 2";
+trace_spans_dropped_total{site=\"local\"} 2";
 
 #[test]
 fn observability_series_exposition_matches_golden() {
@@ -153,6 +161,24 @@ fn observability_series_exposition_matches_golden() {
                 .gauge(ALERT_GAUGE, &labels(&[("alert", SITE_OUTAGE_ALERT), ("site", site)]))
                 .set(outage);
         }
+    }
+
+    // Control-plane observability: two flight-recorder decisions (the
+    // per-(loop, kind) counter) and one instrumented loop tick whose
+    // body takes exactly 0.25 simulated seconds (the tick histogram and
+    // the last-run staleness gauge).
+    {
+        use supersonic::telemetry::flight::{DecisionEvent, FlightRecorder, LoopTicker};
+        let fclock = Clock::simulated();
+        let flight = FlightRecorder::new(fclock.clone(), 16, 600.0, registry.clone());
+        flight.record(DecisionEvent::new("rebalancer", "budget_shift").site("nrp"));
+        flight.record(
+            DecisionEvent::new("federation_router", "spillover")
+                .site("purdue")
+                .model("icecube_cnn"),
+        );
+        let ticker = LoopTicker::new(&registry, fclock.clone(), "rebalancer");
+        ticker.tick(|| fclock.advance(Duration::from_millis(250)));
     }
 
     // The SLO engine pre-registers its alert gauges at 0 (resolved).
